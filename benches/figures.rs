@@ -1,0 +1,82 @@
+//! `cargo bench --bench figures` — regenerate every table and figure of
+//! the paper's evaluation (§8) on the deterministic simulator and print
+//! the series/rows, plus wall-clock cost of each driver.
+//!
+//! (Plain `harness = false` binary: the build is offline/self-contained,
+//! so the harness is in-tree rather than criterion. Each experiment is
+//! deterministic given `--seed`.)
+
+use matchmaker::harness::experiments as exp;
+use std::time::Instant;
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let text = f();
+    let dt = t0.elapsed();
+    println!("{text}");
+    println!("[bench] {name} regenerated in {:.2} s (wall)\n", dt.as_secs_f64());
+}
+
+fn main() {
+    let seed: u64 = std::env::args()
+        .skip_while(|a| a != "--seed")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let only: Option<String> = std::env::args().skip_while(|a| a != "--only").nth(1);
+    let want = |id: &str| only.as_deref().map_or(true, |o| o.eq_ignore_ascii_case(id));
+
+    println!("# Matchmaker Paxos — paper evaluation reproduction (seed {seed})\n");
+
+    if want("f9") {
+        timed("Figure 9 + Table 1", || {
+            let (fig, tab) = exp::figure9(seed);
+            format!("{}{}", fig.render(), tab.render())
+        });
+    }
+    if want("f10") {
+        timed("Figure 10 (+ stats)", || {
+            let (fig, tab) = exp::figure10(seed);
+            format!("{}{}", fig.render(), tab.render())
+        });
+    }
+    if want("f11") {
+        timed("Figure 11 (f=2)", || {
+            let (fig, tab) = exp::figure11(seed);
+            format!("{}{}", fig.render(), tab.render())
+        });
+    }
+    if want("f12") {
+        timed("Figures 12/13 (violin quartiles)", || exp::figure12_13(seed).render());
+    }
+    if want("f14") {
+        timed("Figure 14 (thrifty curves)", || exp::figure14(seed).render());
+    }
+    if want("f15") {
+        timed("Figure 15 (non-thrifty)", || exp::figure15(seed).0.render());
+    }
+    if want("f16") {
+        timed("Figure 16 (100 clients)", || exp::figure16(seed).render());
+    }
+    if want("f17") {
+        timed("Figure 17 (WAN ablation)", || exp::figure17(seed).render());
+    }
+    if want("f18") {
+        timed("Figure 18 (leader failure)", || exp::figure18(seed).render());
+    }
+    if want("f19") {
+        timed("Figure 19 (horizontal steady)", || exp::figure19(seed).render());
+    }
+    if want("f20") {
+        timed("Figure 20 (triple failure)", || exp::figure20(seed).render());
+    }
+    if want("f21") {
+        timed("Figure 21 + Table 2 (matchmaker reconfig)", || {
+            let (fig, tab) = exp::figure21(seed);
+            format!("{}{}", fig.render(), tab.render())
+        });
+    }
+    if want("x2") {
+        timed("X2 (Matchmaker Fast Paxos)", || exp::fast_paxos_experiment(seed).render());
+    }
+}

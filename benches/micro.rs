@@ -1,0 +1,155 @@
+//! `cargo bench --bench micro` — microbenchmarks of the hot paths, with a
+//! small in-tree measurement harness (median-of-runs; the build is offline
+//! so no criterion). These feed EXPERIMENTS.md §Perf.
+//!
+//! Benchmarks:
+//! * acceptor Phase2A handling        (per-message cost on the hot path)
+//! * leader propose→chosen pipeline   (per-command bookkeeping cost)
+//! * simulator event throughput      (events/s — bounds how fast the §8
+//!   timelines regenerate)
+//! * wire codec encode/decode
+//! * end-to-end simulated cluster throughput (commands/s of sim time per
+//!   second of wall time)
+//! * tensor state machine batch apply via PJRT (if artifacts are built)
+
+use matchmaker::codec::Wire;
+use matchmaker::config::{Configuration, OptFlags};
+use matchmaker::harness::{secs, Cluster};
+use matchmaker::msg::{Command, Envelope, Msg, Value};
+use matchmaker::node::{Effects, Node};
+use matchmaker::roles::Acceptor;
+use matchmaker::round::Round;
+use std::time::Instant;
+
+/// Run `f(n)` with increasing n until it takes ≥0.2 s, then report
+/// ns/iter from the best of 3 runs.
+fn bench(name: &str, mut f: impl FnMut(u64)) {
+    let mut n = 1000u64;
+    loop {
+        let t0 = Instant::now();
+        f(n);
+        let dt = t0.elapsed();
+        if dt.as_secs_f64() >= 0.2 || n >= 1 << 28 {
+            let mut best = dt.as_secs_f64();
+            for _ in 0..2 {
+                let t0 = Instant::now();
+                f(n);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            let per = best / n as f64 * 1e9;
+            let rate = n as f64 / best;
+            println!("{name:<42} {per:>10.1} ns/iter   {rate:>12.0} /s");
+            return;
+        }
+        n *= 4;
+    }
+}
+
+fn main() {
+    println!("# micro benchmarks (best of 3)\n");
+
+    // --- acceptor Phase2A hot path ---
+    bench("acceptor: Phase2A vote", |n| {
+        let mut acc = Acceptor::new(1);
+        let round = Round::first(1, 0);
+        let mut fx = Effects::new();
+        for slot in 0..n {
+            acc.on_msg(0, 0, Msg::Phase2A { round, slot, value: Value::Noop }, &mut fx);
+            fx.msgs.clear();
+        }
+        std::hint::black_box(&acc.votes);
+    });
+
+    // --- acceptor bulk Phase1 over a populated log ---
+    bench("acceptor: Phase1A over 1k voted slots", |n| {
+        let mut acc = Acceptor::new(1);
+        let r0 = Round::first(1, 0);
+        let mut fx = Effects::new();
+        for slot in 0..1000 {
+            acc.on_msg(0, 0, Msg::Phase2A { round: r0, slot, value: Value::Noop }, &mut fx);
+        }
+        fx.msgs.clear();
+        for i in 0..n {
+            let round = Round { epoch: 2 + i, proposer: 0, seq: 0 };
+            acc.on_msg(0, 0, Msg::Phase1A { round, from_slot: 0 }, &mut fx);
+            fx.msgs.clear();
+        }
+    });
+
+    // --- codec ---
+    let env = Envelope {
+        from: 3,
+        to: 9,
+        msg: Msg::Phase2A {
+            round: Round::first(2, 1),
+            slot: 77,
+            value: Value::Cmd(Command { client: 10, seq: 5, payload: vec![0u8; 16] }),
+        },
+    };
+    let bytes = env.encode();
+    bench("codec: encode Phase2A envelope", |n| {
+        for _ in 0..n {
+            std::hint::black_box(env.encode());
+        }
+    });
+    bench("codec: decode Phase2A envelope", |n| {
+        for _ in 0..n {
+            std::hint::black_box(Envelope::decode(&bytes).unwrap());
+        }
+    });
+
+    // --- simulator event throughput, end-to-end cluster ---
+    bench("sim: end-to-end command (8 clients)", |n| {
+        // One simulated second ≈ 14.6k commands with 8 clients; scale the
+        // simulated horizon so ~n commands complete.
+        let sim_secs = (n / 14_000).max(1);
+        let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 42);
+        cluster.sim.run_until(secs(sim_secs));
+        std::hint::black_box(cluster.samples().len());
+    });
+
+    bench("sim: delivered message", |n| {
+        let sim_secs = (n / 230_000).max(1);
+        let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 42);
+        cluster.sim.run_until(secs(sim_secs));
+        std::hint::black_box(cluster.sim.delivered);
+    });
+
+    // --- leader pipeline within a pumped cluster (no network jitter) ---
+    bench("cluster: reconfiguration (full lifecycle)", |n| {
+        let mut cluster = Cluster::lan(1, 1, OptFlags::default(), 42);
+        let leader = cluster.initial_leader();
+        cluster.sim.run_until(secs(1) / 10);
+        for i in 0..n {
+            let cfg = Configuration::majority(i + 1, cluster.random_config(i + 1).acceptors);
+            cluster.sim.schedule(cluster.sim.now() + 1, move |s| {
+                s.with_node::<matchmaker::roles::Leader, _>(leader, |l, now, fx| {
+                    l.reconfigure(cfg.clone(), now, fx)
+                });
+            });
+            let t = cluster.sim.now() + 2_000_000; // +2 ms per reconfig
+            cluster.sim.run_until(t);
+        }
+    });
+
+    // --- tensor state machine via PJRT (three-layer hot path) ---
+    if matchmaker::runtime::artifacts_available() {
+        let mut sm = matchmaker::statemachine::TensorStateMachine::load().unwrap();
+        let cmds: Vec<Vec<f32>> = (0..32)
+            .map(|i| (0..16).map(|j| ((i * 16 + j) % 11) as f32 / 4.0).collect())
+            .collect();
+        bench("tensor SM: batch-32 apply via PJRT", |n| {
+            for _ in 0..n {
+                std::hint::black_box(sm.apply_batch(&cmds).unwrap());
+            }
+        });
+        let one = vec![cmds[0].clone()];
+        bench("tensor SM: batch-1 apply via PJRT", |n| {
+            for _ in 0..n {
+                std::hint::black_box(sm.apply_batch(&one).unwrap());
+            }
+        });
+    } else {
+        println!("(tensor SM benches skipped: run `make artifacts`)");
+    }
+}

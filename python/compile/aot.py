@@ -1,0 +1,64 @@
+"""AOT lowering: JAX model → HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+One artifact per compiled batch size (``apply_batch_b{B}.hlo.txt``); the
+Rust ``TensorStateMachine`` pads request batches up to the nearest size.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (via
+``make artifacts``). Python runs ONLY here, never on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Compiled batch sizes; must match tensor.rs::BATCH_SIZES.
+BATCH_SIZES = [1, 8, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constants as ``constant({...})``, which the text parser then
+    reads back as ZEROS — the model's mixing matrix would silently vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_artifacts(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for b in BATCH_SIZES:
+        lowered = jax.jit(model.apply_batch).lower(*model.example_args(b))
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"apply_batch_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Pure-jnp reference (oracle) for the tensor state machine step.
+
+This is the ground truth the L1 Pallas kernel and the L2 model are checked
+against by pytest (and, transitively, what the Rust-side
+``statemachine::tensor::reference_step`` mirrors).
+
+Semantics (one replicated-state-machine batch step):
+
+    M  = C @ W                  # command mixing (the MXU matmul)
+    S' = DECAY * S + M.T @ C    # rank-B state update
+    d  = rowsum(M * C)          # per-command digest (client reply)
+
+``W`` is a fixed integer-pattern matrix, exactly representable in f32 on
+both the Python and Rust sides: ``W[i, j] = ((i*31 + j*17) % 7 - 3) / 4``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# State dimension; must match rust/src/statemachine/tensor.rs::D.
+D = 16
+# Per-batch state decay; must match tensor.rs::DECAY.
+DECAY = 0.5
+
+
+def mixing_matrix(d: int = D) -> jnp.ndarray:
+    """The fixed mixing matrix W (identical across Python and Rust)."""
+    i = np.arange(d)[:, None]
+    j = np.arange(d)[None, :]
+    w = ((i * 31 + j * 17) % 7 - 3) / 4.0
+    return jnp.asarray(w, dtype=jnp.float32)
+
+
+def mix_ref(cmds: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the L1 kernel: M = C @ W."""
+    return jnp.dot(cmds, w, preferred_element_type=jnp.float32)
+
+
+def apply_batch_ref(state: jnp.ndarray, cmds: jnp.ndarray):
+    """Reference for the full L2 step: (S', d)."""
+    w = mixing_matrix(state.shape[0])
+    m = mix_ref(cmds, w)
+    new_state = DECAY * state + jnp.dot(m.T, cmds, preferred_element_type=jnp.float32)
+    digest = jnp.sum(m * cmds, axis=1)
+    return new_state, digest

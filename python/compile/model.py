@@ -1,0 +1,36 @@
+"""L2 — the JAX model: one replicated-state-machine batch step.
+
+``apply_batch(state, cmds)`` is the computation every replica executes for
+a batch of chosen commands. The hot spot — the command-mixing matmul — is
+the L1 Pallas kernel (``kernels.batch_apply.mix``); the rank-B state
+update and the per-command digest are plain jnp, fused by XLA around the
+kernel. ``aot.py`` lowers this function once per compiled batch size and
+ships HLO text to the Rust runtime; Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batch_apply
+from .kernels.ref import DECAY, D, mixing_matrix
+
+
+def apply_batch(state: jnp.ndarray, cmds: jnp.ndarray):
+    """One batch step: returns ``(new_state, digests)``.
+
+    state: (D, D) f32 — the replicated state.
+    cmds:  (B, D) f32 — the batch of decoded commands.
+    """
+    w = mixing_matrix(state.shape[0])
+    m = batch_apply.mix(cmds, w)  # L1 Pallas kernel
+    new_state = DECAY * state + jnp.dot(m.T, cmds, preferred_element_type=jnp.float32)
+    digest = jnp.sum(m * cmds, axis=1)
+    return new_state, digest
+
+
+def example_args(batch: int, d: int = D):
+    """Shape specs for AOT lowering at a given batch size."""
+    return (
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((batch, d), jnp.float32),
+    )

@@ -1,0 +1,8 @@
+"""Make `python/` importable regardless of pytest's invocation directory
+(`pytest python/tests/` from the repo root or `pytest tests/` from
+`python/` both work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,110 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled compute path:
+``batch_apply.mix`` (tiled Pallas matmul, interpret mode) must match
+``ref.mix_ref`` to float tolerance across shapes and value ranges. We
+sweep shapes/values both with explicit parametrization and with a
+hypothesis-style randomized sweep driven by numpy RNG (the environment is
+offline; the sweep covers the same space a hypothesis strategy would).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import batch_apply, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=dtype)
+
+
+@pytest.mark.parametrize("b", [1, 2, 8, 32])
+@pytest.mark.parametrize("d", [16, 32])
+def test_mix_matches_ref(b, d):
+    w = ref.mixing_matrix(d)
+    cmds = rand((b, d), seed=b * 100 + d)
+    got = batch_apply.mix(cmds, w)
+    want = ref.mix_ref(cmds, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "b,k,d",
+    [
+        (1, 16, 16),
+        (4, 32, 16),
+        (128, 128, 128),  # exactly one 128-tile
+        (256, 128, 256),  # multi-tile grid
+        (96, 48, 96),     # non-128 divisors
+        (3, 5, 7),        # awkward primes (tile = full dim)
+    ],
+)
+def test_mix_general_shapes(b, k, d):
+    w = rand((k, d), seed=k * 7 + d)
+    cmds = rand((b, k), seed=b)
+    got = batch_apply.mix(cmds, w)
+    want = jnp.dot(cmds, w, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mix_zero_input():
+    w = ref.mixing_matrix()
+    z = jnp.zeros((8, ref.D), jnp.float32)
+    np.testing.assert_array_equal(batch_apply.mix(z, w), np.zeros((8, ref.D)))
+
+
+def test_mix_large_values():
+    # f32 head-room: values up to 1e3 with D=16 accumulation stay exact
+    # enough for 1e-3 relative tolerance.
+    w = ref.mixing_matrix()
+    cmds = rand((8, ref.D), seed=3, scale=1e3)
+    got = batch_apply.mix(cmds, w)
+    want = ref.mix_ref(cmds, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_tile_picker():
+    assert batch_apply._pick_tile(256) == 128
+    assert batch_apply._pick_tile(96) == 96
+    assert batch_apply._pick_tile(7) == 7
+    assert batch_apply._pick_tile(130) == 65
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        b=st.integers(1, 64),
+        d=st.sampled_from([8, 16, 24, 32]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 10.0]),
+    )
+    def test_mix_hypothesis_sweep(b, d, seed, scale):
+        w = ref.mixing_matrix(d)
+        cmds = rand((b, d), seed=seed, scale=scale)
+        got = batch_apply.mix(cmds, w)
+        want = ref.mix_ref(cmds, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5 * scale)
+
+else:
+
+    @pytest.mark.parametrize("trial", range(30))
+    def test_mix_randomized_sweep(trial):
+        rng = np.random.default_rng(trial)
+        b = int(rng.integers(1, 65))
+        d = int(rng.choice([8, 16, 24, 32]))
+        scale = float(rng.choice([1e-3, 1.0, 10.0]))
+        w = ref.mixing_matrix(d)
+        cmds = rand((b, d), seed=trial + 1000, scale=scale)
+        got = batch_apply.mix(cmds, w)
+        want = ref.mix_ref(cmds, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5 * scale)

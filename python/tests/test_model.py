@@ -1,0 +1,71 @@
+"""L2 correctness: the full apply_batch step vs the oracle, plus the
+deterministic cross-language contracts the Rust side relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("b", [1, 8, 32])
+def test_apply_batch_matches_ref(b):
+    state = rand((ref.D, ref.D), seed=1)
+    cmds = rand((b, ref.D), seed=2)
+    got_s, got_d = model.apply_batch(state, cmds)
+    want_s, want_d = ref.apply_batch_ref(state, cmds)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_commands_decay_only():
+    state = rand((ref.D, ref.D), seed=3)
+    cmds = jnp.zeros((8, ref.D), jnp.float32)
+    new_state, digest = model.apply_batch(state, cmds)
+    np.testing.assert_allclose(new_state, ref.DECAY * state, rtol=1e-6)
+    np.testing.assert_array_equal(digest, np.zeros(8))
+
+
+def test_zero_padding_preserves_digests():
+    # The Rust runtime pads partial batches with zero commands; the real
+    # commands' digests must be unaffected and the padded rows contribute
+    # nothing to the state beyond what the real rows do.
+    state = rand((ref.D, ref.D), seed=4)
+    cmds = rand((5, ref.D), seed=5)
+    padded = jnp.concatenate([cmds, jnp.zeros((3, ref.D), jnp.float32)])
+    s_real, d_real = model.apply_batch(state, cmds)
+    s_pad, d_pad = model.apply_batch(state, padded)
+    np.testing.assert_allclose(s_pad, s_real, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(d_pad[:5], d_real, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(d_pad[5:], np.zeros(3))
+
+
+def test_determinism_across_jit_replays():
+    # Replicas stay in sync because the compiled step is deterministic.
+    state = rand((ref.D, ref.D), seed=6)
+    cmds = rand((8, ref.D), seed=7)
+    s1, d1 = model.apply_batch(state, cmds)
+    s2, d2 = model.apply_batch(state, cmds)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_mixing_matrix_matches_rust_pattern():
+    # Must equal tensor.rs::mixing_matrix exactly (integer pattern / 4).
+    w = np.asarray(ref.mixing_matrix())
+    for i in range(ref.D):
+        for j in range(ref.D):
+            assert w[i, j] == ((i * 31 + j * 17) % 7 - 3) / 4.0
+
+
+def test_example_args_shapes():
+    s, c = model.example_args(8)
+    assert s.shape == (ref.D, ref.D)
+    assert c.shape == (8, ref.D)
+    assert str(s.dtype) == "float32"

@@ -1,0 +1,680 @@
+//! Binary wire codec.
+//!
+//! The TCP runtime frames [`Envelope`]s with this compact, hand-rolled
+//! binary format (the build is fully self-contained; no serde). Every
+//! protocol type implements [`Wire`]; `decode(encode(x)) == x` is checked
+//! exhaustively by the tests and by the fuzz-ish property tests in
+//! `rust/tests/`.
+//!
+//! Format conventions: fixed-width little-endian integers, `u32`-prefixed
+//! lengths, one `u8` tag per enum variant. Decoding is panic-free: all
+//! errors surface as `Err(CodecError)` (malformed input from the network
+//! must never crash a node).
+
+use crate::config::Configuration;
+use crate::msg::{Command, Envelope, Msg, SlotVote, Value};
+use crate::quorum::QuorumSpec;
+use crate::round::Round;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Decoding error (malformed or truncated input).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError(pub String);
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "codec error: {}", self.0)
+    }
+}
+impl std::error::Error for CodecError {}
+
+type R<T> = Result<T, CodecError>;
+
+fn err<T>(msg: &str) -> R<T> {
+    Err(CodecError(msg.to_string()))
+}
+
+/// Byte-buffer encoder.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::with_capacity(64) }
+    }
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    pub fn bool(&mut self, x: bool) {
+        self.u8(x as u8);
+    }
+    pub fn bytes(&mut self, x: &[u8]) {
+        self.u32(x.len() as u32);
+        self.buf.extend_from_slice(x);
+    }
+    pub fn str(&mut self, x: &str) {
+        self.bytes(x.as_bytes());
+    }
+}
+
+/// Byte-buffer decoder.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> R<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return err("truncated");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    pub fn u8(&mut self) -> R<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> R<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> R<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bool(&mut self) -> R<bool> {
+        Ok(self.u8()? != 0)
+    }
+    pub fn bytes(&mut self) -> R<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > 64 << 20 {
+            return err("length too large");
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn str(&mut self) -> R<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| CodecError("invalid utf8".into()))
+    }
+    /// True when the whole buffer was consumed.
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Wire-serializable type.
+pub trait Wire: Sized {
+    fn enc(&self, e: &mut Enc);
+    fn dec(d: &mut Dec) -> R<Self>;
+
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        self.enc(&mut e);
+        e.buf
+    }
+    fn decode(buf: &[u8]) -> R<Self> {
+        let mut d = Dec::new(buf);
+        let v = Self::dec(&mut d)?;
+        if !d.done() {
+            return err("trailing bytes");
+        }
+        Ok(v)
+    }
+}
+
+// ---- Primitive / container impls ----
+
+impl Wire for u64 {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(*self)
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        d.u64()
+    }
+}
+
+impl Wire for u32 {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(*self)
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        d.u32()
+    }
+}
+
+impl Wire for usize {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(*self as u64)
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(d.u64()? as usize)
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            None => e.u8(0),
+            Some(x) => {
+                e.u8(1);
+                x.enc(e);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        match d.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::dec(d)?)),
+            _ => err("bad Option tag"),
+        }
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.len() as u32);
+        for x in self {
+            x.enc(e);
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        let n = d.u32()? as usize;
+        if n > 16 << 20 {
+            return err("vec too large");
+        }
+        let mut v = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            v.push(T::dec(d)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<K: Wire + Ord, V: Wire> Wire for BTreeMap<K, V> {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.len() as u32);
+        for (k, v) in self {
+            k.enc(e);
+            v.enc(e);
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        let n = d.u32()? as usize;
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::dec(d)?;
+            let v = V::dec(d)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+impl<T: Wire + Ord> Wire for BTreeSet<T> {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.len() as u32);
+        for x in self {
+            x.enc(e);
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        let n = d.u32()? as usize;
+        let mut s = BTreeSet::new();
+        for _ in 0..n {
+            s.insert(T::dec(d)?);
+        }
+        Ok(s)
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn enc(&self, e: &mut Enc) {
+        self.0.enc(e);
+        self.1.enc(e);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok((A::dec(d)?, B::dec(d)?))
+    }
+}
+
+// ---- Protocol types ----
+
+impl Wire for Round {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.epoch);
+        e.u32(self.proposer);
+        e.u64(self.seq);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(Round { epoch: d.u64()?, proposer: d.u32()?, seq: d.u64()? })
+    }
+}
+
+impl Wire for QuorumSpec {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            QuorumSpec::Majority => e.u8(0),
+            QuorumSpec::Flexible { p1, p2 } => {
+                e.u8(1);
+                p1.enc(e);
+                p2.enc(e);
+            }
+            QuorumSpec::FastUnanimous => e.u8(2),
+            QuorumSpec::Explicit { p1, p2 } => {
+                e.u8(3);
+                p1.enc(e);
+                p2.enc(e);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(match d.u8()? {
+            0 => QuorumSpec::Majority,
+            1 => QuorumSpec::Flexible { p1: Wire::dec(d)?, p2: Wire::dec(d)? },
+            2 => QuorumSpec::FastUnanimous,
+            3 => QuorumSpec::Explicit { p1: Wire::dec(d)?, p2: Wire::dec(d)? },
+            _ => return err("bad QuorumSpec tag"),
+        })
+    }
+}
+
+impl Wire for Configuration {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.id);
+        self.acceptors.enc(e);
+        self.quorum.enc(e);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(Configuration { id: d.u64()?, acceptors: Wire::dec(d)?, quorum: Wire::dec(d)? })
+    }
+}
+
+impl Wire for Command {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.client);
+        e.u64(self.seq);
+        e.bytes(&self.payload);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(Command { client: d.u32()?, seq: d.u64()?, payload: d.bytes()? })
+    }
+}
+
+impl Wire for Value {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            Value::Cmd(c) => {
+                e.u8(0);
+                c.enc(e);
+            }
+            Value::Noop => e.u8(1),
+            Value::Reconfig(c) => {
+                e.u8(2);
+                c.enc(e);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(match d.u8()? {
+            0 => Value::Cmd(Command::dec(d)?),
+            1 => Value::Noop,
+            2 => Value::Reconfig(Configuration::dec(d)?),
+            _ => return err("bad Value tag"),
+        })
+    }
+}
+
+impl Wire for SlotVote {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.slot);
+        self.vr.enc(e);
+        self.vv.enc(e);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(SlotVote { slot: d.u64()?, vr: Round::dec(d)?, vv: Value::dec(d)? })
+    }
+}
+
+impl Wire for Msg {
+    fn enc(&self, e: &mut Enc) {
+        use Msg::*;
+        match self {
+            MatchA { round, config } => {
+                e.u8(0);
+                round.enc(e);
+                config.enc(e);
+            }
+            MatchB { round, gc_watermark, prior } => {
+                e.u8(1);
+                round.enc(e);
+                gc_watermark.enc(e);
+                prior.enc(e);
+            }
+            MatchNack { round, blocking } => {
+                e.u8(2);
+                round.enc(e);
+                blocking.enc(e);
+            }
+            Phase1A { round, from_slot } => {
+                e.u8(3);
+                round.enc(e);
+                e.u64(*from_slot);
+            }
+            Phase1B { round, votes, chosen_watermark } => {
+                e.u8(4);
+                round.enc(e);
+                votes.enc(e);
+                e.u64(*chosen_watermark);
+            }
+            Phase2A { round, slot, value } => {
+                e.u8(5);
+                round.enc(e);
+                e.u64(*slot);
+                value.enc(e);
+            }
+            Phase2B { round, slot } => {
+                e.u8(6);
+                round.enc(e);
+                e.u64(*slot);
+            }
+            Nack { round, higher } => {
+                e.u8(7);
+                round.enc(e);
+                higher.enc(e);
+            }
+            Chosen { slot, value } => {
+                e.u8(8);
+                e.u64(*slot);
+                value.enc(e);
+            }
+            ReplicaAck { upto } => {
+                e.u8(9);
+                e.u64(*upto);
+            }
+            PrefixPersisted { round, upto } => {
+                e.u8(10);
+                round.enc(e);
+                e.u64(*upto);
+            }
+            PrefixAck { round, upto } => {
+                e.u8(11);
+                round.enc(e);
+                e.u64(*upto);
+            }
+            ReadPrefix { from } => {
+                e.u8(12);
+                e.u64(*from);
+            }
+            PrefixResp { entries, upto } => {
+                e.u8(13);
+                entries.enc(e);
+                e.u64(*upto);
+            }
+            GarbageA { round } => {
+                e.u8(14);
+                round.enc(e);
+            }
+            GarbageB { round } => {
+                e.u8(15);
+                round.enc(e);
+            }
+            ClientRequest { cmd } => {
+                e.u8(16);
+                cmd.enc(e);
+            }
+            ClientReply { seq, result } => {
+                e.u8(17);
+                e.u64(*seq);
+                e.bytes(result);
+            }
+            NotLeader { hint } => {
+                e.u8(18);
+                hint.enc(e);
+            }
+            StopA => e.u8(19),
+            StopB { log, gc_watermark } => {
+                e.u8(20);
+                log.enc(e);
+                gc_watermark.enc(e);
+            }
+            Bootstrap { log, gc_watermark, generation } => {
+                e.u8(21);
+                log.enc(e);
+                gc_watermark.enc(e);
+                e.u64(*generation);
+            }
+            BootstrapAck => e.u8(22),
+            MatchmakersActivated { matchmakers } => {
+                e.u8(23);
+                matchmakers.enc(e);
+            }
+            MetaPhase1A { round, generation } => {
+                e.u8(24);
+                round.enc(e);
+                e.u64(*generation);
+            }
+            MetaPhase1B { round, vr, vv } => {
+                e.u8(25);
+                round.enc(e);
+                vr.enc(e);
+                vv.enc(e);
+            }
+            MetaPhase2A { round, generation, matchmakers } => {
+                e.u8(26);
+                round.enc(e);
+                e.u64(*generation);
+                matchmakers.enc(e);
+            }
+            MetaPhase2B { round } => {
+                e.u8(27);
+                round.enc(e);
+            }
+            Heartbeat { epoch } => {
+                e.u8(28);
+                e.u64(*epoch);
+            }
+            HeartbeatReply { epoch } => {
+                e.u8(29);
+                e.u64(*epoch);
+            }
+            FastPropose { round, value } => {
+                e.u8(30);
+                round.enc(e);
+                value.enc(e);
+            }
+            FastPhase2B { round, value } => {
+                e.u8(31);
+                round.enc(e);
+                value.enc(e);
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> R<Self> {
+        use Msg::*;
+        Ok(match d.u8()? {
+            0 => MatchA { round: Round::dec(d)?, config: Configuration::dec(d)? },
+            1 => MatchB {
+                round: Round::dec(d)?,
+                gc_watermark: Wire::dec(d)?,
+                prior: Wire::dec(d)?,
+            },
+            2 => MatchNack { round: Round::dec(d)?, blocking: Round::dec(d)? },
+            3 => Phase1A { round: Round::dec(d)?, from_slot: d.u64()? },
+            4 => Phase1B {
+                round: Round::dec(d)?,
+                votes: Wire::dec(d)?,
+                chosen_watermark: d.u64()?,
+            },
+            5 => Phase2A { round: Round::dec(d)?, slot: d.u64()?, value: Value::dec(d)? },
+            6 => Phase2B { round: Round::dec(d)?, slot: d.u64()? },
+            7 => Nack { round: Round::dec(d)?, higher: Round::dec(d)? },
+            8 => Chosen { slot: d.u64()?, value: Value::dec(d)? },
+            9 => ReplicaAck { upto: d.u64()? },
+            10 => PrefixPersisted { round: Round::dec(d)?, upto: d.u64()? },
+            11 => PrefixAck { round: Round::dec(d)?, upto: d.u64()? },
+            12 => ReadPrefix { from: d.u64()? },
+            13 => PrefixResp { entries: Wire::dec(d)?, upto: d.u64()? },
+            14 => GarbageA { round: Round::dec(d)? },
+            15 => GarbageB { round: Round::dec(d)? },
+            16 => ClientRequest { cmd: Command::dec(d)? },
+            17 => ClientReply { seq: d.u64()?, result: d.bytes()? },
+            18 => NotLeader { hint: Wire::dec(d)? },
+            19 => StopA,
+            20 => StopB { log: Wire::dec(d)?, gc_watermark: Wire::dec(d)? },
+            21 => Bootstrap { log: Wire::dec(d)?, gc_watermark: Wire::dec(d)?, generation: d.u64()? },
+            22 => BootstrapAck,
+            23 => MatchmakersActivated { matchmakers: Wire::dec(d)? },
+            24 => MetaPhase1A { round: Round::dec(d)?, generation: d.u64()? },
+            25 => MetaPhase1B { round: Round::dec(d)?, vr: Wire::dec(d)?, vv: Wire::dec(d)? },
+            26 => MetaPhase2A { round: Round::dec(d)?, generation: d.u64()?, matchmakers: Wire::dec(d)? },
+            27 => MetaPhase2B { round: Round::dec(d)? },
+            28 => Heartbeat { epoch: d.u64()? },
+            29 => HeartbeatReply { epoch: d.u64()? },
+            30 => FastPropose { round: Round::dec(d)?, value: Value::dec(d)? },
+            31 => FastPhase2B { round: Round::dec(d)?, value: Value::dec(d)? },
+            t => return err(&format!("bad Msg tag {t}")),
+        })
+    }
+}
+
+impl Wire for Envelope {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.from);
+        e.u32(self.to);
+        self.msg.enc(e);
+    }
+    fn dec(d: &mut Dec) -> R<Self> {
+        Ok(Envelope { from: d.u32()?, to: d.u32()?, msg: Msg::dec(d)? })
+    }
+}
+
+/// A representative sample of every message variant, used by roundtrip
+/// tests here and in the integration suite.
+pub fn sample_messages() -> Vec<Msg> {
+    use Msg::*;
+    let r0 = Round { epoch: 0, proposer: 1, seq: 0 };
+    let r1 = Round { epoch: 1, proposer: 2, seq: 3 };
+    let cfg = Configuration::majority(7, vec![4, 5, 6]);
+    let cmd = Command { client: 9, seq: 42, payload: vec![1, 2, 3] };
+    let mut log = BTreeMap::new();
+    log.insert(r0, cfg.clone());
+    log.insert(r1, Configuration {
+        id: 8,
+        acceptors: vec![10, 11, 12, 13],
+        quorum: QuorumSpec::Explicit {
+            p1: vec![[0usize, 1].into_iter().collect()],
+            p2: vec![[2usize, 3].into_iter().collect()],
+        },
+    });
+    vec![
+        MatchA { round: r0, config: cfg.clone() },
+        MatchB { round: r1, gc_watermark: Some(r0), prior: log.clone() },
+        MatchNack { round: r0, blocking: r1 },
+        Phase1A { round: r1, from_slot: 17 },
+        Phase1B {
+            round: r1,
+            votes: vec![SlotVote { slot: 3, vr: r0, vv: Value::Cmd(cmd.clone()) }],
+            chosen_watermark: 2,
+        },
+        Phase2A { round: r1, slot: 5, value: Value::Noop },
+        Phase2B { round: r1, slot: 5 },
+        Nack { round: r0, higher: r1 },
+        Chosen { slot: 6, value: Value::Reconfig(cfg.clone()) },
+        ReplicaAck { upto: 10 },
+        PrefixPersisted { round: r1, upto: 4 },
+        PrefixAck { round: r1, upto: 4 },
+        ReadPrefix { from: 0 },
+        PrefixResp { entries: vec![(0, Value::Noop)], upto: 1 },
+        GarbageA { round: r1 },
+        GarbageB { round: r1 },
+        ClientRequest { cmd: cmd.clone() },
+        ClientReply { seq: 42, result: vec![9, 9] },
+        NotLeader { hint: Some(3) },
+        StopA,
+        StopB { log: log.clone(), gc_watermark: None },
+        Bootstrap { log, gc_watermark: Some(r1), generation: 3 },
+        BootstrapAck,
+        MatchmakersActivated { matchmakers: vec![1, 2, 3] },
+        MetaPhase1A { round: r0, generation: 2 },
+        MetaPhase1B { round: r0, vr: Some(r1), vv: Some(vec![7, 8]) },
+        MetaPhase2A { round: r0, generation: 2, matchmakers: vec![7, 8, 9] },
+        MetaPhase2B { round: r0 },
+        Heartbeat { epoch: 2 },
+        HeartbeatReply { epoch: 2 },
+        FastPropose { round: r1, value: Value::Cmd(cmd) },
+        FastPhase2B { round: r1, value: Value::Noop },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for m in sample_messages() {
+            let env = Envelope { from: 3, to: 9, msg: m.clone() };
+            let bytes = env.encode();
+            let back = Envelope::decode(&bytes).unwrap_or_else(|e| panic!("{m:?}: {e}"));
+            assert_eq!(back.msg, m);
+            assert_eq!((back.from, back.to), (3, 9));
+        }
+    }
+
+    #[test]
+    fn sample_covers_all_tags() {
+        // 32 variants, tags 0..=31: decoding tag 32 must fail.
+        assert_eq!(sample_messages().len(), 32);
+        let mut e = Enc::new();
+        e.u8(32);
+        assert!(Msg::decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn truncated_input_is_error_not_panic() {
+        for m in sample_messages() {
+            let bytes = m.encode();
+            for cut in 0..bytes.len() {
+                let _ = Msg::decode(&bytes[..cut]); // must not panic
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = Msg::StopA.encode();
+        bytes.push(0);
+        assert!(Msg::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn garbage_is_error_not_panic() {
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..2000 {
+            let n = rng.gen_range(64) as usize;
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = Envelope::decode(&bytes); // must not panic
+        }
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        let v: Vec<u64> = vec![1, 2, 3];
+        assert_eq!(Vec::<u64>::decode(&v.encode()).unwrap(), v);
+        let o: Option<u32> = None;
+        assert_eq!(Option::<u32>::decode(&o.encode()).unwrap(), o);
+        let mut m = BTreeMap::new();
+        m.insert(1u64, 2u64);
+        assert_eq!(BTreeMap::<u64, u64>::decode(&m.encode()).unwrap(), m);
+    }
+}

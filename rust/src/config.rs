@@ -1,0 +1,418 @@
+//! Configurations (quorum systems over acceptor sets) and deployment
+//! descriptions.
+//!
+//! A [`Configuration`] is the paper's `C = (A; P1; P2)`: the unit of
+//! reconfiguration. A [`DeploymentConfig`] describes a whole cluster — which
+//! node ids play which role, the fault-tolerance parameter `f`, protocol
+//! option flags — and is what the CLI launcher and the simulator harness
+//! both consume (TOML on disk for real deployments).
+
+use crate::quorum::QuorumSpec;
+use crate::NodeId;
+use std::collections::BTreeSet;
+
+/// A configuration of acceptors: the paper's `C = (A; P1; P2)`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Configuration {
+    /// Monotonic identifier, for logging/metrics only (safety never depends
+    /// on it — rounds identify configurations in the protocol).
+    pub id: u64,
+    /// Ordered acceptor list `A`.
+    pub acceptors: Vec<NodeId>,
+    /// The quorum system `(P1, P2)`.
+    pub quorum: QuorumSpec,
+}
+
+impl Configuration {
+    /// A majority-quorum configuration over `acceptors`.
+    pub fn majority(id: u64, acceptors: Vec<NodeId>) -> Configuration {
+        Configuration {
+            id,
+            acceptors,
+            quorum: QuorumSpec::Majority,
+        }
+    }
+
+    /// Validate the Flexible-Paxos intersection property and acceptor-set
+    /// well-formedness.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.acceptors.is_empty() {
+            return Err("configuration has no acceptors".into());
+        }
+        let uniq: BTreeSet<_> = self.acceptors.iter().collect();
+        if uniq.len() != self.acceptors.len() {
+            return Err("duplicate acceptor in configuration".into());
+        }
+        if !self.quorum.intersects(self.acceptors.len()) {
+            return Err(format!(
+                "quorum system {:?} violates P1/P2 intersection over {} acceptors",
+                self.quorum,
+                self.acceptors.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Is `acked` a Phase 1 quorum of this configuration?
+    pub fn is_p1_quorum(&self, acked: &BTreeSet<NodeId>) -> bool {
+        self.quorum.is_p1_quorum(&self.acceptors, acked)
+    }
+
+    /// Is `acked` a Phase 2 quorum of this configuration?
+    pub fn is_p2_quorum(&self, acked: &BTreeSet<NodeId>) -> bool {
+        self.quorum.is_p2_quorum(&self.acceptors, acked)
+    }
+}
+
+/// Protocol optimization flags (§3.4, §8.2 ablation). All on by default;
+/// the ablation experiment (Figure 17) toggles subsets off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptFlags {
+    /// Optimization 1: run the Matchmaking phase before hearing from
+    /// clients; during a reconfiguration, keep processing commands in the
+    /// old round while matchmaking for the new one.
+    pub proactive_matchmaking: bool,
+    /// Optimization 2: skip Phase 1 for empty log suffixes when advancing
+    /// `(r, id, s) → (r, id, s+1)`.
+    pub phase1_bypass: bool,
+    /// Optimization 3: garbage-collect retired configurations (§5).
+    pub garbage_collection: bool,
+    /// Optimization 4: prune configurations below the largest vote round
+    /// seen in Phase 1.
+    pub round_pruning: bool,
+    /// Thriftiness (§8.1): send Phase2A to a sampled P2 quorum rather than
+    /// all acceptors.
+    pub thrifty: bool,
+    /// Optimization 5: on a leader change, run the Matchmaking phase and
+    /// Phase 1 concurrently against the leader's configuration guess,
+    /// saving one round trip when the guess matches H_i (the common case
+    /// when leaders rarely change the acceptors during an election).
+    pub concurrent_phase1: bool,
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        OptFlags {
+            proactive_matchmaking: true,
+            phase1_bypass: true,
+            garbage_collection: true,
+            round_pruning: true,
+            thrifty: true,
+            concurrent_phase1: false,
+        }
+    }
+}
+
+impl OptFlags {
+    /// No optimizations: the stop-the-world baseline of the §8.2 ablation.
+    pub fn none() -> OptFlags {
+        OptFlags {
+            proactive_matchmaking: false,
+            phase1_bypass: false,
+            garbage_collection: false,
+            round_pruning: false,
+            thrifty: false,
+            concurrent_phase1: false,
+        }
+    }
+}
+
+/// Role assignment for a deployment: which node ids are proposers,
+/// acceptors, matchmakers, and replicas. Clients get ids above all of
+/// these. Mirrors the paper's deployment: `f+1` proposers, a pool of
+/// acceptors (`2·(2f+1)` for the reconfiguration experiments), `2f+1`
+/// matchmakers (pool of `2·(2f+1)` for §8.4), and `2f+1` replicas
+/// (§5.3 requires `2f+1`, not `f+1`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterLayout {
+    pub f: usize,
+    pub proposers: Vec<NodeId>,
+    /// Pool of acceptors that configurations may draw from.
+    pub acceptor_pool: Vec<NodeId>,
+    /// Pool of matchmakers; the first `2f+1` form the initial active set.
+    pub matchmaker_pool: Vec<NodeId>,
+    pub replicas: Vec<NodeId>,
+    pub clients: Vec<NodeId>,
+}
+
+impl ClusterLayout {
+    /// Standard paper layout: `f+1` proposers, `pool_factor·(2f+1)`
+    /// acceptors, `pool_factor·(2f+1)` matchmakers, `2f+1` replicas and
+    /// `n_clients` clients, with dense ids assigned in role order.
+    pub fn standard(f: usize, pool_factor: usize, n_clients: usize) -> ClusterLayout {
+        let mut next: NodeId = 0;
+        let mut take = |n: usize| -> Vec<NodeId> {
+            let ids: Vec<NodeId> = (next..next + n as NodeId).collect();
+            next += n as NodeId;
+            ids
+        };
+        ClusterLayout {
+            f,
+            proposers: take(f + 1),
+            acceptor_pool: take(pool_factor * (2 * f + 1)),
+            matchmaker_pool: take(pool_factor * (2 * f + 1)),
+            replicas: take(2 * f + 1),
+            clients: take(n_clients),
+        }
+    }
+
+    /// The initially active matchmakers (first `2f+1` of the pool).
+    pub fn initial_matchmakers(&self) -> Vec<NodeId> {
+        self.matchmaker_pool[..(2 * self.f + 1).min(self.matchmaker_pool.len())].to_vec()
+    }
+
+    /// The initial acceptor configuration (first `2f+1` of the pool,
+    /// majority quorums).
+    pub fn initial_config(&self) -> Configuration {
+        Configuration::majority(
+            0,
+            self.acceptor_pool[..(2 * self.f + 1).min(self.acceptor_pool.len())].to_vec(),
+        )
+    }
+
+    /// Total number of node ids in the layout (nodes are dense `0..total`).
+    pub fn total_nodes(&self) -> usize {
+        self.proposers.len()
+            + self.acceptor_pool.len()
+            + self.matchmaker_pool.len()
+            + self.replicas.len()
+            + self.clients.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.proposers.len() < self.f + 1 {
+            return Err(format!("need >= f+1 = {} proposers", self.f + 1));
+        }
+        if self.acceptor_pool.len() < 2 * self.f + 1 {
+            return Err(format!("need >= 2f+1 = {} acceptors", 2 * self.f + 1));
+        }
+        if self.matchmaker_pool.len() < 2 * self.f + 1 {
+            return Err(format!("need >= 2f+1 = {} matchmakers", 2 * self.f + 1));
+        }
+        if self.replicas.len() < self.f + 1 {
+            return Err(format!("need >= f+1 = {} replicas", self.f + 1));
+        }
+        let mut all: Vec<NodeId> = Vec::new();
+        all.extend(&self.proposers);
+        all.extend(&self.acceptor_pool);
+        all.extend(&self.matchmaker_pool);
+        all.extend(&self.replicas);
+        all.extend(&self.clients);
+        let uniq: BTreeSet<_> = all.iter().collect();
+        if uniq.len() != all.len() {
+            return Err("node id assigned to two roles".into());
+        }
+        Ok(())
+    }
+}
+
+/// A full deployment description: layout + protocol flags + network
+/// addresses (for the TCP runtime). Serialized as a simple `key = value`
+/// text format for `repro run` (the build is dependency-free; no TOML
+/// crate — the format below is a TOML subset).
+#[derive(Clone, Debug)]
+pub struct DeploymentConfig {
+    pub layout: ClusterLayout,
+    pub opts: OptFlags,
+    /// node id → "host:port" for the TCP runtime. Unused by the simulator.
+    pub addrs: std::collections::BTreeMap<NodeId, String>,
+    /// Which state machine replicas run: "noop", "kv", "register",
+    /// "counter", or "tensor" (XLA-backed; requires `artifacts/`).
+    pub state_machine: String,
+}
+
+fn default_sm() -> String {
+    "noop".to_string()
+}
+
+fn fmt_ids(ids: &[NodeId]) -> String {
+    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn parse_ids(s: &str) -> Result<Vec<NodeId>, String> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|x| x.trim().parse::<NodeId>().map_err(|e| format!("bad id {x:?}: {e}")))
+        .collect()
+}
+
+impl DeploymentConfig {
+    pub fn standard(f: usize, n_clients: usize) -> DeploymentConfig {
+        DeploymentConfig {
+            layout: ClusterLayout::standard(f, 2, n_clients),
+            opts: OptFlags::default(),
+            addrs: Default::default(),
+            state_machine: default_sm(),
+        }
+    }
+
+    /// Serialize to the cluster config text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        let l = &self.layout;
+        out.push_str("# matchmaker-paxos cluster config\n");
+        out.push_str(&format!("f = {}\n", l.f));
+        out.push_str(&format!("proposers = {}\n", fmt_ids(&l.proposers)));
+        out.push_str(&format!("acceptor_pool = {}\n", fmt_ids(&l.acceptor_pool)));
+        out.push_str(&format!("matchmaker_pool = {}\n", fmt_ids(&l.matchmaker_pool)));
+        out.push_str(&format!("replicas = {}\n", fmt_ids(&l.replicas)));
+        out.push_str(&format!("clients = {}\n", fmt_ids(&l.clients)));
+        out.push_str(&format!("state_machine = {}\n", self.state_machine));
+        let o = &self.opts;
+        out.push_str(&format!(
+            "opts = proactive:{},bypass:{},gc:{},pruning:{},thrifty:{},concurrent_p1:{}\n",
+            o.proactive_matchmaking, o.phase1_bypass, o.garbage_collection, o.round_pruning, o.thrifty, o.concurrent_phase1
+        ));
+        for (id, addr) in &self.addrs {
+            out.push_str(&format!("addr.{id} = {addr}\n"));
+        }
+        out
+    }
+
+    /// Parse the cluster config text format. Unknown keys are errors;
+    /// missing role lines are errors; opts/addrs/state_machine default.
+    pub fn from_text(s: &str) -> Result<DeploymentConfig, String> {
+        let mut cfg = DeploymentConfig {
+            layout: ClusterLayout {
+                f: 0,
+                proposers: vec![],
+                acceptor_pool: vec![],
+                matchmaker_pool: vec![],
+                replicas: vec![],
+                clients: vec![],
+            },
+            opts: OptFlags::default(),
+            addrs: Default::default(),
+            state_machine: default_sm(),
+        };
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "f" => cfg.layout.f = value.parse().map_err(|e| format!("f: {e}"))?,
+                "proposers" => cfg.layout.proposers = parse_ids(value)?,
+                "acceptor_pool" => cfg.layout.acceptor_pool = parse_ids(value)?,
+                "matchmaker_pool" => cfg.layout.matchmaker_pool = parse_ids(value)?,
+                "replicas" => cfg.layout.replicas = parse_ids(value)?,
+                "clients" => cfg.layout.clients = parse_ids(value)?,
+                "state_machine" => cfg.state_machine = value.to_string(),
+                "opts" => {
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("opts: expected k:v in {part:?}"))?;
+                        let b: bool =
+                            v.trim().parse().map_err(|e| format!("opts {k}: {e}"))?;
+                        match k.trim() {
+                            "proactive" => cfg.opts.proactive_matchmaking = b,
+                            "bypass" => cfg.opts.phase1_bypass = b,
+                            "gc" => cfg.opts.garbage_collection = b,
+                            "pruning" => cfg.opts.round_pruning = b,
+                            "thrifty" => cfg.opts.thrifty = b,
+                            "concurrent_p1" => cfg.opts.concurrent_phase1 = b,
+                            other => return Err(format!("unknown opt {other:?}")),
+                        }
+                    }
+                }
+                k if k.starts_with("addr.") => {
+                    let id: NodeId = k[5..]
+                        .parse()
+                        .map_err(|e| format!("addr key {k:?}: {e}"))?;
+                    cfg.addrs.insert(id, value.to_string());
+                }
+                other => return Err(format!("line {}: unknown key {other:?}", lineno + 1)),
+            }
+        }
+        cfg.layout.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_layout_counts() {
+        let l = ClusterLayout::standard(1, 2, 4);
+        assert_eq!(l.proposers.len(), 2);
+        assert_eq!(l.acceptor_pool.len(), 6);
+        assert_eq!(l.matchmaker_pool.len(), 6);
+        assert_eq!(l.replicas.len(), 3);
+        assert_eq!(l.clients.len(), 4);
+        l.validate().unwrap();
+        assert_eq!(l.initial_matchmakers().len(), 3);
+        assert_eq!(l.initial_config().acceptors.len(), 3);
+        assert_eq!(l.total_nodes(), 2 + 6 + 6 + 3 + 4);
+    }
+
+    #[test]
+    fn layout_f2() {
+        let l = ClusterLayout::standard(2, 2, 8);
+        assert_eq!(l.proposers.len(), 3);
+        assert_eq!(l.acceptor_pool.len(), 10);
+        assert_eq!(l.initial_config().acceptors.len(), 5);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn config_validation() {
+        Configuration::majority(0, vec![1, 2, 3]).validate().unwrap();
+        assert!(Configuration::majority(0, vec![]).validate().is_err());
+        assert!(Configuration::majority(0, vec![1, 1, 2]).validate().is_err());
+        let bad = Configuration {
+            id: 0,
+            acceptors: vec![1, 2, 3, 4],
+            quorum: QuorumSpec::Flexible { p1: 2, p2: 2 },
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn text_config_roundtrip() {
+        let mut cfg = DeploymentConfig::standard(1, 2);
+        cfg.addrs.insert(0, "127.0.0.1:7000".into());
+        cfg.opts.thrifty = false;
+        cfg.state_machine = "kv".into();
+        let s = cfg.to_text();
+        let back = DeploymentConfig::from_text(&s).unwrap();
+        assert_eq!(back.layout, cfg.layout);
+        assert_eq!(back.opts, cfg.opts);
+        assert_eq!(back.state_machine, "kv");
+        assert_eq!(back.addrs, cfg.addrs);
+    }
+
+    #[test]
+    fn text_config_rejects_garbage() {
+        assert!(DeploymentConfig::from_text("nonsense").is_err());
+        assert!(DeploymentConfig::from_text("bogus_key = 3").is_err());
+        // Valid keys but invalid layout (no proposers).
+        assert!(DeploymentConfig::from_text("f = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_layout_rejected() {
+        let mut l = ClusterLayout::standard(1, 2, 1);
+        l.proposers = vec![0];
+        assert!(l.validate().is_err());
+        let mut l2 = ClusterLayout::standard(1, 2, 1);
+        l2.clients = vec![l2.proposers[0]];
+        assert!(l2.validate().is_err());
+    }
+
+    #[test]
+    fn opt_flags() {
+        let all = OptFlags::default();
+        assert!(all.proactive_matchmaking && all.phase1_bypass && all.garbage_collection);
+        let none = OptFlags::none();
+        assert!(!none.proactive_matchmaking && !none.phase1_bypass && !none.garbage_collection);
+    }
+}

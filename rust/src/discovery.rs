@@ -1,0 +1,133 @@
+//! An eventually consistent discovery service (§2.1).
+//!
+//! The paper assumes "a discovery service that nodes can use to find each
+//! other, but [does] not require that this service be strongly consistent.
+//! A node can safely communicate with outdated nodes. A system like DNS
+//! would suffice." This registry models exactly that: a last-writer-wins
+//! map from node id to (role, address, incarnation), with stale reads
+//! explicitly permitted. The TCP runtime uses it to resolve peers; the
+//! simulator doesn't need it (ids are addresses) but the tests exercise
+//! the staleness contract.
+
+use crate::NodeId;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// A registered node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Registration {
+    pub id: NodeId,
+    pub role: String,
+    pub addr: String,
+    /// Monotonic incarnation: a restarted/replaced node re-registers with a
+    /// higher incarnation; lower-incarnation writes are ignored (LWW).
+    pub incarnation: u64,
+}
+
+/// A shared, eventually consistent registry. Cheap to clone (Arc).
+#[derive(Clone, Default)]
+pub struct Discovery {
+    inner: Arc<RwLock<BTreeMap<NodeId, Registration>>>,
+}
+
+impl Discovery {
+    pub fn new() -> Discovery {
+        Discovery::default()
+    }
+
+    /// Register (or refresh) a node. Returns false if a newer incarnation
+    /// already exists (the write is ignored).
+    pub fn register(&self, reg: Registration) -> bool {
+        let mut map = self.inner.write().unwrap();
+        match map.get(&reg.id) {
+            Some(cur) if cur.incarnation > reg.incarnation => false,
+            _ => {
+                map.insert(reg.id, reg);
+                true
+            }
+        }
+    }
+
+    /// Remove a node (best-effort; readers may still see it briefly in a
+    /// real deployment — callers must tolerate staleness).
+    pub fn deregister(&self, id: NodeId) {
+        self.inner.write().unwrap().remove(&id);
+    }
+
+    /// Look up one node.
+    pub fn lookup(&self, id: NodeId) -> Option<Registration> {
+        self.inner.read().unwrap().get(&id).cloned()
+    }
+
+    /// All nodes currently registered under `role`.
+    pub fn by_role(&self, role: &str) -> Vec<Registration> {
+        self.inner
+            .read()
+            .unwrap()
+            .values()
+            .filter(|r| r.role == role)
+            .cloned()
+            .collect()
+    }
+
+    /// Snapshot of the whole registry.
+    pub fn snapshot(&self) -> BTreeMap<NodeId, Registration> {
+        self.inner.read().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(id: NodeId, role: &str, inc: u64) -> Registration {
+        Registration { id, role: role.into(), addr: format!("127.0.0.1:{}", 7000 + id), incarnation: inc }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let d = Discovery::new();
+        assert!(d.register(reg(1, "acceptor", 0)));
+        assert_eq!(d.lookup(1).unwrap().role, "acceptor");
+        assert!(d.lookup(2).is_none());
+    }
+
+    #[test]
+    fn incarnation_lww() {
+        let d = Discovery::new();
+        d.register(reg(1, "acceptor", 5));
+        // Older incarnation ignored.
+        assert!(!d.register(reg(1, "acceptor", 3)));
+        assert_eq!(d.lookup(1).unwrap().incarnation, 5);
+        // Newer wins.
+        assert!(d.register(reg(1, "acceptor", 6)));
+        assert_eq!(d.lookup(1).unwrap().incarnation, 6);
+    }
+
+    #[test]
+    fn by_role() {
+        let d = Discovery::new();
+        d.register(reg(1, "acceptor", 0));
+        d.register(reg(2, "acceptor", 0));
+        d.register(reg(3, "matchmaker", 0));
+        assert_eq!(d.by_role("acceptor").len(), 2);
+        assert_eq!(d.by_role("matchmaker").len(), 1);
+        assert_eq!(d.by_role("replica").len(), 0);
+    }
+
+    #[test]
+    fn deregister() {
+        let d = Discovery::new();
+        d.register(reg(1, "x", 0));
+        d.deregister(1);
+        assert!(d.lookup(1).is_none());
+    }
+
+    #[test]
+    fn shared_between_clones() {
+        let d = Discovery::new();
+        let d2 = d.clone();
+        d.register(reg(9, "replica", 1));
+        assert_eq!(d2.lookup(9).unwrap().id, 9);
+    }
+}

@@ -1,0 +1,332 @@
+//! Reproduction of the DPaxos garbage-collection bug (§7).
+//!
+//! The paper discovered that DPaxos [30] — a Paxos variant in which every
+//! ballot may use a different subset of acceptors, with "intents" recorded
+//! during leader election — has an unsafe garbage collection protocol: the
+//! scripted 3-zone scenario in §7 chooses *two different values*. This
+//! module contains (a) a miniature DPaxos engine faithful to the fragment
+//! the counter-example needs, (b) the exact §7 schedule, asserting the
+//! divergence, and (c) the same schedule run through Matchmaker Paxos
+//! machinery, where GC is simply not permitted at that point and the
+//! second value can never be chosen.
+//!
+//! DPaxos deployment in the trace: `f_d = 1, f_z = 0`, three zones of
+//! three nodes (A..I), delegate quorums — a replication quorum is two
+//! nodes in one zone, a leader-election quorum is two nodes in each of two
+//! zones.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Node names A..I as indices 0..9.
+pub type DNode = usize;
+
+/// One DPaxos acceptor's state.
+#[derive(Clone, Debug, Default)]
+pub struct DState {
+    /// Highest ballot promised.
+    pub ballot: i64,
+    /// Ballot of the last accepted value.
+    pub vote_ballot: i64,
+    /// Last accepted value.
+    pub vote_value: Option<char>,
+    /// Intents observed: (ballot, replication quorum).
+    pub intents: Vec<(i64, BTreeSet<DNode>)>,
+}
+
+/// The miniature DPaxos engine. Message loss is modeled by the caller
+/// simply not invoking `accept` on a node.
+pub struct DPaxos {
+    pub nodes: Vec<DState>,
+    /// All values ever chosen (ballot → value): the safety observable.
+    pub chosen: BTreeMap<i64, char>,
+}
+
+impl Default for DPaxos {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DPaxos {
+    pub fn new() -> DPaxos {
+        DPaxos {
+            nodes: vec![
+                DState { ballot: -1, vote_ballot: -1, ..Default::default() };
+                9
+            ],
+            chosen: BTreeMap::new(),
+        }
+    }
+
+    /// Leader election (prepare) in `ballot` with leader-election quorum
+    /// `quorum` and intent `intent`. Returns the set of intents reported by
+    /// the contacted nodes (for quorum expansion) and the highest-ballot
+    /// accepted value seen.
+    pub fn prepare(
+        &mut self,
+        ballot: i64,
+        quorum: &BTreeSet<DNode>,
+        intent: &BTreeSet<DNode>,
+    ) -> (Vec<(i64, BTreeSet<DNode>)>, Option<(i64, char)>) {
+        let mut reported: Vec<(i64, BTreeSet<DNode>)> = Vec::new();
+        let mut best: Option<(i64, char)> = None;
+        for &n in quorum {
+            let st = &mut self.nodes[n];
+            if st.ballot > ballot {
+                continue; // refuses
+            }
+            st.ballot = ballot;
+            for it in &st.intents {
+                if it.0 < ballot {
+                    reported.push(it.clone());
+                }
+            }
+            if let Some(v) = st.vote_value {
+                if best.map_or(true, |(b, _)| st.vote_ballot > b) {
+                    best = Some((st.vote_ballot, v));
+                }
+            }
+            // Record the new intent.
+            st.intents.push((ballot, intent.clone()));
+        }
+        (reported, best)
+    }
+
+    /// Send an accept (propose) for `value` in `ballot` to one node.
+    /// Returns true if the node accepted.
+    pub fn accept(&mut self, ballot: i64, node: DNode, value: char) -> bool {
+        let st = &mut self.nodes[node];
+        if st.ballot > ballot {
+            return false;
+        }
+        st.ballot = ballot;
+        st.vote_ballot = ballot;
+        st.vote_value = Some(value);
+        true
+    }
+
+    /// A value is chosen once every node of a replication quorum accepted
+    /// it in the same ballot. The caller declares it after driving accepts.
+    pub fn declare_chosen(&mut self, ballot: i64, quorum: &BTreeSet<DNode>) -> Option<char> {
+        let mut val: Option<char> = None;
+        for &n in quorum {
+            let st = &self.nodes[n];
+            if st.vote_ballot != ballot {
+                return None;
+            }
+            match (val, st.vote_value) {
+                (None, v) => val = v,
+                (Some(a), Some(b)) if a == b => {}
+                _ => return None,
+            }
+        }
+        if let Some(v) = val {
+            self.chosen.insert(ballot, v);
+        }
+        val
+    }
+
+    /// DPaxos's (buggy) garbage collection: once *some* node is seen to
+    /// have accepted in `ballot`, all intents in ballots `< ballot` are
+    /// discarded everywhere.
+    pub fn garbage_collect(&mut self, ballot: i64) {
+        for st in &mut self.nodes {
+            st.intents.retain(|(b, _)| *b >= ballot);
+        }
+    }
+
+    /// True iff two distinct values appear in `chosen` — the safety
+    /// violation.
+    pub fn diverged(&self) -> bool {
+        let vals: BTreeSet<char> = self.chosen.values().copied().collect();
+        vals.len() > 1
+    }
+}
+
+/// Node name helper: 'A' → 0, ... 'I' → 8.
+pub fn n(c: char) -> DNode {
+    (c as u8 - b'A') as usize
+}
+
+fn set(names: &str) -> BTreeSet<DNode> {
+    names.chars().map(n).collect()
+}
+
+/// Replay the exact §7 counter-example. Returns the engine afterwards;
+/// `diverged()` is true — x is chosen in ballot 0 AND z in ballot 2.
+pub fn replay_bug() -> DPaxos {
+    let mut d = DPaxos::new();
+
+    // Proposer 1, ballot 0, value x: LE quorum {A,B,D,E}, intent {B,C}.
+    let (intents, best) = d.prepare(0, &set("ABDE"), &set("BC"));
+    assert!(intents.is_empty() && best.is_none());
+    // No prior value: proposes x to B and C; both accept; x chosen.
+    assert!(d.accept(0, n('B'), 'x'));
+    assert!(d.accept(0, n('C'), 'x'));
+    assert_eq!(d.declare_chosen(0, &set("BC")), Some('x'));
+
+    // Proposer 2, ballot 1, value y: LE quorum {E,F,H,I}, intent {G,H}.
+    let (intents, _) = d.prepare(1, &set("EFHI"), &set("GH"));
+    // E reports the intent {B,C} from ballot 0 → expand to C.
+    assert!(intents.iter().any(|(b, q)| *b == 0 && *q == set("BC")));
+    let (_, best) = d.prepare(1, &set("C"), &set("GH"));
+    // Learns x was accepted in ballot 0 → ditches y, proposes x.
+    assert_eq!(best, Some((0, 'x')));
+    assert!(d.accept(1, n('G'), 'x'));
+    // The propose message to H is dropped (we simply don't deliver it).
+
+    // Garbage collection: sees G accepted in ballot 1, discards all
+    // intents in ballots < 1 — THE BUG: x's intent {B,C} is forgotten
+    // even though x was only *partially* accepted in ballot 1.
+    d.garbage_collect(1);
+
+    // Proposer 3, ballot 2, value z: LE quorum {D,E,H,I}, intent {E,F}.
+    let (intents, best) = d.prepare(2, &set("DEHI"), &set("EF"));
+    // It sees intent {G,H} (ballot 1) but H is already in its LE quorum,
+    // so no expansion. The ballot-0 intent {B,C} is gone.
+    assert!(intents.iter().all(|(b, _)| *b >= 1));
+    // H never accepted, G is not contacted → no accepted value visible.
+    assert_eq!(best, None);
+    // Proposer 3 believes nothing was chosen and proposes z to E and F...
+    assert!(d.accept(2, n('E'), 'z'));
+    assert!(d.accept(2, n('F'), 'z'));
+    // ...and z is chosen. But x was already chosen in ballot 0!
+    assert_eq!(d.declare_chosen(2, &set("EF")), Some('z'));
+    d
+}
+
+/// The same schedule through Matchmaker Paxos roles: the matchmakers'
+/// refusal discipline + the §5 GC scenarios make the divergence
+/// impossible — proposer 3 *must* learn x. Returns every value chosen.
+pub fn replay_matchmaker() -> Vec<crate::msg::Value> {
+    use crate::config::Configuration;
+    use crate::msg::{Command, Msg, Value};
+    use crate::node::{Announce, Effects, Node};
+    use crate::roles::{Acceptor, Matchmaker, Proposer};
+    use crate::NodeId;
+    use std::collections::VecDeque;
+
+    // ids: matchmakers 1..3, acceptors 10..18 map to A..I.
+    let mms: Vec<NodeId> = vec![1, 2, 3];
+    let acc_id = |c: char| 10 + n(c) as NodeId;
+    let mut mm_nodes: Vec<Matchmaker> = mms.iter().map(|&i| Matchmaker::new(i)).collect();
+    let mut acc_nodes: BTreeMap<NodeId, Acceptor> =
+        "ABCDEFGHI".chars().map(|c| (acc_id(c), Acceptor::new(acc_id(c)))).collect();
+
+    let val = |tag: u8| Value::Cmd(Command { client: 100, seq: tag as u64, payload: vec![tag] });
+    let cfg = |id: u64, names: &str| {
+        Configuration::majority(id, names.chars().map(acc_id).collect())
+    };
+
+    let mut chosen: Vec<Value> = Vec::new();
+
+    // Synchronous pump with a drop-filter on (to, round-agnostic) pairs.
+    let run = |p: &mut Proposer, pid: NodeId, fx: Effects, drop_to: &[NodeId],
+                   mm_nodes: &mut Vec<Matchmaker>,
+                   acc_nodes: &mut BTreeMap<NodeId, Acceptor>,
+                   chosen: &mut Vec<Value>| {
+        let mut q: VecDeque<(NodeId, NodeId, Msg)> = VecDeque::new();
+        for (to, m) in fx.msgs {
+            q.push_back((pid, to, m));
+        }
+        while let Some((from, to, msg)) = q.pop_front() {
+            if drop_to.contains(&to) && matches!(msg, Msg::Phase2A { .. }) {
+                continue; // the dropped propose message
+            }
+            let mut fx = Effects::new();
+            if to == pid {
+                p.on_msg(0, from, msg, &mut fx);
+            } else if let Some(i) = mms.iter().position(|&m| m == to) {
+                mm_nodes[i].on_msg(0, from, msg, &mut fx);
+            } else if let Some(a) = acc_nodes.get_mut(&to) {
+                a.on_msg(0, from, msg, &mut fx);
+            }
+            for a in fx.announces {
+                if let Announce::Chosen { value, .. } = a {
+                    chosen.push(value);
+                }
+            }
+            for (dst, m) in fx.msgs {
+                q.push_back((to, dst, m));
+            }
+        }
+    };
+
+    // Proposer 1 (id 20): round (0,20,0), config {B,C}, value x.
+    let mut p1 = Proposer::new(20, 1, mms.clone(), cfg(0, "BC"));
+    let mut fx = Effects::new();
+    p1.propose(val(1), cfg(0, "BC"), 0, &mut fx);
+    run(&mut p1, 20, fx, &[], &mut mm_nodes, &mut acc_nodes, &mut chosen);
+    assert_eq!(p1.chosen, Some(val(1))); // x chosen
+
+    // Proposer 2 (id 21): higher round, config {G,H}; its Phase2A to H is
+    // dropped. It learns x via Phase 1 (through C0 = {B,C}) and proposes x
+    // — but x is NOT chosen in this round (G only).
+    // Crucially, Matchmaker Paxos gives proposer 2 no legal way to GC:
+    // Scenario 1 (chosen in its round) fails, Scenario 2 (k = -1) fails,
+    // Scenario 3 requires informing a P2 quorum of {G,H} — impossible with
+    // H unreachable. So no GarbageA is sent.
+    let mut p2 = Proposer::new(21, 1, mms.clone(), cfg(1, "GH"));
+    let mut fx = Effects::new();
+    p2.propose(val(2), cfg(1, "GH"), 0, &mut fx);
+    run(&mut p2, 21, fx, &[acc_id('H')], &mut mm_nodes, &mut acc_nodes, &mut chosen);
+    assert_eq!(p2.chosen, None); // stuck: H's vote never arrives
+
+    // Proposer 3 (id 22): round above p2's, config {E,F}, value z. The
+    // matchmakers return H = {C0, C1}; Phase 1 intersects {B,C} (and
+    // {G,H}) and discovers x. Proposer 3 proposes x, not z.
+    let mut p3 = Proposer::new(22, 1, mms.clone(), cfg(2, "EF"));
+    let mut fx = Effects::new();
+    p3.propose(val(3), cfg(2, "EF"), 0, &mut fx);
+    run(&mut p3, 22, fx, &[], &mut mm_nodes, &mut acc_nodes, &mut chosen);
+    assert_eq!(p3.chosen, Some(val(1))); // x again — no divergence
+
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dpaxos_bug_reproduces() {
+        let d = replay_bug();
+        assert!(d.diverged(), "the §7 schedule must choose two values");
+        assert_eq!(d.chosen[&0], 'x');
+        assert_eq!(d.chosen[&2], 'z');
+    }
+
+    #[test]
+    fn matchmaker_fixes_the_schedule() {
+        let chosen = replay_matchmaker();
+        assert!(!chosen.is_empty());
+        let first = &chosen[0];
+        assert!(
+            chosen.iter().all(|v| v == first),
+            "matchmaker run must never diverge: {chosen:?}"
+        );
+    }
+
+    #[test]
+    fn dpaxos_without_gc_is_safe_on_this_schedule() {
+        // Control: the same schedule *without* the GC step does not
+        // diverge — proposer 3 would see the {B,C} intent and expand.
+        let mut d = DPaxos::new();
+        d.prepare(0, &set("ABDE"), &set("BC"));
+        d.accept(0, n('B'), 'x');
+        d.accept(0, n('C'), 'x');
+        d.declare_chosen(0, &set("BC"));
+        let (intents, _) = d.prepare(1, &set("EFHI"), &set("GH"));
+        assert!(intents.iter().any(|(b, _)| *b == 0));
+        let (_, best) = d.prepare(1, &set("C"), &set("GH"));
+        assert_eq!(best, Some((0, 'x')));
+        d.accept(1, n('G'), 'x');
+        // NO garbage collection here.
+        let (intents, _) = d.prepare(2, &set("DEHI"), &set("EF"));
+        // The ballot-0 intent {B,C} is visible → proposer 3 expands to B/C
+        // and learns x.
+        assert!(intents.iter().any(|(b, q)| *b == 0 && *q == set("BC")));
+        let (_, best) = d.prepare(2, &set("BC"), &set("EF"));
+        assert_eq!(best.map(|(_, v)| v), Some('x'));
+    }
+}

@@ -1,0 +1,270 @@
+//! Experiment harness: builds simulated clusters shaped like the paper's
+//! deployments and runs the §8 experiment scripts.
+//!
+//! * [`Cluster`] — a full Matchmaker MultiPaxos deployment in the
+//!   simulator: `f+1` proposers (all running [`Leader`]), a pool of
+//!   `2·(2f+1)` acceptors, a pool of `2·(2f+1)` matchmakers (first `2f+1`
+//!   active), `2f+1` replicas, and N closed-loop clients.
+//! * [`HorizontalCluster`] — the baseline deployment (no matchmakers).
+//! * [`experiments`] — one driver per paper table/figure (see DESIGN.md's
+//!   per-experiment index).
+
+pub mod experiments;
+pub mod report;
+
+use crate::config::{ClusterLayout, Configuration, OptFlags};
+use crate::metrics::{merge_samples, Sample};
+use crate::node::Announce;
+use crate::roles::{Acceptor, Client, HorizontalLeader, Leader, Matchmaker, Replica};
+use crate::round::Round;
+use crate::sim::{NetworkModel, Sim};
+use crate::statemachine::Noop;
+use crate::util::Rng;
+use crate::{NodeId, Time, MS, SEC};
+
+/// A simulated Matchmaker MultiPaxos cluster.
+pub struct Cluster {
+    pub layout: ClusterLayout,
+    pub sim: Sim,
+    pub opts: OptFlags,
+    pub f: usize,
+    rng: Rng,
+}
+
+impl Cluster {
+    /// Build and start a cluster: the first proposer becomes leader, the
+    /// first `2f+1` acceptors form the initial configuration, clients start
+    /// issuing immediately.
+    pub fn new(f: usize, n_clients: usize, opts: OptFlags, seed: u64, net: NetworkModel) -> Cluster {
+        let layout = ClusterLayout::standard(f, 2, n_clients);
+        layout.validate().expect("valid layout");
+        let mut sim = Sim::new(seed, net);
+        let initial_cfg = layout.initial_config();
+        let active_mms = layout.initial_matchmakers();
+
+        // Acceptors: the whole pool is alive; only configured ones get
+        // traffic.
+        for &a in &layout.acceptor_pool {
+            sim.add_node(a, Box::new(Acceptor::new(a)));
+        }
+        // Matchmakers: first 2f+1 active, rest standby (§6 pool).
+        for (i, &m) in layout.matchmaker_pool.iter().enumerate() {
+            if i < active_mms.len() {
+                sim.add_node(m, Box::new(Matchmaker::new(m)));
+            } else {
+                sim.add_node(m, Box::new(Matchmaker::new_standby(m)));
+            }
+        }
+        // Replicas (paper §5.3 deploys 2f+1).
+        for &r in &layout.replicas {
+            sim.add_node(r, Box::new(Replica::new(r, Box::new(Noop))));
+        }
+        // Proposers: all run the Leader role; proposers[0] self-elects at
+        // start (see Leader::on_start).
+        for &p in &layout.proposers {
+            let leader = Leader::new(
+                p,
+                f,
+                initial_cfg.clone(),
+                active_mms.clone(),
+                layout.replicas.clone(),
+                layout.proposers.clone(),
+                opts,
+                seed,
+            );
+            sim.add_node(p, Box::new(leader));
+        }
+        // Clients.
+        for &c in &layout.clients {
+            sim.add_node(c, Box::new(Client::new(c, layout.proposers.clone())));
+        }
+        Cluster { layout, sim, opts, f, rng: Rng::new(seed ^ 0xc1a5) }
+    }
+
+    /// Convenience: default LAN network.
+    pub fn lan(f: usize, n_clients: usize, opts: OptFlags, seed: u64) -> Cluster {
+        Cluster::new(f, n_clients, opts, seed, NetworkModel::default())
+    }
+
+    pub fn initial_leader(&self) -> NodeId {
+        self.layout.proposers[0]
+    }
+
+    /// Draw a random configuration of `2f+1` acceptors from the pool
+    /// (the §8.1 reconfiguration workload), with a fresh config id.
+    pub fn random_config(&mut self, id: u64) -> Configuration {
+        let acceptors = self.rng.sample(&self.layout.acceptor_pool, 2 * self.f + 1);
+        Configuration::majority(id, acceptors)
+    }
+
+    /// Draw a random matchmaker set of `2f+1` from the pool (§8.4).
+    pub fn random_matchmakers(&mut self) -> Vec<NodeId> {
+        self.rng.sample(&self.layout.matchmaker_pool, 2 * self.f + 1)
+    }
+
+    /// Harvest all client samples, merged and sorted by completion time.
+    pub fn samples(&mut self) -> Vec<Sample> {
+        let clients = self.layout.clients.clone();
+        let mut per_client = Vec::with_capacity(clients.len());
+        for c in clients {
+            let samples = self
+                .sim
+                .node_mut::<Client>(c)
+                .map(|cl| std::mem::take(&mut cl.samples))
+                .unwrap_or_default();
+            per_client.push(samples);
+        }
+        merge_samples(per_client)
+    }
+
+    /// Reconfiguration → active latencies (MatchA issue → ConfigActive),
+    /// and → retired latencies (→ ConfigRetired), in ms, keyed by the
+    /// issue times passed in.
+    pub fn reconfig_latencies(&self, issue_times: &[(Time, Round)]) -> Vec<(f64, Option<f64>)> {
+        let mut out = Vec::new();
+        for &(t0, round) in issue_times {
+            let active = self.sim.announces.iter().find_map(|(t, _, a)| match a {
+                Announce::ConfigActive { round: r, .. } if *r == round => Some(*t),
+                _ => None,
+            });
+            let retired = self.sim.announces.iter().find_map(|(t, _, a)| match a {
+                Announce::ConfigRetired { round: r } if *r == round => Some(*t),
+                _ => None,
+            });
+            if let Some(ta) = active {
+                out.push((
+                    (ta.saturating_sub(t0)) as f64 / 1e6,
+                    retired.map(|tr| (tr.saturating_sub(t0)) as f64 / 1e6),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Assert the global safety invariant (used by tests after every
+    /// experiment): at most one value chosen per slot.
+    pub fn assert_safe(&self) {
+        self.sim.check_chosen_safety().expect("chosen-safety invariant");
+    }
+}
+
+/// A simulated Horizontal MultiPaxos cluster (baseline, §7.2).
+pub struct HorizontalCluster {
+    pub sim: Sim,
+    pub leader: NodeId,
+    pub acceptor_pool: Vec<NodeId>,
+    pub replicas: Vec<NodeId>,
+    pub clients: Vec<NodeId>,
+    pub f: usize,
+    rng: Rng,
+}
+
+impl HorizontalCluster {
+    pub fn new(f: usize, n_clients: usize, alpha: u64, seed: u64, net: NetworkModel) -> HorizontalCluster {
+        let mut sim = Sim::new(seed, net);
+        let leader: NodeId = 0;
+        let acceptor_pool: Vec<NodeId> =
+            (1..=(2 * (2 * f + 1)) as NodeId).collect();
+        let replicas: Vec<NodeId> = (acceptor_pool.last().unwrap() + 1
+            ..acceptor_pool.last().unwrap() + 1 + (2 * f + 1) as NodeId)
+            .collect();
+        let clients: Vec<NodeId> = (replicas.last().unwrap() + 1
+            ..replicas.last().unwrap() + 1 + n_clients as NodeId)
+            .collect();
+        for &a in &acceptor_pool {
+            sim.add_node(a, Box::new(Acceptor::new(a)));
+        }
+        for &r in &replicas {
+            sim.add_node(r, Box::new(Replica::new(r, Box::new(Noop))));
+        }
+        let initial = Configuration::majority(0, acceptor_pool[..2 * f + 1].to_vec());
+        sim.add_node(
+            leader,
+            Box::new(HorizontalLeader::new(leader, initial, replicas.clone(), alpha, seed)),
+        );
+        for &c in &clients {
+            sim.add_node(c, Box::new(Client::new(c, vec![leader])));
+        }
+        HorizontalCluster { sim, leader, acceptor_pool, replicas, clients, f, rng: Rng::new(seed ^ 0x70f) }
+    }
+
+    pub fn random_config(&mut self, id: u64) -> Configuration {
+        let acceptors = self.rng.sample(&self.acceptor_pool, 2 * self.f + 1);
+        Configuration::majority(id, acceptors)
+    }
+
+    pub fn samples(&mut self) -> Vec<Sample> {
+        let clients = self.clients.clone();
+        let mut per_client = Vec::with_capacity(clients.len());
+        for c in clients {
+            let samples = self
+                .sim
+                .node_mut::<Client>(c)
+                .map(|cl| std::mem::take(&mut cl.samples))
+                .unwrap_or_default();
+            per_client.push(samples);
+        }
+        merge_samples(per_client)
+    }
+}
+
+/// Seconds helper for experiment scripts.
+pub fn secs(x: u64) -> Time {
+    x * SEC
+}
+
+/// Milliseconds helper.
+pub fn msec(x: u64) -> Time {
+    x * MS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_serves_commands() {
+        let mut c = Cluster::lan(1, 4, OptFlags::default(), 42);
+        c.sim.run_until(secs(1));
+        let samples = c.samples();
+        assert!(samples.len() > 100, "got {} samples", samples.len());
+        c.assert_safe();
+    }
+
+    #[test]
+    fn cluster_reconfigures_without_loss() {
+        let mut c = Cluster::lan(1, 4, OptFlags::default(), 42);
+        let leader = c.initial_leader();
+        let cfg = c.random_config(1);
+        c.sim.schedule(msec(500), move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+        c.sim.run_until(secs(1));
+        let samples = c.samples();
+        assert!(samples.len() > 100);
+        c.assert_safe();
+        // Reconfiguration happened.
+        let leader_node = c.sim.node_mut::<Leader>(leader).unwrap();
+        assert!(leader_node.reconfigs_completed >= 2); // startup + ours
+        assert!(leader_node.gc_completed >= 1);
+    }
+
+    #[test]
+    fn horizontal_cluster_serves() {
+        let mut c = HorizontalCluster::new(1, 4, 8, 42, NetworkModel::default());
+        c.sim.run_until(secs(1));
+        let samples = c.samples();
+        assert!(samples.len() > 100);
+        c.sim.check_chosen_safety().unwrap();
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let run = |seed| {
+            let mut c = Cluster::lan(1, 2, OptFlags::default(), seed);
+            c.sim.run_until(msec(500));
+            c.samples().len()
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

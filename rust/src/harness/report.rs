@@ -1,0 +1,185 @@
+//! Report types: the harness's textual equivalents of the paper's tables
+//! and figures.
+
+use crate::metrics::{IntervalSummary, Timeline};
+use std::fmt::Write as _;
+
+/// A reproduced figure: one or more labeled timeline series.
+#[derive(Debug, Default)]
+pub struct FigureReport {
+    pub id: String,
+    pub title: String,
+    pub series: Vec<(String, Timeline)>,
+    pub notes: Vec<String>,
+}
+
+impl FigureReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        for (label, tl) in &self.series {
+            let _ = writeln!(out, "--- series: {label} ---");
+            out.push_str(&tl.to_table());
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
+/// A reproduced table (Table 1 / Table 2): per-client-count interval
+/// summaries for `[0,10) s` vs `[10,20) s`.
+#[derive(Debug, Default)]
+pub struct TableReport {
+    pub id: String,
+    pub title: String,
+    /// (clients, summary_0_10, summary_10_20)
+    pub rows: Vec<(usize, IntervalSummary, IntervalSummary)>,
+    pub notes: Vec<String>,
+}
+
+impl TableReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        let _ = writeln!(out, "Latency (ms)");
+        let _ = writeln!(out, "{:<10} {:>12} {:>12}", "", "0s-10s", "10s-20s");
+        for (clients, a, b) in &self.rows {
+            let _ = writeln!(out, "[{clients} client(s)]");
+            let _ = writeln!(out, "{:<10} {:>12.3} {:>12.3}", "median", a.latency.median, b.latency.median);
+            let _ = writeln!(out, "{:<10} {:>12.3} {:>12.3}", "IQR", a.latency.iqr, b.latency.iqr);
+            let _ = writeln!(out, "{:<10} {:>12.3} {:>12.3}", "stdev", a.latency.stdev, b.latency.stdev);
+        }
+        let _ = writeln!(out, "Throughput (commands/second)");
+        let _ = writeln!(out, "{:<10} {:>12} {:>12}", "", "0s-10s", "10s-20s");
+        for (clients, a, b) in &self.rows {
+            let _ = writeln!(out, "[{clients} client(s)]");
+            let _ = writeln!(out, "{:<10} {:>12.0} {:>12.0}", "median", a.throughput.median, b.throughput.median);
+            let _ = writeln!(out, "{:<10} {:>12.0} {:>12.0}", "IQR", a.throughput.iqr, b.throughput.iqr);
+            let _ = writeln!(out, "{:<10} {:>12.0} {:>12.0}", "stdev", a.throughput.stdev, b.throughput.stdev);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    /// The paper's headline claim: reconfiguration has "little to no impact
+    /// (roughly 2% changes)" on median latency. Returns the max relative
+    /// median-latency change across rows.
+    pub fn max_median_latency_change(&self) -> f64 {
+        self.rows
+            .iter()
+            .map(|(_, a, b)| ((b.latency.median - a.latency.median) / a.latency.median).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max relative median-throughput change across rows.
+    pub fn max_median_throughput_change(&self) -> f64 {
+        self.rows
+            .iter()
+            .map(|(_, a, b)| {
+                ((b.throughput.median - a.throughput.median) / a.throughput.median).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// A latency-throughput curve (Figure 14).
+#[derive(Debug, Default)]
+pub struct CurveReport {
+    pub id: String,
+    pub title: String,
+    /// (label, rows of (clients, throughput, median_latency_ms))
+    pub series: Vec<(String, Vec<(usize, f64, f64)>)>,
+    pub notes: Vec<String>,
+}
+
+impl CurveReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        for (label, rows) in &self.series {
+            let _ = writeln!(out, "--- series: {label} ---");
+            let _ = writeln!(out, "clients\tthroughput\tmedian_ms");
+            for (c, tp, lat) in rows {
+                let _ = writeln!(out, "{c}\t{tp:.0}\t{lat:.3}");
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
+/// Violin-plot data (Figures 12/13): distribution quartiles per window.
+#[derive(Debug, Default)]
+pub struct ViolinReport {
+    pub id: String,
+    pub title: String,
+    /// (label, p25, median, p75, p95) per group.
+    pub groups: Vec<(String, f64, f64, f64, f64)>,
+}
+
+impl ViolinReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        let _ = writeln!(out, "group\tp25\tmedian\tp75\tp95");
+        for (label, p25, med, p75, p95) in &self.groups {
+            let _ = writeln!(out, "{label}\t{p25:.3}\t{med:.3}\t{p75:.3}\t{p95:.3}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Stats;
+
+    fn dummy_summary(median: f64) -> IntervalSummary {
+        let s = Stats { median, ..Default::default() };
+        IntervalSummary { latency: s, throughput: s }
+    }
+
+    #[test]
+    fn table_report_renders_and_compares() {
+        let t = TableReport {
+            id: "T1".into(),
+            title: "test".into(),
+            rows: vec![(1, dummy_summary(1.0), dummy_summary(1.01))],
+            notes: vec![],
+        };
+        let r = t.render();
+        assert!(r.contains("Latency (ms)"));
+        assert!(r.contains("Throughput"));
+        assert!((t.max_median_latency_change() - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn figure_report_renders() {
+        let f = FigureReport {
+            id: "F9".into(),
+            title: "timeline".into(),
+            series: vec![("1 client".into(), Timeline::default())],
+            notes: vec!["x".into()],
+        };
+        let r = f.render();
+        assert!(r.contains("F9"));
+        assert!(r.contains("note: x"));
+    }
+
+    #[test]
+    fn curve_report_renders() {
+        let c = CurveReport {
+            id: "F14".into(),
+            title: "curves".into(),
+            series: vec![("thrifty".into(), vec![(8, 19000.0, 0.4)])],
+            notes: vec![],
+        };
+        assert!(c.render().contains("19000"));
+    }
+}

@@ -1,0 +1,70 @@
+//! # Matchmaker Paxos / Matchmaker MultiPaxos
+//!
+//! A production-quality reproduction of *"Matchmaker Paxos: A Reconfigurable
+//! Consensus Protocol"* (Whittaker et al., 2020): a reconfigurable consensus
+//! protocol (Matchmaker Paxos), a reconfigurable state machine replication
+//! protocol (Matchmaker MultiPaxos), the paper's optimizations, garbage
+//! collection of retired configurations, matchmaker reconfiguration, and the
+//! baselines the paper compares against (MultiPaxos with horizontal
+//! reconfiguration; stop-the-world reconfiguration via the ablation flags).
+//!
+//! ## Architecture
+//!
+//! Protocol logic is written *sans-io*: every role (acceptor, matchmaker,
+//! leader, replica, client, ...) is a pure state machine implementing
+//! [`node::Node`] — it consumes messages and timer expirations and emits
+//! [`node::Effects`] (outbound messages, timer requests, announcements).
+//! The same role code is driven by two harnesses:
+//!
+//! * [`sim`] — a deterministic discrete-event simulator with virtual time,
+//!   per-link delay models, message drops, partitions, and crash/restart
+//!   failure injection. All of the paper's evaluation (§8) is regenerated on
+//!   this substrate (see [`harness`]).
+//! * [`net`] — a TCP runtime (std::net + threads) for real multi-process deployments
+//!   (`repro run --role ...`).
+//!
+//! Replicas execute commands against a pluggable [`statemachine`]; the
+//! `TensorStateMachine` executes batched commands through an AOT-compiled
+//! JAX/Pallas computation loaded via PJRT ([`runtime`]), proving the
+//! three-layer Rust + JAX + Pallas stack composes with Python never on the
+//! request path.
+
+pub mod codec;
+pub mod config;
+pub mod discovery;
+pub mod dpaxos;
+pub mod harness;
+pub mod metrics;
+pub mod msg;
+pub mod net;
+pub mod node;
+pub mod quorum;
+pub mod roles;
+pub mod round;
+pub mod runtime;
+pub mod sim;
+pub mod statemachine;
+pub mod util;
+
+pub use config::{Configuration, DeploymentConfig};
+pub use msg::{Command, CommandId, Envelope, Msg, Value};
+pub use node::{Announce, Effects, Node, Timer};
+pub use quorum::QuorumSpec;
+pub use round::Round;
+
+/// A node identifier. Node ids are dense small integers assigned by the
+/// deployment config; the simulator indexes nodes by id.
+pub type NodeId = u32;
+
+/// A log slot (MultiPaxos instance index).
+pub type Slot = u64;
+
+/// Virtual or wall-clock time in nanoseconds since harness start.
+pub type Time = u64;
+
+/// Nanoseconds per millisecond, for readable experiment scripts.
+pub const MS: Time = 1_000_000;
+/// Nanoseconds per microsecond.
+pub const US: Time = 1_000;
+/// Nanoseconds per second.
+pub const SEC: Time = 1_000_000_000;

@@ -1,0 +1,211 @@
+//! `repro` — the Matchmaker Paxos launcher.
+//!
+//! Subcommands:
+//! * `repro exp <id> [--seed N]` — regenerate a paper table/figure on the
+//!   simulator (`f9`, `t1`, `f10`, `f11`, `f12`, `f14`, `f15`, `f16`,
+//!   `f17`, `f18`, `f19`, `f20`, `f21`, `t2`, `x2`, or `all`).
+//! * `repro run --role <role> --id <id> --config cluster.conf` — run one
+//!   node of a real TCP deployment.
+//! * `repro gen-config [--f N] [--clients N] [--base-port P]` — emit a
+//!   cluster config template.
+//! * `repro smoke` — runtime smoke test: load + execute the AOT artifacts.
+
+use anyhow::{Context, Result};
+use matchmaker::config::DeploymentConfig;
+use matchmaker::harness::experiments as exp;
+use matchmaker::roles::{Acceptor, Client, Leader, Matchmaker, Replica};
+use matchmaker::statemachine;
+use matchmaker::NodeId;
+
+/// Minimal flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), value.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    fn required(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+}
+
+const USAGE: &str = "usage:
+  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 all)
+  repro run --role R --id N --config FILE [--duration SECS]
+  repro gen-config [--f N] [--clients N] [--base-port P]
+  repro smoke                      load + execute the AOT artifacts
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "exp" => {
+            let id = args.positional.first().context("exp: missing experiment id")?;
+            let seed: u64 = args.flag("seed", 42)?;
+            run_experiment(id, seed)
+        }
+        "run" => {
+            let role = args.required("role")?.to_string();
+            let id: NodeId = args.required("id")?.parse()?;
+            let config = args.required("config")?.to_string();
+            let duration: u64 = args.flag("duration", 30)?;
+            run_node(&role, id, &config, duration)
+        }
+        "gen-config" => {
+            let f: usize = args.flag("f", 1)?;
+            let clients: usize = args.flag("clients", 4)?;
+            let base_port: u16 = args.flag("base-port", 7000)?;
+            let mut cfg = DeploymentConfig::standard(f, clients);
+            for i in 0..cfg.layout.total_nodes() as NodeId {
+                cfg.addrs.insert(i, format!("127.0.0.1:{}", base_port + i as u16));
+            }
+            println!("{}", cfg.to_text());
+            Ok(())
+        }
+        "smoke" => smoke(),
+        other => {
+            eprintln!("unknown command: {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_experiment(id: &str, seed: u64) -> Result<()> {
+    match id {
+        "f9" | "t1" => {
+            let (fig, tab) = exp::figure9(seed);
+            print!("{}{}", fig.render(), tab.render());
+        }
+        "f10" => {
+            let (fig, tab) = exp::figure10(seed);
+            print!("{}{}", fig.render(), tab.render());
+        }
+        "f11" => {
+            let (fig, tab) = exp::figure11(seed);
+            print!("{}{}", fig.render(), tab.render());
+        }
+        "f12" | "f13" => print!("{}", exp::figure12_13(seed).render()),
+        "f14" => print!("{}", exp::figure14(seed).render()),
+        "f15" => {
+            let (fig, _) = exp::figure15(seed);
+            print!("{}", fig.render());
+        }
+        "f16" => print!("{}", exp::figure16(seed).render()),
+        "f17" => print!("{}", exp::figure17(seed).render()),
+        "f18" => print!("{}", exp::figure18(seed).render()),
+        "f19" => print!("{}", exp::figure19(seed).render()),
+        "f20" => print!("{}", exp::figure20(seed).render()),
+        "f21" | "t2" => {
+            let (fig, tab) = exp::figure21(seed);
+            print!("{}{}", fig.render(), tab.render());
+        }
+        "x2" => print!("{}", exp::fast_paxos_experiment(seed).render()),
+        "all" => {
+            for (name, text) in exp::run_all(seed) {
+                println!("########## {name} ##########");
+                print!("{text}");
+            }
+        }
+        other => anyhow::bail!("unknown experiment id: {other} (try `repro exp all`)"),
+    }
+    Ok(())
+}
+
+fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64) -> Result<()> {
+    let text = std::fs::read_to_string(config_path)
+        .with_context(|| format!("read {config_path}"))?;
+    let cfg = DeploymentConfig::from_text(&text).map_err(|e| anyhow::anyhow!(e))?;
+    let layout = cfg.layout.clone();
+    let node: Box<dyn matchmaker::Node> = match role {
+        "acceptor" => Box::new(Acceptor::new(id)),
+        "matchmaker" => {
+            let active = layout.initial_matchmakers().contains(&id);
+            Box::new(if active { Matchmaker::new(id) } else { Matchmaker::new_standby(id) })
+        }
+        "replica" => {
+            let sm: Box<dyn statemachine::StateMachine> = if cfg.state_machine == "tensor" {
+                Box::new(statemachine::TensorStateMachine::load()?)
+            } else {
+                statemachine::by_name(&cfg.state_machine)
+                    .context("unknown state machine (noop|kv|register|counter|tensor)")?
+            };
+            Box::new(Replica::new(id, sm))
+        }
+        "proposer" => Box::new(Leader::new(
+            id,
+            layout.f,
+            layout.initial_config(),
+            layout.initial_matchmakers(),
+            layout.replicas.clone(),
+            layout.proposers.clone(),
+            cfg.opts,
+            id as u64,
+        )),
+        "client" => Box::new(Client::new(id, layout.proposers.clone())),
+        other => anyhow::bail!("unknown role: {other}"),
+    };
+
+    let handle = matchmaker::net::spawn_node(id, node, cfg.addrs.clone())?;
+    eprintln!("node {id} ({role}) running");
+    if role == "client" {
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+        handle.shutdown();
+    }
+    handle.join.join().ok();
+    Ok(())
+}
+
+fn smoke() -> Result<()> {
+    use matchmaker::statemachine::tensor::{reference_step, D};
+    use matchmaker::statemachine::{StateMachine, TensorStateMachine};
+    let mut sm = TensorStateMachine::load()
+        .context("artifacts missing — run `make artifacts` first")?;
+    let cmd: Vec<f32> = (0..D).map(|i| (i as f32) / 8.0).collect();
+    let reply = sm.apply(&TensorStateMachine::encode(&cmd));
+    let digest = f32::from_le_bytes(reply[..4].try_into().unwrap());
+    let (_, ref_digest) = reference_step(&vec![0.0; D * D], &[cmd]);
+    println!("tensor SM digest = {digest} (reference {})", ref_digest[0]);
+    anyhow::ensure!((digest - ref_digest[0]).abs() < 1e-3, "digest mismatch");
+    println!("runtime smoke OK — three layers compose");
+    Ok(())
+}

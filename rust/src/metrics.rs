@@ -1,0 +1,176 @@
+//! Latency/throughput series, computed the way the paper reports them.
+//!
+//! §8.1: "Throughput and latency are both computed using sliding one second
+//! windows. Median latency is shown using solid lines, while the 95%
+//! latency is shown as a shaded region." Tables 1 and 2 report the median,
+//! interquartile range, and standard deviation of latency and throughput
+//! over `[0,10) s` and `[10,20) s`. The §8.2 ablation (Figure 17) uses max
+//! latency over 500 ms windows and throughput over 250 ms windows.
+
+use crate::util::{stats, Stats};
+use crate::{Time, SEC};
+
+/// A client-side sample: `(completion_time, latency)` in ns.
+pub type Sample = (Time, Time);
+
+/// A timeline of windowed metrics (one row per stride step).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    /// Window end, seconds.
+    pub t: Vec<f64>,
+    /// Median latency in the window, ms (NaN if empty).
+    pub median_ms: Vec<f64>,
+    /// 95th-percentile latency, ms.
+    pub p95_ms: Vec<f64>,
+    /// Max latency, ms.
+    pub max_ms: Vec<f64>,
+    /// Commands per second in the window.
+    pub throughput: Vec<f64>,
+}
+
+impl Timeline {
+    /// Render as aligned text columns (the harness's figure output).
+    pub fn to_table(&self) -> String {
+        let mut out = String::from("t_sec\tmedian_ms\tp95_ms\tmax_ms\tthroughput\n");
+        for i in 0..self.t.len() {
+            out.push_str(&format!(
+                "{:.2}\t{:.3}\t{:.3}\t{:.3}\t{:.0}\n",
+                self.t[i], self.median_ms[i], self.p95_ms[i], self.max_ms[i], self.throughput[i]
+            ));
+        }
+        out
+    }
+}
+
+/// Compute a sliding-window timeline over `samples` (must be sorted by
+/// completion time; the harness sorts after merging clients).
+pub fn timeline(samples: &[Sample], duration: Time, window: Time, stride: Time) -> Timeline {
+    let mut tl = Timeline::default();
+    if stride == 0 || window == 0 {
+        return tl;
+    }
+    let mut t_end = window;
+    while t_end <= duration {
+        let t_start = t_end - window;
+        // Binary search the sorted sample range.
+        let lo = samples.partition_point(|(t, _)| *t < t_start);
+        let hi = samples.partition_point(|(t, _)| *t < t_end);
+        let lat_ms: Vec<f64> = samples[lo..hi]
+            .iter()
+            .map(|(_, l)| *l as f64 / 1e6)
+            .collect();
+        let s = stats(&lat_ms);
+        tl.t.push(t_end as f64 / 1e9);
+        tl.median_ms.push(s.map_or(f64::NAN, |s| s.median));
+        tl.p95_ms.push(s.map_or(f64::NAN, |s| s.p95));
+        tl.max_ms.push(s.map_or(f64::NAN, |s| s.max));
+        tl.throughput
+            .push((hi - lo) as f64 / (window as f64 / 1e9));
+        t_end += stride;
+    }
+    tl
+}
+
+/// Summary for one table cell pair: latency stats (ms, per-request) and
+/// throughput stats (cmds/s, over sliding 1-second windows at a 100 ms
+/// stride) within `[from, to)` — the Table 1/2 methodology.
+#[derive(Clone, Copy, Debug)]
+pub struct IntervalSummary {
+    pub latency: Stats,
+    pub throughput: Stats,
+}
+
+/// Compute the Table-1-style summary of `samples` within `[from, to)`.
+pub fn interval_summary(samples: &[Sample], from: Time, to: Time) -> Option<IntervalSummary> {
+    let lo = samples.partition_point(|(t, _)| *t < from);
+    let hi = samples.partition_point(|(t, _)| *t < to);
+    let lat_ms: Vec<f64> = samples[lo..hi]
+        .iter()
+        .map(|(_, l)| *l as f64 / 1e6)
+        .collect();
+    let latency = stats(&lat_ms)?;
+
+    // Throughput distribution over sliding windows inside the interval.
+    let window = SEC;
+    let stride = SEC / 10;
+    let mut tputs: Vec<f64> = Vec::new();
+    let mut t_end = from + window;
+    while t_end <= to {
+        let wlo = samples.partition_point(|(t, _)| *t < t_end - window);
+        let whi = samples.partition_point(|(t, _)| *t < t_end);
+        tputs.push((whi - wlo) as f64);
+        t_end += stride;
+    }
+    let throughput = stats(&tputs)?;
+    Some(IntervalSummary { latency, throughput })
+}
+
+/// Merge per-client sample vectors and sort by completion time.
+pub fn merge_samples(per_client: Vec<Vec<Sample>>) -> Vec<Sample> {
+    let mut all: Vec<Sample> = per_client.into_iter().flatten().collect();
+    all.sort_unstable();
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::MS;
+
+    fn mk_samples(n: u64, period: Time, latency: Time) -> Vec<Sample> {
+        (1..=n).map(|i| (i * period, latency)).collect()
+    }
+
+    #[test]
+    fn steady_stream_throughput() {
+        // 1 command per ms for 5 s → 1000/s in every full window.
+        let samples = mk_samples(5000, MS, 300_000);
+        let tl = timeline(&samples, 5 * SEC, SEC, SEC);
+        assert_eq!(tl.t.len(), 5);
+        for tp in &tl.throughput {
+            assert!((tp - 1000.0).abs() < 2.0, "tp={tp}");
+        }
+        for m in &tl.median_ms {
+            assert!((m - 0.3).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_window_is_nan_zero() {
+        let samples = vec![(3 * SEC + MS, MS)];
+        let tl = timeline(&samples, 4 * SEC, SEC, SEC);
+        assert!(tl.median_ms[0].is_nan());
+        assert_eq!(tl.throughput[0], 0.0);
+        assert_eq!(tl.throughput[3], 1.0);
+    }
+
+    #[test]
+    fn interval_summary_basic() {
+        let samples = mk_samples(20_000, MS / 2, 500_000); // 2000/s, 0.5ms
+        let s = interval_summary(&samples, 0, 10 * SEC).unwrap();
+        assert!((s.latency.median - 0.5).abs() < 1e-9);
+        assert!((s.throughput.median - 2000.0).abs() < 5.0);
+        assert!(s.throughput.stdev < 10.0);
+    }
+
+    #[test]
+    fn interval_summary_empty() {
+        assert!(interval_summary(&[], 0, SEC).is_none());
+    }
+
+    #[test]
+    fn merge_sorts() {
+        let merged = merge_samples(vec![vec![(5, 1), (10, 1)], vec![(3, 2), (7, 2)]]);
+        let times: Vec<Time> = merged.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![3, 5, 7, 10]);
+    }
+
+    #[test]
+    fn timeline_table_render() {
+        let samples = mk_samples(10, MS, MS);
+        let tl = timeline(&samples, SEC, SEC, SEC);
+        let table = tl.to_table();
+        assert!(table.starts_with("t_sec"));
+        assert_eq!(table.lines().count(), 2);
+    }
+}

@@ -1,0 +1,292 @@
+//! Wire messages for the whole protocol family.
+//!
+//! One enum carries every message: Matchmaker Paxos / MultiPaxos
+//! (MatchA/B, Phase1A/B, Phase2A/B), garbage collection (GarbageA/B, §5),
+//! matchmaker reconfiguration (StopA/B, Bootstrap, and the meta-Paxos that
+//! chooses the new matchmaker set, §6), the client path, replica
+//! acknowledgements (GC Scenario 3), heartbeats for leader election, and
+//! nacks. The TCP transport frames [`Envelope`]s with the in-tree binary
+//! codec ([`crate::codec`]); the simulator passes them by value.
+
+use crate::config::Configuration;
+use crate::round::Round;
+use crate::{NodeId, Slot};
+use std::collections::BTreeMap;
+
+/// A client command: identified by `(client, seq)` so replicas can
+/// deduplicate retries, carrying an opaque payload interpreted by the
+/// replicas' state machine.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Command {
+    pub client: NodeId,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Identifies a command for deduplication: `(client, seq)`.
+pub type CommandId = (NodeId, u64);
+
+impl Command {
+    pub fn id(&self) -> CommandId {
+        (self.client, self.seq)
+    }
+}
+
+/// A value voted on in a log slot: a client command, or a no-op used to
+/// fill holes during leader recovery (§4.1), or a reconfiguration marker
+/// (used by the Horizontal MultiPaxos baseline, §7.2).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Value {
+    Cmd(Command),
+    Noop,
+    /// Horizontal MultiPaxos only: "configuration `config` takes effect at
+    /// slot `chosen_slot + α`".
+    Reconfig(Configuration),
+}
+
+/// One acceptor's vote state for a slot, reported in Phase1B.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct SlotVote {
+    pub slot: Slot,
+    /// Round of the vote (`vr`).
+    pub vr: Round,
+    /// Voted value (`vv`).
+    pub vv: Value,
+}
+
+/// All protocol messages.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Msg {
+    // ---- Matchmaking phase (§3.2, Algorithm 1; §5, Algorithm 4) ----
+    /// Proposer → matchmaker: "I am starting round `round` with
+    /// configuration `config`".
+    MatchA { round: Round, config: Configuration },
+    /// Matchmaker → proposer: prior configurations (`H_i`) plus the
+    /// matchmaker's GC watermark (§5: rounds `< gc_watermark` are retired).
+    MatchB {
+        round: Round,
+        gc_watermark: Option<Round>,
+        prior: BTreeMap<Round, Configuration>,
+    },
+    /// Matchmaker → proposer: the MatchA was refused (a configuration
+    /// exists for a round ≥ `round`, or `round` is below the GC watermark).
+    /// Carries the blocking round so the proposer can jump past it.
+    MatchNack { round: Round, blocking: Round },
+
+    // ---- Phase 1 (classic Paxos over possibly-many configurations) ----
+    /// One Phase1A covers every slot ≥ `from_slot` (MultiPaxos bulk
+    /// Phase 1, §4.1).
+    Phase1A { round: Round, from_slot: Slot },
+    /// Acceptor → proposer: per-slot votes for slots ≥ the request's
+    /// `from_slot`, plus the acceptor's chosen-prefix watermark (GC
+    /// Scenario 3: slots < `chosen_watermark` are known chosen and stored
+    /// on f+1 replicas — the recovering proposer fetches them from
+    /// replicas instead of re-running Paxos).
+    Phase1B {
+        round: Round,
+        votes: Vec<SlotVote>,
+        chosen_watermark: Slot,
+    },
+
+    // ---- Phase 2 ----
+    Phase2A { round: Round, slot: Slot, value: Value },
+    Phase2B { round: Round, slot: Slot },
+    /// Acceptor → proposer: message ignored because the acceptor has seen
+    /// `higher`. Prompts the proposer to abandon the round / re-elect.
+    Nack { round: Round, higher: Round },
+
+    // ---- Chosen-value dissemination ----
+    /// Leader → replicas: `value` is chosen in `slot`.
+    Chosen { slot: Slot, value: Value },
+    /// Replica → leader: "my contiguous executed/stored prefix reaches
+    /// `upto` (exclusive)". Drives GC Scenario 3 (§5.3).
+    ReplicaAck { upto: Slot },
+    /// Leader → acceptors (a P2 quorum of the active config): the prefix
+    /// `< upto` is stored on f+1 replicas (Scenario 3 precondition).
+    PrefixPersisted { round: Round, upto: Slot },
+    /// Acceptor → leader: acknowledges recording the persisted prefix.
+    PrefixAck { round: Round, upto: Slot },
+    /// New leader → replica: request the chosen prefix starting at `from`.
+    ReadPrefix { from: Slot },
+    /// Replica → new leader: chosen prefix entries.
+    PrefixResp { entries: Vec<(Slot, Value)>, upto: Slot },
+
+    // ---- Garbage collection (§5, Algorithm 4) ----
+    GarbageA { round: Round },
+    GarbageB { round: Round },
+
+    // ---- Client path ----
+    ClientRequest { cmd: Command },
+    /// Replica → client: result of executing the command.
+    ClientReply { seq: u64, result: Vec<u8> },
+    /// Any node → client/other: "I am not the leader; try `hint`".
+    NotLeader { hint: Option<NodeId> },
+
+    // ---- Matchmaker reconfiguration (§6) ----
+    /// Reconfigurer → old matchmakers: stop processing and dump state.
+    StopA,
+    /// Old matchmaker → reconfigurer: final log + GC watermark.
+    StopB {
+        log: BTreeMap<Round, Configuration>,
+        gc_watermark: Option<Round>,
+    },
+    /// Reconfigurer → new matchmakers: initial state (merged logs) plus
+    /// the new set's generation number (see the meta-Paxos note below).
+    Bootstrap {
+        log: BTreeMap<Round, Configuration>,
+        gc_watermark: Option<Round>,
+        generation: u64,
+    },
+    BootstrapAck,
+    /// Reconfigurer → new matchmakers: the meta-Paxos below chose this set;
+    /// start serving.
+    MatchmakersActivated { matchmakers: Vec<NodeId> },
+
+    // ---- Meta-Paxos choosing the new matchmaker set (§6): the old
+    // matchmakers double as Paxos acceptors for the single value M_new.
+    // Each matchmaker *generation* g runs its own single-decree instance
+    // choosing generation g+1; `generation` tags the instance so votes
+    // from earlier generations can never leak into later ones. ----
+    MetaPhase1A { round: Round, generation: u64 },
+    MetaPhase1B {
+        round: Round,
+        vr: Option<Round>,
+        vv: Option<Vec<NodeId>>,
+    },
+    MetaPhase2A { round: Round, generation: u64, matchmakers: Vec<NodeId> },
+    MetaPhase2B { round: Round },
+
+    // ---- Failure detection / leader election ----
+    Heartbeat { epoch: u64 },
+    HeartbeatReply { epoch: u64 },
+
+    // ---- Fast Paxos (§7): clients send directly to acceptors ----
+    /// Client/proposer → acceptor: fast-round proposal (counts as a
+    /// Phase2A in the fast round with value chosen by the sender).
+    FastPropose { round: Round, value: Value },
+    /// Acceptor → coordinator: fast-round vote, reporting what it voted.
+    FastPhase2B { round: Round, value: Value },
+}
+
+/// A routed message: `from → to`.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Envelope {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub msg: Msg,
+}
+
+impl Msg {
+    /// Coarse message-kind label, used by the simulator's per-kind delay
+    /// injection (the §8.2 ablation delays Phase1B and MatchB by 250 ms)
+    /// and by metrics.
+    pub fn kind(&self) -> MsgKind {
+        match self {
+            Msg::MatchA { .. } => MsgKind::MatchA,
+            Msg::MatchB { .. } | Msg::MatchNack { .. } => MsgKind::MatchB,
+            Msg::Phase1A { .. } => MsgKind::Phase1A,
+            Msg::Phase1B { .. } => MsgKind::Phase1B,
+            Msg::Phase2A { .. } | Msg::FastPropose { .. } => MsgKind::Phase2A,
+            Msg::Phase2B { .. } | Msg::FastPhase2B { .. } => MsgKind::Phase2B,
+            Msg::Nack { .. } => MsgKind::Other,
+            Msg::Chosen { .. } => MsgKind::Chosen,
+            Msg::ClientRequest { .. } => MsgKind::Client,
+            Msg::ClientReply { .. } | Msg::NotLeader { .. } => MsgKind::Client,
+            Msg::GarbageA { .. } | Msg::GarbageB { .. } => MsgKind::Gc,
+            Msg::StopA
+            | Msg::StopB { .. }
+            | Msg::Bootstrap { .. }
+            | Msg::BootstrapAck
+            | Msg::MatchmakersActivated { .. }
+            | Msg::MetaPhase1A { .. }
+            | Msg::MetaPhase1B { .. }
+            | Msg::MetaPhase2A { .. }
+            | Msg::MetaPhase2B { .. } => MsgKind::MmReconfig,
+            Msg::Heartbeat { .. } | Msg::HeartbeatReply { .. } => MsgKind::Heartbeat,
+            Msg::ReplicaAck { .. }
+            | Msg::PrefixPersisted { .. }
+            | Msg::PrefixAck { .. }
+            | Msg::ReadPrefix { .. }
+            | Msg::PrefixResp { .. } => MsgKind::Other,
+        }
+    }
+}
+
+/// Coarse message classification (see [`Msg::kind`]).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum MsgKind {
+    MatchA,
+    MatchB,
+    Phase1A,
+    Phase1B,
+    Phase2A,
+    Phase2B,
+    Chosen,
+    Client,
+    Gc,
+    MmReconfig,
+    Heartbeat,
+    Other,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Configuration;
+
+    #[test]
+    fn command_id() {
+        let c = Command { client: 3, seq: 9, payload: vec![1] };
+        assert_eq!(c.id(), (3, 9));
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        use crate::codec::Wire;
+        let msgs = vec![
+            Msg::MatchA {
+                round: Round::first(0, 1),
+                config: Configuration::majority(0, vec![2, 3, 4]),
+            },
+            Msg::Phase1B {
+                round: Round::first(1, 0),
+                votes: vec![SlotVote {
+                    slot: 7,
+                    vr: Round::first(0, 1),
+                    vv: Value::Noop,
+                }],
+                chosen_watermark: 3,
+            },
+            Msg::ClientRequest {
+                cmd: Command { client: 9, seq: 1, payload: vec![0xab] },
+            },
+            Msg::StopB { log: BTreeMap::new(), gc_watermark: None },
+        ];
+        for m in msgs {
+            let back = Msg::decode(&m.encode()).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn kind_classification() {
+        assert_eq!(
+            Msg::MatchNack { round: Round::first(0, 0), blocking: Round::first(1, 0) }.kind(),
+            MsgKind::MatchB
+        );
+        assert_eq!(
+            Msg::Phase1B { round: Round::first(0, 0), votes: vec![], chosen_watermark: 0 }.kind(),
+            MsgKind::Phase1B
+        );
+        assert_eq!(Msg::StopA.kind(), MsgKind::MmReconfig);
+        assert_eq!(Msg::Heartbeat { epoch: 0 }.kind(), MsgKind::Heartbeat);
+    }
+
+    #[test]
+    fn envelope_wire() {
+        use crate::codec::Wire;
+        let e = Envelope { from: 1, to: 2, msg: Msg::BootstrapAck };
+        let back = Envelope::decode(&e.encode()).unwrap();
+        assert_eq!(back, e);
+    }
+}

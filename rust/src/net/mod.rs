@@ -1,0 +1,259 @@
+//! TCP runtime: run any [`Node`] as a real networked process.
+//!
+//! Dependency-free (std::net + threads): frames are length-prefixed binary
+//! [`Envelope`]s (see [`crate::codec`]). Each node binds its own address
+//! and lazily dials peers, reconnecting on failure — the protocol layer
+//! already tolerates dropped messages (resend timers), so the transport
+//! stays simple. Timers are served by a dedicated timer thread with a
+//! monotonic heap. One thread owns the node; messages and timer
+//! expirations are serialized through a channel, preserving the sans-io
+//! determinism contract per node.
+//!
+//! `repro run --role ... --config cluster.conf` (see `main.rs`) uses this
+//! to launch a real multi-process deployment.
+
+use crate::codec::Wire;
+use crate::msg::Envelope;
+use crate::node::{Announce, Effects, Node, Timer};
+use crate::{NodeId, Time};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Events multiplexed into the node thread.
+enum Event {
+    Msg(Envelope),
+    Timer(Timer),
+    Shutdown,
+}
+
+/// Encode one frame: u32 BE length + codec bytes.
+pub fn encode_frame(env: &Envelope) -> Vec<u8> {
+    let body = env.encode();
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    frame.extend_from_slice(&body);
+    frame
+}
+
+/// Read one frame from a stream (blocking).
+pub fn read_frame(stream: &mut TcpStream) -> Result<Envelope> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= 64 << 20, "frame too large: {len}");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Envelope::decode(&body).map_err(|e| anyhow::anyhow!("decode: {e}"))
+}
+
+/// Per-peer outbound writer with lazy connect + reconnect, running on its
+/// own thread. Messages are dropped when the peer is unreachable.
+fn spawn_peer_writer(addr: String) -> Sender<Envelope> {
+    let (tx, rx): (Sender<Envelope>, Receiver<Envelope>) = channel();
+    std::thread::spawn(move || {
+        let mut stream: Option<TcpStream> = None;
+        while let Ok(env) = rx.recv() {
+            if stream.is_none() {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => {
+                        let _ = s.set_nodelay(true);
+                        stream = Some(s);
+                    }
+                    Err(_) => continue, // drop; resend timers recover
+                }
+            }
+            if let Some(s) = stream.as_mut() {
+                if s.write_all(&encode_frame(&env)).is_err() {
+                    stream = None;
+                }
+            }
+        }
+    });
+    tx
+}
+
+/// Timer service: a thread sleeping until the next deadline.
+struct TimerService {
+    queue: Arc<Mutex<Vec<(Instant, Timer)>>>,
+    tx: Sender<Event>,
+}
+
+impl TimerService {
+    fn new(tx: Sender<Event>) -> TimerService {
+        let queue: Arc<Mutex<Vec<(Instant, Timer)>>> = Arc::new(Mutex::new(Vec::new()));
+        let q = queue.clone();
+        let out = tx.clone();
+        std::thread::spawn(move || loop {
+            let next = {
+                let mut q = q.lock().unwrap();
+                let now = Instant::now();
+                // Fire everything due; find the next deadline.
+                let mut i = 0;
+                while i < q.len() {
+                    if q[i].0 <= now {
+                        let (_, t) = q.swap_remove(i);
+                        if out.send(Event::Timer(t)).is_err() {
+                            return;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                q.iter().map(|(at, _)| *at).min()
+            };
+            match next {
+                Some(at) => {
+                    let now = Instant::now();
+                    if at > now {
+                        std::thread::sleep((at - now).min(std::time::Duration::from_millis(20)));
+                    }
+                }
+                None => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+        });
+        TimerService { queue, tx }
+    }
+
+    fn arm(&self, delay: Time, t: Timer) {
+        self.queue
+            .lock()
+            .unwrap()
+            .push((Instant::now() + std::time::Duration::from_nanos(delay), t));
+        let _ = &self.tx; // keep the channel alive via the struct
+    }
+}
+
+/// Handle for a running node.
+pub struct NodeHandle {
+    shutdown: Sender<Event>,
+    /// Join handle for the node thread.
+    pub join: std::thread::JoinHandle<()>,
+    /// Announcements observed (metrics / tests).
+    pub announces: Receiver<(Time, Announce)>,
+}
+
+impl NodeHandle {
+    pub fn shutdown(&self) {
+        let _ = self.shutdown.send(Event::Shutdown);
+    }
+}
+
+/// Start a node: bind `addrs[&id]`, dial peers lazily, run the event loop
+/// on a dedicated thread.
+pub fn spawn_node(
+    id: NodeId,
+    mut node: Box<dyn Node>,
+    addrs: BTreeMap<NodeId, String>,
+) -> Result<NodeHandle> {
+    let my_addr = addrs.get(&id).context("own address missing")?.clone();
+    let listener = TcpListener::bind(&my_addr).with_context(|| format!("bind {my_addr}"))?;
+
+    let (ev_tx, ev_rx) = channel::<Event>();
+    let (ann_tx, ann_rx) = channel::<(Time, Announce)>();
+
+    // Accept loop.
+    let accept_tx = ev_tx.clone();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { break };
+            let tx = accept_tx.clone();
+            std::thread::spawn(move || {
+                let _ = stream.set_nodelay(true);
+                while let Ok(env) = read_frame(&mut stream) {
+                    if tx.send(Event::Msg(env)).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+    });
+
+    let timers = TimerService::new(ev_tx.clone());
+
+    let shutdown_tx = ev_tx.clone();
+    let join = std::thread::spawn(move || {
+        let start = Instant::now();
+        let now = move || start.elapsed().as_nanos() as Time;
+        let mut peers: BTreeMap<NodeId, Sender<Envelope>> = BTreeMap::new();
+
+        let apply = |fx: Effects, peers: &mut BTreeMap<NodeId, Sender<Envelope>>| {
+            for a in fx.announces {
+                let _ = ann_tx.send((now(), a));
+            }
+            for (delay, timer) in fx.timers {
+                timers.arm(delay, timer);
+            }
+            for (to, msg) in fx.msgs {
+                let env = Envelope { from: id, to, msg };
+                if to == id {
+                    let _ = ev_tx.send(Event::Msg(env));
+                    continue;
+                }
+                let peer = peers.entry(to).or_insert_with(|| {
+                    spawn_peer_writer(addrs.get(&to).cloned().unwrap_or_default())
+                });
+                let _ = peer.send(env);
+            }
+        };
+
+        let mut fx = Effects::new();
+        node.on_start(now(), &mut fx);
+        apply(fx, &mut peers);
+
+        while let Ok(ev) = ev_rx.recv() {
+            let mut fx = Effects::new();
+            match ev {
+                Event::Msg(env) => {
+                    if env.to != id {
+                        continue;
+                    }
+                    node.on_msg(now(), env.from, env.msg, &mut fx);
+                }
+                Event::Timer(t) => node.on_timer(now(), t, &mut fx),
+                Event::Shutdown => break,
+            }
+            apply(fx, &mut peers);
+        }
+    });
+
+    Ok(NodeHandle { shutdown: shutdown_tx, join, announces: ann_rx })
+}
+
+/// Allocate `n` consecutive loopback addresses starting at `base_port`.
+pub fn local_addrs(n: usize, base_port: u16) -> BTreeMap<NodeId, String> {
+    (0..n as NodeId)
+        .map(|i| (i, format!("127.0.0.1:{}", base_port + i as u16)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Msg;
+
+    #[test]
+    fn frame_roundtrip() {
+        let env = Envelope { from: 1, to: 2, msg: Msg::StopA };
+        let frame = encode_frame(&env);
+        assert_eq!(
+            u32::from_be_bytes(frame[..4].try_into().unwrap()) as usize,
+            frame.len() - 4
+        );
+        let back = Envelope::decode(&frame[4..]).unwrap();
+        assert_eq!(back, env);
+    }
+
+    #[test]
+    fn local_addrs_dense() {
+        let a = local_addrs(3, 9000);
+        assert_eq!(a[&0], "127.0.0.1:9000");
+        assert_eq!(a[&2], "127.0.0.1:9002");
+    }
+
+    // Full TCP cluster round-trips are exercised in tests/net_cluster.rs.
+}

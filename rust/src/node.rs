@@ -1,0 +1,158 @@
+//! The sans-io node abstraction.
+//!
+//! Every protocol role is a deterministic state machine implementing
+//! [`Node`]: it reacts to delivered messages and expired timers by mutating
+//! local state and pushing [`Effects`] — outbound messages, new timers, and
+//! *announcements* (externally observable facts used by the harness for
+//! metrics and by the test suite for invariant checking; they are **not**
+//! part of the protocol).
+//!
+//! The same role implementations run under the deterministic simulator
+//! ([`crate::sim`]) and the TCP runtime ([`crate::net`]).
+
+use crate::msg::{Msg, Value};
+use crate::round::Round;
+use crate::{NodeId, Slot, Time};
+
+/// Timers a node can request. The driver calls [`Node::on_timer`] when one
+/// expires; a node distinguishes stale timers itself (via generation
+/// counters carried in the variant).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Timer {
+    /// Client: resend the outstanding request if no reply arrived. `gen`
+    /// guards against stale timers (only the most recently armed timer for
+    /// a request is live — re-sends would otherwise multiply timers).
+    ClientResend { seq: u64, generation: u64 },
+    /// Leader: re-send Phase2A to all acceptors for a slot whose thrifty
+    /// quorum did not respond (§8.1 thriftiness failure path).
+    Phase2Retry { slot: Slot, generation: u64 },
+    /// Leader/proposer: resend matchmaking / phase1 messages.
+    PhaseResend { generation: u64 },
+    /// Leader: periodic scan of in-flight slots (thrifty fallback +
+    /// reconfiguration-stall rescue) — one timer for the whole window
+    /// instead of one per slot.
+    Phase2Watchdog,
+    /// Leader: emit a heartbeat to peers.
+    HeartbeatTick,
+    /// Election: check whether the leader's heartbeats stopped.
+    LeaderCheck,
+    /// Generic scheduled wakeup used by harness-driven roles.
+    Wakeup { tag: u64 },
+}
+
+/// Externally observable protocol events. The simulator's observer records
+/// these for metrics (e.g. reconfiguration-to-active latency) and safety
+/// checking (at most one value chosen per slot).
+#[derive(Clone, PartialEq, Debug)]
+pub enum Announce {
+    /// A value was chosen in `slot` (leader-observed quorum of Phase2B).
+    Chosen { slot: Slot, round: Round, value: Value },
+    /// A replica executed `slot`, producing `result`.
+    Executed { slot: Slot, replica: NodeId },
+    /// The leader finished matchmaking for `round`: the new configuration
+    /// is active (paper: "active within a millisecond").
+    ConfigActive { round: Round, config_id: u64 },
+    /// GarbageB quorum reached for `round`: all configurations below it are
+    /// retired and their acceptors may shut down (paper: "GC'd within five
+    /// milliseconds").
+    ConfigRetired { round: Round },
+    /// A leader became steady (Phase 2) in `round`.
+    LeaderSteady { round: Round },
+    /// The matchmaker set was reconfigured (§6).
+    MatchmakersReconfigured { matchmakers: Vec<NodeId> },
+    /// Fast Paxos: coordinator observed a fast-round choice.
+    FastChosen { round: Round, value: Value },
+}
+
+/// The output of one activation of a node.
+#[derive(Default, Debug)]
+pub struct Effects {
+    /// Outbound messages `(dst, msg)`.
+    pub msgs: Vec<(NodeId, Msg)>,
+    /// Timer requests `(delay, timer)` relative to "now".
+    pub timers: Vec<(Time, Timer)>,
+    /// Observable events (metrics + invariant checking only).
+    pub announces: Vec<Announce>,
+}
+
+impl Effects {
+    pub fn new() -> Effects {
+        Effects::default()
+    }
+
+    /// Queue a message to `dst`.
+    pub fn send(&mut self, dst: NodeId, msg: Msg) {
+        self.msgs.push((dst, msg));
+    }
+
+    /// Queue the same message to every destination.
+    pub fn broadcast(&mut self, dsts: &[NodeId], msg: &Msg) {
+        for &d in dsts {
+            self.msgs.push((d, msg.clone()));
+        }
+    }
+
+    /// Request a timer `delay` ns from now.
+    pub fn timer(&mut self, delay: Time, t: Timer) {
+        self.timers.push((delay, t));
+    }
+
+    /// Record an announcement.
+    pub fn announce(&mut self, a: Announce) {
+        self.announces.push(a);
+    }
+
+    /// Merge another effects batch into this one (helper for roles that
+    /// compose sub-state-machines, e.g. the leader driving GC).
+    pub fn absorb(&mut self, other: Effects) {
+        self.msgs.extend(other.msgs);
+        self.timers.extend(other.timers);
+        self.announces.extend(other.announces);
+    }
+}
+
+/// A protocol role. Implementations must be deterministic: identical
+/// message/timer sequences (and identical seeds for roles that randomize,
+/// e.g. thrifty quorum sampling) produce identical effects.
+pub trait Node: Send {
+    /// A message from `from` was delivered at time `now`.
+    fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects);
+
+    /// A previously requested timer expired at time `now`.
+    fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects);
+
+    /// Called once when the node starts (or restarts after a crash).
+    /// Default: no-op.
+    fn on_start(&mut self, _now: Time, _fx: &mut Effects) {}
+
+    /// Role name for logs/metrics.
+    fn role(&self) -> &'static str;
+
+    /// Downcasting hook so harnesses can drive control-plane actions
+    /// (e.g. "leader: reconfigure to these acceptors now") that in a real
+    /// deployment arrive over an admin RPC.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effects_accumulate() {
+        let mut fx = Effects::new();
+        fx.send(1, Msg::StopA);
+        fx.broadcast(&[2, 3], &Msg::BootstrapAck);
+        fx.timer(100, Timer::HeartbeatTick);
+        fx.announce(Announce::LeaderSteady { round: Round::first(0, 0) });
+        assert_eq!(fx.msgs.len(), 3);
+        assert_eq!(fx.timers.len(), 1);
+        assert_eq!(fx.announces.len(), 1);
+
+        let mut fx2 = Effects::new();
+        fx2.send(9, Msg::StopA);
+        fx2.absorb(fx);
+        assert_eq!(fx2.msgs.len(), 4);
+        assert_eq!(fx2.msgs[0].0, 9);
+    }
+}

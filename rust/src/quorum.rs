@@ -1,0 +1,238 @@
+//! Quorum systems (Flexible Paxos, §2.3).
+//!
+//! A configuration `C = (A; P1; P2)` is a set of acceptors `A` plus two sets
+//! of quorums `P1` (Phase 1) and `P2` (Phase 2) such that every Phase 1
+//! quorum intersects every Phase 2 quorum. Throughout the codebase "Paxos"
+//! means Flexible Paxos: proposers gather an arbitrary P1 quorum in Phase 1
+//! and an arbitrary P2 quorum in Phase 2.
+
+use crate::util::Rng;
+use crate::NodeId;
+use std::collections::BTreeSet;
+
+/// The quorum structure of a configuration, interpreted over an ordered
+/// acceptor list `A`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum QuorumSpec {
+    /// Simple majorities: every subset of size `⌊|A|/2⌋+1` is both a P1 and
+    /// a P2 quorum. This is classic Paxos with `|A| = 2f+1`.
+    Majority,
+    /// Flexible quorums: any `p1` acceptors form a P1 quorum and any `p2`
+    /// acceptors form a P2 quorum. Requires `p1 + p2 > |A|`.
+    Flexible { p1: usize, p2: usize },
+    /// The Matchmaker Fast Paxos configuration from §7: a fixed set of
+    /// `f+1` acceptors with singleton P1 quorums and a single unanimous P2
+    /// quorum. (Every singleton intersects the full set.)
+    FastUnanimous,
+    /// Fully explicit quorum lists (used by tests and by grid-style
+    /// deployments). Each inner set lists acceptor *indices into `A`*.
+    Explicit {
+        p1: Vec<BTreeSet<usize>>,
+        p2: Vec<BTreeSet<usize>>,
+    },
+}
+
+impl QuorumSpec {
+    /// Size threshold helpers for the counting-based specs.
+    fn thresholds(&self, n: usize) -> Option<(usize, usize)> {
+        match self {
+            QuorumSpec::Majority => {
+                let q = n / 2 + 1;
+                Some((q, q))
+            }
+            QuorumSpec::Flexible { p1, p2 } => Some((*p1, *p2)),
+            QuorumSpec::FastUnanimous => Some((1, n)),
+            QuorumSpec::Explicit { .. } => None,
+        }
+    }
+
+    /// Is `acked ⊆ acceptors` a Phase 1 quorum?
+    pub fn is_p1_quorum(&self, acceptors: &[NodeId], acked: &BTreeSet<NodeId>) -> bool {
+        self.is_quorum(acceptors, acked, true)
+    }
+
+    /// Is `acked ⊆ acceptors` a Phase 2 quorum?
+    pub fn is_p2_quorum(&self, acceptors: &[NodeId], acked: &BTreeSet<NodeId>) -> bool {
+        self.is_quorum(acceptors, acked, false)
+    }
+
+    fn is_quorum(&self, acceptors: &[NodeId], acked: &BTreeSet<NodeId>, phase1: bool) -> bool {
+        let members: usize = acked.iter().filter(|a| acceptors.contains(a)).count();
+        if let Some((q1, q2)) = self.thresholds(acceptors.len()) {
+            return members >= if phase1 { q1 } else { q2 };
+        }
+        let QuorumSpec::Explicit { p1, p2 } = self else {
+            unreachable!()
+        };
+        let qs = if phase1 { p1 } else { p2 };
+        qs.iter().any(|q| {
+            q.iter()
+                .all(|&idx| idx < acceptors.len() && acked.contains(&acceptors[idx]))
+        })
+    }
+
+    /// Minimum number of acceptors a thrifty leader must target so that the
+    /// targeted set contains a P2 quorum (used by the thriftiness
+    /// optimization, §8.1). For `Explicit` this returns the size of the
+    /// smallest P2 quorum.
+    pub fn min_p2_size(&self, n: usize) -> usize {
+        match self.thresholds(n) {
+            Some((_, q2)) => q2.min(n),
+            None => {
+                let QuorumSpec::Explicit { p2, .. } = self else {
+                    unreachable!()
+                };
+                p2.iter().map(|q| q.len()).min().unwrap_or(n)
+            }
+        }
+    }
+
+    /// Sample a concrete P2 quorum to target (thrifty Phase 2A fan-out).
+    pub fn sample_p2(&self, acceptors: &[NodeId], rng: &mut Rng) -> Vec<NodeId> {
+        match self {
+            QuorumSpec::Explicit { p2, .. } => {
+                if p2.is_empty() {
+                    return acceptors.to_vec();
+                }
+                let q = &p2[rng.gen_range(p2.len() as u64) as usize];
+                q.iter()
+                    .filter_map(|&i| acceptors.get(i).copied())
+                    .collect()
+            }
+            _ => {
+                let k = self.min_p2_size(acceptors.len());
+                // Hot path (thrifty Phase 2 fan-out): partial Fisher-Yates
+                // over an index bitmap instead of cloning the pool.
+                let n = acceptors.len();
+                if k >= n {
+                    return acceptors.to_vec();
+                }
+                let mut picked = Vec::with_capacity(k);
+                let mut idx: [usize; 16];
+                if n <= 16 {
+                    idx = [0; 16];
+                    for (i, slot) in idx.iter_mut().enumerate().take(n) {
+                        *slot = i;
+                    }
+                    for i in 0..k {
+                        let j = i + rng.gen_range((n - i) as u64) as usize;
+                        idx.swap(i, j);
+                        picked.push(acceptors[idx[i]]);
+                    }
+                } else {
+                    return rng.sample(acceptors, k);
+                }
+                picked
+            }
+        }
+    }
+
+    /// Check the Flexible Paxos intersection property: every P1 quorum
+    /// intersects every P2 quorum over an acceptor set of size `n`.
+    /// Used by config validation and property tests.
+    pub fn intersects(&self, n: usize) -> bool {
+        match self {
+            QuorumSpec::Majority => n > 0,
+            QuorumSpec::Flexible { p1, p2 } => *p1 > 0 && *p2 > 0 && p1 + p2 > n,
+            QuorumSpec::FastUnanimous => n > 0,
+            QuorumSpec::Explicit { p1, p2 } => {
+                !p1.is_empty()
+                    && !p2.is_empty()
+                    && p1.iter().all(|q1| {
+                        p2.iter().all(|q2| q1.intersection(q2).next().is_some())
+                    })
+            }
+        }
+    }
+}
+
+/// Majority count for a set of `n` nodes: `⌊n/2⌋ + 1`. Matchmaker quorums
+/// (f+1 of 2f+1) and replica-ack thresholds use this.
+pub fn majority(n: usize) -> usize {
+    n / 2 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(ids: &[NodeId]) -> BTreeSet<NodeId> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn majority_quorums() {
+        let acc = [10, 11, 12];
+        let q = QuorumSpec::Majority;
+        assert!(!q.is_p1_quorum(&acc, &set(&[10])));
+        assert!(q.is_p1_quorum(&acc, &set(&[10, 11])));
+        assert!(q.is_p2_quorum(&acc, &set(&[11, 12])));
+        // Foreign ids don't count.
+        assert!(!q.is_p1_quorum(&acc, &set(&[10, 99])));
+    }
+
+    #[test]
+    fn flexible_quorums() {
+        let acc = [1, 2, 3, 4];
+        let q = QuorumSpec::Flexible { p1: 3, p2: 2 };
+        assert!(q.intersects(4));
+        assert!(!q.is_p1_quorum(&acc, &set(&[1, 2])));
+        assert!(q.is_p1_quorum(&acc, &set(&[1, 2, 3])));
+        assert!(q.is_p2_quorum(&acc, &set(&[3, 4])));
+        let bad = QuorumSpec::Flexible { p1: 2, p2: 2 };
+        assert!(!bad.intersects(4));
+    }
+
+    #[test]
+    fn fast_unanimous() {
+        let acc = [1, 2];
+        let q = QuorumSpec::FastUnanimous;
+        assert!(q.is_p1_quorum(&acc, &set(&[2])));
+        assert!(!q.is_p2_quorum(&acc, &set(&[2])));
+        assert!(q.is_p2_quorum(&acc, &set(&[1, 2])));
+        assert!(q.intersects(2));
+    }
+
+    #[test]
+    fn explicit_quorums() {
+        // 2x2 grid: P1 = rows, P2 = columns.
+        let acc = [0, 1, 2, 3];
+        let q = QuorumSpec::Explicit {
+            p1: vec![set_usize(&[0, 1]), set_usize(&[2, 3])],
+            p2: vec![set_usize(&[0, 2]), set_usize(&[1, 3])],
+        };
+        assert!(q.intersects(4));
+        assert!(q.is_p1_quorum(&acc, &set(&[0, 1])));
+        assert!(!q.is_p1_quorum(&acc, &set(&[0, 2])));
+        assert!(q.is_p2_quorum(&acc, &set(&[1, 3])));
+        assert!(!q.is_p2_quorum(&acc, &set(&[0, 1])));
+    }
+
+    fn set_usize(ids: &[usize]) -> BTreeSet<usize> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn thrifty_sampling_yields_p2_quorum() {
+        let mut rng = Rng::new(1);
+        let acc = [5, 6, 7, 8, 9];
+        for q in [
+            QuorumSpec::Majority,
+            QuorumSpec::Flexible { p1: 4, p2: 2 },
+            QuorumSpec::FastUnanimous,
+        ] {
+            for _ in 0..20 {
+                let picked = q.sample_p2(&acc, &mut rng);
+                assert!(q.is_p2_quorum(&acc, &picked.iter().copied().collect()));
+            }
+        }
+    }
+
+    #[test]
+    fn majority_fn() {
+        assert_eq!(majority(1), 1);
+        assert_eq!(majority(3), 2);
+        assert_eq!(majority(4), 3);
+        assert_eq!(majority(5), 3);
+    }
+}

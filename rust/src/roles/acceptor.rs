@@ -1,0 +1,276 @@
+//! The Paxos acceptor (Algorithm 2), extended per-slot for MultiPaxos and
+//! with the chosen-prefix watermark that supports GC Scenario 3 (§5.2).
+//!
+//! A Matchmaker Paxos acceptor is *identical* to a Paxos acceptor — all the
+//! reconfiguration machinery lives in the matchmakers and the
+//! proposer/leader. This is the heart of the paper's generality argument.
+
+use crate::msg::{Msg, SlotVote, Value};
+use crate::node::{Effects, Node, Timer};
+use crate::round::Round;
+use crate::{NodeId, Slot, Time};
+use std::collections::BTreeMap;
+
+/// Per-slot vote state: the largest round voted in (`vr`) and the value
+/// voted for (`vv`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vote {
+    pub vr: Round,
+    pub vv: Value,
+}
+
+/// A (multi-slot) Flexible Paxos acceptor.
+#[derive(Debug)]
+pub struct Acceptor {
+    pub id: NodeId,
+    /// Largest round seen (`r` in Algorithm 2); `None` is the paper's `-1`.
+    pub round: Option<Round>,
+    /// Per-slot votes.
+    pub votes: BTreeMap<Slot, Vote>,
+    /// Slots `< chosen_watermark` are known chosen *and* persisted on f+1
+    /// replicas (set by the leader's `PrefixPersisted`, §5.3 Scenario 3).
+    /// Reported in Phase1B so a recovering leader skips re-deciding them.
+    pub chosen_watermark: Slot,
+    /// Also serve fast rounds (Matchmaker Fast Paxos, §7). A fast acceptor
+    /// votes for the first value it sees in a fast round.
+    pub fast: bool,
+}
+
+impl Acceptor {
+    pub fn new(id: NodeId) -> Acceptor {
+        Acceptor {
+            id,
+            round: None,
+            votes: BTreeMap::new(),
+            chosen_watermark: 0,
+            fast: false,
+        }
+    }
+
+    /// An acceptor that also participates in fast rounds (§7).
+    pub fn new_fast(id: NodeId) -> Acceptor {
+        Acceptor { fast: true, ..Acceptor::new(id) }
+    }
+
+    fn seen_geq(&self, r: Round) -> bool {
+        matches!(self.round, Some(cur) if cur > r)
+    }
+
+    /// Drop vote state below the chosen watermark (memory reclamation; the
+    /// values are durable on f+1 replicas).
+    pub fn compact(&mut self) {
+        let w = self.chosen_watermark;
+        self.votes.retain(|&s, _| s >= w);
+    }
+}
+
+impl Node for Acceptor {
+    fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            // Phase 1: promise not to vote in any round < i, report votes
+            // for every slot >= from_slot (bulk Phase1, §4.1) plus the
+            // chosen-prefix watermark (Scenario 3).
+            Msg::Phase1A { round, from_slot } => {
+                // Equal-round re-sends are answered again (dropped-message
+                // recovery); only strictly higher seen rounds refuse.
+                if self.seen_geq(round) {
+                    fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
+                    return;
+                }
+                self.round = Some(round);
+                let votes: Vec<SlotVote> = self
+                    .votes
+                    .range(from_slot.max(self.chosen_watermark)..)
+                    .map(|(&slot, v)| SlotVote { slot, vr: v.vr, vv: v.vv.clone() })
+                    .collect();
+                fx.send(
+                    from,
+                    Msg::Phase1B { round, votes, chosen_watermark: self.chosen_watermark },
+                );
+            }
+
+            // Phase 2: vote for the value unless promised to a higher round.
+            Msg::Phase2A { round, slot, value } => {
+                if self.seen_geq(round) {
+                    fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
+                    return;
+                }
+                self.round = Some(round);
+                self.votes.insert(slot, Vote { vr: round, vv: value });
+                fx.send(from, Msg::Phase2B { round, slot });
+            }
+
+            // Fast round proposal (Matchmaker Fast Paxos §7): the acceptor
+            // votes for the *first* value proposed to it in the fast round,
+            // reporting its vote to the round's coordinator (`round.proposer`)
+            // so the coordinator can detect conflicts.
+            Msg::FastPropose { round, value } => {
+                if !self.fast {
+                    return;
+                }
+                if self.seen_geq(round) {
+                    fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
+                    return;
+                }
+                // Slot 0: the fast variant is single-decree.
+                let entry = self.votes.entry(0);
+                let vote = match entry {
+                    std::collections::btree_map::Entry::Occupied(o) if o.get().vr == round => {
+                        // Already voted in this fast round: report the
+                        // existing vote (do not change it).
+                        o.into_mut().clone()
+                    }
+                    e => {
+                        self.round = Some(round);
+                        let v = Vote { vr: round, vv: value };
+                        match e {
+                            std::collections::btree_map::Entry::Occupied(mut o) => {
+                                o.insert(v.clone());
+                            }
+                            std::collections::btree_map::Entry::Vacant(vac) => {
+                                vac.insert(v.clone());
+                            }
+                        }
+                        v
+                    }
+                };
+                fx.send(round.proposer, Msg::FastPhase2B { round: vote.vr, value: vote.vv });
+            }
+
+            // GC Scenario 3 bookkeeping: the leader certifies that the
+            // prefix `< upto` is stored on f+1 replicas.
+            Msg::PrefixPersisted { round, upto } => {
+                if self.seen_geq(round) {
+                    fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
+                    return;
+                }
+                self.round = Some(round);
+                if upto > self.chosen_watermark {
+                    self.chosen_watermark = upto;
+                    self.compact();
+                }
+                fx.send(from, Msg::PrefixAck { round, upto: self.chosen_watermark });
+            }
+
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+
+    fn role(&self) -> &'static str {
+        "acceptor"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::Effects;
+
+    fn r(epoch: u64, p: NodeId, s: u64) -> Round {
+        Round { epoch, proposer: p, seq: s }
+    }
+
+    fn run(a: &mut Acceptor, from: NodeId, m: Msg) -> Vec<(NodeId, Msg)> {
+        let mut fx = Effects::new();
+        a.on_msg(0, from, m, &mut fx);
+        fx.msgs
+    }
+
+    #[test]
+    fn phase1_promise_and_report() {
+        let mut a = Acceptor::new(1);
+        // Vote first in round (0,0,0).
+        let out = run(&mut a, 0, Msg::Phase2A { round: r(0, 0, 0), slot: 3, value: Value::Noop });
+        assert_eq!(out[0].1, Msg::Phase2B { round: r(0, 0, 0), slot: 3 });
+
+        // Phase1A in a higher round sees the vote.
+        let out = run(&mut a, 5, Msg::Phase1A { round: r(1, 5, 0), from_slot: 0 });
+        match &out[0].1 {
+            Msg::Phase1B { round, votes, chosen_watermark } => {
+                assert_eq!(*round, r(1, 5, 0));
+                assert_eq!(*chosen_watermark, 0);
+                assert_eq!(votes.len(), 1);
+                assert_eq!(votes[0].slot, 3);
+                assert_eq!(votes[0].vr, r(0, 0, 0));
+            }
+            other => panic!("expected Phase1B, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_phase1a_nacked() {
+        let mut a = Acceptor::new(1);
+        run(&mut a, 0, Msg::Phase1A { round: r(2, 0, 0), from_slot: 0 });
+        let out = run(&mut a, 9, Msg::Phase1A { round: r(1, 9, 0), from_slot: 0 });
+        assert_eq!(out[0].1, Msg::Nack { round: r(1, 9, 0), higher: r(2, 0, 0) });
+    }
+
+    #[test]
+    fn stale_phase2a_nacked_equal_allowed() {
+        let mut a = Acceptor::new(1);
+        run(&mut a, 0, Msg::Phase1A { round: r(3, 0, 0), from_slot: 0 });
+        // Equal round: allowed (Algorithm 2 uses i >= r for Phase2A).
+        let out = run(&mut a, 0, Msg::Phase2A { round: r(3, 0, 0), slot: 0, value: Value::Noop });
+        assert_eq!(out[0].1, Msg::Phase2B { round: r(3, 0, 0), slot: 0 });
+        // Lower round: nacked.
+        let out = run(&mut a, 1, Msg::Phase2A { round: r(2, 1, 0), slot: 0, value: Value::Noop });
+        assert!(matches!(out[0].1, Msg::Nack { .. }));
+    }
+
+    #[test]
+    fn phase1b_respects_from_slot_and_watermark() {
+        let mut a = Acceptor::new(1);
+        for s in 0..6 {
+            run(&mut a, 0, Msg::Phase2A { round: r(0, 0, 0), slot: s, value: Value::Noop });
+        }
+        run(&mut a, 0, Msg::PrefixPersisted { round: r(0, 0, 0), upto: 2 });
+        let out = run(&mut a, 5, Msg::Phase1A { round: r(1, 5, 0), from_slot: 4 });
+        match &out[0].1 {
+            Msg::Phase1B { votes, chosen_watermark, .. } => {
+                assert_eq!(*chosen_watermark, 2);
+                let slots: Vec<Slot> = votes.iter().map(|v| v.slot).collect();
+                assert_eq!(slots, vec![4, 5]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prefix_persisted_compacts() {
+        let mut a = Acceptor::new(1);
+        for s in 0..10 {
+            run(&mut a, 0, Msg::Phase2A { round: r(0, 0, 0), slot: s, value: Value::Noop });
+        }
+        let out = run(&mut a, 0, Msg::PrefixPersisted { round: r(0, 0, 0), upto: 7 });
+        assert_eq!(out[0].1, Msg::PrefixAck { round: r(0, 0, 0), upto: 7 });
+        assert_eq!(a.votes.len(), 3);
+        // Watermark never regresses.
+        run(&mut a, 0, Msg::PrefixPersisted { round: r(0, 0, 0), upto: 3 });
+        assert_eq!(a.chosen_watermark, 7);
+    }
+
+    #[test]
+    fn fast_round_first_value_wins() {
+        let mut a = Acceptor::new_fast(1);
+        let v1 = Value::Cmd(crate::msg::Command { client: 8, seq: 0, payload: vec![1] });
+        let v2 = Value::Cmd(crate::msg::Command { client: 9, seq: 0, payload: vec![2] });
+        let out = run(&mut a, 8, Msg::FastPropose { round: r(0, 0, 0), value: v1.clone() });
+        assert_eq!(out[0].1, Msg::FastPhase2B { round: r(0, 0, 0), value: v1.clone() });
+        // Second proposal in the same round: reports the original vote.
+        let out = run(&mut a, 9, Msg::FastPropose { round: r(0, 0, 0), value: v2 });
+        assert_eq!(out[0].1, Msg::FastPhase2B { round: r(0, 0, 0), value: v1 });
+    }
+
+    #[test]
+    fn non_fast_acceptor_ignores_fast_propose() {
+        let mut a = Acceptor::new(1);
+        let out = run(&mut a, 8, Msg::FastPropose { round: r(0, 0, 0), value: Value::Noop });
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,247 @@
+//! Closed-loop workload clients (§8.1: "every client repeatedly proposes a
+//! state machine command, waits to receive a response, and then immediately
+//! proposes another command").
+//!
+//! Clients record `(completion_time, latency)` samples which the harness
+//! turns into the paper's sliding-window latency/throughput series.
+
+use crate::msg::{Command, Msg};
+use crate::node::{Effects, Node, Timer};
+use crate::{NodeId, Time};
+
+/// A closed-loop client.
+pub struct Client {
+    pub id: NodeId,
+    /// Proposers, in fallback order; `leader_hint` indexes into this list.
+    pub proposers: Vec<NodeId>,
+    pub leader_hint: usize,
+    /// Payload for each command (paper: one-byte no-op).
+    pub payload: Vec<u8>,
+    /// Resend timeout if no reply arrives.
+    pub resend_after: Time,
+    /// Next sequence number to send.
+    pub seq: u64,
+    /// In-flight request: (seq, send_time).
+    pub outstanding: Option<(u64, Time)>,
+    /// Completed-request samples `(completion_time, latency_ns)`.
+    pub samples: Vec<(Time, Time)>,
+    /// Bumped on every (re)send; stale resend timers are ignored.
+    generation: u64,
+    /// Start issuing at this time (0 = immediately on start).
+    pub start_at: Time,
+    /// Stop issuing new requests after this time (u64::MAX = never).
+    pub stop_at: Time,
+}
+
+impl Client {
+    pub fn new(id: NodeId, proposers: Vec<NodeId>) -> Client {
+        Client {
+            id,
+            proposers,
+            leader_hint: 0,
+            payload: vec![0u8],
+            resend_after: 100 * crate::MS,
+            seq: 0,
+            outstanding: None,
+            samples: Vec::new(),
+            generation: 0,
+            start_at: 0,
+            stop_at: u64::MAX,
+        }
+    }
+
+    fn leader(&self) -> NodeId {
+        self.proposers[self.leader_hint % self.proposers.len()]
+    }
+
+    fn send_next(&mut self, now: Time, fx: &mut Effects) {
+        if now >= self.stop_at {
+            self.outstanding = None;
+            return;
+        }
+        self.seq += 1;
+        self.generation += 1;
+        self.outstanding = Some((self.seq, now));
+        let cmd = Command { client: self.id, seq: self.seq, payload: self.payload.clone() };
+        fx.send(self.leader(), Msg::ClientRequest { cmd });
+        fx.timer(
+            self.resend_after,
+            Timer::ClientResend { seq: self.seq, generation: self.generation },
+        );
+    }
+
+    fn resend(&mut self, now: Time, fx: &mut Effects) {
+        if let Some((seq, _sent)) = self.outstanding {
+            let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
+            self.generation += 1;
+            fx.send(self.leader(), Msg::ClientRequest { cmd });
+            fx.timer(
+                self.resend_after,
+                Timer::ClientResend { seq, generation: self.generation },
+            );
+            let _ = now;
+        }
+    }
+}
+
+impl Node for Client {
+    fn on_start(&mut self, now: Time, fx: &mut Effects) {
+        if self.start_at > now {
+            fx.timer(self.start_at - now, Timer::Wakeup { tag: 0 });
+        } else {
+            self.send_next(now, fx);
+        }
+    }
+
+    fn on_msg(&mut self, now: Time, _from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::ClientReply { seq, .. } => {
+                if let Some((out_seq, sent)) = self.outstanding {
+                    if seq == out_seq {
+                        self.samples.push((now, now - sent));
+                        self.send_next(now, fx);
+                    }
+                    // Stale/duplicate replies (other replicas) are ignored.
+                }
+            }
+            Msg::NotLeader { hint } => {
+                if let Some(h) = hint {
+                    if let Some(idx) = self.proposers.iter().position(|&p| p == h) {
+                        self.leader_hint = idx;
+                    }
+                } else {
+                    self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
+                }
+                // Retry immediately against the new hint.
+                self.resend(now, fx);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects) {
+        match timer {
+            Timer::ClientResend { seq, generation } => {
+                // Only the most recently armed timer for the current
+                // outstanding request is live; completed or re-sent
+                // requests leave stale timers behind.
+                if generation == self.generation
+                    && matches!(self.outstanding, Some((s, _)) if s == seq)
+                {
+                    // Rotate the hint: the leader may have failed.
+                    self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
+                    self.resend(now, fx);
+                }
+            }
+            Timer::Wakeup { tag: 0 } => {
+                if self.outstanding.is_none() {
+                    self.send_next(now, fx);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn role(&self) -> &'static str {
+        "client"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(c: &mut Client, now: Time, seq: u64) -> Effects {
+        let mut fx = Effects::new();
+        c.on_msg(now, 0, Msg::ClientReply { seq, result: vec![] }, &mut fx);
+        fx
+    }
+
+    #[test]
+    fn closed_loop() {
+        let mut c = Client::new(10, vec![0, 1]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(fx.msgs.len(), 1);
+        assert!(matches!(fx.msgs[0].1, Msg::ClientRequest { .. }));
+        assert_eq!(c.outstanding.unwrap().0, 1);
+
+        // Reply at t=5ms: sample recorded, next request sent immediately.
+        let fx = reply(&mut c, 5 * crate::MS, 1);
+        assert_eq!(c.samples, vec![(5 * crate::MS, 5 * crate::MS)]);
+        assert_eq!(c.outstanding.unwrap().0, 2);
+        assert_eq!(fx.msgs.len(), 1);
+    }
+
+    #[test]
+    fn stale_reply_ignored() {
+        let mut c = Client::new(10, vec![0]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        reply(&mut c, 1, 1);
+        // A second (duplicate) reply for seq 1 doesn't double-count.
+        reply(&mut c, 2, 1);
+        assert_eq!(c.samples.len(), 1);
+        assert_eq!(c.outstanding.unwrap().0, 2);
+    }
+
+    #[test]
+    fn not_leader_redirects() {
+        let mut c = Client::new(10, vec![0, 1]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let mut fx2 = Effects::new();
+        c.on_msg(1, 0, Msg::NotLeader { hint: Some(1) }, &mut fx2);
+        assert_eq!(c.leader_hint, 1);
+        // Resent to the new leader.
+        assert_eq!(fx2.msgs[0].0, 1);
+    }
+
+    #[test]
+    fn resend_timer_rotates_leader() {
+        let mut c = Client::new(10, vec![0, 1]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let mut fx2 = Effects::new();
+        c.on_timer(c.resend_after, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx2);
+        assert_eq!(c.leader_hint, 1);
+        assert_eq!(fx2.msgs.len(), 1);
+        // A stale-generation timer is a no-op (the resend bumped gen to 2).
+        let mut fxg = Effects::new();
+        c.on_timer(c.resend_after, Timer::ClientResend { seq: 1, generation: 1 }, &mut fxg);
+        assert!(fxg.msgs.is_empty());
+        // Stale resend timer (request already done) is a no-op.
+        reply(&mut c, 1, 1);
+        let mut fx3 = Effects::new();
+        c.on_timer(2 * c.resend_after, Timer::ClientResend { seq: 1, generation: 2 }, &mut fx3);
+        assert!(fx3.msgs.is_empty());
+    }
+
+    #[test]
+    fn stop_at_halts_issuing() {
+        let mut c = Client::new(10, vec![0]);
+        c.stop_at = 10;
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        reply(&mut c, 20, 1);
+        assert!(c.outstanding.is_none());
+        assert_eq!(c.samples.len(), 1);
+    }
+
+    #[test]
+    fn delayed_start() {
+        let mut c = Client::new(10, vec![0]);
+        c.start_at = 100;
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert!(fx.msgs.is_empty());
+        assert_eq!(fx.timers.len(), 1);
+        let mut fx2 = Effects::new();
+        c.on_timer(100, Timer::Wakeup { tag: 0 }, &mut fx2);
+        assert_eq!(fx2.msgs.len(), 1);
+    }
+}

@@ -1,0 +1,472 @@
+//! Baseline: MultiPaxos with **horizontal reconfiguration** (§7.2, §9).
+//!
+//! The classic approach (Lamport's "Reconfiguring a state machine" [21]):
+//! the new configuration is itself chosen as a log entry; a configuration
+//! chosen at slot `s` governs slots `≥ s + α`. The leader may never run
+//! more than `α` slots ahead of its chosen watermark, which is the
+//! concurrency limitation the paper contrasts against (Figures 8, 10, 19).
+//!
+//! This leader shares the [`super::acceptor::Acceptor`] and
+//! [`super::replica::Replica`] roles with Matchmaker MultiPaxos; only the
+//! leader differs (no matchmakers, no matchmaking phase).
+
+use crate::config::Configuration;
+use crate::msg::{Command, Msg, Value};
+use crate::node::{Announce, Effects, Node, Timer};
+use crate::round::Round;
+use crate::util::Rng;
+use crate::{NodeId, Slot, Time, MS};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+
+#[derive(Clone, Debug)]
+struct SlotState {
+    value: Value,
+    acks: BTreeSet<NodeId>,
+    chosen: bool,
+    generation: u64,
+}
+
+/// A pending configuration installed by a chosen `Reconfig` log entry:
+/// effective from `from_slot`, usable once a P1 quorum of the new acceptors
+/// has promised our round.
+#[derive(Debug)]
+struct PendingConfig {
+    from_slot: Slot,
+    config: Configuration,
+    p1_acks: BTreeSet<NodeId>,
+    ready: bool,
+}
+
+/// MultiPaxos leader with horizontal reconfiguration and α-window flow
+/// control.
+pub struct HorizontalLeader {
+    pub id: NodeId,
+    pub alpha: u64,
+    pub thrifty: bool,
+    pub replicas: Vec<NodeId>,
+    rng: Rng,
+    pub phase2_retry: Time,
+
+    round: Round,
+    /// `(effective_from, config)` — config for slot `s` is the last entry
+    /// with `effective_from ≤ s`.
+    configs: Vec<(Slot, Configuration)>,
+    pending: Option<PendingConfig>,
+
+    /// Phase 1 state at startup.
+    phase1: Option<BTreeSet<NodeId>>,
+    steady: bool,
+
+    log: BTreeMap<Slot, SlotState>,
+    next_slot: Slot,
+    chosen_watermark: Slot,
+    stalled: VecDeque<Command>,
+    client_table: HashMap<NodeId, u64>,
+    generation: u64,
+
+    /// Metrics: commands stalled by the α window.
+    pub alpha_stalls: u64,
+    pub reconfigs_completed: u64,
+}
+
+impl HorizontalLeader {
+    pub fn new(
+        id: NodeId,
+        initial_config: Configuration,
+        replicas: Vec<NodeId>,
+        alpha: u64,
+        seed: u64,
+    ) -> HorizontalLeader {
+        HorizontalLeader {
+            id,
+            alpha,
+            thrifty: true,
+            replicas,
+            rng: Rng::new(seed ^ 0x4a5a),
+            phase2_retry: 25 * MS,
+            round: Round::first(0, id),
+            configs: vec![(0, initial_config)],
+            pending: None,
+            phase1: None,
+            steady: false,
+            log: BTreeMap::new(),
+            next_slot: 0,
+            chosen_watermark: 0,
+            stalled: VecDeque::new(),
+            client_table: HashMap::new(),
+            generation: 0,
+            alpha_stalls: 0,
+            reconfigs_completed: 0,
+        }
+    }
+
+    pub fn is_steady(&self) -> bool {
+        self.steady
+    }
+
+    fn config_for(&self, slot: Slot) -> &Configuration {
+        self.configs
+            .iter()
+            .rev()
+            .find(|(from, _)| *from <= slot)
+            .map(|(_, c)| c)
+            .expect("config for slot 0 always present")
+    }
+
+    /// Propose a reconfiguration: the new configuration is chosen as an
+    /// ordinary log entry and becomes effective α slots later (§7.2).
+    pub fn reconfigure(&mut self, new_config: Configuration, now: Time, fx: &mut Effects) {
+        if !self.steady || self.pending.is_some() {
+            return;
+        }
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.propose(slot, Value::Reconfig(new_config), now, fx);
+    }
+
+    fn propose(&mut self, slot: Slot, value: Value, _now: Time, fx: &mut Effects) {
+        self.generation += 1;
+        let generation = self.generation;
+        let cfg = self.config_for(slot).clone();
+        let targets: Vec<NodeId> = if self.thrifty {
+            cfg.quorum.sample_p2(&cfg.acceptors, &mut self.rng)
+        } else {
+            cfg.acceptors.clone()
+        };
+        let msg = Msg::Phase2A { round: self.round, slot, value: value.clone() };
+        for &t in &targets {
+            fx.send(t, msg.clone());
+        }
+        self.log.insert(
+            slot,
+            SlotState { value, acks: BTreeSet::new(), chosen: false, generation },
+        );
+        if self.thrifty {
+            fx.timer(self.phase2_retry, Timer::Phase2Retry { slot, generation });
+        }
+    }
+
+    /// The α window: slot `s` may only be proposed once slot `s - α` is
+    /// chosen ("the proposer cannot have more than α outstanding
+    /// operations", §7.2).
+    fn window_open(&self) -> bool {
+        self.next_slot < self.chosen_watermark + self.alpha
+    }
+
+    fn assign(&mut self, cmd: Command, now: Time, fx: &mut Effects) {
+        if !self.steady {
+            self.stalled.push_back(cmd);
+            return;
+        }
+        if let Some(&seq) = self.client_table.get(&cmd.client) {
+            if cmd.seq <= seq {
+                return;
+            }
+        }
+        if !self.window_open() {
+            self.alpha_stalls += 1;
+            self.stalled.push_back(cmd);
+            return;
+        }
+        // If a pending config governs this slot but isn't ready, stall.
+        if let Some(p) = &self.pending {
+            if self.next_slot >= p.from_slot && !p.ready {
+                self.stalled.push_back(cmd);
+                return;
+            }
+        }
+        self.client_table.insert(cmd.client, cmd.seq);
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.propose(slot, Value::Cmd(cmd), now, fx);
+    }
+
+    fn drain(&mut self, now: Time, fx: &mut Effects) {
+        while !self.stalled.is_empty() && self.steady && self.window_open() {
+            if let Some(p) = &self.pending {
+                if self.next_slot >= p.from_slot && !p.ready {
+                    break;
+                }
+            }
+            let cmd = self.stalled.pop_front().unwrap();
+            // Re-check dedup inside assign.
+            self.assign(cmd, now, fx);
+        }
+    }
+
+    fn on_chosen(&mut self, slot: Slot, now: Time, fx: &mut Effects) {
+        let value = self.log[&slot].value.clone();
+        fx.announce(Announce::Chosen { slot, round: self.round, value: value.clone() });
+        fx.broadcast(&self.replicas.clone(), &Msg::Chosen { slot, value: value.clone() });
+
+        // A chosen Reconfig at slot s installs the new config at s + α
+        // after a Phase 1 handshake with the new acceptors.
+        if let Value::Reconfig(cfg) = &value {
+            let from_slot = slot + self.alpha;
+            let pending = PendingConfig {
+                from_slot,
+                config: cfg.clone(),
+                p1_acks: BTreeSet::new(),
+                ready: false,
+            };
+            for &a in &cfg.acceptors {
+                fx.send(a, Msg::Phase1A { round: self.round, from_slot });
+            }
+            fx.announce(Announce::ConfigActive { round: self.round, config_id: cfg.id });
+            self.pending = Some(pending);
+        }
+
+        while self.log.get(&self.chosen_watermark).map_or(false, |s| s.chosen) {
+            self.chosen_watermark += 1;
+        }
+        self.drain(now, fx);
+    }
+}
+
+impl Node for HorizontalLeader {
+    fn on_start(&mut self, _now: Time, fx: &mut Effects) {
+        // Phase 1 with the initial configuration (fresh log: no votes).
+        self.phase1 = Some(BTreeSet::new());
+        let cfg = self.configs[0].1.clone();
+        for &a in &cfg.acceptors {
+            fx.send(a, Msg::Phase1A { round: self.round, from_slot: 0 });
+        }
+    }
+
+    fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::ClientRequest { cmd } => {
+                self.assign(cmd, now, fx);
+            }
+            Msg::Phase1B { round, votes, .. } => {
+                if round != self.round {
+                    return;
+                }
+                // Startup Phase 1?
+                if let Some(acks) = &mut self.phase1 {
+                    acks.insert(from);
+                    for v in votes {
+                        // Adopt prior votes (restart recovery).
+                        let generation = self.generation;
+                        self.log.entry(v.slot).or_insert(SlotState {
+                            value: v.vv,
+                            acks: BTreeSet::new(),
+                            chosen: false,
+                            generation,
+                        });
+                        self.next_slot = self.next_slot.max(v.slot + 1);
+                    }
+                    if self.configs[0].1.is_p1_quorum(acks) {
+                        self.phase1 = None;
+                        self.steady = true;
+                        fx.announce(Announce::LeaderSteady { round: self.round });
+                        // Re-propose adopted entries.
+                        let slots: Vec<Slot> = self
+                            .log
+                            .iter()
+                            .filter(|(_, s)| !s.chosen)
+                            .map(|(s, _)| *s)
+                            .collect();
+                        for s in slots {
+                            let v = self.log[&s].value.clone();
+                            self.propose(s, v, now, fx);
+                        }
+                        self.drain(now, fx);
+                    }
+                    return;
+                }
+                // Pending-config Phase 1 handshake.
+                if let Some(p) = &mut self.pending {
+                    if p.config.acceptors.contains(&from) {
+                        p.p1_acks.insert(from);
+                        if p.config.is_p1_quorum(&p.p1_acks) && !p.ready {
+                            p.ready = true;
+                            let from_slot = p.from_slot;
+                            let config = p.config.clone();
+                            self.configs.push((from_slot, config));
+                            self.pending = None;
+                            self.reconfigs_completed += 1;
+                            self.drain(now, fx);
+                        }
+                    }
+                }
+            }
+            Msg::Phase2B { round, slot } => {
+                if round != self.round {
+                    return;
+                }
+                let cfg = self.config_for(slot).clone();
+                let Some(ss) = self.log.get_mut(&slot) else { return };
+                if ss.chosen {
+                    return;
+                }
+                ss.acks.insert(from);
+                if cfg.is_p2_quorum(&ss.acks) {
+                    ss.chosen = true;
+                    self.on_chosen(slot, now, fx);
+                }
+            }
+            Msg::ReplicaAck { upto } => {
+                // Replica catch-up, same as the matchmaker leader.
+                if upto < self.chosen_watermark {
+                    let end = (upto + 256).min(self.chosen_watermark);
+                    for slot in upto..end {
+                        if let Some(ss) = self.log.get(&slot) {
+                            if ss.chosen {
+                                fx.send(from, Msg::Chosen { slot, value: ss.value.clone() });
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, timer: Timer, fx: &mut Effects) {
+        if let Timer::Phase2Retry { slot, generation } = timer {
+            let Some(ss) = self.log.get(&slot) else { return };
+            if ss.chosen || ss.generation != generation {
+                return;
+            }
+            let value = ss.value.clone();
+            let cfg = self.config_for(slot).clone();
+            fx.broadcast(&cfg.acceptors, &Msg::Phase2A { round: self.round, slot, value });
+            fx.timer(self.phase2_retry, Timer::Phase2Retry { slot, generation });
+        }
+    }
+
+    fn role(&self) -> &'static str {
+        "horizontal-leader"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roles::{Acceptor, Replica};
+    use crate::statemachine::Noop;
+
+    struct Pump {
+        leader: HorizontalLeader,
+        accs: Vec<Acceptor>,
+        reps: Vec<Replica>,
+        announces: Vec<Announce>,
+    }
+
+    impl Pump {
+        fn new(alpha: u64) -> Pump {
+            // leader=0, acceptors 4..10 (pool of 6), replicas 10..13
+            let cfg = Configuration::majority(0, vec![4, 5, 6]);
+            let mut leader = HorizontalLeader::new(0, cfg, vec![10, 11, 12], alpha, 1);
+            leader.thrifty = false;
+            Pump {
+                leader,
+                accs: (4..10).map(Acceptor::new).collect(),
+                reps: (10..13).map(|id| Replica::new(id, Box::new(Noop))).collect(),
+                announces: Vec::new(),
+            }
+        }
+
+        fn pump(&mut self, mut fx: Effects) {
+            let mut q: VecDeque<(NodeId, NodeId, Msg)> = VecDeque::new();
+            self.announces.extend(fx.announces.drain(..));
+            for (to, m) in fx.msgs.drain(..) {
+                q.push_back((0, to, m));
+            }
+            while let Some((from, to, msg)) = q.pop_front() {
+                let mut fx = Effects::new();
+                match to {
+                    0 => self.leader.on_msg(0, from, msg, &mut fx),
+                    4..=9 => self.accs[(to - 4) as usize].on_msg(0, from, msg, &mut fx),
+                    10..=12 => self.reps[(to - 10) as usize].on_msg(0, from, msg, &mut fx),
+                    _ => {}
+                }
+                self.announces.extend(fx.announces.drain(..));
+                for (dst, m) in fx.msgs.drain(..) {
+                    q.push_back((to, dst, m));
+                }
+            }
+        }
+
+        fn start(&mut self) {
+            let mut fx = Effects::new();
+            self.leader.on_start(0, &mut fx);
+            self.pump(fx);
+        }
+
+        fn cmd(&mut self, client: NodeId, seq: u64) {
+            let mut fx = Effects::new();
+            let cmd = Command { client, seq, payload: vec![0] };
+            self.leader.on_msg(0, client, Msg::ClientRequest { cmd }, &mut fx);
+            self.pump(fx);
+        }
+    }
+
+    #[test]
+    fn startup_and_commands() {
+        let mut p = Pump::new(8);
+        p.start();
+        assert!(p.leader.is_steady());
+        for seq in 1..=5 {
+            p.cmd(100, seq);
+        }
+        assert_eq!(p.leader.chosen_watermark, 5);
+        for r in &p.reps {
+            assert_eq!(r.exec_watermark, 5);
+        }
+    }
+
+    #[test]
+    fn horizontal_reconfiguration() {
+        let mut p = Pump::new(4);
+        p.start();
+        p.cmd(100, 1);
+        let new_cfg = Configuration::majority(1, vec![7, 8, 9]);
+        let mut fx = Effects::new();
+        p.leader.reconfigure(new_cfg.clone(), 0, &mut fx);
+        p.pump(fx);
+        assert_eq!(p.leader.reconfigs_completed, 1);
+        // Commands past the α boundary use the new config.
+        for seq in 2..=8 {
+            p.cmd(100, seq);
+        }
+        assert_eq!(p.leader.chosen_watermark, 9); // 1 cmd + reconfig + 7 cmds
+        // Slot 9 (≥ 1 + α = 5) must be governed by the new config.
+        assert_eq!(p.leader.config_for(8).id, 1);
+        assert_eq!(p.leader.config_for(4).id, 0);
+    }
+
+    #[test]
+    fn alpha_window_stalls() {
+        // α = 1: every command must wait for the previous to be chosen.
+        // In the synchronous pump this never stalls; verify the window
+        // logic directly instead.
+        let mut p = Pump::new(1);
+        p.start();
+        p.cmd(100, 1);
+        assert_eq!(p.leader.alpha_stalls, 0);
+        assert!(p.leader.window_open());
+        // Simulate an unchosen outstanding slot.
+        p.leader.next_slot = p.leader.chosen_watermark + 1;
+        assert!(!p.leader.window_open());
+    }
+
+    #[test]
+    fn replica_catchup() {
+        let mut p = Pump::new(8);
+        p.start();
+        for seq in 1..=3 {
+            p.cmd(100, seq);
+        }
+        // A replica that lost everything asks implicitly via a low ack.
+        let mut fx = Effects::new();
+        p.leader.on_msg(0, 10, Msg::ReplicaAck { upto: 0 }, &mut fx);
+        let resent = fx.msgs.iter().filter(|(_, m)| matches!(m, Msg::Chosen { .. })).count();
+        assert_eq!(resent, 3);
+    }
+}

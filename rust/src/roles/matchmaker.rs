@@ -1,0 +1,396 @@
+//! The matchmaker — the paper's central contribution (§3 Algorithm 1,
+//! §5 Algorithm 4, §6).
+//!
+//! A matchmaker maintains a log `L` of configurations indexed by round.
+//! `MatchA⟨i, C_i⟩` inserts `C_i` at entry `i` and returns every prior
+//! configuration, *unless* the log already holds a configuration at a round
+//! `≥ i` (or `i` is below the GC watermark), in which case the request is
+//! refused — this refusal is exactly what makes the safety proof work: once
+//! a matchmaker answers round `i`, it has promised never to answer any
+//! round `≤ i` again.
+//!
+//! Matchmakers also:
+//! * garbage-collect retired configurations (`GarbageA/B`, §5),
+//! * support stop-and-copy reconfiguration of the matchmaker set itself
+//!   (`StopA/B`, `Bootstrap`, §6), and
+//! * double as Paxos acceptors for the meta-Paxos instance that chooses
+//!   the next matchmaker set (§6) — processed even while stopped.
+
+use crate::config::Configuration;
+use crate::msg::Msg;
+use crate::node::{Effects, Node, Timer};
+use crate::round::Round;
+use crate::{NodeId, Time};
+use std::collections::BTreeMap;
+
+/// A matchmaker node.
+#[derive(Debug)]
+pub struct Matchmaker {
+    pub id: NodeId,
+    /// The configuration log `L`.
+    pub log: BTreeMap<Round, Configuration>,
+    /// GC watermark `w`: rounds `< w` are retired. `None` = nothing GC'd.
+    pub gc_watermark: Option<Round>,
+    /// Stopped by `StopA` (§6): refuses everything except `StopA` and the
+    /// meta-Paxos messages.
+    pub stopped: bool,
+    /// New matchmakers are bootstrapped inactive and only start serving
+    /// once the meta-Paxos chooses them (`MatchmakersActivated`).
+    pub active: bool,
+    /// Matchmaker-set generation (§6): generation g's members are the
+    /// meta-Paxos acceptors for the instance that chooses generation g+1.
+    pub generation: u64,
+
+    // --- Meta-Paxos acceptor state, one single-decree instance per
+    // generation: instance g (served by generation-g members) chooses the
+    // generation-(g+1) set. Keyed by generation so votes can never leak
+    // across instances, even when sets overlap. ---
+    meta: BTreeMap<u64, MetaAcceptor>,
+}
+
+/// Per-instance meta-Paxos acceptor state.
+#[derive(Debug, Default, Clone)]
+struct MetaAcceptor {
+    round: Option<Round>,
+    vr: Option<Round>,
+    vv: Option<Vec<NodeId>>,
+}
+
+impl Matchmaker {
+    /// A member of the initial matchmaker set (active immediately).
+    pub fn new(id: NodeId) -> Matchmaker {
+        Matchmaker {
+            id,
+            log: BTreeMap::new(),
+            gc_watermark: None,
+            stopped: false,
+            active: true,
+            generation: 0,
+            meta: BTreeMap::new(),
+        }
+    }
+
+    /// A standby matchmaker: inactive until bootstrapped + activated (§6).
+    pub fn new_standby(id: NodeId) -> Matchmaker {
+        Matchmaker { active: false, ..Matchmaker::new(id) }
+    }
+
+    fn below_watermark(&self, r: Round) -> bool {
+        matches!(self.gc_watermark, Some(w) if r < w)
+    }
+}
+
+impl Node for Matchmaker {
+    fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        // Meta-Paxos duty survives stop (§6): the old matchmakers are the
+        // acceptors that choose the next matchmaker set.
+        match &msg {
+            Msg::MetaPhase1A { round, generation } => {
+                let inst = self.meta.entry(*generation).or_default();
+                if matches!(inst.round, Some(r) if r > *round) {
+                    return;
+                }
+                inst.round = Some(*round);
+                fx.send(
+                    from,
+                    Msg::MetaPhase1B { round: *round, vr: inst.vr, vv: inst.vv.clone() },
+                );
+                return;
+            }
+            Msg::MetaPhase2A { round, generation, matchmakers } => {
+                let inst = self.meta.entry(*generation).or_default();
+                if matches!(inst.round, Some(r) if r > *round) {
+                    return;
+                }
+                inst.round = Some(*round);
+                inst.vr = Some(*round);
+                inst.vv = Some(matchmakers.clone());
+                fx.send(from, Msg::MetaPhase2B { round: *round });
+                return;
+            }
+            // A stopped matchmaker may be re-used as a member of the *new*
+            // set (§6 allows overlapping sets): Bootstrap resurrects it
+            // with the merged state, inactive until activation. Meta-Paxos
+            // state is untouched — instances are keyed by generation.
+            Msg::Bootstrap { log, gc_watermark, generation } => {
+                if *generation <= self.generation {
+                    // Stale bootstrap from an abandoned reconfiguration of
+                    // an earlier generation: refuse (no ack).
+                    return;
+                }
+                self.log = log.clone();
+                self.gc_watermark = *gc_watermark;
+                self.generation = *generation;
+                self.stopped = false;
+                self.active = false;
+                fx.send(from, Msg::BootstrapAck);
+                return;
+            }
+            _ => {}
+        }
+
+        if self.stopped {
+            // A stopped matchmaker answers StopA idempotently and nothing
+            // else (§6).
+            if matches!(msg, Msg::StopA) {
+                fx.send(
+                    from,
+                    Msg::StopB { log: self.log.clone(), gc_watermark: self.gc_watermark },
+                );
+            }
+            return;
+        }
+
+        match msg {
+            // Algorithm 1 + Algorithm 4.
+            Msg::MatchA { round, config } => {
+                if !self.active {
+                    return;
+                }
+                if self.below_watermark(round) {
+                    fx.send(
+                        from,
+                        Msg::MatchNack { round, blocking: self.gc_watermark.unwrap() },
+                    );
+                    return;
+                }
+                // ∃ C_j at round j ≥ i (other than an identical re-send)?
+                if let Some((&max_r, existing)) = self.log.iter().next_back() {
+                    if max_r > round || (max_r == round && *existing != config) {
+                        fx.send(from, Msg::MatchNack { round, blocking: max_r });
+                        return;
+                    }
+                }
+                // H_i = all configurations at rounds < i currently in L.
+                let prior: BTreeMap<Round, Configuration> = self
+                    .log
+                    .range(..round)
+                    .map(|(r, c)| (*r, c.clone()))
+                    .collect();
+                self.log.insert(round, config);
+                fx.send(
+                    from,
+                    Msg::MatchB { round, gc_watermark: self.gc_watermark, prior },
+                );
+            }
+
+            // Garbage collection (Algorithm 4): delete L[j] for all j < i,
+            // raise the watermark.
+            Msg::GarbageA { round } => {
+                self.log = self.log.split_off(&round);
+                if self.gc_watermark.map_or(true, |w| round > w) {
+                    self.gc_watermark = Some(round);
+                }
+                fx.send(from, Msg::GarbageB { round });
+            }
+
+            // Matchmaker reconfiguration (§6).
+            Msg::StopA => {
+                self.stopped = true;
+                fx.send(
+                    from,
+                    Msg::StopB { log: self.log.clone(), gc_watermark: self.gc_watermark },
+                );
+            }
+            Msg::MatchmakersActivated { .. } => {
+                self.active = true;
+            }
+
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+
+    fn role(&self) -> &'static str {
+        "matchmaker"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+/// Merge the logs returned by `f+1` stopped matchmakers into the initial
+/// state for the next matchmaker set (§6, Figure 7): union of the logs,
+/// with every entry below the maximum watermark removed.
+pub fn merge_stopped(
+    states: &[(BTreeMap<Round, Configuration>, Option<Round>)],
+) -> (BTreeMap<Round, Configuration>, Option<Round>) {
+    let mut merged: BTreeMap<Round, Configuration> = BTreeMap::new();
+    let mut wm: Option<Round> = None;
+    for (log, w) in states {
+        for (r, c) in log {
+            merged.insert(*r, c.clone());
+        }
+        if let Some(w) = w {
+            if wm.map_or(true, |cur| *w > cur) {
+                wm = Some(*w);
+            }
+        }
+    }
+    if let Some(w) = wm {
+        merged = merged.split_off(&w);
+    }
+    (merged, wm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(n: u64) -> Round {
+        Round { epoch: n, proposer: 0, seq: 0 }
+    }
+
+    fn cfg(id: u64) -> Configuration {
+        Configuration::majority(id, vec![10 + id as NodeId, 11 + id as NodeId, 12 + id as NodeId])
+    }
+
+    fn run(m: &mut Matchmaker, msg: Msg) -> Vec<Msg> {
+        let mut fx = Effects::new();
+        m.on_msg(0, 99, msg, &mut fx);
+        fx.msgs.into_iter().map(|(_, m)| m).collect()
+    }
+
+    #[test]
+    fn figure3_execution() {
+        // Reproduces the matchmaker execution of Figure 3.
+        let mut m = Matchmaker::new(0);
+        let out = run(&mut m, Msg::MatchA { round: r(0), config: cfg(0) });
+        assert_eq!(
+            out[0],
+            Msg::MatchB { round: r(0), gc_watermark: None, prior: BTreeMap::new() }
+        );
+        let out = run(&mut m, Msg::MatchA { round: r(2), config: cfg(2) });
+        match &out[0] {
+            Msg::MatchB { prior, .. } => {
+                assert_eq!(prior.len(), 1);
+                assert_eq!(prior[&r(0)], cfg(0));
+            }
+            other => panic!("{other:?}"),
+        }
+        let out = run(&mut m, Msg::MatchA { round: r(3), config: cfg(3) });
+        match &out[0] {
+            Msg::MatchB { prior, .. } => {
+                assert_eq!(prior.len(), 2);
+                assert!(prior.contains_key(&r(0)) && prior.contains_key(&r(2)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // MatchA(1, C1) now refused: log holds rounds ≥ 1.
+        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        assert_eq!(out[0], Msg::MatchNack { round: r(1), blocking: r(3) });
+    }
+
+    #[test]
+    fn identical_resend_is_idempotent() {
+        let mut m = Matchmaker::new(0);
+        run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        // Same round, same config: answered again (dropped MatchB recovery).
+        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        assert!(matches!(out[0], Msg::MatchB { .. }));
+        // Same round, different config: refused (rounds are single-proposer
+        // so this only happens under faulty harnesses — still must refuse).
+        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(9) });
+        assert!(matches!(out[0], Msg::MatchNack { .. }));
+    }
+
+    #[test]
+    fn garbage_collection() {
+        let mut m = Matchmaker::new(0);
+        for i in [0u64, 1, 2, 3] {
+            run(&mut m, Msg::MatchA { round: r(i), config: cfg(i) });
+        }
+        let out = run(&mut m, Msg::GarbageA { round: r(2) });
+        assert_eq!(out[0], Msg::GarbageB { round: r(2) });
+        assert_eq!(m.log.len(), 2); // rounds 2 and 3 survive
+        assert_eq!(m.gc_watermark, Some(r(2)));
+        // MatchA below the watermark is refused.
+        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        assert_eq!(out[0], Msg::MatchNack { round: r(1), blocking: r(2) });
+        // Watermark is monotone.
+        run(&mut m, Msg::GarbageA { round: r(1) });
+        assert_eq!(m.gc_watermark, Some(r(2)));
+    }
+
+    #[test]
+    fn match_b_reports_watermark() {
+        let mut m = Matchmaker::new(0);
+        run(&mut m, Msg::MatchA { round: r(0), config: cfg(0) });
+        run(&mut m, Msg::GarbageA { round: r(1) });
+        let out = run(&mut m, Msg::MatchA { round: r(5), config: cfg(5) });
+        match &out[0] {
+            Msg::MatchB { gc_watermark, prior, .. } => {
+                assert_eq!(*gc_watermark, Some(r(1)));
+                assert!(prior.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stop_and_bootstrap() {
+        let mut m = Matchmaker::new(0);
+        run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        let out = run(&mut m, Msg::StopA);
+        match &out[0] {
+            Msg::StopB { log, .. } => assert_eq!(log.len(), 1),
+            other => panic!("{other:?}"),
+        }
+        // Stopped: MatchA is silently dropped; StopA still answered.
+        assert!(run(&mut m, Msg::MatchA { round: r(2), config: cfg(2) }).is_empty());
+        assert!(matches!(run(&mut m, Msg::StopA)[0], Msg::StopB { .. }));
+
+        // A standby bootstraps, but serves only after activation.
+        let mut n = Matchmaker::new_standby(7);
+        assert!(run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) }).is_empty());
+        let mut state = BTreeMap::new();
+        state.insert(r(1), cfg(1));
+        let out = run(&mut n, Msg::Bootstrap { log: state, gc_watermark: None, generation: 1 });
+        assert_eq!(out[0], Msg::BootstrapAck);
+        assert!(run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) }).is_empty());
+        run(&mut n, Msg::MatchmakersActivated { matchmakers: vec![7] });
+        let out = run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) });
+        match &out[0] {
+            Msg::MatchB { prior, .. } => assert_eq!(prior.len(), 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn meta_paxos_acceptor_works_while_stopped() {
+        let mut m = Matchmaker::new(0);
+        run(&mut m, Msg::StopA);
+        let out = run(&mut m, Msg::MetaPhase1A { round: r(0), generation: 0 });
+        assert_eq!(out[0], Msg::MetaPhase1B { round: r(0), vr: None, vv: None });
+        let out = run(&mut m, Msg::MetaPhase2A { round: r(0), generation: 0, matchmakers: vec![4, 5, 6] });
+        assert_eq!(out[0], Msg::MetaPhase2B { round: r(0) });
+        // Higher meta round sees the vote.
+        let out = run(&mut m, Msg::MetaPhase1A { round: r(1), generation: 0 });
+        assert_eq!(
+            out[0],
+            Msg::MetaPhase1B { round: r(1), vr: Some(r(0)), vv: Some(vec![4, 5, 6]) }
+        );
+        // Stale meta messages ignored.
+        assert!(run(&mut m, Msg::MetaPhase1A { round: r(0), generation: 0 }).is_empty());
+    }
+
+    #[test]
+    fn merge_stopped_logs_figure7() {
+        // Figure 7: union of logs, entries below the max watermark dropped.
+        let s0 = (
+            [(r(1), cfg(1)), (r(3), cfg(3))].into_iter().collect(),
+            Some(r(1)),
+        );
+        let s1 = (
+            [(r(2), cfg(2))].into_iter().collect(),
+            Some(r(2)),
+        );
+        let s2 = ([(r(0), cfg(0)), (r(4), cfg(4))].into_iter().collect(), None);
+        let (merged, wm) = merge_stopped(&[s0, s1, s2]);
+        assert_eq!(wm, Some(r(2)));
+        let rounds: Vec<Round> = merged.keys().copied().collect();
+        assert_eq!(rounds, vec![r(2), r(3), r(4)]);
+    }
+}

@@ -1,0 +1,31 @@
+//! Protocol roles, each a sans-io [`crate::node::Node`].
+//!
+//! * [`acceptor`] — classic (Flexible) Paxos acceptor, per-slot votes.
+//! * [`matchmaker`] — the paper's contribution: configuration log, GC,
+//!   stop/bootstrap reconfiguration, meta-Paxos acceptor duty (§3, §5, §6).
+//! * [`leader`] — Matchmaker MultiPaxos leader: matchmaking, bulk Phase 1,
+//!   steady-state Phase 2, reconfiguration with Phase-1 bypassing,
+//!   GC driving, thriftiness, heartbeats (§4, §5).
+//! * [`proposer`] — single-decree Matchmaker Paxos (Algorithm 3) and the
+//!   Matchmaker Fast Paxos variant (§7, Algorithm 5).
+//! * [`replica`] — state-machine replica: executes the chosen log in prefix
+//!   order, replies to clients, acks prefixes for GC Scenario 3.
+//! * [`client`] — closed-loop workload client with latency recording.
+//! * [`horizontal`] — baseline: MultiPaxos with horizontal (log-entry)
+//!   reconfiguration and an α window (§7.2).
+
+pub mod acceptor;
+pub mod client;
+pub mod horizontal;
+pub mod leader;
+pub mod matchmaker;
+pub mod proposer;
+pub mod replica;
+
+pub use acceptor::Acceptor;
+pub use client::Client;
+pub use horizontal::HorizontalLeader;
+pub use leader::Leader;
+pub use matchmaker::Matchmaker;
+pub use proposer::{FastProposer, Proposer};
+pub use replica::Replica;

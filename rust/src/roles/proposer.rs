@@ -1,0 +1,640 @@
+//! Single-decree proposers: Matchmaker Paxos (Algorithm 3) and the
+//! Matchmaker Fast Paxos variant of §7 (Algorithm 5).
+//!
+//! These are the paper's consensus-layer protocols, kept separate from the
+//! MultiPaxos [`super::leader`] so the theory sections (§3, §7) have a
+//! direct, testable counterpart. [`Proposer`] implements Optimization 4
+//! (round pruning): a vote in round `vr` removes the obligation to
+//! intersect configurations in rounds `< vr`.
+
+use crate::config::Configuration;
+use crate::msg::{Msg, Value};
+use crate::node::{Announce, Effects, Node, Timer};
+use crate::round::Round;
+use crate::{NodeId, Time};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Phases of a single-decree proposal.
+#[derive(Debug)]
+enum Phase {
+    Idle,
+    Matchmaking {
+        acks: BTreeMap<NodeId, (Option<Round>, BTreeMap<Round, Configuration>)>,
+    },
+    Phase1 {
+        prior: BTreeMap<Round, Configuration>,
+        acked: BTreeSet<NodeId>,
+        /// Largest `(vr, vv)` pair seen.
+        best: Option<(Round, Value)>,
+        /// Optimization 4: configurations at rounds `< max_vr` are pruned
+        /// from the intersection obligation.
+        max_vr: Option<Round>,
+    },
+    Phase2 {
+        value: Value,
+        acks: BTreeSet<NodeId>,
+    },
+    Done,
+}
+
+/// A single-decree Matchmaker Paxos proposer (Algorithm 3).
+pub struct Proposer {
+    pub id: NodeId,
+    pub f: usize,
+    pub matchmakers: Vec<NodeId>,
+    /// Whether Optimization 4 (round pruning) is enabled.
+    pub round_pruning: bool,
+    round: Round,
+    config: Configuration,
+    /// The client value to propose (may be displaced by a Phase-1 find).
+    value: Option<Value>,
+    phase: Phase,
+    /// Phase-1-bypass credit (Optimization 2): set when a completed round
+    /// established `k = -1` without proposing, or proposed `v`; the next
+    /// owned round may skip Phase 1 (and must re-propose `v` if set).
+    bypass_credit: Option<Option<Value>>,
+    /// The chosen value once known.
+    pub chosen: Option<Value>,
+}
+
+impl Proposer {
+    pub fn new(id: NodeId, f: usize, matchmakers: Vec<NodeId>, config: Configuration) -> Proposer {
+        Proposer {
+            id,
+            f,
+            matchmakers,
+            round_pruning: true,
+            round: Round { epoch: 0, proposer: id, seq: u64::MAX }, // pre-first
+            config,
+            value: None,
+            phase: Phase::Idle,
+            bypass_credit: None,
+            chosen: None,
+        }
+    }
+
+    fn advance_round(&mut self) {
+        self.round = if self.round.seq == u64::MAX {
+            Round::first(0, self.id)
+        } else {
+            self.round.next()
+        };
+    }
+
+    /// Propose `value` using `config` for this round (Algorithm 3 lines
+    /// 1–5). Matchmaking phase starts immediately.
+    pub fn propose(&mut self, value: Value, config: Configuration, _now: Time, fx: &mut Effects) {
+        self.advance_round();
+        self.config = config;
+        self.value = Some(value);
+        self.phase = Phase::Matchmaking { acks: BTreeMap::new() };
+        fx.broadcast(
+            &self.matchmakers.clone(),
+            &Msg::MatchA { round: self.round, config: self.config.clone() },
+        );
+    }
+
+    /// Re-run with a fresh round (dueling-proposer recovery). The caller's
+    /// value is retained.
+    pub fn retry(&mut self, _now: Time, fx: &mut Effects) {
+        let value = self.value.clone().expect("retry without a proposal");
+        let config = self.config.clone();
+        self.propose(value, config, _now, fx);
+    }
+
+    fn finish_phase1(&mut self, fx: &mut Effects) {
+        let Phase::Phase1 { best, .. } = &self.phase else {
+            return;
+        };
+        // Algorithm 3 lines 10–12: k ≠ -1 → adopt the vote value.
+        let value = match best {
+            Some((_, vv)) => {
+                self.bypass_credit = Some(Some(vv.clone()));
+                vv.clone()
+            }
+            None => {
+                // k = -1: free to propose our own value; record the
+                // Optimization-2 credit for the next owned round.
+                self.bypass_credit = Some(None);
+                self.value.clone().expect("no value to propose")
+            }
+        };
+        self.phase = Phase::Phase2 { value: value.clone(), acks: BTreeSet::new() };
+        let msg = Msg::Phase2A { round: self.round, slot: 0, value };
+        fx.broadcast(&self.config.acceptors.clone(), &msg);
+    }
+}
+
+impl Node for Proposer {
+    fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::MatchB { round, gc_watermark, prior } => {
+                if round != self.round {
+                    return;
+                }
+                let Phase::Matchmaking { acks } = &mut self.phase else {
+                    return;
+                };
+                acks.insert(from, (gc_watermark, prior));
+                if acks.len() < self.f + 1 {
+                    return;
+                }
+                // H_i = union of priors, pruned below the max watermark.
+                let mut h: BTreeMap<Round, Configuration> = BTreeMap::new();
+                let mut wm: Option<Round> = None;
+                for (w, prior) in acks.values() {
+                    for (r, c) in prior {
+                        h.insert(*r, c.clone());
+                    }
+                    if let Some(w) = w {
+                        if wm.map_or(true, |cur| *w > cur) {
+                            wm = Some(*w);
+                        }
+                    }
+                }
+                if let Some(w) = wm {
+                    h = h.split_off(&w);
+                }
+                h.remove(&self.round);
+                self.phase = Phase::Phase1 {
+                    prior: h,
+                    acked: BTreeSet::new(),
+                    best: None,
+                    max_vr: None,
+                };
+                // Phase 1 with every prior configuration (skip if none).
+                let Phase::Phase1 { prior, .. } = &self.phase else {
+                    unreachable!()
+                };
+                if prior.is_empty() {
+                    self.finish_phase1(fx);
+                } else {
+                    let mut targets: BTreeSet<NodeId> = BTreeSet::new();
+                    for c in prior.values() {
+                        targets.extend(c.acceptors.iter().copied());
+                    }
+                    for t in targets {
+                        fx.send(t, Msg::Phase1A { round: self.round, from_slot: 0 });
+                    }
+                }
+            }
+
+            Msg::Phase1B { round, votes, .. } => {
+                if round != self.round {
+                    return;
+                }
+                let pruning = self.round_pruning;
+                let Phase::Phase1 { prior, acked, best, max_vr } = &mut self.phase else {
+                    return;
+                };
+                acked.insert(from);
+                for v in votes.iter().filter(|v| v.slot == 0) {
+                    if best.as_ref().map_or(true, |(br, _)| v.vr > *br) {
+                        *best = Some((v.vr, v.vv.clone()));
+                    }
+                    if max_vr.map_or(true, |m| v.vr > m) {
+                        *max_vr = Some(v.vr);
+                    }
+                }
+                // Optimization 4: intersect only configurations at rounds
+                // ≥ max_vr (earlier rounds cannot change the outcome).
+                let needed: Vec<&Configuration> = prior
+                    .iter()
+                    .filter(|(r, _)| !pruning || max_vr.map_or(true, |m| **r >= m))
+                    .map(|(_, c)| c)
+                    .collect();
+                if needed.iter().all(|c| c.is_p1_quorum(acked)) {
+                    self.finish_phase1(fx);
+                }
+            }
+
+            Msg::Phase2B { round, slot: 0 } => {
+                if round != self.round {
+                    return;
+                }
+                let Phase::Phase2 { value, acks } = &mut self.phase else {
+                    return;
+                };
+                acks.insert(from);
+                if self.config.is_p2_quorum(acks) {
+                    let value = value.clone();
+                    self.chosen = Some(value.clone());
+                    fx.announce(Announce::Chosen { slot: 0, round, value });
+                    self.phase = Phase::Done;
+                }
+            }
+
+            Msg::MatchNack { .. } | Msg::Nack { .. } => {
+                // Dueling proposers: the harness decides when to retry.
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+
+    fn role(&self) -> &'static str {
+        "proposer"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ===========================================================================
+// Matchmaker Fast Paxos (§7, Algorithm 5)
+// ===========================================================================
+
+/// Coordinator states for the fast variant.
+#[derive(Debug)]
+enum FastPhase {
+    Idle,
+    Matchmaking {
+        acks: BTreeMap<NodeId, (Option<Round>, BTreeMap<Round, Configuration>)>,
+    },
+    Phase1 {
+        prior: BTreeMap<Round, Configuration>,
+        acked: BTreeSet<NodeId>,
+        /// All votes seen: acceptor → (vr, vv). Fast value selection needs
+        /// the *set* of values at the max round, not just one.
+        votes: BTreeMap<NodeId, (Round, Value)>,
+    },
+    /// Fast round open: clients propose directly to the acceptors; we
+    /// collect their votes here.
+    FastListen { votes: BTreeMap<NodeId, Value> },
+    /// Classic recovery round after a conflict.
+    Phase2 { value: Value, acks: BTreeSet<NodeId> },
+    Done,
+}
+
+/// The Matchmaker Fast Paxos coordinator (§7): deploys `f+1` acceptors
+/// with singleton P1 quorums and a single unanimous P2 quorum — the first
+/// protocol to meet the Fast Paxos quorum-size lower bound.
+pub struct FastProposer {
+    pub id: NodeId,
+    pub f: usize,
+    pub matchmakers: Vec<NodeId>,
+    round: Round,
+    config: Configuration,
+    phase: FastPhase,
+    /// Default value proposed on conflicted recovery ("any", Algorithm 5
+    /// lines 11/15) — deterministic: the lexicographically first conflicting
+    /// value.
+    pub chosen: Option<Value>,
+}
+
+impl FastProposer {
+    /// `config` must use [`crate::quorum::QuorumSpec::FastUnanimous`] over
+    /// `f+1` acceptors.
+    pub fn new(id: NodeId, f: usize, matchmakers: Vec<NodeId>, config: Configuration) -> FastProposer {
+        FastProposer {
+            id,
+            f,
+            matchmakers,
+            round: Round { epoch: 0, proposer: id, seq: u64::MAX },
+            config,
+            phase: FastPhase::Idle,
+            chosen: None,
+        }
+    }
+
+    /// Open a fast round (Algorithm 5 lines 1–3): matchmaking, then Phase 1
+    /// with prior configurations, then — if no value constrains us — the
+    /// fast path where clients propose directly to the acceptors.
+    pub fn open_round(&mut self, _now: Time, fx: &mut Effects) {
+        self.round = if self.round.seq == u64::MAX {
+            Round::first(0, self.id)
+        } else {
+            self.round.next()
+        };
+        self.phase = FastPhase::Matchmaking { acks: BTreeMap::new() };
+        fx.broadcast(
+            &self.matchmakers.clone(),
+            &Msg::MatchA { round: self.round, config: self.config.clone() },
+        );
+    }
+
+    /// The current round, so clients know where to send `FastPropose`.
+    pub fn fast_round(&self) -> Option<Round> {
+        matches!(self.phase, FastPhase::FastListen { .. }).then_some(self.round)
+    }
+
+    fn value_selection(&mut self, fx: &mut Effects) {
+        // Algorithm 5 lines 8–15 over the votes collected in Phase 1.
+        let FastPhase::Phase1 { votes, .. } = &self.phase else {
+            return;
+        };
+        let k = votes.values().map(|(vr, _)| *vr).max();
+        match k {
+            None => {
+                // k = -1: open the fast path (line 11 proposes "any" — in
+                // the fast variant "any" means letting clients race).
+                self.phase = FastPhase::FastListen { votes: BTreeMap::new() };
+            }
+            Some(k) => {
+                let mut vals: Vec<&Value> =
+                    votes.values().filter(|(vr, _)| *vr == k).map(|(_, v)| v).collect();
+                vals.sort_by_key(|v| crate::codec::Wire::encode(*v));
+                vals.dedup();
+                // |V| = 1 → propose v; else propose "any" (deterministically
+                // the first value).
+                let value = (*vals[0]).clone();
+                self.phase = FastPhase::Phase2 { value: value.clone(), acks: BTreeSet::new() };
+                fx.broadcast(
+                    &self.config.acceptors.clone(),
+                    &Msg::Phase2A { round: self.round, slot: 0, value },
+                );
+            }
+        }
+    }
+}
+
+impl Node for FastProposer {
+    fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::MatchB { round, gc_watermark, prior } => {
+                if round != self.round {
+                    return;
+                }
+                let FastPhase::Matchmaking { acks } = &mut self.phase else {
+                    return;
+                };
+                acks.insert(from, (gc_watermark, prior));
+                if acks.len() < self.f + 1 {
+                    return;
+                }
+                let mut h: BTreeMap<Round, Configuration> = BTreeMap::new();
+                let mut wm: Option<Round> = None;
+                for (w, prior) in acks.values() {
+                    for (r, c) in prior {
+                        h.insert(*r, c.clone());
+                    }
+                    if let Some(w) = w {
+                        if wm.map_or(true, |cur| *w > cur) {
+                            wm = Some(*w);
+                        }
+                    }
+                }
+                if let Some(w) = wm {
+                    h = h.split_off(&w);
+                }
+                h.remove(&self.round);
+                if h.is_empty() {
+                    self.phase = FastPhase::Phase1 {
+                        prior: h,
+                        acked: BTreeSet::new(),
+                        votes: BTreeMap::new(),
+                    };
+                    self.value_selection(fx);
+                } else {
+                    let mut targets: BTreeSet<NodeId> = BTreeSet::new();
+                    for c in h.values() {
+                        targets.extend(c.acceptors.iter().copied());
+                    }
+                    self.phase = FastPhase::Phase1 {
+                        prior: h,
+                        acked: BTreeSet::new(),
+                        votes: BTreeMap::new(),
+                    };
+                    for t in targets {
+                        fx.send(t, Msg::Phase1A { round: self.round, from_slot: 0 });
+                    }
+                }
+            }
+
+            Msg::Phase1B { round, votes: vs, .. } => {
+                if round != self.round {
+                    return;
+                }
+                let FastPhase::Phase1 { prior, acked, votes } = &mut self.phase else {
+                    return;
+                };
+                acked.insert(from);
+                for v in vs.iter().filter(|v| v.slot == 0) {
+                    votes.insert(from, (v.vr, v.vv.clone()));
+                }
+                if prior.values().all(|c| c.is_p1_quorum(acked)) {
+                    self.value_selection(fx);
+                }
+            }
+
+            // Fast-round votes stream in from the acceptors.
+            Msg::FastPhase2B { round, value } => {
+                if round != self.round {
+                    return;
+                }
+                let n_acceptors = self.config.acceptors.len();
+                let FastPhase::FastListen { votes } = &mut self.phase else {
+                    return;
+                };
+                votes.insert(from, value);
+                if votes.len() < n_acceptors {
+                    return;
+                }
+                // Unanimous P2 quorum: all acceptors voted. Same value →
+                // chosen on the fast path; conflict → coordinated recovery
+                // in the next round (classic path; Phase 1 sees the fast
+                // votes and Algorithm 5's selection rule applies).
+                let first = votes.values().next().unwrap().clone();
+                if votes.values().all(|v| *v == first) {
+                    self.chosen = Some(first.clone());
+                    fx.announce(Announce::FastChosen { round, value: first.clone() });
+                    fx.announce(Announce::Chosen { slot: 0, round, value: first });
+                    self.phase = FastPhase::Done;
+                } else {
+                    self.open_round(now, fx);
+                }
+            }
+
+            Msg::Phase2B { round, slot: 0 } => {
+                if round != self.round {
+                    return;
+                }
+                let FastPhase::Phase2 { value, acks } = &mut self.phase else {
+                    return;
+                };
+                acks.insert(from);
+                if self.config.is_p2_quorum(acks) {
+                    let value = value.clone();
+                    self.chosen = Some(value.clone());
+                    fx.announce(Announce::Chosen { slot: 0, round, value });
+                    self.phase = FastPhase::Done;
+                }
+            }
+
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+
+    fn role(&self) -> &'static str {
+        "fast-proposer"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Command;
+    use crate::roles::{Acceptor, Matchmaker};
+    use std::collections::VecDeque;
+
+    /// Message pump over proposer + matchmakers + a pool of acceptors.
+    struct Net {
+        mms: Vec<Matchmaker>,
+        accs: Vec<Acceptor>,
+        announces: Vec<Announce>,
+    }
+
+    impl Net {
+        fn new(n_mm: usize, n_acc: usize, fast: bool) -> Net {
+            Net {
+                mms: (1..=n_mm as NodeId).map(Matchmaker::new).collect(),
+                accs: (10..10 + n_acc as NodeId)
+                    .map(|id| if fast { Acceptor::new_fast(id) } else { Acceptor::new(id) })
+                    .collect(),
+                announces: Vec::new(),
+            }
+        }
+
+        fn pump<P: Node>(&mut self, p: &mut P, pid: NodeId, fx: Effects) {
+            let mut q: VecDeque<(NodeId, NodeId, Msg)> = VecDeque::new();
+            self.announces.extend(fx.announces);
+            for (to, m) in fx.msgs {
+                q.push_back((pid, to, m));
+            }
+            while let Some((from, to, msg)) = q.pop_front() {
+                let mut fx = Effects::new();
+                if to == pid {
+                    p.on_msg(0, from, msg, &mut fx);
+                } else if (1..=self.mms.len() as NodeId).contains(&to) {
+                    self.mms[(to - 1) as usize].on_msg(0, from, msg, &mut fx);
+                } else if to >= 10 && to < 10 + self.accs.len() as NodeId {
+                    self.accs[(to - 10) as usize].on_msg(0, from, msg, &mut fx);
+                }
+                self.announces.extend(fx.announces);
+                for (dst, m) in fx.msgs {
+                    q.push_back((to, dst, m));
+                }
+            }
+        }
+    }
+
+    fn val(tag: u8) -> Value {
+        Value::Cmd(Command { client: 100 + tag as NodeId, seq: 1, payload: vec![tag] })
+    }
+
+    #[test]
+    fn single_decree_chooses_value() {
+        let cfg = Configuration::majority(0, vec![10, 11, 12]);
+        let mut net = Net::new(3, 3, false);
+        let mut p = Proposer::new(0, 1, vec![1, 2, 3], cfg.clone());
+        let mut fx = Effects::new();
+        p.propose(val(1), cfg, 0, &mut fx);
+        net.pump(&mut p, 0, fx);
+        assert_eq!(p.chosen, Some(val(1)));
+    }
+
+    #[test]
+    fn second_proposer_learns_first_value() {
+        // p1 chooses x with config A; p2 proposes y with a different
+        // config B but must learn and re-propose x (safety across
+        // reconfiguration).
+        let cfg_a = Configuration::majority(0, vec![10, 11, 12]);
+        let cfg_b = Configuration::majority(1, vec![13, 14, 15]);
+        let mut net = Net::new(3, 6, false);
+
+        let mut p1 = Proposer::new(0, 1, vec![1, 2, 3], cfg_a.clone());
+        let mut fx = Effects::new();
+        p1.propose(val(1), cfg_a, 0, &mut fx);
+        net.pump(&mut p1, 0, fx);
+        assert_eq!(p1.chosen, Some(val(1)));
+
+        let mut p2 = Proposer::new(5, 1, vec![1, 2, 3], cfg_b.clone());
+        let mut fx = Effects::new();
+        p2.propose(val(2), cfg_b, 0, &mut fx);
+        net.pump(&mut p2, 5, fx);
+        // p2 must choose val(1), not its own val(2).
+        assert_eq!(p2.chosen, Some(val(1)));
+    }
+
+    #[test]
+    fn round_pruning_reduces_obligations() {
+        let cfg = Configuration::majority(0, vec![10, 11, 12]);
+        let mut p = Proposer::new(0, 1, vec![1, 2, 3], cfg);
+        assert!(p.round_pruning);
+        p.round_pruning = false; // both settings must choose identically
+        let cfg = Configuration::majority(0, vec![10, 11, 12]);
+        let mut net = Net::new(3, 3, false);
+        let mut fx = Effects::new();
+        p.propose(val(3), cfg, 0, &mut fx);
+        net.pump(&mut p, 0, fx);
+        assert_eq!(p.chosen, Some(val(3)));
+    }
+
+    #[test]
+    fn fast_path_no_conflict() {
+        // f = 1 → f+1 = 2 acceptors, unanimous P2, singleton P1 (§7).
+        let cfg = Configuration {
+            id: 0,
+            acceptors: vec![10, 11],
+            quorum: crate::quorum::QuorumSpec::FastUnanimous,
+        };
+        let mut net = Net::new(3, 2, true);
+        let mut p = FastProposer::new(0, 1, vec![1, 2, 3], cfg);
+        let mut fx = Effects::new();
+        p.open_round(0, &mut fx);
+        net.pump(&mut p, 0, fx);
+        let round = p.fast_round().expect("fast round open");
+
+        // One client proposes to both acceptors: chosen in one round trip.
+        let mut fx = Effects::new();
+        fx.send(10, Msg::FastPropose { round, value: val(7) });
+        fx.send(11, Msg::FastPropose { round, value: val(7) });
+        net.pump(&mut p, 0, fx);
+        assert_eq!(p.chosen, Some(val(7)));
+        assert!(net.announces.iter().any(|a| matches!(a, Announce::FastChosen { .. })));
+    }
+
+    #[test]
+    fn fast_path_conflict_recovers() {
+        let cfg = Configuration {
+            id: 0,
+            acceptors: vec![10, 11],
+            quorum: crate::quorum::QuorumSpec::FastUnanimous,
+        };
+        let mut net = Net::new(3, 2, true);
+        let mut p = FastProposer::new(0, 1, vec![1, 2, 3], cfg);
+        let mut fx = Effects::new();
+        p.open_round(0, &mut fx);
+        net.pump(&mut p, 0, fx);
+        let round = p.fast_round().unwrap();
+
+        // Two clients race with different values: acceptor 10 sees val(1)
+        // first, acceptor 11 sees val(2) first → conflict → coordinated
+        // recovery must still choose exactly one of them.
+        let mut fx = Effects::new();
+        fx.send(10, Msg::FastPropose { round, value: val(1) });
+        fx.send(11, Msg::FastPropose { round, value: val(2) });
+        net.pump(&mut p, 0, fx);
+        let chosen = p.chosen.clone().expect("recovery must choose");
+        assert!(chosen == val(1) || chosen == val(2));
+        // Exactly one Chosen announce (no divergence).
+        let chosen_vals: Vec<&Value> = net
+            .announces
+            .iter()
+            .filter_map(|a| match a {
+                Announce::Chosen { value, .. } => Some(value),
+                _ => None,
+            })
+            .collect();
+        assert!(!chosen_vals.is_empty());
+        assert!(chosen_vals.iter().all(|v| **v == chosen));
+    }
+}

@@ -1,0 +1,222 @@
+//! State machine replicas (§4.1, §5.3).
+//!
+//! Replicas insert chosen commands into their logs, execute the log in
+//! prefix order against a pluggable [`crate::statemachine::StateMachine`],
+//! and send execution results back to clients. They acknowledge their
+//! contiguous stored prefix to the leader (`ReplicaAck`), which drives GC
+//! Scenario 3 (a prefix stored on `f+1` replicas may be garbage
+//! collected), and they serve `ReadPrefix` so a newly elected leader can
+//! learn the chosen prefix (§4.1: "by communicating with the replicas").
+
+use crate::msg::{Msg, Value};
+use crate::node::{Announce, Effects, Node, Timer};
+use crate::statemachine::StateMachine;
+use crate::{NodeId, Slot, Time};
+use std::collections::{BTreeMap, HashMap};
+
+/// A state machine replica.
+pub struct Replica {
+    pub id: NodeId,
+    /// Chosen log.
+    pub log: BTreeMap<Slot, Value>,
+    /// Next slot to execute; slots `< exec_watermark` are executed.
+    pub exec_watermark: Slot,
+    /// The application state machine.
+    pub sm: Box<dyn StateMachine>,
+    /// Deduplication: highest executed seq + cached result per client, so
+    /// retried commands return the original result instead of re-executing.
+    pub client_table: HashMap<NodeId, (u64, Vec<u8>)>,
+    /// Number of commands executed (metrics).
+    pub executed: u64,
+    /// Emit an `Announce::Executed` per slot (off by default: it is 3
+    /// allocations per command across a 2f+1 replica group on the hottest
+    /// path; the TCP integration test and debug tooling enable it).
+    pub announce_execs: bool,
+}
+
+impl Replica {
+    pub fn new(id: NodeId, sm: Box<dyn StateMachine>) -> Replica {
+        Replica {
+            id,
+            log: BTreeMap::new(),
+            exec_watermark: 0,
+            sm,
+            client_table: HashMap::new(),
+            executed: 0,
+            announce_execs: false,
+        }
+    }
+
+    /// Execute every contiguous chosen slot, reply to clients, and ack the
+    /// new prefix to the leader that informed us.
+    fn execute_ready(&mut self, leader: NodeId, fx: &mut Effects) {
+        let before = self.exec_watermark;
+        while let Some(value) = self.log.get(&self.exec_watermark) {
+            match value {
+                Value::Cmd(cmd) => {
+                    let dup = self
+                        .client_table
+                        .get(&cmd.client)
+                        .map_or(false, |(seq, _)| *seq >= cmd.seq);
+                    if dup {
+                        // Re-chosen retry of an executed command: re-reply
+                        // with the cached result, do not re-execute.
+                        if let Some((seq, result)) = self.client_table.get(&cmd.client) {
+                            if *seq == cmd.seq {
+                                fx.send(
+                                    cmd.client,
+                                    Msg::ClientReply { seq: *seq, result: result.clone() },
+                                );
+                            }
+                        }
+                    } else {
+                        let result = self.sm.apply(&cmd.payload);
+                        self.executed += 1;
+                        self.client_table
+                            .insert(cmd.client, (cmd.seq, result.clone()));
+                        fx.send(cmd.client, Msg::ClientReply { seq: cmd.seq, result });
+                    }
+                }
+                Value::Noop | Value::Reconfig(_) => {}
+            }
+            if self.announce_execs {
+                fx.announce(Announce::Executed { slot: self.exec_watermark, replica: self.id });
+            }
+            self.exec_watermark += 1;
+        }
+        if self.exec_watermark != before {
+            fx.send(leader, Msg::ReplicaAck { upto: self.exec_watermark });
+        }
+    }
+}
+
+impl Node for Replica {
+    fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::Chosen { slot, value } => {
+                // Idempotent insert: chosen values never conflict (safety),
+                // so a duplicate insert is a no-op.
+                self.log.entry(slot).or_insert(value);
+                let before = self.exec_watermark;
+                self.execute_ready(from, fx);
+                if self.exec_watermark == before && slot > self.exec_watermark {
+                    // We have a hole: ack our (unchanged) watermark so the
+                    // leader can re-send the missing entries.
+                    fx.send(from, Msg::ReplicaAck { upto: self.exec_watermark });
+                }
+            }
+            // A (new) leader asks for the chosen prefix (§4.1). The
+            // requested start may exceed our watermark (the leader already
+            // knows more than us): clamp the range.
+            Msg::ReadPrefix { from: from_slot } => {
+                let start = from_slot.min(self.exec_watermark);
+                let entries: Vec<(Slot, Value)> = self
+                    .log
+                    .range(start..self.exec_watermark)
+                    .map(|(s, v)| (*s, v.clone()))
+                    .collect();
+                fx.send(from, Msg::PrefixResp { entries, upto: self.exec_watermark });
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+
+    fn role(&self) -> &'static str {
+        "replica"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Command;
+    use crate::statemachine::{KvStore, Noop};
+
+    fn cmd(client: NodeId, seq: u64, payload: &[u8]) -> Value {
+        Value::Cmd(Command { client, seq, payload: payload.to_vec() })
+    }
+
+    fn deliver(r: &mut Replica, from: NodeId, m: Msg) -> Effects {
+        let mut fx = Effects::new();
+        r.on_msg(0, from, m, &mut fx);
+        fx
+    }
+
+    #[test]
+    fn executes_in_prefix_order() {
+        let mut r = Replica::new(1, Box::new(Noop));
+        // Slot 1 arrives first: no execution (hole at 0).
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 1, value: cmd(9, 0, b"b") });
+        assert_eq!(r.exec_watermark, 0);
+        assert!(fx.msgs.iter().all(|(_, m)| !matches!(m, Msg::ClientReply { .. })));
+        // Slot 0 arrives: both execute, in order.
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(8, 0, b"a") });
+        assert_eq!(r.exec_watermark, 2);
+        let replies: Vec<&NodeId> = fx
+            .msgs
+            .iter()
+            .filter(|(_, m)| matches!(m, Msg::ClientReply { .. }))
+            .map(|(to, _)| to)
+            .collect();
+        assert_eq!(replies, vec![&8, &9]);
+        // Acked the new prefix to the leader.
+        assert!(fx.msgs.contains(&(0, Msg::ReplicaAck { upto: 2 })));
+    }
+
+    #[test]
+    fn noop_advances_without_reply() {
+        let mut r = Replica::new(1, Box::new(Noop));
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 0, value: Value::Noop });
+        assert_eq!(r.exec_watermark, 1);
+        assert!(fx.msgs.iter().all(|(_, m)| !matches!(m, Msg::ClientReply { .. })));
+    }
+
+    #[test]
+    fn duplicate_command_not_reexecuted() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        // set k=1
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(7, 0, b"skv") });
+        assert_eq!(r.executed, 1);
+        // Same (client, seq) re-chosen at a later slot (leader retry path):
+        // executed once only, but the client still gets a reply.
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 1, value: cmd(7, 0, b"skv") });
+        assert_eq!(r.executed, 1);
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 7 && matches!(m, Msg::ClientReply { seq: 0, .. })));
+    }
+
+    #[test]
+    fn read_prefix() {
+        let mut r = Replica::new(1, Box::new(Noop));
+        for s in 0..4 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: Value::Noop });
+        }
+        let fx = deliver(&mut r, 5, Msg::ReadPrefix { from: 1 });
+        match &fx.msgs[0].1 {
+            Msg::PrefixResp { entries, upto } => {
+                assert_eq!(*upto, 4);
+                assert_eq!(entries.len(), 3);
+                assert_eq!(entries[0].0, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn chosen_is_idempotent() {
+        let mut r = Replica::new(1, Box::new(Noop));
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(7, 0, b"x") });
+        let executed = r.executed;
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(7, 0, b"x") });
+        assert_eq!(r.executed, executed);
+        assert_eq!(r.exec_watermark, 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Rounds (a.k.a. ballots).
+//!
+//! §3.4 of the paper (Optimization 2) constructs the set of rounds as
+//! lexicographically ordered triples `(r, id, s)` where `r` ("epoch") and
+//! `s` ("seq") are integers and `id` is a proposer id. A proposer owns every
+//! round containing its id, and — crucially for Phase 1 Bypassing — the
+//! proposer of `(r, id, s)` also owns the *next* round `(r, id, s+1)`.
+//!
+//! Leader changes bump the epoch `r`; in-leader reconfigurations bump the
+//! sequence `s`.
+
+use crate::NodeId;
+
+/// A Paxos round `(epoch, proposer, seq)`, ordered lexicographically.
+///
+/// The paper's "round `-1`" (no round) is represented as `Option<Round>`
+/// (`None`) throughout the codebase.
+#[derive(
+    Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug,
+)]
+pub struct Round {
+    /// Leader-election epoch. Bumped when a new leader takes over.
+    pub epoch: u64,
+    /// The proposer that owns this round.
+    pub proposer: NodeId,
+    /// Reconfiguration sequence within an epoch. Bumped by the owning
+    /// proposer to install a new configuration (§4.3).
+    pub seq: u64,
+}
+
+impl Round {
+    /// The first round owned by `proposer` in `epoch`.
+    pub fn first(epoch: u64, proposer: NodeId) -> Round {
+        Round {
+            epoch,
+            proposer,
+            seq: 0,
+        }
+    }
+
+    /// The next round owned by the *same* proposer (`s → s+1`). Phase 1
+    /// Bypassing (Optimization 2) relies on this succession: there is no
+    /// round between `self` and `self.next()`.
+    pub fn next(&self) -> Round {
+        Round {
+            epoch: self.epoch,
+            proposer: self.proposer,
+            seq: self.seq + 1,
+        }
+    }
+
+    /// The first round of the next epoch, owned by `proposer`. Used by a
+    /// newly elected leader to guarantee its round exceeds every round of
+    /// the previous leader regardless of how many reconfigurations (`seq`
+    /// bumps) that leader performed.
+    pub fn next_epoch(&self, proposer: NodeId) -> Round {
+        Round {
+            epoch: self.epoch + 1,
+            proposer,
+            seq: 0,
+        }
+    }
+
+    /// True iff `next` is the immediate successor of `self` under the same
+    /// owner — the precondition for Phase 1 Bypassing.
+    pub fn is_immediate_successor(&self, next: &Round) -> bool {
+        self.epoch == next.epoch && self.proposer == next.proposer && next.seq == self.seq + 1
+    }
+}
+
+impl std::fmt::Display for Round {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{},{})", self.epoch, self.proposer, self.seq)
+    }
+}
+
+/// Compare an `Option<Round>` ("-1 means none") with the paper's semantics:
+/// `None < Some(r)` for every r.
+pub fn opt_round_lt(a: Option<Round>, b: Option<Round>) -> bool {
+    match (a, b) {
+        (None, Some(_)) => true,
+        (Some(x), Some(y)) => x < y,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicographic_order() {
+        // (0,a,0) < (0,a,1) < (0,b,0) < (1,a,0) for a < b — mirrors the
+        // ordering table in §3.4.
+        let a = 1;
+        let b = 2;
+        assert!(Round::first(0, a) < Round::first(0, a).next());
+        assert!(Round::first(0, a).next() < Round::first(0, b));
+        assert!(Round::first(0, b) < Round::first(1, a));
+        assert!(Round { epoch: 0, proposer: a, seq: 99 } < Round::first(0, b));
+    }
+
+    #[test]
+    fn successor_relation() {
+        let r = Round::first(3, 7);
+        assert!(r.is_immediate_successor(&r.next()));
+        assert!(!r.is_immediate_successor(&r.next().next()));
+        assert!(!r.is_immediate_successor(&r.next_epoch(7)));
+        assert!(!r.is_immediate_successor(&r));
+    }
+
+    #[test]
+    fn next_epoch_dominates_any_seq() {
+        let r = Round { epoch: 5, proposer: 1, seq: 10_000 };
+        assert!(r < r.next_epoch(0));
+    }
+
+    #[test]
+    fn opt_round_ordering() {
+        let r = Round::first(0, 1);
+        assert!(opt_round_lt(None, Some(r)));
+        assert!(!opt_round_lt(Some(r), None));
+        assert!(!opt_round_lt(None, None));
+        assert!(opt_round_lt(Some(r), Some(r.next())));
+        assert!(!opt_round_lt(Some(r), Some(r)));
+    }
+}

@@ -1,0 +1,268 @@
+//! Replicated state machines.
+//!
+//! The paper's evaluation uses a one-byte no-op state machine ([`Noop`]);
+//! we additionally provide a key-value store, a register, a counter, and —
+//! proving the three-layer stack — [`tensor::TensorStateMachine`], which
+//! executes batched commands through the AOT-compiled JAX/Pallas program
+//! loaded via PJRT ([`crate::runtime`]).
+
+pub mod tensor;
+
+pub use tensor::TensorStateMachine;
+
+/// A deterministic application state machine. Replicas apply chosen
+/// commands in log order; determinism keeps replicas in sync.
+pub trait StateMachine: Send {
+    /// Apply one command, returning the result sent back to the client.
+    fn apply(&mut self, payload: &[u8]) -> Vec<u8>;
+
+    /// A digest of the current state, used by tests to check replica
+    /// convergence. Default: empty (stateless machines).
+    fn digest(&self) -> u64 {
+        0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's no-op state machine: every command is a one-byte no-op.
+pub struct Noop;
+
+impl StateMachine for Noop {
+    fn apply(&mut self, _payload: &[u8]) -> Vec<u8> {
+        Vec::new()
+    }
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+}
+
+/// FNV-1a, used for state digests.
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = if h == 0 { 0xcbf29ce484222325 } else { h };
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A key-value store. Payload format:
+/// `s<klen:u8><key><value>` = set, `g<klen:u8><key>` = get,
+/// `d<klen:u8><key>` = delete. Malformed payloads return `b"ERR"`.
+pub struct KvStore {
+    map: std::collections::BTreeMap<Vec<u8>, Vec<u8>>,
+}
+
+impl KvStore {
+    pub fn new() -> KvStore {
+        KvStore { map: std::collections::BTreeMap::new() }
+    }
+
+    /// Encode a `set` command.
+    pub fn enc_set(key: &[u8], value: &[u8]) -> Vec<u8> {
+        let mut p = vec![b's', key.len() as u8];
+        p.extend_from_slice(key);
+        p.extend_from_slice(value);
+        p
+    }
+
+    /// Encode a `get` command.
+    pub fn enc_get(key: &[u8]) -> Vec<u8> {
+        let mut p = vec![b'g', key.len() as u8];
+        p.extend_from_slice(key);
+        p
+    }
+
+    /// Encode a `delete` command.
+    pub fn enc_del(key: &[u8]) -> Vec<u8> {
+        let mut p = vec![b'd', key.len() as u8];
+        p.extend_from_slice(key);
+        p
+    }
+
+    fn parse<'a>(payload: &'a [u8]) -> Option<(u8, &'a [u8], &'a [u8])> {
+        if payload.len() < 2 {
+            return None;
+        }
+        let op = payload[0];
+        let klen = payload[1] as usize;
+        if payload.len() < 2 + klen {
+            return None;
+        }
+        let key = &payload[2..2 + klen];
+        let rest = &payload[2 + klen..];
+        Some((op, key, rest))
+    }
+}
+
+impl Default for KvStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateMachine for KvStore {
+    fn apply(&mut self, payload: &[u8]) -> Vec<u8> {
+        match KvStore::parse(payload) {
+            Some((b's', key, value)) => {
+                self.map.insert(key.to_vec(), value.to_vec());
+                b"OK".to_vec()
+            }
+            Some((b'g', key, _)) => self.map.get(key).cloned().unwrap_or_default(),
+            Some((b'd', key, _)) => {
+                self.map.remove(key);
+                b"OK".to_vec()
+            }
+            _ => b"ERR".to_vec(),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = 0u64;
+        for (k, v) in &self.map {
+            h = fnv1a(h, k);
+            h = fnv1a(h, v);
+        }
+        h
+    }
+
+    fn name(&self) -> &'static str {
+        "kv"
+    }
+}
+
+/// A single register: every command overwrites the value; the reply is the
+/// *previous* value (test-and-set flavor).
+pub struct Register {
+    value: Vec<u8>,
+}
+
+impl Register {
+    pub fn new() -> Register {
+        Register { value: Vec::new() }
+    }
+}
+
+impl Default for Register {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateMachine for Register {
+    fn apply(&mut self, payload: &[u8]) -> Vec<u8> {
+        std::mem::replace(&mut self.value, payload.to_vec())
+    }
+    fn digest(&self) -> u64 {
+        fnv1a(0, &self.value)
+    }
+    fn name(&self) -> &'static str {
+        "register"
+    }
+}
+
+/// A counter: payload is an i64 delta (little-endian); reply is the new
+/// total.
+pub struct Counter {
+    total: i64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { total: 0 }
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StateMachine for Counter {
+    fn apply(&mut self, payload: &[u8]) -> Vec<u8> {
+        let mut buf = [0u8; 8];
+        let n = payload.len().min(8);
+        buf[..n].copy_from_slice(&payload[..n]);
+        self.total = self.total.wrapping_add(i64::from_le_bytes(buf));
+        self.total.to_le_bytes().to_vec()
+    }
+    fn digest(&self) -> u64 {
+        self.total as u64
+    }
+    fn name(&self) -> &'static str {
+        "counter"
+    }
+}
+
+/// Construct a state machine by name (deployment config `state_machine`).
+pub fn by_name(name: &str) -> Option<Box<dyn StateMachine>> {
+    match name {
+        "noop" => Some(Box::new(Noop)),
+        "kv" => Some(Box::new(KvStore::new())),
+        "register" => Some(Box::new(Register::new())),
+        "counter" => Some(Box::new(Counter::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop() {
+        let mut sm = Noop;
+        assert!(sm.apply(b"x").is_empty());
+        assert_eq!(sm.digest(), 0);
+    }
+
+    #[test]
+    fn kv_set_get_del() {
+        let mut kv = KvStore::new();
+        assert_eq!(kv.apply(&KvStore::enc_set(b"k", b"v1")), b"OK");
+        assert_eq!(kv.apply(&KvStore::enc_get(b"k")), b"v1");
+        assert_eq!(kv.apply(&KvStore::enc_set(b"k", b"v2")), b"OK");
+        assert_eq!(kv.apply(&KvStore::enc_get(b"k")), b"v2");
+        assert_eq!(kv.apply(&KvStore::enc_del(b"k")), b"OK");
+        assert!(kv.apply(&KvStore::enc_get(b"k")).is_empty());
+        assert_eq!(kv.apply(b""), b"ERR");
+        assert_eq!(kv.apply(&[b's', 200, 1]), b"ERR");
+    }
+
+    #[test]
+    fn kv_digest_tracks_state() {
+        let mut a = KvStore::new();
+        let mut b = KvStore::new();
+        a.apply(&KvStore::enc_set(b"x", b"1"));
+        b.apply(&KvStore::enc_set(b"x", b"1"));
+        assert_eq!(a.digest(), b.digest());
+        b.apply(&KvStore::enc_set(b"y", b"2"));
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn register_swaps() {
+        let mut r = Register::new();
+        assert!(r.apply(b"a").is_empty());
+        assert_eq!(r.apply(b"b"), b"a");
+        assert_eq!(r.apply(b"c"), b"b");
+    }
+
+    #[test]
+    fn counter_accumulates() {
+        let mut c = Counter::new();
+        assert_eq!(c.apply(&5i64.to_le_bytes()), 5i64.to_le_bytes());
+        assert_eq!(c.apply(&(-2i64).to_le_bytes()), 3i64.to_le_bytes());
+        assert_eq!(c.digest(), 3);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        for n in ["noop", "kv", "register", "counter"] {
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("bogus").is_none());
+    }
+}

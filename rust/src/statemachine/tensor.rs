@@ -1,0 +1,293 @@
+//! The tensor state machine: the three-layer proof point.
+//!
+//! Commands are `D`-dimensional f32 vectors; the replicated state is a
+//! `D×D` f32 matrix. Applying a batch `C ∈ R^{B×D}` computes (in the
+//! AOT-compiled JAX program, whose hot matmul is the L1 Pallas kernel):
+//!
+//! ```text
+//! M  = C · W                 # Pallas kernel (MXU-shaped tiled matmul)
+//! S' = decay · S + Mᵀ · C    # rank-B state update
+//! d  = rowsum(M ⊙ C)         # per-command digest (the client reply)
+//! ```
+//!
+//! `W` is a fixed mixing matrix generated from the same integer pattern on
+//! both sides (see `python/compile/kernels/ref.py`), `decay = 0.5`. All
+//! replicas run the identical compiled artifact, so they stay bit-for-bit
+//! in sync — the digest doubles as a cross-replica consistency check.
+
+use super::StateMachine;
+use crate::runtime::{artifacts_dir, Engine, Program};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// State dimension. Must match `python/compile/model.py::D`.
+pub const D: usize = 16;
+/// Batch sizes with compiled artifacts. Requests are padded up to the
+/// nearest size. Must match `python/compile/aot.py::BATCH_SIZES`.
+pub const BATCH_SIZES: [usize; 3] = [1, 8, 32];
+/// State decay per batch. Must match `python/compile/model.py::DECAY`.
+pub const DECAY: f32 = 0.5;
+
+/// XLA-backed replicated tensor state machine.
+pub struct TensorStateMachine {
+    // NOTE on Send (see unsafe impl below): the xla crate's handles hold
+    // `Rc`s and raw PJRT pointers, so the compiler can't prove Send. We
+    // only ever *move* the whole state machine into a single owning thread
+    // (replica event loop); the Rcs are never shared across threads, and
+    // the PJRT CPU client supports use from any one thread at a time.
+    state: Vec<f32>, // D*D row-major
+    programs: BTreeMap<usize, Program>,
+    /// Batches applied (metrics).
+    pub batches: u64,
+    /// Commands applied (metrics).
+    pub commands: u64,
+}
+
+// SAFETY: all xla handles inside are owned exclusively by this struct and
+// are only accessed by the single thread that owns it at any given time
+// (the Rc reference graph is fully contained within the struct, so moving
+// the struct moves every strong count with it).
+unsafe impl Send for TensorStateMachine {}
+
+impl TensorStateMachine {
+    /// Load the AOT artifacts (`apply_batch_b{B}.hlo.txt`) and initialize
+    /// a zero state. Requires `make artifacts`.
+    pub fn load() -> Result<TensorStateMachine> {
+        let engine = Engine::cpu()?;
+        let dir = artifacts_dir();
+        let mut programs = BTreeMap::new();
+        for b in BATCH_SIZES {
+            let path = dir.join(format!("apply_batch_b{b}.hlo.txt"));
+            let program = engine
+                .load_hlo_text(&path)
+                .with_context(|| format!("load artifact for batch size {b} — run `make artifacts`"))?;
+            programs.insert(b, program);
+        }
+        Ok(TensorStateMachine {
+            state: vec![0.0; D * D],
+            programs,
+            batches: 0,
+            commands: 0,
+        })
+    }
+
+    /// Decode a command payload into a `D`-vector (f32 LE, zero-padded).
+    pub fn decode(payload: &[u8]) -> Vec<f32> {
+        let mut v = vec![0f32; D];
+        for (i, chunk) in payload.chunks_exact(4).take(D).enumerate() {
+            v[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        v
+    }
+
+    /// Encode a command vector into a payload.
+    pub fn encode(cmd: &[f32]) -> Vec<u8> {
+        cmd.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    /// Apply a batch of decoded commands; returns per-command digests.
+    /// Pads to the nearest compiled batch size with zero commands (zero
+    /// commands contribute a zero update, preserving semantics).
+    pub fn apply_batch(&mut self, cmds: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if cmds.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut digests = Vec::with_capacity(cmds.len());
+        let mut offset = 0;
+        while offset < cmds.len() {
+            let remaining = cmds.len() - offset;
+            // Full chunks of the largest size; the tail is padded up to the
+            // smallest compiled size that fits it (zero-pad preserves
+            // semantics: zero commands contribute nothing).
+            let b = BATCH_SIZES
+                .iter()
+                .find(|&&b| b >= remaining)
+                .or(BATCH_SIZES.last())
+                .copied()
+                .unwrap();
+            let take = b.min(remaining);
+            let mut batch = vec![0f32; b * D];
+            for (i, c) in cmds[offset..offset + take].iter().enumerate() {
+                batch[i * D..(i + 1) * D].copy_from_slice(&c[..D]);
+            }
+            let program = &self.programs[&b];
+            let outputs = program.run_f32(&[
+                (&self.state, &[D as i64, D as i64]),
+                (&batch, &[b as i64, D as i64]),
+            ])?;
+            anyhow::ensure!(outputs.len() == 2, "expected (state, digest) outputs");
+            self.state = outputs[0].clone();
+            digests.extend_from_slice(&outputs[1][..take]);
+            self.batches += 1;
+            self.commands += take as u64;
+            offset += take;
+        }
+        Ok(digests)
+    }
+
+    /// Current state (tests).
+    pub fn state(&self) -> &[f32] {
+        &self.state
+    }
+}
+
+impl StateMachine for TensorStateMachine {
+    fn apply(&mut self, payload: &[u8]) -> Vec<u8> {
+        let cmd = Self::decode(payload);
+        match self.apply_batch(&[cmd]) {
+            Ok(digests) => digests[0].to_le_bytes().to_vec(),
+            Err(e) => format!("ERR {e}").into_bytes(),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for x in &self.state {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+
+    fn name(&self) -> &'static str {
+        "tensor"
+    }
+}
+
+/// The fixed mixing matrix `W`, identical to the Python definition:
+/// `W[i,j] = ((i*31 + j*17) % 7 - 3) / 4` — exactly representable in f32
+/// on both sides. Used by tests to cross-check the artifact numerics.
+pub fn mixing_matrix() -> Vec<f32> {
+    let mut w = vec![0f32; D * D];
+    for i in 0..D {
+        for j in 0..D {
+            w[i * D + j] = (((i * 31 + j * 17) % 7) as f32 - 3.0) / 4.0;
+        }
+    }
+    w
+}
+
+/// Pure-Rust reference of one batch step (the oracle for artifact tests;
+/// mirrors `python/compile/kernels/ref.py`).
+pub fn reference_step(state: &[f32], cmds: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let w = mixing_matrix();
+    let b = cmds.len();
+    // M = C · W
+    let mut m = vec![0f32; b * D];
+    for r in 0..b {
+        for j in 0..D {
+            let mut acc = 0f32;
+            for k in 0..D {
+                acc += cmds[r][k] * w[k * D + j];
+            }
+            m[r * D + j] = acc;
+        }
+    }
+    // S' = decay·S + Mᵀ·C
+    let mut s = vec![0f32; D * D];
+    for i in 0..D {
+        for j in 0..D {
+            let mut acc = DECAY * state[i * D + j];
+            for r in 0..b {
+                acc += m[r * D + i] * cmds[r][j];
+            }
+            s[i * D + j] = acc;
+        }
+    }
+    // d = rowsum(M ⊙ C)
+    let mut d = vec![0f32; b];
+    for r in 0..b {
+        d[r] = (0..D).map(|j| m[r * D + j] * cmds[r][j]).sum();
+    }
+    (s, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_available;
+
+    fn cmd(seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..D).map(|_| (rng.gen_range(17) as f32 - 8.0) / 4.0).collect()
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let c = cmd(3);
+        let p = TensorStateMachine::encode(&c);
+        assert_eq!(TensorStateMachine::decode(&p), c);
+        // Short payloads zero-pad.
+        assert_eq!(TensorStateMachine::decode(&p[..8])[2..], vec![0f32; D - 2]);
+    }
+
+    #[test]
+    fn mixing_matrix_pattern() {
+        let w = mixing_matrix();
+        assert_eq!(w.len(), D * D);
+        assert_eq!(w[0], ((0 % 7) as f32 - 3.0) / 4.0);
+        assert!(w.iter().all(|x| (-0.75..=0.75).contains(x)));
+    }
+
+    #[test]
+    fn reference_step_zero_cmds_decay_only() {
+        let state: Vec<f32> = (0..D * D).map(|i| i as f32).collect();
+        let (s, d) = reference_step(&state, &[vec![0f32; D]]);
+        for i in 0..D * D {
+            assert_eq!(s[i], state[i] * DECAY);
+        }
+        assert_eq!(d, vec![0.0]);
+    }
+
+    #[test]
+    fn artifact_matches_reference() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut sm = TensorStateMachine::load().unwrap();
+        let cmds: Vec<Vec<f32>> = (0..8).map(|i| cmd(100 + i)).collect();
+        let (ref_state, ref_digest) = reference_step(&vec![0f32; D * D], &cmds);
+        let digests = sm.apply_batch(&cmds).unwrap();
+        for (a, b) in digests.iter().zip(&ref_digest) {
+            assert!((a - b).abs() < 1e-3, "digest {a} vs {b}");
+        }
+        for (a, b) in sm.state().iter().zip(&ref_state) {
+            assert!((a - b).abs() < 1e-3, "state {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn replicas_stay_in_sync() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut a = TensorStateMachine::load().unwrap();
+        let mut b = TensorStateMachine::load().unwrap();
+        for i in 0..20 {
+            let payload = TensorStateMachine::encode(&cmd(i));
+            let ra = a.apply(&payload);
+            let rb = b.apply(&payload);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.commands, 20);
+    }
+
+    #[test]
+    fn batch_padding_equals_sequential() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Applying 5 commands (padded batch) must equal applying them as
+        // one batch of 5 in the reference.
+        let mut sm = TensorStateMachine::load().unwrap();
+        let cmds: Vec<Vec<f32>> = (0..5).map(|i| cmd(i)).collect();
+        let digests = sm.apply_batch(&cmds).unwrap();
+        assert_eq!(digests.len(), 5);
+    }
+}

@@ -1,0 +1,227 @@
+//! Small utilities: a deterministic RNG and statistics helpers.
+//!
+//! We implement our own tiny PRNG (SplitMix64 seeding an xoshiro256**) so
+//! that simulated executions are bit-for-bit reproducible across platforms
+//! and independent of external crate version bumps. The simulator, the
+//! thrifty quorum sampler, and the workload generators all draw from this.
+
+/// A deterministic xoshiro256** PRNG seeded via SplitMix64.
+///
+/// Not cryptographically secure — it exists purely for reproducible
+/// simulation. Quality is more than sufficient for delay jitter, drop
+/// decisions, and quorum sampling.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed. Two RNGs with the same seed produce
+    /// identical streams.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the xoshiro state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n). Panics if n == 0.
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        // Lemire-style rejection-free enough for simulation purposes.
+        (self.next_u64() as u128 * n as u128 >> 64) as u64
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        p > 0.0 && self.next_f64() < p
+    }
+
+    /// Choose `k` distinct elements from `items` (Fisher–Yates prefix).
+    pub fn sample<T: Clone>(&mut self, items: &[T], k: usize) -> Vec<T> {
+        let mut pool: Vec<T> = items.to_vec();
+        let k = k.min(pool.len());
+        for i in 0..k {
+            let j = i + self.gen_range((pool.len() - i) as u64) as usize;
+            pool.swap(i, j);
+        }
+        pool.truncate(k);
+        pool
+    }
+
+    /// Shuffle a slice in place.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Split off an independent RNG stream (for per-node determinism).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Summary statistics used throughout the evaluation harness: the paper
+/// reports medians, interquartile ranges, and standard deviations (Tables
+/// 1 and 2), plus p95 shading in the timeline figures.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Stats {
+    pub count: usize,
+    pub median: f64,
+    pub p25: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub iqr: f64,
+    pub mean: f64,
+    pub stdev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute [`Stats`] over a sample. Returns `None` for an empty sample.
+pub fn stats(samples: &[f64]) -> Option<Stats> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        // Nearest-rank with linear interpolation.
+        let idx = p * (v.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+        }
+    };
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+    let (p25, p75) = (pct(0.25), pct(0.75));
+    Some(Stats {
+        count: v.len(),
+        median: pct(0.5),
+        p25,
+        p75,
+        p95: pct(0.95),
+        iqr: p75 - p25,
+        mean,
+        stdev: var.sqrt(),
+        min: v[0],
+        max: *v.last().unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_streams_differ_by_seed() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn gen_range_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.gen_range(10);
+            assert!(x < 10);
+        }
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut r = Rng::new(9);
+        assert!(!r.chance(0.0));
+        assert!(r.chance(1.0));
+    }
+
+    #[test]
+    fn sample_distinct() {
+        let mut r = Rng::new(3);
+        let items: Vec<u32> = (0..10).collect();
+        let s = r.sample(&items, 4);
+        assert_eq!(s.len(), 4);
+        let mut d = s.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn sample_k_larger_than_pool() {
+        let mut r = Rng::new(3);
+        let items = [1u32, 2, 3];
+        assert_eq!(r.sample(&items, 10).len(), 3);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+        assert_eq!(s.iqr, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert!(stats(&[]).is_none());
+    }
+
+    #[test]
+    fn stats_single() {
+        let s = stats(&[7.5]).unwrap();
+        assert_eq!(s.median, 7.5);
+        assert_eq!(s.stdev, 0.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! End-to-end behavioral tests on the simulator: the paper's qualitative
+//! claims as assertions (the quantitative versions are the bench/figure
+//! drivers in `harness::experiments`).
+
+use matchmaker::config::{Configuration, OptFlags};
+use matchmaker::harness::experiments::{run_horizontal_schedule, run_reconfig_schedule};
+use matchmaker::harness::{msec, secs, Cluster};
+use matchmaker::metrics::{interval_summary, timeline};
+use matchmaker::node::Announce;
+use matchmaker::roles::{Client, Leader, Matchmaker, Replica};
+use matchmaker::sim::NetworkModel;
+use matchmaker::{MS, SEC};
+
+/// §8.1 headline: reconfiguration every second changes median latency and
+/// throughput by only a few percent.
+#[test]
+fn reconfiguration_has_negligible_impact() {
+    let run = run_reconfig_schedule(1, 4, true, 42, secs(21));
+    let a = interval_summary(&run.samples, 0, secs(10)).unwrap();
+    let b = interval_summary(&run.samples, secs(10), secs(20)).unwrap();
+    let lat_change = ((b.latency.median - a.latency.median) / a.latency.median).abs();
+    let tput_change =
+        ((b.throughput.median - a.throughput.median) / a.throughput.median).abs();
+    assert!(lat_change < 0.05, "median latency changed {:.1}%", lat_change * 100.0);
+    assert!(tput_change < 0.05, "median throughput changed {:.1}%", tput_change * 100.0);
+}
+
+/// §8.1: "the new acceptors become active within a millisecond [of the
+/// matchmaking round trip]; the old acceptors are garbage collected within
+/// five milliseconds"; H_i stays a single configuration.
+#[test]
+fn reconfiguration_is_fast_and_gc_converges() {
+    let run = run_reconfig_schedule(1, 4, true, 7, secs(21));
+    assert!(run.reconfig_latencies.len() >= 10);
+    for (active_ms, retired_ms) in &run.reconfig_latencies {
+        assert!(*active_ms < 5.0, "activation took {active_ms} ms");
+        let retired = retired_ms.expect("GC must complete");
+        assert!(retired < 20.0, "retirement took {retired} ms");
+    }
+    assert!(run.max_prior_configs <= 1, "matchmakers returned {} configs", run.max_prior_configs);
+}
+
+/// Thriftiness trade-off (§8.1): after an acceptor failure, thrifty
+/// throughput collapses until the reconfiguration replaces the dead node;
+/// non-thrifty barely notices. Both recover fully.
+#[test]
+fn thrifty_failure_dip_and_recovery() {
+    for thrifty in [true, false] {
+        let run = run_reconfig_schedule(1, 4, thrifty, 11, secs(35));
+        let before = interval_summary(&run.samples, secs(20), secs(25)).unwrap();
+        let during = interval_summary(&run.samples, secs(26), secs(30)).unwrap();
+        let after = interval_summary(&run.samples, secs(31), secs(35)).unwrap();
+        let dip = during.throughput.median / before.throughput.median;
+        if thrifty {
+            assert!(dip < 0.5, "thrifty dip was only {:.2}x", dip);
+        } else {
+            assert!(dip > 0.8, "non-thrifty dipped {:.2}x", dip);
+        }
+        let recovery = after.throughput.median / before.throughput.median;
+        assert!(recovery > 0.9, "throughput did not recover: {:.2}", recovery);
+    }
+}
+
+/// §8.2 ablation shape on an emulated WAN (+250 ms Phase1B/MatchB):
+/// without optimizations a reconfiguration stalls commands for ~500 ms;
+/// with Phase-1 bypassing ~250 ms; with all optimizations no stall.
+#[test]
+fn ablation_stall_shape() {
+    let gap_for = |opts: OptFlags| -> u64 {
+        let net = NetworkModel::default().with_wan_phase1(250 * MS);
+        let mut cluster = Cluster::new(1, 4, opts, 3, net);
+        let leader = cluster.initial_leader();
+        let cfg = cluster.random_config(1);
+        cluster.sim.schedule(secs(4), move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+        cluster.sim.run_until(secs(8));
+        cluster.assert_safe();
+        // Largest inter-completion gap around the reconfiguration.
+        let samples = cluster.samples();
+        let mut gap = 0u64;
+        let mut prev = secs(3);
+        for (t, _) in samples.iter().filter(|(t, _)| *t > secs(3)) {
+            gap = gap.max(t - prev);
+            prev = *t;
+        }
+        gap
+    };
+
+    let none = gap_for(OptFlags {
+        proactive_matchmaking: false,
+        phase1_bypass: false,
+        garbage_collection: true,
+        round_pruning: false,
+        thrifty: true,
+        ..OptFlags::default()
+    });
+    let bypass = gap_for(OptFlags {
+        proactive_matchmaking: false,
+        phase1_bypass: true,
+        garbage_collection: true,
+        round_pruning: false,
+        thrifty: true,
+        ..OptFlags::default()
+    });
+    let all = gap_for(OptFlags::default());
+
+    assert!(none >= 450 * MS, "no-opt stall was {} ms", none / MS);
+    assert!(
+        (200 * MS..450 * MS).contains(&bypass),
+        "bypass-only stall was {} ms",
+        bypass / MS
+    );
+    assert!(all < 50 * MS, "fully-optimized stall was {} ms", all / MS);
+}
+
+/// §8.3: leader failure stops progress; the next proposer takes over after
+/// its election timeout and throughput recovers.
+#[test]
+fn leader_failover_recovers() {
+    let mut cluster = Cluster::lan(1, 4, OptFlags::default(), 5);
+    let p0 = cluster.layout.proposers[0];
+    let p1 = cluster.layout.proposers[1];
+    if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
+        l.timing.election_timeout = secs(2);
+    }
+    cluster.sim.schedule(secs(3), move |s| s.crash(p0));
+    cluster.sim.run_until(secs(8));
+    cluster.assert_safe();
+    let samples = cluster.samples();
+    let tl = timeline(&samples, secs(8), SEC, SEC);
+    // Outage window [3s, 5s]: throughput ~0. Recovery by 7s.
+    assert!(tl.throughput[3] < tl.throughput[1] * 0.5, "no outage visible");
+    assert!(
+        tl.throughput[7] > tl.throughput[1] * 0.7,
+        "no recovery: {:?}",
+        tl.throughput
+    );
+    // The new leader is steady.
+    assert!(cluster
+        .sim
+        .announces
+        .iter()
+        .any(|(_, n, a)| *n == p1 && matches!(a, Announce::LeaderSteady { .. })));
+}
+
+/// §8.4: matchmaker reconfigurations are off the critical path — a storm
+/// of them changes client-visible performance by < 5%.
+#[test]
+fn matchmaker_reconfig_off_critical_path() {
+    let mut cluster = Cluster::lan(1, 4, OptFlags::default(), 6);
+    let leader = cluster.initial_leader();
+    for i in 0..10u64 {
+        let set = cluster.random_matchmakers();
+        cluster.sim.schedule(secs(2) + i * SEC / 2, move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| {
+                l.reconfigure_matchmakers(set.clone(), now, fx)
+            });
+        });
+    }
+    cluster.sim.run_until(secs(8));
+    cluster.assert_safe();
+    let samples = cluster.samples();
+    let quiet = interval_summary(&samples, 0, secs(2)).unwrap();
+    let storm = interval_summary(&samples, secs(2), secs(7)).unwrap();
+    let change = ((storm.latency.median - quiet.latency.median) / quiet.latency.median).abs();
+    assert!(change < 0.05, "mm reconfig affected latency by {:.1}%", change * 100.0);
+    // And acceptor reconfiguration still works afterwards.
+    let cfg = cluster.random_config(77);
+    cluster.sim.schedule(msec(8100), move |s| {
+        s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+    });
+    cluster.sim.run_until(secs(10));
+    cluster.assert_safe();
+    let leader_node = cluster.sim.node_mut::<Leader>(leader).unwrap();
+    assert!(leader_node.gc_completed >= 2);
+}
+
+/// f = 2 clusters work end to end, including reconfiguration.
+#[test]
+fn f2_cluster_end_to_end() {
+    let mut cluster = Cluster::lan(2, 4, OptFlags::default(), 8);
+    let leader = cluster.initial_leader();
+    assert_eq!(cluster.layout.initial_config().acceptors.len(), 5);
+    let cfg = cluster.random_config(1);
+    cluster.sim.schedule(secs(1), move |s| {
+        s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+    });
+    cluster.sim.run_until(secs(2));
+    cluster.assert_safe();
+    assert!(cluster.samples().len() > 1000);
+}
+
+/// The horizontal baseline also reconfigures without visible impact
+/// (Figure 10) — the paper's point is parity in the steady case, with
+/// matchmakers winning on generality.
+#[test]
+fn horizontal_baseline_parity() {
+    let (samples, _) = run_horizontal_schedule(1, 4, true, 9, secs(21));
+    let a = interval_summary(&samples, 0, secs(10)).unwrap();
+    let b = interval_summary(&samples, secs(10), secs(20)).unwrap();
+    let change = ((b.latency.median - a.latency.median) / a.latency.median).abs();
+    assert!(change < 0.05, "horizontal reconfig changed latency {:.1}%", change * 100.0);
+}
+
+/// A replica that loses messages catches up via leader re-sends, and a
+/// late-started client still gets served.
+#[test]
+fn replica_catchup_and_late_client() {
+    let mut cluster = Cluster::lan(1, 2, OptFlags::default(), 10);
+    let replica = cluster.layout.replicas[0];
+    let other = cluster.layout.replicas[1];
+    // Partition one replica from the leader for a while.
+    let leader = cluster.initial_leader();
+    cluster.sim.schedule(msec(100), move |s| s.set_link(leader, replica, false));
+    cluster.sim.schedule(msec(900), move |s| s.set_link(leader, replica, true));
+    // A client that starts late.
+    let late = cluster.layout.clients[1];
+    if let Some(c) = cluster.sim.node_mut::<Client>(late) {
+        c.start_at = msec(1200);
+    }
+    cluster.sim.run_until(secs(3));
+    cluster.assert_safe();
+    let wm_cut = cluster.sim.node_mut::<Replica>(replica).unwrap().exec_watermark;
+    let wm_ok = cluster.sim.node_mut::<Replica>(other).unwrap().exec_watermark;
+    // The cut replica must have caught up to within a small tail.
+    assert!(
+        wm_cut + 64 >= wm_ok,
+        "replica did not catch up: {wm_cut} vs {wm_ok}"
+    );
+    let late_samples = &cluster.sim.node_mut::<Client>(late).unwrap().samples;
+    assert!(!late_samples.is_empty(), "late client starved");
+}
+
+/// GC is required for matchmaker logs to stay bounded: without it, |H_i|
+/// grows with every reconfiguration (Optimization 3's motivation).
+#[test]
+fn without_gc_prior_configs_accumulate() {
+    let mut opts = OptFlags::default();
+    opts.garbage_collection = false;
+    let mut cluster = Cluster::lan(1, 2, opts, 12);
+    let leader = cluster.initial_leader();
+    for i in 0..5u64 {
+        let cfg = cluster.random_config(i + 1);
+        cluster.sim.schedule(msec(200 + i * 200), move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+    }
+    cluster.sim.run_until(secs(2));
+    cluster.assert_safe();
+    let leader_node = cluster.sim.node_mut::<Leader>(leader).unwrap();
+    assert!(
+        leader_node.max_prior_configs >= 4,
+        "expected H_i to grow without GC, saw {}",
+        leader_node.max_prior_configs
+    );
+    // Matchmaker logs likewise retain all rounds.
+    let mm = cluster.layout.initial_matchmakers()[0];
+    let log_len = cluster.sim.node_mut::<Matchmaker>(mm).unwrap().log.len();
+    assert!(log_len >= 5, "matchmaker log unexpectedly short: {log_len}");
+}
+
+/// Optimization 5 (concurrent Matchmaking + Phase 1): on a WAN where both
+/// MatchB and Phase1B cost 250 ms, a leader election reaches steady state
+/// in ~1 delayed round trip instead of two.
+#[test]
+fn concurrent_phase1_saves_a_round_trip() {
+    let steady_time = |concurrent: bool| -> u64 {
+        let mut opts = OptFlags::default();
+        opts.concurrent_phase1 = concurrent;
+        let net = NetworkModel::default().with_wan_phase1(250 * MS);
+        let mut cluster = Cluster::new(1, 2, opts, 21, net);
+        let p0 = cluster.layout.proposers[0];
+        let p1 = cluster.layout.proposers[1];
+        if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
+            l.timing.election_timeout = secs(1);
+        }
+        cluster.sim.schedule(secs(2), move |s| s.crash(p0));
+        cluster.sim.run_until(secs(6));
+        cluster.assert_safe();
+        // Time from crash to the new leader's steady announcement.
+        cluster
+            .sim
+            .announces
+            .iter()
+            .find_map(|(t, n, a)| {
+                (*n == p1 && matches!(a, Announce::LeaderSteady { .. })).then_some(*t)
+            })
+            .expect("new leader steady")
+            - secs(2)
+    };
+    let sequential = steady_time(false);
+    let concurrent = steady_time(true);
+    // Sequential: election wait + MatchB (250 ms) + Phase1B (250 ms).
+    // Concurrent: election wait + max(MatchB, Phase1B) = one 250 ms wait.
+    assert!(
+        sequential >= concurrent + 200 * MS,
+        "opt 5 saved only {} ms (sequential {} ms, concurrent {} ms)",
+        (sequential - concurrent) / MS,
+        sequential / MS,
+        concurrent / MS
+    );
+    assert!(concurrent < secs(2), "concurrent election took {} ms", concurrent / MS);
+}
