@@ -79,4 +79,7 @@ fn main() {
     if want("x2") {
         timed("X2 (Matchmaker Fast Paxos)", || exp::fast_paxos_experiment(seed).render());
     }
+    if want("x3") {
+        timed("X3 (Phase 2 batching, tensor path)", || exp::batching_figure(seed).render());
+    }
 }

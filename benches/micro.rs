@@ -10,7 +10,10 @@
 //! * wire codec encode/decode
 //! * end-to-end simulated cluster throughput (commands/s of sim time per
 //!   second of wall time)
-//! * tensor state machine batch apply via PJRT (if artifacts are built)
+//! * tensor state machine batch apply (always runs: reference backend by
+//!   default, PJRT with `--features pjrt` + `make artifacts`)
+//! * Phase 2 batching: simulated throughput at batch_size 1/8/32 on the
+//!   tensor path with a finite per-message egress cost
 
 use matchmaker::codec::Wire;
 use matchmaker::config::{Configuration, OptFlags};
@@ -132,24 +135,43 @@ fn main() {
         }
     });
 
-    // --- tensor state machine via PJRT (three-layer hot path) ---
-    if matchmaker::runtime::artifacts_available() {
-        let mut sm = matchmaker::statemachine::TensorStateMachine::load().unwrap();
-        let cmds: Vec<Vec<f32>> = (0..32)
-            .map(|i| (0..16).map(|j| ((i * 16 + j) % 11) as f32 / 4.0).collect())
-            .collect();
-        bench("tensor SM: batch-32 apply via PJRT", |n| {
-            for _ in 0..n {
-                std::hint::black_box(sm.apply_batch(&cmds).unwrap());
-            }
-        });
-        let one = vec![cmds[0].clone()];
-        bench("tensor SM: batch-1 apply via PJRT", |n| {
-            for _ in 0..n {
-                std::hint::black_box(sm.apply_batch(&one).unwrap());
-            }
-        });
-    } else {
-        println!("(tensor SM benches skipped: run `make artifacts`)");
+    // --- tensor state machine batch apply (three-layer hot path;
+    // reference backend by default, PJRT with `--features pjrt` +
+    // `make artifacts`) ---
+    let mut sm = matchmaker::statemachine::TensorStateMachine::load().unwrap();
+    let backend = sm.backend_name();
+    let cmds: Vec<Vec<f32>> = (0..32)
+        .map(|i| (0..16).map(|j| ((i * 16 + j) % 11) as f32 / 4.0).collect())
+        .collect();
+    bench(&format!("tensor SM: batch-32 apply ({backend})"), |n| {
+        for _ in 0..n {
+            std::hint::black_box(sm.apply_batch(&cmds).unwrap());
+        }
+    });
+    let one = vec![cmds[0].clone()];
+    bench(&format!("tensor SM: batch-1 apply ({backend})"), |n| {
+        for _ in 0..n {
+            std::hint::black_box(sm.apply_batch(&one).unwrap());
+        }
+    });
+
+    // --- Phase 2 batching end to end: simulated cluster throughput on
+    // the tensor path with a finite per-message egress cost (the ISSUE-1
+    // acceptance measurement; see harness::experiments::batching_figure
+    // for the full X3 report) ---
+    println!("\n# Phase 2 batching (32 clients, 20 us/msg egress, 2 sim-seconds)\n");
+    let mut base = f64::NAN;
+    for &bs in &[1usize, 8, 32] {
+        let run =
+            matchmaker::harness::experiments::run_batching_throughput(42, bs, 32, secs(2));
+        if bs == 1 {
+            base = run.throughput;
+        }
+        println!(
+            "batch_size={bs:<3} {:>10.0} cmds/s (sim)   median {:>7.3} ms   {:>5.1}x",
+            run.throughput,
+            run.median_ms,
+            run.throughput / base
+        );
     }
 }

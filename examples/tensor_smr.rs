@@ -5,12 +5,13 @@
 //!   loaded via PJRT — Python is never on the request path.
 //!
 //! A real small workload: 8 closed-loop clients stream 16-float tensor
-//! commands for 6 simulated seconds; at 2 s the acceptors are live-
-//! reconfigured; at 4 s the matchmakers are. We report latency/throughput,
-//! verify all three XLA-backed replicas converge to bit-identical state,
-//! and record the run in EXPERIMENTS.md.
+//! commands for 6 simulated seconds, batched 8-per-slot by the leader
+//! (Phase 2 batching); at 2 s the acceptors are live-reconfigured; at
+//! 4 s the matchmakers are. We report latency/throughput and verify all
+//! three tensor-backed replicas converge to bit-identical state.
 //!
-//! Requires `make artifacts`. Run:
+//! Uses the compiled PJRT artifacts with `--features pjrt` +
+//! `make artifacts`, else the pure-Rust reference backend. Run:
 //!
 //! ```sh
 //! cargo run --release --example tensor_smr
@@ -20,23 +21,19 @@ use matchmaker::config::{Configuration, OptFlags};
 use matchmaker::harness::{secs, Cluster};
 use matchmaker::metrics::{interval_summary, timeline};
 use matchmaker::roles::{Client, Leader, Replica};
-use matchmaker::runtime::artifacts_available;
 use matchmaker::statemachine::{StateMachine, TensorStateMachine};
-use matchmaker::{MS, SEC};
+use matchmaker::{MS, SEC, US};
 
 fn main() {
-    if !artifacts_available() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-
-    let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 2026);
+    let opts = OptFlags::default().with_batching(8, 500 * US);
+    let mut cluster = Cluster::lan(1, 8, opts, 2026);
     let leader = cluster.initial_leader();
 
-    // Swap the replicas' no-op state machines for XLA-backed tensor SMs.
+    // Swap the replicas' no-op state machines for tensor SMs.
     let replicas = cluster.layout.replicas.clone();
     for &r in &replicas {
-        let sm = TensorStateMachine::load().expect("load AOT artifacts");
+        let sm = TensorStateMachine::load().expect("load tensor state machine");
+        println!("replica {r}: tensor backend = {}", sm.backend_name());
         let rep = cluster.sim.node_mut::<Replica>(r).expect("replica");
         rep.sm = Box::new(sm);
     }

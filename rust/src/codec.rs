@@ -321,6 +321,10 @@ impl Wire for Value {
                 e.u8(2);
                 c.enc(e);
             }
+            Value::Batch(cmds) => {
+                e.u8(3);
+                cmds.enc(e);
+            }
         }
     }
     fn dec(d: &mut Dec) -> R<Self> {
@@ -328,6 +332,7 @@ impl Wire for Value {
             0 => Value::Cmd(Command::dec(d)?),
             1 => Value::Noop,
             2 => Value::Reconfig(Configuration::dec(d)?),
+            3 => Value::Batch(Wire::dec(d)?),
             _ => return err("bad Value tag"),
         })
     }
@@ -586,7 +591,14 @@ pub fn sample_messages() -> Vec<Msg> {
             votes: vec![SlotVote { slot: 3, vr: r0, vv: Value::Cmd(cmd.clone()) }],
             chosen_watermark: 2,
         },
-        Phase2A { round: r1, slot: 5, value: Value::Noop },
+        Phase2A {
+            round: r1,
+            slot: 5,
+            value: Value::Batch(vec![
+                cmd.clone(),
+                Command { client: 10, seq: 43, payload: vec![4, 5] },
+            ]),
+        },
         Phase2B { round: r1, slot: 5 },
         Nack { round: r0, higher: r1 },
         Chosen { slot: 6, value: Value::Reconfig(cfg.clone()) },

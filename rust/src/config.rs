@@ -8,7 +8,7 @@
 //! both consume (TOML on disk for real deployments).
 
 use crate::quorum::QuorumSpec;
-use crate::NodeId;
+use crate::{NodeId, Time, MS, US};
 use std::collections::BTreeSet;
 
 /// A configuration of acceptors: the paper's `C = (A; P1; P2)`.
@@ -33,8 +33,12 @@ impl Configuration {
         }
     }
 
-    /// Validate the Flexible-Paxos intersection property and acceptor-set
-    /// well-formedness.
+    /// Validate acceptor-set well-formedness and the quorum system:
+    /// Flexible specs must satisfy `p1 + p2 > |A|` (the Flexible-Paxos
+    /// intersection property), Explicit specs must index inside the
+    /// acceptor list and pairwise intersect. Errors are descriptive so a
+    /// bad deployment config fails loudly at load time instead of
+    /// silently treating quorums as unsatisfiable.
     pub fn validate(&self) -> Result<(), String> {
         if self.acceptors.is_empty() {
             return Err("configuration has no acceptors".into());
@@ -43,11 +47,10 @@ impl Configuration {
         if uniq.len() != self.acceptors.len() {
             return Err("duplicate acceptor in configuration".into());
         }
-        if !self.quorum.intersects(self.acceptors.len()) {
+        if let Err(e) = self.quorum.validate(self.acceptors.len()) {
             return Err(format!(
-                "quorum system {:?} violates P1/P2 intersection over {} acceptors",
-                self.quorum,
-                self.acceptors.len()
+                "configuration {} has an invalid quorum system: {e}",
+                self.id
             ));
         }
         Ok(())
@@ -88,6 +91,15 @@ pub struct OptFlags {
     /// saving one round trip when the guess matches H_i (the common case
     /// when leaders rarely change the acceptors during an election).
     pub concurrent_phase1: bool,
+    /// Phase 2 batching: maximum number of client commands the leader
+    /// packs into one slot (`Value::Batch`). `1` disables batching (every
+    /// command gets its own slot, the paper's §8 configuration). One
+    /// quorum round trip then chooses up to `batch_size` commands, which
+    /// is the dominant throughput lever under heavy load.
+    pub batch_size: usize,
+    /// Maximum time a partially filled batch may wait for more commands
+    /// before the leader flushes it (bounds added latency at low load).
+    pub batch_delay: Time,
 }
 
 impl Default for OptFlags {
@@ -99,6 +111,8 @@ impl Default for OptFlags {
             round_pruning: true,
             thrifty: true,
             concurrent_phase1: false,
+            batch_size: 1,
+            batch_delay: MS,
         }
     }
 }
@@ -113,7 +127,16 @@ impl OptFlags {
             round_pruning: false,
             thrifty: false,
             concurrent_phase1: false,
+            batch_size: 1,
+            batch_delay: MS,
         }
+    }
+
+    /// Enable Phase 2 batching with the given knobs (builder-style).
+    pub fn with_batching(mut self, batch_size: usize, batch_delay: Time) -> OptFlags {
+        self.batch_size = batch_size.max(1);
+        self.batch_delay = batch_delay;
+        self
     }
 }
 
@@ -265,6 +288,11 @@ impl DeploymentConfig {
             "opts = proactive:{},bypass:{},gc:{},pruning:{},thrifty:{},concurrent_p1:{}\n",
             o.proactive_matchmaking, o.phase1_bypass, o.garbage_collection, o.round_pruning, o.thrifty, o.concurrent_phase1
         ));
+        out.push_str(&format!(
+            "batch = size:{},delay_us:{}\n",
+            o.batch_size,
+            o.batch_delay / US
+        ));
         for (id, addr) in &self.addrs {
             out.push_str(&format!("addr.{id} = {addr}\n"));
         }
@@ -319,6 +347,29 @@ impl DeploymentConfig {
                             "thrifty" => cfg.opts.thrifty = b,
                             "concurrent_p1" => cfg.opts.concurrent_phase1 = b,
                             other => return Err(format!("unknown opt {other:?}")),
+                        }
+                    }
+                }
+                "batch" => {
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("batch: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        match k.trim() {
+                            "size" => {
+                                cfg.opts.batch_size =
+                                    v.parse().map_err(|e| format!("batch size: {e}"))?;
+                                if cfg.opts.batch_size == 0 {
+                                    return Err("batch size must be >= 1".into());
+                                }
+                            }
+                            "delay_us" => {
+                                let us: u64 =
+                                    v.parse().map_err(|e| format!("batch delay_us: {e}"))?;
+                                cfg.opts.batch_delay = us * US;
+                            }
+                            other => return Err(format!("unknown batch key {other:?}")),
                         }
                     }
                 }
@@ -377,10 +428,50 @@ mod tests {
     }
 
     #[test]
+    fn config_rejects_non_intersecting_flexible_quorums() {
+        // p1 + p2 <= |A|: the silent-unsafety case the load-time check
+        // exists for.
+        let bad = Configuration {
+            id: 7,
+            acceptors: vec![1, 2, 3, 4, 5],
+            quorum: QuorumSpec::Flexible { p1: 2, p2: 3 },
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("invalid quorum system"), "{err}");
+        assert!(err.contains("must exceed"), "{err}");
+        // The boundary case p1 + p2 = |A| + 1 is valid.
+        let ok = Configuration {
+            id: 8,
+            acceptors: vec![1, 2, 3, 4, 5],
+            quorum: QuorumSpec::Flexible { p1: 3, p2: 3 },
+        };
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn config_rejects_out_of_bounds_explicit_quorums() {
+        // Index 3 into a 3-acceptor list: previously silently treated as
+        // an unsatisfiable quorum (quorum.rs membership test), now a
+        // descriptive load-time error.
+        let bad = Configuration {
+            id: 9,
+            acceptors: vec![1, 2, 3],
+            quorum: QuorumSpec::Explicit {
+                p1: vec![[0usize, 3].into_iter().collect()],
+                p2: vec![[1usize, 2].into_iter().collect()],
+            },
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+    }
+
+    #[test]
     fn text_config_roundtrip() {
         let mut cfg = DeploymentConfig::standard(1, 2);
         cfg.addrs.insert(0, "127.0.0.1:7000".into());
         cfg.opts.thrifty = false;
+        cfg.opts.batch_size = 16;
+        cfg.opts.batch_delay = 750 * US;
         cfg.state_machine = "kv".into();
         let s = cfg.to_text();
         let back = DeploymentConfig::from_text(&s).unwrap();
@@ -388,6 +479,17 @@ mod tests {
         assert_eq!(back.opts, cfg.opts);
         assert_eq!(back.state_machine, "kv");
         assert_eq!(back.addrs, cfg.addrs);
+    }
+
+    #[test]
+    fn text_config_batch_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        let with_batch = format!("{base}# override\nbatch = size:32,delay_us:200\n");
+        let cfg = DeploymentConfig::from_text(&with_batch).unwrap();
+        assert_eq!(cfg.opts.batch_size, 32);
+        assert_eq!(cfg.opts.batch_delay, 200 * US);
+        assert!(DeploymentConfig::from_text(&format!("{base}batch = size:0\n")).is_err());
+        assert!(DeploymentConfig::from_text(&format!("{base}batch = bogus:1\n")).is_err());
     }
 
     #[test]

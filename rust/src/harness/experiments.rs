@@ -7,11 +7,12 @@ use super::report::{CurveReport, FigureReport, TableReport, ViolinReport};
 use super::{msec, secs, Cluster, HorizontalCluster};
 use crate::config::{Configuration, OptFlags};
 use crate::metrics::{interval_summary, timeline, Sample, Timeline};
-use crate::roles::{HorizontalLeader, Leader};
+use crate::roles::{Client, HorizontalLeader, Leader, Replica};
 use crate::round::Round;
 use crate::sim::NetworkModel;
+use crate::statemachine::TensorStateMachine;
 use crate::util::stats;
-use crate::{NodeId, Time, MS, SEC};
+use crate::{NodeId, Time, MS, SEC, US};
 
 /// Output of one reconfiguration-timeline run (the Figure 9 family).
 pub struct ReconfigRun {
@@ -533,6 +534,101 @@ pub fn figure21(seed: u64) -> (FigureReport, TableReport) {
     (fig, tab)
 }
 
+/// Output of one batching-throughput run (the X3 experiment).
+pub struct BatchingRun {
+    pub batch_size: usize,
+    /// Commands per simulated second after warm-up.
+    pub throughput: f64,
+    /// Median latency after warm-up, ms.
+    pub median_ms: f64,
+    /// Total commands completed.
+    pub commands: usize,
+}
+
+/// X3: Phase 2 batching on the tensor state machine path — the shape of
+/// the paper's Figure 8 runs (throughput vs per-slot amortization), on a
+/// network model with a finite per-message egress cost (`tx_overhead`),
+/// which is the resource batching trades against. A mid-stream acceptor
+/// reconfiguration checks that batches keep flowing through matchmaking
+/// (Optimization 1) without loss.
+///
+/// Replicas execute every chosen batch through
+/// [`TensorStateMachine::apply_batch`]-backed `apply_many` (batch sizes
+/// 1/8/32, padded), so one quorum round trip chooses and one tensor
+/// invocation executes up to 32 commands.
+pub fn run_batching_throughput(
+    seed: u64,
+    batch_size: usize,
+    n_clients: usize,
+    duration: Time,
+) -> BatchingRun {
+    let opts = OptFlags::default().with_batching(batch_size, 500 * US);
+    let mut net = NetworkModel::default();
+    net.tx_overhead = 20 * US;
+    let mut cluster = Cluster::new(1, n_clients, opts, seed, net);
+
+    // Tensor state machines on the replicas, tensor payloads on the
+    // clients (16 f32 lanes each).
+    for &r in &cluster.layout.replicas.clone() {
+        let sm = TensorStateMachine::load().expect("tensor state machine");
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            rep.sm = Box::new(sm);
+        }
+    }
+    for (i, &c) in cluster.layout.clients.clone().iter().enumerate() {
+        let cmd: Vec<f32> = (0..16).map(|j| ((i * 16 + j) % 13) as f32 / 4.0 - 1.5).collect();
+        if let Some(cl) = cluster.sim.node_mut::<Client>(c) {
+            cl.payload = TensorStateMachine::encode(&cmd);
+        }
+    }
+
+    // Reconfigure the acceptors mid-stream: batching must be correct
+    // across the configuration change.
+    let leader = cluster.initial_leader();
+    let cfg = cluster.random_config(1);
+    cluster.sim.schedule(duration / 2, move |s| {
+        s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+    });
+
+    cluster.sim.run_until(duration);
+    cluster.assert_safe();
+
+    let samples = cluster.samples();
+    let warm = duration / 5;
+    let n = samples.iter().filter(|(t, _)| *t >= warm).count();
+    let throughput = n as f64 / ((duration - warm) as f64 / 1e9);
+    let median_ms = interval_summary(&samples, warm, duration)
+        .map(|s| s.latency.median)
+        .unwrap_or(f64::NAN);
+    BatchingRun { batch_size, throughput, median_ms, commands: samples.len() }
+}
+
+/// X3 report: batch sizes 1/8/32 with 32 closed-loop clients.
+pub fn batching_figure(seed: u64) -> CurveReport {
+    let mut rep = CurveReport {
+        id: "X3".into(),
+        title: "Phase 2 batching on the tensor SM path (first column = batch_size, \
+                32 clients, 20 µs/msg egress)"
+            .into(),
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for &bs in &[1usize, 8, 32] {
+        let run = run_batching_throughput(seed, bs, 32, secs(5));
+        rows.push((run.batch_size, run.throughput, run.median_ms));
+    }
+    if let (Some(b1), Some(b32)) =
+        (rows.iter().find(|r| r.0 == 1), rows.iter().find(|r| r.0 == 32))
+    {
+        rep.notes.push(format!(
+            "batch_size 32 vs 1: {:.1}x simulated throughput (acceptance target: >= 2x)",
+            b32.1 / b1.1
+        ));
+    }
+    rep.series.push(("tensor path".into(), rows));
+    rep
+}
+
 /// X2: Matchmaker Fast Paxos (§7) — fast-path success with f+1 acceptors.
 /// Runs many independent single-decree instances; in each, 1–2 clients
 /// race. Reports fast-path vs recovery counts; safety is asserted.
@@ -637,6 +733,7 @@ pub fn run_all(seed: u64) -> Vec<(String, String)> {
     out.push(("F21".into(), f21.render()));
     out.push(("T2".into(), t2.render()));
     out.push(("X2".into(), fast_paxos_experiment(seed).render()));
+    out.push(("X3".into(), batching_figure(seed).render()));
     out
 }
 
@@ -667,5 +764,36 @@ mod tests {
     fn fast_paxos_experiment_runs() {
         let rep = fast_paxos_experiment(7);
         assert!(rep.notes[0].contains("fast-path"));
+    }
+
+    /// Acceptance gate for the batching tentpole: with a finite egress
+    /// cost, batch_size = 32 must at least double simulated throughput
+    /// over batch_size = 1 on the tensor state machine path, with the
+    /// mid-run reconfiguration (inside `run_batching_throughput`) active.
+    #[test]
+    fn batching_doubles_tensor_throughput() {
+        let b1 = run_batching_throughput(42, 1, 32, secs(3));
+        let b32 = run_batching_throughput(42, 32, 32, secs(3));
+        assert!(b1.commands > 1000, "batch_size=1 barely ran: {}", b1.commands);
+        assert!(
+            b32.throughput >= 2.0 * b1.throughput,
+            "batching gained only {:.2}x ({:.0} vs {:.0} cmds/s)",
+            b32.throughput / b1.throughput,
+            b32.throughput,
+            b1.throughput
+        );
+    }
+
+    #[test]
+    fn batching_latency_stays_bounded() {
+        // The flush delay bounds added latency: even a lone client (whose
+        // batches never fill) must complete commands promptly.
+        let run = run_batching_throughput(7, 32, 1, secs(2));
+        assert!(run.commands > 100, "lone client starved: {}", run.commands);
+        assert!(
+            run.median_ms < 5.0,
+            "batch_delay added too much latency: {} ms",
+            run.median_ms
+        );
     }
 }

@@ -23,11 +23,18 @@
 //! * [`net`] — a TCP runtime (std::net + threads) for real multi-process deployments
 //!   (`repro run --role ...`).
 //!
+//! Steady-state Phase 2 is batched and pipelined: with
+//! `OptFlags::batch_size > 1` the leader packs up to `batch_size` client
+//! commands into one slot ([`msg::Value::Batch`]), so a single quorum
+//! round trip chooses a whole batch; replicas unpack batches and execute
+//! them through `StateMachine::apply_many`, replying per command.
+//!
 //! Replicas execute commands against a pluggable [`statemachine`]; the
 //! `TensorStateMachine` executes batched commands through an AOT-compiled
-//! JAX/Pallas computation loaded via PJRT ([`runtime`]), proving the
-//! three-layer Rust + JAX + Pallas stack composes with Python never on the
-//! request path.
+//! JAX/Pallas computation loaded via PJRT ([`runtime`], `pjrt` feature) or
+//! through a bit-identical pure-Rust reference backend (default build),
+//! proving the three-layer Rust + JAX + Pallas stack composes with Python
+//! never on the request path.
 
 pub mod codec;
 pub mod config;

@@ -65,10 +65,10 @@ impl Args {
 }
 
 const USAGE: &str = "usage:
-  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 all)
+  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 all)
   repro run --role R --id N --config FILE [--duration SECS]
   repro gen-config [--f N] [--clients N] [--base-port P]
-  repro smoke                      load + execute the AOT artifacts
+  repro smoke                      run the tensor state machine end to end
 ";
 
 fn main() -> Result<()> {
@@ -140,6 +140,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
             print!("{}{}", fig.render(), tab.render());
         }
         "x2" => print!("{}", exp::fast_paxos_experiment(seed).render()),
+        "x3" | "batch" => print!("{}", exp::batching_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -198,14 +199,14 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64) -> Result<
 fn smoke() -> Result<()> {
     use matchmaker::statemachine::tensor::{reference_step, D};
     use matchmaker::statemachine::{StateMachine, TensorStateMachine};
-    let mut sm = TensorStateMachine::load()
-        .context("artifacts missing — run `make artifacts` first")?;
+    let mut sm = TensorStateMachine::load().context("initialize tensor state machine")?;
+    println!("tensor SM backend: {}", sm.backend_name());
     let cmd: Vec<f32> = (0..D).map(|i| (i as f32) / 8.0).collect();
     let reply = sm.apply(&TensorStateMachine::encode(&cmd));
     let digest = f32::from_le_bytes(reply[..4].try_into().unwrap());
     let (_, ref_digest) = reference_step(&vec![0.0; D * D], &[cmd]);
     println!("tensor SM digest = {digest} (reference {})", ref_digest[0]);
     anyhow::ensure!((digest - ref_digest[0]).abs() < 1e-3, "digest mismatch");
-    println!("runtime smoke OK — three layers compose");
+    println!("runtime smoke OK");
     Ok(())
 }

@@ -32,12 +32,21 @@ impl Command {
     }
 }
 
-/// A value voted on in a log slot: a client command, or a no-op used to
+/// A value voted on in a log slot: a client command, a batch of client
+/// commands decided together (Phase 2 batching — one quorum round trip
+/// chooses up to `OptFlags::batch_size` commands), or a no-op used to
 /// fill holes during leader recovery (§4.1), or a reconfiguration marker
 /// (used by the Horizontal MultiPaxos baseline, §7.2).
+///
+/// Proposers and acceptors treat batches opaquely (they are just values);
+/// replicas unpack them and execute the commands in order, replying to
+/// each client individually.
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 pub enum Value {
     Cmd(Command),
+    /// Two or more commands sharing one slot. Invariant (leader-enforced):
+    /// batches are never empty; single commands use `Cmd`.
+    Batch(Vec<Command>),
     Noop,
     /// Horizontal MultiPaxos only: "configuration `config` takes effect at
     /// slot `chosen_slot + α`".

@@ -32,6 +32,9 @@ pub enum Timer {
     /// reconfiguration-stall rescue) — one timer for the whole window
     /// instead of one per slot.
     Phase2Watchdog,
+    /// Leader: flush a partially filled command batch that has waited
+    /// `OptFlags::batch_delay` (Phase 2 batching).
+    BatchFlush,
     /// Leader: emit a heartbeat to peers.
     HeartbeatTick,
     /// Election: check whether the leader's heartbeats stopped.

@@ -127,6 +127,65 @@ impl QuorumSpec {
         }
     }
 
+    /// Validate the spec over an acceptor set of size `n` with descriptive
+    /// errors, for configuration load time. Rejects `Flexible` specs whose
+    /// quorums cannot intersect (`p1 + p2 <= n`), zero or oversized
+    /// thresholds, and `Explicit` specs with empty quorum lists or
+    /// acceptor indices outside `0..n` (which the membership test in
+    /// [`QuorumSpec::is_p1_quorum`]/[`is_p2_quorum`](QuorumSpec::is_p2_quorum)
+    /// would otherwise silently treat as unsatisfiable).
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if n == 0 {
+            return Err("acceptor set is empty".into());
+        }
+        match self {
+            QuorumSpec::Majority | QuorumSpec::FastUnanimous => Ok(()),
+            QuorumSpec::Flexible { p1, p2 } => {
+                if *p1 == 0 || *p2 == 0 {
+                    return Err(format!(
+                        "flexible quorum sizes must be positive (p1 = {p1}, p2 = {p2})"
+                    ));
+                }
+                if *p1 > n || *p2 > n {
+                    return Err(format!(
+                        "flexible quorum size exceeds |A| = {n} (p1 = {p1}, p2 = {p2})"
+                    ));
+                }
+                if p1 + p2 <= n {
+                    return Err(format!(
+                        "flexible quorums do not intersect: p1 + p2 = {} must exceed |A| = {n}",
+                        p1 + p2
+                    ));
+                }
+                Ok(())
+            }
+            QuorumSpec::Explicit { p1, p2 } => {
+                for (phase, quorums) in [("P1", p1), ("P2", p2)] {
+                    if quorums.is_empty() {
+                        return Err(format!("{phase} quorum list is empty"));
+                    }
+                    for q in quorums {
+                        if q.is_empty() {
+                            return Err(format!("{phase} contains an empty quorum"));
+                        }
+                        if let Some(&bad) = q.iter().find(|&&i| i >= n) {
+                            return Err(format!(
+                                "{phase} quorum acceptor index {bad} is out of bounds for \
+                                 |A| = {n} (indices are positions in the acceptor list)"
+                            ));
+                        }
+                    }
+                }
+                if !self.intersects(n) {
+                    return Err(
+                        "some P1 quorum does not intersect some P2 quorum".to_string()
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Check the Flexible Paxos intersection property: every P1 quorum
     /// intersects every P2 quorum over an acceptor set of size `n`.
     /// Used by config validation and property tests.
@@ -226,6 +285,52 @@ mod tests {
                 assert!(q.is_p2_quorum(&acc, &picked.iter().copied().collect()));
             }
         }
+    }
+
+    #[test]
+    fn validate_rejects_bad_flexible() {
+        assert!(QuorumSpec::Flexible { p1: 2, p2: 2 }.validate(4).is_err());
+        assert!(QuorumSpec::Flexible { p1: 0, p2: 3 }.validate(3).is_err());
+        assert!(QuorumSpec::Flexible { p1: 5, p2: 1 }.validate(3).is_err());
+        QuorumSpec::Flexible { p1: 3, p2: 2 }.validate(4).unwrap();
+        let err = QuorumSpec::Flexible { p1: 1, p2: 2 }.validate(4).unwrap_err();
+        assert!(err.contains("must exceed |A| = 4"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_explicit() {
+        let oob = QuorumSpec::Explicit {
+            p1: vec![set_usize(&[0, 4])],
+            p2: vec![set_usize(&[0, 1])],
+        };
+        let err = oob.validate(3).unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+        let empty = QuorumSpec::Explicit { p1: vec![], p2: vec![set_usize(&[0])] };
+        assert!(empty.validate(3).is_err());
+        let empty_q = QuorumSpec::Explicit {
+            p1: vec![set_usize(&[])],
+            p2: vec![set_usize(&[0])],
+        };
+        assert!(empty_q.validate(3).is_err());
+        let disjoint = QuorumSpec::Explicit {
+            p1: vec![set_usize(&[0])],
+            p2: vec![set_usize(&[1])],
+        };
+        assert!(disjoint.validate(3).is_err());
+        // The 2x2 grid from `explicit_quorums` is valid.
+        QuorumSpec::Explicit {
+            p1: vec![set_usize(&[0, 1]), set_usize(&[2, 3])],
+            p2: vec![set_usize(&[0, 2]), set_usize(&[1, 3])],
+        }
+        .validate(4)
+        .unwrap();
+    }
+
+    #[test]
+    fn validate_counting_specs() {
+        QuorumSpec::Majority.validate(3).unwrap();
+        QuorumSpec::FastUnanimous.validate(2).unwrap();
+        assert!(QuorumSpec::Majority.validate(0).is_err());
     }
 
     #[test]

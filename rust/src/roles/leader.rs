@@ -11,6 +11,19 @@
 //! bypassing) Phase 1 is skipped entirely for the empty log suffix, so no
 //! command is ever delayed (§4.4, Figure 6).
 //!
+//! Steady-state Phase 2 is **batched and pipelined**: with
+//! `OptFlags::batch_size > 1` the leader accumulates client commands into
+//! a per-slot [`Value::Batch`] (flushed when full or after
+//! `OptFlags::batch_delay`), so one quorum round trip chooses up to
+//! `batch_size` commands; slots are proposed without waiting for earlier
+//! slots to be chosen (no α window), so any number of batches are in
+//! flight concurrently. Batches keep flowing through reconfigurations: a
+//! batch proposed in `C_old` during matchmaking (Optimization 1)
+//! completes in its original round, and the Phase 2 watchdog re-proposes
+//! the *same* batch in the new round if the old configuration stops
+//! answering — replicas deduplicate per command, so every command
+//! executes exactly once, in per-client FIFO order.
+//!
 //! The leader also drives configuration retirement (§5.3): once every log
 //! entry below the reconfiguration barrier is chosen, stored on f+1
 //! replicas, and a P2 quorum of the new configuration has been told so
@@ -181,6 +194,12 @@ pub struct Leader {
     /// Commands waiting for an active round (stalled during non-proactive
     /// matchmaking / Phase 1 — the §8.2 ablation measures exactly this).
     stalled: VecDeque<Command>,
+    /// Commands accumulating into the next `Value::Batch` slot
+    /// (`opts.batch_size > 1` only). Flushed when full or when the
+    /// `BatchFlush` timer fires after `opts.batch_delay`.
+    pending_batch: Vec<Command>,
+    /// Whether a `BatchFlush` timer is outstanding.
+    batch_timer_armed: bool,
     /// Highest seq assigned per client (dedup of client retries).
     client_table: HashMap<NodeId, u64>,
     cmd_slots: HashMap<(NodeId, u64), Slot>,
@@ -251,6 +270,8 @@ impl Leader {
             next_slot: 0,
             chosen_watermark: 0,
             stalled: VecDeque::new(),
+            pending_batch: Vec::new(),
+            batch_timer_armed: false,
             client_table: HashMap::new(),
             cmd_slots: HashMap::new(),
             replica_acks: BTreeMap::new(),
@@ -543,10 +564,12 @@ impl Leader {
         self.reconfigs_completed += 1;
         fx.announce(Announce::LeaderSteady { round: self.round });
 
-        // Drain commands stalled during installation.
+        // Drain commands stalled during installation, then flush any
+        // partial batch immediately — the stall already cost them latency.
         while let Some(cmd) = self.stalled.pop_front() {
             self.assign_and_propose(cmd, now, fx);
         }
+        self.flush_batch(now, fx);
 
         // Start the GC driver for this round (§5.3).
         if self.opts.garbage_collection {
@@ -586,10 +609,46 @@ impl Leader {
             }
         }
         self.client_table.insert(cmd.client, cmd.seq);
+        if self.opts.batch_size > 1 {
+            // Phase 2 batching: accumulate; flush when full, or let the
+            // delay timer flush a partial batch.
+            self.pending_batch.push(cmd);
+            if self.pending_batch.len() >= self.opts.batch_size {
+                self.flush_batch(now, fx);
+            } else if !self.batch_timer_armed {
+                self.batch_timer_armed = true;
+                fx.timer(self.opts.batch_delay, Timer::BatchFlush);
+            }
+            return;
+        }
         let slot = self.next_slot;
         self.next_slot += 1;
         self.cmd_slots.insert(cmd.id(), slot);
         self.propose(slot, Value::Cmd(cmd), round, now, fx);
+    }
+
+    /// Propose the accumulated batch in one slot. No-op while no round is
+    /// active (e.g. mid-Phase 1 without Optimization 1); the commands stay
+    /// pending and flush once the installation completes.
+    fn flush_batch(&mut self, now: Time, fx: &mut Effects) {
+        if self.pending_batch.is_empty() {
+            return;
+        }
+        let Some(round) = self.active_round else {
+            return;
+        };
+        let cmds = std::mem::take(&mut self.pending_batch);
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        for c in &cmds {
+            self.cmd_slots.insert(c.id(), slot);
+        }
+        let value = if cmds.len() == 1 {
+            Value::Cmd(cmds.into_iter().next().unwrap())
+        } else {
+            Value::Batch(cmds)
+        };
+        self.propose(slot, value, round, now, fx);
     }
 
     fn propose(&mut self, slot: Slot, value: Value, round: Round, now: Time, fx: &mut Effects) {
@@ -1036,6 +1095,19 @@ impl Node for Leader {
                     self.watchdog_armed = false;
                 }
             }
+            Timer::BatchFlush => {
+                self.batch_timer_armed = false;
+                if self.is_leader {
+                    self.flush_batch(now, fx);
+                    if !self.pending_batch.is_empty() {
+                        // No active round yet (installation in flight):
+                        // keep the timer alive so the batch flushes soon
+                        // after steady state returns.
+                        self.batch_timer_armed = true;
+                        fx.timer(self.opts.batch_delay, Timer::BatchFlush);
+                    }
+                }
+            }
             Timer::PhaseResend { generation } => {
                 if generation != self.generation || !self.is_leader {
                     return;
@@ -1286,6 +1358,52 @@ mod tests {
         assert!(p.leader.is_steady());
         p.client_cmd(100, 2);
         assert_eq!(p.chosen_count(), 2);
+    }
+
+    #[test]
+    fn batching_packs_commands_into_one_slot() {
+        let mut p = Pump::new(OptFlags::default().with_batching(3, u64::MAX / 4));
+        p.start();
+        // Deliver three requests without pumping, so they accumulate
+        // instead of completing one at a time.
+        let mut fx = Effects::new();
+        for seq in 1..=2 {
+            let cmd = Command { client: 100, seq, payload: vec![0] };
+            p.leader.on_msg(1, 100, Msg::ClientRequest { cmd }, &mut fx);
+        }
+        assert!(fx.msgs.is_empty(), "commands must buffer until the batch fills");
+        let cmd = Command { client: 101, seq: 1, payload: vec![0] };
+        p.leader.on_msg(1, 101, Msg::ClientRequest { cmd }, &mut fx);
+        assert!(!fx.msgs.is_empty(), "a full batch must flush immediately");
+        p.pump(fx, 1);
+        // One slot chose all three commands; replicas executed each.
+        assert_eq!(p.leader.next_slot, 1);
+        assert_eq!(p.chosen_count(), 1);
+        for r in &p.reps {
+            assert_eq!(r.exec_watermark, 1);
+            assert_eq!(r.executed, 3);
+        }
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_timer() {
+        let mut p = Pump::new(OptFlags::default().with_batching(8, 42));
+        p.start();
+        let mut fx = Effects::new();
+        let cmd = Command { client: 100, seq: 1, payload: vec![0] };
+        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd }, &mut fx);
+        assert!(fx.msgs.is_empty());
+        assert!(fx
+            .timers
+            .iter()
+            .any(|(d, t)| *d == 42 && matches!(t, Timer::BatchFlush)));
+        let mut fx2 = Effects::new();
+        p.leader.on_timer(43, Timer::BatchFlush, &mut fx2);
+        p.pump(fx2, 43);
+        assert_eq!(p.chosen_count(), 1);
+        for r in &p.reps {
+            assert_eq!(r.executed, 1);
+        }
     }
 
     #[test]

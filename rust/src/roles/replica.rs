@@ -8,7 +8,7 @@
 //! collected), and they serve `ReadPrefix` so a newly elected leader can
 //! learn the chosen prefix (§4.1: "by communicating with the replicas").
 
-use crate::msg::{Msg, Value};
+use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::statemachine::StateMachine;
 use crate::{NodeId, Slot, Time};
@@ -51,32 +51,31 @@ impl Replica {
     /// new prefix to the leader that informed us.
     fn execute_ready(&mut self, leader: NodeId, fx: &mut Effects) {
         let before = self.exec_watermark;
-        while let Some(value) = self.log.get(&self.exec_watermark) {
+        loop {
+            let Some(value) = self.log.get(&self.exec_watermark) else {
+                break;
+            };
+            // Split borrows: the commands stay borrowed from the log
+            // while the disjoint execution fields are mutated — no
+            // per-slot clone on the execution hot path.
             match value {
-                Value::Cmd(cmd) => {
-                    let dup = self
-                        .client_table
-                        .get(&cmd.client)
-                        .map_or(false, |(seq, _)| *seq >= cmd.seq);
-                    if dup {
-                        // Re-chosen retry of an executed command: re-reply
-                        // with the cached result, do not re-execute.
-                        if let Some((seq, result)) = self.client_table.get(&cmd.client) {
-                            if *seq == cmd.seq {
-                                fx.send(
-                                    cmd.client,
-                                    Msg::ClientReply { seq: *seq, result: result.clone() },
-                                );
-                            }
-                        }
-                    } else {
-                        let result = self.sm.apply(&cmd.payload);
-                        self.executed += 1;
-                        self.client_table
-                            .insert(cmd.client, (cmd.seq, result.clone()));
-                        fx.send(cmd.client, Msg::ClientReply { seq: cmd.seq, result });
-                    }
-                }
+                Value::Cmd(cmd) => exec_commands(
+                    std::slice::from_ref(cmd),
+                    &mut self.client_table,
+                    self.sm.as_mut(),
+                    &mut self.executed,
+                    fx,
+                ),
+                // Phase 2 batching: unpack and execute the whole batch
+                // through one `StateMachine::apply_many` invocation,
+                // replying to each client individually.
+                Value::Batch(cmds) => exec_commands(
+                    cmds,
+                    &mut self.client_table,
+                    self.sm.as_mut(),
+                    &mut self.executed,
+                    fx,
+                ),
                 Value::Noop | Value::Reconfig(_) => {}
             }
             if self.announce_execs {
@@ -87,6 +86,53 @@ impl Replica {
         if self.exec_watermark != before {
             fx.send(leader, Msg::ReplicaAck { upto: self.exec_watermark });
         }
+    }
+
+}
+
+/// Execute a run of commands from one slot: deduplicate retries
+/// (re-replying with the cached result), then apply the fresh suffix as a
+/// single state-machine batch, in order, with one reply per command.
+///
+/// A free function over the replica's disjoint execution fields so the
+/// commands can stay borrowed from the log (no clone per executed slot).
+fn exec_commands(
+    cmds: &[Command],
+    client_table: &mut HashMap<NodeId, (u64, Vec<u8>)>,
+    sm: &mut dyn StateMachine,
+    executed: &mut u64,
+    fx: &mut Effects,
+) {
+    let mut fresh: Vec<&Command> = Vec::with_capacity(cmds.len());
+    for cmd in cmds {
+        let dup = client_table
+            .get(&cmd.client)
+            .map_or(false, |(seq, _)| *seq >= cmd.seq);
+        if dup {
+            // Re-chosen retry of an executed command: re-reply with the
+            // cached result, do not re-execute.
+            if let Some((seq, result)) = client_table.get(&cmd.client) {
+                if *seq == cmd.seq {
+                    fx.send(
+                        cmd.client,
+                        Msg::ClientReply { seq: *seq, result: result.clone() },
+                    );
+                }
+            }
+        } else {
+            fresh.push(cmd);
+        }
+    }
+    if fresh.is_empty() {
+        return;
+    }
+    let payloads: Vec<&[u8]> = fresh.iter().map(|c| c.payload.as_slice()).collect();
+    let results = sm.apply_many(&payloads);
+    debug_assert_eq!(results.len(), fresh.len());
+    for (cmd, result) in fresh.iter().zip(results) {
+        *executed += 1;
+        client_table.insert(cmd.client, (cmd.seq, result.clone()));
+        fx.send(cmd.client, Msg::ClientReply { seq: cmd.seq, result });
     }
 }
 
@@ -208,6 +254,57 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn batch_executes_in_order_with_per_command_replies() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        let batch = Value::Batch(vec![
+            Command { client: 7, seq: 1, payload: KvStore::enc_set(b"k", b"v1") },
+            Command { client: 8, seq: 1, payload: KvStore::enc_get(b"k") },
+            Command { client: 7, seq: 2, payload: KvStore::enc_set(b"k", b"v2") },
+        ]);
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 0, value: batch });
+        assert_eq!(r.exec_watermark, 1);
+        assert_eq!(r.executed, 3);
+        // Per-command replies, in batch order: client 8's get observes
+        // client 7's earlier set (FIFO within the batch).
+        let replies: Vec<(NodeId, u64, Vec<u8>)> = fx
+            .msgs
+            .iter()
+            .filter_map(|(to, m)| match m {
+                Msg::ClientReply { seq, result } => Some((*to, *seq, result.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(replies.len(), 3);
+        assert_eq!(replies[0], (7, 1, b"OK".to_vec()));
+        assert_eq!(replies[1], (8, 1, b"v1".to_vec()));
+        assert_eq!(replies[2], (7, 2, b"OK".to_vec()));
+        // One ack for the new prefix.
+        assert!(fx.msgs.contains(&(0, Msg::ReplicaAck { upto: 1 })));
+    }
+
+    #[test]
+    fn rechosen_batch_not_reexecuted() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        let batch = Value::Batch(vec![
+            Command { client: 7, seq: 1, payload: KvStore::enc_set(b"k", b"v1") },
+            Command { client: 8, seq: 1, payload: KvStore::enc_set(b"j", b"w") },
+        ]);
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: batch.clone() });
+        assert_eq!(r.executed, 2);
+        // The same batch re-chosen at a later slot (leader retry across a
+        // reconfiguration): exactly-once execution, but both clients get
+        // their cached replies again.
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 1, value: batch });
+        assert_eq!(r.executed, 2);
+        let replies = fx
+            .msgs
+            .iter()
+            .filter(|(_, m)| matches!(m, Msg::ClientReply { .. }))
+            .count();
+        assert_eq!(replies, 2);
     }
 
     #[test]

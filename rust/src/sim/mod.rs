@@ -33,6 +33,13 @@ pub struct NetworkModel {
     pub per_kind_extra: BTreeMap<MsgKind, Time>,
     /// Delay for self-addressed messages.
     pub local_delay: Time,
+    /// Sender-side serialization cost per message (NIC/CPU egress): a
+    /// node's outbound messages depart one `tx_overhead` apart, so a
+    /// node emitting many messages queues behind itself. `0` (default)
+    /// models infinite egress bandwidth — the pre-batching behavior.
+    /// This is the resource Phase 2 batching trades against: fewer,
+    /// larger messages per chosen command.
+    pub tx_overhead: Time,
 }
 
 impl Default for NetworkModel {
@@ -43,6 +50,7 @@ impl Default for NetworkModel {
             drop_prob: 0.0,
             per_kind_extra: BTreeMap::new(),
             local_delay: 5 * US,
+            tx_overhead: 0,
         }
     }
 }
@@ -105,6 +113,8 @@ pub struct Sim {
     next_control: u64,
     /// Severed node pairs (unordered).
     cut_links: BTreeSet<(NodeId, NodeId)>,
+    /// Per-node egress-busy horizon (only used when `net.tx_overhead > 0`).
+    tx_busy: BTreeMap<NodeId, Time>,
     /// All announcements, timestamped: the harness's metrics feed and the
     /// test suite's safety-invariant feed.
     pub announces: Vec<(Time, NodeId, Announce)>,
@@ -127,6 +137,7 @@ impl Sim {
             controls: BTreeMap::new(),
             next_control: 0,
             cut_links: BTreeSet::new(),
+            tx_busy: BTreeMap::new(),
             announces: Vec::new(),
             delivered: 0,
             dropped: 0,
@@ -249,7 +260,7 @@ impl Sim {
                 .get(&msg.kind())
                 .copied()
                 .unwrap_or(0);
-            let delay = if to == from {
+            let mut delay = if to == from {
                 self.net.local_delay
             } else {
                 let jitter = if self.net.jitter > 0 {
@@ -259,6 +270,14 @@ impl Sim {
                 };
                 self.net.base_delay + jitter
             } + kind_extra;
+            if self.net.tx_overhead > 0 {
+                // Egress serialization: this message departs only after
+                // the sender's previous messages have left the NIC.
+                let free = self.tx_busy.get(&from).copied().unwrap_or(0).max(self.clock);
+                let depart = free + self.net.tx_overhead;
+                self.tx_busy.insert(from, depart);
+                delay += depart - self.clock;
+            }
             self.push(
                 self.clock + delay,
                 EventKind::Deliver(Box::new(Envelope { from, to, msg })),
@@ -456,6 +475,57 @@ mod tests {
         sim.run_to_quiescence(crate::SEC);
         // Delivery time = base (0.1ms) + extra (10ms).
         assert!(sim.now() >= ms(10));
+    }
+
+    #[test]
+    fn tx_overhead_serializes_egress() {
+        // A node emitting N messages at once with tx_overhead T delivers
+        // the last one ~N*T later than the first.
+        let mut net = NetworkModel::default();
+        net.jitter = 0;
+        net.tx_overhead = ms(1);
+        let mut sim = Sim::new(5, net);
+        sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 0 }));
+        sim.add_node(2, Box::new(Echo { count: 0, peer: 0, max: 0 }));
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 0 }));
+        // Node 0's on_start sends one message; queue 4 more by hand.
+        sim.schedule(0, |s| {
+            s.with_node::<Echo, _>(0, |_, _, fx| {
+                for _ in 0..4 {
+                    fx.send(2, Msg::StopA);
+                }
+            });
+        });
+        // Node 0's egress carries 5 messages (its on_start send + 4
+        // scheduled) serialized at 1 ms each: departures at 1..=5 ms,
+        // arrivals ~0.1 ms later. (Nodes 1 and 2 also send one startup
+        // message each, arriving at ~0.1 ms: 7 deliveries total.)
+        sim.run_until(ms(3));
+        assert_eq!(sim.delivered, 4, "expected 2 startup + 2 serialized by 3 ms");
+        sim.run_until(ms(10));
+        assert_eq!(sim.delivered, 7);
+    }
+
+    #[test]
+    fn zero_tx_overhead_matches_legacy_timing() {
+        // Default model: a burst of messages all arrive ~base_delay later
+        // (no egress queueing), preserving pre-existing behavior.
+        let mut net = NetworkModel::default();
+        net.jitter = 0;
+        let mut sim = Sim::new(5, net);
+        sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 0 }));
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 0 }));
+        sim.schedule(0, |s| {
+            s.with_node::<Echo, _>(0, |_, _, fx| {
+                for _ in 0..10 {
+                    fx.send(1, Msg::StopA);
+                }
+            });
+        });
+        // All 12 messages (2 startup + 10 burst) land within base_delay:
+        // no egress queueing by default.
+        sim.run_until(ms(1));
+        assert_eq!(sim.delivered, 12, "burst should land within base_delay");
     }
 
     #[test]

@@ -16,6 +16,15 @@ pub trait StateMachine: Send {
     /// Apply one command, returning the result sent back to the client.
     fn apply(&mut self, payload: &[u8]) -> Vec<u8>;
 
+    /// Apply a batch of commands in order, returning one result per
+    /// command (Phase 2 batching: replicas unpack a `Value::Batch` and
+    /// execute it through this entry point). The default applies commands
+    /// one by one; batch-native machines ([`TensorStateMachine`])
+    /// override it to amortize per-invocation overhead across the batch.
+    fn apply_many(&mut self, payloads: &[&[u8]]) -> Vec<Vec<u8>> {
+        payloads.iter().map(|p| self.apply(p)).collect()
+    }
+
     /// A digest of the current state, used by tests to check replica
     /// convergence. Default: empty (stateless machines).
     fn digest(&self) -> u64 {
@@ -256,6 +265,23 @@ mod tests {
         assert_eq!(c.apply(&5i64.to_le_bytes()), 5i64.to_le_bytes());
         assert_eq!(c.apply(&(-2i64).to_le_bytes()), 3i64.to_le_bytes());
         assert_eq!(c.digest(), 3);
+    }
+
+    #[test]
+    fn apply_many_default_matches_sequential() {
+        let mut a = KvStore::new();
+        let mut b = KvStore::new();
+        let cmds = vec![
+            KvStore::enc_set(b"x", b"1"),
+            KvStore::enc_set(b"y", b"2"),
+            KvStore::enc_get(b"x"),
+        ];
+        let refs: Vec<&[u8]> = cmds.iter().map(|c| c.as_slice()).collect();
+        let batched = a.apply_many(&refs);
+        let sequential: Vec<Vec<u8>> = cmds.iter().map(|c| b.apply(c)).collect();
+        assert_eq!(batched, sequential);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(batched[2], b"1");
     }
 
     #[test]

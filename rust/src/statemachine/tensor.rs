@@ -12,12 +12,30 @@
 //!
 //! `W` is a fixed mixing matrix generated from the same integer pattern on
 //! both sides (see `python/compile/kernels/ref.py`), `decay = 0.5`. All
-//! replicas run the identical compiled artifact, so they stay bit-for-bit
-//! in sync — the digest doubles as a cross-replica consistency check.
+//! replicas run the identical computation, so they stay bit-for-bit in
+//! sync — the digest doubles as a cross-replica consistency check.
+//!
+//! ## Backends
+//!
+//! * **Reference** (always available): [`reference_step`] in pure Rust —
+//!   the same math, deterministic, dependency-free. Used whenever the
+//!   `pjrt` feature is off or the AOT artifacts are missing, so the
+//!   tensor path (and the Phase 2 batching experiments built on it) runs
+//!   everywhere.
+//! * **PJRT** (`--features pjrt` + `make artifacts`): executes the
+//!   compiled `apply_batch_b{1,8,32}.hlo.txt` artifacts through the XLA
+//!   PJRT CPU client ([`crate::runtime`]). Python is never on the request
+//!   path.
+//!
+//! Note the batch semantics: `decay` is applied once per *batch*, so the
+//! state after `apply_many([c1, c2])` intentionally differs from two
+//! single-command applies. Replicas execute identical chosen batches in
+//! identical order, so they remain bitwise consistent for any batching
+//! configuration.
 
 use super::StateMachine;
-use crate::runtime::{artifacts_dir, Engine, Program};
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 
 /// State dimension. Must match `python/compile/model.py::D`.
@@ -28,47 +46,82 @@ pub const BATCH_SIZES: [usize; 3] = [1, 8, 32];
 /// State decay per batch. Must match `python/compile/model.py::DECAY`.
 pub const DECAY: f32 = 0.5;
 
-/// XLA-backed replicated tensor state machine.
+/// How a loaded [`TensorStateMachine`] executes a batch.
+enum Backend {
+    /// Pure-Rust evaluator ([`reference_step`]).
+    Reference,
+    /// Compiled AOT artifacts executed via PJRT, one program per batch
+    /// size.
+    #[cfg(feature = "pjrt")]
+    Pjrt(BTreeMap<usize, crate::runtime::Program>),
+}
+
+/// Replicated tensor state machine (reference or XLA-backed).
 pub struct TensorStateMachine {
-    // NOTE on Send (see unsafe impl below): the xla crate's handles hold
-    // `Rc`s and raw PJRT pointers, so the compiler can't prove Send. We
-    // only ever *move* the whole state machine into a single owning thread
-    // (replica event loop); the Rcs are never shared across threads, and
-    // the PJRT CPU client supports use from any one thread at a time.
+    // NOTE on Send (see unsafe impl below): with the `pjrt` feature the
+    // xla crate's handles hold `Rc`s and raw PJRT pointers, so the
+    // compiler can't prove Send. We only ever *move* the whole state
+    // machine into a single owning thread (replica event loop); the Rcs
+    // are never shared across threads, and the PJRT CPU client supports
+    // use from any one thread at a time. The reference backend is
+    // trivially Send.
     state: Vec<f32>, // D*D row-major
-    programs: BTreeMap<usize, Program>,
+    backend: Backend,
     /// Batches applied (metrics).
     pub batches: u64,
     /// Commands applied (metrics).
     pub commands: u64,
 }
 
-// SAFETY: all xla handles inside are owned exclusively by this struct and
-// are only accessed by the single thread that owns it at any given time
-// (the Rc reference graph is fully contained within the struct, so moving
-// the struct moves every strong count with it).
+// SAFETY: all backend handles inside are owned exclusively by this struct
+// and are only accessed by the single thread that owns it at any given
+// time (any Rc reference graph is fully contained within the struct, so
+// moving the struct moves every strong count with it).
 unsafe impl Send for TensorStateMachine {}
 
 impl TensorStateMachine {
-    /// Load the AOT artifacts (`apply_batch_b{B}.hlo.txt`) and initialize
-    /// a zero state. Requires `make artifacts`.
+    /// Load the state machine with a zero state. With `--features pjrt`
+    /// and built artifacts (`make artifacts`) this compiles and uses the
+    /// AOT programs; otherwise it falls back to the pure-Rust reference
+    /// backend with identical semantics.
     pub fn load() -> Result<TensorStateMachine> {
-        let engine = Engine::cpu()?;
-        let dir = artifacts_dir();
-        let mut programs = BTreeMap::new();
-        for b in BATCH_SIZES {
-            let path = dir.join(format!("apply_batch_b{b}.hlo.txt"));
-            let program = engine
-                .load_hlo_text(&path)
-                .with_context(|| format!("load artifact for batch size {b} — run `make artifacts`"))?;
-            programs.insert(b, program);
+        #[cfg(feature = "pjrt")]
+        {
+            if crate::runtime::artifacts_available() {
+                use anyhow::Context as _;
+                let engine = crate::runtime::Engine::cpu()?;
+                let dir = crate::runtime::artifacts_dir();
+                let mut programs = BTreeMap::new();
+                for b in BATCH_SIZES {
+                    let path = dir.join(format!("apply_batch_b{b}.hlo.txt"));
+                    let program = engine.load_hlo_text(&path).with_context(|| {
+                        format!("load artifact for batch size {b} — run `make artifacts`")
+                    })?;
+                    programs.insert(b, program);
+                }
+                return Ok(TensorStateMachine {
+                    state: vec![0.0; D * D],
+                    backend: Backend::Pjrt(programs),
+                    batches: 0,
+                    commands: 0,
+                });
+            }
         }
         Ok(TensorStateMachine {
             state: vec![0.0; D * D],
-            programs,
+            backend: Backend::Reference,
             batches: 0,
             commands: 0,
         })
+    }
+
+    /// Which backend executes batches: `"reference"` or `"pjrt"`.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Reference => "reference",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
     }
 
     /// Decode a command payload into a `D`-vector (f32 LE, zero-padded).
@@ -83,6 +136,32 @@ impl TensorStateMachine {
     /// Encode a command vector into a payload.
     pub fn encode(cmd: &[f32]) -> Vec<u8> {
         cmd.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    /// Run one compiled/padded batch step of size `b` over `batch`
+    /// (row-major `b × D`), updating the state and returning all `b`
+    /// digests.
+    fn step(&mut self, b: usize, batch: &[f32]) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Reference => {
+                let rows: Vec<Vec<f32>> =
+                    (0..b).map(|r| batch[r * D..(r + 1) * D].to_vec()).collect();
+                let (state, digests) = reference_step(&self.state, &rows);
+                self.state = state;
+                Ok(digests)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(programs) => {
+                let program = &programs[&b];
+                let outputs = program.run_f32(&[
+                    (&self.state, &[D as i64, D as i64]),
+                    (batch, &[b as i64, D as i64]),
+                ])?;
+                anyhow::ensure!(outputs.len() == 2, "expected (state, digest) outputs");
+                self.state = outputs[0].clone();
+                Ok(outputs[1].clone())
+            }
+        }
     }
 
     /// Apply a batch of decoded commands; returns per-command digests.
@@ -110,14 +189,8 @@ impl TensorStateMachine {
             for (i, c) in cmds[offset..offset + take].iter().enumerate() {
                 batch[i * D..(i + 1) * D].copy_from_slice(&c[..D]);
             }
-            let program = &self.programs[&b];
-            let outputs = program.run_f32(&[
-                (&self.state, &[D as i64, D as i64]),
-                (&batch, &[b as i64, D as i64]),
-            ])?;
-            anyhow::ensure!(outputs.len() == 2, "expected (state, digest) outputs");
-            self.state = outputs[0].clone();
-            digests.extend_from_slice(&outputs[1][..take]);
+            let step_digests = self.step(b, &batch)?;
+            digests.extend_from_slice(&step_digests[..take]);
             self.batches += 1;
             self.commands += take as u64;
             offset += take;
@@ -137,6 +210,20 @@ impl StateMachine for TensorStateMachine {
         match self.apply_batch(&[cmd]) {
             Ok(digests) => digests[0].to_le_bytes().to_vec(),
             Err(e) => format!("ERR {e}").into_bytes(),
+        }
+    }
+
+    /// Batch-native execution: one XLA (or reference) invocation covers
+    /// the whole batch — this is the path the Phase 2 batching tentpole
+    /// routes replica execution through.
+    fn apply_many(&mut self, payloads: &[&[u8]]) -> Vec<Vec<u8>> {
+        let cmds: Vec<Vec<f32>> = payloads.iter().map(|p| Self::decode(p)).collect();
+        match self.apply_batch(&cmds) {
+            Ok(digests) => digests.iter().map(|d| d.to_le_bytes().to_vec()).collect(),
+            Err(e) => {
+                let msg = format!("ERR {e}").into_bytes();
+                payloads.iter().map(|_| msg.clone()).collect()
+            }
         }
     }
 
@@ -169,8 +256,8 @@ pub fn mixing_matrix() -> Vec<f32> {
     w
 }
 
-/// Pure-Rust reference of one batch step (the oracle for artifact tests;
-/// mirrors `python/compile/kernels/ref.py`).
+/// Pure-Rust reference of one batch step (the reference backend, and the
+/// oracle for artifact tests; mirrors `python/compile/kernels/ref.py`).
 pub fn reference_step(state: &[f32], cmds: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
     let w = mixing_matrix();
     let b = cmds.len();
@@ -207,7 +294,6 @@ pub fn reference_step(state: &[f32], cmds: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts_available;
 
     fn cmd(seed: u64) -> Vec<f32> {
         let mut rng = crate::util::Rng::new(seed);
@@ -242,11 +328,10 @@ mod tests {
     }
 
     #[test]
-    fn artifact_matches_reference() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
+    fn loaded_backend_matches_reference() {
+        // With the default (reference) backend this is an identity check;
+        // with `--features pjrt` + artifacts it cross-checks the compiled
+        // program against the Rust oracle.
         let mut sm = TensorStateMachine::load().unwrap();
         let cmds: Vec<Vec<f32>> = (0..8).map(|i| cmd(100 + i)).collect();
         let (ref_state, ref_digest) = reference_step(&vec![0f32; D * D], &cmds);
@@ -257,14 +342,12 @@ mod tests {
         for (a, b) in sm.state().iter().zip(&ref_state) {
             assert!((a - b).abs() < 1e-3, "state {a} vs {b}");
         }
+        assert_eq!(sm.batches, 1);
+        assert_eq!(sm.commands, 8);
     }
 
     #[test]
     fn replicas_stay_in_sync() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let mut a = TensorStateMachine::load().unwrap();
         let mut b = TensorStateMachine::load().unwrap();
         for i in 0..20 {
@@ -279,15 +362,47 @@ mod tests {
 
     #[test]
     fn batch_padding_equals_sequential() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        // Applying 5 commands (padded batch) must equal applying them as
-        // one batch of 5 in the reference.
+        // Applying 5 commands pads up to the b=8 program; all 5 digests
+        // come back and the padding rows contribute nothing.
         let mut sm = TensorStateMachine::load().unwrap();
-        let cmds: Vec<Vec<f32>> = (0..5).map(|i| cmd(i)).collect();
+        let cmds: Vec<Vec<f32>> = (0..5).map(cmd).collect();
         let digests = sm.apply_batch(&cmds).unwrap();
         assert_eq!(digests.len(), 5);
+        let (_, ref_digest) = reference_step(&vec![0f32; D * D], &cmds);
+        for (a, b) in digests.iter().zip(&ref_digest) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn apply_many_is_batch_native() {
+        // apply_many(batch) == apply_batch(batch): one decay per batch,
+        // per-command digests in order.
+        let mut via_trait = TensorStateMachine::load().unwrap();
+        let mut via_batch = TensorStateMachine::load().unwrap();
+        let cmds: Vec<Vec<f32>> = (0..6).map(|i| cmd(50 + i)).collect();
+        let payloads: Vec<Vec<u8>> =
+            cmds.iter().map(|c| TensorStateMachine::encode(c)).collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let results = StateMachine::apply_many(&mut via_trait, &refs);
+        let digests = via_batch.apply_batch(&cmds).unwrap();
+        assert_eq!(results.len(), 6);
+        for (r, d) in results.iter().zip(&digests) {
+            assert_eq!(r.as_slice(), d.to_le_bytes().as_slice());
+        }
+        assert_eq!(via_trait.digest(), StateMachine::digest(&via_batch));
+        // Batch-native: 6 commands, ONE padded batch invocation.
+        assert_eq!(via_trait.batches, 1);
+    }
+
+    #[test]
+    fn large_input_chunks_by_32() {
+        let mut sm = TensorStateMachine::load().unwrap();
+        let cmds: Vec<Vec<f32>> = (0..70).map(cmd).collect();
+        let digests = sm.apply_batch(&cmds).unwrap();
+        assert_eq!(digests.len(), 70);
+        // 32 + 32 + 6→8-padded = 3 batch invocations.
+        assert_eq!(sm.batches, 3);
+        assert_eq!(sm.commands, 70);
     }
 }

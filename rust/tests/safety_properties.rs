@@ -9,13 +9,13 @@
 use matchmaker::codec::{sample_messages, Wire};
 use matchmaker::config::{Configuration, OptFlags};
 use matchmaker::harness::{msec, secs, Cluster};
-use matchmaker::msg::{Envelope, Msg};
+use matchmaker::msg::{Envelope, Msg, Value};
 use matchmaker::quorum::QuorumSpec;
 use matchmaker::roles::{Leader, Replica};
 use matchmaker::sim::NetworkModel;
 use matchmaker::util::Rng;
 use matchmaker::NodeId;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Run `f` for `cases` seeds; panics carry the seed for reproduction.
 fn property(name: &str, cases: u64, f: impl Fn(u64)) {
@@ -159,6 +159,84 @@ fn safety_under_matchmaker_reconfig_storm() {
         cluster.assert_safe();
         assert_replicas_prefix_consistent(&mut cluster);
     });
+}
+
+/// Phase 2 batching tentpole property: under a reconfiguration storm,
+/// every batched command is decided exactly once and executed in
+/// per-client FIFO order with no gaps — with and without Optimizations
+/// 1/2 (proactive matchmaking, Phase 1 bypassing), i.e. both when
+/// batches keep flowing to `C_old` during matchmaking and when they
+/// stall and drain through the full Phase 1 path.
+#[test]
+fn batching_exactly_once_fifo_across_reconfig() {
+    for (proactive, bypass) in [(true, true), (false, false)] {
+        let name = format!("batching exactly-once (opt1={proactive}, opt2={bypass})");
+        property(&name, 5, |seed| {
+            let mut opts = OptFlags::default().with_batching(8, 500 * matchmaker::US);
+            opts.proactive_matchmaking = proactive;
+            opts.phase1_bypass = bypass;
+            let mut cluster = Cluster::lan(1, 6, opts, seed);
+            let leader = cluster.initial_leader();
+            // Four reconfigurations while commands stream.
+            for i in 0..4u64 {
+                let cfg = cluster.random_config(i + 1);
+                cluster.sim.schedule(msec(250 + i * 250), move |s| {
+                    s.with_node::<Leader, _>(leader, |l, now, fx| {
+                        l.reconfigure(cfg.clone(), now, fx)
+                    });
+                });
+            }
+            cluster.sim.run_until(secs(2));
+            cluster.assert_safe();
+            assert_batched_exactly_once_fifo(&mut cluster);
+            assert_replicas_prefix_consistent(&mut cluster);
+            // Commands flowed throughout (no permanent stall).
+            let samples = cluster.samples();
+            assert!(
+                samples.iter().any(|(t, _)| *t > msec(1500)),
+                "no progress late in the run (seed {seed})"
+            );
+        });
+    }
+}
+
+/// Walk each replica's executed log in slot order, flattening batches:
+/// no (client, seq) may appear twice, each client's commands must appear
+/// in contiguous FIFO order (1, 2, 3, ...), and the replica's execution
+/// counter must equal the number of distinct commands.
+fn assert_batched_exactly_once_fifo(cluster: &mut Cluster) {
+    for &r in &cluster.layout.replicas.clone() {
+        let rep = cluster.sim.node_mut::<Replica>(r).expect("replica");
+        let mut flat: Vec<(NodeId, u64)> = Vec::new();
+        for slot in 0..rep.exec_watermark {
+            match rep.log.get(&slot) {
+                Some(Value::Cmd(c)) => flat.push((c.client, c.seq)),
+                Some(Value::Batch(cmds)) => {
+                    assert!(cmds.len() >= 2, "degenerate batch in slot {slot}");
+                    flat.extend(cmds.iter().map(|c| (c.client, c.seq)));
+                }
+                _ => {}
+            }
+        }
+        let mut seen: BTreeSet<(NodeId, u64)> = BTreeSet::new();
+        for p in &flat {
+            assert!(seen.insert(*p), "command {p:?} decided twice on replica {r}");
+        }
+        let mut next: BTreeMap<NodeId, u64> = BTreeMap::new();
+        for (client, seq) in flat {
+            let e = next.entry(client).or_insert(1);
+            assert_eq!(
+                seq, *e,
+                "client {client} executed out of FIFO order on replica {r}"
+            );
+            *e += 1;
+        }
+        assert_eq!(
+            rep.executed as usize,
+            seen.len(),
+            "replica {r} executed a command more or less than once"
+        );
+    }
 }
 
 /// Replica logs agree on every slot both have executed (prefix

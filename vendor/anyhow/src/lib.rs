@@ -1,0 +1,214 @@
+//! A vendored, minimal stand-in for the `anyhow` crate so the build is
+//! fully offline (no registry access). It implements exactly the subset
+//! this repository uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros. The coherence
+//! tricks (a `From<E: std::error::Error>` blanket on a type that itself
+//! does *not* implement `std::error::Error`, and the private `ext` trait
+//! backing `Context`) mirror the real crate.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A boxed-ish dynamic error with human-readable context, mirroring
+/// `anyhow::Error`. Intentionally does NOT implement `std::error::Error`
+/// (that is what makes the blanket `From` impl coherent).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend a layer of context to the message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause chain, outermost first (subset of anyhow's API).
+    pub fn root_cause(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|e| e.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::*;
+
+    /// Private dispatch trait: "anything that can absorb context". The two
+    /// impls below do not overlap because [`Error`] does not implement
+    /// `std::error::Error`.
+    pub trait IntoError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::new(self).context(context)
+        }
+    }
+
+    impl IntoError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.root_cause().is_some());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        // Context on an already-anyhow Result (the ext::IntoError impl
+        // for Error itself).
+        let r: Result<()> = Err(anyhow!("inner {}", 3));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 3");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+        let msg = String::from("plain");
+        assert_eq!(anyhow!(msg).to_string(), "plain");
+    }
+}
