@@ -82,4 +82,7 @@ fn main() {
     if want("x3") {
         timed("X3 (Phase 2 batching, tensor path)", || exp::batching_figure(seed).render());
     }
+    if want("x4") {
+        timed("X4 (open-loop offered-load sweep)", || exp::open_loop_figure(seed).render());
+    }
 }

@@ -22,6 +22,7 @@ use matchmaker::msg::{Command, Envelope, Msg, Value};
 use matchmaker::node::{Effects, Node};
 use matchmaker::roles::Acceptor;
 use matchmaker::round::Round;
+use matchmaker::workload::WorkloadSpec;
 use std::time::Instant;
 
 /// Run `f(n)` with increasing n until it takes ≥0.2 s, then report
@@ -106,21 +107,21 @@ fn main() {
         // One simulated second ≈ 14.6k commands with 8 clients; scale the
         // simulated horizon so ~n commands complete.
         let sim_secs = (n / 14_000).max(1);
-        let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 42);
+        let mut cluster = Cluster::builder().clients(8).seed(42).build();
         cluster.sim.run_until(secs(sim_secs));
         std::hint::black_box(cluster.samples().len());
     });
 
     bench("sim: delivered message", |n| {
         let sim_secs = (n / 230_000).max(1);
-        let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 42);
+        let mut cluster = Cluster::builder().clients(8).seed(42).build();
         cluster.sim.run_until(secs(sim_secs));
         std::hint::black_box(cluster.sim.delivered);
     });
 
     // --- leader pipeline within a pumped cluster (no network jitter) ---
     bench("cluster: reconfiguration (full lifecycle)", |n| {
-        let mut cluster = Cluster::lan(1, 1, OptFlags::default(), 42);
+        let mut cluster = Cluster::builder().clients(1).seed(42).build();
         let leader = cluster.initial_leader();
         cluster.sim.run_until(secs(1) / 10);
         for i in 0..n {
@@ -172,6 +173,40 @@ fn main() {
             run.throughput,
             run.median_ms,
             run.throughput / base
+        );
+    }
+
+    // --- workload modes: closed-loop vs open-loop-pipelined chosen
+    // commands/sec at equal client count (the ISSUE-2 pipelining win;
+    // see harness::experiments::open_loop_figure for the X4 sweep) ---
+    println!("\n# workload modes (4 clients, lan, 2 sim-seconds, reconfig at 1 s)\n");
+    let mut closed_rate = f64::NAN;
+    let workloads: [(&str, WorkloadSpec); 3] = [
+        ("closed-loop (window 1)", WorkloadSpec::closed_loop()),
+        ("pipelined closed-loop (window 16)", WorkloadSpec::pipelined(16)),
+        (
+            "open-loop pipelined (6000/s/client, in-flight 16)",
+            WorkloadSpec::open_loop(6000.0).max_in_flight(16),
+        ),
+    ];
+    for (label, spec) in workloads {
+        let mut cluster = Cluster::builder().clients(4).workload(spec).seed(42).build();
+        let leader = cluster.initial_leader();
+        let cfg = cluster.random_config(1);
+        cluster.sim.schedule(secs(1), move |s| {
+            s.with_node::<matchmaker::roles::Leader, _>(leader, |l, now, fx| {
+                l.reconfigure(cfg.clone(), now, fx)
+            });
+        });
+        cluster.sim.run_until(secs(2));
+        cluster.assert_safe();
+        let rate = cluster.samples().len() as f64 / 2.0;
+        if closed_rate.is_nan() {
+            closed_rate = rate;
+        }
+        println!(
+            "{label:<50} {rate:>10.0} cmds/s (sim)   {:>5.1}x",
+            rate / closed_rate
         );
     }
 }

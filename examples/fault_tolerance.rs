@@ -7,7 +7,7 @@
 //! cargo run --release --example fault_tolerance
 //! ```
 
-use matchmaker::config::{Configuration, OptFlags};
+use matchmaker::config::Configuration;
 use matchmaker::harness::{secs, Cluster};
 use matchmaker::metrics::timeline;
 use matchmaker::node::Announce;
@@ -15,7 +15,7 @@ use matchmaker::roles::Leader;
 use matchmaker::{NodeId, SEC, MS};
 
 fn main() {
-    let mut cluster = Cluster::lan(1, 8, OptFlags::default(), 7);
+    let mut cluster = Cluster::builder().f(1).clients(8).seed(7).build();
     let p0 = cluster.layout.proposers[0];
     let p1 = cluster.layout.proposers[1];
     let dead_acc = cluster.layout.acceptor_pool[0];

@@ -6,16 +6,25 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use matchmaker::config::{Configuration, OptFlags};
+use matchmaker::config::Configuration;
 use matchmaker::harness::{secs, Cluster};
 use matchmaker::metrics::interval_summary;
 use matchmaker::node::Announce;
 use matchmaker::roles::Leader;
+use matchmaker::workload::WorkloadSpec;
 
 fn main() {
     // f = 1: 2 proposers, 6-acceptor pool (3 active), 6 matchmakers
-    // (3 active), 3 replicas — the paper's deployment — plus 4 clients.
-    let mut cluster = Cluster::lan(1, 4, OptFlags::default(), 42);
+    // (3 active), 3 replicas — the paper's deployment — plus 4
+    // closed-loop clients (the §8.1 workload; swap the spec for
+    // `WorkloadSpec::open_loop(...)` or `::pipelined(k)` to load the
+    // same cluster differently).
+    let mut cluster = Cluster::builder()
+        .f(1)
+        .clients(4)
+        .workload(WorkloadSpec::closed_loop())
+        .seed(42)
+        .build();
     let leader = cluster.initial_leader();
     println!(
         "cluster: f=1, leader = node {leader}, initial acceptors = {:?}",

@@ -3,13 +3,19 @@
 //! 8 closed-loop clients; one acceptor reconfiguration per second between
 //! 10 s and 20 s; an acceptor failure at 25 s; a replacement
 //! reconfiguration at 30 s. Prints the sliding-window latency/throughput
-//! timeline and the Table-1-style before/during comparison.
+//! timeline and the Table-1-style before/during comparison — then repeats
+//! the reconfiguration-under-load measurement with an *open-loop*
+//! pipelined workload, which is how related reconfiguration work reports
+//! steady-state impact (offered vs completed rate, not a closed loop's
+//! self-limiting throughput).
 //!
 //! ```sh
 //! cargo run --release --example reconfiguration_demo
 //! ```
 
-use matchmaker::harness::experiments::run_reconfig_schedule;
+use matchmaker::harness::experiments::{
+    run_closed_loop_rate, run_offered_load, run_reconfig_schedule,
+};
 use matchmaker::harness::secs;
 use matchmaker::metrics::interval_summary;
 use matchmaker::util::stats;
@@ -66,4 +72,21 @@ fn main() {
         "max |H_i| returned by matchmakers: {} (paper: \"only one configuration is ever returned\")",
         run.max_prior_configs
     );
+
+    // The same cluster under open-loop load (reconfiguration at 2 s):
+    // offered vs completed rate and the p99 tail, with and without
+    // client-side pipelining, against the closed-loop ceiling.
+    println!("\nopen-loop reconfiguration-under-load comparison (8 clients, 4 s):");
+    let closed = run_closed_loop_rate(8, 1, 42, secs(4));
+    println!("  closed-loop ceiling (window 1):        {closed:>8.0} cmds/s");
+    for (label, window) in [("open loop, window 1 ", 1usize), ("open loop, window 16", 16)] {
+        let s = run_offered_load(8, 3000.0, window, false, 42, secs(4));
+        println!(
+            "  {label}: offered {:>8.0}/s -> completed {:>8.0}/s (delivered {:>4.0}%, p99 {:.2} ms)",
+            s.offered_per_sec,
+            s.completed_per_sec,
+            100.0 * s.delivery_ratio,
+            s.latency.p99
+        );
+    }
 }

@@ -4,11 +4,12 @@
 //!   chosen command through the AOT-compiled JAX/Pallas program (L2+L1)
 //!   loaded via PJRT — Python is never on the request path.
 //!
-//! A real small workload: 8 closed-loop clients stream 16-float tensor
-//! commands for 6 simulated seconds, batched 8-per-slot by the leader
-//! (Phase 2 batching); at 2 s the acceptors are live-reconfigured; at
-//! 4 s the matchmakers are. We report latency/throughput and verify all
-//! three tensor-backed replicas converge to bit-identical state.
+//! A real small workload: 8 pipelined clients (4 requests in flight
+//! each, `WorkloadSpec::pipelined(4)`) stream 16-float tensor commands
+//! for 6 simulated seconds, batched 8-per-slot by the leader (Phase 2
+//! batching); at 2 s the acceptors are live-reconfigured; at 4 s the
+//! matchmakers are. We report latency/throughput and verify all three
+//! tensor-backed replicas converge to bit-identical state.
 //!
 //! Uses the compiled PJRT artifacts with `--features pjrt` +
 //! `make artifacts`, else the pure-Rust reference backend. Run:
@@ -17,16 +18,30 @@
 //! cargo run --release --example tensor_smr
 //! ```
 
-use matchmaker::config::{Configuration, OptFlags};
+use matchmaker::config::OptFlags;
+use matchmaker::harness::experiments::tensor_lane_payload;
 use matchmaker::harness::{secs, Cluster};
 use matchmaker::metrics::{interval_summary, timeline};
-use matchmaker::roles::{Client, Leader, Replica};
+use matchmaker::roles::{Leader, Replica};
 use matchmaker::statemachine::{StateMachine, TensorStateMachine};
-use matchmaker::{MS, SEC, US};
+use matchmaker::workload::WorkloadSpec;
+use matchmaker::{Configuration, MS, SEC, US};
 
 fn main() {
-    let opts = OptFlags::default().with_batching(8, 500 * US);
-    let mut cluster = Cluster::lan(1, 8, opts, 2026);
+    // Pipelined closed-loop clients, each streaming a distinct 16-lane
+    // tensor command (keyed off its node id); stop issuing at 5.5 s so
+    // the tail drains and every replica reaches the same log prefix
+    // before we compare states.
+    let workload = WorkloadSpec::pipelined(4)
+        .payload_with(tensor_lane_payload)
+        .stop_at(secs(5) + 500 * MS);
+    let mut cluster = Cluster::builder()
+        .f(1)
+        .clients(8)
+        .workload(workload)
+        .opts(OptFlags::default().with_batching(8, 500 * US))
+        .seed(2026)
+        .build();
     let leader = cluster.initial_leader();
 
     // Swap the replicas' no-op state machines for tensor SMs.
@@ -36,17 +51,6 @@ fn main() {
         println!("replica {r}: tensor backend = {}", sm.backend_name());
         let rep = cluster.sim.node_mut::<Replica>(r).expect("replica");
         rep.sm = Box::new(sm);
-    }
-
-    // Each client streams a distinct tensor command (16 f32 lanes).
-    let clients = cluster.layout.clients.clone();
-    for (i, &c) in clients.iter().enumerate() {
-        let cmd: Vec<f32> = (0..16).map(|j| ((i * 16 + j) % 13) as f32 / 4.0 - 1.5).collect();
-        let cl = cluster.sim.node_mut::<Client>(c).unwrap();
-        cl.payload = TensorStateMachine::encode(&cmd);
-        // Stop issuing at 5.5 s so the tail drains and every replica
-        // reaches the same log prefix before we compare states.
-        cl.stop_at = secs(5) + 500 * MS;
     }
 
     // Live reconfigurations mid-stream: acceptors at 2 s, matchmakers at 4 s.

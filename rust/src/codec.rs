@@ -432,9 +432,10 @@ impl Wire for Msg {
                 e.u8(15);
                 round.enc(e);
             }
-            ClientRequest { cmd } => {
+            ClientRequest { cmd, lowest } => {
                 e.u8(16);
                 cmd.enc(e);
+                e.u64(*lowest);
             }
             ClientReply { seq, result } => {
                 e.u8(17);
@@ -531,7 +532,7 @@ impl Wire for Msg {
             13 => PrefixResp { entries: Wire::dec(d)?, upto: d.u64()? },
             14 => GarbageA { round: Round::dec(d)? },
             15 => GarbageB { round: Round::dec(d)? },
-            16 => ClientRequest { cmd: Command::dec(d)? },
+            16 => ClientRequest { cmd: Command::dec(d)?, lowest: d.u64()? },
             17 => ClientReply { seq: d.u64()?, result: d.bytes()? },
             18 => NotLeader { hint: Wire::dec(d)? },
             19 => StopA,
@@ -609,7 +610,7 @@ pub fn sample_messages() -> Vec<Msg> {
         PrefixResp { entries: vec![(0, Value::Noop)], upto: 1 },
         GarbageA { round: r1 },
         GarbageB { round: r1 },
-        ClientRequest { cmd: cmd.clone() },
+        ClientRequest { cmd: cmd.clone(), lowest: 42 },
         ClientReply { seq: 42, result: vec![9, 9] },
         NotLeader { hint: Some(3) },
         StopA,

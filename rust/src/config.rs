@@ -8,6 +8,7 @@
 //! both consume (TOML on disk for real deployments).
 
 use crate::quorum::QuorumSpec;
+use crate::workload::{PayloadSpec, WorkloadMode, WorkloadSpec};
 use crate::{NodeId, Time, MS, US};
 use std::collections::BTreeSet;
 
@@ -242,6 +243,10 @@ pub struct DeploymentConfig {
     /// Which state machine replicas run: "noop", "kv", "register",
     /// "counter", or "tensor" (XLA-backed; requires `artifacts/`).
     pub state_machine: String,
+    /// What the deployment's clients do (`workload =` line; the
+    /// `repro run --role client` flags override it). Only fixed payloads
+    /// are representable in the text format.
+    pub workload: WorkloadSpec,
 }
 
 fn default_sm() -> String {
@@ -268,6 +273,7 @@ impl DeploymentConfig {
             opts: OptFlags::default(),
             addrs: Default::default(),
             state_machine: default_sm(),
+            workload: WorkloadSpec::closed_loop(),
         }
     }
 
@@ -293,6 +299,34 @@ impl DeploymentConfig {
             o.batch_size,
             o.batch_delay / US
         ));
+        let w = &self.workload;
+        let mut wl = String::from("workload = ");
+        match w.mode {
+            WorkloadMode::ClosedLoop { window } => {
+                wl.push_str(&format!("mode:closed,window:{window}"));
+            }
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+                wl.push_str(&format!(
+                    "mode:open,interval_ns:{interval},poisson:{poisson},inflight:{max_in_flight}"
+                ));
+            }
+        }
+        let payload_bytes = match &w.payload {
+            PayloadSpec::Fixed(b) => b.len(),
+            PayloadSpec::PerClient(_) => 1,
+        };
+        wl.push_str(&format!(
+            ",payload_bytes:{payload_bytes},resend_ms:{}",
+            w.resend_after / MS
+        ));
+        if w.start_at != 0 {
+            wl.push_str(&format!(",start_ms:{}", w.start_at / MS));
+        }
+        if w.stop_at != u64::MAX {
+            wl.push_str(&format!(",stop_ms:{}", w.stop_at / MS));
+        }
+        wl.push('\n');
+        out.push_str(&wl);
         for (id, addr) in &self.addrs {
             out.push_str(&format!("addr.{id} = {addr}\n"));
         }
@@ -314,6 +348,7 @@ impl DeploymentConfig {
             opts: OptFlags::default(),
             addrs: Default::default(),
             state_machine: default_sm(),
+            workload: WorkloadSpec::closed_loop(),
         };
         for (lineno, line) in s.lines().enumerate() {
             let line = line.trim();
@@ -372,6 +407,101 @@ impl DeploymentConfig {
                             other => return Err(format!("unknown batch key {other:?}")),
                         }
                     }
+                }
+                "workload" => {
+                    let mut mode = "closed".to_string();
+                    let mut window = 1usize;
+                    let mut interval: Option<Time> = None;
+                    let mut poisson = false;
+                    let mut inflight = 64usize;
+                    let mut payload_bytes = 1usize;
+                    let mut resend_ms: u64 = 100;
+                    let mut start_ms: u64 = 0;
+                    let mut stop_ms: Option<u64> = None;
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("workload: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        match k.trim() {
+                            "mode" => mode = v.to_string(),
+                            "window" => {
+                                window =
+                                    v.parse().map_err(|e| format!("workload window: {e}"))?
+                            }
+                            "interval_ns" => {
+                                interval = Some(
+                                    v.parse().map_err(|e| format!("workload interval_ns: {e}"))?,
+                                )
+                            }
+                            "rate" => {
+                                let r: f64 =
+                                    v.parse().map_err(|e| format!("workload rate: {e}"))?;
+                                if !(r.is_finite() && r > 0.0) {
+                                    return Err(format!("workload rate must be positive: {v}"));
+                                }
+                                interval = Some(((1e9 / r) as Time).max(1));
+                            }
+                            "poisson" => {
+                                poisson =
+                                    v.parse().map_err(|e| format!("workload poisson: {e}"))?
+                            }
+                            "inflight" => {
+                                inflight =
+                                    v.parse().map_err(|e| format!("workload inflight: {e}"))?
+                            }
+                            "payload_bytes" => {
+                                payload_bytes = v
+                                    .parse()
+                                    .map_err(|e| format!("workload payload_bytes: {e}"))?
+                            }
+                            "resend_ms" => {
+                                resend_ms =
+                                    v.parse().map_err(|e| format!("workload resend_ms: {e}"))?
+                            }
+                            "start_ms" => {
+                                start_ms =
+                                    v.parse().map_err(|e| format!("workload start_ms: {e}"))?
+                            }
+                            "stop_ms" => {
+                                stop_ms = Some(
+                                    v.parse().map_err(|e| format!("workload stop_ms: {e}"))?,
+                                )
+                            }
+                            other => return Err(format!("unknown workload key {other:?}")),
+                        }
+                    }
+                    let clamp =
+                        |k: usize| k.clamp(1, crate::workload::MAX_IN_FLIGHT);
+                    let mode = match mode.as_str() {
+                        "closed" => WorkloadMode::ClosedLoop { window: clamp(window) },
+                        "open" => WorkloadMode::OpenLoop {
+                            interval: match interval {
+                                Some(0) | None => {
+                                    return Err(
+                                        "workload: open mode needs a positive rate: or \
+                                         interval_ns:"
+                                            .to_string(),
+                                    )
+                                }
+                                Some(i) => i,
+                            },
+                            poisson,
+                            max_in_flight: clamp(inflight),
+                        },
+                        other => {
+                            return Err(format!(
+                                "unknown workload mode {other:?} (closed|open)"
+                            ))
+                        }
+                    };
+                    cfg.workload = WorkloadSpec {
+                        mode,
+                        payload: PayloadSpec::Fixed(vec![0u8; payload_bytes.max(1)]),
+                        start_at: start_ms * MS,
+                        stop_at: stop_ms.map_or(u64::MAX, |s| s * MS),
+                        resend_after: resend_ms.max(1) * MS,
+                    };
                 }
                 k if k.starts_with("addr.") => {
                     let id: NodeId = k[5..]
@@ -473,12 +603,67 @@ mod tests {
         cfg.opts.batch_size = 16;
         cfg.opts.batch_delay = 750 * US;
         cfg.state_machine = "kv".into();
+        cfg.workload = WorkloadSpec::open_loop(2000.0)
+            .max_in_flight(16)
+            .payload_bytes(8)
+            .start_at(500 * MS)
+            .stop_at(30_000 * MS)
+            .resend_after(50 * MS);
         let s = cfg.to_text();
         let back = DeploymentConfig::from_text(&s).unwrap();
         assert_eq!(back.layout, cfg.layout);
         assert_eq!(back.opts, cfg.opts);
         assert_eq!(back.state_machine, "kv");
         assert_eq!(back.addrs, cfg.addrs);
+        assert_eq!(back.workload, cfg.workload);
+    }
+
+    #[test]
+    fn text_config_workload_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        // Pipelined closed loop.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:closed,window:8\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.mode, WorkloadMode::ClosedLoop { window: 8 });
+        // Open loop via the human-friendly rate: key.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:1000,poisson:true,inflight:32\n"
+        ))
+        .unwrap();
+        match cfg.workload.mode {
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+                assert_eq!(interval, 1_000_000);
+                assert!(poisson);
+                assert_eq!(max_in_flight, 32);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Open mode without a rate is an error; so are unknown keys/modes.
+        assert!(DeploymentConfig::from_text(&format!("{base}workload = mode:open\n")).is_err());
+        assert!(
+            DeploymentConfig::from_text(&format!("{base}workload = mode:weird\n")).is_err()
+        );
+        assert!(
+            DeploymentConfig::from_text(&format!("{base}workload = bogus:1\n")).is_err()
+        );
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:0\n"
+        ))
+        .is_err());
+        // interval_ns:0 would mean an arrival every nanosecond — rejected
+        // like rate:0.
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,interval_ns:0\n"
+        ))
+        .is_err());
+        // Oversized in-flight windows clamp to the replica result cache.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:100,inflight:99999\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.in_flight_bound(), crate::workload::MAX_IN_FLIGHT);
     }
 
     #[test]

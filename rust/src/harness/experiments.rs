@@ -3,15 +3,18 @@
 //! absolute numbers differ from the paper's EC2 testbed but the shapes —
 //! who wins, where the stalls are, what recovers when — are the point.
 
-use super::report::{CurveReport, FigureReport, TableReport, ViolinReport};
+use super::report::{CurveReport, FigureReport, OpenLoopReport, TableReport, ViolinReport};
 use super::{msec, secs, Cluster, HorizontalCluster};
 use crate::config::{Configuration, OptFlags};
-use crate::metrics::{interval_summary, timeline, Sample, Timeline};
-use crate::roles::{Client, HorizontalLeader, Leader, Replica};
+use crate::metrics::{
+    interval_summary, open_loop_summary, timeline, OpenLoopSummary, Sample, Timeline,
+};
+use crate::roles::{HorizontalLeader, Leader, Replica};
 use crate::round::Round;
 use crate::sim::NetworkModel;
 use crate::statemachine::TensorStateMachine;
 use crate::util::stats;
+use crate::workload::WorkloadSpec;
 use crate::{NodeId, Time, MS, SEC, US};
 
 /// Output of one reconfiguration-timeline run (the Figure 9 family).
@@ -37,7 +40,7 @@ pub fn run_reconfig_schedule(
 ) -> ReconfigRun {
     let mut opts = OptFlags::default();
     opts.thrifty = thrifty;
-    let mut cluster = Cluster::lan(f, n_clients, opts, seed);
+    let mut cluster = Cluster::builder().f(f).clients(n_clients).opts(opts).seed(seed).build();
     let leader = cluster.initial_leader();
 
     // Pre-draw the ten reconfiguration targets (ids 1..=10).
@@ -197,7 +200,7 @@ pub fn run_horizontal_schedule(
     seed: u64,
     duration: Time,
 ) -> (Vec<Sample>, Timeline) {
-    let mut cluster = HorizontalCluster::new(f, n_clients, 8, seed, NetworkModel::default());
+    let mut cluster = HorizontalCluster::builder().f(f).clients(n_clients).alpha(8).seed(seed).build();
     let leader = cluster.leader;
     if with_reconfigs {
         let cfgs: Vec<Configuration> = (1..=10).map(|i| cluster.random_config(i)).collect();
@@ -281,7 +284,11 @@ pub fn figure14(seed: u64) -> CurveReport {
         for &clients in &[1usize, 2, 4, 8, 16, 32, 64, 100] {
             let mut opts = OptFlags::default();
             opts.thrifty = thrifty;
-            let mut cluster = Cluster::lan(1, clients, opts, seed + clients as u64);
+            let mut cluster = Cluster::builder()
+                .clients(clients)
+                .opts(opts)
+                .seed(seed + clients as u64)
+                .build();
             cluster.sim.run_until(secs(10));
             cluster.assert_safe();
             let samples = cluster.samples();
@@ -343,7 +350,7 @@ pub fn figure17(seed: u64) -> FigureReport {
     ];
     for (label, opts) in variants {
         let net = NetworkModel::default().with_wan_phase1(250 * MS);
-        let mut cluster = Cluster::new(1, 8, opts, seed, net);
+        let mut cluster = Cluster::builder().clients(8).opts(opts).seed(seed).net(net).build();
         let leader = cluster.initial_leader();
         // Five reconfigurations at 4, 6, 8, 10, 12 s.
         for i in 0..5u64 {
@@ -379,7 +386,7 @@ pub fn figure18(seed: u64) -> FigureReport {
         ..Default::default()
     };
     for &clients in &[1usize, 4, 8] {
-        let mut cluster = Cluster::lan(1, clients, OptFlags::default(), seed + clients as u64);
+        let mut cluster = Cluster::builder().clients(clients).seed(seed + clients as u64).build();
         let p0 = cluster.layout.proposers[0];
         let p1 = cluster.layout.proposers[1];
         // Paper: "5 seconds later, a new leader is elected. The 5 second
@@ -405,7 +412,7 @@ pub fn figure18(seed: u64) -> FigureReport {
 /// new leader at ~11 s; acceptor reconfiguration at 17 s; matchmaker
 /// reconfiguration at 22 s.
 pub fn figure20(seed: u64) -> FigureReport {
-    let mut cluster = Cluster::lan(1, 8, OptFlags::default(), seed);
+    let mut cluster = Cluster::builder().clients(8).seed(seed).build();
     let p0 = cluster.layout.proposers[0];
     let p1 = cluster.layout.proposers[1];
     let dead_acc = cluster.layout.acceptor_pool[0];
@@ -475,7 +482,7 @@ pub fn figure21(seed: u64) -> (FigureReport, TableReport) {
         ..Default::default()
     };
     for &clients in &[1usize, 4, 8] {
-        let mut cluster = Cluster::lan(1, clients, OptFlags::default(), seed + clients as u64);
+        let mut cluster = Cluster::builder().clients(clients).seed(seed + clients as u64).build();
         let leader = cluster.initial_leader();
         // Ten random matchmaker sets, one per second in [10,20).
         let mut last_set = cluster.layout.initial_matchmakers();
@@ -545,6 +552,16 @@ pub struct BatchingRun {
     pub commands: usize,
 }
 
+/// Per-client 16-lane tensor command, keyed off the client's node id so
+/// every client streams a distinct (deterministic) payload (used via
+/// [`crate::workload::PayloadSpec::PerClient`]).
+pub fn tensor_lane_payload(id: NodeId) -> Vec<u8> {
+    let cmd: Vec<f32> = (0..16)
+        .map(|j| ((id as usize * 16 + j) % 13) as f32 / 4.0 - 1.5)
+        .collect();
+    TensorStateMachine::encode(&cmd)
+}
+
 /// X3: Phase 2 batching on the tensor state machine path — the shape of
 /// the paper's Figure 8 runs (throughput vs per-slot amortization), on a
 /// network model with a finite per-message egress cost (`tx_overhead`),
@@ -565,20 +582,19 @@ pub fn run_batching_throughput(
     let opts = OptFlags::default().with_batching(batch_size, 500 * US);
     let mut net = NetworkModel::default();
     net.tx_overhead = 20 * US;
-    let mut cluster = Cluster::new(1, n_clients, opts, seed, net);
+    let mut cluster = Cluster::builder()
+        .clients(n_clients)
+        .workload(WorkloadSpec::closed_loop().payload_with(tensor_lane_payload))
+        .opts(opts)
+        .seed(seed)
+        .net(net)
+        .build();
 
-    // Tensor state machines on the replicas, tensor payloads on the
-    // clients (16 f32 lanes each).
+    // Tensor state machines on the replicas (16 f32 lanes per command).
     for &r in &cluster.layout.replicas.clone() {
         let sm = TensorStateMachine::load().expect("tensor state machine");
         if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
             rep.sm = Box::new(sm);
-        }
-    }
-    for (i, &c) in cluster.layout.clients.clone().iter().enumerate() {
-        let cmd: Vec<f32> = (0..16).map(|j| ((i * 16 + j) % 13) as f32 / 4.0 - 1.5).collect();
-        if let Some(cl) = cluster.sim.node_mut::<Client>(c) {
-            cl.payload = TensorStateMachine::encode(&cmd);
         }
     }
 
@@ -626,6 +642,113 @@ pub fn batching_figure(seed: u64) -> CurveReport {
         ));
     }
     rep.series.push(("tensor path".into(), rows));
+    rep
+}
+
+/// One open-loop run: `n_clients` clients each offering
+/// `rate_per_client` commands/s (fixed-rate, or deterministic-Poisson
+/// with `poisson`) with up to `max_in_flight` requests pipelined, over
+/// `duration`, with an acceptor reconfiguration at `duration / 2` —
+/// reconfiguration under sustained offered load is the regime related
+/// reconfiguration work (logless reconfig, "dirty logs") measures.
+/// Returns the offered/completed/tail summary; asserts safety.
+pub fn run_offered_load(
+    n_clients: usize,
+    rate_per_client: f64,
+    max_in_flight: usize,
+    poisson: bool,
+    seed: u64,
+    duration: Time,
+) -> OpenLoopSummary {
+    let base = if poisson {
+        WorkloadSpec::open_loop_poisson(rate_per_client)
+    } else {
+        WorkloadSpec::open_loop(rate_per_client)
+    };
+    let mut cluster = Cluster::builder()
+        .clients(n_clients)
+        .workload(base.max_in_flight(max_in_flight))
+        .seed(seed)
+        .net(NetworkModel::lan())
+        .build();
+    let leader = cluster.initial_leader();
+    let cfg = cluster.random_config(1);
+    cluster.sim.schedule(duration / 2, move |s| {
+        s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+    });
+    cluster.sim.run_until(duration);
+    cluster.assert_safe();
+    let samples = cluster.samples();
+    let (offered, _, _) = cluster.workload_totals();
+    open_loop_summary(&samples, offered, duration).expect("open-loop run produced no samples")
+}
+
+/// Closed-loop comparator at the same client count: completed commands/s
+/// with a `window`-deep pipeline (`window = 1` is the paper's §8.1
+/// client), same LAN, same mid-run reconfiguration.
+pub fn run_closed_loop_rate(n_clients: usize, window: usize, seed: u64, duration: Time) -> f64 {
+    let mut cluster = Cluster::builder()
+        .clients(n_clients)
+        .workload(WorkloadSpec::pipelined(window))
+        .seed(seed)
+        .net(NetworkModel::lan())
+        .build();
+    let leader = cluster.initial_leader();
+    let cfg = cluster.random_config(1);
+    cluster.sim.schedule(duration / 2, move |s| {
+        s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+    });
+    cluster.sim.run_until(duration);
+    cluster.assert_safe();
+    cluster.samples().len() as f64 / (duration as f64 / 1e9)
+}
+
+/// X4: throughput/tail-latency vs offered load across a mid-run
+/// reconfiguration, with and without client-side pipelining. A closed
+/// loop can only measure `n_clients / latency`; the open-loop sweep
+/// shows where the same deployment actually saturates, and that the
+/// in-flight window — not the arrival process — is what moves the knee.
+pub fn open_loop_figure(seed: u64) -> OpenLoopReport {
+    let clients = 4;
+    let duration = secs(4);
+    let rates = [500.0, 1000.0, 2000.0, 4000.0, 6000.0];
+    let mut rep = OpenLoopReport {
+        id: "X4".into(),
+        title: format!(
+            "open-loop offered-load sweep ({clients} clients, rates per client, \
+             acceptor reconfiguration at 2 s)"
+        ),
+        ..Default::default()
+    };
+    for (label, window, poisson) in [
+        ("no pipelining (in-flight 1)", 1usize, false),
+        ("pipelined (in-flight 16)", 16, false),
+        ("pipelined, Poisson arrivals (in-flight 16)", 16, true),
+    ] {
+        let rows: Vec<OpenLoopSummary> = rates
+            .iter()
+            .map(|&r| run_offered_load(clients, r, window, poisson, seed, duration))
+            .collect();
+        rep.series.push((label.to_string(), rows));
+    }
+    let closed = run_closed_loop_rate(clients, 1, seed, duration);
+    let piped = rep.series[1]
+        .1
+        .last()
+        .map(|s| s.completed_per_sec)
+        .unwrap_or(f64::NAN);
+    rep.notes.push(format!(
+        "closed-loop baseline ({clients} clients, window 1): {closed:.0} cmds/s; \
+         pipelined open loop at the top offered rate: {piped:.0} cmds/s \
+         ({:.1}x; acceptance target >= 2x)",
+        piped / closed
+    ));
+    rep.notes.push(
+        "expected shape: the window-1 series saturates near the closed-loop rate \
+         (delivery ratio < 1, queueing p99 explodes past the knee); the pipelined \
+         series tracks the offered rate with a flat p99 across the reconfiguration"
+            .into(),
+    );
     rep
 }
 
@@ -734,6 +857,7 @@ pub fn run_all(seed: u64) -> Vec<(String, String)> {
     out.push(("T2".into(), t2.render()));
     out.push(("X2".into(), fast_paxos_experiment(seed).render()));
     out.push(("X3".into(), batching_figure(seed).render()));
+    out.push(("X4".into(), open_loop_figure(seed).render()));
     out
 }
 
@@ -782,6 +906,58 @@ mod tests {
             b32.throughput,
             b1.throughput
         );
+    }
+
+    /// Acceptance gate for the workload tentpole: at equal client count
+    /// and equal `NetworkModel::lan()` settings, pipelined open-loop
+    /// clients must sustain at least twice the chosen-commands/sec of
+    /// closed-loop clients, in virtual time, with a mid-run acceptor
+    /// reconfiguration in both runs (safety asserted inside the drivers).
+    #[test]
+    fn pipelined_open_loop_doubles_closed_loop() {
+        let duration = secs(3);
+        let closed = run_closed_loop_rate(4, 1, 42, duration);
+        let open = run_offered_load(4, 6000.0, 16, false, 42, duration);
+        assert!(
+            open.delivery_ratio > 0.9,
+            "pipelined open loop fell behind its arrivals: {:.2}",
+            open.delivery_ratio
+        );
+        assert!(
+            open.completed_per_sec >= 2.0 * closed,
+            "pipelined open loop sustained only {:.1}x the closed-loop rate \
+             ({:.0} vs {:.0} cmds/s)",
+            open.completed_per_sec / closed,
+            open.completed_per_sec,
+            closed
+        );
+    }
+
+    #[test]
+    fn open_loop_without_pipelining_saturates() {
+        // In-flight window 1 at an offered rate far above 1/RTT: the
+        // completion rate pins at the closed-loop ceiling, arrivals queue,
+        // and the tail shows it.
+        let s = run_offered_load(2, 4000.0, 1, false, 11, secs(2));
+        assert!(s.delivery_ratio < 0.8, "delivery ratio {:.2}", s.delivery_ratio);
+        assert!(
+            s.latency.p99 > 50.0,
+            "saturated p99 {} ms should show client-side queueing",
+            s.latency.p99
+        );
+    }
+
+    #[test]
+    fn open_loop_poisson_tracks_offered_rate() {
+        // 2 clients x 1000/s x 2 s: ~4000 deterministic-Poisson arrivals,
+        // all absorbed (far from saturation with pipelining).
+        let s = run_offered_load(2, 1000.0, 16, true, 7, secs(2));
+        assert!(
+            (3200.0..4800.0).contains(&(s.offered as f64)),
+            "offered {} not ~4000",
+            s.offered
+        );
+        assert!(s.delivery_ratio > 0.9, "delivery ratio {:.2}", s.delivery_ratio);
     }
 
     #[test]

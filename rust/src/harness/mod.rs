@@ -4,10 +4,30 @@
 //! * [`Cluster`] — a full Matchmaker MultiPaxos deployment in the
 //!   simulator: `f+1` proposers (all running [`Leader`]), a pool of
 //!   `2·(2f+1)` acceptors, a pool of `2·(2f+1)` matchmakers (first `2f+1`
-//!   active), `2f+1` replicas, and N closed-loop clients.
+//!   active), `2f+1` replicas, and N workload clients.
 //! * [`HorizontalCluster`] — the baseline deployment (no matchmakers).
 //! * [`experiments`] — one driver per paper table/figure (see DESIGN.md's
 //!   per-experiment index).
+//!
+//! Clusters are built with a builder — every knob has a paper-faithful
+//! default, and the workload is a first-class [`WorkloadSpec`] instead of
+//! per-client field poking:
+//!
+//! ```
+//! use matchmaker::harness::{secs, Cluster};
+//! use matchmaker::sim::NetworkModel;
+//! use matchmaker::workload::WorkloadSpec;
+//!
+//! let mut cluster = Cluster::builder()
+//!     .f(1)
+//!     .clients(4)
+//!     .workload(WorkloadSpec::open_loop(500.0).max_in_flight(16))
+//!     .net(NetworkModel::lan())
+//!     .seed(7)
+//!     .build();
+//! cluster.sim.run_until(secs(1));
+//! cluster.assert_safe();
+//! ```
 
 pub mod experiments;
 pub mod report;
@@ -20,6 +40,7 @@ use crate::round::Round;
 use crate::sim::{NetworkModel, Sim};
 use crate::statemachine::Noop;
 use crate::util::Rng;
+use crate::workload::WorkloadSpec;
 use crate::{NodeId, Time, MS, SEC};
 
 /// A simulated Matchmaker MultiPaxos cluster.
@@ -28,15 +49,91 @@ pub struct Cluster {
     pub sim: Sim,
     pub opts: OptFlags,
     pub f: usize,
+    /// The workload every client runs (see [`WorkloadSpec`]).
+    pub workload: WorkloadSpec,
     rng: Rng,
 }
 
-impl Cluster {
-    /// Build and start a cluster: the first proposer becomes leader, the
-    /// first `2f+1` acceptors form the initial configuration, clients start
-    /// issuing immediately.
-    pub fn new(f: usize, n_clients: usize, opts: OptFlags, seed: u64, net: NetworkModel) -> Cluster {
-        let layout = ClusterLayout::standard(f, 2, n_clients);
+/// Builder for [`Cluster`]. Every knob defaults to the paper's §8.1
+/// deployment: `f = 1`, 4 closed-loop clients, all optimizations on,
+/// LAN network, seed 42.
+#[derive(Clone, Debug)]
+pub struct ClusterBuilder {
+    f: usize,
+    clients: usize,
+    workload: WorkloadSpec,
+    opts: OptFlags,
+    seed: u64,
+    net: NetworkModel,
+    pool_factor: usize,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        ClusterBuilder {
+            f: 1,
+            clients: 4,
+            workload: WorkloadSpec::closed_loop(),
+            opts: OptFlags::default(),
+            seed: 42,
+            net: NetworkModel::lan(),
+            pool_factor: 2,
+        }
+    }
+}
+
+impl ClusterBuilder {
+    /// Fault-tolerance parameter (proposers = f+1, initial quorums of
+    /// 2f+1 from a pool of `pool_factor·(2f+1)`).
+    pub fn f(mut self, f: usize) -> Self {
+        self.f = f;
+        self
+    }
+
+    /// Number of workload clients.
+    pub fn clients(mut self, n: usize) -> Self {
+        self.clients = n;
+        self
+    }
+
+    /// The workload every client runs (default:
+    /// [`WorkloadSpec::closed_loop`], the paper's §8.1 client).
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    /// Protocol optimization flags.
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Simulation seed (identical seeds give bit-identical runs).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Network model (default [`NetworkModel::lan`]).
+    pub fn net(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Acceptor/matchmaker pool size factor (default 2: a pool of
+    /// `2·(2f+1)`, the §8.1 reconfiguration-experiment shape).
+    pub fn pool_factor(mut self, k: usize) -> Self {
+        self.pool_factor = k.max(1);
+        self
+    }
+
+    /// Build and start the cluster: the first proposer becomes leader,
+    /// the first `2f+1` acceptors form the initial configuration, and
+    /// clients start their workloads.
+    pub fn build(self) -> Cluster {
+        let ClusterBuilder { f, clients, workload, opts, seed, net, pool_factor } = self;
+        let layout = ClusterLayout::standard(f, pool_factor, clients);
         layout.validate().expect("valid layout");
         let mut sim = Sim::new(seed, net);
         let initial_cfg = layout.initial_config();
@@ -74,16 +171,21 @@ impl Cluster {
             );
             sim.add_node(p, Box::new(leader));
         }
-        // Clients.
+        // Clients, each driven by the shared workload spec.
         for &c in &layout.clients {
-            sim.add_node(c, Box::new(Client::new(c, layout.proposers.clone())));
+            sim.add_node(
+                c,
+                Box::new(Client::new(c, layout.proposers.clone(), workload.clone())),
+            );
         }
-        Cluster { layout, sim, opts, f, rng: Rng::new(seed ^ 0xc1a5) }
+        Cluster { layout, sim, opts, f, workload, rng: Rng::new(seed ^ 0xc1a5) }
     }
+}
 
-    /// Convenience: default LAN network.
-    pub fn lan(f: usize, n_clients: usize, opts: OptFlags, seed: u64) -> Cluster {
-        Cluster::new(f, n_clients, opts, seed, NetworkModel::default())
+impl Cluster {
+    /// Start describing a cluster (see [`ClusterBuilder`]).
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
     }
 
     pub fn initial_leader(&self) -> NodeId {
@@ -115,6 +217,23 @@ impl Cluster {
             per_client.push(samples);
         }
         merge_samples(per_client)
+    }
+
+    /// Sum the clients' workload counters: `(offered, completed,
+    /// abandoned)`. For open-loop workloads `offered` counts arrivals
+    /// whether or not they completed — the offered-load experiments
+    /// compare it against the completion rate.
+    pub fn workload_totals(&mut self) -> (u64, u64, u64) {
+        let clients = self.layout.clients.clone();
+        let (mut offered, mut completed, mut abandoned) = (0u64, 0u64, 0u64);
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<Client>(c) {
+                offered += cl.offered;
+                completed += cl.completed;
+                abandoned += cl.abandoned;
+            }
+        }
+        (offered, completed, abandoned)
     }
 
     /// Reconfiguration → active latencies (MatchA issue → ConfigActive),
@@ -159,8 +278,66 @@ pub struct HorizontalCluster {
     rng: Rng,
 }
 
-impl HorizontalCluster {
-    pub fn new(f: usize, n_clients: usize, alpha: u64, seed: u64, net: NetworkModel) -> HorizontalCluster {
+/// Builder for [`HorizontalCluster`]; defaults mirror [`ClusterBuilder`]
+/// plus the α window (`alpha = 8`, the §8.1 baseline setting).
+#[derive(Clone, Debug)]
+pub struct HorizontalClusterBuilder {
+    f: usize,
+    clients: usize,
+    alpha: u64,
+    workload: WorkloadSpec,
+    seed: u64,
+    net: NetworkModel,
+}
+
+impl Default for HorizontalClusterBuilder {
+    fn default() -> Self {
+        HorizontalClusterBuilder {
+            f: 1,
+            clients: 4,
+            alpha: 8,
+            workload: WorkloadSpec::closed_loop(),
+            seed: 42,
+            net: NetworkModel::lan(),
+        }
+    }
+}
+
+impl HorizontalClusterBuilder {
+    pub fn f(mut self, f: usize) -> Self {
+        self.f = f;
+        self
+    }
+
+    pub fn clients(mut self, n: usize) -> Self {
+        self.clients = n;
+        self
+    }
+
+    /// The α concurrency window (§7.2): slot `s` may only be proposed
+    /// once slot `s - α` is chosen.
+    pub fn alpha(mut self, alpha: u64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn net(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn build(self) -> HorizontalCluster {
+        let HorizontalClusterBuilder { f, clients: n_clients, alpha, workload, seed, net } = self;
         let mut sim = Sim::new(seed, net);
         let leader: NodeId = 0;
         let acceptor_pool: Vec<NodeId> =
@@ -183,9 +360,16 @@ impl HorizontalCluster {
             Box::new(HorizontalLeader::new(leader, initial, replicas.clone(), alpha, seed)),
         );
         for &c in &clients {
-            sim.add_node(c, Box::new(Client::new(c, vec![leader])));
+            sim.add_node(c, Box::new(Client::new(c, vec![leader], workload.clone())));
         }
         HorizontalCluster { sim, leader, acceptor_pool, replicas, clients, f, rng: Rng::new(seed ^ 0x70f) }
+    }
+}
+
+impl HorizontalCluster {
+    /// Start describing a horizontal-baseline cluster.
+    pub fn builder() -> HorizontalClusterBuilder {
+        HorizontalClusterBuilder::default()
     }
 
     pub fn random_config(&mut self, id: u64) -> Configuration {
@@ -221,10 +405,11 @@ pub fn msec(x: u64) -> Time {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::WorkloadSpec;
 
     #[test]
     fn cluster_serves_commands() {
-        let mut c = Cluster::lan(1, 4, OptFlags::default(), 42);
+        let mut c = Cluster::builder().seed(42).build();
         c.sim.run_until(secs(1));
         let samples = c.samples();
         assert!(samples.len() > 100, "got {} samples", samples.len());
@@ -233,7 +418,7 @@ mod tests {
 
     #[test]
     fn cluster_reconfigures_without_loss() {
-        let mut c = Cluster::lan(1, 4, OptFlags::default(), 42);
+        let mut c = Cluster::builder().seed(42).build();
         let leader = c.initial_leader();
         let cfg = c.random_config(1);
         c.sim.schedule(msec(500), move |s| {
@@ -251,7 +436,7 @@ mod tests {
 
     #[test]
     fn horizontal_cluster_serves() {
-        let mut c = HorizontalCluster::new(1, 4, 8, 42, NetworkModel::default());
+        let mut c = HorizontalCluster::builder().seed(42).build();
         c.sim.run_until(secs(1));
         let samples = c.samples();
         assert!(samples.len() > 100);
@@ -261,10 +446,43 @@ mod tests {
     #[test]
     fn deterministic_same_seed() {
         let run = |seed| {
-            let mut c = Cluster::lan(1, 2, OptFlags::default(), seed);
+            let mut c = Cluster::builder().clients(2).seed(seed).build();
             c.sim.run_until(msec(500));
             c.samples().len()
         };
         assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn pipelined_workload_multiplies_throughput() {
+        // Same 2 clients, window 8 vs window 1: the pipelined cluster
+        // must complete several times as many commands.
+        let completed = |spec: WorkloadSpec| {
+            let mut c = Cluster::builder().clients(2).workload(spec).seed(9).build();
+            c.sim.run_until(secs(1));
+            c.assert_safe();
+            c.samples().len()
+        };
+        let closed = completed(WorkloadSpec::closed_loop());
+        let piped = completed(WorkloadSpec::pipelined(8));
+        assert!(
+            piped as f64 >= 3.0 * closed as f64,
+            "pipelining gained only {piped} vs {closed}"
+        );
+    }
+
+    #[test]
+    fn open_loop_tracks_offered_rate() {
+        // 2 clients at 500/s each for 2 s ≈ 2000 arrivals, all completed
+        // (the system is far from saturation at this rate).
+        let spec = WorkloadSpec::open_loop(500.0).max_in_flight(16);
+        let mut c = Cluster::builder().clients(2).workload(spec).seed(3).build();
+        c.sim.run_until(secs(2));
+        c.assert_safe();
+        let (offered, completed, abandoned) = c.workload_totals();
+        assert!((1900..=2100).contains(&(offered as usize)), "offered {offered}");
+        assert_eq!(abandoned, 0);
+        // In-flight tail at cutoff may be unfinished; everything else is.
+        assert!(completed + 64 >= offered, "completed {completed} of {offered}");
     }
 }

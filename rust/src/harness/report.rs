@@ -114,6 +114,47 @@ impl CurveReport {
     }
 }
 
+/// An offered-load sweep (the X4 open-loop experiment): one row per
+/// offered rate, reporting completion rate and tail latency; one series
+/// per client variant (e.g. in-flight window 1 vs pipelined).
+#[derive(Debug, Default)]
+pub struct OpenLoopReport {
+    pub id: String,
+    pub title: String,
+    /// (label, rows) where each row is one [`OpenLoopSummary`].
+    pub series: Vec<(String, Vec<crate::metrics::OpenLoopSummary>)>,
+    pub notes: Vec<String>,
+}
+
+impl OpenLoopReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        for (label, rows) in &self.series {
+            let _ = writeln!(out, "--- series: {label} ---");
+            let _ = writeln!(
+                out,
+                "offered/s\tcompleted/s\tdelivered\tp50_ms\tp99_ms"
+            );
+            for s in rows {
+                let _ = writeln!(
+                    out,
+                    "{:.0}\t{:.0}\t{:.2}\t{:.3}\t{:.3}",
+                    s.offered_per_sec,
+                    s.completed_per_sec,
+                    s.delivery_ratio,
+                    s.latency.median,
+                    s.latency.p99
+                );
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
 /// Violin-plot data (Figures 12/13): distribution quartiles per window.
 #[derive(Debug, Default)]
 pub struct ViolinReport {
@@ -181,5 +222,30 @@ mod tests {
             notes: vec![],
         };
         assert!(c.render().contains("19000"));
+    }
+
+    #[test]
+    fn open_loop_report_renders() {
+        use crate::metrics::OpenLoopSummary;
+        let lat = Stats { median: 0.5, p99: 2.25, ..Default::default() };
+        let row = OpenLoopSummary {
+            offered: 4000,
+            completed: 3000,
+            offered_per_sec: 2000.0,
+            completed_per_sec: 1500.0,
+            delivery_ratio: 0.75,
+            latency: lat,
+        };
+        let r = OpenLoopReport {
+            id: "X4".into(),
+            title: "offered load".into(),
+            series: vec![("pipelined".into(), vec![row])],
+            notes: vec!["saturates".into()],
+        };
+        let text = r.render();
+        assert!(text.contains("p99_ms"));
+        assert!(text.contains("1500"));
+        assert!(text.contains("2.250"));
+        assert!(text.contains("note: saturates"));
     }
 }

@@ -29,6 +29,35 @@
 //! round trip chooses a whole batch; replicas unpack batches and execute
 //! them through `StateMachine::apply_many`, replying per command.
 //!
+//! ## Workloads
+//!
+//! Clusters are described with a builder and loaded through a
+//! [`workload::WorkloadSpec`]:
+//!
+//! ```no_run
+//! use matchmaker::harness::Cluster;
+//! use matchmaker::sim::NetworkModel;
+//! use matchmaker::workload::WorkloadSpec;
+//!
+//! let cluster = Cluster::builder()
+//!     .f(1)
+//!     .clients(8)
+//!     .workload(WorkloadSpec::open_loop(4000.0).max_in_flight(16))
+//!     .net(NetworkModel::lan())
+//!     .seed(7)
+//!     .build();
+//! ```
+//!
+//! [`WorkloadSpec::closed_loop`] reproduces the paper's §8.1 client
+//! (one outstanding request, so the numbers stay comparable);
+//! [`WorkloadSpec::pipelined`] keeps a window of `k` requests in flight
+//! with per-client FIFO preserved end to end (the leader's
+//! [`roles::sequencer`] re-orders what the network shuffles); the
+//! open-loop modes offer load at a configured rate — fixed or
+//! deterministic-Poisson — independent of completions, which is what
+//! exposes saturation and tail latency (X4 experiment,
+//! [`metrics::OpenLoopSummary`]).
+//!
 //! Replicas execute commands against a pluggable [`statemachine`]; the
 //! `TensorStateMachine` executes batched commands through an AOT-compiled
 //! JAX/Pallas computation loaded via PJRT ([`runtime`], `pjrt` feature) or
@@ -52,12 +81,14 @@ pub mod runtime;
 pub mod sim;
 pub mod statemachine;
 pub mod util;
+pub mod workload;
 
 pub use config::{Configuration, DeploymentConfig};
 pub use msg::{Command, CommandId, Envelope, Msg, Value};
 pub use node::{Announce, Effects, Node, Timer};
 pub use quorum::QuorumSpec;
 pub use round::Round;
+pub use workload::{PayloadSpec, WorkloadMode, WorkloadSpec};
 
 /// A node identifier. Node ids are dense small integers assigned by the
 /// deployment config; the simulator indexes nodes by id.

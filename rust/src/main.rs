@@ -15,6 +15,7 @@ use matchmaker::config::DeploymentConfig;
 use matchmaker::harness::experiments as exp;
 use matchmaker::roles::{Acceptor, Client, Leader, Matchmaker, Replica};
 use matchmaker::statemachine;
+use matchmaker::workload::WorkloadSpec;
 use matchmaker::NodeId;
 
 /// Minimal flag parser: `--key value` pairs after positional args.
@@ -65,8 +66,13 @@ impl Args {
 }
 
 const USAGE: &str = "usage:
-  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 all)
+  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 all)
   repro run --role R --id N --config FILE [--duration SECS]
+      client role workload flags (override the config's `workload =` line):
+        --workload closed|pipelined|open|open-poisson
+        --rate N          open-loop arrivals/sec per client
+        --window K        in-flight bound (closed-loop window / open-loop cap)
+        --payload-bytes N command payload size
   repro gen-config [--f N] [--clients N] [--base-port P]
   repro smoke                      run the tensor state machine end to end
 ";
@@ -89,7 +95,7 @@ fn main() -> Result<()> {
             let id: NodeId = args.required("id")?.parse()?;
             let config = args.required("config")?.to_string();
             let duration: u64 = args.flag("duration", 30)?;
-            run_node(&role, id, &config, duration)
+            run_node(&role, id, &config, duration, &args)
         }
         "gen-config" => {
             let f: usize = args.flag("f", 1)?;
@@ -141,6 +147,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         }
         "x2" => print!("{}", exp::fast_paxos_experiment(seed).render()),
         "x3" | "batch" => print!("{}", exp::batching_figure(seed).render()),
+        "x4" | "openloop" => print!("{}", exp::open_loop_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -152,7 +159,55 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64) -> Result<()> {
+/// Resolve the client workload: the config file's `workload =` line,
+/// overridden by any `repro run` CLI flags.
+fn client_workload(cfg: &DeploymentConfig, args: &Args) -> Result<WorkloadSpec> {
+    let mut spec = cfg.workload.clone();
+    let checked_rate = |args: &Args| -> Result<f64> {
+        let rate: f64 = args.flag("rate", 1000.0)?;
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "--rate must be a positive arrivals/sec value, got {rate}"
+        );
+        Ok(rate)
+    };
+    if let Some(mode) = args.flags.get("workload") {
+        let rate = checked_rate(args)?;
+        spec = match mode.as_str() {
+            "closed" => WorkloadSpec::closed_loop(),
+            "pipelined" => WorkloadSpec::pipelined(8),
+            "open" => WorkloadSpec::open_loop(rate),
+            "open-poisson" => WorkloadSpec::open_loop_poisson(rate),
+            other => anyhow::bail!(
+                "--workload {other:?}: expected closed|pipelined|open|open-poisson"
+            ),
+        }
+        .resend_after(spec.resend_after)
+        .start_at(spec.start_at)
+        .stop_at(spec.stop_at);
+    } else if args.flags.contains_key("rate") {
+        let rate = checked_rate(args)?;
+        spec = WorkloadSpec::open_loop(rate)
+            .resend_after(spec.resend_after)
+            .start_at(spec.start_at)
+            .stop_at(spec.stop_at);
+    }
+    if let Some(window) = args.flags.get("window") {
+        let k: usize = window
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--window {window:?}: {e}"))?;
+        spec = spec.max_in_flight(k);
+    }
+    if let Some(n) = args.flags.get("payload-bytes") {
+        let n: usize = n
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--payload-bytes {n:?}: {e}"))?;
+        spec = spec.payload_bytes(n);
+    }
+    Ok(spec)
+}
+
+fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Args) -> Result<()> {
     let text = std::fs::read_to_string(config_path)
         .with_context(|| format!("read {config_path}"))?;
     let cfg = DeploymentConfig::from_text(&text).map_err(|e| anyhow::anyhow!(e))?;
@@ -182,7 +237,10 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64) -> Result<
             cfg.opts,
             id as u64,
         )),
-        "client" => Box::new(Client::new(id, layout.proposers.clone())),
+        "client" => {
+            let spec = client_workload(&cfg, args)?;
+            Box::new(Client::new(id, layout.proposers.clone(), spec))
+        }
         other => anyhow::bail!("unknown role: {other}"),
     };
 

@@ -125,7 +125,13 @@ pub enum Msg {
     GarbageB { round: Round },
 
     // ---- Client path ----
-    ClientRequest { cmd: Command },
+    /// Client → leader. `lowest` is the client's oldest in-flight seq:
+    /// every seq below it has been acknowledged back to the client. The
+    /// leader's per-client sequencer uses it to admit pipelined requests
+    /// in FIFO order across network reordering and leader changes
+    /// (seqs `< lowest` are settled; seqs `≥ lowest` are admitted in
+    /// contiguous order).
+    ClientRequest { cmd: Command, lowest: u64 },
     /// Replica → client: result of executing the command.
     ClientReply { seq: u64, result: Vec<u8> },
     /// Any node → client/other: "I am not the leader; try `hint`".
@@ -267,7 +273,8 @@ mod tests {
                 chosen_watermark: 3,
             },
             Msg::ClientRequest {
-                cmd: Command { client: 9, seq: 1, payload: vec![0xab] },
+                cmd: Command { client: 9, seq: 2, payload: vec![0xab] },
+                lowest: 1,
             },
             Msg::StopB { log: BTreeMap::new(), gc_watermark: None },
         ];

@@ -1,107 +1,242 @@
-//! Closed-loop workload clients (§8.1: "every client repeatedly proposes a
-//! state machine command, waits to receive a response, and then immediately
-//! proposes another command").
+//! Workload clients, driven by a [`WorkloadSpec`].
+//!
+//! One role serves every workload mode (§8.1's closed loop, the pipelined
+//! closed loop, and fixed-rate / deterministic-Poisson open loop):
+//!
+//! * **Closed loop** (`window = 1`): "every client repeatedly proposes a
+//!   state machine command, waits to receive a response, and then
+//!   immediately proposes another command" — the paper's client.
+//! * **Pipelined** (`window = k`): up to `k` requests outstanding, each
+//!   with its own resend timer; replies refill the window. Per-client
+//!   FIFO order is preserved by the leader-side sequencer
+//!   ([`crate::roles::sequencer`]) even when the network reorders the
+//!   in-flight requests.
+//! * **Open loop**: requests *arrive* on a timer (fixed interval or
+//!   exponential gaps from the client's deterministic RNG), independent
+//!   of completions, bounded by `max_in_flight`; excess arrivals queue
+//!   client-side. Latency is measured from arrival, so queueing delay
+//!   under overload is visible. `offered` vs `completed` counters feed
+//!   the offered-load experiment (X4).
 //!
 //! Clients record `(completion_time, latency)` samples which the harness
 //! turns into the paper's sliding-window latency/throughput series.
 
 use crate::msg::{Command, Msg};
 use crate::node::{Effects, Node, Timer};
-use crate::{NodeId, Time};
+use crate::util::Rng;
+use crate::workload::{WorkloadMode, WorkloadSpec};
+use crate::{NodeId, Time, MS, US};
+use std::collections::{BTreeMap, VecDeque};
 
-/// A closed-loop client.
+/// `Timer::Wakeup` tag: delayed start (`WorkloadSpec::start_at`).
+pub const TAG_START: u64 = 0;
+/// `Timer::Wakeup` tag: open-loop arrival tick.
+pub const TAG_ARRIVAL: u64 = 1;
+
+/// One in-flight request.
+#[derive(Clone, Copy, Debug)]
+struct Outstanding {
+    /// When the request entered the system (arrival time for open-loop
+    /// requests that queued; send time otherwise). Latency is measured
+    /// from here.
+    issued_at: Time,
+    /// Matches the most recently armed resend timer; stale timers from
+    /// earlier (re)sends of this request carry older generations.
+    generation: u64,
+}
+
+/// A workload client (closed-loop, pipelined, or open-loop per its spec).
 pub struct Client {
     pub id: NodeId,
     /// Proposers, in fallback order; `leader_hint` indexes into this list.
     pub proposers: Vec<NodeId>,
     pub leader_hint: usize,
-    /// Payload for each command (paper: one-byte no-op).
-    pub payload: Vec<u8>,
-    /// Resend timeout if no reply arrives.
-    pub resend_after: Time,
-    /// Next sequence number to send.
-    pub seq: u64,
-    /// In-flight request: (seq, send_time).
-    pub outstanding: Option<(u64, Time)>,
+    pub spec: WorkloadSpec,
     /// Completed-request samples `(completion_time, latency_ns)`.
     pub samples: Vec<(Time, Time)>,
+    /// Requests generated: open-loop arrivals, or closed-loop sends.
+    pub offered: u64,
+    /// Requests completed (a reply was received).
+    pub completed: u64,
+    /// Requests dropped at the stop deadline after losing their replies
+    /// (resends are bounded by `stop_at`).
+    pub abandoned: u64,
+
+    /// Payload for this client's commands (resolved from the spec once).
+    payload: Vec<u8>,
+    /// Next sequence number to assign (first command is seq 1).
+    next_seq: u64,
+    /// In-flight requests by seq.
+    outstanding: BTreeMap<u64, Outstanding>,
+    /// Open-loop arrivals waiting for a free in-flight slot (their
+    /// arrival times, for latency-from-arrival accounting).
+    backlog: VecDeque<Time>,
     /// Bumped on every (re)send; stale resend timers are ignored.
     generation: u64,
-    /// Start issuing at this time (0 = immediately on start).
-    pub start_at: Time,
-    /// Stop issuing new requests after this time (u64::MAX = never).
-    pub stop_at: Time,
+    /// Last time a `NotLeader` redirect re-sent the whole window (guards
+    /// against a redirect storm when many in-flight requests hit a
+    /// follower at once).
+    last_redirect: Time,
+    /// Last time a throttled redirect probed with the oldest request.
+    last_probe: Time,
+    /// Deterministic per-client RNG (Poisson inter-arrival gaps).
+    rng: Rng,
 }
 
 impl Client {
-    pub fn new(id: NodeId, proposers: Vec<NodeId>) -> Client {
+    pub fn new(id: NodeId, proposers: Vec<NodeId>, spec: WorkloadSpec) -> Client {
+        let payload = spec.payload.bytes_for(id);
         Client {
             id,
             proposers,
             leader_hint: 0,
-            payload: vec![0u8],
-            resend_after: 100 * crate::MS,
-            seq: 0,
-            outstanding: None,
+            payload,
+            spec,
             samples: Vec::new(),
+            offered: 0,
+            completed: 0,
+            abandoned: 0,
+            next_seq: 1,
+            outstanding: BTreeMap::new(),
+            backlog: VecDeque::new(),
             generation: 0,
-            start_at: 0,
-            stop_at: u64::MAX,
+            last_redirect: 0,
+            last_probe: 0,
+            rng: Rng::new(0x9e3779b97f4a7c15 ^ id as u64),
         }
+    }
+
+    /// Number of requests currently on the wire.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
     }
 
     fn leader(&self) -> NodeId {
         self.proposers[self.leader_hint % self.proposers.len()]
     }
 
-    fn send_next(&mut self, now: Time, fx: &mut Effects) {
-        if now >= self.stop_at {
-            self.outstanding = None;
-            return;
-        }
-        self.seq += 1;
+    /// Oldest in-flight seq: everything below it has been acknowledged to
+    /// this client, which lets the leader's sequencer retire state and
+    /// initialize ordering mid-stream (e.g. after a leader change).
+    fn lowest_outstanding(&self) -> u64 {
+        self.outstanding.keys().next().copied().unwrap_or(self.next_seq)
+    }
+
+    /// Issue a brand-new request. `issued_at` is the arrival time the
+    /// latency clock starts from (≤ `now` for backlogged open-loop work).
+    fn send_request(&mut self, issued_at: Time, _now: Time, fx: &mut Effects) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
         self.generation += 1;
-        self.outstanding = Some((self.seq, now));
-        let cmd = Command { client: self.id, seq: self.seq, payload: self.payload.clone() };
-        fx.send(self.leader(), Msg::ClientRequest { cmd });
+        self.outstanding.insert(seq, Outstanding { issued_at, generation: self.generation });
+        let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
+        let lowest = self.lowest_outstanding();
+        fx.send(self.leader(), Msg::ClientRequest { cmd, lowest });
         fx.timer(
-            self.resend_after,
-            Timer::ClientResend { seq: self.seq, generation: self.generation },
+            self.spec.resend_after,
+            Timer::ClientResend { seq, generation: self.generation },
         );
     }
 
-    fn resend(&mut self, now: Time, fx: &mut Effects) {
-        if let Some((seq, _sent)) = self.outstanding {
-            let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
-            self.generation += 1;
-            fx.send(self.leader(), Msg::ClientRequest { cmd });
-            fx.timer(
-                self.resend_after,
-                Timer::ClientResend { seq, generation: self.generation },
-            );
-            let _ = now;
+    /// Re-send one in-flight request, bounded by the stop deadline: a
+    /// request whose replies keep getting lost is abandoned once `now`
+    /// passes `stop_at` instead of being retried forever.
+    fn resend_one(&mut self, seq: u64, now: Time, fx: &mut Effects) {
+        if now >= self.spec.stop_at {
+            if self.outstanding.remove(&seq).is_some() {
+                self.abandoned += 1;
+            }
+            return;
+        }
+        self.generation += 1;
+        let generation = self.generation;
+        let Some(o) = self.outstanding.get_mut(&seq) else {
+            return;
+        };
+        o.generation = generation;
+        let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
+        let lowest = self.lowest_outstanding();
+        fx.send(self.leader(), Msg::ClientRequest { cmd, lowest });
+        fx.timer(self.spec.resend_after, Timer::ClientResend { seq, generation });
+    }
+
+    /// Closed-loop refill: keep `window` requests outstanding until the
+    /// stop deadline.
+    fn fill_window(&mut self, now: Time, fx: &mut Effects) {
+        let WorkloadMode::ClosedLoop { window } = self.spec.mode else {
+            return;
+        };
+        while self.outstanding.len() < window && now < self.spec.stop_at {
+            self.offered += 1;
+            self.send_request(now, now, fx);
+        }
+    }
+
+    /// One open-loop arrival at `now`; schedules the next tick.
+    fn on_arrival(&mut self, now: Time, fx: &mut Effects) {
+        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight } = self.spec.mode else {
+            return;
+        };
+        if now >= self.spec.stop_at {
+            return; // stop the arrival chain
+        }
+        self.offered += 1;
+        if self.outstanding.len() < max_in_flight {
+            self.send_request(now, now, fx);
+        } else {
+            self.backlog.push_back(now);
+        }
+        let gap = if poisson {
+            // Exponential gap with mean `interval`, from the per-client
+            // deterministic stream.
+            let u = self.rng.next_f64();
+            ((-(1.0 - u).ln()) * interval as f64) as Time
+        } else {
+            interval
+        };
+        fx.timer(gap.max(1), Timer::Wakeup { tag: TAG_ARRIVAL });
+    }
+
+    /// Start generating work (at start time, or immediately).
+    fn begin(&mut self, now: Time, fx: &mut Effects) {
+        match self.spec.mode {
+            WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+            WorkloadMode::OpenLoop { .. } => self.on_arrival(now, fx),
         }
     }
 }
 
 impl Node for Client {
     fn on_start(&mut self, now: Time, fx: &mut Effects) {
-        if self.start_at > now {
-            fx.timer(self.start_at - now, Timer::Wakeup { tag: 0 });
+        if self.spec.start_at > now {
+            fx.timer(self.spec.start_at - now, Timer::Wakeup { tag: TAG_START });
         } else {
-            self.send_next(now, fx);
+            self.begin(now, fx);
         }
     }
 
     fn on_msg(&mut self, now: Time, _from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
             Msg::ClientReply { seq, .. } => {
-                if let Some((out_seq, sent)) = self.outstanding {
-                    if seq == out_seq {
-                        self.samples.push((now, now - sent));
-                        self.send_next(now, fx);
+                let Some(o) = self.outstanding.remove(&seq) else {
+                    return; // stale/duplicate reply (other replicas)
+                };
+                self.samples.push((now, now - o.issued_at));
+                self.completed += 1;
+                match self.spec.mode {
+                    WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+                    WorkloadMode::OpenLoop { .. } => {
+                        if now >= self.spec.stop_at {
+                            // Queued arrivals were counted as offered;
+                            // discarding them at the stop deadline makes
+                            // them abandoned, keeping offered =
+                            // completed + abandoned + in-flight.
+                            self.abandoned += self.backlog.len() as u64;
+                            self.backlog.clear();
+                        } else if let Some(arrived) = self.backlog.pop_front() {
+                            self.send_request(arrived, now, fx);
+                        }
                     }
-                    // Stale/duplicate replies (other replicas) are ignored.
                 }
             }
             Msg::NotLeader { hint } => {
@@ -112,8 +247,29 @@ impl Node for Client {
                 } else {
                     self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
                 }
-                // Retry immediately against the new hint.
-                self.resend(now, fx);
+                // Re-send the whole window against the new hint, at most
+                // once per millisecond: each in-flight request triggers
+                // its own NotLeader reply, and re-sending all of them for
+                // each would be quadratic in the window. Inside the
+                // throttle window, still re-send the oldest request so
+                // the redirect ping-pong keeps probing until a leader
+                // emerges (otherwise a mid-election redirect would leave
+                // nothing in flight until the 100 ms resend timer).
+                if now.saturating_sub(self.last_redirect) >= MS || self.last_redirect == 0 {
+                    self.last_redirect = now.max(1);
+                    let seqs: Vec<u64> = self.outstanding.keys().copied().collect();
+                    for seq in seqs {
+                        self.resend_one(seq, now, fx);
+                    }
+                } else if now.saturating_sub(self.last_probe) >= 100 * US {
+                    // One RTT-scale probe, not one per NotLeader reply: a
+                    // window of k requests bouncing off a follower would
+                    // otherwise turn into k duplicate probes per round.
+                    self.last_probe = now;
+                    if let Some(&oldest) = self.outstanding.keys().next() {
+                        self.resend_one(oldest, now, fx);
+                    }
+                }
             }
             _ => {}
         }
@@ -122,21 +278,32 @@ impl Node for Client {
     fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects) {
         match timer {
             Timer::ClientResend { seq, generation } => {
-                // Only the most recently armed timer for the current
-                // outstanding request is live; completed or re-sent
-                // requests leave stale timers behind.
-                if generation == self.generation
-                    && matches!(self.outstanding, Some((s, _)) if s == seq)
-                {
-                    // Rotate the hint: the leader may have failed.
-                    self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
-                    self.resend(now, fx);
+                // Only the most recently armed timer for a live request
+                // counts; completed or re-sent requests leave stale
+                // timers behind.
+                let live = self
+                    .outstanding
+                    .get(&seq)
+                    .map_or(false, |o| o.generation == generation);
+                if live {
+                    // The leader may have failed: rotate the hint, but
+                    // only when the *oldest* request times out, so a
+                    // burst of per-request timeouts rotates once.
+                    if self.lowest_outstanding() == seq {
+                        self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
+                    }
+                    self.resend_one(seq, now, fx);
                 }
             }
-            Timer::Wakeup { tag: 0 } => {
-                if self.outstanding.is_none() {
-                    self.send_next(now, fx);
-                }
+            Timer::Wakeup { tag: TAG_START } => {
+                self.begin(now, fx);
+            }
+            Timer::Wakeup { tag: TAG_ARRIVAL } => {
+                self.on_arrival(now, fx);
+            }
+            Timer::Wakeup { tag } => {
+                // Every wakeup tag must be routed explicitly above.
+                debug_assert!(false, "client {}: unknown wakeup tag {tag}", self.id);
             }
             _ => {}
         }
@@ -154,6 +321,8 @@ impl Node for Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::WorkloadSpec;
+    use crate::SEC;
 
     fn reply(c: &mut Client, now: Time, seq: u64) -> Effects {
         let mut fx = Effects::new();
@@ -161,87 +330,242 @@ mod tests {
         fx
     }
 
+    fn sent_seqs(fx: &Effects) -> Vec<u64> {
+        fx.msgs
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::ClientRequest { cmd, .. } => Some(cmd.seq),
+                _ => None,
+            })
+            .collect()
+    }
+
     #[test]
     fn closed_loop() {
-        let mut c = Client::new(10, vec![0, 1]);
+        let mut c = Client::new(10, vec![0, 1], WorkloadSpec::closed_loop());
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
-        assert_eq!(fx.msgs.len(), 1);
-        assert!(matches!(fx.msgs[0].1, Msg::ClientRequest { .. }));
-        assert_eq!(c.outstanding.unwrap().0, 1);
+        assert_eq!(sent_seqs(&fx), vec![1]);
+        assert_eq!(c.in_flight(), 1);
 
         // Reply at t=5ms: sample recorded, next request sent immediately.
-        let fx = reply(&mut c, 5 * crate::MS, 1);
-        assert_eq!(c.samples, vec![(5 * crate::MS, 5 * crate::MS)]);
-        assert_eq!(c.outstanding.unwrap().0, 2);
-        assert_eq!(fx.msgs.len(), 1);
+        let fx = reply(&mut c, 5 * MS, 1);
+        assert_eq!(c.samples, vec![(5 * MS, 5 * MS)]);
+        assert_eq!(sent_seqs(&fx), vec![2]);
+        assert_eq!((c.offered, c.completed), (2, 1));
+    }
+
+    #[test]
+    fn pipelined_window_stays_full() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::pipelined(3));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(sent_seqs(&fx), vec![1, 2, 3]);
+        assert_eq!(c.in_flight(), 3);
+        // Each reply frees one slot and triggers exactly one new send.
+        let fx = reply(&mut c, MS, 1);
+        assert_eq!(sent_seqs(&fx), vec![4]);
+        assert_eq!(c.in_flight(), 3);
+        // Out-of-order reply (seq 3 before 2) still refills.
+        let fx = reply(&mut c, 2 * MS, 3);
+        assert_eq!(sent_seqs(&fx), vec![5]);
+        let outstanding: Vec<u64> = c.outstanding.keys().copied().collect();
+        assert_eq!(outstanding, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn requests_carry_lowest_outstanding() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::pipelined(2));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let lowests: Vec<u64> = fx
+            .msgs
+            .iter()
+            .filter_map(|(_, m)| match m {
+                Msg::ClientRequest { lowest, .. } => Some(*lowest),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lowests, vec![1, 1]);
+        // After seq 1 completes, new requests advertise lowest = 2.
+        let fx = reply(&mut c, MS, 1);
+        match &fx.msgs[0].1 {
+            Msg::ClientRequest { cmd, lowest } => {
+                assert_eq!(cmd.seq, 3);
+                assert_eq!(*lowest, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn open_loop_arrivals_independent_of_replies() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::open_loop(100.0)); // 10 ms gap
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        // First arrival sends immediately and schedules the next tick.
+        assert_eq!(sent_seqs(&fx), vec![1]);
+        let ticks: Vec<Time> = fx
+            .timers
+            .iter()
+            .filter_map(|(d, t)| {
+                matches!(t, Timer::Wakeup { tag: TAG_ARRIVAL }).then_some(*d)
+            })
+            .collect();
+        assert_eq!(ticks, vec![10 * MS]);
+        // Two more arrivals with no replies: requests keep flowing.
+        let mut fx2 = Effects::new();
+        c.on_timer(10 * MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
+        c.on_timer(20 * MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
+        assert_eq!(sent_seqs(&fx2), vec![2, 3]);
+        assert_eq!(c.offered, 3);
+        assert_eq!(c.in_flight(), 3);
+    }
+
+    #[test]
+    fn open_loop_bounds_in_flight_and_queues() {
+        let spec = WorkloadSpec::open_loop(1000.0).max_in_flight(2);
+        let mut c = Client::new(10, vec![0], spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let mut fx2 = Effects::new();
+        c.on_timer(MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
+        c.on_timer(2 * MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
+        // Third arrival queues instead of sending.
+        assert_eq!(sent_seqs(&fx2), vec![2]);
+        assert_eq!(c.in_flight(), 2);
+        assert_eq!(c.backlog.len(), 1);
+        assert_eq!(c.offered, 3);
+        // A reply drains the backlog; latency runs from the 2 ms arrival.
+        let fx3 = reply(&mut c, 5 * MS, 1);
+        assert_eq!(sent_seqs(&fx3), vec![3]);
+        assert!(c.backlog.is_empty());
+        let o = c.outstanding.get(&3).unwrap();
+        assert_eq!(o.issued_at, 2 * MS);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic() {
+        let gaps = |id: NodeId| -> Vec<Time> {
+            let mut c = Client::new(id, vec![0], WorkloadSpec::open_loop_poisson(1000.0));
+            let mut out = Vec::new();
+            let mut now = 0;
+            for _ in 0..5 {
+                let mut fx = Effects::new();
+                c.on_arrival(now, &mut fx);
+                let (d, _) = fx
+                    .timers
+                    .iter()
+                    .find(|(_, t)| matches!(t, Timer::Wakeup { tag: TAG_ARRIVAL }))
+                    .expect("next tick scheduled");
+                out.push(*d);
+                now += d;
+            }
+            out
+        };
+        assert_eq!(gaps(5), gaps(5));
+        assert_ne!(gaps(5), gaps(6)); // different clients, different schedules
+    }
+
+    #[test]
+    fn resend_bounded_by_stop_at() {
+        // Regression (satellite fix): a request lost after the stop
+        // deadline must be abandoned, not retried forever.
+        let spec = WorkloadSpec::closed_loop().stop_at(10 * MS);
+        let mut c = Client::new(10, vec![0], spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 1);
+        // The reply never arrives; the resend timer fires after stop_at.
+        let mut fx2 = Effects::new();
+        c.on_timer(100 * MS, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx2);
+        assert!(fx2.msgs.is_empty(), "no resend past the stop deadline");
+        assert!(fx2.timers.is_empty(), "no timer re-armed past the stop deadline");
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(c.abandoned, 1);
+    }
+
+    #[test]
+    fn resend_before_stop_still_retries() {
+        let spec = WorkloadSpec::closed_loop().stop_at(SEC);
+        let mut c = Client::new(10, vec![0, 1], spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let mut fx2 = Effects::new();
+        c.on_timer(100 * MS, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx2);
+        assert_eq!(sent_seqs(&fx2), vec![1]);
+        // Oldest-request timeout rotates the leader hint.
+        assert_eq!(c.leader_hint, 1);
+        // A stale-generation timer is a no-op (the resend bumped the gen).
+        let mut fx3 = Effects::new();
+        c.on_timer(200 * MS, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx3);
+        assert!(fx3.msgs.is_empty());
+        // Completed request: its timer is a no-op.
+        reply(&mut c, 250 * MS, 1);
+        let mut fx4 = Effects::new();
+        c.on_timer(300 * MS, Timer::ClientResend { seq: 1, generation: 2 }, &mut fx4);
+        assert!(!sent_seqs(&fx4).contains(&1));
     }
 
     #[test]
     fn stale_reply_ignored() {
-        let mut c = Client::new(10, vec![0]);
+        let mut c = Client::new(10, vec![0], WorkloadSpec::closed_loop());
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
         reply(&mut c, 1, 1);
         // A second (duplicate) reply for seq 1 doesn't double-count.
         reply(&mut c, 2, 1);
         assert_eq!(c.samples.len(), 1);
-        assert_eq!(c.outstanding.unwrap().0, 2);
+        assert_eq!(c.completed, 1);
     }
 
     #[test]
-    fn not_leader_redirects() {
-        let mut c = Client::new(10, vec![0, 1]);
+    fn not_leader_redirects_whole_window() {
+        let mut c = Client::new(10, vec![0, 1], WorkloadSpec::pipelined(2));
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
         let mut fx2 = Effects::new();
-        c.on_msg(1, 0, Msg::NotLeader { hint: Some(1) }, &mut fx2);
+        c.on_msg(MS, 0, Msg::NotLeader { hint: Some(1) }, &mut fx2);
         assert_eq!(c.leader_hint, 1);
-        // Resent to the new leader.
-        assert_eq!(fx2.msgs[0].0, 1);
-    }
-
-    #[test]
-    fn resend_timer_rotates_leader() {
-        let mut c = Client::new(10, vec![0, 1]);
-        let mut fx = Effects::new();
-        c.on_start(0, &mut fx);
-        let mut fx2 = Effects::new();
-        c.on_timer(c.resend_after, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx2);
-        assert_eq!(c.leader_hint, 1);
-        assert_eq!(fx2.msgs.len(), 1);
-        // A stale-generation timer is a no-op (the resend bumped gen to 2).
-        let mut fxg = Effects::new();
-        c.on_timer(c.resend_after, Timer::ClientResend { seq: 1, generation: 1 }, &mut fxg);
-        assert!(fxg.msgs.is_empty());
-        // Stale resend timer (request already done) is a no-op.
-        reply(&mut c, 1, 1);
+        // Both in-flight requests re-sent to the new leader.
+        assert_eq!(sent_seqs(&fx2), vec![1, 2]);
+        assert!(fx2.msgs.iter().all(|(to, _)| *to == 1));
+        // A second NotLeader within 1 ms is throttled down to a single
+        // probe of the oldest request (not the whole window again).
         let mut fx3 = Effects::new();
-        c.on_timer(2 * c.resend_after, Timer::ClientResend { seq: 1, generation: 2 }, &mut fx3);
-        assert!(fx3.msgs.is_empty());
+        c.on_msg(MS + 1, 1, Msg::NotLeader { hint: Some(0) }, &mut fx3);
+        assert_eq!(sent_seqs(&fx3), vec![1]);
     }
 
     #[test]
     fn stop_at_halts_issuing() {
-        let mut c = Client::new(10, vec![0]);
-        c.stop_at = 10;
+        let spec = WorkloadSpec::closed_loop().stop_at(10);
+        let mut c = Client::new(10, vec![0], spec);
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
         reply(&mut c, 20, 1);
-        assert!(c.outstanding.is_none());
+        assert_eq!(c.in_flight(), 0);
         assert_eq!(c.samples.len(), 1);
     }
 
     #[test]
     fn delayed_start() {
-        let mut c = Client::new(10, vec![0]);
-        c.start_at = 100;
+        let spec = WorkloadSpec::closed_loop().start_at(100);
+        let mut c = Client::new(10, vec![0], spec);
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
         assert!(fx.msgs.is_empty());
         assert_eq!(fx.timers.len(), 1);
         let mut fx2 = Effects::new();
-        c.on_timer(100, Timer::Wakeup { tag: 0 }, &mut fx2);
-        assert_eq!(fx2.msgs.len(), 1);
+        c.on_timer(100, Timer::Wakeup { tag: TAG_START }, &mut fx2);
+        assert_eq!(sent_seqs(&fx2), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown wakeup tag")]
+    fn unknown_wakeup_tag_asserts() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::closed_loop());
+        let mut fx = Effects::new();
+        c.on_timer(0, Timer::Wakeup { tag: 99 }, &mut fx);
     }
 }

@@ -10,13 +10,14 @@
 //! [`super::replica::Replica`] roles with Matchmaker MultiPaxos; only the
 //! leader differs (no matchmakers, no matchmaking phase).
 
+use super::sequencer::{ClientSequencer, Offered};
 use crate::config::Configuration;
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
 use crate::util::Rng;
 use crate::{NodeId, Slot, Time, MS};
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 #[derive(Clone, Debug)]
 struct SlotState {
@@ -61,7 +62,8 @@ pub struct HorizontalLeader {
     next_slot: Slot,
     chosen_watermark: Slot,
     stalled: VecDeque<Command>,
-    client_table: HashMap<NodeId, u64>,
+    /// Per-client FIFO admission (dedup + reorder of pipelined requests).
+    sequencer: ClientSequencer,
     generation: u64,
 
     /// Metrics: commands stalled by the α window.
@@ -93,7 +95,7 @@ impl HorizontalLeader {
             next_slot: 0,
             chosen_watermark: 0,
             stalled: VecDeque::new(),
-            client_table: HashMap::new(),
+            sequencer: ClientSequencer::new(),
             generation: 0,
             alpha_stalls: 0,
             reconfigs_completed: 0,
@@ -153,15 +155,25 @@ impl HorizontalLeader {
         self.next_slot < self.chosen_watermark + self.alpha
     }
 
+    /// Admit client traffic in per-client FIFO order, then assign.
+    /// Duplicates (client retries) are dropped — the replicas re-reply
+    /// from their result cache when the retried command is re-chosen.
+    fn on_client_request(&mut self, cmd: Command, lowest: u64, now: Time, fx: &mut Effects) {
+        match self.sequencer.offer(cmd, lowest) {
+            Offered::Admit(cmds) => {
+                for c in cmds {
+                    self.assign(c, now, fx);
+                }
+            }
+            Offered::Duplicate(_) | Offered::Buffered => {}
+        }
+    }
+
+    /// Assign a slot to an admitted (in-order, deduplicated) command.
     fn assign(&mut self, cmd: Command, now: Time, fx: &mut Effects) {
         if !self.steady {
             self.stalled.push_back(cmd);
             return;
-        }
-        if let Some(&seq) = self.client_table.get(&cmd.client) {
-            if cmd.seq <= seq {
-                return;
-            }
         }
         if !self.window_open() {
             self.alpha_stalls += 1;
@@ -175,7 +187,6 @@ impl HorizontalLeader {
                 return;
             }
         }
-        self.client_table.insert(cmd.client, cmd.seq);
         let slot = self.next_slot;
         self.next_slot += 1;
         self.propose(slot, Value::Cmd(cmd), now, fx);
@@ -189,7 +200,6 @@ impl HorizontalLeader {
                 }
             }
             let cmd = self.stalled.pop_front().unwrap();
-            // Re-check dedup inside assign.
             self.assign(cmd, now, fx);
         }
     }
@@ -235,8 +245,8 @@ impl Node for HorizontalLeader {
 
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientRequest { cmd } => {
-                self.assign(cmd, now, fx);
+            Msg::ClientRequest { cmd, lowest } => {
+                self.on_client_request(cmd, lowest, now, fx);
             }
             Msg::Phase1B { round, votes, .. } => {
                 if round != self.round {
@@ -402,7 +412,7 @@ mod tests {
         fn cmd(&mut self, client: NodeId, seq: u64) {
             let mut fx = Effects::new();
             let cmd = Command { client, seq, payload: vec![0] };
-            self.leader.on_msg(0, client, Msg::ClientRequest { cmd }, &mut fx);
+            self.leader.on_msg(0, client, Msg::ClientRequest { cmd, lowest: seq }, &mut fx);
             self.pump(fx);
         }
     }

@@ -34,6 +34,7 @@
 //! stop-and-copy of the matchmaker state plus a meta-Paxos (with the old
 //! matchmakers as acceptors) choosing the new matchmaker set.
 
+use super::sequencer::{ClientSequencer, Offered};
 use crate::config::{Configuration, OptFlags};
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
@@ -200,8 +201,9 @@ pub struct Leader {
     pending_batch: Vec<Command>,
     /// Whether a `BatchFlush` timer is outstanding.
     batch_timer_armed: bool,
-    /// Highest seq assigned per client (dedup of client retries).
-    client_table: HashMap<NodeId, u64>,
+    /// Per-client FIFO admission: dedups retries and re-orders pipelined
+    /// requests the network delivered out of order.
+    sequencer: ClientSequencer,
     cmd_slots: HashMap<(NodeId, u64), Slot>,
 
     // ---- Replica / GC state ----
@@ -272,7 +274,7 @@ impl Leader {
             stalled: VecDeque::new(),
             pending_batch: Vec::new(),
             batch_timer_armed: false,
-            client_table: HashMap::new(),
+            sequencer: ClientSequencer::new(),
             cmd_slots: HashMap::new(),
             replica_acks: BTreeMap::new(),
             compacted_below: 0,
@@ -587,6 +589,33 @@ impl Leader {
     // Phase 2 (steady state)
     // =====================================================================
 
+    /// Entry point for client traffic: the sequencer admits requests in
+    /// per-client FIFO order (buffering reordered pipelined requests) and
+    /// routes retries to the already-assigned slot.
+    fn on_client_request(&mut self, cmd: Command, lowest: u64, now: Time, fx: &mut Effects) {
+        match self.sequencer.offer(cmd, lowest) {
+            Offered::Admit(cmds) => {
+                for c in cmds {
+                    self.assign_and_propose(c, now, fx);
+                }
+            }
+            Offered::Duplicate(cmd) => {
+                // Retry of an admitted command. If it was chosen,
+                // re-inform the replicas (they re-reply with the cached
+                // result); otherwise the Phase 2 watchdog is already on it.
+                if let Some(&slot) = self.cmd_slots.get(&cmd.id()) {
+                    if self.log.get(&slot).map_or(false, |s| s.chosen) {
+                        let value = self.log[&slot].value.clone();
+                        fx.broadcast(&self.replicas.clone(), &Msg::Chosen { slot, value });
+                    }
+                }
+            }
+            Offered::Buffered => {}
+        }
+    }
+
+    /// Assign a slot (or batch membership) to an admitted command. Only
+    /// in-order, deduplicated commands reach this point.
     fn assign_and_propose(&mut self, cmd: Command, now: Time, fx: &mut Effects) {
         let round = match self.active_round {
             Some(r) => r,
@@ -595,20 +624,6 @@ impl Leader {
                 return;
             }
         };
-        // Dedup client retries.
-        if let Some(&seq) = self.client_table.get(&cmd.client) {
-            if cmd.seq <= seq {
-                if let Some(&slot) = self.cmd_slots.get(&cmd.id()) {
-                    if self.log.get(&slot).map_or(false, |s| s.chosen) {
-                        // Already chosen: re-inform replicas (they re-reply).
-                        let value = self.log[&slot].value.clone();
-                        fx.broadcast(&self.replicas.clone(), &Msg::Chosen { slot, value });
-                    }
-                }
-                return;
-            }
-        }
-        self.client_table.insert(cmd.client, cmd.seq);
         if self.opts.batch_size > 1 {
             // Phase 2 batching: accumulate; flush when full, or let the
             // delay timer flush a partial batch.
@@ -979,12 +994,12 @@ impl Node for Leader {
 
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientRequest { cmd } => {
+            Msg::ClientRequest { cmd, lowest } => {
                 if !self.is_leader {
                     fx.send(from, Msg::NotLeader { hint: self.last_leader });
                     return;
                 }
-                self.assign_and_propose(cmd, now, fx);
+                self.on_client_request(cmd, lowest, now, fx);
             }
             Msg::MatchB { round, gc_watermark, prior } => {
                 self.on_match_b(from, round, gc_watermark, prior, now, fx)
@@ -1231,7 +1246,9 @@ mod tests {
         fn client_cmd(&mut self, client: NodeId, seq: u64) {
             let mut fx = Effects::new();
             let cmd = Command { client, seq, payload: vec![0] };
-            self.leader.on_msg(1, client, Msg::ClientRequest { cmd }, &mut fx);
+            // Closed-loop clients: the request being sent is the oldest
+            // (only) one in flight.
+            self.leader.on_msg(1, client, Msg::ClientRequest { cmd, lowest: seq }, &mut fx);
             self.pump(fx, 1);
         }
 
@@ -1276,6 +1293,36 @@ mod tests {
         p.client_cmd(100, 1);
         assert_eq!(p.leader.next_slot, 1);
         assert_eq!(p.chosen_count(), 1);
+    }
+
+    #[test]
+    fn reordered_pipelined_requests_assigned_in_fifo_order() {
+        let mut p = Pump::new(OptFlags::default());
+        p.start();
+        // A pipelined client's seq 2 arrives before seq 1 (both in
+        // flight, lowest = 1): seq 2 must wait, then both get slots in
+        // client order.
+        let c2 = Command { client: 100, seq: 2, payload: vec![0] };
+        let mut fx = Effects::new();
+        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd: c2, lowest: 1 }, &mut fx);
+        assert!(fx.msgs.is_empty(), "out-of-order request must buffer");
+        assert_eq!(p.leader.next_slot, 0);
+        let c1 = Command { client: 100, seq: 1, payload: vec![0] };
+        let mut fx2 = Effects::new();
+        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd: c1, lowest: 1 }, &mut fx2);
+        p.pump(fx2, 1);
+        assert_eq!(p.leader.next_slot, 2);
+        assert_eq!(p.chosen_count(), 2);
+        // Slot order matches seq order.
+        let slots: Vec<(Slot, u64)> = p
+            .announces
+            .iter()
+            .filter_map(|a| match a {
+                Announce::Chosen { slot, value: Value::Cmd(c), .. } => Some((*slot, c.seq)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(slots, vec![(0, 1), (1, 2)]);
     }
 
     #[test]
@@ -1330,7 +1377,7 @@ mod tests {
         let mut l = Leader::new(1, 1, cfg, vec![1, 2, 3], vec![10], vec![0, 1], OptFlags::default(), 7);
         let mut fx = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![] };
-        l.on_msg(0, 100, Msg::ClientRequest { cmd }, &mut fx);
+        l.on_msg(0, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
         assert!(matches!(fx.msgs[0].1, Msg::NotLeader { .. }));
     }
 
@@ -1369,11 +1416,11 @@ mod tests {
         let mut fx = Effects::new();
         for seq in 1..=2 {
             let cmd = Command { client: 100, seq, payload: vec![0] };
-            p.leader.on_msg(1, 100, Msg::ClientRequest { cmd }, &mut fx);
+            p.leader.on_msg(1, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
         }
         assert!(fx.msgs.is_empty(), "commands must buffer until the batch fills");
         let cmd = Command { client: 101, seq: 1, payload: vec![0] };
-        p.leader.on_msg(1, 101, Msg::ClientRequest { cmd }, &mut fx);
+        p.leader.on_msg(1, 101, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
         assert!(!fx.msgs.is_empty(), "a full batch must flush immediately");
         p.pump(fx, 1);
         // One slot chose all three commands; replicas executed each.
@@ -1391,7 +1438,7 @@ mod tests {
         p.start();
         let mut fx = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![0] };
-        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd }, &mut fx);
+        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
         assert!(fx.msgs.is_empty());
         assert!(fx
             .timers
@@ -1424,7 +1471,7 @@ mod tests {
         assert!(!p.leader.is_steady());
         let mut fx2 = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![] };
-        p.leader.on_msg(2, 100, Msg::ClientRequest { cmd }, &mut fx2);
+        p.leader.on_msg(2, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx2);
         assert!(fx2.msgs.is_empty()); // stalled
         // Now deliver the matchmaking + phase1 messages.
         p.pump(fx, 3);

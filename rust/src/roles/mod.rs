@@ -10,7 +10,10 @@
 //!   Matchmaker Fast Paxos variant (§7, Algorithm 5).
 //! * [`replica`] — state-machine replica: executes the chosen log in prefix
 //!   order, replies to clients, acks prefixes for GC Scenario 3.
-//! * [`client`] — closed-loop workload client with latency recording.
+//! * [`client`] — workload client ([`crate::workload::WorkloadSpec`]-driven:
+//!   closed-loop, pipelined, or open-loop) with latency recording.
+//! * [`sequencer`] — leader-side per-client FIFO admission for pipelined
+//!   clients whose in-flight window the network may reorder.
 //! * [`horizontal`] — baseline: MultiPaxos with horizontal (log-entry)
 //!   reconfiguration and an α window (§7.2).
 
@@ -21,6 +24,7 @@ pub mod leader;
 pub mod matchmaker;
 pub mod proposer;
 pub mod replica;
+pub mod sequencer;
 
 pub use acceptor::Acceptor;
 pub use client::Client;
@@ -29,3 +33,4 @@ pub use leader::Leader;
 pub use matchmaker::Matchmaker;
 pub use proposer::{FastProposer, Proposer};
 pub use replica::Replica;
+pub use sequencer::ClientSequencer;

@@ -14,6 +14,24 @@ use crate::statemachine::StateMachine;
 use crate::{NodeId, Slot, Time};
 use std::collections::{BTreeMap, HashMap};
 
+/// Per-client execution history: dedup cursor plus a bounded window of
+/// recent results. Pipelined clients can lose the reply to seq `k` while
+/// seqs `k+1..` already executed, so caching only the latest result is
+/// not enough to answer retries of any recently executed request.
+#[derive(Debug, Default)]
+pub struct ClientHistory {
+    /// Highest executed seq for this client (commands at or below it are
+    /// duplicates, never re-executed).
+    pub highest: u64,
+    /// Results of the most recent [`RESULT_CACHE`] executed seqs.
+    pub recent: BTreeMap<u64, Vec<u8>>,
+}
+
+/// How many per-client results a replica retains for retry re-replies.
+/// Covers the largest client in-flight window (workload specs clamp
+/// their windows to this bound for exactly that reason).
+pub const RESULT_CACHE: usize = crate::workload::MAX_IN_FLIGHT;
+
 /// A state machine replica.
 pub struct Replica {
     pub id: NodeId,
@@ -23,9 +41,8 @@ pub struct Replica {
     pub exec_watermark: Slot,
     /// The application state machine.
     pub sm: Box<dyn StateMachine>,
-    /// Deduplication: highest executed seq + cached result per client, so
-    /// retried commands return the original result instead of re-executing.
-    pub client_table: HashMap<NodeId, (u64, Vec<u8>)>,
+    /// Deduplication + retry re-reply cache, per client.
+    pub client_table: HashMap<NodeId, ClientHistory>,
     /// Number of commands executed (metrics).
     pub executed: u64,
     /// Emit an `Announce::Executed` per slot (off by default: it is 3
@@ -98,7 +115,7 @@ impl Replica {
 /// commands can stay borrowed from the log (no clone per executed slot).
 fn exec_commands(
     cmds: &[Command],
-    client_table: &mut HashMap<NodeId, (u64, Vec<u8>)>,
+    client_table: &mut HashMap<NodeId, ClientHistory>,
     sm: &mut dyn StateMachine,
     executed: &mut u64,
     fx: &mut Effects,
@@ -107,17 +124,18 @@ fn exec_commands(
     for cmd in cmds {
         let dup = client_table
             .get(&cmd.client)
-            .map_or(false, |(seq, _)| *seq >= cmd.seq);
+            .map_or(false, |h| h.highest >= cmd.seq);
         if dup {
             // Re-chosen retry of an executed command: re-reply with the
             // cached result, do not re-execute.
-            if let Some((seq, result)) = client_table.get(&cmd.client) {
-                if *seq == cmd.seq {
-                    fx.send(
-                        cmd.client,
-                        Msg::ClientReply { seq: *seq, result: result.clone() },
-                    );
-                }
+            if let Some(result) = client_table
+                .get(&cmd.client)
+                .and_then(|h| h.recent.get(&cmd.seq))
+            {
+                fx.send(
+                    cmd.client,
+                    Msg::ClientReply { seq: cmd.seq, result: result.clone() },
+                );
             }
         } else {
             fresh.push(cmd);
@@ -131,7 +149,13 @@ fn exec_commands(
     debug_assert_eq!(results.len(), fresh.len());
     for (cmd, result) in fresh.iter().zip(results) {
         *executed += 1;
-        client_table.insert(cmd.client, (cmd.seq, result.clone()));
+        let h = client_table.entry(cmd.client).or_default();
+        h.highest = h.highest.max(cmd.seq);
+        h.recent.insert(cmd.seq, result.clone());
+        while h.recent.len() > RESULT_CACHE {
+            let oldest = *h.recent.keys().next().unwrap();
+            h.recent.remove(&oldest);
+        }
         fx.send(cmd.client, Msg::ClientReply { seq: cmd.seq, result });
     }
 }
@@ -305,6 +329,37 @@ mod tests {
             .filter(|(_, m)| matches!(m, Msg::ClientReply { .. }))
             .count();
         assert_eq!(replies, 2);
+    }
+
+    #[test]
+    fn retry_of_older_pipelined_seq_gets_cached_reply() {
+        // A pipelined client lost the reply to seq 1 while seq 2 already
+        // executed: the retry (re-chosen at a later slot) must still get
+        // seq 1's cached result, not silence.
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(7, 1, b"skv") });
+        deliver(&mut r, 0, Msg::Chosen { slot: 1, value: cmd(7, 2, b"gk") });
+        assert_eq!(r.executed, 2);
+        let fx = deliver(&mut r, 0, Msg::Chosen { slot: 2, value: cmd(7, 1, b"skv") });
+        assert_eq!(r.executed, 2, "retry must not re-execute");
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 7 && matches!(m, Msg::ClientReply { seq: 1, .. })));
+    }
+
+    #[test]
+    fn result_cache_is_bounded() {
+        let mut r = Replica::new(1, Box::new(Noop));
+        for s in 0..(RESULT_CACHE as u64 + 50) {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"x") });
+        }
+        let h = r.client_table.get(&7).unwrap();
+        assert_eq!(h.recent.len(), RESULT_CACHE);
+        assert_eq!(h.highest, RESULT_CACHE as u64 + 50);
+        // Oldest entries were evicted.
+        assert!(!h.recent.contains_key(&1));
+        assert!(h.recent.contains_key(&(RESULT_CACHE as u64 + 50)));
     }
 
     #[test]

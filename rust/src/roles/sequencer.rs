@@ -1,0 +1,158 @@
+//! Leader-side per-client request sequencing.
+//!
+//! Pipelined clients keep a window of requests in flight, and the network
+//! is free to reorder them, so a leader can receive `seq 3` before
+//! `seq 2`. Admitting requests in arrival order would assign log slots
+//! out of client order (breaking per-client FIFO execution) and — worse —
+//! a naive "highest seq wins" dedup table would silently drop the late
+//! `seq 2` forever. The [`ClientSequencer`] restores per-client FIFO:
+//! requests are buffered until their seq is next, then admitted in
+//! contiguous order.
+//!
+//! The client advertises `lowest` — its oldest in-flight seq — on every
+//! request. Seqs below `lowest` are acknowledged client-side, so the
+//! sequencer can initialize its cursor mid-stream (a new leader taking
+//! over sees `lowest = k` and starts at `k` rather than waiting for a
+//! `seq 1` that was settled long ago) and retire stale buffered entries.
+
+use crate::msg::Command;
+use crate::NodeId;
+use std::collections::{BTreeMap, HashMap};
+
+#[derive(Debug, Default)]
+struct ClientCursor {
+    /// Next seq to admit; 0 = uninitialized (client seqs start at 1).
+    next: u64,
+    /// Out-of-order arrivals waiting for the gap to fill.
+    pending: BTreeMap<u64, Command>,
+}
+
+/// What [`ClientSequencer::offer`] decided about an arriving request.
+#[derive(Debug)]
+pub enum Offered {
+    /// The request (and possibly buffered successors) are now in order:
+    /// propose them, in this order.
+    Admit(Vec<Command>),
+    /// The request was already admitted earlier (a client retry): answer
+    /// from the dedup/chosen state, do not assign a new slot.
+    Duplicate(Command),
+    /// Out of order: buffered until the gap fills. Nothing to do.
+    Buffered,
+}
+
+/// Per-client FIFO admission control for a leader.
+#[derive(Debug, Default)]
+pub struct ClientSequencer {
+    cursors: HashMap<NodeId, ClientCursor>,
+}
+
+impl ClientSequencer {
+    pub fn new() -> ClientSequencer {
+        ClientSequencer::default()
+    }
+
+    /// Feed one arriving request. `lowest` is the client's advertised
+    /// oldest in-flight seq (see [`crate::msg::Msg::ClientRequest`]).
+    pub fn offer(&mut self, cmd: Command, lowest: u64) -> Offered {
+        let cur = self.cursors.entry(cmd.client).or_default();
+        if cur.next == 0 {
+            // First contact with this client: trust its window floor.
+            cur.next = lowest.max(1);
+        } else if lowest > cur.next {
+            // The client acknowledged everything below `lowest` (this can
+            // outrun us after a leader change); drop settled buffer state.
+            cur.next = lowest;
+            cur.pending = cur.pending.split_off(&lowest);
+        }
+        if cmd.seq < cur.next {
+            return Offered::Duplicate(cmd);
+        }
+        cur.pending.insert(cmd.seq, cmd);
+        let mut ready = Vec::new();
+        while let Some(c) = cur.pending.remove(&cur.next) {
+            cur.next += 1;
+            ready.push(c);
+        }
+        if ready.is_empty() {
+            Offered::Buffered
+        } else {
+            Offered::Admit(ready)
+        }
+    }
+
+    /// Number of requests buffered across all clients (diagnostics).
+    pub fn buffered(&self) -> usize {
+        self.cursors.values().map(|c| c.pending.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd(client: NodeId, seq: u64) -> Command {
+        Command { client, seq, payload: vec![] }
+    }
+
+    fn admit_seqs(o: Offered) -> Vec<u64> {
+        match o {
+            Offered::Admit(v) => v.into_iter().map(|c| c.seq).collect(),
+            other => panic!("expected Admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn in_order_stream_admits_immediately() {
+        let mut s = ClientSequencer::new();
+        for seq in 1..=5 {
+            assert_eq!(admit_seqs(s.offer(cmd(7, seq), seq)), vec![seq]);
+        }
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn reordered_window_admits_in_fifo_order() {
+        let mut s = ClientSequencer::new();
+        // seq 3 and 2 arrive before 1 (network reorder, window = 3).
+        assert!(matches!(s.offer(cmd(7, 3), 1), Offered::Buffered));
+        assert!(matches!(s.offer(cmd(7, 2), 1), Offered::Buffered));
+        assert_eq!(s.buffered(), 2);
+        // seq 1 unblocks the whole run, in order.
+        assert_eq!(admit_seqs(s.offer(cmd(7, 1), 1)), vec![1, 2, 3]);
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn retries_are_duplicates() {
+        let mut s = ClientSequencer::new();
+        s.offer(cmd(7, 1), 1);
+        assert!(matches!(s.offer(cmd(7, 1), 1), Offered::Duplicate(_)));
+    }
+
+    #[test]
+    fn midstream_start_uses_lowest() {
+        // A new leader first hears seq 42 with lowest = 41: it must not
+        // wait for seq 1.
+        let mut s = ClientSequencer::new();
+        assert!(matches!(s.offer(cmd(7, 42), 41), Offered::Buffered));
+        assert_eq!(admit_seqs(s.offer(cmd(7, 41), 41)), vec![41, 42]);
+    }
+
+    #[test]
+    fn advancing_lowest_retires_buffered_state() {
+        let mut s = ClientSequencer::new();
+        assert!(matches!(s.offer(cmd(7, 3), 1), Offered::Buffered));
+        // The client advances past the gap (it got its seq 1-3 replies
+        // from the previous leader); the stale buffer entry is dropped.
+        assert_eq!(admit_seqs(s.offer(cmd(7, 4), 4)), vec![4]);
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn clients_are_independent() {
+        let mut s = ClientSequencer::new();
+        assert!(matches!(s.offer(cmd(1, 2), 1), Offered::Buffered));
+        assert_eq!(admit_seqs(s.offer(cmd(2, 1), 1)), vec![1]);
+        assert_eq!(admit_seqs(s.offer(cmd(1, 1), 1)), vec![1, 2]);
+    }
+}

@@ -56,6 +56,12 @@ impl Default for NetworkModel {
 }
 
 impl NetworkModel {
+    /// The paper's single-AZ LAN (the default model, by its experiment
+    /// name): ~0.1 ms one-way with modest jitter, no drops.
+    pub fn lan() -> NetworkModel {
+        NetworkModel::default()
+    }
+
     /// The §8.2 WAN ablation: matchmakers/acceptors delay their MatchB and
     /// Phase1B responses by `extra` (paper: 250 ms).
     pub fn with_wan_phase1(mut self, extra: Time) -> NetworkModel {

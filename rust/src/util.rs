@@ -95,7 +95,8 @@ impl Rng {
 
 /// Summary statistics used throughout the evaluation harness: the paper
 /// reports medians, interquartile ranges, and standard deviations (Tables
-/// 1 and 2), plus p95 shading in the timeline figures.
+/// 1 and 2), plus p95 shading in the timeline figures; the open-loop
+/// workload summaries report p99 tail latency.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Stats {
     pub count: usize,
@@ -103,6 +104,7 @@ pub struct Stats {
     pub p25: f64,
     pub p75: f64,
     pub p95: f64,
+    pub p99: f64,
     pub iqr: f64,
     pub mean: f64,
     pub stdev: f64,
@@ -137,6 +139,7 @@ pub fn stats(samples: &[f64]) -> Option<Stats> {
         p25,
         p75,
         p95: pct(0.95),
+        p99: pct(0.99),
         iqr: p75 - p25,
         mean,
         stdev: var.sqrt(),
@@ -211,6 +214,17 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!(s.p99 >= s.p95 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn p99_tracks_tail() {
+        // 99 fast samples and one slow one: p99 must reach into the tail.
+        let mut v = vec![1.0; 99];
+        v.push(100.0);
+        let s = stats(&v).unwrap();
+        assert!(s.p99 > 1.0, "p99 {} ignored the tail", s.p99);
+        assert_eq!(s.median, 1.0);
     }
 
     #[test]

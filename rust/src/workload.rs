@@ -1,0 +1,306 @@
+//! Workload specifications: what each client in a cluster does.
+//!
+//! The paper's evaluation (§8.1) uses only *closed-loop* clients: one
+//! outstanding request per client, the next issued as soon as the reply
+//! arrives. That caps measurable throughput at `n_clients / latency` and
+//! hides saturation behavior. A [`WorkloadSpec`] generalizes the client
+//! role three ways while keeping the paper's numbers reproducible via
+//! [`WorkloadSpec::closed_loop`]:
+//!
+//! * **closed-loop** — `window = 1`, the §8.1 client.
+//! * **pipelined** — a closed loop with a window of `k` outstanding
+//!   requests (per-client FIFO ordering is preserved end to end; see
+//!   [`crate::roles::sequencer`]).
+//! * **open-loop** — requests *arrive* at a configured rate (fixed
+//!   interval or deterministic-Poisson) independent of completions, with
+//!   a bounded in-flight window; arrivals beyond the bound queue at the
+//!   client. Clients record offered vs completed rates, so saturation
+//!   and tail latency under overload become measurable.
+//!
+//! A spec is deployment-wide: the same `WorkloadSpec` is handed to every
+//! client of a cluster (payloads may still differ per client via
+//! [`PayloadSpec::PerClient`]). Specs are plain data — the harness
+//! builder ([`crate::harness::Cluster::builder`]), the cluster config
+//! text format (`workload = ...` in [`crate::config::DeploymentConfig`]),
+//! and the `repro run --role client` CLI flags all construct them.
+
+use crate::{NodeId, Time, MS, SEC};
+
+/// Hard cap on any client's in-flight window. Replicas cache this many
+/// recent per-client results for retry re-replies
+/// ([`crate::roles::replica::RESULT_CACHE`] mirrors it); a window larger
+/// than the cache could leave a lost reply unanswerable forever, so the
+/// spec constructors clamp to it.
+pub const MAX_IN_FLIGHT: usize = 128;
+
+/// How a client decides when to issue the next request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadMode {
+    /// Keep `window` requests outstanding; issue a new one the moment a
+    /// reply frees a slot. `window == 1` is the paper's §8.1 client;
+    /// `window > 1` is the pipelined client.
+    ClosedLoop {
+        /// Outstanding-request window (>= 1).
+        window: usize,
+    },
+    /// Requests arrive every `interval` ns regardless of completions
+    /// (fixed-rate when `poisson` is false; with `poisson`, inter-arrival
+    /// gaps are exponentially distributed with mean `interval`, drawn
+    /// from the client's deterministic seeded RNG). At most
+    /// `max_in_flight` requests are on the wire at once; arrivals beyond
+    /// that queue client-side, and their latency is measured from
+    /// *arrival*, so queueing delay under overload is visible.
+    OpenLoop {
+        /// Mean inter-arrival gap in ns (`SEC / rate`).
+        interval: Time,
+        /// Exponential (deterministic-Poisson) inter-arrival gaps.
+        poisson: bool,
+        /// In-flight bound; `1` disables pipelining, larger values let
+        /// the arrival process run ahead of the commit pipeline.
+        max_in_flight: usize,
+    },
+}
+
+/// What bytes each command carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PayloadSpec {
+    /// Every command from every client carries these bytes (the paper
+    /// uses a one-byte no-op).
+    Fixed(Vec<u8>),
+    /// Per-client payloads computed from the client's node id (e.g. the
+    /// tensor workload, where each client streams a distinct command).
+    /// Harness-only: not representable in the config text format.
+    PerClient(fn(NodeId) -> Vec<u8>),
+}
+
+impl PayloadSpec {
+    /// The payload for `client`.
+    pub fn bytes_for(&self, client: NodeId) -> Vec<u8> {
+        match self {
+            PayloadSpec::Fixed(b) => b.clone(),
+            PayloadSpec::PerClient(f) => f(client),
+        }
+    }
+}
+
+/// A complete client workload description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub mode: WorkloadMode,
+    pub payload: PayloadSpec,
+    /// Start issuing at this time (0 = immediately on start).
+    pub start_at: Time,
+    /// Stop issuing new requests — and retrying lost ones — at this time
+    /// (`u64::MAX` = never).
+    pub stop_at: Time,
+    /// Per-request resend timeout if no reply arrives.
+    pub resend_after: Time,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec::closed_loop()
+    }
+}
+
+impl WorkloadSpec {
+    fn base(mode: WorkloadMode) -> WorkloadSpec {
+        WorkloadSpec {
+            mode,
+            payload: PayloadSpec::Fixed(vec![0u8]),
+            start_at: 0,
+            stop_at: u64::MAX,
+            resend_after: 100 * MS,
+        }
+    }
+
+    /// The paper-faithful §8.1 client: one outstanding request.
+    pub fn closed_loop() -> WorkloadSpec {
+        WorkloadSpec::base(WorkloadMode::ClosedLoop { window: 1 })
+    }
+
+    /// A closed loop with `window` outstanding requests (per-client FIFO
+    /// order preserved; clamped to [`MAX_IN_FLIGHT`]).
+    pub fn pipelined(window: usize) -> WorkloadSpec {
+        WorkloadSpec::base(WorkloadMode::ClosedLoop { window: clamp_window(window) })
+    }
+
+    /// Fixed-rate open loop: one arrival every `SEC / rate_per_sec` ns,
+    /// default in-flight bound 64.
+    pub fn open_loop(rate_per_sec: f64) -> WorkloadSpec {
+        WorkloadSpec::base(WorkloadMode::OpenLoop {
+            interval: rate_to_interval(rate_per_sec),
+            poisson: false,
+            max_in_flight: 64,
+        })
+    }
+
+    /// Deterministic-Poisson open loop: exponential inter-arrival gaps
+    /// with mean `SEC / rate_per_sec` ns, drawn from the client's seeded
+    /// RNG (identical seeds give identical arrival schedules).
+    pub fn open_loop_poisson(rate_per_sec: f64) -> WorkloadSpec {
+        WorkloadSpec::base(WorkloadMode::OpenLoop {
+            interval: rate_to_interval(rate_per_sec),
+            poisson: true,
+            max_in_flight: 64,
+        })
+    }
+
+    /// Payload of `n` zero bytes for every command.
+    pub fn payload_bytes(mut self, n: usize) -> WorkloadSpec {
+        self.payload = PayloadSpec::Fixed(vec![0u8; n.max(1)]);
+        self
+    }
+
+    /// Exact payload bytes for every command.
+    pub fn payload(mut self, bytes: Vec<u8>) -> WorkloadSpec {
+        self.payload = PayloadSpec::Fixed(bytes);
+        self
+    }
+
+    /// Per-client payload generator (see [`PayloadSpec::PerClient`]).
+    pub fn payload_with(mut self, f: fn(NodeId) -> Vec<u8>) -> WorkloadSpec {
+        self.payload = PayloadSpec::PerClient(f);
+        self
+    }
+
+    pub fn start_at(mut self, t: Time) -> WorkloadSpec {
+        self.start_at = t;
+        self
+    }
+
+    pub fn stop_at(mut self, t: Time) -> WorkloadSpec {
+        self.stop_at = t;
+        self
+    }
+
+    pub fn resend_after(mut self, t: Time) -> WorkloadSpec {
+        self.resend_after = t.max(1);
+        self
+    }
+
+    /// Set the in-flight bound: the closed-loop window, or the open-loop
+    /// `max_in_flight`. Clamped to `1..=`[`MAX_IN_FLIGHT`].
+    pub fn max_in_flight(mut self, k: usize) -> WorkloadSpec {
+        let k = clamp_window(k);
+        match &mut self.mode {
+            WorkloadMode::ClosedLoop { window } => *window = k,
+            WorkloadMode::OpenLoop { max_in_flight, .. } => *max_in_flight = k,
+        }
+        self
+    }
+
+    /// The in-flight bound, whichever mode.
+    pub fn in_flight_bound(&self) -> usize {
+        match self.mode {
+            WorkloadMode::ClosedLoop { window } => window,
+            WorkloadMode::OpenLoop { max_in_flight, .. } => max_in_flight,
+        }
+    }
+
+    /// Offered arrival rate per second (`None` for closed-loop modes,
+    /// whose offered rate is completion-driven).
+    pub fn offered_rate(&self) -> Option<f64> {
+        match self.mode {
+            WorkloadMode::ClosedLoop { .. } => None,
+            WorkloadMode::OpenLoop { interval, .. } => Some(SEC as f64 / interval as f64),
+        }
+    }
+}
+
+fn clamp_window(k: usize) -> usize {
+    k.clamp(1, MAX_IN_FLIGHT)
+}
+
+fn rate_to_interval(rate_per_sec: f64) -> Time {
+    assert!(
+        rate_per_sec.is_finite() && rate_per_sec > 0.0,
+        "open-loop rate must be positive, got {rate_per_sec}"
+    );
+    ((SEC as f64 / rate_per_sec) as Time).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_is_paper_default() {
+        let w = WorkloadSpec::closed_loop();
+        assert_eq!(w.mode, WorkloadMode::ClosedLoop { window: 1 });
+        assert_eq!(w.payload, PayloadSpec::Fixed(vec![0u8]));
+        assert_eq!(w.start_at, 0);
+        assert_eq!(w.stop_at, u64::MAX);
+        assert_eq!(w.in_flight_bound(), 1);
+        assert_eq!(w.offered_rate(), None);
+    }
+
+    #[test]
+    fn pipelined_sets_window() {
+        assert_eq!(WorkloadSpec::pipelined(8).in_flight_bound(), 8);
+        assert_eq!(WorkloadSpec::pipelined(0).in_flight_bound(), 1);
+        assert_eq!(
+            WorkloadSpec::closed_loop().max_in_flight(4).mode,
+            WorkloadMode::ClosedLoop { window: 4 }
+        );
+    }
+
+    #[test]
+    fn windows_clamped_to_replica_result_cache() {
+        // Larger windows could outrun the replicas' retry-result cache
+        // (a lost reply would become unanswerable), so they clamp.
+        assert_eq!(WorkloadSpec::pipelined(100_000).in_flight_bound(), MAX_IN_FLIGHT);
+        assert_eq!(
+            WorkloadSpec::open_loop(100.0).max_in_flight(100_000).in_flight_bound(),
+            MAX_IN_FLIGHT
+        );
+    }
+
+    #[test]
+    fn open_loop_rate_roundtrips() {
+        let w = WorkloadSpec::open_loop(1000.0);
+        match w.mode {
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+                assert_eq!(interval, SEC / 1000);
+                assert!(!poisson);
+                assert_eq!(max_in_flight, 64);
+            }
+            other => panic!("{other:?}"),
+        }
+        let rate = w.offered_rate().unwrap();
+        assert!((rate - 1000.0).abs() < 1.0, "rate {rate}");
+        assert!(matches!(
+            WorkloadSpec::open_loop_poisson(500.0).mode,
+            WorkloadMode::OpenLoop { poisson: true, .. }
+        ));
+    }
+
+    #[test]
+    fn knobs_compose() {
+        let w = WorkloadSpec::open_loop(2000.0)
+            .max_in_flight(16)
+            .payload_bytes(32)
+            .start_at(5)
+            .stop_at(99)
+            .resend_after(7);
+        assert_eq!(w.in_flight_bound(), 16);
+        assert_eq!(w.payload, PayloadSpec::Fixed(vec![0u8; 32]));
+        assert_eq!((w.start_at, w.stop_at, w.resend_after), (5, 99, 7));
+    }
+
+    #[test]
+    fn per_client_payloads() {
+        fn gen(id: NodeId) -> Vec<u8> {
+            vec![id as u8, 7]
+        }
+        let w = WorkloadSpec::closed_loop().payload_with(gen);
+        assert_eq!(w.payload.bytes_for(3), vec![3, 7]);
+        assert_eq!(w.payload.bytes_for(9), vec![9, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "open-loop rate must be positive")]
+    fn zero_rate_rejected() {
+        WorkloadSpec::open_loop(0.0);
+    }
+}

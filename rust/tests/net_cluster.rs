@@ -45,10 +45,11 @@ fn tcp_cluster_serves_commands() {
         handles.push(spawn_node(p, Box::new(leader), addrs.clone()).unwrap());
     }
 
-    // Clients: watch their ClientReply stream indirectly by sampling.
+    // Clients run the deployment's workload spec (closed loop here, as
+    // `DeploymentConfig::standard` configures).
     let mut client_handles = Vec::new();
     for &c in &layout.clients {
-        let client = Client::new(c, layout.proposers.clone());
+        let client = Client::new(c, layout.proposers.clone(), cfg.workload.clone());
         client_handles.push(spawn_node(c, Box::new(client), addrs.clone()).unwrap());
     }
 

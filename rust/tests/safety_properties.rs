@@ -14,6 +14,7 @@ use matchmaker::quorum::QuorumSpec;
 use matchmaker::roles::{Leader, Replica};
 use matchmaker::sim::NetworkModel;
 use matchmaker::util::Rng;
+use matchmaker::workload::WorkloadSpec;
 use matchmaker::NodeId;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -41,7 +42,7 @@ fn safety_under_reconfig_storm_and_loss() {
             jitter: 80 * matchmaker::US,
             ..NetworkModel::default()
         };
-        let mut cluster = Cluster::new(1, 3, OptFlags::default(), seed, net);
+        let mut cluster = Cluster::builder().clients(3).seed(seed).net(net).build();
         let leader = cluster.initial_leader();
         // 20 reconfigurations, one every 50 ms.
         for i in 0..20u64 {
@@ -63,7 +64,7 @@ fn safety_under_reconfig_storm_and_loss() {
 #[test]
 fn safety_under_acceptor_crashes() {
     property("acceptor crashes", 8, |seed| {
-        let mut cluster = Cluster::lan(1, 3, OptFlags::default(), seed);
+        let mut cluster = Cluster::builder().clients(3).seed(seed).build();
         let leader = cluster.initial_leader();
         let mut rng = Rng::new(seed ^ 0xdead);
         // Crash one initial acceptor early, reconfigure away later.
@@ -99,7 +100,7 @@ fn safety_under_acceptor_crashes() {
 #[test]
 fn safety_under_dueling_leaders() {
     property("dueling leaders", 8, |seed| {
-        let mut cluster = Cluster::lan(1, 3, OptFlags::default(), seed);
+        let mut cluster = Cluster::builder().clients(3).seed(seed).build();
         let p1 = cluster.layout.proposers[1];
         for i in 0..5u64 {
             cluster.sim.schedule(msec(150 + i * 150), move |s| {
@@ -117,7 +118,7 @@ fn safety_under_dueling_leaders() {
 fn safety_under_leader_failover_with_loss() {
     property("leader failover + loss", 6, |seed| {
         let net = NetworkModel { drop_prob: 0.02, ..NetworkModel::default() };
-        let mut cluster = Cluster::new(1, 3, OptFlags::default(), seed, net);
+        let mut cluster = Cluster::builder().clients(3).seed(seed).net(net).build();
         let p0 = cluster.layout.proposers[0];
         let p1 = cluster.layout.proposers[1];
         if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
@@ -139,7 +140,7 @@ fn safety_under_leader_failover_with_loss() {
 #[test]
 fn safety_under_matchmaker_reconfig_storm() {
     property("mm reconfig storm", 6, |seed| {
-        let mut cluster = Cluster::lan(1, 2, OptFlags::default(), seed);
+        let mut cluster = Cluster::builder().clients(2).seed(seed).build();
         let leader = cluster.initial_leader();
         for i in 0..6u64 {
             let mms = cluster.random_matchmakers();
@@ -175,7 +176,7 @@ fn batching_exactly_once_fifo_across_reconfig() {
             let mut opts = OptFlags::default().with_batching(8, 500 * matchmaker::US);
             opts.proactive_matchmaking = proactive;
             opts.phase1_bypass = bypass;
-            let mut cluster = Cluster::lan(1, 6, opts, seed);
+            let mut cluster = Cluster::builder().clients(6).opts(opts).seed(seed).build();
             let leader = cluster.initial_leader();
             // Four reconfigurations while commands stream.
             for i in 0..4u64 {
@@ -197,6 +198,58 @@ fn batching_exactly_once_fifo_across_reconfig() {
                 "no progress late in the run (seed {seed})"
             );
         });
+    }
+}
+
+/// Workload-API tentpole property: open-loop and pipelined clients (a
+/// pipeline window > 1, so the network can reorder a client's in-flight
+/// requests) under a reconfiguration storm still yield exactly-once,
+/// per-client-FIFO execution — across Optimizations 1/2 on and off,
+/// i.e. both when commands keep flowing to `C_old` during matchmaking
+/// and when they stall and drain through the full Phase 1 path.
+#[test]
+fn pipelined_and_open_loop_exactly_once_fifo_across_reconfig() {
+    let workloads: [(&str, WorkloadSpec); 3] = [
+        ("pipelined-4", WorkloadSpec::pipelined(4)),
+        ("open-loop", WorkloadSpec::open_loop(2000.0).max_in_flight(8)),
+        ("open-loop-poisson", WorkloadSpec::open_loop_poisson(1500.0).max_in_flight(8)),
+    ];
+    for (wl_name, spec) in &workloads {
+        for (proactive, bypass) in [(true, true), (false, false)] {
+            let name =
+                format!("{wl_name} exactly-once FIFO (opt1={proactive}, opt2={bypass})");
+            property(&name, 3, |seed| {
+                let mut opts = OptFlags::default();
+                opts.proactive_matchmaking = proactive;
+                opts.phase1_bypass = bypass;
+                let mut cluster = Cluster::builder()
+                    .clients(4)
+                    .workload(spec.clone())
+                    .opts(opts)
+                    .seed(seed)
+                    .build();
+                let leader = cluster.initial_leader();
+                // Four reconfigurations while requests are pipelined.
+                for i in 0..4u64 {
+                    let cfg = cluster.random_config(i + 1);
+                    cluster.sim.schedule(msec(250 + i * 250), move |s| {
+                        s.with_node::<Leader, _>(leader, |l, now, fx| {
+                            l.reconfigure(cfg.clone(), now, fx)
+                        });
+                    });
+                }
+                cluster.sim.run_until(secs(2));
+                cluster.assert_safe();
+                assert_batched_exactly_once_fifo(&mut cluster);
+                assert_replicas_prefix_consistent(&mut cluster);
+                // Commands flowed throughout (no permanent stall).
+                let samples = cluster.samples();
+                assert!(
+                    samples.iter().any(|(t, _)| *t > msec(1500)),
+                    "no progress late in the run (seed {seed})"
+                );
+            });
+        }
     }
 }
 
@@ -438,7 +491,7 @@ fn matchmaker_log_invariants() {
 #[test]
 fn simulation_is_deterministic() {
     let run = |seed: u64| {
-        let mut cluster = Cluster::lan(1, 4, OptFlags::default(), seed);
+        let mut cluster = Cluster::builder().seed(seed).build();
         let leader = cluster.initial_leader();
         let cfg = cluster.random_config(1);
         cluster.sim.schedule(msec(300), move |s| {

@@ -9,6 +9,7 @@ use matchmaker::metrics::{interval_summary, timeline};
 use matchmaker::node::Announce;
 use matchmaker::roles::{Client, Leader, Matchmaker, Replica};
 use matchmaker::sim::NetworkModel;
+use matchmaker::workload::WorkloadSpec;
 use matchmaker::{MS, SEC};
 
 /// §8.1 headline: reconfiguration every second changes median latency and
@@ -68,7 +69,7 @@ fn thrifty_failure_dip_and_recovery() {
 fn ablation_stall_shape() {
     let gap_for = |opts: OptFlags| -> u64 {
         let net = NetworkModel::default().with_wan_phase1(250 * MS);
-        let mut cluster = Cluster::new(1, 4, opts, 3, net);
+        let mut cluster = Cluster::builder().opts(opts).seed(3).net(net).build();
         let leader = cluster.initial_leader();
         let cfg = cluster.random_config(1);
         cluster.sim.schedule(secs(4), move |s| {
@@ -118,7 +119,7 @@ fn ablation_stall_shape() {
 /// its election timeout and throughput recovers.
 #[test]
 fn leader_failover_recovers() {
-    let mut cluster = Cluster::lan(1, 4, OptFlags::default(), 5);
+    let mut cluster = Cluster::builder().seed(5).build();
     let p0 = cluster.layout.proposers[0];
     let p1 = cluster.layout.proposers[1];
     if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
@@ -148,7 +149,7 @@ fn leader_failover_recovers() {
 /// of them changes client-visible performance by < 5%.
 #[test]
 fn matchmaker_reconfig_off_critical_path() {
-    let mut cluster = Cluster::lan(1, 4, OptFlags::default(), 6);
+    let mut cluster = Cluster::builder().seed(6).build();
     let leader = cluster.initial_leader();
     for i in 0..10u64 {
         let set = cluster.random_matchmakers();
@@ -179,7 +180,7 @@ fn matchmaker_reconfig_off_critical_path() {
 /// f = 2 clusters work end to end, including reconfiguration.
 #[test]
 fn f2_cluster_end_to_end() {
-    let mut cluster = Cluster::lan(2, 4, OptFlags::default(), 8);
+    let mut cluster = Cluster::builder().f(2).seed(8).build();
     let leader = cluster.initial_leader();
     assert_eq!(cluster.layout.initial_config().acceptors.len(), 5);
     let cfg = cluster.random_config(1);
@@ -207,18 +208,23 @@ fn horizontal_baseline_parity() {
 /// late-started client still gets served.
 #[test]
 fn replica_catchup_and_late_client() {
-    let mut cluster = Cluster::lan(1, 2, OptFlags::default(), 10);
+    let mut cluster = Cluster::builder().clients(1).seed(10).build();
     let replica = cluster.layout.replicas[0];
     let other = cluster.layout.replicas[1];
     // Partition one replica from the leader for a while.
     let leader = cluster.initial_leader();
     cluster.sim.schedule(msec(100), move |s| s.set_link(leader, replica, false));
     cluster.sim.schedule(msec(900), move |s| s.set_link(leader, replica, true));
-    // A client that starts late.
-    let late = cluster.layout.clients[1];
-    if let Some(c) = cluster.sim.node_mut::<Client>(late) {
-        c.start_at = msec(1200);
-    }
+    // A second client whose workload only starts at 1.2 s.
+    let late = cluster.layout.clients[0] + 1;
+    cluster.sim.add_node(
+        late,
+        Box::new(Client::new(
+            late,
+            cluster.layout.proposers.clone(),
+            WorkloadSpec::closed_loop().start_at(msec(1200)),
+        )),
+    );
     cluster.sim.run_until(secs(3));
     cluster.assert_safe();
     let wm_cut = cluster.sim.node_mut::<Replica>(replica).unwrap().exec_watermark;
@@ -238,7 +244,7 @@ fn replica_catchup_and_late_client() {
 fn without_gc_prior_configs_accumulate() {
     let mut opts = OptFlags::default();
     opts.garbage_collection = false;
-    let mut cluster = Cluster::lan(1, 2, opts, 12);
+    let mut cluster = Cluster::builder().clients(2).opts(opts).seed(12).build();
     let leader = cluster.initial_leader();
     for i in 0..5u64 {
         let cfg = cluster.random_config(i + 1);
@@ -269,7 +275,7 @@ fn concurrent_phase1_saves_a_round_trip() {
         let mut opts = OptFlags::default();
         opts.concurrent_phase1 = concurrent;
         let net = NetworkModel::default().with_wan_phase1(250 * MS);
-        let mut cluster = Cluster::new(1, 2, opts, 21, net);
+        let mut cluster = Cluster::builder().clients(2).opts(opts).seed(21).net(net).build();
         let p0 = cluster.layout.proposers[0];
         let p1 = cluster.layout.proposers[1];
         if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
