@@ -502,6 +502,21 @@ impl Wire for Msg {
                 round.enc(e);
                 value.enc(e);
             }
+            CatchUp { below, peer } => {
+                e.u8(32);
+                e.u64(*below);
+                e.u32(*peer);
+            }
+            SnapshotRequest { from } => {
+                e.u8(33);
+                e.u64(*from);
+            }
+            SnapshotResp { base, state, entries } => {
+                e.u8(34);
+                e.u64(*base);
+                e.bytes(state);
+                entries.enc(e);
+            }
         }
     }
 
@@ -548,6 +563,9 @@ impl Wire for Msg {
             29 => HeartbeatReply { epoch: d.u64()? },
             30 => FastPropose { round: Round::dec(d)?, value: Value::dec(d)? },
             31 => FastPhase2B { round: Round::dec(d)?, value: Value::dec(d)? },
+            32 => CatchUp { below: d.u64()?, peer: d.u32()? },
+            33 => SnapshotRequest { from: d.u64()? },
+            34 => SnapshotResp { base: d.u64()?, state: d.bytes()?, entries: Wire::dec(d)? },
             t => return err(&format!("bad Msg tag {t}")),
         })
     }
@@ -624,8 +642,15 @@ pub fn sample_messages() -> Vec<Msg> {
         MetaPhase2B { round: r0 },
         Heartbeat { epoch: 2 },
         HeartbeatReply { epoch: 2 },
-        FastPropose { round: r1, value: Value::Cmd(cmd) },
+        FastPropose { round: r1, value: Value::Cmd(cmd.clone()) },
         FastPhase2B { round: r1, value: Value::Noop },
+        CatchUp { below: 4096, peer: 12 },
+        SnapshotRequest { from: 17 },
+        SnapshotResp {
+            base: 4096,
+            state: vec![0xde, 0xad, 0xbe, 0xef],
+            entries: vec![(4096, Value::Cmd(cmd)), (4097, Value::Noop)],
+        },
     ]
 }
 
@@ -646,10 +671,10 @@ mod tests {
 
     #[test]
     fn sample_covers_all_tags() {
-        // 32 variants, tags 0..=31: decoding tag 32 must fail.
-        assert_eq!(sample_messages().len(), 32);
+        // 35 variants, tags 0..=34: decoding tag 35 must fail.
+        assert_eq!(sample_messages().len(), 35);
         let mut e = Enc::new();
-        e.u8(32);
+        e.u8(35);
         assert!(Msg::decode(&e.buf).is_err());
     }
 

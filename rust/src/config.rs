@@ -68,6 +68,53 @@ impl Configuration {
     }
 }
 
+/// Snapshotting / log-truncation policy for the state-retention
+/// subsystem. Replicas snapshot their state machine every `interval` of
+/// virtual time, truncate the chosen log below the snapshot watermark
+/// (keeping a retained tail of `tail` entries for incremental catch-up),
+/// and serve snapshot-plus-tail catch-up to lagging or freshly joined
+/// replicas. The leader mirrors the policy: it truncates its own log and
+/// command→slot map at the f+1-durable watermark minus `tail`, and
+/// continuously propagates that watermark to the acceptors
+/// ([`crate::msg::Msg::PrefixPersisted`]) so voted state below it is
+/// dropped in steady state, not only at reconfiguration barriers.
+///
+/// Disabled by default: the paper's experiments retain the full log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotSpec {
+    /// Whether replicas snapshot and truncate at all.
+    pub enabled: bool,
+    /// Virtual time between snapshot ticks.
+    pub interval: Time,
+    /// Chosen log entries retained below the snapshot watermark. The
+    /// tail is also the *retry horizon*: a client retry arriving more
+    /// than `tail` slots after its command executed is treated as
+    /// settled (no re-reply — the result cache was retired with the
+    /// log). Clamped to at least [`crate::workload::MAX_IN_FLIGHT`] by
+    /// the constructors; on lossy networks size it to cover at least the
+    /// client resend timeout times the expected slot rate.
+    pub tail: u64,
+}
+
+impl Default for SnapshotSpec {
+    fn default() -> Self {
+        SnapshotSpec { enabled: false, interval: 100 * MS, tail: 1024 }
+    }
+}
+
+impl SnapshotSpec {
+    /// An enabled policy: snapshot every `interval` (clamped to ≥ 1 µs so
+    /// the config text format, which serializes microseconds, round-trips),
+    /// retain `tail` chosen entries below the watermark.
+    pub fn every(interval: Time, tail: u64) -> SnapshotSpec {
+        SnapshotSpec {
+            enabled: true,
+            interval: interval.max(US),
+            tail: tail.max(crate::workload::MAX_IN_FLIGHT as u64),
+        }
+    }
+}
+
 /// Protocol optimization flags (§3.4, §8.2 ablation). All on by default;
 /// the ablation experiment (Figure 17) toggles subsets off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +148,9 @@ pub struct OptFlags {
     /// Maximum time a partially filled batch may wait for more commands
     /// before the leader flushes it (bounds added latency at low load).
     pub batch_delay: Time,
+    /// Snapshotting + log truncation policy (off by default; see
+    /// [`SnapshotSpec`]).
+    pub snapshot: SnapshotSpec,
 }
 
 impl Default for OptFlags {
@@ -114,6 +164,7 @@ impl Default for OptFlags {
             concurrent_phase1: false,
             batch_size: 1,
             batch_delay: MS,
+            snapshot: SnapshotSpec::default(),
         }
     }
 }
@@ -130,6 +181,7 @@ impl OptFlags {
             concurrent_phase1: false,
             batch_size: 1,
             batch_delay: MS,
+            snapshot: SnapshotSpec::default(),
         }
     }
 
@@ -137,6 +189,12 @@ impl OptFlags {
     pub fn with_batching(mut self, batch_size: usize, batch_delay: Time) -> OptFlags {
         self.batch_size = batch_size.max(1);
         self.batch_delay = batch_delay;
+        self
+    }
+
+    /// Enable snapshotting + log truncation (builder-style).
+    pub fn with_snapshots(mut self, spec: SnapshotSpec) -> OptFlags {
+        self.snapshot = spec;
         self
     }
 }
@@ -149,13 +207,17 @@ impl OptFlags {
 /// (§5.3 requires `2f+1`, not `f+1`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ClusterLayout {
+    /// Fault-tolerance parameter.
     pub f: usize,
+    /// Proposer ids (`>= f+1`; every proposer runs the Leader role).
     pub proposers: Vec<NodeId>,
     /// Pool of acceptors that configurations may draw from.
     pub acceptor_pool: Vec<NodeId>,
     /// Pool of matchmakers; the first `2f+1` form the initial active set.
     pub matchmaker_pool: Vec<NodeId>,
+    /// Replica ids (`>= f+1`; the paper deploys `2f+1`).
     pub replicas: Vec<NodeId>,
+    /// Workload client ids.
     pub clients: Vec<NodeId>,
 }
 
@@ -203,6 +265,8 @@ impl ClusterLayout {
             + self.clients.len()
     }
 
+    /// Validate role counts (`>= f+1` proposers/replicas, `>= 2f+1`
+    /// acceptors/matchmakers) and that no node id serves two roles.
     pub fn validate(&self) -> Result<(), String> {
         if self.proposers.len() < self.f + 1 {
             return Err(format!("need >= f+1 = {} proposers", self.f + 1));
@@ -236,7 +300,9 @@ impl ClusterLayout {
 /// crate — the format below is a TOML subset).
 #[derive(Clone, Debug)]
 pub struct DeploymentConfig {
+    /// Which node ids play which role.
     pub layout: ClusterLayout,
+    /// Protocol optimization flags + batching/snapshot knobs.
     pub opts: OptFlags,
     /// node id → "host:port" for the TCP runtime. Unused by the simulator.
     pub addrs: std::collections::BTreeMap<NodeId, String>,
@@ -267,6 +333,8 @@ fn parse_ids(s: &str) -> Result<Vec<NodeId>, String> {
 }
 
 impl DeploymentConfig {
+    /// The paper's standard deployment shape ([`ClusterLayout::standard`]
+    /// with a pool factor of 2) with default options and workload.
     pub fn standard(f: usize, n_clients: usize) -> DeploymentConfig {
         DeploymentConfig {
             layout: ClusterLayout::standard(f, 2, n_clients),
@@ -299,6 +367,13 @@ impl DeploymentConfig {
             o.batch_size,
             o.batch_delay / US
         ));
+        if o.snapshot.enabled {
+            out.push_str(&format!(
+                "snapshot = interval_us:{},tail:{}\n",
+                o.snapshot.interval / US,
+                o.snapshot.tail
+            ));
+        }
         let w = &self.workload;
         let mut wl = String::from("workload = ");
         match w.mode {
@@ -407,6 +482,39 @@ impl DeploymentConfig {
                             other => return Err(format!("unknown batch key {other:?}")),
                         }
                     }
+                }
+                "snapshot" => {
+                    let mut interval = cfg.opts.snapshot.interval;
+                    let mut tail = cfg.opts.snapshot.tail;
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("snapshot: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        match k.trim() {
+                            "interval_us" => {
+                                let us: u64 = v
+                                    .parse()
+                                    .map_err(|e| format!("snapshot interval_us: {e}"))?;
+                                interval = us * US;
+                            }
+                            "interval_ms" => {
+                                let ms: u64 = v
+                                    .parse()
+                                    .map_err(|e| format!("snapshot interval_ms: {e}"))?;
+                                interval = ms * MS;
+                            }
+                            "tail" => {
+                                tail =
+                                    v.parse().map_err(|e| format!("snapshot tail: {e}"))?;
+                            }
+                            other => return Err(format!("unknown snapshot key {other:?}")),
+                        }
+                    }
+                    if interval == 0 {
+                        return Err("snapshot interval must be positive".into());
+                    }
+                    cfg.opts.snapshot = SnapshotSpec::every(interval, tail);
                 }
                 "workload" => {
                     let mut mode = "closed".to_string();
@@ -602,6 +710,7 @@ mod tests {
         cfg.opts.thrifty = false;
         cfg.opts.batch_size = 16;
         cfg.opts.batch_delay = 750 * US;
+        cfg.opts.snapshot = SnapshotSpec::every(250 * MS, 2048);
         cfg.state_machine = "kv".into();
         cfg.workload = WorkloadSpec::open_loop(2000.0)
             .max_in_flight(16)
@@ -675,6 +784,40 @@ mod tests {
         assert_eq!(cfg.opts.batch_delay, 200 * US);
         assert!(DeploymentConfig::from_text(&format!("{base}batch = size:0\n")).is_err());
         assert!(DeploymentConfig::from_text(&format!("{base}batch = bogus:1\n")).is_err());
+    }
+
+    #[test]
+    fn text_config_snapshot_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        // Default: disabled (no snapshot line emitted).
+        assert!(!base.contains("snapshot ="));
+        assert!(!DeploymentConfig::from_text(&base).unwrap().opts.snapshot.enabled);
+        // A snapshot line enables it.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}snapshot = interval_ms:50,tail:4096\n"
+        ))
+        .unwrap();
+        assert!(cfg.opts.snapshot.enabled);
+        assert_eq!(cfg.opts.snapshot.interval, 50 * MS);
+        assert_eq!(cfg.opts.snapshot.tail, 4096);
+        // Tiny tails clamp up to the in-flight bound (retry re-replies
+        // must stay answerable).
+        let cfg = DeploymentConfig::from_text(&format!("{base}snapshot = tail:1\n")).unwrap();
+        assert_eq!(cfg.opts.snapshot.tail, crate::workload::MAX_IN_FLIGHT as u64);
+        // Sub-microsecond intervals clamp to 1 µs so `to_text` (which
+        // serializes microseconds) always round-trips.
+        let spec = SnapshotSpec::every(500, 1024);
+        assert_eq!(spec.interval, US);
+        let mut clamped = DeploymentConfig::standard(1, 1);
+        clamped.opts.snapshot = spec;
+        let back = DeploymentConfig::from_text(&clamped.to_text()).unwrap();
+        assert_eq!(back.opts.snapshot, spec);
+        // Bad keys / zero interval rejected.
+        assert!(DeploymentConfig::from_text(&format!("{base}snapshot = bogus:1\n")).is_err());
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}snapshot = interval_us:0\n"
+        ))
+        .is_err());
     }
 
     #[test]

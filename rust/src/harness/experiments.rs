@@ -3,11 +3,14 @@
 //! absolute numbers differ from the paper's EC2 testbed but the shapes —
 //! who wins, where the stalls are, what recovers when — are the point.
 
-use super::report::{CurveReport, FigureReport, OpenLoopReport, TableReport, ViolinReport};
+use super::report::{
+    CurveReport, FigureReport, OpenLoopReport, RetentionReport, TableReport, ViolinReport,
+};
 use super::{msec, secs, Cluster, HorizontalCluster};
-use crate::config::{Configuration, OptFlags};
+use crate::config::{Configuration, OptFlags, SnapshotSpec};
 use crate::metrics::{
-    interval_summary, open_loop_summary, timeline, OpenLoopSummary, Sample, Timeline,
+    interval_summary, open_loop_summary, timeline, OpenLoopSummary, RetentionSummary, Sample,
+    Timeline,
 };
 use crate::roles::{HorizontalLeader, Leader, Replica};
 use crate::round::Round;
@@ -752,6 +755,133 @@ pub fn open_loop_figure(seed: u64) -> OpenLoopReport {
     rep
 }
 
+/// Output of one X5 state-retention run.
+pub struct RetentionRun {
+    /// Commands completed per simulated second over the whole run.
+    pub completed_per_sec: f64,
+    /// Per-replica retention counters at the end of the run.
+    pub retention: Vec<RetentionSummary>,
+    /// Rounds the leader installed (startup + the storm).
+    pub reconfigs_completed: u64,
+    /// The replica that was crashed and replaced mid-run.
+    pub rejoined: NodeId,
+}
+
+/// X5: the state-retention run — sustained open-loop load on the tensor
+/// state machine across a reconfiguration storm, with one replica
+/// crashed mid-storm and replaced by a fresh machine. With `snapshots`
+/// the replicas snapshot every 50 ms and truncate to a 1024-entry tail
+/// (and the leader truncates + propagates the durable watermark to the
+/// acceptors); without, the seed behavior: every log grows with the run.
+/// `duration` must be ≥ 4 s (the storm is scheduled inside [1 s, 3.5 s]).
+pub fn run_retention(seed: u64, snapshots: bool, duration: Time) -> RetentionRun {
+    let mut opts = OptFlags::default();
+    if snapshots {
+        opts.snapshot = SnapshotSpec::every(50 * MS, 1024);
+    }
+    // Stop arrivals before the horizon so in-flight tails drain and every
+    // replica converges by the end of the run.
+    let stop = duration.saturating_sub(700 * MS);
+    let mut cluster = Cluster::builder()
+        .clients(4)
+        .workload(
+            WorkloadSpec::open_loop(500.0)
+                .max_in_flight(16)
+                .payload_with(tensor_lane_payload)
+                .stop_at(stop),
+        )
+        .opts(opts)
+        .seed(seed)
+        .build();
+    for &r in &cluster.layout.replicas.clone() {
+        let sm = TensorStateMachine::load().expect("tensor state machine");
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            rep.sm = Box::new(sm);
+        }
+    }
+    let leader = cluster.initial_leader();
+    // Reconfiguration storm: four acceptor reconfigurations while load
+    // and snapshotting run.
+    for i in 0..4u64 {
+        let cfg = cluster.random_config(i + 1);
+        let at = secs(1) + i * 800 * MS;
+        cluster.sim.schedule(at, move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+    }
+    // Crash one replica mid-storm; a fresh machine takes its id 600 ms
+    // later and must converge — via snapshot transfer when snapshots are
+    // on (the prefix it needs is truncated everywhere), via leader
+    // re-sends when they are off.
+    let victim = cluster.layout.replicas[2];
+    let peers = cluster.layout.replicas.clone();
+    let snap_spec = opts.snapshot;
+    cluster.sim.schedule(secs(1) + 400 * MS, move |s| s.crash(victim));
+    cluster.sim.schedule(secs(2), move |s| {
+        let sm = TensorStateMachine::load().expect("tensor state machine");
+        let mut rep = Replica::new(victim, Box::new(sm));
+        rep.snapshot = snap_spec;
+        rep.peers = peers;
+        s.replace_node(victim, Box::new(rep));
+    });
+    cluster.sim.run_until(duration);
+    cluster.assert_safe();
+    let samples = cluster.samples();
+    let completed_per_sec = samples.len() as f64 / (duration as f64 / 1e9);
+    let reconfigs_completed = cluster
+        .sim
+        .node_mut::<Leader>(leader)
+        .map(|l| l.reconfigs_completed)
+        .unwrap_or(0);
+    RetentionRun {
+        completed_per_sec,
+        retention: cluster.retention_stats(),
+        reconfigs_completed,
+        rejoined: victim,
+    }
+}
+
+/// X5 report: the snapshot-enabled and snapshot-disabled runs side by
+/// side, with the bounded-memory / throughput-parity / rejoin notes.
+pub fn retention_figure(seed: u64) -> RetentionReport {
+    let duration = secs(5);
+    let on = run_retention(seed, true, duration);
+    let off = run_retention(seed, false, duration);
+    let mut rep = RetentionReport {
+        id: "X5".into(),
+        title: "state retention: snapshots + log truncation under a reconfiguration storm \
+                (4 open-loop clients x 500/s, tensor SM, crash at 1.4 s, rejoin at 2 s)"
+            .into(),
+        ..Default::default()
+    };
+    let max_on = on.retention.iter().map(|r| r.max_log_len).max().unwrap_or(0);
+    let final_off = off.retention.iter().map(|r| r.log_len).max().unwrap_or(0);
+    let installed: u64 = on.retention.iter().map(|r| r.snapshots_installed).sum();
+    rep.notes.push(format!(
+        "max replica log length: {} with snapshots (tail 1024) vs {} final without — \
+         bounded instead of growing with the run",
+        max_on, final_off
+    ));
+    let baseline_pct = if off.completed_per_sec > 0.0 {
+        100.0 * on.completed_per_sec / off.completed_per_sec
+    } else {
+        0.0
+    };
+    rep.notes.push(format!(
+        "throughput: {:.0} cmds/s with snapshots vs {:.0} without ({:.1}% of baseline; \
+         acceptance target >= 90%)",
+        on.completed_per_sec, off.completed_per_sec, baseline_pct
+    ));
+    rep.notes.push(format!(
+        "reconfigurations completed: {} (startup + 4-storm); rejoined replica installed \
+         {} peer snapshot(s) and converged",
+        on.reconfigs_completed, installed
+    ));
+    rep.series.push(("snapshots on (50 ms, tail 1024)".into(), on.retention));
+    rep.series.push(("snapshots off (seed behavior)".into(), off.retention));
+    rep
+}
+
 /// X2: Matchmaker Fast Paxos (§7) — fast-path success with f+1 acceptors.
 /// Runs many independent single-decree instances; in each, 1–2 clients
 /// race. Reports fast-path vs recovery counts; safety is asserted.
@@ -858,6 +988,7 @@ pub fn run_all(seed: u64) -> Vec<(String, String)> {
     out.push(("X2".into(), fast_paxos_experiment(seed).render()));
     out.push(("X3".into(), batching_figure(seed).render()));
     out.push(("X4".into(), open_loop_figure(seed).render()));
+    out.push(("X5".into(), retention_figure(seed).render()));
     out
 }
 
@@ -958,6 +1089,72 @@ mod tests {
             s.offered
         );
         assert!(s.delivery_ratio > 0.9, "delivery ratio {:.2}", s.delivery_ratio);
+    }
+
+    /// Acceptance gate for the state-retention tentpole (X5): with
+    /// snapshots on, every replica's high-water log length stays within
+    /// the configured tail bound (tail + one snapshot interval of
+    /// growth) across the reconfiguration storm; throughput stays within
+    /// 10% of the identical no-snapshot run; and the replica that
+    /// crashed and rejoined converges to the exact same state via
+    /// snapshot transfer.
+    #[test]
+    fn retention_bounds_logs_preserves_throughput_and_recovers_replica() {
+        let duration = secs(5);
+        let on = run_retention(42, true, duration);
+        let off = run_retention(42, false, duration);
+
+        assert!(on.reconfigs_completed >= 4, "storm too small: {}", on.reconfigs_completed);
+
+        // Bounded memory: tail is 1024; 4 clients x 500/s offer ≤ ~100
+        // slots per 50 ms snapshot interval, so 1536 = tail + generous
+        // interval growth. Without snapshots the log grows with the run.
+        for r in &on.retention {
+            assert!(
+                r.max_log_len <= 1536,
+                "replica {} log unbounded with snapshots: {}",
+                r.replica,
+                r.max_log_len
+            );
+            assert!(r.snapshots_taken > 0 || r.replica == on.rejoined);
+        }
+        let max_on = on.retention.iter().map(|r| r.max_log_len).max().unwrap();
+        let final_off = off.retention.iter().map(|r| r.log_len).max().unwrap();
+        assert!(
+            final_off >= 3 * max_on.max(1),
+            "no-snapshot baseline should dwarf the bounded run: {final_off} vs {max_on}"
+        );
+
+        // Throughput parity: within 10% of the no-snapshot run.
+        assert!(
+            on.completed_per_sec >= 0.9 * off.completed_per_sec,
+            "snapshots cost too much throughput: {:.0} vs {:.0} cmds/s",
+            on.completed_per_sec,
+            off.completed_per_sec
+        );
+
+        // Crash-rejoin: the fresh replica caught up via snapshot
+        // transfer (the prefix it missed was truncated cluster-wide) and
+        // converged to the identical tensor state.
+        let rejoined = on
+            .retention
+            .iter()
+            .find(|r| r.replica == on.rejoined)
+            .expect("rejoined replica stats");
+        assert!(rejoined.snapshots_installed >= 1, "rejoin did not use snapshot transfer");
+        for r in &on.retention {
+            assert_eq!(
+                r.exec_watermark, rejoined.exec_watermark,
+                "replica {} did not converge",
+                r.replica
+            );
+            assert_eq!(r.digest, rejoined.digest, "replica {} state diverged", r.replica);
+        }
+        // The no-snapshot baseline also converges (leader re-sends), so
+        // the comparison is apples to apples.
+        for r in &off.retention {
+            assert_eq!(r.digest, off.retention[0].digest);
+        }
     }
 
     #[test]

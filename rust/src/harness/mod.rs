@@ -33,7 +33,7 @@ pub mod experiments;
 pub mod report;
 
 use crate::config::{ClusterLayout, Configuration, OptFlags};
-use crate::metrics::{merge_samples, Sample};
+use crate::metrics::{merge_samples, RetentionSummary, Sample};
 use crate::node::Announce;
 use crate::roles::{Acceptor, Client, HorizontalLeader, Leader, Matchmaker, Replica};
 use crate::round::Round;
@@ -152,9 +152,13 @@ impl ClusterBuilder {
                 sim.add_node(m, Box::new(Matchmaker::new_standby(m)));
             }
         }
-        // Replicas (paper §5.3 deploys 2f+1).
+        // Replicas (paper §5.3 deploys 2f+1), with the snapshot policy
+        // and peer list for snapshot catch-up.
         for &r in &layout.replicas {
-            sim.add_node(r, Box::new(Replica::new(r, Box::new(Noop))));
+            let mut rep = Replica::new(r, Box::new(Noop));
+            rep.snapshot = opts.snapshot;
+            rep.peers = layout.replicas.clone();
+            sim.add_node(r, Box::new(rep));
         }
         // Proposers: all run the Leader role; proposers[0] self-elects at
         // start (see Leader::on_start).
@@ -264,6 +268,28 @@ impl Cluster {
     /// experiment): at most one value chosen per slot.
     pub fn assert_safe(&self) {
         self.sim.check_chosen_safety().expect("chosen-safety invariant");
+    }
+
+    /// Harvest per-replica state-retention counters (log lengths,
+    /// snapshot counts, digests) — the X5 experiment's raw material.
+    pub fn retention_stats(&mut self) -> Vec<RetentionSummary> {
+        let replicas = self.layout.replicas.clone();
+        let mut out = Vec::with_capacity(replicas.len());
+        for r in replicas {
+            if let Some(rep) = self.sim.node_mut::<Replica>(r) {
+                out.push(RetentionSummary {
+                    replica: r,
+                    exec_watermark: rep.exec_watermark,
+                    truncated_below: rep.truncated_below,
+                    log_len: rep.log_len(),
+                    max_log_len: rep.max_log_len,
+                    snapshots_taken: rep.snapshots_taken,
+                    snapshots_installed: rep.snapshots_installed,
+                    digest: rep.sm.digest(),
+                });
+            }
+        }
+        out
     }
 }
 

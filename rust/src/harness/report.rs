@@ -155,6 +155,50 @@ impl OpenLoopReport {
     }
 }
 
+/// The X5 state-retention experiment: per-replica retention counters for
+/// the snapshot-enabled and snapshot-disabled runs side by side, plus
+/// the throughput/convergence acceptance notes.
+#[derive(Debug, Default)]
+pub struct RetentionReport {
+    pub id: String,
+    pub title: String,
+    /// (label, per-replica rows) — one series per run variant.
+    pub series: Vec<(String, Vec<crate::metrics::RetentionSummary>)>,
+    pub notes: Vec<String>,
+}
+
+impl RetentionReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        for (label, rows) in &self.series {
+            let _ = writeln!(out, "--- series: {label} ---");
+            let _ = writeln!(
+                out,
+                "replica\texec_wm\ttrunc_below\tlog_len\tmax_log_len\tsnaps\tinstalled\tdigest"
+            );
+            for r in rows {
+                let _ = writeln!(
+                    out,
+                    "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:#x}",
+                    r.replica,
+                    r.exec_watermark,
+                    r.truncated_below,
+                    r.log_len,
+                    r.max_log_len,
+                    r.snapshots_taken,
+                    r.snapshots_installed,
+                    r.digest
+                );
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
 /// Violin-plot data (Figures 12/13): distribution quartiles per window.
 #[derive(Debug, Default)]
 pub struct ViolinReport {
@@ -222,6 +266,32 @@ mod tests {
             notes: vec![],
         };
         assert!(c.render().contains("19000"));
+    }
+
+    #[test]
+    fn retention_report_renders() {
+        use crate::metrics::RetentionSummary;
+        let row = RetentionSummary {
+            replica: 11,
+            exec_watermark: 9000,
+            truncated_below: 8192,
+            log_len: 808,
+            max_log_len: 1300,
+            snapshots_taken: 40,
+            snapshots_installed: 1,
+            digest: 0xabcd,
+        };
+        let r = RetentionReport {
+            id: "X5".into(),
+            title: "state retention".into(),
+            series: vec![("snapshots on".into(), vec![row])],
+            notes: vec!["bounded".into()],
+        };
+        let text = r.render();
+        assert!(text.contains("max_log_len"));
+        assert!(text.contains("8192"));
+        assert!(text.contains("0xabcd"));
+        assert!(text.contains("note: bounded"));
     }
 
     #[test]

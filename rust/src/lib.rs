@@ -29,23 +29,41 @@
 //! round trip chooses a whole batch; replicas unpack batches and execute
 //! them through `StateMachine::apply_many`, replying per command.
 //!
+//! ## State retention
+//!
+//! Long runs are memory-bounded by the state-retention subsystem
+//! ([`config::SnapshotSpec`]): replicas snapshot their
+//! [`statemachine::StateMachine`] periodically and truncate the chosen
+//! log below the snapshot watermark; lagging or freshly joined replicas
+//! catch up via snapshot-plus-tail transfer from a peer
+//! ([`msg::Msg::SnapshotResp`]); the leader truncates its own log at the
+//! f+1-durable watermark and continuously propagates it to the acceptors
+//! so voted state is dropped in steady state (the replica/acceptor half
+//! of the paper's §5 garbage-collection story). See DESIGN.md for the
+//! full walkthrough.
+//!
 //! ## Workloads
 //!
-//! Clusters are described with a builder and loaded through a
-//! [`workload::WorkloadSpec`]:
+//! Clusters are described with a builder and driven by a
+//! [`workload::WorkloadSpec`]. The README quickstart, runnable (this
+//! example executes in the deterministic simulator in a few ms of wall
+//! clock):
 //!
-//! ```no_run
-//! use matchmaker::harness::Cluster;
+//! ```
+//! use matchmaker::harness::{msec, Cluster};
 //! use matchmaker::sim::NetworkModel;
 //! use matchmaker::workload::WorkloadSpec;
 //!
-//! let cluster = Cluster::builder()
+//! let mut cluster = Cluster::builder()
 //!     .f(1)
-//!     .clients(8)
-//!     .workload(WorkloadSpec::open_loop(4000.0).max_in_flight(16))
+//!     .clients(2)
+//!     .workload(WorkloadSpec::pipelined(4))
 //!     .net(NetworkModel::lan())
 //!     .seed(7)
 //!     .build();
+//! cluster.sim.run_until(msec(500));
+//! cluster.assert_safe();
+//! assert!(!cluster.samples().is_empty());
 //! ```
 //!
 //! [`WorkloadSpec::closed_loop`] reproduces the paper's §8.1 client

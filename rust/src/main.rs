@@ -66,7 +66,7 @@ impl Args {
 }
 
 const USAGE: &str = "usage:
-  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 all)
+  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 all)
   repro run --role R --id N --config FILE [--duration SECS]
       client role workload flags (override the config's `workload =` line):
         --workload closed|pipelined|open|open-poisson
@@ -148,6 +148,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x2" => print!("{}", exp::fast_paxos_experiment(seed).render()),
         "x3" | "batch" => print!("{}", exp::batching_figure(seed).render()),
         "x4" | "openloop" => print!("{}", exp::open_loop_figure(seed).render()),
+        "x5" | "retention" => print!("{}", exp::retention_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -225,7 +226,10 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
                 statemachine::by_name(&cfg.state_machine)
                     .context("unknown state machine (noop|kv|register|counter|tensor)")?
             };
-            Box::new(Replica::new(id, sm))
+            let mut rep = Replica::new(id, sm);
+            rep.snapshot = cfg.opts.snapshot;
+            rep.peers = layout.replicas.clone();
+            Box::new(rep)
         }
         "proposer" => Box::new(Leader::new(
             id,

@@ -124,6 +124,20 @@ pub enum Msg {
     GarbageA { round: Round },
     GarbageB { round: Round },
 
+    // ---- State retention: snapshot transfer & log truncation ----
+    /// Leader → lagging replica: "slots below `below` are truncated from
+    /// my log (durable on f+1 replicas); fetch a snapshot from `peer`".
+    /// Sent when a replica acks a prefix the leader can no longer re-send
+    /// entry by entry.
+    CatchUp { below: Slot, peer: NodeId },
+    /// Replica → peer replica: request a snapshot covering my missing
+    /// prefix (my contiguous executed prefix reaches only `from`).
+    SnapshotRequest { from: Slot },
+    /// Peer replica → requester: serialized replica state (state machine
+    /// + client dedup table) covering all slots `< base`, plus the
+    /// retained tail of chosen entries at slots `>= base`.
+    SnapshotResp { base: Slot, state: Vec<u8>, entries: Vec<(Slot, Value)> },
+
     // ---- Client path ----
     /// Client → leader. `lowest` is the client's oldest in-flight seq:
     /// every seq below it has been acknowledged back to the client. The
@@ -208,6 +222,9 @@ impl Msg {
             Msg::ClientRequest { .. } => MsgKind::Client,
             Msg::ClientReply { .. } | Msg::NotLeader { .. } => MsgKind::Client,
             Msg::GarbageA { .. } | Msg::GarbageB { .. } => MsgKind::Gc,
+            Msg::CatchUp { .. }
+            | Msg::SnapshotRequest { .. }
+            | Msg::SnapshotResp { .. } => MsgKind::Snapshot,
             Msg::StopA
             | Msg::StopB { .. }
             | Msg::Bootstrap { .. }
@@ -239,6 +256,8 @@ pub enum MsgKind {
     Chosen,
     Client,
     Gc,
+    /// Snapshot catch-up traffic (`CatchUp`/`SnapshotRequest`/`SnapshotResp`).
+    Snapshot,
     MmReconfig,
     Heartbeat,
     Other,
@@ -296,6 +315,8 @@ mod tests {
         );
         assert_eq!(Msg::StopA.kind(), MsgKind::MmReconfig);
         assert_eq!(Msg::Heartbeat { epoch: 0 }.kind(), MsgKind::Heartbeat);
+        assert_eq!(Msg::SnapshotRequest { from: 3 }.kind(), MsgKind::Snapshot);
+        assert_eq!(Msg::CatchUp { below: 9, peer: 1 }.kind(), MsgKind::Snapshot);
     }
 
     #[test]

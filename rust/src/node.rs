@@ -37,6 +37,14 @@ pub enum Timer {
     BatchFlush,
     /// Leader: emit a heartbeat to peers.
     HeartbeatTick,
+    /// Replica: take a periodic state-machine snapshot and truncate the
+    /// chosen log below the snapshot watermark
+    /// ([`crate::config::SnapshotSpec`]).
+    SnapshotTick,
+    /// Replica: re-issue an unanswered `SnapshotRequest` (catch-up must
+    /// survive a lost response even when no client traffic is flowing to
+    /// trigger another `CatchUp` hint).
+    CatchupRetry,
     /// Election: check whether the leader's heartbeats stopped.
     LeaderCheck,
     /// Generic scheduled wakeup used by harness-driven roles.
@@ -65,6 +73,12 @@ pub enum Announce {
     MatchmakersReconfigured { matchmakers: Vec<NodeId> },
     /// Fast Paxos: coordinator observed a fast-round choice.
     FastChosen { round: Round, value: Value },
+    /// A replica snapshotted its state machine at `upto` (exclusive) and
+    /// truncated its chosen log below the retained tail.
+    SnapshotTaken { replica: NodeId, upto: Slot },
+    /// A replica installed a peer's snapshot covering slots `< base`
+    /// (crash-rejoin / lagging-node catch-up).
+    SnapshotInstalled { replica: NodeId, base: Slot },
 }
 
 /// The output of one activation of a node.

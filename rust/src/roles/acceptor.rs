@@ -15,13 +15,16 @@ use std::collections::BTreeMap;
 /// voted for (`vv`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Vote {
+    /// Round of the vote.
     pub vr: Round,
+    /// Value voted for.
     pub vv: Value,
 }
 
 /// A (multi-slot) Flexible Paxos acceptor.
 #[derive(Debug)]
 pub struct Acceptor {
+    /// This node's id.
     pub id: NodeId,
     /// Largest round seen (`r` in Algorithm 2); `None` is the paper's `-1`.
     pub round: Option<Round>,
@@ -37,6 +40,7 @@ pub struct Acceptor {
 }
 
 impl Acceptor {
+    /// A classic acceptor (no fast rounds).
     pub fn new(id: NodeId) -> Acceptor {
         Acceptor {
             id,

@@ -47,10 +47,13 @@ struct Outstanding {
 
 /// A workload client (closed-loop, pipelined, or open-loop per its spec).
 pub struct Client {
+    /// This node's id (doubles as the `Command::client` identity).
     pub id: NodeId,
     /// Proposers, in fallback order; `leader_hint` indexes into this list.
     pub proposers: Vec<NodeId>,
+    /// Index of the proposer currently believed to be leader.
     pub leader_hint: usize,
+    /// The workload this client runs.
     pub spec: WorkloadSpec,
     /// Completed-request samples `(completion_time, latency_ns)`.
     pub samples: Vec<(Time, Time)>,
@@ -84,6 +87,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// A client driving `spec` against the given proposers.
     pub fn new(id: NodeId, proposers: Vec<NodeId>, spec: WorkloadSpec) -> Client {
         let payload = spec.payload.bytes_for(id);
         Client {

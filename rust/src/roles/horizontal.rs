@@ -41,11 +41,16 @@ struct PendingConfig {
 /// MultiPaxos leader with horizontal reconfiguration and α-window flow
 /// control.
 pub struct HorizontalLeader {
+    /// This node's id.
     pub id: NodeId,
+    /// The α concurrency window (§7.2): slot `s` waits on slot `s - α`.
     pub alpha: u64,
+    /// Send Phase2A to a sampled P2 quorum instead of all acceptors.
     pub thrifty: bool,
+    /// The replica group.
     pub replicas: Vec<NodeId>,
     rng: Rng,
+    /// Phase 2 re-send interval for unanswered slots.
     pub phase2_retry: Time,
 
     round: Round,
@@ -68,10 +73,13 @@ pub struct HorizontalLeader {
 
     /// Metrics: commands stalled by the α window.
     pub alpha_stalls: u64,
+    /// Metrics: reconfigurations that took effect.
     pub reconfigs_completed: u64,
 }
 
 impl HorizontalLeader {
+    /// A horizontal-reconfiguration leader over `initial_config` with the
+    /// given α window.
     pub fn new(
         id: NodeId,
         initial_config: Configuration,
@@ -102,6 +110,7 @@ impl HorizontalLeader {
         }
     }
 
+    /// True once startup Phase 1 completed and commands flow.
     pub fn is_steady(&self) -> bool {
         self.steady
     }

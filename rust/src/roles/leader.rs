@@ -33,6 +33,15 @@
 //! Finally, the leader implements matchmaker reconfiguration (§6):
 //! stop-and-copy of the matchmaker state plus a meta-Paxos (with the old
 //! matchmakers as acceptors) choosing the new matchmaker set.
+//!
+//! With snapshotting enabled ([`crate::config::SnapshotSpec`]) the leader
+//! also drives steady-state retention: it continuously propagates the
+//! f+1-durable chosen watermark to the acceptors (`PrefixPersisted`, so
+//! vote state is dropped between reconfigurations, not only at GC
+//! barriers), truncates its own log and command→slot map below
+//! `watermark - tail`, and points replicas whose acks fall below the
+//! truncated prefix at a caught-up peer for snapshot transfer
+//! (`CatchUp`).
 
 use super::sequencer::{ClientSequencer, Offered};
 use crate::config::{Configuration, OptFlags};
@@ -163,13 +172,19 @@ struct MmReconfig {
 /// role; at most one is active (leader) at a time, the rest are followers
 /// that answer `NotLeader` and monitor heartbeats.
 pub struct Leader {
+    /// This node's id.
     pub id: NodeId,
+    /// Fault-tolerance parameter.
     pub f: usize,
+    /// Protocol optimization flags + batching/snapshot knobs.
     pub opts: OptFlags,
+    /// Timing knobs (resends, heartbeats, election timeout).
     pub timing: LeaderTiming,
     /// Current active matchmaker set (replaced by §6 reconfiguration).
     pub matchmakers: Vec<NodeId>,
+    /// The replica group (chosen-value dissemination + GC acks).
     pub replicas: Vec<NodeId>,
+    /// All proposers (heartbeats + election).
     pub proposers: Vec<NodeId>,
     rng: Rng,
 
@@ -215,9 +230,14 @@ pub struct Leader {
     compacted_below: Slot,
     /// Prefix persisted on f+1 replicas (max f+1'th largest ack).
     persisted_f1: Slot,
+    /// Last `persisted_f1` value broadcast to the acceptors as a
+    /// `PrefixPersisted` watermark (steady-state vote-state GC; only
+    /// advances with `opts.snapshot.enabled`).
+    last_wm_propagated: Slot,
     gc: GcState,
 
     // ---- Election ----
+    /// Whether this proposer currently believes it is the leader.
     pub is_leader: bool,
     epoch_seen: u64,
     last_leader_hb: Time,
@@ -236,7 +256,9 @@ pub struct Leader {
     pending_reconfig: Option<Configuration>,
 
     // ---- Metrics (read by the harness) ----
+    /// Rounds installed to steady state (startup counts as one).
     pub reconfigs_completed: u64,
+    /// GC cycles driven to completion (§5.3).
     pub gc_completed: u64,
     /// Max |H_i| observed after matchmaking (paper: "matchmakers usually
     /// return just a single configuration").
@@ -244,6 +266,9 @@ pub struct Leader {
 }
 
 impl Leader {
+    /// A proposer over `initial_config`, initially a follower; the
+    /// designated first proposer self-elects in `on_start`. `seed` feeds
+    /// the thrifty quorum sampler (identical seeds, identical runs).
     pub fn new(
         id: NodeId,
         f: usize,
@@ -279,6 +304,7 @@ impl Leader {
             replica_acks: BTreeMap::new(),
             compacted_below: 0,
             persisted_f1: 0,
+            last_wm_propagated: 0,
             gc: GcState { round: Round::first(0, id), barrier: 0, stage: GcStage::Idle },
             is_leader: false,
             epoch_seen: 0,
@@ -742,7 +768,14 @@ impl Leader {
             return;
         }
         let prev = self.replica_acks.get(&from).copied().unwrap_or(0);
-        self.replica_acks.insert(from, prev.max(upto));
+        // Record the replica's LATEST ack verbatim, not the max: a
+        // crashed-and-replaced replica legitimately regresses to 0, and
+        // keeping its stale high-water ack would (a) let the f+1-durable
+        // watermark count a prefix the fresh machine no longer holds and
+        // (b) mis-rank it as the most caught-up CatchUp peer. A reordered
+        // old ack only makes the watermark transiently conservative —
+        // `persisted_f1` itself never regresses.
+        self.replica_acks.insert(from, upto);
         // Persisted-on-f+1 watermark: (f+1)'th largest ack.
         let mut acks: Vec<Slot> = self.replica_acks.values().copied().collect();
         acks.sort_unstable_by(|a, b| b.cmp(a));
@@ -755,18 +788,52 @@ impl Leader {
         // pipelining at high client counts — re-sending on those is
         // quadratic in load.
         if upto <= prev && upto < self.chosen_watermark {
-            let batch_end = (upto + 256).min(self.chosen_watermark);
-            for slot in upto.max(self.compacted_below)..batch_end {
-                if let Some(ss) = self.log.get(&slot) {
-                    if ss.chosen {
-                        fx.send(from, Msg::Chosen { slot, value: ss.value.clone() });
+            // If we no longer hold the entry the replica needs (truncated
+            // below the durable watermark, or never learned it from the
+            // replicas after an election), entry-by-entry re-send cannot
+            // help: point the replica at the most caught-up peer for
+            // snapshot transfer instead.
+            let unavailable = self.log.get(&upto).map_or(true, |ss| !ss.chosen);
+            if unavailable {
+                let peer = self
+                    .replica_acks
+                    .iter()
+                    .filter(|&(&r, _)| r != from)
+                    .max_by_key(|&(_, &a)| a)
+                    .map(|(&r, _)| r)
+                    .or_else(|| self.replicas.iter().copied().find(|&r| r != from));
+                if let Some(peer) = peer {
+                    fx.send(from, Msg::CatchUp { below: self.chosen_watermark, peer });
+                }
+            } else {
+                let batch_end = (upto + 256).min(self.chosen_watermark);
+                for slot in upto..batch_end {
+                    if let Some(ss) = self.log.get(&slot) {
+                        if ss.chosen {
+                            fx.send(from, Msg::Chosen { slot, value: ss.value.clone() });
+                        }
                     }
                 }
             }
         }
-        // Compact entries stored on ALL replicas (nobody can need them
-        // from us again): amortized, in 4k-slot strides.
-        if self.replica_acks.len() == self.replicas.len() {
+        if self.opts.snapshot.enabled {
+            // State retention: truncate at the f+1-durable watermark
+            // minus the retained tail — lagging replicas catch up via
+            // peer snapshots, so waiting for every replica (which stalls
+            // forever if one crashed) is no longer necessary. Amortized
+            // in tail-sized strides.
+            let stride = self.opts.snapshot.tail.max(256);
+            let floor = self.persisted_f1.saturating_sub(self.opts.snapshot.tail);
+            if floor >= self.compacted_below + stride {
+                self.log = self.log.split_off(&floor);
+                self.compacted_below = floor;
+                self.cmd_slots.retain(|_, slot| *slot >= floor);
+            }
+            self.propagate_watermark(fx);
+        } else if self.replica_acks.len() == self.replicas.len() {
+            // Without snapshots, compact only entries stored on ALL
+            // replicas (nobody can need them from us again): amortized,
+            // in 4k-slot strides.
             let min_ack = *self.replica_acks.values().min().unwrap();
             if min_ack >= self.compacted_below + 4096 {
                 self.log = self.log.split_off(&min_ack);
@@ -775,6 +842,30 @@ impl Leader {
             }
         }
         self.gc_advance(now, fx);
+    }
+
+    /// Steady-state acceptor-state GC: as the f+1-durable prefix grows,
+    /// keep telling the active configuration's acceptors (Scenario 3,
+    /// §5.3) so they drop voted state below it — continuously, not only
+    /// at reconfiguration barriers. Amortized in strides so a busy
+    /// cluster is not flooded with watermark traffic.
+    fn propagate_watermark(&mut self, fx: &mut Effects) {
+        let Some(round) = self.active_round else {
+            return;
+        };
+        if !matches!(self.install, Install::None) {
+            return;
+        }
+        let stride = (self.opts.snapshot.tail / 4).max(64);
+        if self.persisted_f1 < self.last_wm_propagated + stride {
+            return;
+        }
+        self.last_wm_propagated = self.persisted_f1;
+        let cfg = self.round_configs.get(&round).unwrap_or(&self.config).clone();
+        fx.broadcast(
+            &cfg.acceptors,
+            &Msg::PrefixPersisted { round, upto: self.persisted_f1 },
+        );
     }
 
     /// Drive the GC state machine forward as prerequisites are met.
@@ -1451,6 +1542,58 @@ mod tests {
         for r in &p.reps {
             assert_eq!(r.executed, 1);
         }
+    }
+
+    #[test]
+    fn snapshot_mode_truncates_leader_log_and_compacts_acceptors() {
+        let mut opts = OptFlags::default();
+        opts.snapshot = crate::config::SnapshotSpec { enabled: true, interval: MS, tail: 64 };
+        let mut p = Pump::new(opts);
+        p.start();
+        for seq in 1..=400 {
+            p.client_cmd(100, seq);
+        }
+        assert_eq!(p.leader.chosen_watermark, 400);
+        // The leader truncated its log (and slot routing) at the durable
+        // watermark minus the retained tail — without waiting for every
+        // replica, which is what keeps memory bounded on long runs.
+        assert!(
+            p.leader.compacted_below >= 256,
+            "leader never truncated: compacted_below = {}",
+            p.leader.compacted_below
+        );
+        assert!(p.leader.log.len() < 200, "leader log unbounded: {}", p.leader.log.len());
+        // The steady-state watermark reached the acceptors (no
+        // reconfiguration happened since startup) and they compacted
+        // voted state below it.
+        let acc = &p.accs[0]; // id 4: member of the initial configuration
+        assert!(acc.chosen_watermark >= 256, "no watermark propagated: {}", acc.chosen_watermark);
+        assert!(acc.votes.len() < 150, "acceptor votes unbounded: {}", acc.votes.len());
+    }
+
+    #[test]
+    fn ack_below_truncated_prefix_gets_catchup_hint() {
+        let mut opts = OptFlags::default();
+        opts.snapshot = crate::config::SnapshotSpec { enabled: true, interval: MS, tail: 64 };
+        let mut p = Pump::new(opts);
+        p.start();
+        for seq in 1..=400 {
+            p.client_cmd(100, seq);
+        }
+        assert!(p.leader.compacted_below > 0);
+        // A replica that lost its state acks 0 twice (no progress): the
+        // leader cannot re-send truncated entries, so it must name a
+        // caught-up peer for snapshot transfer.
+        let mut fx = Effects::new();
+        p.leader.on_msg(5, 10, Msg::ReplicaAck { upto: 0 }, &mut fx);
+        let catchup = fx.msgs.iter().find_map(|(to, m)| match m {
+            Msg::CatchUp { below, peer } => Some((*to, *below, *peer)),
+            _ => None,
+        });
+        let (to, below, peer) = catchup.expect("expected a CatchUp hint");
+        assert_eq!(to, 10);
+        assert_eq!(below, p.leader.chosen_watermark);
+        assert!(peer != 10 && (11..=12).contains(&peer), "bad peer {peer}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::collections::BTreeMap;
 /// A matchmaker node.
 #[derive(Debug)]
 pub struct Matchmaker {
+    /// This node's id.
     pub id: NodeId,
     /// The configuration log `L`.
     pub log: BTreeMap<Round, Configuration>,

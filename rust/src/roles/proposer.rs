@@ -39,8 +39,11 @@ enum Phase {
 
 /// A single-decree Matchmaker Paxos proposer (Algorithm 3).
 pub struct Proposer {
+    /// This node's id.
     pub id: NodeId,
+    /// Fault-tolerance parameter.
     pub f: usize,
+    /// The matchmaker set (f+1 answers complete matchmaking).
     pub matchmakers: Vec<NodeId>,
     /// Whether Optimization 4 (round pruning) is enabled.
     pub round_pruning: bool,
@@ -58,6 +61,7 @@ pub struct Proposer {
 }
 
 impl Proposer {
+    /// A single-decree proposer starting from `config`.
     pub fn new(id: NodeId, f: usize, matchmakers: Vec<NodeId>, config: Configuration) -> Proposer {
         Proposer {
             id,
@@ -272,8 +276,11 @@ enum FastPhase {
 /// with singleton P1 quorums and a single unanimous P2 quorum — the first
 /// protocol to meet the Fast Paxos quorum-size lower bound.
 pub struct FastProposer {
+    /// This node's id.
     pub id: NodeId,
+    /// Fault-tolerance parameter.
     pub f: usize,
+    /// The matchmaker set.
     pub matchmakers: Vec<NodeId>,
     round: Round,
     config: Configuration,

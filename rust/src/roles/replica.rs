@@ -1,4 +1,4 @@
-//! State machine replicas (§4.1, §5.3).
+//! State machine replicas (§4.1, §5.3) and the state-retention subsystem.
 //!
 //! Replicas insert chosen commands into their logs, execute the log in
 //! prefix order against a pluggable [`crate::statemachine::StateMachine`],
@@ -7,11 +7,24 @@
 //! Scenario 3 (a prefix stored on `f+1` replicas may be garbage
 //! collected), and they serve `ReadPrefix` so a newly elected leader can
 //! learn the chosen prefix (§4.1: "by communicating with the replicas").
+//!
+//! With an enabled [`SnapshotSpec`], replicas additionally bound their
+//! durable state: every `interval` they snapshot the state machine (plus
+//! the client dedup table, so exactly-once survives a snapshot install),
+//! truncate the chosen log below the snapshot watermark keeping a
+//! retained tail of `tail` entries, and serve snapshot-plus-tail
+//! catch-up ([`Msg::SnapshotRequest`]/[`Msg::SnapshotResp`]) to lagging
+//! or freshly joined peers that the leader points at them
+//! ([`Msg::CatchUp`]). This is the replica half of the paper's GC story:
+//! matchmakers and acceptors retire configuration/vote state (§5), and
+//! replicas retire the chosen log itself.
 
+use crate::codec::{Dec, Enc};
+use crate::config::SnapshotSpec;
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::statemachine::StateMachine;
-use crate::{NodeId, Slot, Time};
+use crate::{NodeId, Slot, Time, MS};
 use std::collections::{BTreeMap, HashMap};
 
 /// Per-client execution history: dedup cursor plus a bounded window of
@@ -23,9 +36,15 @@ pub struct ClientHistory {
     /// Highest executed seq for this client (commands at or below it are
     /// duplicates, never re-executed).
     pub highest: u64,
-    /// Results of the most recent [`RESULT_CACHE`] executed seqs.
-    pub recent: BTreeMap<u64, Vec<u8>>,
+    /// Results of the most recent [`RESULT_CACHE`] executed seqs, tagged
+    /// with the slot they executed at so truncation can also retire them
+    /// by watermark (see [`Replica::snapshot`]).
+    pub recent: BTreeMap<u64, (Slot, Vec<u8>)>,
 }
+
+/// How long a replica waits for a `SnapshotResp` before re-requesting
+/// (the response may be lost on a lossy network).
+const CATCHUP_RETRY: Time = 50 * MS;
 
 /// How many per-client results a replica retains for retry re-replies.
 /// Covers the largest client in-flight window (workload specs clamp
@@ -34,6 +53,7 @@ pub const RESULT_CACHE: usize = crate::workload::MAX_IN_FLIGHT;
 
 /// A state machine replica.
 pub struct Replica {
+    /// This node's id.
     pub id: NodeId,
     /// Chosen log.
     pub log: BTreeMap<Slot, Value>,
@@ -49,9 +69,37 @@ pub struct Replica {
     /// allocations per command across a 2f+1 replica group on the hottest
     /// path; the TCP integration test and debug tooling enable it).
     pub announce_execs: bool,
+    /// Snapshot / truncation policy (disabled by default; the harness and
+    /// deployment launcher set it before the node starts).
+    pub snapshot: SnapshotSpec,
+    /// Peer replicas: snapshot catch-up sources. The leader's `CatchUp`
+    /// hint seeds the choice; retries rotate through this list so a dead
+    /// hinted peer cannot stall catch-up forever.
+    pub peers: Vec<NodeId>,
+    /// Slots below this are truncated from `log`, covered by the state
+    /// snapshot.
+    pub truncated_below: Slot,
+    /// Number of periodic snapshots taken (metrics).
+    pub snapshots_taken: u64,
+    /// Number of peer snapshots installed (metrics).
+    pub snapshots_installed: u64,
+    /// High-water mark of `log.len()` (metrics: the X5 bounded-memory
+    /// acceptance gate reads this).
+    pub max_log_len: usize,
+    /// Most recent periodic snapshot: `(watermark, serialized state)`.
+    last_snapshot: Option<(Slot, Vec<u8>)>,
+    /// Active catch-up: `(peer, target watermark, last request time)`.
+    /// A retry timer re-issues the request while this is set, so a lost
+    /// `SnapshotResp` recovers even with no client traffic flowing.
+    catchup: Option<(NodeId, Slot, Time)>,
+    /// Whether a `CatchupRetry` timer is outstanding (one chain at a
+    /// time, same idiom as the leader's Phase 2 watchdog).
+    catchup_timer_armed: bool,
 }
 
 impl Replica {
+    /// A replica executing chosen commands against `sm`. Snapshotting is
+    /// off until [`Replica::snapshot`] is set (with peers for catch-up).
     pub fn new(id: NodeId, sm: Box<dyn StateMachine>) -> Replica {
         Replica {
             id,
@@ -61,6 +109,15 @@ impl Replica {
             client_table: HashMap::new(),
             executed: 0,
             announce_execs: false,
+            snapshot: SnapshotSpec::default(),
+            peers: Vec::new(),
+            truncated_below: 0,
+            snapshots_taken: 0,
+            snapshots_installed: 0,
+            max_log_len: 0,
+            last_snapshot: None,
+            catchup: None,
+            catchup_timer_armed: false,
         }
     }
 
@@ -77,6 +134,7 @@ impl Replica {
             // per-slot clone on the execution hot path.
             match value {
                 Value::Cmd(cmd) => exec_commands(
+                    self.exec_watermark,
                     std::slice::from_ref(cmd),
                     &mut self.client_table,
                     self.sm.as_mut(),
@@ -87,6 +145,7 @@ impl Replica {
                 // through one `StateMachine::apply_many` invocation,
                 // replying to each client individually.
                 Value::Batch(cmds) => exec_commands(
+                    self.exec_watermark,
                     cmds,
                     &mut self.client_table,
                     self.sm.as_mut(),
@@ -105,6 +164,122 @@ impl Replica {
         }
     }
 
+    /// Length of the retained chosen log (metrics/tests).
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Serialize the replica's executed state: the state-machine snapshot
+    /// plus the client dedup/result table, prefixed with the execution
+    /// watermark it covers. Everything a fresh replica needs to continue
+    /// from `exec_watermark` with exactly-once semantics intact.
+    fn encode_snapshot(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.exec_watermark);
+        e.bytes(&self.sm.snapshot());
+        let mut clients: Vec<(&NodeId, &ClientHistory)> = self.client_table.iter().collect();
+        clients.sort_by_key(|(id, _)| **id);
+        e.u32(clients.len() as u32);
+        for (id, h) in clients {
+            e.u32(*id);
+            e.u64(h.highest);
+            e.u32(h.recent.len() as u32);
+            for (seq, (slot, result)) in &h.recent {
+                e.u64(*seq);
+                e.u64(*slot);
+                e.bytes(result);
+            }
+        }
+        e.buf
+    }
+
+    /// Install a peer snapshot covering slots `< base`. Refuses (and
+    /// leaves local state untouched) when the bytes are malformed or the
+    /// state machine rejects them. On success the replica continues
+    /// executing from `base`.
+    fn install_snapshot(&mut self, base: Slot, snap: &[u8]) -> bool {
+        let mut d = Dec::new(snap);
+        let Ok(watermark) = d.u64() else {
+            return false;
+        };
+        if watermark != base {
+            return false;
+        }
+        let Ok(sm_state) = d.bytes() else {
+            return false;
+        };
+        let Ok(n) = d.u32() else {
+            return false;
+        };
+        let mut table: HashMap<NodeId, ClientHistory> = HashMap::new();
+        for _ in 0..n {
+            let (Ok(client), Ok(highest), Ok(m)) = (d.u32(), d.u64(), d.u32()) else {
+                return false;
+            };
+            let mut recent = BTreeMap::new();
+            for _ in 0..m {
+                let (Ok(seq), Ok(slot), Ok(result)) = (d.u64(), d.u64(), d.bytes()) else {
+                    return false;
+                };
+                recent.insert(seq, (slot, result));
+            }
+            table.insert(client, ClientHistory { highest, recent });
+        }
+        if !d.done() || !self.sm.restore(&sm_state) {
+            return false;
+        }
+        self.client_table = table;
+        self.exec_watermark = base;
+        self.truncated_below = base;
+        self.log = self.log.split_off(&base);
+        true
+    }
+
+    /// Periodic snapshot tick: capture the state, truncate the chosen log
+    /// below `watermark - tail`, and retire result-cache entries below the
+    /// truncation floor (the watermark bound on the retry cache — the
+    /// count bound alone lets idle clients' entries linger forever).
+    ///
+    /// The tail is thereby also the retry horizon: a retry arriving more
+    /// than `tail` slots after its command executed finds no cached
+    /// result and is treated as settled (silence, never re-execution —
+    /// the dedup cursor survives). Deployments on lossy networks should
+    /// size `tail` to cover the client resend timeout at the expected
+    /// slot rate.
+    fn on_snapshot_tick(&mut self, _now: Time, fx: &mut Effects) {
+        if !self.snapshot.enabled {
+            return;
+        }
+        let upto = self.exec_watermark;
+        if upto > self.last_snapshot.as_ref().map_or(0, |(s, _)| *s) {
+            self.last_snapshot = Some((upto, self.encode_snapshot()));
+            self.snapshots_taken += 1;
+            fx.announce(Announce::SnapshotTaken { replica: self.id, upto });
+            let floor = upto.saturating_sub(self.snapshot.tail);
+            if floor > self.truncated_below {
+                self.truncated_below = floor;
+                self.log = self.log.split_off(&floor);
+                for h in self.client_table.values_mut() {
+                    h.recent.retain(|_, v| v.0 >= floor);
+                }
+            }
+        }
+        fx.timer(self.snapshot.interval, Timer::SnapshotTick);
+    }
+
+    /// The next catch-up peer after `cur`: rotate through the peer list
+    /// (excluding ourselves) so retries don't hammer a dead node forever.
+    fn next_peer(&self, cur: NodeId) -> NodeId {
+        let candidates: Vec<NodeId> =
+            self.peers.iter().copied().filter(|&p| p != self.id).collect();
+        if candidates.is_empty() {
+            return cur;
+        }
+        match candidates.iter().position(|&p| p == cur) {
+            Some(i) => candidates[(i + 1) % candidates.len()],
+            None => candidates[0],
+        }
+    }
 }
 
 /// Execute a run of commands from one slot: deduplicate retries
@@ -114,6 +289,7 @@ impl Replica {
 /// A free function over the replica's disjoint execution fields so the
 /// commands can stay borrowed from the log (no clone per executed slot).
 fn exec_commands(
+    slot: Slot,
     cmds: &[Command],
     client_table: &mut HashMap<NodeId, ClientHistory>,
     sm: &mut dyn StateMachine,
@@ -128,7 +304,7 @@ fn exec_commands(
         if dup {
             // Re-chosen retry of an executed command: re-reply with the
             // cached result, do not re-execute.
-            if let Some(result) = client_table
+            if let Some((_, result)) = client_table
                 .get(&cmd.client)
                 .and_then(|h| h.recent.get(&cmd.seq))
             {
@@ -151,7 +327,7 @@ fn exec_commands(
         *executed += 1;
         let h = client_table.entry(cmd.client).or_default();
         h.highest = h.highest.max(cmd.seq);
-        h.recent.insert(cmd.seq, result.clone());
+        h.recent.insert(cmd.seq, (slot, result.clone()));
         while h.recent.len() > RESULT_CACHE {
             let oldest = *h.recent.keys().next().unwrap();
             h.recent.remove(&oldest);
@@ -161,23 +337,36 @@ fn exec_commands(
 }
 
 impl Node for Replica {
-    fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+    fn on_start(&mut self, _now: Time, fx: &mut Effects) {
+        if self.snapshot.enabled {
+            fx.timer(self.snapshot.interval, Timer::SnapshotTick);
+        }
+    }
+
+    fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
             Msg::Chosen { slot, value } => {
                 // Idempotent insert: chosen values never conflict (safety),
-                // so a duplicate insert is a no-op.
-                self.log.entry(slot).or_insert(value);
+                // so a duplicate insert is a no-op. Slots below the
+                // truncation floor are already covered by the snapshot.
+                if slot >= self.truncated_below {
+                    self.log.entry(slot).or_insert(value);
+                    self.max_log_len = self.max_log_len.max(self.log.len());
+                }
                 let before = self.exec_watermark;
                 self.execute_ready(from, fx);
                 if self.exec_watermark == before && slot > self.exec_watermark {
                     // We have a hole: ack our (unchanged) watermark so the
-                    // leader can re-send the missing entries.
+                    // leader can re-send the missing entries (or point us
+                    // at a peer snapshot if it truncated them).
                     fx.send(from, Msg::ReplicaAck { upto: self.exec_watermark });
                 }
             }
             // A (new) leader asks for the chosen prefix (§4.1). The
             // requested start may exceed our watermark (the leader already
-            // knows more than us): clamp the range.
+            // knows more than us): clamp the range. Truncated slots are
+            // absent — a lagging peer recovers them via snapshot
+            // catch-up, not entry-by-entry.
             Msg::ReadPrefix { from: from_slot } => {
                 let start = from_slot.min(self.exec_watermark);
                 let entries: Vec<(Slot, Value)> = self
@@ -187,11 +376,124 @@ impl Node for Replica {
                     .collect();
                 fx.send(from, Msg::PrefixResp { entries, upto: self.exec_watermark });
             }
+            // The leader truncated the prefix we are missing: fetch a
+            // snapshot from the peer it named. A retry timer re-issues
+            // the request if the response is lost.
+            Msg::CatchUp { below, peer } => {
+                if self.exec_watermark >= below || peer == self.id {
+                    return;
+                }
+                let due = match self.catchup {
+                    Some((_, _, t)) => now.saturating_sub(t) >= CATCHUP_RETRY,
+                    None => true,
+                };
+                if due {
+                    // One retry chain at a time: the timer keeps itself
+                    // armed while `catchup` is set.
+                    if !self.catchup_timer_armed {
+                        self.catchup_timer_armed = true;
+                        fx.timer(CATCHUP_RETRY, Timer::CatchupRetry);
+                    }
+                    self.catchup = Some((peer, below, now));
+                    fx.send(peer, Msg::SnapshotRequest { from: self.exec_watermark });
+                } else if let Some(c) = &mut self.catchup {
+                    // Track the newest target for the pending retry. The
+                    // peer is NOT overwritten: retry rotation may have
+                    // moved past a dead hinted peer on purpose.
+                    c.1 = c.1.max(below);
+                }
+            }
+            // Serve snapshot-plus-tail catch-up. When the retained log
+            // alone covers the requester's gap, skip the state transfer
+            // entirely and ship just the entries; otherwise send the
+            // stored periodic snapshot (or a fresh one at the current
+            // watermark) plus every retained chosen entry above its base.
+            Msg::SnapshotRequest { from: req_from } => {
+                let (base, state) = if req_from >= self.truncated_below {
+                    (req_from, Vec::new())
+                } else {
+                    // The stored snapshot must also cover our own
+                    // truncation floor (it can briefly lag right after we
+                    // installed a peer snapshot ourselves) or the tail
+                    // would have gaps.
+                    match &self.last_snapshot {
+                        Some((s, bytes)) if *s > req_from && *s >= self.truncated_below => {
+                            (*s, bytes.clone())
+                        }
+                        _ => (self.exec_watermark, self.encode_snapshot()),
+                    }
+                };
+                let entries: Vec<(Slot, Value)> = self
+                    .log
+                    .range(base..self.exec_watermark)
+                    .map(|(s, v)| (*s, v.clone()))
+                    .collect();
+                fx.send(from, Msg::SnapshotResp { base, state, entries });
+            }
+            Msg::SnapshotResp { base, state, entries } => {
+                let before = self.exec_watermark;
+                if base > self.exec_watermark {
+                    if !self.install_snapshot(base, &state) {
+                        return;
+                    }
+                    self.snapshots_installed += 1;
+                    fx.announce(Announce::SnapshotInstalled { replica: self.id, base });
+                }
+                for (slot, value) in entries {
+                    if slot >= self.truncated_below {
+                        self.log.entry(slot).or_insert(value);
+                    }
+                }
+                self.max_log_len = self.max_log_len.max(self.log.len());
+                // Execute the tail; the ack goes to the serving peer
+                // (which ignores it) — the leader learns our new
+                // watermark from the ack on its next Chosen.
+                self.execute_ready(from, fx);
+                match self.catchup {
+                    Some((_, below, _)) if self.exec_watermark >= below => {
+                        self.catchup = None;
+                    }
+                    Some((peer, below, _)) if self.exec_watermark > before => {
+                        // Progress but not at the target yet (the peer may
+                        // have truncated past us again): request the next
+                        // increment right away.
+                        self.catchup = Some((peer, below, now));
+                        fx.send(peer, Msg::SnapshotRequest { from: self.exec_watermark });
+                    }
+                    // No progress: leave the retry timer to re-request at
+                    // a bounded rate instead of ping-ponging per RTT.
+                    _ => {}
+                }
+            }
             _ => {}
         }
     }
 
-    fn on_timer(&mut self, _now: Time, _timer: Timer, _fx: &mut Effects) {}
+    fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects) {
+        match timer {
+            Timer::SnapshotTick => self.on_snapshot_tick(now, fx),
+            Timer::CatchupRetry => {
+                self.catchup_timer_armed = false;
+                let Some((peer, below, last)) = self.catchup else {
+                    return;
+                };
+                if self.exec_watermark >= below {
+                    self.catchup = None;
+                    return;
+                }
+                if now.saturating_sub(last) >= CATCHUP_RETRY {
+                    // No response within the window: the peer may be slow,
+                    // the message lost, or the peer dead — rotate.
+                    let peer = self.next_peer(peer);
+                    self.catchup = Some((peer, below, now));
+                    fx.send(peer, Msg::SnapshotRequest { from: self.exec_watermark });
+                }
+                self.catchup_timer_armed = true;
+                fx.timer(CATCHUP_RETRY, Timer::CatchupRetry);
+            }
+            _ => {}
+        }
+    }
 
     fn role(&self) -> &'static str {
         "replica"
@@ -370,5 +672,207 @@ mod tests {
         deliver(&mut r, 0, Msg::Chosen { slot: 0, value: cmd(7, 0, b"x") });
         assert_eq!(r.executed, executed);
         assert_eq!(r.exec_watermark, 1);
+    }
+
+    // ---- State retention ----
+
+    fn snapshotting_replica(tail: u64) -> Replica {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        // Bypass the `every()` clamp deliberately: unit tests want tiny
+        // tails to keep slot counts small.
+        r.snapshot = SnapshotSpec { enabled: true, interval: MS, tail };
+        r.peers = vec![1, 2, 3];
+        r
+    }
+
+    fn tick(r: &mut Replica, now: Time) -> Effects {
+        let mut fx = Effects::new();
+        r.on_timer(now, Timer::SnapshotTick, &mut fx);
+        fx
+    }
+
+    #[test]
+    fn snapshot_tick_truncates_log_and_rearms() {
+        let mut r = snapshotting_replica(4);
+        for s in 0..10 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        assert_eq!(r.log_len(), 10);
+        let fx = tick(&mut r, MS);
+        // Snapshot at watermark 10; log keeps the 4-entry tail [6, 10).
+        assert_eq!(r.snapshots_taken, 1);
+        assert_eq!(r.truncated_below, 6);
+        assert_eq!(r.log_len(), 4);
+        assert!(r.log.contains_key(&6) && !r.log.contains_key(&5));
+        assert!(fx.timers.iter().any(|(_, t)| *t == Timer::SnapshotTick));
+        assert!(fx
+            .announces
+            .iter()
+            .any(|a| matches!(a, Announce::SnapshotTaken { upto: 10, .. })));
+        // Idle tick: no new snapshot, but the timer re-arms.
+        let fx = tick(&mut r, 2 * MS);
+        assert_eq!(r.snapshots_taken, 1);
+        assert!(fx.timers.iter().any(|(_, t)| *t == Timer::SnapshotTick));
+        // Chosen below the truncation floor is ignored (covered by the
+        // snapshot), and the max-log high-water mark saw the peak.
+        deliver(&mut r, 0, Msg::Chosen { slot: 2, value: cmd(7, 3, b"skv") });
+        assert_eq!(r.log_len(), 4);
+        assert_eq!(r.max_log_len, 10);
+    }
+
+    #[test]
+    fn truncation_bounds_result_cache_by_watermark() {
+        let mut r = snapshotting_replica(4);
+        for s in 0..10 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        assert_eq!(r.client_table[&7].recent.len(), 10);
+        tick(&mut r, MS);
+        // Results for slots below the floor (6) are retired; the dedup
+        // cursor survives.
+        let h = &r.client_table[&7];
+        assert_eq!(h.recent.len(), 4);
+        assert_eq!(h.highest, 10);
+        assert!(h.recent.keys().all(|&seq| seq >= 7));
+    }
+
+    #[test]
+    fn snapshot_transfer_catches_up_fresh_replica() {
+        // Peer executes 20 kv commands, snapshots, truncates.
+        let mut peer = snapshotting_replica(4);
+        for s in 0..20 {
+            deliver(&mut peer, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        tick(&mut peer, MS);
+        assert_eq!(peer.truncated_below, 16);
+
+        // A fresh replica is pointed at the peer by the leader.
+        let mut fresh = snapshotting_replica(4);
+        fresh.id = 2;
+        let mut fx = Effects::new();
+        fresh.on_msg(10 * MS, 0, Msg::CatchUp { below: 16, peer: 1 }, &mut fx);
+        let req = fx.msgs.iter().find(|(to, m)| {
+            *to == 1 && matches!(m, Msg::SnapshotRequest { from: 0 })
+        });
+        assert!(req.is_some(), "{:?}", fx.msgs);
+        // ... and arms a retry timer (a lost response must recover even
+        // with no further traffic to trigger another CatchUp hint).
+        assert!(fx.timers.iter().any(|(_, t)| *t == Timer::CatchupRetry));
+        // Within the retry window, a second CatchUp is a no-op.
+        let mut fx2 = Effects::new();
+        fresh.on_msg(10 * MS + 1, 0, Msg::CatchUp { below: 16, peer: 1 }, &mut fx2);
+        assert!(fx2.msgs.is_empty());
+        // The retry timer re-issues the request once the window passes.
+        let mut fxt = Effects::new();
+        fresh.on_timer(10 * MS + CATCHUP_RETRY, Timer::CatchupRetry, &mut fxt);
+        assert_eq!(fxt.msgs.len(), 1, "{:?}", fxt.msgs);
+        assert!(fxt.timers.iter().any(|(_, t)| *t == Timer::CatchupRetry));
+        // A further CatchUp after the window also re-requests.
+        let mut fx3 = Effects::new();
+        fresh.on_msg(10 * MS + 2 * CATCHUP_RETRY, 0, Msg::CatchUp { below: 16, peer: 1 }, &mut fx3);
+        assert_eq!(fx3.msgs.len(), 1);
+
+        // The peer serves snapshot-plus-tail; the fresh replica installs
+        // it and converges to the same state without re-executing.
+        let resp = deliver(&mut peer, 2, Msg::SnapshotRequest { from: 0 });
+        let (base, state, entries) = match &resp.msgs[0] {
+            (2, Msg::SnapshotResp { base, state, entries }) => {
+                (*base, state.clone(), entries.clone())
+            }
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(base, 20, "stored snapshot covers the full executed prefix");
+        assert!(entries.is_empty(), "nothing above the snapshot base yet");
+        let fx4 = deliver(&mut fresh, 1, Msg::SnapshotResp { base, state, entries });
+        assert_eq!(fresh.exec_watermark, 20);
+        assert_eq!(fresh.snapshots_installed, 1);
+        // Caught up past the target: the catch-up state cleared, so the
+        // pending retry timer becomes a no-op.
+        let mut fxq = Effects::new();
+        fresh.on_timer(20 * MS, Timer::CatchupRetry, &mut fxq);
+        assert!(fxq.msgs.is_empty() && fxq.timers.is_empty());
+        assert_eq!(fresh.sm.digest(), peer.sm.digest());
+        assert!(fx4
+            .announces
+            .iter()
+            .any(|a| matches!(a, Announce::SnapshotInstalled { base: 20, .. })));
+        // Exactly-once survives the transfer: a re-chosen old command is
+        // deduped (cached reply, no re-execution).
+        let before = fresh.executed;
+        let fx5 = deliver(&mut fresh, 0, Msg::Chosen { slot: 20, value: cmd(7, 20, b"skv") });
+        assert_eq!(fresh.executed, before);
+        assert!(fx5
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 7 && matches!(m, Msg::ClientReply { seq: 20, .. })));
+        // And new commands flow normally after catch-up.
+        deliver(&mut fresh, 0, Msg::Chosen { slot: 21, value: cmd(7, 21, b"skv") });
+        assert_eq!(fresh.exec_watermark, 22);
+    }
+
+    #[test]
+    fn snapshot_request_within_retained_log_served_entries_only() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        for s in 0..5 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        // Nothing truncated: the retained log covers the whole gap, so no
+        // state transfer is needed — just the entries.
+        let fx = deliver(&mut r, 9, Msg::SnapshotRequest { from: 0 });
+        match &fx.msgs[0].1 {
+            Msg::SnapshotResp { base, state, entries } => {
+                assert_eq!(*base, 0);
+                assert!(state.is_empty());
+                assert_eq!(entries.len(), 5);
+            }
+            other => panic!("{other:?}"),
+        }
+        // A second replica applies the entries-only response and
+        // converges by normal execution.
+        let mut b = Replica::new(2, Box::new(KvStore::new()));
+        let resp = fx.msgs[0].1.clone();
+        deliver(&mut b, 1, resp);
+        assert_eq!(b.exec_watermark, 5);
+        assert_eq!(b.sm.digest(), r.sm.digest());
+        assert_eq!(b.snapshots_installed, 0, "no state install needed");
+    }
+
+    #[test]
+    fn stale_snapshot_resp_ignored() {
+        let mut r = snapshotting_replica(4);
+        for s in 0..10 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        let digest = r.sm.digest();
+        // A response whose base is behind our watermark must not regress
+        // state; malformed state must be refused.
+        deliver(&mut r, 2, Msg::SnapshotResp { base: 3, state: vec![], entries: vec![] });
+        assert_eq!(r.exec_watermark, 10);
+        assert_eq!(r.sm.digest(), digest);
+        deliver(
+            &mut r,
+            2,
+            Msg::SnapshotResp { base: 99, state: b"garbage".to_vec(), entries: vec![] },
+        );
+        assert_eq!(r.exec_watermark, 10);
+        assert_eq!(r.snapshots_installed, 0);
+    }
+
+    #[test]
+    fn replica_snapshot_roundtrip_via_encode_install() {
+        let mut a = Replica::new(1, Box::new(KvStore::new()));
+        for s in 0..7 {
+            deliver(&mut a, 0, Msg::Chosen { slot: s, value: cmd(9, s + 1, b"skv") });
+        }
+        let snap = a.encode_snapshot();
+        let mut b = Replica::new(2, Box::new(KvStore::new()));
+        assert!(b.install_snapshot(a.exec_watermark, &snap));
+        assert_eq!(b.exec_watermark, 7);
+        assert_eq!(b.sm.digest(), a.sm.digest());
+        assert_eq!(b.client_table[&9].highest, 7);
+        // Base mismatch refused.
+        let mut c = Replica::new(3, Box::new(KvStore::new()));
+        assert!(!c.install_snapshot(99, &snap));
+        assert_eq!(c.exec_watermark, 0);
     }
 }

@@ -47,6 +47,7 @@ pub struct ClientSequencer {
 }
 
 impl ClientSequencer {
+    /// An empty sequencer (cursors initialize on first contact).
     pub fn new() -> ClientSequencer {
         ClientSequencer::default()
     }

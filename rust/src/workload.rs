@@ -86,7 +86,9 @@ impl PayloadSpec {
 /// A complete client workload description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadSpec {
+    /// When the client issues requests (closed loop / open loop).
     pub mode: WorkloadMode,
+    /// What bytes each command carries.
     pub payload: PayloadSpec,
     /// Start issuing at this time (0 = immediately on start).
     pub start_at: Time,
@@ -164,16 +166,19 @@ impl WorkloadSpec {
         self
     }
 
+    /// Begin issuing at `t` (default 0: immediately on start).
     pub fn start_at(mut self, t: Time) -> WorkloadSpec {
         self.start_at = t;
         self
     }
 
+    /// Stop issuing — and retrying — at `t` (default: never).
     pub fn stop_at(mut self, t: Time) -> WorkloadSpec {
         self.stop_at = t;
         self
     }
 
+    /// Per-request resend timeout when no reply arrives (default 100 ms).
     pub fn resend_after(mut self, t: Time) -> WorkloadSpec {
         self.resend_after = t.max(1);
         self
