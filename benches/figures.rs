@@ -85,4 +85,7 @@ fn main() {
     if want("x4") {
         timed("X4 (open-loop offered-load sweep)", || exp::open_loop_figure(seed).render());
     }
+    if want("x6") {
+        timed("X6 (sharded multi-group scale-out)", || exp::sharding_figure(seed).render());
+    }
 }

@@ -58,10 +58,10 @@ fn main() {
     println!("\nreconfiguration lifecycle (→ acceptors {new_acceptors:?}):");
     for (t, _, a) in &cluster.sim.announces {
         match a {
-            Announce::ConfigActive { round, config_id: 1 } => {
+            Announce::ConfigActive { round, config_id: 1, .. } => {
                 println!("  t={:.4}s config 1 ACTIVE in round {round}", *t as f64 / 1e9)
             }
-            Announce::ConfigRetired { round } if round.seq == 1 => println!(
+            Announce::ConfigRetired { round, .. } if round.seq == 1 => println!(
                 "  t={:.4}s configs below round {round} RETIRED (old acceptors may shut down)",
                 *t as f64 / 1e9
             ),

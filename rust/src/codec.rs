@@ -353,19 +353,22 @@ impl Wire for Msg {
     fn enc(&self, e: &mut Enc) {
         use Msg::*;
         match self {
-            MatchA { round, config } => {
+            MatchA { group, round, config } => {
                 e.u8(0);
+                e.u32(*group);
                 round.enc(e);
                 config.enc(e);
             }
-            MatchB { round, gc_watermark, prior } => {
+            MatchB { group, round, gc_watermark, prior } => {
                 e.u8(1);
+                e.u32(*group);
                 round.enc(e);
                 gc_watermark.enc(e);
                 prior.enc(e);
             }
-            MatchNack { round, blocking } => {
+            MatchNack { group, round, blocking } => {
                 e.u8(2);
+                e.u32(*group);
                 round.enc(e);
                 blocking.enc(e);
             }
@@ -424,43 +427,49 @@ impl Wire for Msg {
                 entries.enc(e);
                 e.u64(*upto);
             }
-            GarbageA { round } => {
+            GarbageA { group, round } => {
                 e.u8(14);
+                e.u32(*group);
                 round.enc(e);
             }
-            GarbageB { round } => {
+            GarbageB { group, round } => {
                 e.u8(15);
+                e.u32(*group);
                 round.enc(e);
             }
-            ClientRequest { cmd, lowest } => {
+            ClientRequest { group, cmd, lowest } => {
                 e.u8(16);
+                e.u32(*group);
                 cmd.enc(e);
                 e.u64(*lowest);
             }
-            ClientReply { seq, result } => {
+            ClientReply { group, seq, result } => {
                 e.u8(17);
+                e.u32(*group);
                 e.u64(*seq);
                 e.bytes(result);
             }
-            NotLeader { hint } => {
+            NotLeader { group, hint } => {
                 e.u8(18);
+                e.u32(*group);
                 hint.enc(e);
             }
             StopA => e.u8(19),
-            StopB { log, gc_watermark } => {
+            StopB { log, gc_watermarks } => {
                 e.u8(20);
                 log.enc(e);
-                gc_watermark.enc(e);
+                gc_watermarks.enc(e);
             }
-            Bootstrap { log, gc_watermark, generation } => {
+            Bootstrap { log, gc_watermarks, generation } => {
                 e.u8(21);
                 log.enc(e);
-                gc_watermark.enc(e);
+                gc_watermarks.enc(e);
                 e.u64(*generation);
             }
             BootstrapAck => e.u8(22),
-            MatchmakersActivated { matchmakers } => {
+            MatchmakersActivated { generation, matchmakers } => {
                 e.u8(23);
+                e.u64(*generation);
                 matchmakers.enc(e);
             }
             MetaPhase1A { round, generation } => {
@@ -523,13 +532,22 @@ impl Wire for Msg {
     fn dec(d: &mut Dec) -> R<Self> {
         use Msg::*;
         Ok(match d.u8()? {
-            0 => MatchA { round: Round::dec(d)?, config: Configuration::dec(d)? },
+            0 => MatchA {
+                group: d.u32()?,
+                round: Round::dec(d)?,
+                config: Configuration::dec(d)?,
+            },
             1 => MatchB {
+                group: d.u32()?,
                 round: Round::dec(d)?,
                 gc_watermark: Wire::dec(d)?,
                 prior: Wire::dec(d)?,
             },
-            2 => MatchNack { round: Round::dec(d)?, blocking: Round::dec(d)? },
+            2 => MatchNack {
+                group: d.u32()?,
+                round: Round::dec(d)?,
+                blocking: Round::dec(d)?,
+            },
             3 => Phase1A { round: Round::dec(d)?, from_slot: d.u64()? },
             4 => Phase1B {
                 round: Round::dec(d)?,
@@ -545,16 +563,20 @@ impl Wire for Msg {
             11 => PrefixAck { round: Round::dec(d)?, upto: d.u64()? },
             12 => ReadPrefix { from: d.u64()? },
             13 => PrefixResp { entries: Wire::dec(d)?, upto: d.u64()? },
-            14 => GarbageA { round: Round::dec(d)? },
-            15 => GarbageB { round: Round::dec(d)? },
-            16 => ClientRequest { cmd: Command::dec(d)?, lowest: d.u64()? },
-            17 => ClientReply { seq: d.u64()?, result: d.bytes()? },
-            18 => NotLeader { hint: Wire::dec(d)? },
+            14 => GarbageA { group: d.u32()?, round: Round::dec(d)? },
+            15 => GarbageB { group: d.u32()?, round: Round::dec(d)? },
+            16 => ClientRequest { group: d.u32()?, cmd: Command::dec(d)?, lowest: d.u64()? },
+            17 => ClientReply { group: d.u32()?, seq: d.u64()?, result: d.bytes()? },
+            18 => NotLeader { group: d.u32()?, hint: Wire::dec(d)? },
             19 => StopA,
-            20 => StopB { log: Wire::dec(d)?, gc_watermark: Wire::dec(d)? },
-            21 => Bootstrap { log: Wire::dec(d)?, gc_watermark: Wire::dec(d)?, generation: d.u64()? },
+            20 => StopB { log: Wire::dec(d)?, gc_watermarks: Wire::dec(d)? },
+            21 => Bootstrap {
+                log: Wire::dec(d)?,
+                gc_watermarks: Wire::dec(d)?,
+                generation: d.u64()?,
+            },
             22 => BootstrapAck,
-            23 => MatchmakersActivated { matchmakers: Wire::dec(d)? },
+            23 => MatchmakersActivated { generation: d.u64()?, matchmakers: Wire::dec(d)? },
             24 => MetaPhase1A { round: Round::dec(d)?, generation: d.u64()? },
             25 => MetaPhase1B { round: Round::dec(d)?, vr: Wire::dec(d)?, vv: Wire::dec(d)? },
             26 => MetaPhase2A { round: Round::dec(d)?, generation: d.u64()?, matchmakers: Wire::dec(d)? },
@@ -600,10 +622,16 @@ pub fn sample_messages() -> Vec<Msg> {
             p2: vec![[2usize, 3].into_iter().collect()],
         },
     });
+    // Multi-group matchmaker state: group 0 busy, group 5 with one entry.
+    let mut mm_log = BTreeMap::new();
+    mm_log.insert(0u32, log.clone());
+    mm_log.insert(5u32, [(r0, cfg.clone())].into_iter().collect());
+    let mut gc_wms = BTreeMap::new();
+    gc_wms.insert(0u32, r0);
     vec![
-        MatchA { round: r0, config: cfg.clone() },
-        MatchB { round: r1, gc_watermark: Some(r0), prior: log.clone() },
-        MatchNack { round: r0, blocking: r1 },
+        MatchA { group: 1, round: r0, config: cfg.clone() },
+        MatchB { group: 1, round: r1, gc_watermark: Some(r0), prior: log.clone() },
+        MatchNack { group: 2, round: r0, blocking: r1 },
         Phase1A { round: r1, from_slot: 17 },
         Phase1B {
             round: r1,
@@ -626,16 +654,16 @@ pub fn sample_messages() -> Vec<Msg> {
         PrefixAck { round: r1, upto: 4 },
         ReadPrefix { from: 0 },
         PrefixResp { entries: vec![(0, Value::Noop)], upto: 1 },
-        GarbageA { round: r1 },
-        GarbageB { round: r1 },
-        ClientRequest { cmd: cmd.clone(), lowest: 42 },
-        ClientReply { seq: 42, result: vec![9, 9] },
-        NotLeader { hint: Some(3) },
+        GarbageA { group: 3, round: r1 },
+        GarbageB { group: 3, round: r1 },
+        ClientRequest { group: 1, cmd: cmd.clone(), lowest: 42 },
+        ClientReply { group: 1, seq: 42, result: vec![9, 9] },
+        NotLeader { group: 2, hint: Some(3) },
         StopA,
-        StopB { log: log.clone(), gc_watermark: None },
-        Bootstrap { log, gc_watermark: Some(r1), generation: 3 },
+        StopB { log: mm_log.clone(), gc_watermarks: BTreeMap::new() },
+        Bootstrap { log: mm_log, gc_watermarks: gc_wms, generation: 3 },
         BootstrapAck,
-        MatchmakersActivated { matchmakers: vec![1, 2, 3] },
+        MatchmakersActivated { generation: 4, matchmakers: vec![1, 2, 3] },
         MetaPhase1A { round: r0, generation: 2 },
         MetaPhase1B { round: r0, vr: Some(r1), vv: Some(vec![7, 8]) },
         MetaPhase2A { round: r0, generation: 2, matchmakers: vec![7, 8, 9] },

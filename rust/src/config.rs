@@ -247,6 +247,61 @@ impl ClusterLayout {
         self.matchmaker_pool[..(2 * self.f + 1).min(self.matchmaker_pool.len())].to_vec()
     }
 
+    /// Validate that this layout can be partitioned into `shards`
+    /// independent consensus groups sharing the matchmaker pool: every
+    /// per-group role list must divide evenly and each group's share
+    /// must still satisfy the single-group minimums (`≥ f+1` proposers
+    /// and replicas, `≥ 2f+1` acceptors). Errors are descriptive, in the
+    /// style of [`crate::quorum::QuorumSpec::validate`], so a bad
+    /// `shards =` line fails loudly at load time.
+    pub fn validate_shards(&self, shards: usize) -> Result<(), String> {
+        if shards == 0 {
+            return Err("shards must be >= 1 (got 0; use 1 for an unsharded deployment)".into());
+        }
+        let check = |name: &str, len: usize, per_group_min: usize| -> Result<(), String> {
+            if len % shards != 0 {
+                return Err(format!(
+                    "{name} count {len} does not divide evenly into {shards} shard(s) \
+                     — each group needs its own {name} set"
+                ));
+            }
+            let per = len / shards;
+            if per < per_group_min {
+                return Err(format!(
+                    "{name} count {len} over {shards} shard(s) leaves {per} per group; \
+                     each group needs >= {per_group_min}"
+                ));
+            }
+            Ok(())
+        };
+        check("proposer", self.proposers.len(), self.f + 1)?;
+        check("acceptor", self.acceptor_pool.len(), 2 * self.f + 1)?;
+        check("replica", self.replicas.len(), self.f + 1)?;
+        // The matchmaker pool is shared, not partitioned: the
+        // single-group minimum (checked by `validate`) is all that is
+        // required regardless of shard count (§6).
+        Ok(())
+    }
+
+    /// Partition the layout into `shards` groups: contiguous equal
+    /// slices of the proposer/acceptor/replica lists, with the
+    /// matchmaker pool shared by all groups. Group `g` is the `g`'th
+    /// slice of each list.
+    pub fn partition(&self, shards: usize) -> Result<Vec<GroupLayout>, String> {
+        self.validate_shards(shards)?;
+        let slice = |ids: &[NodeId], g: usize| -> Vec<NodeId> {
+            let per = ids.len() / shards;
+            ids[g * per..(g + 1) * per].to_vec()
+        };
+        Ok((0..shards)
+            .map(|g| GroupLayout {
+                proposers: slice(&self.proposers, g),
+                acceptor_pool: slice(&self.acceptor_pool, g),
+                replicas: slice(&self.replicas, g),
+            })
+            .collect())
+    }
+
     /// The initial acceptor configuration (first `2f+1` of the pool,
     /// majority quorums).
     pub fn initial_config(&self) -> Configuration {
@@ -294,6 +349,19 @@ impl ClusterLayout {
     }
 }
 
+/// One consensus group's role slice of a sharded deployment (see
+/// [`ClusterLayout::partition`]). The matchmaker pool is deliberately
+/// absent: it is shared across all groups (§6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// The group's proposers (each runs the Leader role for this group).
+    pub proposers: Vec<NodeId>,
+    /// The group's private acceptor pool.
+    pub acceptor_pool: Vec<NodeId>,
+    /// The group's replicas.
+    pub replicas: Vec<NodeId>,
+}
+
 /// A full deployment description: layout + protocol flags + network
 /// addresses (for the TCP runtime). Serialized as a simple `key = value`
 /// text format for `repro run` (the build is dependency-free; no TOML
@@ -302,6 +370,12 @@ impl ClusterLayout {
 pub struct DeploymentConfig {
     /// Which node ids play which role.
     pub layout: ClusterLayout,
+    /// Number of independent consensus groups the proposer/acceptor/
+    /// replica lists are partitioned into (`shards =` line). All groups
+    /// share the matchmaker pool. `1` (the default) is the classic
+    /// unsharded deployment. Validated by
+    /// [`ClusterLayout::validate_shards`] at load time.
+    pub shards: usize,
     /// Protocol optimization flags + batching/snapshot knobs.
     pub opts: OptFlags,
     /// node id → "host:port" for the TCP runtime. Unused by the simulator.
@@ -338,6 +412,7 @@ impl DeploymentConfig {
     pub fn standard(f: usize, n_clients: usize) -> DeploymentConfig {
         DeploymentConfig {
             layout: ClusterLayout::standard(f, 2, n_clients),
+            shards: 1,
             opts: OptFlags::default(),
             addrs: Default::default(),
             state_machine: default_sm(),
@@ -356,6 +431,9 @@ impl DeploymentConfig {
         out.push_str(&format!("matchmaker_pool = {}\n", fmt_ids(&l.matchmaker_pool)));
         out.push_str(&format!("replicas = {}\n", fmt_ids(&l.replicas)));
         out.push_str(&format!("clients = {}\n", fmt_ids(&l.clients)));
+        if self.shards != 1 {
+            out.push_str(&format!("shards = {}\n", self.shards));
+        }
         out.push_str(&format!("state_machine = {}\n", self.state_machine));
         let o = &self.opts;
         out.push_str(&format!(
@@ -394,6 +472,9 @@ impl DeploymentConfig {
             ",payload_bytes:{payload_bytes},resend_ms:{}",
             w.resend_after / MS
         ));
+        if w.keys != 1024 {
+            wl.push_str(&format!(",keys:{}", w.keys));
+        }
         if w.start_at != 0 {
             wl.push_str(&format!(",start_ms:{}", w.start_at / MS));
         }
@@ -420,6 +501,7 @@ impl DeploymentConfig {
                 replicas: vec![],
                 clients: vec![],
             },
+            shards: 1,
             opts: OptFlags::default(),
             addrs: Default::default(),
             state_machine: default_sm(),
@@ -441,6 +523,9 @@ impl DeploymentConfig {
                 "matchmaker_pool" => cfg.layout.matchmaker_pool = parse_ids(value)?,
                 "replicas" => cfg.layout.replicas = parse_ids(value)?,
                 "clients" => cfg.layout.clients = parse_ids(value)?,
+                "shards" => {
+                    cfg.shards = value.parse().map_err(|e| format!("shards: {e}"))?
+                }
                 "state_machine" => cfg.state_machine = value.to_string(),
                 "opts" => {
                     for part in value.split(',') {
@@ -526,6 +611,7 @@ impl DeploymentConfig {
                     let mut resend_ms: u64 = 100;
                     let mut start_ms: u64 = 0;
                     let mut stop_ms: Option<u64> = None;
+                    let mut keys: u64 = 1024;
                     for part in value.split(',') {
                         let (k, v) = part
                             .split_once(':')
@@ -576,6 +662,12 @@ impl DeploymentConfig {
                                     v.parse().map_err(|e| format!("workload stop_ms: {e}"))?,
                                 )
                             }
+                            "keys" => {
+                                keys = v.parse().map_err(|e| format!("workload keys: {e}"))?;
+                                if keys == 0 {
+                                    return Err("workload keys must be >= 1".into());
+                                }
+                            }
                             other => return Err(format!("unknown workload key {other:?}")),
                         }
                     }
@@ -609,6 +701,7 @@ impl DeploymentConfig {
                         start_at: start_ms * MS,
                         stop_at: stop_ms.map_or(u64::MAX, |s| s * MS),
                         resend_after: resend_ms.max(1) * MS,
+                        keys,
                     };
                 }
                 k if k.starts_with("addr.") => {
@@ -621,6 +714,7 @@ impl DeploymentConfig {
             }
         }
         cfg.layout.validate()?;
+        cfg.layout.validate_shards(cfg.shards)?;
         Ok(cfg)
     }
 }
@@ -818,6 +912,103 @@ mod tests {
             "{base}snapshot = interval_us:0\n"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn shards_validation_descriptive_errors() {
+        // Satellite fix: shard-count validation in the style of
+        // quorum::validate — loud, descriptive, at load time.
+        let l = ClusterLayout::standard(1, 2, 4); // 2 proposers, 6 acc, 3 rep
+        assert!(l.validate_shards(1).is_ok());
+        // 0 shards: rejected with a hint.
+        let err = l.validate_shards(0).unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        // 2 shards over the standard layout: 2 proposers / 2 shards = 1
+        // per group < f+1 (proposers are checked first).
+        let err = l.validate_shards(2).unwrap_err();
+        assert!(err.contains("proposer") && err.contains(">= 2"), "{err}");
+        // With enough proposers/acceptors, the 3 replicas still don't
+        // divide into 2 groups: a divisibility error naming the role.
+        let mut odd = ClusterLayout::standard(1, 2, 4);
+        odd.proposers = (100..104).collect();
+        odd.acceptor_pool = (104..116).collect();
+        let err = odd.validate_shards(2).unwrap_err();
+        assert!(err.contains("replica") && err.contains("divide"), "{err}");
+    }
+
+    #[test]
+    fn partition_slices_roles_per_group() {
+        // A 2-shard-capable layout: double every per-group role list.
+        let mut l = ClusterLayout::standard(1, 2, 4);
+        l.proposers = (0..4).collect();
+        l.acceptor_pool = (4..16).collect();
+        l.replicas = (16..22).collect();
+        l.matchmaker_pool = (22..28).collect();
+        l.clients = (28..32).collect();
+        l.validate().unwrap();
+        let groups = l.partition(2).unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].proposers, vec![0, 1]);
+        assert_eq!(groups[1].proposers, vec![2, 3]);
+        assert_eq!(groups[0].acceptor_pool.len(), 6);
+        assert_eq!(groups[1].acceptor_pool, (10..16).collect::<Vec<_>>());
+        assert_eq!(groups[0].replicas, (16..19).collect::<Vec<_>>());
+        assert_eq!(groups[1].replicas, (19..22).collect::<Vec<_>>());
+        // Groups are disjoint.
+        for a in &groups[0].proposers {
+            assert!(!groups[1].proposers.contains(a));
+        }
+        assert!(l.partition(3).is_err());
+    }
+
+    #[test]
+    fn text_config_shards_knob() {
+        let base = DeploymentConfig::standard(1, 2);
+        // Default: no shards line emitted; parses back to 1.
+        let text = base.to_text();
+        assert!(!text.contains("shards ="));
+        assert_eq!(DeploymentConfig::from_text(&text).unwrap().shards, 1);
+        // A shardable layout round-trips its shards line.
+        let mut cfg = DeploymentConfig::standard(1, 2);
+        cfg.shards = 2;
+        cfg.layout.proposers = (0..4).collect();
+        cfg.layout.acceptor_pool = (4..16).collect();
+        cfg.layout.matchmaker_pool = (16..22).collect();
+        cfg.layout.replicas = (22..28).collect();
+        cfg.layout.clients = (28..30).collect();
+        let text = cfg.to_text();
+        assert!(text.contains("shards = 2"));
+        let back = DeploymentConfig::from_text(&text).unwrap();
+        assert_eq!(back.shards, 2);
+        // The standard (indivisible) layout with shards = 2 is rejected
+        // at load time with a descriptive error.
+        let bad = format!("{}shards = 2\n", base.to_text());
+        let err = DeploymentConfig::from_text(&bad).unwrap_err();
+        assert!(err.contains("divide") || err.contains("needs"), "{err}");
+        // shards = 0 likewise.
+        let zero = format!("{}shards = 0\n", base.to_text());
+        assert!(DeploymentConfig::from_text(&zero).is_err());
+    }
+
+    #[test]
+    fn text_config_workload_keys_knob() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:closed,window:2,keys:64\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.workload.keys, 64);
+        // Default key space when unspecified; zero rejected.
+        assert_eq!(DeploymentConfig::from_text(&base).unwrap().workload.keys, 1024);
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:closed,keys:0\n"
+        ))
+        .is_err());
+        // Non-default key spaces round-trip through to_text.
+        let mut cfg = DeploymentConfig::standard(1, 1);
+        cfg.workload = WorkloadSpec::closed_loop().keys(77);
+        let back = DeploymentConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.workload.keys, 77);
     }
 
     #[test]

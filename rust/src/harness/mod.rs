@@ -32,16 +32,18 @@
 pub mod experiments;
 pub mod report;
 
-use crate::config::{ClusterLayout, Configuration, OptFlags};
+use crate::config::{ClusterLayout, Configuration, GroupLayout, OptFlags};
 use crate::metrics::{merge_samples, RetentionSummary, Sample};
 use crate::node::Announce;
-use crate::roles::{Acceptor, Client, HorizontalLeader, Leader, Matchmaker, Replica};
+use crate::roles::{
+    Acceptor, Client, HorizontalLeader, Leader, Matchmaker, Replica, ShardClient,
+};
 use crate::round::Round;
 use crate::sim::{NetworkModel, Sim};
 use crate::statemachine::Noop;
 use crate::util::Rng;
 use crate::workload::WorkloadSpec;
-use crate::{NodeId, Time, MS, SEC};
+use crate::{GroupId, NodeId, Time, MS, SEC};
 
 /// A simulated Matchmaker MultiPaxos cluster.
 pub struct Cluster {
@@ -251,7 +253,7 @@ impl Cluster {
                 _ => None,
             });
             let retired = self.sim.announces.iter().find_map(|(t, _, a)| match a {
-                Announce::ConfigRetired { round: r } if *r == round => Some(*t),
+                Announce::ConfigRetired { round: r, .. } if *r == round => Some(*t),
                 _ => None,
             });
             if let Some(ta) = active {
@@ -290,6 +292,289 @@ impl Cluster {
             }
         }
         out
+    }
+}
+
+/// A sharded multi-group Matchmaker MultiPaxos deployment in the
+/// simulator: N independent consensus groups — each with its own leader
+/// (`f+1` proposers), acceptor pool, and `2f+1` replicas — sharing **one
+/// matchmaker set** (§6: a single matchmaker set serves many protocol
+/// instances). Clients are [`ShardClient`]s that hash every key to its
+/// home group, so the deployment scales command throughput with the
+/// group count while reconfigurations of any group flow through the
+/// same shared matchmakers (whose log is keyed `(group, round)` with
+/// per-group GC).
+pub struct ShardedCluster {
+    pub sim: Sim,
+    pub f: usize,
+    pub opts: OptFlags,
+    /// The workload every client runs (in-flight/rate bounds are per
+    /// client, spread across groups by key hash).
+    pub workload: WorkloadSpec,
+    /// The shared matchmaker pool (first `2f+1` active).
+    pub matchmaker_pool: Vec<NodeId>,
+    /// Per-group role slices, indexed by [`GroupId`].
+    pub groups: Vec<GroupLayout>,
+    /// Shard-routing client ids.
+    pub clients: Vec<NodeId>,
+    rng: Rng,
+}
+
+/// Builder for [`ShardedCluster`]; the single-group defaults mirror
+/// [`ClusterBuilder`], with `shards(n)` multiplying the per-group roles.
+#[derive(Clone, Debug)]
+pub struct ShardedClusterBuilder {
+    shards: usize,
+    f: usize,
+    clients: usize,
+    workload: WorkloadSpec,
+    opts: OptFlags,
+    seed: u64,
+    net: NetworkModel,
+    pool_factor: usize,
+}
+
+impl Default for ShardedClusterBuilder {
+    fn default() -> Self {
+        ShardedClusterBuilder {
+            shards: 1,
+            f: 1,
+            clients: 4,
+            workload: WorkloadSpec::closed_loop(),
+            opts: OptFlags::default(),
+            seed: 42,
+            net: NetworkModel::lan(),
+            pool_factor: 2,
+        }
+    }
+}
+
+impl ShardedClusterBuilder {
+    /// Number of independent consensus groups (≥ 1).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Fault-tolerance parameter (per group).
+    pub fn f(mut self, f: usize) -> Self {
+        self.f = f;
+        self
+    }
+
+    /// Number of shard-routing workload clients.
+    pub fn clients(mut self, n: usize) -> Self {
+        self.clients = n;
+        self
+    }
+
+    /// The workload every client runs.
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+
+    /// Protocol optimization flags (applied to every group's leader).
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Simulation seed (identical seeds give bit-identical runs).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Network model (default [`NetworkModel::lan`]).
+    pub fn net(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Per-group acceptor-pool size factor (default 2).
+    pub fn pool_factor(mut self, k: usize) -> Self {
+        self.pool_factor = k.max(1);
+        self
+    }
+
+    /// Build and start the cluster: one shared matchmaker pool, then per
+    /// group its proposers/acceptors/replicas, then the clients. Every
+    /// group's first proposer self-elects at start.
+    pub fn build(self) -> ShardedCluster {
+        let ShardedClusterBuilder { shards, f, clients, workload, opts, seed, net, pool_factor } =
+            self;
+        let mut sim = Sim::new(seed, net);
+        let mut next: NodeId = 0;
+        let mut take = |n: usize| -> Vec<NodeId> {
+            let ids: Vec<NodeId> = (next..next + n as NodeId).collect();
+            next += n as NodeId;
+            ids
+        };
+        let matchmaker_pool = take(pool_factor * (2 * f + 1));
+        let groups: Vec<GroupLayout> = (0..shards)
+            .map(|_| GroupLayout {
+                proposers: take(f + 1),
+                acceptor_pool: take(pool_factor * (2 * f + 1)),
+                replicas: take(2 * f + 1),
+            })
+            .collect();
+        let client_ids = take(clients);
+        let active_mms = matchmaker_pool[..2 * f + 1].to_vec();
+
+        // Shared matchmakers: first 2f+1 active, rest standby (§6 pool).
+        for (i, &m) in matchmaker_pool.iter().enumerate() {
+            if i < active_mms.len() {
+                sim.add_node(m, Box::new(Matchmaker::new(m)));
+            } else {
+                sim.add_node(m, Box::new(Matchmaker::new_standby(m)));
+            }
+        }
+        for (g, layout) in groups.iter().enumerate() {
+            let g = g as GroupId;
+            for &a in &layout.acceptor_pool {
+                sim.add_node(a, Box::new(Acceptor::new(a)));
+            }
+            for &r in &layout.replicas {
+                let mut rep = Replica::new(r, Box::new(Noop));
+                rep.group = g;
+                rep.snapshot = opts.snapshot;
+                rep.peers = layout.replicas.clone();
+                sim.add_node(r, Box::new(rep));
+            }
+            let initial_cfg =
+                Configuration::majority(0, layout.acceptor_pool[..2 * f + 1].to_vec());
+            for &p in &layout.proposers {
+                let mut leader = Leader::new(
+                    p,
+                    f,
+                    initial_cfg.clone(),
+                    active_mms.clone(),
+                    layout.replicas.clone(),
+                    layout.proposers.clone(),
+                    opts,
+                    seed,
+                );
+                leader.group = g;
+                sim.add_node(p, Box::new(leader));
+            }
+        }
+        let proposer_lists: Vec<Vec<NodeId>> =
+            groups.iter().map(|gl| gl.proposers.clone()).collect();
+        for &c in &client_ids {
+            sim.add_node(
+                c,
+                Box::new(ShardClient::new(c, proposer_lists.clone(), workload.clone())),
+            );
+        }
+        ShardedCluster {
+            sim,
+            f,
+            opts,
+            workload,
+            matchmaker_pool,
+            groups,
+            clients: client_ids,
+            rng: Rng::new(seed ^ 0x5aa2d),
+        }
+    }
+}
+
+impl ShardedCluster {
+    /// Start describing a sharded cluster (see [`ShardedClusterBuilder`]).
+    pub fn builder() -> ShardedClusterBuilder {
+        ShardedClusterBuilder::default()
+    }
+
+    /// Number of consensus groups.
+    pub fn shards(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The initially active matchmakers (first `2f+1` of the pool).
+    pub fn active_matchmakers(&self) -> Vec<NodeId> {
+        self.matchmaker_pool[..2 * self.f + 1].to_vec()
+    }
+
+    /// Group `g`'s initial (self-elected) leader.
+    pub fn group_leader(&self, g: usize) -> NodeId {
+        self.groups[g].proposers[0]
+    }
+
+    /// Draw a random configuration of `2f+1` acceptors from group `g`'s
+    /// pool, with a fresh config id.
+    pub fn random_config(&mut self, g: usize, id: u64) -> Configuration {
+        let acceptors = self.rng.sample(&self.groups[g].acceptor_pool, 2 * self.f + 1);
+        Configuration::majority(id, acceptors)
+    }
+
+    /// Harvest all client samples, merged and sorted by completion time.
+    pub fn samples(&mut self) -> Vec<Sample> {
+        let clients = self.clients.clone();
+        let mut per_client = Vec::with_capacity(clients.len());
+        for c in clients {
+            let samples = self
+                .sim
+                .node_mut::<ShardClient>(c)
+                .map(|cl| std::mem::take(&mut cl.samples))
+                .unwrap_or_default();
+            per_client.push(samples);
+        }
+        merge_samples(per_client)
+    }
+
+    /// Sum the clients' workload counters: `(offered, completed,
+    /// abandoned)`.
+    pub fn workload_totals(&mut self) -> (u64, u64, u64) {
+        let clients = self.clients.clone();
+        let (mut offered, mut completed, mut abandoned) = (0u64, 0u64, 0u64);
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<ShardClient>(c) {
+                offered += cl.offered;
+                completed += cl.completed;
+                abandoned += cl.abandoned;
+            }
+        }
+        (offered, completed, abandoned)
+    }
+
+    /// Chosen-command completion times for one group, from the announce
+    /// stream: one entry per client command (batches flattened),
+    /// deduplicated by slot. The per-group throughput series the X6
+    /// experiment windows over.
+    pub fn group_chosen_times(&self, g: GroupId) -> Vec<Time> {
+        let mut seen_slots = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        for (t, _, a) in &self.sim.announces {
+            if let Announce::Chosen { group, slot, value, .. } = a {
+                if *group != g || !seen_slots.insert(*slot) {
+                    continue;
+                }
+                let n = match value {
+                    crate::msg::Value::Cmd(_) => 1,
+                    crate::msg::Value::Batch(cmds) => cmds.len(),
+                    _ => 0,
+                };
+                out.extend(std::iter::repeat(*t).take(n));
+            }
+        }
+        out
+    }
+
+    /// Retained matchmaker-log sizes `(matchmaker, total entries across
+    /// groups)` for the active set — the shared-matchmaker memory bound.
+    pub fn matchmaker_log_lens(&mut self) -> Vec<(NodeId, usize)> {
+        let mms = self.active_matchmakers();
+        mms.into_iter()
+            .filter_map(|m| {
+                self.sim.node_mut::<Matchmaker>(m).map(|mm| (m, mm.total_log_len()))
+            })
+            .collect()
+    }
+
+    /// Assert the per-group chosen-safety invariant.
+    pub fn assert_safe(&self) {
+        self.sim.check_chosen_safety().expect("chosen-safety invariant");
     }
 }
 
@@ -495,6 +780,145 @@ mod tests {
             piped as f64 >= 3.0 * closed as f64,
             "pipelining gained only {piped} vs {closed}"
         );
+    }
+
+    #[test]
+    fn sharded_cluster_serves_commands_across_groups() {
+        let mut c = ShardedCluster::builder()
+            .shards(2)
+            .clients(4)
+            .workload(WorkloadSpec::pipelined(4))
+            .seed(42)
+            .build();
+        c.sim.run_until(secs(1));
+        c.assert_safe();
+        let samples = c.samples();
+        assert!(samples.len() > 200, "got {} samples", samples.len());
+        // Both groups chose commands (keys hash to both).
+        for g in 0..2 {
+            let chosen = c.group_chosen_times(g).len();
+            assert!(chosen > 50, "group {g} chose only {chosen} commands");
+        }
+    }
+
+    #[test]
+    fn sharded_single_group_matches_unsharded_shape() {
+        // shards(1) must behave like a plain cluster: same roles, same
+        // safety, commands flow.
+        let mut c = ShardedCluster::builder().shards(1).clients(2).seed(7).build();
+        c.sim.run_until(msec(500));
+        c.assert_safe();
+        assert!(!c.samples().is_empty());
+        assert_eq!(c.shards(), 1);
+    }
+
+    #[test]
+    fn sharded_group_reconfigures_independently() {
+        let mut c = ShardedCluster::builder()
+            .shards(2)
+            .clients(4)
+            .workload(WorkloadSpec::pipelined(4))
+            .seed(11)
+            .build();
+        let leader0 = c.group_leader(0);
+        let cfg = c.random_config(0, 1);
+        c.sim.schedule(msec(400), move |s| {
+            s.with_node::<Leader, _>(leader0, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+        c.sim.run_until(secs(1));
+        c.assert_safe();
+        // Group 0 reconfigured (startup + ours); group 1 only started.
+        let l0 = c.sim.node_mut::<Leader>(leader0).unwrap();
+        assert!(l0.reconfigs_completed >= 2);
+        assert!(l0.gc_completed >= 1);
+        let leader1 = c.group_leader(1);
+        let l1 = c.sim.node_mut::<Leader>(leader1).unwrap();
+        assert_eq!(l1.reconfigs_completed, 1);
+        // The shared matchmaker log holds one live entry per group after
+        // GC (the retired group-0 round was collected).
+        for (m, len) in c.matchmaker_log_lens() {
+            assert!(len <= 3, "matchmaker {m} log holds {len} entries");
+        }
+        // Both groups kept serving.
+        for g in 0..2 {
+            assert!(!c.group_chosen_times(g).is_empty(), "group {g} starved");
+        }
+    }
+
+    #[test]
+    fn sharded_matchmaker_set_migration_serves_all_groups() {
+        // Group 0's leader migrates the shared matchmaker set (§6
+        // stop-and-copy carries every group's log); the control plane
+        // hands the new set to group 1's leaders; group 1 must then be
+        // able to reconfigure its acceptors against the *new* set —
+        // i.e. nobody is left matchmaking at the stopped old one.
+        let mut c = ShardedCluster::builder()
+            .shards(2)
+            .clients(4)
+            .workload(WorkloadSpec::pipelined(2))
+            .seed(13)
+            .build();
+        let leader0 = c.group_leader(0);
+        // Migrate to the standby half of the pool.
+        let new_set = c.matchmaker_pool[2 * c.f + 1..].to_vec();
+        assert_eq!(new_set.len(), 2 * c.f + 1);
+        let set_for_schedule = new_set.clone();
+        c.sim.schedule(msec(300), move |s| {
+            let mms = set_for_schedule.clone();
+            s.with_node::<Leader, _>(leader0, |l, now, fx| {
+                l.reconfigure_matchmakers(mms, now, fx)
+            });
+        });
+        // Control plane: propagate the chosen set to group 1's leaders
+        // (the §6 meta-Paxos completes in a few LAN round trips).
+        let group1 = c.groups[1].proposers.clone();
+        let set_for_group1 = new_set.clone();
+        c.sim.schedule(msec(600), move |s| {
+            for &p in &group1 {
+                s.with_node::<Leader, _>(p, |l, _, _| {
+                    l.set_matchmakers(set_for_group1.clone())
+                });
+            }
+        });
+        // Group 1 now reconfigures its acceptors through the new set.
+        let leader1 = c.group_leader(1);
+        let cfg = c.random_config(1, 7);
+        c.sim.schedule(msec(700), move |s| {
+            s.with_node::<Leader, _>(leader1, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+        c.sim.run_until(secs(2));
+        c.assert_safe();
+        // The migration completed...
+        assert!(c
+            .sim
+            .announces
+            .iter()
+            .any(|(_, _, a)| matches!(a, Announce::MatchmakersReconfigured { .. })));
+        let l0 = c.sim.node_mut::<Leader>(leader0).unwrap();
+        assert_eq!(l0.matchmakers, new_set);
+        // ... group 1's reconfiguration went through the new set (its
+        // GC ran there too), and both groups kept serving.
+        let l1 = c.sim.node_mut::<Leader>(leader1).unwrap();
+        assert_eq!(l1.matchmakers, new_set);
+        assert!(l1.reconfigs_completed >= 2, "group 1 stuck: {}", l1.reconfigs_completed);
+        assert!(l1.gc_completed >= 1);
+        for g in 0..2 {
+            let late = c
+                .group_chosen_times(g)
+                .iter()
+                .any(|&t| t > msec(1200));
+            assert!(late, "group {g} stopped serving after the migration");
+        }
+    }
+
+    #[test]
+    fn sharded_deterministic_same_seed() {
+        let run = |seed| {
+            let mut c = ShardedCluster::builder().shards(2).clients(2).seed(seed).build();
+            c.sim.run_until(msec(400));
+            (c.samples().len(), c.sim.delivered)
+        };
+        assert_eq!(run(9), run(9));
     }
 
     #[test]

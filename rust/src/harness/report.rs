@@ -199,6 +199,43 @@ impl RetentionReport {
     }
 }
 
+/// The X6 sharded scale-out experiment: aggregate and per-group
+/// chosen-command rates per shard count, with the reconfiguration-
+/// perturbation and shared-matchmaker-log columns.
+#[derive(Debug, Default)]
+pub struct ShardReport {
+    pub id: String,
+    pub title: String,
+    /// `(shards, offered/s, aggregate chosen/s, min unperturbed ratio,
+    /// max matchmaker log entries)` — one row per shard count.
+    pub rows: Vec<(usize, f64, f64, f64, usize)>,
+    /// Per-group breakdown: one labeled series per shard count.
+    pub groups: Vec<(String, Vec<crate::metrics::GroupSummary>)>,
+    pub notes: Vec<String>,
+}
+
+impl ShardReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        let _ = writeln!(out, "shards\toffered/s\tchosen/s\tunperturbed\tmax_mm_log");
+        for (shards, offered, agg, unpert, mm) in &self.rows {
+            let _ = writeln!(out, "{shards}\t{offered:.0}\t{agg:.0}\t{unpert:.2}\t{mm}");
+        }
+        for (label, groups) in &self.groups {
+            let _ = writeln!(out, "--- per-group: {label} ---");
+            let _ = writeln!(out, "group\tchosen\tchosen/s");
+            for g in groups {
+                let _ = writeln!(out, "{}\t{}\t{:.0}", g.group, g.chosen, g.chosen_per_sec);
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
 /// Violin-plot data (Figures 12/13): distribution quartiles per window.
 #[derive(Debug, Default)]
 pub struct ViolinReport {
@@ -292,6 +329,26 @@ mod tests {
         assert!(text.contains("8192"));
         assert!(text.contains("0xabcd"));
         assert!(text.contains("note: bounded"));
+    }
+
+    #[test]
+    fn shard_report_renders() {
+        use crate::metrics::GroupSummary;
+        let r = ShardReport {
+            id: "X6".into(),
+            title: "scale-out".into(),
+            rows: vec![(4, 16000.0, 15000.0, 0.97, 5)],
+            groups: vec![(
+                "4 groups".into(),
+                vec![GroupSummary { group: 0, chosen: 9000, chosen_per_sec: 3750.0 }],
+            )],
+            notes: vec!["scales".into()],
+        };
+        let text = r.render();
+        assert!(text.contains("unperturbed"));
+        assert!(text.contains("15000"));
+        assert!(text.contains("3750"));
+        assert!(text.contains("note: scales"));
     }
 
     #[test]

@@ -11,12 +11,12 @@
 //! * `repro smoke` — runtime smoke test: load + execute the AOT artifacts.
 
 use anyhow::{Context, Result};
-use matchmaker::config::DeploymentConfig;
+use matchmaker::config::{Configuration, DeploymentConfig};
 use matchmaker::harness::experiments as exp;
-use matchmaker::roles::{Acceptor, Client, Leader, Matchmaker, Replica};
+use matchmaker::roles::{Acceptor, Client, Leader, Matchmaker, Replica, ShardClient};
 use matchmaker::statemachine;
 use matchmaker::workload::WorkloadSpec;
-use matchmaker::NodeId;
+use matchmaker::{GroupId, NodeId};
 
 /// Minimal flag parser: `--key value` pairs after positional args.
 struct Args {
@@ -66,7 +66,7 @@ impl Args {
 }
 
 const USAGE: &str = "usage:
-  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 all)
+  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 all)
   repro run --role R --id N --config FILE [--duration SECS]
       client role workload flags (override the config's `workload =` line):
         --workload closed|pipelined|open|open-poisson
@@ -149,6 +149,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x3" | "batch" => print!("{}", exp::batching_figure(seed).render()),
         "x4" | "openloop" => print!("{}", exp::open_loop_figure(seed).render()),
         "x5" | "retention" => print!("{}", exp::retention_figure(seed).render()),
+        "x6" | "shards" => print!("{}", exp::sharding_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -213,6 +214,17 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
         .with_context(|| format!("read {config_path}"))?;
     let cfg = DeploymentConfig::from_text(&text).map_err(|e| anyhow::anyhow!(e))?;
     let layout = cfg.layout.clone();
+    // Sharded deployments (`shards = N`): the proposer/acceptor/replica
+    // lists partition into N groups sharing the matchmaker pool; each
+    // group-scoped role finds its slice by its node id.
+    let groups = layout.partition(cfg.shards).map_err(|e| anyhow::anyhow!(e))?;
+    let group_of = |ids: fn(&matchmaker::config::GroupLayout) -> &Vec<NodeId>| {
+        groups
+            .iter()
+            .enumerate()
+            .find(|(_, gl)| ids(gl).contains(&id))
+            .map(|(g, gl)| (g as GroupId, gl.clone()))
+    };
     let node: Box<dyn matchmaker::Node> = match role {
         "acceptor" => Box::new(Acceptor::new(id)),
         "matchmaker" => {
@@ -226,24 +238,41 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
                 statemachine::by_name(&cfg.state_machine)
                     .context("unknown state machine (noop|kv|register|counter|tensor)")?
             };
+            let (group, gl) = group_of(|gl| &gl.replicas)
+                .with_context(|| format!("node {id} is not a replica in the config"))?;
             let mut rep = Replica::new(id, sm);
+            rep.group = group;
             rep.snapshot = cfg.opts.snapshot;
-            rep.peers = layout.replicas.clone();
+            rep.peers = gl.replicas.clone();
             Box::new(rep)
         }
-        "proposer" => Box::new(Leader::new(
-            id,
-            layout.f,
-            layout.initial_config(),
-            layout.initial_matchmakers(),
-            layout.replicas.clone(),
-            layout.proposers.clone(),
-            cfg.opts,
-            id as u64,
-        )),
+        "proposer" => {
+            let (group, gl) = group_of(|gl| &gl.proposers)
+                .with_context(|| format!("node {id} is not a proposer in the config"))?;
+            let initial =
+                Configuration::majority(0, gl.acceptor_pool[..2 * layout.f + 1].to_vec());
+            let mut leader = Leader::new(
+                id,
+                layout.f,
+                initial,
+                layout.initial_matchmakers(),
+                gl.replicas.clone(),
+                gl.proposers.clone(),
+                cfg.opts,
+                id as u64,
+            );
+            leader.group = group;
+            Box::new(leader)
+        }
         "client" => {
             let spec = client_workload(&cfg, args)?;
-            Box::new(Client::new(id, layout.proposers.clone(), spec))
+            if cfg.shards > 1 {
+                let proposer_lists: Vec<Vec<NodeId>> =
+                    groups.iter().map(|gl| gl.proposers.clone()).collect();
+                Box::new(ShardClient::new(id, proposer_lists, spec))
+            } else {
+                Box::new(Client::new(id, layout.proposers.clone(), spec))
+            }
         }
         other => anyhow::bail!("unknown role: {other}"),
     };

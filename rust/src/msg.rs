@@ -10,8 +10,14 @@
 
 use crate::config::Configuration;
 use crate::round::Round;
-use crate::{NodeId, Slot};
+use crate::{GroupId, NodeId, Slot};
 use std::collections::BTreeMap;
+
+/// A shared matchmaker's full configuration log: per consensus group, the
+/// configurations indexed by round (§6: one matchmaker set serves many
+/// groups; entries are keyed by `(group, round)`). Carried whole by the
+/// matchmaker-reconfiguration messages ([`Msg::StopB`], [`Msg::Bootstrap`]).
+pub type MmLog = BTreeMap<GroupId, BTreeMap<Round, Configuration>>;
 
 /// A client command: identified by `(client, seq)` so replicas can
 /// deduplicate retries, carrying an opaque payload interpreted by the
@@ -67,20 +73,25 @@ pub struct SlotVote {
 #[derive(Clone, PartialEq, Debug)]
 pub enum Msg {
     // ---- Matchmaking phase (§3.2, Algorithm 1; §5, Algorithm 4) ----
-    /// Proposer → matchmaker: "I am starting round `round` with
-    /// configuration `config`".
-    MatchA { round: Round, config: Configuration },
-    /// Matchmaker → proposer: prior configurations (`H_i`) plus the
-    /// matchmaker's GC watermark (§5: rounds `< gc_watermark` are retired).
+    /// Proposer → matchmaker: "group `group` is starting round `round`
+    /// with configuration `config`". Matchmakers are shared across
+    /// consensus groups (§6), so every matchmaking message names its
+    /// group; single-group deployments use group 0.
+    MatchA { group: GroupId, round: Round, config: Configuration },
+    /// Matchmaker → proposer: the group's prior configurations (`H_i`)
+    /// plus the group's GC watermark (§5: rounds `< gc_watermark` are
+    /// retired).
     MatchB {
+        group: GroupId,
         round: Round,
         gc_watermark: Option<Round>,
         prior: BTreeMap<Round, Configuration>,
     },
-    /// Matchmaker → proposer: the MatchA was refused (a configuration
-    /// exists for a round ≥ `round`, or `round` is below the GC watermark).
-    /// Carries the blocking round so the proposer can jump past it.
-    MatchNack { round: Round, blocking: Round },
+    /// Matchmaker → proposer: the MatchA was refused (the group's log
+    /// holds a configuration for a round ≥ `round`, or `round` is below
+    /// the group's GC watermark). Carries the blocking round so the
+    /// proposer can jump past it.
+    MatchNack { group: GroupId, round: Round, blocking: Round },
 
     // ---- Phase 1 (classic Paxos over possibly-many configurations) ----
     /// One Phase1A covers every slot ≥ `from_slot` (MultiPaxos bulk
@@ -121,8 +132,11 @@ pub enum Msg {
     PrefixResp { entries: Vec<(Slot, Value)>, upto: Slot },
 
     // ---- Garbage collection (§5, Algorithm 4) ----
-    GarbageA { round: Round },
-    GarbageB { round: Round },
+    /// Leader → matchmakers: retire the group's configurations below
+    /// `round`. GC is per group: a quiet group's entries never pin — and
+    /// are never collateral damage of — a busy group's GC.
+    GarbageA { group: GroupId, round: Round },
+    GarbageB { group: GroupId, round: Round },
 
     // ---- State retention: snapshot transfer & log truncation ----
     /// Leader → lagging replica: "slots below `below` are truncated from
@@ -139,37 +153,51 @@ pub enum Msg {
     SnapshotResp { base: Slot, state: Vec<u8>, entries: Vec<(Slot, Value)> },
 
     // ---- Client path ----
-    /// Client → leader. `lowest` is the client's oldest in-flight seq:
-    /// every seq below it has been acknowledged back to the client. The
-    /// leader's per-client sequencer uses it to admit pipelined requests
-    /// in FIFO order across network reordering and leader changes
-    /// (seqs `< lowest` are settled; seqs `≥ lowest` are admitted in
-    /// contiguous order).
-    ClientRequest { cmd: Command, lowest: u64 },
-    /// Replica → client: result of executing the command.
-    ClientReply { seq: u64, result: Vec<u8> },
-    /// Any node → client/other: "I am not the leader; try `hint`".
-    NotLeader { hint: Option<NodeId> },
+    /// Client → leader. `group` names the consensus group the command is
+    /// routed to (the shard router hashes the key; single-group clients
+    /// send 0). `lowest` is the client's oldest in-flight seq *in that
+    /// group's lane*: every seq below it has been acknowledged back to
+    /// the client. The leader's per-client sequencer uses it to admit
+    /// pipelined requests in FIFO order across network reordering and
+    /// leader changes (seqs `< lowest` are settled; seqs `≥ lowest` are
+    /// admitted in contiguous order). Sharded clients keep an
+    /// independent, contiguous seq stream per group, so per-group FIFO
+    /// admission is preserved shard-locally.
+    ClientRequest { group: GroupId, cmd: Command, lowest: u64 },
+    /// Replica → client: result of executing the command. Tagged with the
+    /// replica's group so a shard router can route the reply to the
+    /// right per-group lane (seq spaces are per-lane).
+    ClientReply { group: GroupId, seq: u64, result: Vec<u8> },
+    /// Any node → client/other: "I am not this group's leader; try
+    /// `hint`".
+    NotLeader { group: GroupId, hint: Option<NodeId> },
 
     // ---- Matchmaker reconfiguration (§6) ----
     /// Reconfigurer → old matchmakers: stop processing and dump state.
     StopA,
-    /// Old matchmaker → reconfigurer: final log + GC watermark.
+    /// Old matchmaker → reconfigurer: final multi-group log + per-group
+    /// GC watermarks (groups absent from the map have no watermark).
     StopB {
-        log: BTreeMap<Round, Configuration>,
-        gc_watermark: Option<Round>,
+        log: MmLog,
+        gc_watermarks: BTreeMap<GroupId, Round>,
     },
-    /// Reconfigurer → new matchmakers: initial state (merged logs) plus
-    /// the new set's generation number (see the meta-Paxos note below).
+    /// Reconfigurer → new matchmakers: initial state (merged multi-group
+    /// logs) plus the new set's generation number (see the meta-Paxos
+    /// note below).
     Bootstrap {
-        log: BTreeMap<Round, Configuration>,
-        gc_watermark: Option<Round>,
+        log: MmLog,
+        gc_watermarks: BTreeMap<GroupId, Round>,
         generation: u64,
     },
     BootstrapAck,
-    /// Reconfigurer → new matchmakers: the meta-Paxos below chose this set;
-    /// start serving.
-    MatchmakersActivated { matchmakers: Vec<NodeId> },
+    /// Reconfigurer → new matchmakers (start serving) and → its follower
+    /// proposers (adopt the set, so a proposer elected mid-migration
+    /// does not keep matchmaking at the stopped old set). `generation`
+    /// is the chosen set's §6 generation: matchmakers activate only
+    /// their own generation, proposers adopt only strictly newer
+    /// generations — both reject stale re-deliveries from an earlier
+    /// migration.
+    MatchmakersActivated { generation: u64, matchmakers: Vec<NodeId> },
 
     // ---- Meta-Paxos choosing the new matchmaker set (§6): the old
     // matchmakers double as Paxos acceptors for the single value M_new.
@@ -279,6 +307,7 @@ mod tests {
         use crate::codec::Wire;
         let msgs = vec![
             Msg::MatchA {
+                group: 3,
                 round: Round::first(0, 1),
                 config: Configuration::majority(0, vec![2, 3, 4]),
             },
@@ -292,10 +321,11 @@ mod tests {
                 chosen_watermark: 3,
             },
             Msg::ClientRequest {
+                group: 2,
                 cmd: Command { client: 9, seq: 2, payload: vec![0xab] },
                 lowest: 1,
             },
-            Msg::StopB { log: BTreeMap::new(), gc_watermark: None },
+            Msg::StopB { log: BTreeMap::new(), gc_watermarks: BTreeMap::new() },
         ];
         for m in msgs {
             let back = Msg::decode(&m.encode()).unwrap();
@@ -306,7 +336,12 @@ mod tests {
     #[test]
     fn kind_classification() {
         assert_eq!(
-            Msg::MatchNack { round: Round::first(0, 0), blocking: Round::first(1, 0) }.kind(),
+            Msg::MatchNack {
+                group: 0,
+                round: Round::first(0, 0),
+                blocking: Round::first(1, 0)
+            }
+            .kind(),
             MsgKind::MatchB
         );
         assert_eq!(

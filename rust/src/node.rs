@@ -12,7 +12,7 @@
 
 use crate::msg::{Msg, Value};
 use crate::round::Round;
-use crate::{NodeId, Slot, Time};
+use crate::{GroupId, NodeId, Slot, Time};
 
 /// Timers a node can request. The driver calls [`Node::on_timer`] when one
 /// expires; a node distinguishes stale timers itself (via generation
@@ -45,6 +45,9 @@ pub enum Timer {
     /// survive a lost response even when no client traffic is flowing to
     /// trigger another `CatchUp` hint).
     CatchupRetry,
+    /// Shard router client: resend one in-flight request of a per-group
+    /// lane (seq spaces are per lane, so the group disambiguates).
+    ShardResend { group: GroupId, seq: u64, generation: u64 },
     /// Election: check whether the leader's heartbeats stopped.
     LeaderCheck,
     /// Generic scheduled wakeup used by harness-driven roles.
@@ -56,17 +59,19 @@ pub enum Timer {
 /// checking (at most one value chosen per slot).
 #[derive(Clone, PartialEq, Debug)]
 pub enum Announce {
-    /// A value was chosen in `slot` (leader-observed quorum of Phase2B).
-    Chosen { slot: Slot, round: Round, value: Value },
+    /// A value was chosen in `slot` of consensus group `group`
+    /// (leader-observed quorum of Phase2B). Slot numbers are per group:
+    /// safety is at-most-one value per `(group, slot)`.
+    Chosen { group: GroupId, slot: Slot, round: Round, value: Value },
     /// A replica executed `slot`, producing `result`.
     Executed { slot: Slot, replica: NodeId },
-    /// The leader finished matchmaking for `round`: the new configuration
-    /// is active (paper: "active within a millisecond").
-    ConfigActive { round: Round, config_id: u64 },
-    /// GarbageB quorum reached for `round`: all configurations below it are
-    /// retired and their acceptors may shut down (paper: "GC'd within five
-    /// milliseconds").
-    ConfigRetired { round: Round },
+    /// The group's leader finished matchmaking for `round`: the new
+    /// configuration is active (paper: "active within a millisecond").
+    ConfigActive { group: GroupId, round: Round, config_id: u64 },
+    /// GarbageB quorum reached for `round` in `group`: all of the group's
+    /// configurations below it are retired and their acceptors may shut
+    /// down (paper: "GC'd within five milliseconds").
+    ConfigRetired { group: GroupId, round: Round },
     /// A leader became steady (Phase 2) in `round`.
     LeaderSteady { round: Round },
     /// The matchmaker set was reconfigured (§6).

@@ -25,7 +25,7 @@ use crate::msg::{Command, Msg};
 use crate::node::{Effects, Node, Timer};
 use crate::util::Rng;
 use crate::workload::{WorkloadMode, WorkloadSpec};
-use crate::{NodeId, Time, MS, US};
+use crate::{GroupId, NodeId, Time, MS, US};
 use std::collections::{BTreeMap, VecDeque};
 
 /// `Timer::Wakeup` tag: delayed start (`WorkloadSpec::start_at`).
@@ -49,6 +49,11 @@ struct Outstanding {
 pub struct Client {
     /// This node's id (doubles as the `Command::client` identity).
     pub id: NodeId,
+    /// The consensus group this client's requests target (0 in
+    /// single-group deployments). Multi-group key-hash routing lives in
+    /// [`crate::roles::router::ShardClient`]; this role drives exactly
+    /// one group.
+    pub group: GroupId,
     /// Proposers, in fallback order; `leader_hint` indexes into this list.
     pub proposers: Vec<NodeId>,
     /// Index of the proposer currently believed to be leader.
@@ -92,6 +97,7 @@ impl Client {
         let payload = spec.payload.bytes_for(id);
         Client {
             id,
+            group: 0,
             proposers,
             leader_hint: 0,
             payload,
@@ -135,7 +141,7 @@ impl Client {
         self.outstanding.insert(seq, Outstanding { issued_at, generation: self.generation });
         let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
         let lowest = self.lowest_outstanding();
-        fx.send(self.leader(), Msg::ClientRequest { cmd, lowest });
+        fx.send(self.leader(), Msg::ClientRequest { group: self.group, cmd, lowest });
         fx.timer(
             self.spec.resend_after,
             Timer::ClientResend { seq, generation: self.generation },
@@ -160,7 +166,7 @@ impl Client {
         o.generation = generation;
         let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
         let lowest = self.lowest_outstanding();
-        fx.send(self.leader(), Msg::ClientRequest { cmd, lowest });
+        fx.send(self.leader(), Msg::ClientRequest { group: self.group, cmd, lowest });
         fx.timer(self.spec.resend_after, Timer::ClientResend { seq, generation });
     }
 
@@ -243,7 +249,7 @@ impl Node for Client {
                     }
                 }
             }
-            Msg::NotLeader { hint } => {
+            Msg::NotLeader { hint, .. } => {
                 if let Some(h) = hint {
                     if let Some(idx) = self.proposers.iter().position(|&p| p == h) {
                         self.leader_hint = idx;
@@ -330,7 +336,7 @@ mod tests {
 
     fn reply(c: &mut Client, now: Time, seq: u64) -> Effects {
         let mut fx = Effects::new();
-        c.on_msg(now, 0, Msg::ClientReply { seq, result: vec![] }, &mut fx);
+        c.on_msg(now, 0, Msg::ClientReply { group: 0, seq, result: vec![] }, &mut fx);
         fx
     }
 
@@ -394,7 +400,7 @@ mod tests {
         // After seq 1 completes, new requests advertise lowest = 2.
         let fx = reply(&mut c, MS, 1);
         match &fx.msgs[0].1 {
-            Msg::ClientRequest { cmd, lowest } => {
+            Msg::ClientRequest { cmd, lowest, .. } => {
                 assert_eq!(cmd.seq, 3);
                 assert_eq!(*lowest, 2);
             }
@@ -529,7 +535,7 @@ mod tests {
         let mut fx = Effects::new();
         c.on_start(0, &mut fx);
         let mut fx2 = Effects::new();
-        c.on_msg(MS, 0, Msg::NotLeader { hint: Some(1) }, &mut fx2);
+        c.on_msg(MS, 0, Msg::NotLeader { group: 0, hint: Some(1) }, &mut fx2);
         assert_eq!(c.leader_hint, 1);
         // Both in-flight requests re-sent to the new leader.
         assert_eq!(sent_seqs(&fx2), vec![1, 2]);
@@ -537,7 +543,7 @@ mod tests {
         // A second NotLeader within 1 ms is throttled down to a single
         // probe of the oldest request (not the whole window again).
         let mut fx3 = Effects::new();
-        c.on_msg(MS + 1, 1, Msg::NotLeader { hint: Some(0) }, &mut fx3);
+        c.on_msg(MS + 1, 1, Msg::NotLeader { group: 0, hint: Some(0) }, &mut fx3);
         assert_eq!(sent_seqs(&fx3), vec![1]);
     }
 

@@ -215,7 +215,7 @@ impl HorizontalLeader {
 
     fn on_chosen(&mut self, slot: Slot, now: Time, fx: &mut Effects) {
         let value = self.log[&slot].value.clone();
-        fx.announce(Announce::Chosen { slot, round: self.round, value: value.clone() });
+        fx.announce(Announce::Chosen { group: 0, slot, round: self.round, value: value.clone() });
         fx.broadcast(&self.replicas.clone(), &Msg::Chosen { slot, value: value.clone() });
 
         // A chosen Reconfig at slot s installs the new config at s + α
@@ -231,7 +231,7 @@ impl HorizontalLeader {
             for &a in &cfg.acceptors {
                 fx.send(a, Msg::Phase1A { round: self.round, from_slot });
             }
-            fx.announce(Announce::ConfigActive { round: self.round, config_id: cfg.id });
+            fx.announce(Announce::ConfigActive { group: 0, round: self.round, config_id: cfg.id });
             self.pending = Some(pending);
         }
 
@@ -254,7 +254,7 @@ impl Node for HorizontalLeader {
 
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientRequest { cmd, lowest } => {
+            Msg::ClientRequest { cmd, lowest, .. } => {
                 self.on_client_request(cmd, lowest, now, fx);
             }
             Msg::Phase1B { round, votes, .. } => {
@@ -421,7 +421,7 @@ mod tests {
         fn cmd(&mut self, client: NodeId, seq: u64) {
             let mut fx = Effects::new();
             let cmd = Command { client, seq, payload: vec![0] };
-            self.leader.on_msg(0, client, Msg::ClientRequest { cmd, lowest: seq }, &mut fx);
+            self.leader.on_msg(0, client, Msg::ClientRequest { group: 0, cmd, lowest: seq }, &mut fx);
             self.pump(fx);
         }
     }

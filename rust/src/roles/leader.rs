@@ -45,11 +45,11 @@
 
 use super::sequencer::{ClientSequencer, Offered};
 use crate::config::{Configuration, OptFlags};
-use crate::msg::{Command, Msg, Value};
+use crate::msg::{Command, MmLog, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
 use crate::util::Rng;
-use crate::{NodeId, Slot, Time, MS};
+use crate::{GroupId, NodeId, Slot, Time, MS};
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 /// Timing knobs. All values are virtual-time nanoseconds.
@@ -148,9 +148,10 @@ struct GcState {
 /// Matchmaker-reconfiguration driver state (§6).
 #[derive(Debug)]
 enum MmStage {
-    /// StopA sent to the old set; collecting f+1 StopB.
+    /// StopA sent to the old set; collecting f+1 StopB (multi-group logs
+    /// + per-group GC watermarks).
     Stopping {
-        acks: BTreeMap<NodeId, (BTreeMap<Round, Configuration>, Option<Round>)>,
+        acks: BTreeMap<NodeId, (MmLog, BTreeMap<GroupId, Round>)>,
     },
     /// Bootstrap sent to the new set; collecting acks from all of them.
     Bootstrapping { acks: BTreeSet<NodeId> },
@@ -174,6 +175,11 @@ struct MmReconfig {
 pub struct Leader {
     /// This node's id.
     pub id: NodeId,
+    /// The consensus group (shard) this leader serves. Matchmakers are
+    /// shared across groups (§6), so every matchmaking/GC message is
+    /// tagged with this; acceptors and replicas are per group and need no
+    /// tag. Single-group deployments leave it at 0.
+    pub group: GroupId,
     /// Fault-tolerance parameter.
     pub f: usize,
     /// Protocol optimization flags + batching/snapshot knobs.
@@ -281,6 +287,7 @@ impl Leader {
     ) -> Leader {
         Leader {
             id,
+            group: 0,
             f,
             opts,
             timing: LeaderTiming::default(),
@@ -411,7 +418,11 @@ impl Leader {
     fn start_matchmaking(&mut self, bypass: bool, _now: Time, fx: &mut Effects) {
         self.install =
             Install::Matchmaking { acks: BTreeMap::new(), bypass, early_p1: Vec::new() };
-        let msg = Msg::MatchA { round: self.round, config: self.config.clone() };
+        let msg = Msg::MatchA {
+            group: self.group,
+            round: self.round,
+            config: self.config.clone(),
+        };
         fx.broadcast(&self.matchmakers.clone(), &msg);
         fx.timer(self.timing.phase_resend, Timer::PhaseResend { generation: self.generation });
     }
@@ -464,7 +475,11 @@ impl Leader {
         h.remove(&self.round);
         self.max_prior_configs = self.max_prior_configs.max(h.len());
         self.round_configs.insert(self.round, self.config.clone());
-        fx.announce(Announce::ConfigActive { round: self.round, config_id: self.config.id });
+        fx.announce(Announce::ConfigActive {
+            group: self.group,
+            round: self.round,
+            config_id: self.config.id,
+        });
 
         if bypass {
             // Optimization 2: every slot ≥ next_slot has k = -1 by
@@ -750,7 +765,7 @@ impl Leader {
         }
         ss.chosen = true;
         let value = ss.value.clone();
-        fx.announce(Announce::Chosen { slot, round, value: value.clone() });
+        fx.announce(Announce::Chosen { group: self.group, slot, round, value: value.clone() });
         fx.broadcast(&self.replicas, &Msg::Chosen { slot, value });
         // Advance the contiguous chosen prefix.
         while self.log.get(&self.chosen_watermark).map_or(false, |s| s.chosen) {
@@ -899,7 +914,10 @@ impl Leader {
             return;
         }
         // A P2 quorum of C_i knows the prefix is persisted: GarbageA(i).
-        fx.broadcast(&self.matchmakers.clone(), &Msg::GarbageA { round: self.gc.round });
+        fx.broadcast(
+            &self.matchmakers.clone(),
+            &Msg::GarbageA { group: self.group, round: self.gc.round },
+        );
         self.gc.stage = GcStage::WaitGarbageB { acks: BTreeSet::new() };
     }
 
@@ -916,10 +934,11 @@ impl Leader {
         }
         self.gc.stage = GcStage::Done;
         self.gc_completed += 1;
-        // All configurations below gc.round are retired; drop them.
+        // All of this group's configurations below gc.round are retired;
+        // drop them.
         let round = self.gc.round;
         self.round_configs = self.round_configs.split_off(&round);
-        fx.announce(Announce::ConfigRetired { round });
+        fx.announce(Announce::ConfigRetired { group: self.group, round });
     }
 
     // =====================================================================
@@ -944,8 +963,8 @@ impl Leader {
     fn on_stop_b(
         &mut self,
         from: NodeId,
-        log: BTreeMap<Round, Configuration>,
-        wm: Option<Round>,
+        log: MmLog,
+        wms: BTreeMap<GroupId, Round>,
         _now: Time,
         fx: &mut Effects,
     ) {
@@ -955,18 +974,21 @@ impl Leader {
         let MmStage::Stopping { acks } = &mut mm.stage else {
             return;
         };
-        acks.insert(from, (log, wm));
+        acks.insert(from, (log, wms));
         if acks.len() < self.f + 1 {
             return;
         }
-        // Merge the f+1 stopped logs (§6, Figure 7) and bootstrap the new
-        // set with the result.
+        // Merge the f+1 stopped multi-group logs (§6, Figure 7, applied
+        // per group) and bootstrap the new set with the result. The
+        // matchmakers carry every group's state, so the reconfigurer
+        // (one group's leader) migrates the whole shared set on behalf of
+        // all groups.
         let states: Vec<_> = acks.values().cloned().collect();
-        let (merged, wm) = super::matchmaker::merge_stopped(&states);
+        let (merged, wms) = super::matchmaker::merge_stopped(&states);
         let new = mm.new.clone();
         mm.stage = MmStage::Bootstrapping { acks: BTreeSet::new() };
         let generation = self.mm_generation + 1;
-        fx.broadcast(&new, &Msg::Bootstrap { log: merged, gc_watermark: wm, generation });
+        fx.broadcast(&new, &Msg::Bootstrap { log: merged, gc_watermarks: wms, generation });
     }
 
     fn on_bootstrap_ack(&mut self, from: NodeId, _now: Time, fx: &mut Effects) {
@@ -1043,13 +1065,35 @@ impl Leader {
         if acks.len() < self.f + 1 {
             return;
         }
-        // M_new is chosen: activate and switch over.
+        // M_new is chosen: activate and switch over. Our follower
+        // proposers learn the new set too, so a later failover does not
+        // elect a leader pointed at the stopped old set.
         let chosen = value.clone();
-        fx.broadcast(&chosen, &Msg::MatchmakersActivated { matchmakers: chosen.clone() });
+        let new_generation = self.mm_generation + 1;
+        let activation =
+            Msg::MatchmakersActivated { generation: new_generation, matchmakers: chosen.clone() };
+        fx.broadcast(&chosen, &activation);
+        for &p in &self.proposers.clone() {
+            if p != self.id {
+                fx.send(p, activation.clone());
+            }
+        }
         self.matchmakers = chosen.clone();
-        self.mm_generation += 1;
+        self.mm_generation = new_generation;
         self.mm_reconfig = None;
         fx.announce(Announce::MatchmakersReconfigured { matchmakers: chosen });
+    }
+
+    /// Control-plane: adopt a new matchmaker set chosen elsewhere. In a
+    /// sharded deployment the matchmakers are shared, but the §6
+    /// stop-and-copy is driven by *one* group's leader — the admin plane
+    /// (or the harness standing in for it) must hand the chosen set to
+    /// every other group's leader, exactly as it hands out acceptor
+    /// reconfigurations. Without this, other groups would keep
+    /// broadcasting MatchA at the old, permanently stopped set.
+    pub fn set_matchmakers(&mut self, matchmakers: Vec<NodeId>) {
+        self.matchmakers = matchmakers;
+        self.mm_generation += 1;
     }
 
     // =====================================================================
@@ -1085,18 +1129,28 @@ impl Node for Leader {
 
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientRequest { cmd, lowest } => {
+            Msg::ClientRequest { group, cmd, lowest } => {
+                // A misrouted shard request would corrupt the per-group
+                // seq streams; routing is static (key hash), so this only
+                // fires under a broken router.
+                debug_assert_eq!(group, self.group, "client request routed to wrong group");
+                if group != self.group {
+                    return;
+                }
                 if !self.is_leader {
-                    fx.send(from, Msg::NotLeader { hint: self.last_leader });
+                    fx.send(from, Msg::NotLeader { group: self.group, hint: self.last_leader });
                     return;
                 }
                 self.on_client_request(cmd, lowest, now, fx);
             }
-            Msg::MatchB { round, gc_watermark, prior } => {
+            Msg::MatchB { group, round, gc_watermark, prior } => {
+                if group != self.group {
+                    return;
+                }
                 self.on_match_b(from, round, gc_watermark, prior, now, fx)
             }
-            Msg::MatchNack { round, blocking } => {
-                if round == self.round {
+            Msg::MatchNack { group, round, blocking } => {
+                if group == self.group && round == self.round {
                     self.handle_nack(blocking, now, fx);
                 }
             }
@@ -1124,13 +1178,33 @@ impl Node for Leader {
                 self.next_slot = self.next_slot.max(upto);
             }
             Msg::PrefixAck { round, upto } => self.on_prefix_ack(from, round, upto, now, fx),
-            Msg::GarbageB { round } => self.on_garbage_b(from, round, now, fx),
-            Msg::StopB { log, gc_watermark } => self.on_stop_b(from, log, gc_watermark, now, fx),
+            Msg::GarbageB { group, round } => {
+                if group == self.group {
+                    self.on_garbage_b(from, round, now, fx)
+                }
+            }
+            Msg::StopB { log, gc_watermarks } => {
+                self.on_stop_b(from, log, gc_watermarks, now, fx)
+            }
             Msg::BootstrapAck => self.on_bootstrap_ack(from, now, fx),
             Msg::MetaPhase1B { round, vr, vv } => {
                 self.on_meta_phase1b(from, round, vr, vv, now, fx)
             }
             Msg::MetaPhase2B { round } => self.on_meta_phase2b(from, round, now, fx),
+            Msg::MatchmakersActivated { generation, matchmakers } => {
+                // The driving leader announces the §6-chosen set to its
+                // follower proposers. Adopt it unconditionally w.r.t.
+                // leadership — a proposer that self-elected while the
+                // migration was in flight must not keep matchmaking at
+                // the stopped old set — but only for a strictly newer
+                // generation, so a reordered stale activation cannot
+                // regress the set. (The driver never receives this: it
+                // only sends to its peers.)
+                if generation > self.mm_generation {
+                    self.matchmakers = matchmakers;
+                    self.mm_generation = generation;
+                }
+            }
             Msg::Heartbeat { epoch } => {
                 if epoch >= self.epoch_seen {
                     self.epoch_seen = epoch;
@@ -1220,7 +1294,11 @@ impl Node for Leader {
                 }
                 match &self.install {
                     Install::Matchmaking { .. } => {
-                        let msg = Msg::MatchA { round: self.round, config: self.config.clone() };
+                        let msg = Msg::MatchA {
+                            group: self.group,
+                            round: self.round,
+                            config: self.config.clone(),
+                        };
                         fx.broadcast(&self.matchmakers.clone(), &msg);
                         fx.timer(self.timing.phase_resend, Timer::PhaseResend { generation });
                     }
@@ -1339,7 +1417,7 @@ mod tests {
             let cmd = Command { client, seq, payload: vec![0] };
             // Closed-loop clients: the request being sent is the oldest
             // (only) one in flight.
-            self.leader.on_msg(1, client, Msg::ClientRequest { cmd, lowest: seq }, &mut fx);
+            self.leader.on_msg(1, client, Msg::ClientRequest { group: 0, cmd, lowest: seq }, &mut fx);
             self.pump(fx, 1);
         }
 
@@ -1395,12 +1473,12 @@ mod tests {
         // client order.
         let c2 = Command { client: 100, seq: 2, payload: vec![0] };
         let mut fx = Effects::new();
-        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd: c2, lowest: 1 }, &mut fx);
+        p.leader.on_msg(1, 100, Msg::ClientRequest { group: 0, cmd: c2, lowest: 1 }, &mut fx);
         assert!(fx.msgs.is_empty(), "out-of-order request must buffer");
         assert_eq!(p.leader.next_slot, 0);
         let c1 = Command { client: 100, seq: 1, payload: vec![0] };
         let mut fx2 = Effects::new();
-        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd: c1, lowest: 1 }, &mut fx2);
+        p.leader.on_msg(1, 100, Msg::ClientRequest { group: 0, cmd: c1, lowest: 1 }, &mut fx2);
         p.pump(fx2, 1);
         assert_eq!(p.leader.next_slot, 2);
         assert_eq!(p.chosen_count(), 2);
@@ -1437,10 +1515,10 @@ mod tests {
         assert!(p
             .announces
             .iter()
-            .any(|a| matches!(a, Announce::ConfigRetired { round } if *round == r0.next())));
+            .any(|a| matches!(a, Announce::ConfigRetired { round, .. } if *round == r0.next())));
         // And the matchmakers' logs only hold the new round.
         for m in &p.mms {
-            assert_eq!(m.log.len(), 1);
+            assert_eq!(m.group_log_len(0), 1);
         }
     }
 
@@ -1468,7 +1546,7 @@ mod tests {
         let mut l = Leader::new(1, 1, cfg, vec![1, 2, 3], vec![10], vec![0, 1], OptFlags::default(), 7);
         let mut fx = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![] };
-        l.on_msg(0, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
+        l.on_msg(0, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx);
         assert!(matches!(fx.msgs[0].1, Msg::NotLeader { .. }));
     }
 
@@ -1507,11 +1585,11 @@ mod tests {
         let mut fx = Effects::new();
         for seq in 1..=2 {
             let cmd = Command { client: 100, seq, payload: vec![0] };
-            p.leader.on_msg(1, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
+            p.leader.on_msg(1, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx);
         }
         assert!(fx.msgs.is_empty(), "commands must buffer until the batch fills");
         let cmd = Command { client: 101, seq: 1, payload: vec![0] };
-        p.leader.on_msg(1, 101, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
+        p.leader.on_msg(1, 101, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx);
         assert!(!fx.msgs.is_empty(), "a full batch must flush immediately");
         p.pump(fx, 1);
         // One slot chose all three commands; replicas executed each.
@@ -1529,7 +1607,7 @@ mod tests {
         p.start();
         let mut fx = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![0] };
-        p.leader.on_msg(1, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx);
+        p.leader.on_msg(1, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx);
         assert!(fx.msgs.is_empty());
         assert!(fx
             .timers
@@ -1614,7 +1692,7 @@ mod tests {
         assert!(!p.leader.is_steady());
         let mut fx2 = Effects::new();
         let cmd = Command { client: 100, seq: 1, payload: vec![] };
-        p.leader.on_msg(2, 100, Msg::ClientRequest { cmd, lowest: 1 }, &mut fx2);
+        p.leader.on_msg(2, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx2);
         assert!(fx2.msgs.is_empty()); // stalled
         // Now deliver the matchmaking + phase1 messages.
         p.pump(fx, 3);

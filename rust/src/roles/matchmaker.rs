@@ -10,6 +10,12 @@
 //! round `≤ i` again.
 //!
 //! Matchmakers also:
+//! * serve **many consensus groups at once** (§6: "a single matchmaker
+//!   set can serve many protocol instances"): the log is keyed by
+//!   `(group, round)` and every matchmaking/GC message names its group.
+//!   Groups are fully independent — answering group g's round i promises
+//!   nothing about group h, and GC watermarks are per group, so a quiet
+//!   group never pins a busy group's entries (and vice versa),
 //! * garbage-collect retired configurations (`GarbageA/B`, §5),
 //! * support stop-and-copy reconfiguration of the matchmaker set itself
 //!   (`StopA/B`, `Bootstrap`, §6), and
@@ -17,10 +23,10 @@
 //!   the next matchmaker set (§6) — processed even while stopped.
 
 use crate::config::Configuration;
-use crate::msg::Msg;
+use crate::msg::{MmLog, Msg};
 use crate::node::{Effects, Node, Timer};
 use crate::round::Round;
-use crate::{NodeId, Time};
+use crate::{GroupId, NodeId, Time};
 use std::collections::BTreeMap;
 
 /// A matchmaker node.
@@ -28,10 +34,11 @@ use std::collections::BTreeMap;
 pub struct Matchmaker {
     /// This node's id.
     pub id: NodeId,
-    /// The configuration log `L`.
-    pub log: BTreeMap<Round, Configuration>,
-    /// GC watermark `w`: rounds `< w` are retired. `None` = nothing GC'd.
-    pub gc_watermark: Option<Round>,
+    /// The configuration logs, one `L` per consensus group.
+    pub log: MmLog,
+    /// Per-group GC watermark `w`: the group's rounds `< w` are retired.
+    /// A group absent from the map has GC'd nothing.
+    pub gc_watermarks: BTreeMap<GroupId, Round>,
     /// Stopped by `StopA` (§6): refuses everything except `StopA` and the
     /// meta-Paxos messages.
     pub stopped: bool,
@@ -63,7 +70,7 @@ impl Matchmaker {
         Matchmaker {
             id,
             log: BTreeMap::new(),
-            gc_watermark: None,
+            gc_watermarks: BTreeMap::new(),
             stopped: false,
             active: true,
             generation: 0,
@@ -76,8 +83,19 @@ impl Matchmaker {
         Matchmaker { active: false, ..Matchmaker::new(id) }
     }
 
-    fn below_watermark(&self, r: Round) -> bool {
-        matches!(self.gc_watermark, Some(w) if r < w)
+    fn below_watermark(&self, group: GroupId, r: Round) -> bool {
+        matches!(self.gc_watermarks.get(&group), Some(w) if r < *w)
+    }
+
+    /// The number of retained log entries for one group (tests/metrics).
+    pub fn group_log_len(&self, group: GroupId) -> usize {
+        self.log.get(&group).map_or(0, |l| l.len())
+    }
+
+    /// Total retained log entries across all groups — the quantity the
+    /// shared-matchmaker memory bound is about.
+    pub fn total_log_len(&self) -> usize {
+        self.log.values().map(|l| l.len()).sum()
     }
 }
 
@@ -113,14 +131,14 @@ impl Node for Matchmaker {
             // set (§6 allows overlapping sets): Bootstrap resurrects it
             // with the merged state, inactive until activation. Meta-Paxos
             // state is untouched — instances are keyed by generation.
-            Msg::Bootstrap { log, gc_watermark, generation } => {
+            Msg::Bootstrap { log, gc_watermarks, generation } => {
                 if *generation <= self.generation {
                     // Stale bootstrap from an abandoned reconfiguration of
                     // an earlier generation: refuse (no ack).
                     return;
                 }
                 self.log = log.clone();
-                self.gc_watermark = *gc_watermark;
+                self.gc_watermarks = gc_watermarks.clone();
                 self.generation = *generation;
                 self.stopped = false;
                 self.active = false;
@@ -136,53 +154,70 @@ impl Node for Matchmaker {
             if matches!(msg, Msg::StopA) {
                 fx.send(
                     from,
-                    Msg::StopB { log: self.log.clone(), gc_watermark: self.gc_watermark },
+                    Msg::StopB {
+                        log: self.log.clone(),
+                        gc_watermarks: self.gc_watermarks.clone(),
+                    },
                 );
             }
             return;
         }
 
         match msg {
-            // Algorithm 1 + Algorithm 4.
-            Msg::MatchA { round, config } => {
+            // Algorithm 1 + Algorithm 4, per group: the refusal discipline
+            // ("once round i is answered, never answer a round ≤ i again")
+            // holds within each group's log independently.
+            Msg::MatchA { group, round, config } => {
                 if !self.active {
                     return;
                 }
-                if self.below_watermark(round) {
+                if self.below_watermark(group, round) {
                     fx.send(
                         from,
-                        Msg::MatchNack { round, blocking: self.gc_watermark.unwrap() },
+                        Msg::MatchNack {
+                            group,
+                            round,
+                            blocking: self.gc_watermarks[&group],
+                        },
                     );
                     return;
                 }
+                let glog = self.log.entry(group).or_default();
                 // ∃ C_j at round j ≥ i (other than an identical re-send)?
-                if let Some((&max_r, existing)) = self.log.iter().next_back() {
+                if let Some((&max_r, existing)) = glog.iter().next_back() {
                     if max_r > round || (max_r == round && *existing != config) {
-                        fx.send(from, Msg::MatchNack { round, blocking: max_r });
+                        fx.send(from, Msg::MatchNack { group, round, blocking: max_r });
                         return;
                     }
                 }
-                // H_i = all configurations at rounds < i currently in L.
-                let prior: BTreeMap<Round, Configuration> = self
-                    .log
-                    .range(..round)
-                    .map(|(r, c)| (*r, c.clone()))
-                    .collect();
-                self.log.insert(round, config);
+                // H_i = all of the group's configurations at rounds < i.
+                let prior: BTreeMap<Round, Configuration> =
+                    glog.range(..round).map(|(r, c)| (*r, c.clone())).collect();
+                glog.insert(round, config);
                 fx.send(
                     from,
-                    Msg::MatchB { round, gc_watermark: self.gc_watermark, prior },
+                    Msg::MatchB {
+                        group,
+                        round,
+                        gc_watermark: self.gc_watermarks.get(&group).copied(),
+                        prior,
+                    },
                 );
             }
 
-            // Garbage collection (Algorithm 4): delete L[j] for all j < i,
-            // raise the watermark.
-            Msg::GarbageA { round } => {
-                self.log = self.log.split_off(&round);
-                if self.gc_watermark.map_or(true, |w| round > w) {
-                    self.gc_watermark = Some(round);
+            // Garbage collection (Algorithm 4): delete the group's L[j]
+            // for all j < i, raise the group's watermark. Other groups'
+            // entries are untouched — per-group GC is what keeps a busy
+            // group from pinning (or losing) a quiet group's state.
+            Msg::GarbageA { group, round } => {
+                if let Some(glog) = self.log.get_mut(&group) {
+                    *glog = glog.split_off(&round);
                 }
-                fx.send(from, Msg::GarbageB { round });
+                let w = self.gc_watermarks.entry(group).or_insert(round);
+                if round > *w {
+                    *w = round;
+                }
+                fx.send(from, Msg::GarbageB { group, round });
             }
 
             // Matchmaker reconfiguration (§6).
@@ -190,11 +225,19 @@ impl Node for Matchmaker {
                 self.stopped = true;
                 fx.send(
                     from,
-                    Msg::StopB { log: self.log.clone(), gc_watermark: self.gc_watermark },
+                    Msg::StopB {
+                        log: self.log.clone(),
+                        gc_watermarks: self.gc_watermarks.clone(),
+                    },
                 );
             }
-            Msg::MatchmakersActivated { .. } => {
-                self.active = true;
+            Msg::MatchmakersActivated { generation, .. } => {
+                // Activate only our own generation: a stale activation
+                // from an earlier migration must not resurrect a node
+                // that has since been re-bootstrapped for a newer set.
+                if generation == self.generation {
+                    self.active = true;
+                }
             }
 
             _ => {}
@@ -212,28 +255,35 @@ impl Node for Matchmaker {
     }
 }
 
-/// Merge the logs returned by `f+1` stopped matchmakers into the initial
-/// state for the next matchmaker set (§6, Figure 7): union of the logs,
-/// with every entry below the maximum watermark removed.
+/// Merge the multi-group logs returned by `f+1` stopped matchmakers into
+/// the initial state for the next matchmaker set (§6, Figure 7), applied
+/// per group: union of the group's logs, with every entry below the
+/// group's maximum watermark removed.
 pub fn merge_stopped(
-    states: &[(BTreeMap<Round, Configuration>, Option<Round>)],
-) -> (BTreeMap<Round, Configuration>, Option<Round>) {
-    let mut merged: BTreeMap<Round, Configuration> = BTreeMap::new();
-    let mut wm: Option<Round> = None;
-    for (log, w) in states {
-        for (r, c) in log {
-            merged.insert(*r, c.clone());
+    states: &[(MmLog, BTreeMap<GroupId, Round>)],
+) -> (MmLog, BTreeMap<GroupId, Round>) {
+    let mut merged: MmLog = BTreeMap::new();
+    let mut wms: BTreeMap<GroupId, Round> = BTreeMap::new();
+    for (log, group_wms) in states {
+        for (g, glog) in log {
+            let m = merged.entry(*g).or_default();
+            for (r, c) in glog {
+                m.insert(*r, c.clone());
+            }
         }
-        if let Some(w) = w {
-            if wm.map_or(true, |cur| *w > cur) {
-                wm = Some(*w);
+        for (g, w) in group_wms {
+            let cur = wms.entry(*g).or_insert(*w);
+            if *w > *cur {
+                *cur = *w;
             }
         }
     }
-    if let Some(w) = wm {
-        merged = merged.split_off(&w);
+    for (g, w) in &wms {
+        if let Some(m) = merged.get_mut(g) {
+            *m = m.split_off(w);
+        }
     }
-    (merged, wm)
+    (merged, wms)
 }
 
 #[cfg(test)]
@@ -254,16 +304,20 @@ mod tests {
         fx.msgs.into_iter().map(|(_, m)| m).collect()
     }
 
+    fn match_a(round: Round, config: Configuration) -> Msg {
+        Msg::MatchA { group: 0, round, config }
+    }
+
     #[test]
     fn figure3_execution() {
-        // Reproduces the matchmaker execution of Figure 3.
+        // Reproduces the matchmaker execution of Figure 3 (group 0).
         let mut m = Matchmaker::new(0);
-        let out = run(&mut m, Msg::MatchA { round: r(0), config: cfg(0) });
+        let out = run(&mut m, match_a(r(0), cfg(0)));
         assert_eq!(
             out[0],
-            Msg::MatchB { round: r(0), gc_watermark: None, prior: BTreeMap::new() }
+            Msg::MatchB { group: 0, round: r(0), gc_watermark: None, prior: BTreeMap::new() }
         );
-        let out = run(&mut m, Msg::MatchA { round: r(2), config: cfg(2) });
+        let out = run(&mut m, match_a(r(2), cfg(2)));
         match &out[0] {
             Msg::MatchB { prior, .. } => {
                 assert_eq!(prior.len(), 1);
@@ -271,7 +325,7 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        let out = run(&mut m, Msg::MatchA { round: r(3), config: cfg(3) });
+        let out = run(&mut m, match_a(r(3), cfg(3)));
         match &out[0] {
             Msg::MatchB { prior, .. } => {
                 assert_eq!(prior.len(), 2);
@@ -279,21 +333,21 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        // MatchA(1, C1) now refused: log holds rounds ≥ 1.
-        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
-        assert_eq!(out[0], Msg::MatchNack { round: r(1), blocking: r(3) });
+        // MatchA(1, C1) now refused: the group's log holds rounds ≥ 1.
+        let out = run(&mut m, match_a(r(1), cfg(1)));
+        assert_eq!(out[0], Msg::MatchNack { group: 0, round: r(1), blocking: r(3) });
     }
 
     #[test]
     fn identical_resend_is_idempotent() {
         let mut m = Matchmaker::new(0);
-        run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        run(&mut m, match_a(r(1), cfg(1)));
         // Same round, same config: answered again (dropped MatchB recovery).
-        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        let out = run(&mut m, match_a(r(1), cfg(1)));
         assert!(matches!(out[0], Msg::MatchB { .. }));
         // Same round, different config: refused (rounds are single-proposer
         // so this only happens under faulty harnesses — still must refuse).
-        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(9) });
+        let out = run(&mut m, match_a(r(1), cfg(9)));
         assert!(matches!(out[0], Msg::MatchNack { .. }));
     }
 
@@ -301,26 +355,60 @@ mod tests {
     fn garbage_collection() {
         let mut m = Matchmaker::new(0);
         for i in [0u64, 1, 2, 3] {
-            run(&mut m, Msg::MatchA { round: r(i), config: cfg(i) });
+            run(&mut m, match_a(r(i), cfg(i)));
         }
-        let out = run(&mut m, Msg::GarbageA { round: r(2) });
-        assert_eq!(out[0], Msg::GarbageB { round: r(2) });
-        assert_eq!(m.log.len(), 2); // rounds 2 and 3 survive
-        assert_eq!(m.gc_watermark, Some(r(2)));
+        let out = run(&mut m, Msg::GarbageA { group: 0, round: r(2) });
+        assert_eq!(out[0], Msg::GarbageB { group: 0, round: r(2) });
+        assert_eq!(m.group_log_len(0), 2); // rounds 2 and 3 survive
+        assert_eq!(m.gc_watermarks.get(&0), Some(&r(2)));
         // MatchA below the watermark is refused.
-        let out = run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
-        assert_eq!(out[0], Msg::MatchNack { round: r(1), blocking: r(2) });
+        let out = run(&mut m, match_a(r(1), cfg(1)));
+        assert_eq!(out[0], Msg::MatchNack { group: 0, round: r(1), blocking: r(2) });
         // Watermark is monotone.
-        run(&mut m, Msg::GarbageA { round: r(1) });
-        assert_eq!(m.gc_watermark, Some(r(2)));
+        run(&mut m, Msg::GarbageA { group: 0, round: r(1) });
+        assert_eq!(m.gc_watermarks.get(&0), Some(&r(2)));
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        // One shared matchmaker, two groups: refusals, H_i, and GC are all
+        // per group. Group 7's round-5 answer must not block group 8's
+        // round 0, and GC'ing group 7 must leave group 8's entries alone.
+        let mut m = Matchmaker::new(0);
+        let out = run(&mut m, Msg::MatchA { group: 7, round: r(5), config: cfg(5) });
+        assert!(matches!(out[0], Msg::MatchB { group: 7, .. }));
+        let out = run(&mut m, Msg::MatchA { group: 8, round: r(0), config: cfg(0) });
+        match &out[0] {
+            Msg::MatchB { group: 8, prior, .. } => assert!(prior.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        // Group 7's log does not leak into group 8's H_i.
+        let out = run(&mut m, Msg::MatchA { group: 8, round: r(1), config: cfg(1) });
+        match &out[0] {
+            Msg::MatchB { group: 8, prior, .. } => {
+                assert_eq!(prior.keys().copied().collect::<Vec<_>>(), vec![r(0)]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // GC group 7 below round 6: group 8 keeps both entries and its
+        // watermark stays unset.
+        run(&mut m, Msg::GarbageA { group: 7, round: r(6) });
+        assert_eq!(m.group_log_len(7), 0);
+        assert_eq!(m.group_log_len(8), 2);
+        assert_eq!(m.gc_watermarks.get(&8), None);
+        // Group 8 still answers low rounds above its own (absent)
+        // watermark; group 7 refuses below its watermark.
+        let out = run(&mut m, Msg::MatchA { group: 7, round: r(2), config: cfg(2) });
+        assert_eq!(out[0], Msg::MatchNack { group: 7, round: r(2), blocking: r(6) });
+        assert_eq!(m.total_log_len(), 2);
     }
 
     #[test]
     fn match_b_reports_watermark() {
         let mut m = Matchmaker::new(0);
-        run(&mut m, Msg::MatchA { round: r(0), config: cfg(0) });
-        run(&mut m, Msg::GarbageA { round: r(1) });
-        let out = run(&mut m, Msg::MatchA { round: r(5), config: cfg(5) });
+        run(&mut m, match_a(r(0), cfg(0)));
+        run(&mut m, Msg::GarbageA { group: 0, round: r(1) });
+        let out = run(&mut m, match_a(r(5), cfg(5)));
         match &out[0] {
             Msg::MatchB { gc_watermark, prior, .. } => {
                 assert_eq!(*gc_watermark, Some(r(1)));
@@ -333,26 +421,32 @@ mod tests {
     #[test]
     fn stop_and_bootstrap() {
         let mut m = Matchmaker::new(0);
-        run(&mut m, Msg::MatchA { round: r(1), config: cfg(1) });
+        run(&mut m, match_a(r(1), cfg(1)));
         let out = run(&mut m, Msg::StopA);
         match &out[0] {
-            Msg::StopB { log, .. } => assert_eq!(log.len(), 1),
+            Msg::StopB { log, .. } => assert_eq!(log[&0].len(), 1),
             other => panic!("{other:?}"),
         }
         // Stopped: MatchA is silently dropped; StopA still answered.
-        assert!(run(&mut m, Msg::MatchA { round: r(2), config: cfg(2) }).is_empty());
+        assert!(run(&mut m, match_a(r(2), cfg(2))).is_empty());
         assert!(matches!(run(&mut m, Msg::StopA)[0], Msg::StopB { .. }));
 
         // A standby bootstraps, but serves only after activation.
         let mut n = Matchmaker::new_standby(7);
-        assert!(run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) }).is_empty());
-        let mut state = BTreeMap::new();
-        state.insert(r(1), cfg(1));
-        let out = run(&mut n, Msg::Bootstrap { log: state, gc_watermark: None, generation: 1 });
+        assert!(run(&mut n, match_a(r(3), cfg(3))).is_empty());
+        let mut state: MmLog = BTreeMap::new();
+        state.entry(0).or_default().insert(r(1), cfg(1));
+        let out = run(
+            &mut n,
+            Msg::Bootstrap { log: state, gc_watermarks: BTreeMap::new(), generation: 1 },
+        );
         assert_eq!(out[0], Msg::BootstrapAck);
-        assert!(run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) }).is_empty());
-        run(&mut n, Msg::MatchmakersActivated { matchmakers: vec![7] });
-        let out = run(&mut n, Msg::MatchA { round: r(3), config: cfg(3) });
+        assert!(run(&mut n, match_a(r(3), cfg(3))).is_empty());
+        // A stale activation (wrong generation) does not activate.
+        run(&mut n, Msg::MatchmakersActivated { generation: 0, matchmakers: vec![7] });
+        assert!(run(&mut n, match_a(r(3), cfg(3))).is_empty());
+        run(&mut n, Msg::MatchmakersActivated { generation: 1, matchmakers: vec![7] });
+        let out = run(&mut n, match_a(r(3), cfg(3)));
         match &out[0] {
             Msg::MatchB { prior, .. } => assert_eq!(prior.len(), 1),
             other => panic!("{other:?}"),
@@ -379,19 +473,38 @@ mod tests {
 
     #[test]
     fn merge_stopped_logs_figure7() {
-        // Figure 7: union of logs, entries below the max watermark dropped.
-        let s0 = (
-            [(r(1), cfg(1)), (r(3), cfg(3))].into_iter().collect(),
-            Some(r(1)),
-        );
-        let s1 = (
-            [(r(2), cfg(2))].into_iter().collect(),
-            Some(r(2)),
-        );
-        let s2 = ([(r(0), cfg(0)), (r(4), cfg(4))].into_iter().collect(), None);
-        let (merged, wm) = merge_stopped(&[s0, s1, s2]);
-        assert_eq!(wm, Some(r(2)));
-        let rounds: Vec<Round> = merged.keys().copied().collect();
+        // Figure 7 per group: union of the group's logs, entries below the
+        // group's max watermark dropped.
+        let glog = |entries: Vec<(Round, Configuration)>| -> MmLog {
+            [(0u32, entries.into_iter().collect())].into_iter().collect()
+        };
+        let wm = |w: Round| -> BTreeMap<GroupId, Round> {
+            [(0u32, w)].into_iter().collect()
+        };
+        let s0 = (glog(vec![(r(1), cfg(1)), (r(3), cfg(3))]), wm(r(1)));
+        let s1 = (glog(vec![(r(2), cfg(2))]), wm(r(2)));
+        let s2 = (glog(vec![(r(0), cfg(0)), (r(4), cfg(4))]), BTreeMap::new());
+        let (merged, wms) = merge_stopped(&[s0, s1, s2]);
+        assert_eq!(wms.get(&0), Some(&r(2)));
+        let rounds: Vec<Round> = merged[&0].keys().copied().collect();
         assert_eq!(rounds, vec![r(2), r(3), r(4)]);
+    }
+
+    #[test]
+    fn merge_stopped_logs_multi_group() {
+        // A busy group's watermark must not prune a quiet group's entries.
+        let mut log_a: MmLog = BTreeMap::new();
+        log_a.entry(0).or_default().insert(r(9), cfg(9));
+        log_a.entry(1).or_default().insert(r(0), cfg(0));
+        let wms_a: BTreeMap<GroupId, Round> = [(0u32, r(9))].into_iter().collect();
+        let mut log_b: MmLog = BTreeMap::new();
+        log_b.entry(0).or_default().insert(r(3), cfg(3));
+        log_b.entry(1).or_default().insert(r(1), cfg(1));
+        let (merged, wms) = merge_stopped(&[(log_a, wms_a), (log_b, BTreeMap::new())]);
+        // Group 0: round 3 pruned by watermark 9; round 9 survives.
+        assert_eq!(merged[&0].keys().copied().collect::<Vec<_>>(), vec![r(9)]);
+        // Group 1: untouched by group 0's GC.
+        assert_eq!(merged[&1].keys().copied().collect::<Vec<_>>(), vec![r(0), r(1)]);
+        assert_eq!(wms.get(&1), None);
     }
 }

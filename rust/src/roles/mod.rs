@@ -12,6 +12,9 @@
 //!   order, replies to clients, acks prefixes for GC Scenario 3.
 //! * [`client`] — workload client ([`crate::workload::WorkloadSpec`]-driven:
 //!   closed-loop, pipelined, or open-loop) with latency recording.
+//! * [`router`] — the sharded workload client: routes each key to its
+//!   home consensus group by hash ([`router::shard_of`]), with an
+//!   independent FIFO seq stream per group.
 //! * [`sequencer`] — leader-side per-client FIFO admission for pipelined
 //!   clients whose in-flight window the network may reorder.
 //! * [`horizontal`] — baseline: MultiPaxos with horizontal (log-entry)
@@ -24,6 +27,7 @@ pub mod leader;
 pub mod matchmaker;
 pub mod proposer;
 pub mod replica;
+pub mod router;
 pub mod sequencer;
 
 pub use acceptor::Acceptor;
@@ -33,4 +37,5 @@ pub use leader::Leader;
 pub use matchmaker::Matchmaker;
 pub use proposer::{FastProposer, Proposer};
 pub use replica::Replica;
+pub use router::ShardClient;
 pub use sequencer::ClientSequencer;

@@ -94,7 +94,7 @@ impl Proposer {
         self.phase = Phase::Matchmaking { acks: BTreeMap::new() };
         fx.broadcast(
             &self.matchmakers.clone(),
-            &Msg::MatchA { round: self.round, config: self.config.clone() },
+            &Msg::MatchA { group: 0, round: self.round, config: self.config.clone() },
         );
     }
 
@@ -132,7 +132,7 @@ impl Proposer {
 impl Node for Proposer {
     fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::MatchB { round, gc_watermark, prior } => {
+            Msg::MatchB { round, gc_watermark, prior, .. } => {
                 if round != self.round {
                     return;
                 }
@@ -223,7 +223,7 @@ impl Node for Proposer {
                 if self.config.is_p2_quorum(acks) {
                     let value = value.clone();
                     self.chosen = Some(value.clone());
-                    fx.announce(Announce::Chosen { slot: 0, round, value });
+                    fx.announce(Announce::Chosen { group: 0, slot: 0, round, value });
                     self.phase = Phase::Done;
                 }
             }
@@ -318,7 +318,7 @@ impl FastProposer {
         self.phase = FastPhase::Matchmaking { acks: BTreeMap::new() };
         fx.broadcast(
             &self.matchmakers.clone(),
-            &Msg::MatchA { round: self.round, config: self.config.clone() },
+            &Msg::MatchA { group: 0, round: self.round, config: self.config.clone() },
         );
     }
 
@@ -360,7 +360,7 @@ impl FastProposer {
 impl Node for FastProposer {
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::MatchB { round, gc_watermark, prior } => {
+            Msg::MatchB { round, gc_watermark, prior, .. } => {
                 if round != self.round {
                     return;
                 }
@@ -447,7 +447,7 @@ impl Node for FastProposer {
                 if votes.values().all(|v| *v == first) {
                     self.chosen = Some(first.clone());
                     fx.announce(Announce::FastChosen { round, value: first.clone() });
-                    fx.announce(Announce::Chosen { slot: 0, round, value: first });
+                    fx.announce(Announce::Chosen { group: 0, slot: 0, round, value: first });
                     self.phase = FastPhase::Done;
                 } else {
                     self.open_round(now, fx);
@@ -465,7 +465,7 @@ impl Node for FastProposer {
                 if self.config.is_p2_quorum(acks) {
                     let value = value.clone();
                     self.chosen = Some(value.clone());
-                    fx.announce(Announce::Chosen { slot: 0, round, value });
+                    fx.announce(Announce::Chosen { group: 0, slot: 0, round, value });
                     self.phase = FastPhase::Done;
                 }
             }

@@ -24,7 +24,7 @@ use crate::config::SnapshotSpec;
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::statemachine::StateMachine;
-use crate::{NodeId, Slot, Time, MS};
+use crate::{GroupId, NodeId, Slot, Time, MS};
 use std::collections::{BTreeMap, HashMap};
 
 /// Per-client execution history: dedup cursor plus a bounded window of
@@ -55,6 +55,10 @@ pub const RESULT_CACHE: usize = crate::workload::MAX_IN_FLIGHT;
 pub struct Replica {
     /// This node's id.
     pub id: NodeId,
+    /// The consensus group (shard) this replica belongs to. Client
+    /// replies are tagged with it so a shard-routing client can dispatch
+    /// them to the right per-group lane. 0 in single-group deployments.
+    pub group: GroupId,
     /// Chosen log.
     pub log: BTreeMap<Slot, Value>,
     /// Next slot to execute; slots `< exec_watermark` are executed.
@@ -103,6 +107,7 @@ impl Replica {
     pub fn new(id: NodeId, sm: Box<dyn StateMachine>) -> Replica {
         Replica {
             id,
+            group: 0,
             log: BTreeMap::new(),
             exec_watermark: 0,
             sm,
@@ -134,6 +139,7 @@ impl Replica {
             // per-slot clone on the execution hot path.
             match value {
                 Value::Cmd(cmd) => exec_commands(
+                    self.group,
                     self.exec_watermark,
                     std::slice::from_ref(cmd),
                     &mut self.client_table,
@@ -145,6 +151,7 @@ impl Replica {
                 // through one `StateMachine::apply_many` invocation,
                 // replying to each client individually.
                 Value::Batch(cmds) => exec_commands(
+                    self.group,
                     self.exec_watermark,
                     cmds,
                     &mut self.client_table,
@@ -289,6 +296,7 @@ impl Replica {
 /// A free function over the replica's disjoint execution fields so the
 /// commands can stay borrowed from the log (no clone per executed slot).
 fn exec_commands(
+    group: GroupId,
     slot: Slot,
     cmds: &[Command],
     client_table: &mut HashMap<NodeId, ClientHistory>,
@@ -310,7 +318,7 @@ fn exec_commands(
             {
                 fx.send(
                     cmd.client,
-                    Msg::ClientReply { seq: cmd.seq, result: result.clone() },
+                    Msg::ClientReply { group, seq: cmd.seq, result: result.clone() },
                 );
             }
         } else {
@@ -332,7 +340,7 @@ fn exec_commands(
             let oldest = *h.recent.keys().next().unwrap();
             h.recent.remove(&oldest);
         }
-        fx.send(cmd.client, Msg::ClientReply { seq: cmd.seq, result });
+        fx.send(cmd.client, Msg::ClientReply { group, seq: cmd.seq, result });
     }
 }
 
@@ -599,7 +607,7 @@ mod tests {
             .msgs
             .iter()
             .filter_map(|(to, m)| match m {
-                Msg::ClientReply { seq, result } => Some((*to, *seq, result.clone())),
+                Msg::ClientReply { seq, result, .. } => Some((*to, *seq, result.clone())),
                 _ => None,
             })
             .collect();

@@ -1,0 +1,610 @@
+//! The shard-routing workload client: one client, many consensus groups.
+//!
+//! A sharded deployment ([`crate::harness::ShardedCluster`]) runs N
+//! independent Matchmaker MultiPaxos groups behind one shared matchmaker
+//! set. The [`ShardClient`] spreads a [`WorkloadSpec`]-driven key stream
+//! across those groups: every request draws a key from the spec's key
+//! space, the key hashes to a group ([`shard_of`]), and the request goes
+//! to that group's leader. Routing is *static* — a key always lands on
+//! the same group — which is what makes per-key operations linearizable
+//! across the whole sharded deployment: all commands for a key serialize
+//! through one group's log.
+//!
+//! Sequencing is **per lane**: the client keeps an independent,
+//! contiguous seq stream (1, 2, 3, ...) for each group, so each group
+//! leader's per-client sequencer ([`crate::roles::sequencer`]) sees
+//! exactly the contiguous stream it expects and per-client FIFO holds
+//! *within* each shard. (Cross-shard ordering is deliberately not
+//! promised — that is the sharding trade-off; per-key ordering is what
+//! survives, via static routing.) Replies and resend timers carry the
+//! group ([`Msg::ClientReply`], [`Timer::ShardResend`]) because seq
+//! numbers alone are ambiguous across lanes.
+//!
+//! The workload modes mirror the single-group [`crate::roles::Client`]:
+//! closed-loop/pipelined keeps a *total* window of requests in flight
+//! (spread over the groups the drawn keys land on); open loop offers
+//! arrivals at the configured rate with a total in-flight bound and
+//! client-side queueing, measuring latency from arrival.
+//!
+//! NOTE: the engine (arrival/backlog/resend/redirect-throttle logic) is
+//! deliberately kept in lockstep with `roles/client.rs` rather than
+//! shared — the lane indirection touches every line, and the two roles'
+//! offered/completed/abandoned semantics must stay identical for the
+//! X4-vs-X6 comparisons to be apples-to-apples. A behavioral fix to one
+//! client must be mirrored in the other.
+
+use crate::msg::{Command, Msg};
+use crate::node::{Effects, Node, Timer};
+use crate::util::Rng;
+use crate::workload::{WorkloadMode, WorkloadSpec};
+use crate::{GroupId, NodeId, Time, MS, US};
+use std::collections::{BTreeMap, VecDeque};
+
+/// `Timer::Wakeup` tag: delayed start (`WorkloadSpec::start_at`).
+pub const TAG_START: u64 = 0;
+/// `Timer::Wakeup` tag: open-loop arrival tick.
+pub const TAG_ARRIVAL: u64 = 1;
+
+/// Deterministic key → group routing: splitmix64 finalizer over the key,
+/// reduced mod the group count. Stateless and stable, so every client —
+/// and every test checking routing — agrees on the key's home group.
+pub fn shard_of(key: u64, shards: usize) -> GroupId {
+    debug_assert!(shards > 0, "shard_of with zero shards");
+    let mut z = key.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % shards as u64) as GroupId
+}
+
+/// Extract the routing key from a [`ShardClient`] command payload (the
+/// first 8 bytes, little-endian). Safety tests use this to verify that
+/// every chosen command actually lives in its key's home group.
+pub fn key_of_payload(payload: &[u8]) -> Option<u64> {
+    payload.get(..8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// One in-flight request of a lane.
+#[derive(Clone, Copy, Debug)]
+struct Outstanding {
+    /// Arrival time the latency clock runs from.
+    issued_at: Time,
+    /// Matches the most recently armed resend timer.
+    generation: u64,
+    /// The routing key (resends must rebuild the same payload).
+    key: u64,
+}
+
+/// Per-group client state: an independent seq stream, in-flight window
+/// slice, and leader hint for one consensus group.
+#[derive(Debug)]
+struct Lane {
+    group: GroupId,
+    /// The group's proposers, in fallback order.
+    proposers: Vec<NodeId>,
+    leader_hint: usize,
+    /// Next seq to assign in this lane (first command is seq 1).
+    next_seq: u64,
+    outstanding: BTreeMap<u64, Outstanding>,
+    /// Bumped on every (re)send in this lane; stale timers are ignored.
+    generation: u64,
+    /// Redirect-storm throttle (see [`crate::roles::Client`]).
+    last_redirect: Time,
+    last_probe: Time,
+}
+
+impl Lane {
+    fn leader(&self) -> NodeId {
+        self.proposers[self.leader_hint % self.proposers.len()]
+    }
+
+    /// Oldest in-flight seq of this lane (the `ClientRequest.lowest`
+    /// the group's sequencer keys on).
+    fn lowest(&self) -> u64 {
+        self.outstanding.keys().next().copied().unwrap_or(self.next_seq)
+    }
+}
+
+/// A workload client that routes keys across the groups of a sharded
+/// deployment. See the module docs for the routing and sequencing rules.
+pub struct ShardClient {
+    /// This node's id (doubles as the `Command::client` identity in
+    /// every lane).
+    pub id: NodeId,
+    /// The workload this client runs (window/rate bounds are *total*
+    /// across lanes).
+    pub spec: WorkloadSpec,
+    /// Completed-request samples `(completion_time, latency_ns)`, all
+    /// lanes merged.
+    pub samples: Vec<(Time, Time)>,
+    /// Requests generated (arrivals or window sends), all lanes.
+    pub offered: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests dropped at the stop deadline.
+    pub abandoned: u64,
+
+    lanes: Vec<Lane>,
+    /// Open-loop arrivals waiting for a free in-flight slot: `(arrival
+    /// time, key)`. The key is drawn at arrival so routing is
+    /// arrival-deterministic, not drain-order-dependent.
+    backlog: VecDeque<(Time, u64)>,
+    /// Total requests on the wire across all lanes.
+    in_flight: usize,
+    /// Per-command payload suffix (resolved from the spec once); the
+    /// 8-byte key prefix is prepended per request.
+    payload_suffix: Vec<u8>,
+    /// Deterministic per-client RNG: key draws + Poisson gaps.
+    rng: Rng,
+}
+
+impl ShardClient {
+    /// A client spreading `spec`'s key stream across `groups`, where
+    /// `groups[g]` lists group g's proposers. `groups` must cover every
+    /// group id `0..groups.len()` in order.
+    pub fn new(id: NodeId, groups: Vec<Vec<NodeId>>, spec: WorkloadSpec) -> ShardClient {
+        assert!(!groups.is_empty(), "ShardClient needs at least one group");
+        let payload_suffix = spec.payload.bytes_for(id);
+        ShardClient {
+            id,
+            lanes: groups
+                .into_iter()
+                .enumerate()
+                .map(|(g, proposers)| Lane {
+                    group: g as GroupId,
+                    proposers,
+                    leader_hint: 0,
+                    next_seq: 1,
+                    outstanding: BTreeMap::new(),
+                    generation: 0,
+                    last_redirect: 0,
+                    last_probe: 0,
+                })
+                .collect(),
+            spec,
+            samples: Vec::new(),
+            offered: 0,
+            completed: 0,
+            abandoned: 0,
+            backlog: VecDeque::new(),
+            in_flight: 0,
+            payload_suffix,
+            rng: Rng::new(0x51ab_c11e_0000_0000 ^ id as u64),
+        }
+    }
+
+    /// Total requests currently on the wire.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Per-lane completed-request sanity view: `(group, next_seq)` —
+    /// tests use it to confirm keys actually spread across groups.
+    pub fn lane_seqs(&self) -> Vec<(GroupId, u64)> {
+        self.lanes.iter().map(|l| (l.group, l.next_seq)).collect()
+    }
+
+    fn payload_for(&self, key: u64) -> Vec<u8> {
+        let mut p = Vec::with_capacity(8 + self.payload_suffix.len());
+        p.extend_from_slice(&key.to_le_bytes());
+        p.extend_from_slice(&self.payload_suffix);
+        p
+    }
+
+    fn draw_key(&mut self) -> u64 {
+        self.rng.gen_range(self.spec.keys.max(1))
+    }
+
+    /// Issue a brand-new request for `key` on its home lane.
+    fn send_request(&mut self, key: u64, issued_at: Time, _now: Time, fx: &mut Effects) {
+        let payload = self.payload_for(key);
+        let lane = &mut self.lanes[shard_of(key, self.lanes.len()) as usize];
+        let seq = lane.next_seq;
+        lane.next_seq += 1;
+        lane.generation += 1;
+        lane.outstanding.insert(seq, Outstanding { issued_at, generation: lane.generation, key });
+        self.in_flight += 1;
+        let cmd = Command { client: self.id, seq, payload };
+        let lowest = lane.lowest();
+        fx.send(lane.leader(), Msg::ClientRequest { group: lane.group, cmd, lowest });
+        fx.timer(
+            self.spec.resend_after,
+            Timer::ShardResend { group: lane.group, seq, generation: lane.generation },
+        );
+    }
+
+    /// Re-send one in-flight request of a lane, bounded by the stop
+    /// deadline (mirrors [`crate::roles::Client`]).
+    fn resend_one(&mut self, lane_idx: usize, seq: u64, now: Time, fx: &mut Effects) {
+        if now >= self.spec.stop_at {
+            if self.lanes[lane_idx].outstanding.remove(&seq).is_some() {
+                self.abandoned += 1;
+                self.in_flight -= 1;
+            }
+            return;
+        }
+        let id = self.id;
+        let resend_after = self.spec.resend_after;
+        let Some(&Outstanding { key, .. }) = self.lanes[lane_idx].outstanding.get(&seq) else {
+            return;
+        };
+        let payload = self.payload_for(key);
+        let lane = &mut self.lanes[lane_idx];
+        lane.generation += 1;
+        let generation = lane.generation;
+        lane.outstanding.get_mut(&seq).unwrap().generation = generation;
+        let cmd = Command { client: id, seq, payload };
+        let lowest = lane.lowest();
+        fx.send(lane.leader(), Msg::ClientRequest { group: lane.group, cmd, lowest });
+        fx.timer(resend_after, Timer::ShardResend { group: lane.group, seq, generation });
+    }
+
+    /// Closed-loop refill: keep `window` requests in flight in total,
+    /// each routed by a freshly drawn key.
+    fn fill_window(&mut self, now: Time, fx: &mut Effects) {
+        let WorkloadMode::ClosedLoop { window } = self.spec.mode else {
+            return;
+        };
+        while self.in_flight < window && now < self.spec.stop_at {
+            self.offered += 1;
+            let key = self.draw_key();
+            self.send_request(key, now, now, fx);
+        }
+    }
+
+    /// One open-loop arrival at `now`; schedules the next tick.
+    fn on_arrival(&mut self, now: Time, fx: &mut Effects) {
+        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight } = self.spec.mode else {
+            return;
+        };
+        if now >= self.spec.stop_at {
+            return; // stop the arrival chain
+        }
+        self.offered += 1;
+        let key = self.draw_key();
+        if self.in_flight < max_in_flight {
+            self.send_request(key, now, now, fx);
+        } else {
+            self.backlog.push_back((now, key));
+        }
+        let gap = if poisson {
+            let u = self.rng.next_f64();
+            ((-(1.0 - u).ln()) * interval as f64) as Time
+        } else {
+            interval
+        };
+        fx.timer(gap.max(1), Timer::Wakeup { tag: TAG_ARRIVAL });
+    }
+
+    fn begin(&mut self, now: Time, fx: &mut Effects) {
+        match self.spec.mode {
+            WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+            WorkloadMode::OpenLoop { .. } => self.on_arrival(now, fx),
+        }
+    }
+
+    fn lane_index(&self, group: GroupId) -> Option<usize> {
+        // Lanes are built in group order (0..n), but stay defensive
+        // against a stray group tag from a confused peer.
+        let idx = group as usize;
+        (idx < self.lanes.len() && self.lanes[idx].group == group).then_some(idx)
+    }
+}
+
+impl Node for ShardClient {
+    fn on_start(&mut self, now: Time, fx: &mut Effects) {
+        if self.spec.start_at > now {
+            fx.timer(self.spec.start_at - now, Timer::Wakeup { tag: TAG_START });
+        } else {
+            self.begin(now, fx);
+        }
+    }
+
+    fn on_msg(&mut self, now: Time, _from: NodeId, msg: Msg, fx: &mut Effects) {
+        match msg {
+            Msg::ClientReply { group, seq, .. } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let Some(o) = self.lanes[idx].outstanding.remove(&seq) else {
+                    return; // stale/duplicate reply (other replicas)
+                };
+                self.in_flight -= 1;
+                self.samples.push((now, now - o.issued_at));
+                self.completed += 1;
+                match self.spec.mode {
+                    WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+                    WorkloadMode::OpenLoop { .. } => {
+                        if now >= self.spec.stop_at {
+                            self.abandoned += self.backlog.len() as u64;
+                            self.backlog.clear();
+                        } else if let Some((arrived, key)) = self.backlog.pop_front() {
+                            self.send_request(key, arrived, now, fx);
+                        }
+                    }
+                }
+            }
+            Msg::NotLeader { group, hint } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let lane = &mut self.lanes[idx];
+                if let Some(h) = hint {
+                    if let Some(i) = lane.proposers.iter().position(|&p| p == h) {
+                        lane.leader_hint = i;
+                    }
+                } else {
+                    lane.leader_hint = (lane.leader_hint + 1) % lane.proposers.len();
+                }
+                // Same redirect-storm throttle as the single-group
+                // client, but per lane: re-send the lane's window at most
+                // once per ms, with an RTT-scale single-request probe in
+                // between.
+                if now.saturating_sub(lane.last_redirect) >= MS || lane.last_redirect == 0 {
+                    lane.last_redirect = now.max(1);
+                    let seqs: Vec<u64> = lane.outstanding.keys().copied().collect();
+                    for seq in seqs {
+                        self.resend_one(idx, seq, now, fx);
+                    }
+                } else if now.saturating_sub(lane.last_probe) >= 100 * US {
+                    lane.last_probe = now;
+                    if let Some(&oldest) = lane.outstanding.keys().next() {
+                        self.resend_one(idx, oldest, now, fx);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects) {
+        match timer {
+            Timer::ShardResend { group, seq, generation } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let lane = &mut self.lanes[idx];
+                let live = lane
+                    .outstanding
+                    .get(&seq)
+                    .map_or(false, |o| o.generation == generation);
+                if live {
+                    // The group's leader may have failed: rotate the
+                    // lane's hint, but only on the oldest request's
+                    // timeout so a burst rotates once.
+                    if lane.lowest() == seq {
+                        lane.leader_hint = (lane.leader_hint + 1) % lane.proposers.len();
+                    }
+                    self.resend_one(idx, seq, now, fx);
+                }
+            }
+            Timer::Wakeup { tag: TAG_START } => self.begin(now, fx),
+            Timer::Wakeup { tag: TAG_ARRIVAL } => self.on_arrival(now, fx),
+            Timer::Wakeup { tag } => {
+                debug_assert!(false, "shard client {}: unknown wakeup tag {tag}", self.id);
+            }
+            _ => {}
+        }
+    }
+
+    fn role(&self) -> &'static str {
+        "shard-client"
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    fn sent(fx: &Effects) -> Vec<(NodeId, GroupId, u64, u64)> {
+        fx.msgs
+            .iter()
+            .filter_map(|(to, m)| match m {
+                Msg::ClientRequest { group, cmd, lowest } => {
+                    Some((*to, *group, cmd.seq, *lowest))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn two_group_client(spec: WorkloadSpec) -> ShardClient {
+        // Group 0 leaders: 0, 1; group 1 leaders: 10, 11.
+        ShardClient::new(100, vec![vec![0, 1], vec![10, 11]], spec)
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_covers_groups() {
+        for shards in 1..=8 {
+            let mut seen = vec![false; shards];
+            for key in 0..64u64 {
+                let g = shard_of(key, shards);
+                assert_eq!(g, shard_of(key, shards), "routing must be stable");
+                assert!((g as usize) < shards);
+                seen[g as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "64 keys must cover {shards} shards");
+        }
+    }
+
+    #[test]
+    fn payload_carries_routing_key() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(4).payload_bytes(3));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        for (_, group, _, _) in sent(&fx) {
+            assert!(group <= 1);
+        }
+        for (_, m) in &fx.msgs {
+            if let Msg::ClientRequest { group, cmd, .. } = m {
+                let key = key_of_payload(&cmd.payload).expect("key prefix");
+                assert_eq!(shard_of(key, 2), *group, "payload key must route to its group");
+                assert_eq!(cmd.payload.len(), 8 + 3);
+            }
+        }
+    }
+
+    #[test]
+    fn window_spreads_lanes_with_contiguous_seqs() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(8));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 8);
+        let sends = sent(&fx);
+        assert_eq!(sends.len(), 8);
+        // Each lane's seqs are contiguous from 1 regardless of how the
+        // keys split across groups.
+        for lane in 0..2u32 {
+            let seqs: Vec<u64> =
+                sends.iter().filter(|s| s.1 == lane).map(|s| s.2).collect();
+            let expect: Vec<u64> = (1..=seqs.len() as u64).collect();
+            assert_eq!(seqs, expect, "lane {lane} seqs not contiguous");
+        }
+        // The lane split matches the client's deterministic key stream:
+        // replicate the draws with the same seed and routing.
+        let mut rng = Rng::new(0x51ab_c11e_0000_0000 ^ 100u64);
+        let expected: Vec<GroupId> =
+            (0..8).map(|_| shard_of(rng.gen_range(1024), 2)).collect();
+        let actual: Vec<GroupId> = sends.iter().map(|s| s.1).collect();
+        assert_eq!(actual, expected, "sends must follow the drawn key stream");
+        // And the per-lane seq cursors agree with the spread: lane g's
+        // next_seq is one past the number of keys that landed on it.
+        for (g, next_seq) in c.lane_seqs() {
+            let landed = expected.iter().filter(|&&e| e == g).count() as u64;
+            assert_eq!(next_seq, landed + 1, "lane {g} cursor out of step");
+        }
+    }
+
+    #[test]
+    fn reply_refills_window_on_any_lane() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(4));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let first = sent(&fx)[0];
+        let mut fx2 = Effects::new();
+        c.on_msg(
+            MS,
+            0,
+            Msg::ClientReply { group: first.1, seq: first.2, result: vec![] },
+            &mut fx2,
+        );
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.samples.len(), 1);
+        assert_eq!(c.in_flight(), 4, "window refilled");
+        assert_eq!(sent(&fx2).len(), 1);
+    }
+
+    #[test]
+    fn reply_with_unknown_group_is_ignored() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(2));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let first = sent(&fx)[0];
+        let before = c.in_flight();
+        // A reply tagged with a group this client has no lane for must
+        // not complete anything (seq spaces are per lane).
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::ClientReply { group: 99, seq: first.2, result: vec![] }, &mut fx2);
+        assert_eq!(c.in_flight(), before);
+        assert_eq!(c.completed, 0);
+        // The correctly tagged reply still lands.
+        let mut fx3 = Effects::new();
+        c.on_msg(MS, 0, Msg::ClientReply { group: first.1, seq: first.2, result: vec![] }, &mut fx3);
+        assert_eq!(c.completed, 1);
+    }
+
+    #[test]
+    fn open_loop_backlog_preserves_arrival_key_and_time() {
+        let spec = WorkloadSpec::open_loop(1000.0).max_in_flight(1);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 1);
+        let mut fx2 = Effects::new();
+        c.on_timer(MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
+        assert_eq!(c.backlog.len(), 1, "second arrival queues");
+        assert_eq!(c.offered, 2);
+        let (arrived, queued_key) = c.backlog[0];
+        assert_eq!(arrived, MS);
+        // Complete the in-flight request: the backlogged key drains to
+        // its own home lane with latency from its arrival time.
+        let first = sent(&fx)[0];
+        let mut fx3 = Effects::new();
+        c.on_msg(
+            3 * MS,
+            0,
+            Msg::ClientReply { group: first.1, seq: first.2, result: vec![] },
+            &mut fx3,
+        );
+        let drained = sent(&fx3);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].1, shard_of(queued_key, 2));
+        let lane = &c.lanes[drained[0].1 as usize];
+        let o = lane.outstanding.get(&drained[0].2).unwrap();
+        assert_eq!(o.issued_at, MS, "latency runs from arrival");
+    }
+
+    #[test]
+    fn resend_timer_routes_to_its_lane_and_rotates_hint() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(2));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (_, group, seq, _) = sent(&fx)[0];
+        let lane_gen = c.lanes[group as usize].generation;
+        let hint_before = c.lanes[group as usize].leader_hint;
+        let mut fx2 = Effects::new();
+        // The timer generation for the most recent send of the oldest
+        // request: find it from the outstanding entry.
+        let generation = c.lanes[group as usize].outstanding[&seq].generation;
+        assert!(generation <= lane_gen);
+        c.on_timer(100 * MS, Timer::ShardResend { group, seq, generation }, &mut fx2);
+        let resends = sent(&fx2);
+        if seq == c.lanes[group as usize].lowest() {
+            assert_ne!(c.lanes[group as usize].leader_hint, hint_before, "hint rotated");
+        }
+        assert_eq!(resends.len(), 1);
+        assert_eq!(resends[0].1, group);
+        // Stale generation: no-op.
+        let mut fx3 = Effects::new();
+        c.on_timer(200 * MS, Timer::ShardResend { group, seq, generation }, &mut fx3);
+        assert!(sent(&fx3).is_empty());
+    }
+
+    #[test]
+    fn not_leader_redirects_only_that_lane() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(8));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let sends = sent(&fx);
+        let lane0_count = sends.iter().filter(|s| s.1 == 0).count();
+        assert!(lane0_count >= 1, "seeded draw sends to lane 0");
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::NotLeader { group: 0, hint: Some(1) }, &mut fx2);
+        assert_eq!(c.lanes[0].leader_hint, 1);
+        assert_eq!(c.lanes[1].leader_hint, 0, "other lane untouched");
+        let resends = sent(&fx2);
+        assert_eq!(resends.len(), lane0_count, "only lane 0's window re-sent");
+        assert!(resends.iter().all(|s| s.0 == 1 && s.1 == 0));
+    }
+
+    #[test]
+    fn stop_at_abandons_on_resend_deadline() {
+        let spec = WorkloadSpec::pipelined(2).stop_at(10 * MS);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 2);
+        let (_, group, seq, _) = sent(&fx)[0];
+        let generation = c.lanes[group as usize].outstanding[&seq].generation;
+        let mut fx2 = Effects::new();
+        c.on_timer(100 * MS, Timer::ShardResend { group, seq, generation }, &mut fx2);
+        assert!(sent(&fx2).is_empty(), "no resend past the stop deadline");
+        assert_eq!(c.abandoned, 1);
+        assert_eq!(c.in_flight(), 1);
+    }
+}

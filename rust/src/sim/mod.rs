@@ -347,22 +347,25 @@ impl Sim {
         self.clock
     }
 
-    /// Safety invariant from the §3/§5/§6 proofs: for every slot, at most
-    /// one distinct value is ever announced chosen (across all rounds and
-    /// all nodes). Returns the violating slot if any.
+    /// Safety invariant from the §3/§5/§6 proofs: for every `(group,
+    /// slot)`, at most one distinct value is ever announced chosen
+    /// (across all rounds and all nodes). Slot numbers are per consensus
+    /// group — independent shards legitimately reuse the same slot
+    /// indices. Returns the violating slot if any.
     pub fn check_chosen_safety(&self) -> Result<(), String> {
-        let mut by_slot: BTreeMap<crate::Slot, &crate::msg::Value> = BTreeMap::new();
+        let mut by_slot: BTreeMap<(crate::GroupId, crate::Slot), &crate::msg::Value> =
+            BTreeMap::new();
         for (t, node, a) in &self.announces {
-            if let Announce::Chosen { slot, value, .. } = a {
-                match by_slot.get(slot) {
+            if let Announce::Chosen { group, slot, value, .. } = a {
+                match by_slot.get(&(*group, *slot)) {
                     None => {
-                        by_slot.insert(*slot, value);
+                        by_slot.insert((*group, *slot), value);
                     }
                     Some(prev) if *prev == value => {}
                     Some(prev) => {
                         return Err(format!(
-                            "slot {slot}: two distinct values chosen: {prev:?} then {value:?} \
-                             (second at t={t} by node {node})"
+                            "group {group} slot {slot}: two distinct values chosen: \
+                             {prev:?} then {value:?} (second at t={t} by node {node})"
                         ));
                     }
                 }
@@ -371,13 +374,13 @@ impl Sim {
         Ok(())
     }
 
-    /// Count of chosen announcements (distinct slots may repeat if two
-    /// observers announce; used by tests).
-    pub fn chosen_slots(&self) -> BTreeSet<crate::Slot> {
+    /// The set of `(group, slot)` pairs announced chosen (distinct slots
+    /// may repeat across announcers; used by tests).
+    pub fn chosen_slots(&self) -> BTreeSet<(crate::GroupId, crate::Slot)> {
         self.announces
             .iter()
             .filter_map(|(_, _, a)| match a {
-                Announce::Chosen { slot, .. } => Some(*slot),
+                Announce::Chosen { group, slot, .. } => Some((*group, *slot)),
                 _ => None,
             })
             .collect()

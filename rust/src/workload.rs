@@ -97,6 +97,12 @@ pub struct WorkloadSpec {
     pub stop_at: Time,
     /// Per-request resend timeout if no reply arrives.
     pub resend_after: Time,
+    /// Size of the key space a shard-routing client draws from
+    /// ([`crate::roles::router::ShardClient`]: each request's key is
+    /// drawn uniformly from `0..keys` and hashed to its home consensus
+    /// group, so requests spread across every group of a sharded
+    /// deployment). Single-group clients ignore it. Default 1024.
+    pub keys: u64,
 }
 
 impl Default for WorkloadSpec {
@@ -113,6 +119,7 @@ impl WorkloadSpec {
             start_at: 0,
             stop_at: u64::MAX,
             resend_after: 100 * MS,
+            keys: 1024,
         }
     }
 
@@ -181,6 +188,14 @@ impl WorkloadSpec {
     /// Per-request resend timeout when no reply arrives (default 100 ms).
     pub fn resend_after(mut self, t: Time) -> WorkloadSpec {
         self.resend_after = t.max(1);
+        self
+    }
+
+    /// Key-space size for shard routing (clamped to ≥ 1; default 1024).
+    /// Only meaningful for [`crate::roles::router::ShardClient`]-driven
+    /// deployments; single-group clients ignore it.
+    pub fn keys(mut self, n: u64) -> WorkloadSpec {
+        self.keys = n.max(1);
         self
     }
 

@@ -262,7 +262,7 @@ fn without_gc_prior_configs_accumulate() {
     );
     // Matchmaker logs likewise retain all rounds.
     let mm = cluster.layout.initial_matchmakers()[0];
-    let log_len = cluster.sim.node_mut::<Matchmaker>(mm).unwrap().log.len();
+    let log_len = cluster.sim.node_mut::<Matchmaker>(mm).unwrap().total_log_len();
     assert!(log_len >= 5, "matchmaker log unexpectedly short: {log_len}");
 }
 
