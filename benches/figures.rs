@@ -85,7 +85,13 @@ fn main() {
     if want("x4") {
         timed("X4 (open-loop offered-load sweep)", || exp::open_loop_figure(seed).render());
     }
+    if want("x5") {
+        timed("X5 (state retention)", || exp::retention_figure(seed).render());
+    }
     if want("x6") {
         timed("X6 (sharded multi-group scale-out)", || exp::sharding_figure(seed).render());
+    }
+    if want("x7") {
+        timed("X7 (leased linearizable reads)", || exp::read_scaling_figure(seed).render());
     }
 }

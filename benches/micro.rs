@@ -101,6 +101,47 @@ fn main() {
             std::hint::black_box(Envelope::decode(&bytes).unwrap());
         }
     });
+    // Hot-path allocation satellite: frame-encode into a reused scratch
+    // buffer vs a fresh allocation per message (the TCP writer path).
+    bench("codec: frame-encode, alloc per message", |n| {
+        for _ in 0..n {
+            std::hint::black_box(matchmaker::net::encode_frame(&env));
+        }
+    });
+    let mut scratch = matchmaker::codec::Enc::new();
+    bench("codec: frame-encode, reused scratch", |n| {
+        for _ in 0..n {
+            matchmaker::net::encode_frame_into(&env, &mut scratch);
+            std::hint::black_box(scratch.buf.len());
+        }
+    });
+
+    // Hot-path allocation satellite: Chosen fan-out to 3 replicas via a
+    // cloned template vs broadcast_move (one Value clone saved per
+    // chosen slot — visible with batch values).
+    let batch = Value::Batch(
+        (0..32)
+            .map(|i| Command { client: i, seq: 1, payload: vec![0u8; 16] })
+            .collect(),
+    );
+    let replicas = [10u32, 11, 12];
+    bench("effects: broadcast cloned template (batch32)", |n| {
+        let mut fx = Effects::new();
+        for slot in 0..n {
+            let msg = Msg::Chosen { slot, value: batch.clone() };
+            fx.broadcast(&replicas, &msg);
+            fx.msgs.clear();
+        }
+        std::hint::black_box(&fx.msgs);
+    });
+    bench("effects: broadcast_move (batch32)", |n| {
+        let mut fx = Effects::new();
+        for slot in 0..n {
+            fx.broadcast_move(&replicas, Msg::Chosen { slot, value: batch.clone() });
+            fx.msgs.clear();
+        }
+        std::hint::black_box(&fx.msgs);
+    });
 
     // --- simulator event throughput, end-to-end cluster ---
     bench("sim: end-to-end command (8 clients)", |n| {
@@ -173,6 +214,27 @@ fn main() {
             run.throughput,
             run.median_ms,
             run.throughput / base
+        );
+    }
+
+    // --- leased reads: the X7 90/10 mix with reads through the log vs
+    // served by replicas under leases, at equal offered load (see
+    // harness::experiments::read_scaling_figure for the full report) ---
+    println!("\n# leased reads (90/10 mix, 8 clients x 2000/s, 40 us/msg egress, 3 sim-seconds)\n");
+    let mut base_ops = f64::NAN;
+    for (label, variant) in [
+        ("all through Phase 2 (baseline)", matchmaker::harness::experiments::ReadVariant::Baseline),
+        ("leased replica reads", matchmaker::harness::experiments::ReadVariant::Leased),
+    ] {
+        let run = matchmaker::harness::experiments::run_read_scaling(42, variant, secs(3));
+        if base_ops.is_nan() {
+            base_ops = run.summary.completed_per_sec;
+        }
+        println!(
+            "{label:<40} {:>10.0} ops/s (sim)   p50 {:>7.3} ms   {:>5.1}x",
+            run.summary.completed_per_sec,
+            run.summary.latency.median,
+            run.summary.completed_per_sec / base_ops
         );
     }
 

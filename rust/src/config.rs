@@ -115,6 +115,73 @@ impl SnapshotSpec {
     }
 }
 
+/// Read-lease policy for linearizable reads served by replicas
+/// (DESIGN.md §Reads). While enabled, the leader keeps a **leadership
+/// lease** alive by round-fenced renewals acknowledged by a P2 quorum of
+/// the active configuration, and forwards it to the replicas as
+/// [`crate::msg::Msg::LeaseGrant`]s carrying the chosen watermark.
+/// A replica holding an active grant serves a read without contacting
+/// the leader: it waits for the first grant issued *after* the read
+/// arrived (grants are pushed continuously, so this costs no extra
+/// messages), then answers once its applied prefix covers the grant's
+/// watermark. Lapsed leases fall back to a one-message ReadIndex.
+///
+/// Fencing: any new round's Phase 1 quorum intersects every P2 quorum
+/// of the prior configurations, so a deposed leader's renewals are
+/// nacked from the new round's Phase 1 onward; the new leader
+/// additionally waits `duration + drift` after completing Phase 1
+/// before choosing commands, which outlives every grant the old leader
+/// could still have issued. Reconfigurations by the *same* leader keep
+/// the same watermark lineage and need no fence; matchmaker migrations
+/// conservatively pause renewals so outstanding leases lapse.
+///
+/// Disabled by default: the paper routes every operation through
+/// Phase 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaseSpec {
+    /// Whether the leader grants read leases at all.
+    pub enabled: bool,
+    /// Lease validity measured from the renewal's *send* time. Also the
+    /// length of the post-election fence.
+    pub duration: Time,
+    /// Renewal cadence (must be well under `duration` or the lease
+    /// flaps between renewals).
+    pub refresh: Time,
+    /// Conservative clock-drift bound: subtracted from the validity the
+    /// leader advertises to replicas and added to the new-leader fence.
+    /// The simulator's clock is global, so this models the real-world
+    /// bound rather than compensating for an actual skew.
+    pub drift: Time,
+}
+
+impl Default for LeaseSpec {
+    fn default() -> Self {
+        LeaseSpec { enabled: false, duration: 50 * MS, refresh: 2 * MS, drift: 100 * US }
+    }
+}
+
+impl LeaseSpec {
+    /// An enabled policy with the given validity window. Refresh is
+    /// clamped to at most `duration / 4` (a lease that expires between
+    /// renewals serves no reads), and everything is kept ≥ 1 µs so the
+    /// config text format (microseconds) round-trips.
+    pub fn every(duration: Time, refresh: Time, drift: Time) -> LeaseSpec {
+        let duration = duration.max(4 * US);
+        LeaseSpec {
+            enabled: true,
+            duration,
+            refresh: refresh.clamp(US, duration / 4),
+            drift: drift.max(US),
+        }
+    }
+
+    /// Minimum gap between watermark-advance grant pushes (throttles
+    /// the per-chosen-slot broadcast; see the leader's `push_grant`).
+    pub fn push_gap(&self) -> Time {
+        (self.refresh / 8).max(50 * US)
+    }
+}
+
 /// Protocol optimization flags (§3.4, §8.2 ablation). All on by default;
 /// the ablation experiment (Figure 17) toggles subsets off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -151,6 +218,9 @@ pub struct OptFlags {
     /// Snapshotting + log truncation policy (off by default; see
     /// [`SnapshotSpec`]).
     pub snapshot: SnapshotSpec,
+    /// Read-lease policy for replica-served linearizable reads (off by
+    /// default; see [`LeaseSpec`]).
+    pub leases: LeaseSpec,
 }
 
 impl Default for OptFlags {
@@ -165,6 +235,7 @@ impl Default for OptFlags {
             batch_size: 1,
             batch_delay: MS,
             snapshot: SnapshotSpec::default(),
+            leases: LeaseSpec::default(),
         }
     }
 }
@@ -182,6 +253,7 @@ impl OptFlags {
             batch_size: 1,
             batch_delay: MS,
             snapshot: SnapshotSpec::default(),
+            leases: LeaseSpec::default(),
         }
     }
 
@@ -195,6 +267,12 @@ impl OptFlags {
     /// Enable snapshotting + log truncation (builder-style).
     pub fn with_snapshots(mut self, spec: SnapshotSpec) -> OptFlags {
         self.snapshot = spec;
+        self
+    }
+
+    /// Enable read leases (builder-style).
+    pub fn with_leases(mut self, spec: LeaseSpec) -> OptFlags {
+        self.leases = spec;
         self
     }
 }
@@ -452,6 +530,14 @@ impl DeploymentConfig {
                 o.snapshot.tail
             ));
         }
+        if o.leases.enabled {
+            out.push_str(&format!(
+                "leases = duration_us:{},refresh_us:{},drift_us:{}\n",
+                o.leases.duration / US,
+                o.leases.refresh / US,
+                o.leases.drift / US
+            ));
+        }
         let w = &self.workload;
         let mut wl = String::from("workload = ");
         match w.mode {
@@ -472,6 +558,9 @@ impl DeploymentConfig {
             ",payload_bytes:{payload_bytes},resend_ms:{}",
             w.resend_after / MS
         ));
+        if w.read_fraction > 0.0 {
+            wl.push_str(&format!(",read_fraction:{}", w.read_fraction));
+        }
         if w.keys != 1024 {
             wl.push_str(&format!(",keys:{}", w.keys));
         }
@@ -601,6 +690,30 @@ impl DeploymentConfig {
                     }
                     cfg.opts.snapshot = SnapshotSpec::every(interval, tail);
                 }
+                "leases" => {
+                    let mut duration = cfg.opts.leases.duration;
+                    let mut refresh = cfg.opts.leases.refresh;
+                    let mut drift = cfg.opts.leases.drift;
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("leases: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        let us: u64 = v.parse().map_err(|e| format!("leases {}: {e}", k.trim()))?;
+                        match k.trim() {
+                            "duration_us" => duration = us * US,
+                            "duration_ms" => duration = us * MS,
+                            "refresh_us" => refresh = us * US,
+                            "refresh_ms" => refresh = us * MS,
+                            "drift_us" => drift = us * US,
+                            other => return Err(format!("unknown leases key {other:?}")),
+                        }
+                    }
+                    if duration == 0 {
+                        return Err("leases duration must be positive".into());
+                    }
+                    cfg.opts.leases = LeaseSpec::every(duration, refresh, drift);
+                }
                 "workload" => {
                     let mut mode = "closed".to_string();
                     let mut window = 1usize;
@@ -612,6 +725,7 @@ impl DeploymentConfig {
                     let mut start_ms: u64 = 0;
                     let mut stop_ms: Option<u64> = None;
                     let mut keys: u64 = 1024;
+                    let mut read_fraction: f64 = 0.0;
                     for part in value.split(',') {
                         let (k, v) = part
                             .split_once(':')
@@ -668,6 +782,16 @@ impl DeploymentConfig {
                                     return Err("workload keys must be >= 1".into());
                                 }
                             }
+                            "read_fraction" => {
+                                read_fraction = v
+                                    .parse()
+                                    .map_err(|e| format!("workload read_fraction: {e}"))?;
+                                if !(0.0..=1.0).contains(&read_fraction) {
+                                    return Err(format!(
+                                        "workload read_fraction must be in [0, 1]: {v}"
+                                    ));
+                                }
+                            }
                             other => return Err(format!("unknown workload key {other:?}")),
                         }
                     }
@@ -698,6 +822,8 @@ impl DeploymentConfig {
                     cfg.workload = WorkloadSpec {
                         mode,
                         payload: PayloadSpec::Fixed(vec![0u8; payload_bytes.max(1)]),
+                        read_payload: PayloadSpec::Fixed(Vec::new()),
+                        read_fraction,
                         start_at: start_ms * MS,
                         stop_at: stop_ms.map_or(u64::MAX, |s| s * MS),
                         resend_after: resend_ms.max(1) * MS,
@@ -912,6 +1038,57 @@ mod tests {
             "{base}snapshot = interval_us:0\n"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn text_config_lease_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        // Default: disabled (no leases line emitted).
+        assert!(!base.contains("leases ="));
+        assert!(!DeploymentConfig::from_text(&base).unwrap().opts.leases.enabled);
+        // A leases line enables it; ms and us spellings both parse.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}leases = duration_ms:40,refresh_ms:2,drift_us:200\n"
+        ))
+        .unwrap();
+        assert!(cfg.opts.leases.enabled);
+        assert_eq!(cfg.opts.leases.duration, 40 * MS);
+        assert_eq!(cfg.opts.leases.refresh, 2 * MS);
+        assert_eq!(cfg.opts.leases.drift, 200 * US);
+        // Round trip through to_text.
+        let mut with = DeploymentConfig::standard(1, 1);
+        with.opts.leases = LeaseSpec::every(40 * MS, 2 * MS, 200 * US);
+        let back = DeploymentConfig::from_text(&with.to_text()).unwrap();
+        assert_eq!(back.opts.leases, with.opts.leases);
+        // Refresh clamps to duration / 4 (a lease that expires between
+        // renewals serves no reads).
+        let clamped = LeaseSpec::every(8 * MS, 100 * MS, US);
+        assert_eq!(clamped.refresh, 2 * MS);
+        // Bad keys / zero duration rejected.
+        assert!(DeploymentConfig::from_text(&format!("{base}leases = bogus:1\n")).is_err());
+        assert!(
+            DeploymentConfig::from_text(&format!("{base}leases = duration_us:0\n")).is_err()
+        );
+    }
+
+    #[test]
+    fn text_config_read_fraction_knob() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:1000,read_fraction:0.9\n"
+        ))
+        .unwrap();
+        assert!((cfg.workload.read_fraction - 0.9).abs() < 1e-9);
+        // Default zero; out-of-range rejected; round-trips when set.
+        assert_eq!(DeploymentConfig::from_text(&base).unwrap().workload.read_fraction, 0.0);
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:closed,read_fraction:1.5\n"
+        ))
+        .is_err());
+        let mut with = DeploymentConfig::standard(1, 1);
+        with.workload = WorkloadSpec::closed_loop().read_fraction(0.25);
+        let back = DeploymentConfig::from_text(&with.to_text()).unwrap();
+        assert!((back.workload.read_fraction - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -4,19 +4,20 @@
 //! who wins, where the stalls are, what recovers when — are the point.
 
 use super::report::{
-    CurveReport, FigureReport, OpenLoopReport, RetentionReport, ShardReport, TableReport,
-    ViolinReport,
+    BenchJson, BenchRow, CurveReport, FigureReport, OpenLoopReport, ReadReport, RetentionReport,
+    ShardReport, TableReport, ViolinReport,
 };
 use super::{msec, secs, Cluster, HorizontalCluster, ShardedCluster};
-use crate::config::{Configuration, OptFlags, SnapshotSpec};
+use crate::config::{Configuration, LeaseSpec, OptFlags, SnapshotSpec};
 use crate::metrics::{
-    group_summary, interval_summary, open_loop_summary, rate_in_window, timeline, GroupSummary,
-    OpenLoopSummary, RetentionSummary, Sample, Timeline,
+    check_counter_reads, group_summary, interval_summary, open_loop_summary, rate_in_window,
+    read_mix_summary, timeline, GroupSummary, OpenLoopSummary, ReadMixSummary, ReadSample,
+    RetentionSummary, Sample, Timeline,
 };
 use crate::roles::{HorizontalLeader, Leader, Replica};
 use crate::round::Round;
 use crate::sim::NetworkModel;
-use crate::statemachine::TensorStateMachine;
+use crate::statemachine::{Counter, TensorStateMachine};
 use crate::util::stats;
 use crate::workload::WorkloadSpec;
 use crate::{NodeId, Time, MS, SEC, US};
@@ -1039,6 +1040,249 @@ pub fn sharding_figure(seed: u64) -> ShardReport {
     rep
 }
 
+/// Which read path an X7 run exercises.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReadVariant {
+    /// Reads ride the log through the leader like writes — the
+    /// all-through-Phase-2 baseline.
+    Baseline,
+    /// Reads go to replicas but leases are off: every pending-read
+    /// batch costs a quorum-confirmed ReadIndex at the leader (the
+    /// lease-expiry fallback path, exercised standalone).
+    ReadIndexOnly,
+    /// Leased: replicas resolve reads from continuously pushed grants,
+    /// no per-read leader traffic.
+    Leased,
+}
+
+/// Output of one X7 read-scaling run.
+pub struct ReadScalingRun {
+    /// Read/write-mix throughput + latency summary.
+    pub summary: ReadMixSummary,
+    /// Every completed read `(issued, completed, result)` — checker input.
+    pub reads: Vec<ReadSample>,
+    /// Completion times of acknowledged writes.
+    pub write_completions: Vec<Time>,
+    /// Issue times of all writes ever sent.
+    pub write_issues: Vec<Time>,
+    /// Per-replica `(id, reads_leased, reads_indexed)`.
+    pub read_path: Vec<(NodeId, u64, u64)>,
+    /// Rounds the initial leader installed (startup + storm).
+    pub reconfigs_completed: u64,
+}
+
+impl ReadScalingRun {
+    /// Assert that every completed read was linearizable w.r.t. the
+    /// global write history (counter semantics: +1 writes, total reads).
+    pub fn check_linearizable(&self) -> Result<(), String> {
+        check_counter_reads(&self.reads, &self.write_completions, &self.write_issues)
+    }
+}
+
+/// One X7 run: 8 open-loop clients offering 16k ops/s total at a 90/10
+/// read/write mix against a Counter state machine (+1 writes, total
+/// reads — every read is checkable against the global write history),
+/// under the X6 egress model (40 µs/msg on the sender's NIC, which caps
+/// one leader's Phase-2 fan-out at a few thousand ops/s), with a
+/// 5-reconfiguration storm mid-run. The baseline routes all 16k ops/s
+/// through the leader's Phase 2; the leased variant moves the 90% read
+/// share onto the replicas, off the leader's NIC entirely.
+pub fn run_read_scaling(seed: u64, variant: ReadVariant, duration: Time) -> ReadScalingRun {
+    assert!(duration >= secs(3), "the storm schedule needs >= 3 s");
+    let mut opts = OptFlags::default();
+    if variant == ReadVariant::Leased {
+        opts.leases = LeaseSpec::every(50 * MS, 2 * MS, 100 * US);
+    }
+    let mut net = NetworkModel::default();
+    net.tx_overhead = 40 * US;
+    let n_clients = 8;
+    let per_client_rate = 2000.0; // 16k/s offered total
+    // Stop arrivals before the horizon so in-flight tails drain.
+    let stop = duration.saturating_sub(500 * MS);
+    let workload = WorkloadSpec::open_loop(per_client_rate)
+        .max_in_flight(32)
+        .read_fraction(0.9)
+        .payload(1i64.to_le_bytes().to_vec())
+        .read_payload(Vec::new())
+        .stop_at(stop);
+    let mut cluster = Cluster::builder()
+        .clients(n_clients)
+        .workload(workload)
+        .opts(opts)
+        .route_reads(variant != ReadVariant::Baseline)
+        .seed(seed)
+        .net(net)
+        .build();
+    for &r in &cluster.layout.replicas.clone() {
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            rep.sm = Box::new(Counter::new());
+        }
+    }
+    // 5-reconfiguration storm starting at 40% of the run: leases must
+    // stay correct (or lapse into the fallback) across every change.
+    let leader = cluster.initial_leader();
+    let storm_from = duration * 2 / 5;
+    for i in 0..5u64 {
+        let cfg = cluster.random_config(i + 1);
+        cluster.sim.schedule(storm_from + i * 150 * MS, move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(cfg.clone(), now, fx));
+        });
+    }
+    cluster.sim.run_until(duration);
+    cluster.assert_safe();
+    let samples = cluster.samples();
+    let (offered, _, _) = cluster.workload_totals();
+    let reads_completed = cluster.reads_completed();
+    let summary = read_mix_summary(&samples, offered, reads_completed, duration)
+        .expect("read-scaling run produced no samples");
+    let reads = cluster.read_records();
+    let (write_completions, write_issues) = cluster.write_records();
+    let read_path = cluster.read_path_stats();
+    let reconfigs_completed = cluster
+        .sim
+        .node_mut::<Leader>(leader)
+        .map(|l| l.reconfigs_completed)
+        .unwrap_or(0);
+    ReadScalingRun {
+        summary,
+        reads,
+        write_completions,
+        write_issues,
+        read_path,
+        reconfigs_completed,
+    }
+}
+
+/// X7 report: the three read-path variants side by side at equal
+/// offered load, each checked for read linearizability.
+pub fn read_scaling_figure(seed: u64) -> ReadReport {
+    let duration = secs(3);
+    let mut rep = ReadReport {
+        id: "X7".into(),
+        title: "leased linearizable reads: 90/10 mix, 8 open-loop clients x 2000/s, \
+                Counter SM, 40 µs/msg egress, 5-reconfig storm mid-run"
+            .into(),
+        ..Default::default()
+    };
+    let variants = [
+        ("all_through_phase2", ReadVariant::Baseline),
+        ("read_index_no_lease", ReadVariant::ReadIndexOnly),
+        ("leases_on", ReadVariant::Leased),
+    ];
+    let mut baseline = f64::NAN;
+    let mut leased = f64::NAN;
+    for (label, variant) in variants {
+        let run = run_read_scaling(seed, variant, duration);
+        match run.check_linearizable() {
+            Ok(()) => rep.notes.push(format!(
+                "{label}: {} reads, zero stale across {} reconfigurations",
+                run.summary.reads,
+                run.reconfigs_completed.saturating_sub(1)
+            )),
+            Err(e) => rep.notes.push(format!("{label}: LINEARIZABILITY VIOLATION: {e}")),
+        }
+        if variant == ReadVariant::Baseline {
+            baseline = run.summary.completed_per_sec;
+        }
+        if variant == ReadVariant::Leased {
+            leased = run.summary.completed_per_sec;
+        }
+        if variant != ReadVariant::Baseline {
+            rep.replicas.push((label.to_string(), run.read_path.clone()));
+        }
+        rep.rows.push((label.to_string(), run.summary));
+    }
+    rep.notes.push(format!(
+        "leases vs all-through-Phase-2 at equal offered load: {:.1}x \
+         ({:.0} vs {:.0} ops/s; acceptance target >= 2x)",
+        leased / baseline,
+        leased,
+        baseline
+    ));
+    rep
+}
+
+/// Machine-readable perf rows for the `--bench-json` trajectory
+/// (satellite: BENCH_x*.json; schema in DESIGN.md §Bench trajectory).
+/// Purpose-built short runs — not the full figures — so CI can emit a
+/// row set per experiment in a few seconds of wall clock each.
+pub fn bench_json_for(id: &str, seed: u64) -> Option<BenchJson> {
+    let row = |label: &str, throughput: f64, p50: f64, p99: f64, offered: f64| BenchRow {
+        label: label.to_string(),
+        throughput,
+        p50_ms: p50,
+        p99_ms: p99,
+        offered_per_sec: offered,
+    };
+    let rows = match id {
+        "x3" | "batch" => [1usize, 32]
+            .iter()
+            .map(|&bs| {
+                let r = run_batching_throughput(seed, bs, 32, secs(3));
+                row(&format!("batch_{bs}"), r.throughput, r.median_ms, f64::NAN, f64::NAN)
+            })
+            .collect(),
+        "x4" | "openloop" => {
+            let closed = run_closed_loop_rate(4, 1, seed, secs(3));
+            let open = run_offered_load(4, 6000.0, 16, false, seed, secs(3));
+            vec![
+                row("closed_loop", closed, f64::NAN, f64::NAN, f64::NAN),
+                row(
+                    "open_pipelined",
+                    open.completed_per_sec,
+                    open.latency.median,
+                    open.latency.p99,
+                    open.offered_per_sec,
+                ),
+            ]
+        }
+        "x5" | "retention" => [false, true]
+            .iter()
+            .map(|&snapshots| {
+                let r = run_retention(seed, snapshots, secs(5));
+                row(
+                    if snapshots { "snapshots_on" } else { "snapshots_off" },
+                    r.completed_per_sec,
+                    f64::NAN,
+                    f64::NAN,
+                    f64::NAN,
+                )
+            })
+            .collect(),
+        "x6" | "shards" => [1usize, 4]
+            .iter()
+            .map(|&shards| {
+                let r = run_sharded_scaleout(seed, shards, secs(3));
+                row(
+                    &format!("groups_{shards}"),
+                    r.aggregate_per_sec,
+                    f64::NAN,
+                    f64::NAN,
+                    r.offered_per_sec,
+                )
+            })
+            .collect(),
+        "x7" | "reads" => [
+            ("all_through_phase2", ReadVariant::Baseline),
+            ("leases_on", ReadVariant::Leased),
+        ]
+        .iter()
+        .map(|&(label, variant)| {
+            let r = run_read_scaling(seed, variant, secs(3));
+            row(
+                label,
+                r.summary.completed_per_sec,
+                r.summary.latency.median,
+                r.summary.latency.p99,
+                r.summary.offered_per_sec,
+            )
+        })
+        .collect(),
+        _ => return None,
+    };
+    Some(BenchJson { experiment: id.to_string(), seed, rows })
+}
+
 /// X2: Matchmaker Fast Paxos (§7) — fast-path success with f+1 acceptors.
 /// Runs many independent single-decree instances; in each, 1–2 clients
 /// race. Reports fast-path vs recovery counts; safety is asserted.
@@ -1147,6 +1391,7 @@ pub fn run_all(seed: u64) -> Vec<(String, String)> {
     out.push(("X4".into(), open_loop_figure(seed).render()));
     out.push(("X5".into(), retention_figure(seed).render()));
     out.push(("X6".into(), sharding_figure(seed).render()));
+    out.push(("X7".into(), read_scaling_figure(seed).render()));
     out
 }
 
@@ -1318,7 +1563,34 @@ mod tests {
     // The X6 acceptance gate (sharded_scaleout_meets_acceptance) lives in
     // rust/tests/safety_properties.rs: it simulates two full saturated
     // multi-group runs, which belongs with the other slow seeded suites
-    // in the release-mode CI job, not the fast debug loop.
+    // in the release-mode CI job, not the fast debug loop. The X7 gate
+    // (read_scaling_meets_acceptance) lives there too, for the same
+    // reason; here only a short leased smoke runs.
+
+    #[test]
+    fn read_scaling_smoke() {
+        let run = run_read_scaling(42, ReadVariant::Leased, secs(3));
+        assert!(run.summary.reads > 1000, "leased reads barely ran: {}", run.summary.reads);
+        assert!(run.summary.writes > 100, "writes starved: {}", run.summary.writes);
+        assert!(run.reconfigs_completed >= 6, "storm too small: {}", run.reconfigs_completed);
+        run.check_linearizable().expect("leased reads linearizable");
+        // The leased path actually served reads from grants.
+        let leased: u64 = run.read_path.iter().map(|(_, l, _)| *l).sum();
+        assert!(leased > 0, "no reads took the leased path: {:?}", run.read_path);
+    }
+
+    #[test]
+    fn bench_json_rows_cover_x3_to_x7() {
+        // Cheap schema check only for the ids that don't simulate:
+        // unknown ids yield None, known ids are listed.
+        assert!(bench_json_for("nope", 1).is_none());
+        // One real (short) row set: x7's two variants.
+        let b = bench_json_for("x7", 42).expect("x7 rows");
+        assert_eq!(b.rows.len(), 2);
+        assert!(b.rows.iter().all(|r| r.throughput > 0.0));
+        let j = b.to_json();
+        assert!(j.contains("\"experiment\":\"x7\""));
+    }
 
     #[test]
     fn batching_latency_stays_bounded() {

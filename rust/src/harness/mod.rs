@@ -68,6 +68,7 @@ pub struct ClusterBuilder {
     seed: u64,
     net: NetworkModel,
     pool_factor: usize,
+    route_reads: bool,
 }
 
 impl Default for ClusterBuilder {
@@ -80,6 +81,7 @@ impl Default for ClusterBuilder {
             seed: 42,
             net: NetworkModel::lan(),
             pool_factor: 2,
+            route_reads: true,
         }
     }
 }
@@ -130,11 +132,21 @@ impl ClusterBuilder {
         self
     }
 
+    /// Whether clients know the replica set and send read-classified
+    /// requests there (default true). `route_reads(false)` is the
+    /// all-through-Phase-2 baseline: reads ride the log like writes —
+    /// the X7 comparison point.
+    pub fn route_reads(mut self, on: bool) -> Self {
+        self.route_reads = on;
+        self
+    }
+
     /// Build and start the cluster: the first proposer becomes leader,
     /// the first `2f+1` acceptors form the initial configuration, and
     /// clients start their workloads.
     pub fn build(self) -> Cluster {
-        let ClusterBuilder { f, clients, workload, opts, seed, net, pool_factor } = self;
+        let ClusterBuilder { f, clients, workload, opts, seed, net, pool_factor, route_reads } =
+            self;
         let layout = ClusterLayout::standard(f, pool_factor, clients);
         layout.validate().expect("valid layout");
         let mut sim = Sim::new(seed, net);
@@ -160,6 +172,7 @@ impl ClusterBuilder {
             let mut rep = Replica::new(r, Box::new(Noop));
             rep.snapshot = opts.snapshot;
             rep.peers = layout.replicas.clone();
+            rep.proposers = layout.proposers.clone();
             sim.add_node(r, Box::new(rep));
         }
         // Proposers: all run the Leader role; proposers[0] self-elects at
@@ -177,12 +190,15 @@ impl ClusterBuilder {
             );
             sim.add_node(p, Box::new(leader));
         }
-        // Clients, each driven by the shared workload spec.
+        // Clients, each driven by the shared workload spec. With
+        // `route_reads` (the default) they know the replica set, so
+        // read-classified requests take the replica read path.
         for &c in &layout.clients {
-            sim.add_node(
-                c,
-                Box::new(Client::new(c, layout.proposers.clone(), workload.clone())),
-            );
+            let mut cl = Client::new(c, layout.proposers.clone(), workload.clone());
+            if route_reads {
+                cl.replicas = layout.replicas.clone();
+            }
+            sim.add_node(c, Box::new(cl));
         }
         Cluster { layout, sim, opts, f, workload, rng: Rng::new(seed ^ 0xc1a5) }
     }
@@ -266,6 +282,63 @@ impl Cluster {
         out
     }
 
+    /// Total reads completed across all clients (replica-served and
+    /// through-the-log baseline reads both count).
+    pub fn reads_completed(&mut self) -> u64 {
+        let clients = self.layout.clients.clone();
+        let mut total = 0u64;
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<Client>(c) {
+                total += cl.reads_completed;
+            }
+        }
+        total
+    }
+
+    /// Harvest every client's completed-read records `(issued_at,
+    /// completed_at, result)`, merged — the linearizable-read checker's
+    /// input ([`crate::metrics::check_counter_reads`]). Copies (like
+    /// [`Cluster::write_records`]) so repeated harvests agree — a
+    /// drained second harvest would make the stale-read check pass
+    /// vacuously.
+    pub fn read_records(&mut self) -> Vec<crate::metrics::ReadSample> {
+        let clients = self.layout.clients.clone();
+        let mut all = Vec::new();
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<Client>(c) {
+                all.extend(cl.reads.iter().cloned());
+            }
+        }
+        all
+    }
+
+    /// Harvest the global write history: `(completion times of
+    /// acknowledged writes, issue times of all writes ever sent)`.
+    pub fn write_records(&mut self) -> (Vec<Time>, Vec<Time>) {
+        let clients = self.layout.clients.clone();
+        let (mut completions, mut issues) = (Vec::new(), Vec::new());
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<Client>(c) {
+                completions.extend(cl.writes.iter().map(|(_, done)| *done));
+                issues.extend(cl.write_issues.iter().copied());
+            }
+        }
+        (completions, issues)
+    }
+
+    /// Per-replica read-path counters: `(replica, reads served from a
+    /// lease grant, reads served via ReadIndex)`.
+    pub fn read_path_stats(&mut self) -> Vec<(NodeId, u64, u64)> {
+        let replicas = self.layout.replicas.clone();
+        let mut out = Vec::with_capacity(replicas.len());
+        for r in replicas {
+            if let Some(rep) = self.sim.node_mut::<Replica>(r) {
+                out.push((r, rep.reads_leased, rep.reads_indexed));
+            }
+        }
+        out
+    }
+
     /// Assert the global safety invariant (used by tests after every
     /// experiment): at most one value chosen per slot.
     pub fn assert_safe(&self) {
@@ -332,6 +405,7 @@ pub struct ShardedClusterBuilder {
     seed: u64,
     net: NetworkModel,
     pool_factor: usize,
+    route_reads: bool,
 }
 
 impl Default for ShardedClusterBuilder {
@@ -345,6 +419,7 @@ impl Default for ShardedClusterBuilder {
             seed: 42,
             net: NetworkModel::lan(),
             pool_factor: 2,
+            route_reads: true,
         }
     }
 }
@@ -398,12 +473,29 @@ impl ShardedClusterBuilder {
         self
     }
 
+    /// Whether shard clients route read-classified requests to their
+    /// key's home-group replicas (default true); `false` is the
+    /// all-through-Phase-2 baseline.
+    pub fn route_reads(mut self, on: bool) -> Self {
+        self.route_reads = on;
+        self
+    }
+
     /// Build and start the cluster: one shared matchmaker pool, then per
     /// group its proposers/acceptors/replicas, then the clients. Every
     /// group's first proposer self-elects at start.
     pub fn build(self) -> ShardedCluster {
-        let ShardedClusterBuilder { shards, f, clients, workload, opts, seed, net, pool_factor } =
-            self;
+        let ShardedClusterBuilder {
+            shards,
+            f,
+            clients,
+            workload,
+            opts,
+            seed,
+            net,
+            pool_factor,
+            route_reads,
+        } = self;
         let mut sim = Sim::new(seed, net);
         let mut next: NodeId = 0;
         let mut take = |n: usize| -> Vec<NodeId> {
@@ -440,6 +532,7 @@ impl ShardedClusterBuilder {
                 rep.group = g;
                 rep.snapshot = opts.snapshot;
                 rep.peers = layout.replicas.clone();
+                rep.proposers = layout.proposers.clone();
                 sim.add_node(r, Box::new(rep));
             }
             let initial_cfg =
@@ -461,11 +554,14 @@ impl ShardedClusterBuilder {
         }
         let proposer_lists: Vec<Vec<NodeId>> =
             groups.iter().map(|gl| gl.proposers.clone()).collect();
+        let replica_lists: Vec<Vec<NodeId>> =
+            groups.iter().map(|gl| gl.replicas.clone()).collect();
         for &c in &client_ids {
-            sim.add_node(
-                c,
-                Box::new(ShardClient::new(c, proposer_lists.clone(), workload.clone())),
-            );
+            let mut cl = ShardClient::new(c, proposer_lists.clone(), workload.clone());
+            if route_reads {
+                cl.replicas_per_group(replica_lists.clone());
+            }
+            sim.add_node(c, Box::new(cl));
         }
         ShardedCluster {
             sim,
@@ -570,6 +666,46 @@ impl ShardedCluster {
                 self.sim.node_mut::<Matchmaker>(m).map(|mm| (m, mm.total_log_len()))
             })
             .collect()
+    }
+
+    /// Total reads completed across all shard clients.
+    pub fn reads_completed(&mut self) -> u64 {
+        let clients = self.clients.clone();
+        let mut total = 0u64;
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<ShardClient>(c) {
+                total += cl.reads_completed;
+            }
+        }
+        total
+    }
+
+    /// Harvest every shard client's completed-read records, merged.
+    /// Copies (like [`ShardedCluster::write_records`]) so repeated
+    /// harvests agree.
+    pub fn read_records(&mut self) -> Vec<crate::metrics::ReadSample> {
+        let clients = self.clients.clone();
+        let mut all = Vec::new();
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<ShardClient>(c) {
+                all.extend(cl.reads.iter().cloned());
+            }
+        }
+        all
+    }
+
+    /// Harvest the global write history across all shard clients:
+    /// `(completions, issues)` — see [`Cluster::write_records`].
+    pub fn write_records(&mut self) -> (Vec<Time>, Vec<Time>) {
+        let clients = self.clients.clone();
+        let (mut completions, mut issues) = (Vec::new(), Vec::new());
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<ShardClient>(c) {
+                completions.extend(cl.writes.iter().map(|(_, done)| *done));
+                issues.extend(cl.write_issues.iter().copied());
+            }
+        }
+        (completions, issues)
     }
 
     /// Assert the per-group chosen-safety invariant.

@@ -236,6 +236,126 @@ impl ShardReport {
     }
 }
 
+/// The X7 leased-read experiment: per-variant read/write-mix rows plus
+/// per-replica read-path counters.
+#[derive(Debug, Default)]
+pub struct ReadReport {
+    pub id: String,
+    pub title: String,
+    /// `(label, mix summary)` — one row per variant (baseline /
+    /// ReadIndex-only / leased).
+    pub rows: Vec<(String, crate::metrics::ReadMixSummary)>,
+    /// `(label, per-replica (id, leased, indexed))`.
+    pub replicas: Vec<(String, Vec<(crate::NodeId, u64, u64)>)>,
+    pub notes: Vec<String>,
+}
+
+impl ReadReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        let _ = writeln!(
+            out,
+            "variant\toffered/s\tcompleted/s\treads\twrites\tp50_ms\tp99_ms"
+        );
+        for (label, s) in &self.rows {
+            let _ = writeln!(
+                out,
+                "{label}\t{:.0}\t{:.0}\t{}\t{}\t{:.3}\t{:.3}",
+                s.offered_per_sec,
+                s.completed_per_sec,
+                s.reads,
+                s.writes,
+                s.latency.median,
+                s.latency.p99
+            );
+        }
+        for (label, reps) in &self.replicas {
+            let _ = writeln!(out, "--- read path: {label} ---");
+            let _ = writeln!(out, "replica\tleased\tindexed");
+            for (id, leased, indexed) in reps {
+                let _ = writeln!(out, "{id}\t{leased}\t{indexed}");
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
+/// One perf-trajectory row: what a `BENCH_x*.json` line carries.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Variant label (e.g. "batch_32", "leases_on").
+    pub label: String,
+    /// Completed operations per simulated second.
+    pub throughput: f64,
+    /// Median latency, ms (NaN → `null` in the JSON).
+    pub p50_ms: f64,
+    /// 99th-percentile latency, ms (NaN → `null`).
+    pub p99_ms: f64,
+    /// Offered arrivals per second (NaN → `null` for closed loops).
+    pub offered_per_sec: f64,
+}
+
+/// Machine-readable experiment summary, written by `repro exp <id>
+/// --bench-json <path>` so the repo accumulates a perf trajectory
+/// across PRs. Schema (documented in DESIGN.md §Bench trajectory):
+///
+/// ```json
+/// {"experiment":"x7","seed":42,
+///  "rows":[{"label":"leases_on","throughput":12345.0,
+///           "p50_ms":0.42,"p99_ms":1.9,"offered_per_sec":16000.0}]}
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchJson {
+    pub experiment: String,
+    pub seed: u64,
+    pub rows: Vec<BenchRow>,
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl BenchJson {
+    /// Serialize (hand-rolled: the build is dependency-free). Labels
+    /// are experiment-internal identifiers (no quoting hazards beyond
+    /// the basic escapes handled here).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let _ = write!(
+            out,
+            "{{\"experiment\":\"{}\",\"seed\":{},\"rows\":[",
+            esc(&self.experiment),
+            self.seed
+        );
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"label\":\"{}\",\"throughput\":{},\"p50_ms\":{},\"p99_ms\":{},\
+                 \"offered_per_sec\":{}}}",
+                esc(&r.label),
+                json_num(r.throughput),
+                json_num(r.p50_ms),
+                json_num(r.p99_ms),
+                json_num(r.offered_per_sec)
+            );
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
 /// Violin-plot data (Figures 12/13): distribution quartiles per window.
 #[derive(Debug, Default)]
 pub struct ViolinReport {
@@ -349,6 +469,64 @@ mod tests {
         assert!(text.contains("15000"));
         assert!(text.contains("3750"));
         assert!(text.contains("note: scales"));
+    }
+
+    #[test]
+    fn read_report_renders() {
+        use crate::metrics::ReadMixSummary;
+        let s = ReadMixSummary {
+            offered: 16000,
+            completed: 15000,
+            reads: 13500,
+            writes: 1500,
+            offered_per_sec: 16000.0,
+            completed_per_sec: 15000.0,
+            latency: Stats { median: 0.4, p99: 2.0, ..Default::default() },
+        };
+        let r = ReadReport {
+            id: "X7".into(),
+            title: "leased reads".into(),
+            rows: vec![("leases_on".into(), s)],
+            replicas: vec![("leases_on".into(), vec![(14, 9000, 120)])],
+            notes: vec!["2x".into()],
+        };
+        let text = r.render();
+        assert!(text.contains("leases_on"));
+        assert!(text.contains("15000"));
+        assert!(text.contains("leased\tindexed"));
+        assert!(text.contains("note: 2x"));
+    }
+
+    #[test]
+    fn bench_json_schema() {
+        let b = BenchJson {
+            experiment: "x7".into(),
+            seed: 42,
+            rows: vec![
+                BenchRow {
+                    label: "leases_on".into(),
+                    throughput: 12345.0,
+                    p50_ms: 0.42,
+                    p99_ms: 1.9,
+                    offered_per_sec: 16000.0,
+                },
+                BenchRow {
+                    label: "closed".into(),
+                    throughput: 100.0,
+                    p50_ms: f64::NAN,
+                    p99_ms: f64::NAN,
+                    offered_per_sec: f64::NAN,
+                },
+            ],
+        };
+        let j = b.to_json();
+        assert!(j.starts_with("{\"experiment\":\"x7\",\"seed\":42,\"rows\":["));
+        assert!(j.contains("\"label\":\"leases_on\""));
+        assert!(j.contains("\"throughput\":12345.000"));
+        // NaNs become null (valid JSON), not bare NaN.
+        assert!(j.contains("\"p50_ms\":null"));
+        assert!(!j.contains("NaN"));
+        assert!(j.trim_end().ends_with("]}"));
     }
 
     #[test]

@@ -42,6 +42,26 @@
 //! experiment (`repro exp x6`) gates ≥ 2.5x aggregate throughput at 4
 //! groups. See DESIGN.md §Sharding.
 //!
+//! ## Linearizable reads
+//!
+//! Read-heavy workloads skip the Phase-2 hot path entirely: clients
+//! classify a fraction of requests as read-only (the
+//! [`workload::WorkloadSpec`] `read_fraction` knob) and send them to
+//! **replicas** ([`msg::Msg::Read`]), which
+//! answer from local state ([`statemachine::StateMachine::query`]) once
+//! their applied prefix covers a *read index*. With read leases enabled
+//! ([`config::LeaseSpec`], `leases =` config line) the leader keeps a
+//! quorum-confirmed leadership lease alive and continuously pushes its
+//! chosen watermark to the replicas ([`msg::Msg::LeaseGrant`]), so a
+//! leased read costs the leader nothing; without a lease the replica
+//! falls back to a one-message ReadIndex, still linearizable. The
+//! paper's reconfiguration machinery is what makes naive leases unsafe
+//! — renewals are fenced by P1/P2 quorum intersection and a new leader
+//! waits out the old lease before its first proposal; see DESIGN.md
+//! §Reads. The X7 experiment (`repro exp x7`) gates a ≥ 2x aggregate
+//! win for a 90/10 mix over the all-through-Phase-2 baseline, with
+//! every read checked against the global write history.
+//!
 //! ## State retention
 //!
 //! Long runs are memory-bounded by the state-retention subsystem

@@ -66,13 +66,17 @@ impl Args {
 }
 
 const USAGE: &str = "usage:
-  repro exp <id> [--seed N]        regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 all)
+  repro exp <id> [--seed N] [--bench-json PATH]
+      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 all)
+      --bench-json PATH   write a machine-readable BENCH_<id>.json row set
+                          (x3-x7; purpose-built short runs, schema in DESIGN.md)
   repro run --role R --id N --config FILE [--duration SECS]
       client role workload flags (override the config's `workload =` line):
         --workload closed|pipelined|open|open-poisson
         --rate N          open-loop arrivals/sec per client
         --window K        in-flight bound (closed-loop window / open-loop cap)
         --payload-bytes N command payload size
+        --read-fraction F fraction of requests issued as linearizable reads (0..=1)
   repro gen-config [--f N] [--clients N] [--base-port P]
   repro smoke                      run the tensor state machine end to end
 ";
@@ -88,6 +92,9 @@ fn main() -> Result<()> {
         "exp" => {
             let id = args.positional.first().context("exp: missing experiment id")?;
             let seed: u64 = args.flag("seed", 42)?;
+            if let Some(path) = args.flags.get("bench-json") {
+                return write_bench_json(id, seed, path);
+            }
             run_experiment(id, seed)
         }
         "run" => {
@@ -150,6 +157,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x4" | "openloop" => print!("{}", exp::open_loop_figure(seed).render()),
         "x5" | "retention" => print!("{}", exp::retention_figure(seed).render()),
         "x6" | "shards" => print!("{}", exp::sharding_figure(seed).render()),
+        "x7" | "reads" => print!("{}", exp::read_scaling_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -158,6 +166,19 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         }
         other => anyhow::bail!("unknown experiment id: {other} (try `repro exp all`)"),
     }
+    Ok(())
+}
+
+/// `repro exp <id> --bench-json <path>`: run the experiment's
+/// machine-readable row set and write it (the perf-trajectory artifact;
+/// schema in DESIGN.md §Bench trajectory).
+fn write_bench_json(id: &str, seed: u64, path: &str) -> Result<()> {
+    let bench = exp::bench_json_for(id, seed)
+        .with_context(|| format!("--bench-json supports x3..x7, not {id:?}"))?;
+    let json = bench.to_json();
+    std::fs::write(path, &json).with_context(|| format!("write {path}"))?;
+    print!("{json}");
+    eprintln!("wrote {path}");
     Ok(())
 }
 
@@ -206,6 +227,16 @@ fn client_workload(cfg: &DeploymentConfig, args: &Args) -> Result<WorkloadSpec> 
             .map_err(|e| anyhow::anyhow!("--payload-bytes {n:?}: {e}"))?;
         spec = spec.payload_bytes(n);
     }
+    if let Some(f) = args.flags.get("read-fraction") {
+        let frac: f64 = f
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--read-fraction {f:?}: {e}"))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&frac),
+            "--read-fraction must be in [0, 1], got {frac}"
+        );
+        spec = spec.read_fraction(frac);
+    }
     Ok(spec)
 }
 
@@ -244,6 +275,7 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
             rep.group = group;
             rep.snapshot = cfg.opts.snapshot;
             rep.peers = gl.replicas.clone();
+            rep.proposers = gl.proposers.clone();
             Box::new(rep)
         }
         "proposer" => {
@@ -269,9 +301,13 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
             if cfg.shards > 1 {
                 let proposer_lists: Vec<Vec<NodeId>> =
                     groups.iter().map(|gl| gl.proposers.clone()).collect();
-                Box::new(ShardClient::new(id, proposer_lists, spec))
+                let mut cl = ShardClient::new(id, proposer_lists, spec);
+                cl.replicas_per_group(groups.iter().map(|gl| gl.replicas.clone()).collect());
+                Box::new(cl)
             } else {
-                Box::new(Client::new(id, layout.proposers.clone(), spec))
+                let mut cl = Client::new(id, layout.proposers.clone(), spec);
+                cl.replicas = layout.replicas.clone();
+                Box::new(cl)
             }
         }
         other => anyhow::bail!("unknown role: {other}"),

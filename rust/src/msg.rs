@@ -10,7 +10,7 @@
 
 use crate::config::Configuration;
 use crate::round::Round;
-use crate::{GroupId, NodeId, Slot};
+use crate::{GroupId, NodeId, Slot, Time};
 use std::collections::BTreeMap;
 
 /// A shared matchmaker's full configuration log: per consensus group, the
@@ -172,6 +172,48 @@ pub enum Msg {
     /// `hint`".
     NotLeader { group: GroupId, hint: Option<NodeId> },
 
+    // ---- Linearizable reads off the Phase-2 hot path ----
+    /// Client → replica: a linearizable read-only query. Reads never
+    /// enter the chosen log: the replica resolves a *read index* (the
+    /// leader's contiguous chosen watermark as of a point after this
+    /// message arrived), waits until its applied prefix covers it, and
+    /// answers from local state via [`crate::statemachine::StateMachine::query`].
+    /// `seq` lives in a per-client read-only sequence space, disjoint
+    /// from the write stream (reads must not perturb the leader-side
+    /// FIFO sequencer).
+    Read { group: GroupId, seq: u64, payload: Vec<u8> },
+    /// Replica → client: result of a read-only query.
+    ReadReply { group: GroupId, seq: u64, result: Vec<u8> },
+    /// Replica → leader: "what is your chosen watermark?" — the
+    /// ReadIndex fallback when the replica holds no active lease.
+    /// `id` is a replica-local token matching the response to the
+    /// batch of reads that were pending when the request was sent.
+    ReadIndexReq { id: u64 },
+    /// Leader → replica: the chosen watermark. Sent immediately under
+    /// an active leader lease, else only after a quorum-confirmed lease
+    /// renewal (so a deposed leader can never answer with a stale
+    /// watermark).
+    ReadIndexResp { id: u64, upto: Slot },
+    /// Replica → client: this replica cannot serve reads right now
+    /// (no lease and no known leader to ReadIndex); try another replica.
+    NotLeaseholder { group: GroupId, hint: Option<NodeId> },
+
+    // ---- Read leases (epoch/round-fenced; see DESIGN.md §Reads) ----
+    /// Leader → acceptors of the active configuration: extend my lease
+    /// for `round`. An acceptor acks only while it has promised no
+    /// higher round, so any newer round's Phase 1 (which intersects
+    /// every P2 quorum of this configuration) cuts the renewal off.
+    LeaseRenew { round: Round, seq: u64 },
+    /// Acceptor → leader: renewal ack (promised round still ≤ `round`).
+    LeaseRenewAck { round: Round, seq: u64 },
+    /// Leader → replicas: the lease, re-broadcast on every renewal and
+    /// (throttled) on chosen-watermark advances. `upto` is the leader's
+    /// contiguous chosen watermark when the grant was sent; `granted_at`
+    /// orders grants against read arrivals at the replica; `valid_until`
+    /// is the quorum-confirmed validity horizon, already discounted by
+    /// the configured clock-drift bound.
+    LeaseGrant { round: Round, upto: Slot, granted_at: Time, valid_until: Time },
+
     // ---- Matchmaker reconfiguration (§6) ----
     /// Reconfigurer → old matchmakers: stop processing and dump state.
     StopA,
@@ -249,6 +291,14 @@ impl Msg {
             Msg::Chosen { .. } => MsgKind::Chosen,
             Msg::ClientRequest { .. } => MsgKind::Client,
             Msg::ClientReply { .. } | Msg::NotLeader { .. } => MsgKind::Client,
+            Msg::Read { .. }
+            | Msg::ReadReply { .. }
+            | Msg::ReadIndexReq { .. }
+            | Msg::ReadIndexResp { .. }
+            | Msg::NotLeaseholder { .. } => MsgKind::Read,
+            Msg::LeaseRenew { .. } | Msg::LeaseRenewAck { .. } | Msg::LeaseGrant { .. } => {
+                MsgKind::Lease
+            }
             Msg::GarbageA { .. } | Msg::GarbageB { .. } => MsgKind::Gc,
             Msg::CatchUp { .. }
             | Msg::SnapshotRequest { .. }
@@ -283,6 +333,12 @@ pub enum MsgKind {
     Phase2B,
     Chosen,
     Client,
+    /// Linearizable-read traffic (`Read`/`ReadReply`/`ReadIndexReq`/
+    /// `ReadIndexResp`/`NotLeaseholder`).
+    Read,
+    /// Lease renewal and grant traffic (`LeaseRenew`/`LeaseRenewAck`/
+    /// `LeaseGrant`).
+    Lease,
     Gc,
     /// Snapshot catch-up traffic (`CatchUp`/`SnapshotRequest`/`SnapshotResp`).
     Snapshot,
@@ -326,6 +382,19 @@ mod tests {
                 lowest: 1,
             },
             Msg::StopB { log: BTreeMap::new(), gc_watermarks: BTreeMap::new() },
+            Msg::Read { group: 1, seq: 4, payload: vec![b'g', 1, b'k'] },
+            Msg::ReadReply { group: 1, seq: 4, result: vec![7, 7] },
+            Msg::ReadIndexReq { id: 9 },
+            Msg::ReadIndexResp { id: 9, upto: 123 },
+            Msg::NotLeaseholder { group: 2, hint: Some(14) },
+            Msg::LeaseRenew { round: Round::first(0, 1), seq: 3 },
+            Msg::LeaseRenewAck { round: Round::first(0, 1), seq: 3 },
+            Msg::LeaseGrant {
+                round: Round::first(0, 1),
+                upto: 50,
+                granted_at: 1_000_000,
+                valid_until: 51_000_000,
+            },
         ];
         for m in msgs {
             let back = Msg::decode(&m.encode()).unwrap();
@@ -350,6 +419,17 @@ mod tests {
         );
         assert_eq!(Msg::StopA.kind(), MsgKind::MmReconfig);
         assert_eq!(Msg::Heartbeat { epoch: 0 }.kind(), MsgKind::Heartbeat);
+        assert_eq!(
+            Msg::Read { group: 0, seq: 1, payload: vec![] }.kind(),
+            MsgKind::Read
+        );
+        assert_eq!(Msg::ReadIndexReq { id: 0 }.kind(), MsgKind::Read);
+        assert_eq!(Msg::LeaseRenew { round: Round::first(0, 0), seq: 1 }.kind(), MsgKind::Lease);
+        assert_eq!(
+            Msg::LeaseGrant { round: Round::first(0, 0), upto: 0, granted_at: 0, valid_until: 1 }
+                .kind(),
+            MsgKind::Lease
+        );
         assert_eq!(Msg::SnapshotRequest { from: 3 }.kind(), MsgKind::Snapshot);
         assert_eq!(Msg::CatchUp { below: 9, peer: 1 }.kind(), MsgKind::Snapshot);
     }

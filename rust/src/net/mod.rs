@@ -12,7 +12,7 @@
 //! `repro run --role ... --config cluster.conf` (see `main.rs`) uses this
 //! to launch a real multi-process deployment.
 
-use crate::codec::Wire;
+use crate::codec::{Enc, Wire};
 use crate::msg::Envelope;
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::{NodeId, Time};
@@ -40,6 +40,21 @@ pub fn encode_frame(env: &Envelope) -> Vec<u8> {
     frame
 }
 
+/// Encode one frame into a reused scratch buffer: `scratch.buf` holds
+/// the u32 BE length prefix + codec bytes afterwards. The per-peer
+/// writer threads keep one scratch `Enc` per connection, so steady-state
+/// sends allocate nothing (the hot-path allocation satellite; byte-
+/// identical to [`encode_frame`]).
+pub fn encode_frame_into(env: &Envelope, scratch: &mut Enc) {
+    scratch.reset();
+    // Reserve the length prefix, encode the body in place, then patch
+    // the prefix — one pass, no body copy.
+    scratch.buf.extend_from_slice(&[0u8; 4]);
+    env.enc(scratch);
+    let body_len = (scratch.buf.len() - 4) as u32;
+    scratch.buf[..4].copy_from_slice(&body_len.to_be_bytes());
+}
+
 /// Read one frame from a stream (blocking).
 pub fn read_frame(stream: &mut TcpStream) -> Result<Envelope> {
     let mut len_buf = [0u8; 4];
@@ -57,6 +72,9 @@ fn spawn_peer_writer(addr: String) -> Sender<Envelope> {
     let (tx, rx): (Sender<Envelope>, Receiver<Envelope>) = channel();
     std::thread::spawn(move || {
         let mut stream: Option<TcpStream> = None;
+        // One scratch buffer per connection: frame encoding reuses its
+        // allocation across the whole message stream.
+        let mut scratch = Enc::new();
         while let Ok(env) = rx.recv() {
             if stream.is_none() {
                 match TcpStream::connect(&addr) {
@@ -68,7 +86,8 @@ fn spawn_peer_writer(addr: String) -> Sender<Envelope> {
                 }
             }
             if let Some(s) = stream.as_mut() {
-                if s.write_all(&encode_frame(&env)).is_err() {
+                encode_frame_into(&env, &mut scratch);
+                if s.write_all(&scratch.buf).is_err() {
                     stream = None;
                 }
             }
@@ -246,6 +265,18 @@ mod tests {
         );
         let back = Envelope::decode(&frame[4..]).unwrap();
         assert_eq!(back, env);
+    }
+
+    #[test]
+    fn scratch_frame_matches_allocating_frame() {
+        // The reused-buffer path is byte-identical to encode_frame for
+        // every message variant, including back-to-back reuse.
+        let mut scratch = Enc::new();
+        for m in crate::codec::sample_messages() {
+            let env = Envelope { from: 1, to: 2, msg: m };
+            encode_frame_into(&env, &mut scratch);
+            assert_eq!(scratch.buf, encode_frame(&env));
+        }
     }
 
     #[test]

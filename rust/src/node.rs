@@ -48,6 +48,23 @@ pub enum Timer {
     /// Shard router client: resend one in-flight request of a per-group
     /// lane (seq spaces are per lane, so the group disambiguates).
     ShardResend { group: GroupId, seq: u64, generation: u64 },
+    /// Client: resend an outstanding read-only query (reads live in
+    /// their own per-client seq space; see [`crate::roles::replica`]).
+    ReadResend { seq: u64, generation: u64 },
+    /// Shard router client: resend one in-flight read of a per-group
+    /// lane.
+    ShardReadResend { group: GroupId, seq: u64, generation: u64 },
+    /// Leader: renew the read lease with the active configuration's
+    /// acceptors ([`crate::config::LeaseSpec::refresh`] cadence).
+    LeaseRenewTick,
+    /// Leader: the post-election lease fence expired — outstanding
+    /// leases granted by any previous leader are dead, so the new
+    /// configuration may start choosing commands (DESIGN.md §Reads).
+    LeaseFence,
+    /// Replica: re-drive pending reads (re-send an unanswered
+    /// ReadIndex request, fall lapsed-lease reads back to the
+    /// ReadIndex path, expire abandoned entries).
+    ReadIndexRetry,
     /// Election: check whether the leader's heartbeats stopped.
     LeaderCheck,
     /// Generic scheduled wakeup used by harness-driven roles.
@@ -114,6 +131,22 @@ impl Effects {
         }
     }
 
+    /// Broadcast by value: clone for all destinations but the last,
+    /// which receives `msg` itself. On fan-out hot paths (`Chosen` to
+    /// the replica group, Phase2A watchdog re-sends) this saves one
+    /// full message clone per broadcast over building a template and
+    /// calling [`Effects::broadcast`] — measurable when the value is a
+    /// command batch. No-op (message dropped) when `dsts` is empty.
+    pub fn broadcast_move(&mut self, dsts: &[NodeId], msg: Msg) {
+        let Some((&last, rest)) = dsts.split_last() else {
+            return;
+        };
+        for &d in rest {
+            self.msgs.push((d, msg.clone()));
+        }
+        self.msgs.push((last, msg));
+    }
+
     /// Request a timer `delay` ns from now.
     pub fn timer(&mut self, delay: Time, t: Timer) {
         self.timers.push((delay, t));
@@ -176,5 +209,19 @@ mod tests {
         fx2.absorb(fx);
         assert_eq!(fx2.msgs.len(), 4);
         assert_eq!(fx2.msgs[0].0, 9);
+    }
+
+    #[test]
+    fn broadcast_move_reaches_every_destination() {
+        let mut fx = Effects::new();
+        fx.broadcast_move(&[4, 5, 6], Msg::BootstrapAck);
+        assert_eq!(fx.msgs.len(), 3);
+        for (i, d) in [4, 5, 6].into_iter().enumerate() {
+            assert_eq!(fx.msgs[i], (d, Msg::BootstrapAck));
+        }
+        // Empty destination list: the message is dropped, not misrouted.
+        let mut fx2 = Effects::new();
+        fx2.broadcast_move(&[], Msg::BootstrapAck);
+        assert!(fx2.msgs.is_empty());
     }
 }

@@ -141,6 +141,21 @@ impl Node for Acceptor {
                 fx.send(round.proposer, Msg::FastPhase2B { round: vote.vr, value: vote.vv });
             }
 
+            // Read-lease renewal (DESIGN.md §Reads): ack while we have
+            // promised no round higher than the lease's. Any newer
+            // round's Phase 1 raises `self.round` first, so from that
+            // point every renewal of the old round is nacked — the
+            // quorum-intersection fence that kills a deposed leader's
+            // lease within one refresh interval.
+            Msg::LeaseRenew { round, seq } => {
+                if self.seen_geq(round) {
+                    fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
+                    return;
+                }
+                self.round = Some(round);
+                fx.send(from, Msg::LeaseRenewAck { round, seq });
+            }
+
             // GC Scenario 3 bookkeeping: the leader certifies that the
             // prefix `< upto` is stored on f+1 replicas.
             Msg::PrefixPersisted { round, upto } => {
@@ -257,6 +272,20 @@ mod tests {
         // Watermark never regresses.
         run(&mut a, 0, Msg::PrefixPersisted { round: r(0, 0, 0), upto: 3 });
         assert_eq!(a.chosen_watermark, 7);
+    }
+
+    #[test]
+    fn lease_renewals_acked_until_higher_round_promised() {
+        let mut a = Acceptor::new(1);
+        let out = run(&mut a, 0, Msg::LeaseRenew { round: r(1, 0, 0), seq: 7 });
+        assert_eq!(out[0].1, Msg::LeaseRenewAck { round: r(1, 0, 0), seq: 7 });
+        // Equal-round renewals keep flowing.
+        let out = run(&mut a, 0, Msg::LeaseRenew { round: r(1, 0, 0), seq: 8 });
+        assert_eq!(out[0].1, Msg::LeaseRenewAck { round: r(1, 0, 0), seq: 8 });
+        // A newer round's Phase 1 cuts the old leader's renewals off.
+        run(&mut a, 5, Msg::Phase1A { round: r(2, 5, 0), from_slot: 0 });
+        let out = run(&mut a, 0, Msg::LeaseRenew { round: r(1, 0, 0), seq: 9 });
+        assert_eq!(out[0].1, Msg::Nack { round: r(1, 0, 0), higher: r(2, 5, 0) });
     }
 
     #[test]

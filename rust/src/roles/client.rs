@@ -43,6 +43,11 @@ struct Outstanding {
     /// Matches the most recently armed resend timer; stale timers from
     /// earlier (re)sends of this request carry older generations.
     generation: u64,
+    /// Whether this operation is a read (carries the spec's read
+    /// payload; recorded separately on completion). Reads normally ride
+    /// the replica read path; with no known replicas they fall through
+    /// the log like any command (the all-through-Phase-2 baseline).
+    read: bool,
 }
 
 /// A workload client (closed-loop, pipelined, or open-loop per its spec).
@@ -58,6 +63,13 @@ pub struct Client {
     pub proposers: Vec<NodeId>,
     /// Index of the proposer currently believed to be leader.
     pub leader_hint: usize,
+    /// The group's replicas: linearizable-read targets. Empty (the
+    /// default) routes read-classified requests through the log instead
+    /// — the all-through-Phase-2 baseline. Wired by the harness.
+    pub replicas: Vec<NodeId>,
+    /// Rotation offset into `replicas` (bumped on read timeouts and
+    /// `NotLeaseholder` redirects).
+    pub replica_hint: usize,
     /// The workload this client runs.
     pub spec: WorkloadSpec,
     /// Completed-request samples `(completion_time, latency_ns)`.
@@ -69,16 +81,36 @@ pub struct Client {
     /// Requests dropped at the stop deadline after losing their replies
     /// (resends are bounded by `stop_at`).
     pub abandoned: u64,
+    /// Reads completed (subset of `completed`).
+    pub reads_completed: u64,
+    /// Completed write operations: `(issued_at, completed_at)`. With
+    /// `write_issues` and `reads` this is the raw material for the
+    /// linearizable-read checker ([`crate::metrics::check_counter_reads`]).
+    pub writes: Vec<(Time, Time)>,
+    /// Issue times of every write ever sent (including writes that
+    /// never completed — an abandoned write may still execute, so the
+    /// checker's upper bound must count it).
+    pub write_issues: Vec<Time>,
+    /// Completed reads: `(issued_at, completed_at, result)`.
+    pub reads: Vec<(Time, Time, Vec<u8>)>,
 
     /// Payload for this client's commands (resolved from the spec once).
     payload: Vec<u8>,
+    /// Payload for this client's read queries (resolved once).
+    read_payload: Vec<u8>,
     /// Next sequence number to assign (first command is seq 1).
     next_seq: u64,
     /// In-flight requests by seq.
     outstanding: BTreeMap<u64, Outstanding>,
-    /// Open-loop arrivals waiting for a free in-flight slot (their
-    /// arrival times, for latency-from-arrival accounting).
-    backlog: VecDeque<Time>,
+    /// Next read sequence number (reads live in their own seq space so
+    /// they never perturb the leader-side FIFO sequencer).
+    read_next_seq: u64,
+    /// In-flight replica-path reads by read seq.
+    read_outstanding: BTreeMap<u64, Outstanding>,
+    /// Open-loop arrivals waiting for a free in-flight slot: `(arrival
+    /// time, read?)`. Classification happens at arrival so the mix is
+    /// arrival-deterministic, not drain-order-dependent.
+    backlog: VecDeque<(Time, bool)>,
     /// Bumped on every (re)send; stale resend timers are ignored.
     generation: u64,
     /// Last time a `NotLeader` redirect re-sent the whole window (guards
@@ -87,6 +119,8 @@ pub struct Client {
     last_redirect: Time,
     /// Last time a throttled redirect probed with the oldest request.
     last_probe: Time,
+    /// Last time a `NotLeaseholder` redirect re-sent the read window.
+    last_read_redirect: Time,
     /// Deterministic per-client RNG (Poisson inter-arrival gaps).
     rng: Rng,
 }
@@ -95,30 +129,42 @@ impl Client {
     /// A client driving `spec` against the given proposers.
     pub fn new(id: NodeId, proposers: Vec<NodeId>, spec: WorkloadSpec) -> Client {
         let payload = spec.payload.bytes_for(id);
+        let read_payload = spec.read_payload.bytes_for(id);
         Client {
             id,
             group: 0,
             proposers,
             leader_hint: 0,
+            replicas: Vec::new(),
+            replica_hint: 0,
             payload,
+            read_payload,
             spec,
             samples: Vec::new(),
             offered: 0,
             completed: 0,
             abandoned: 0,
+            reads_completed: 0,
+            writes: Vec::new(),
+            write_issues: Vec::new(),
+            reads: Vec::new(),
             next_seq: 1,
             outstanding: BTreeMap::new(),
+            read_next_seq: 1,
+            read_outstanding: BTreeMap::new(),
             backlog: VecDeque::new(),
             generation: 0,
             last_redirect: 0,
             last_probe: 0,
+            last_read_redirect: 0,
             rng: Rng::new(0x9e3779b97f4a7c15 ^ id as u64),
         }
     }
 
-    /// Number of requests currently on the wire.
+    /// Number of requests currently on the wire (reads + writes: the
+    /// spec's in-flight bound covers both).
     pub fn in_flight(&self) -> usize {
-        self.outstanding.len()
+        self.outstanding.len() + self.read_outstanding.len()
     }
 
     fn leader(&self) -> NodeId {
@@ -132,19 +178,62 @@ impl Client {
         self.outstanding.keys().next().copied().unwrap_or(self.next_seq)
     }
 
-    /// Issue a brand-new request. `issued_at` is the arrival time the
-    /// latency clock starts from (≤ `now` for backlogged open-loop work).
-    fn send_request(&mut self, issued_at: Time, _now: Time, fx: &mut Effects) {
+    /// Draw the read/write classification for the next request. Skips
+    /// the RNG entirely at `read_fraction == 0`, so all-write runs stay
+    /// bit-identical with pre-read builds.
+    fn classify(&mut self) -> bool {
+        self.spec.read_fraction > 0.0 && self.rng.next_f64() < self.spec.read_fraction
+    }
+
+    /// Route one new operation: reads go to a replica when the replica
+    /// set is known, else everything rides the log through the leader.
+    fn dispatch(&mut self, read: bool, issued_at: Time, now: Time, fx: &mut Effects) {
+        if read && !self.replicas.is_empty() {
+            self.send_read(issued_at, now, fx);
+        } else {
+            self.send_request(read, issued_at, now, fx);
+        }
+    }
+
+    /// Issue a brand-new request through the log. `issued_at` is the
+    /// arrival time the latency clock starts from (≤ `now` for
+    /// backlogged open-loop work).
+    fn send_request(&mut self, read: bool, issued_at: Time, _now: Time, fx: &mut Effects) {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.generation += 1;
-        self.outstanding.insert(seq, Outstanding { issued_at, generation: self.generation });
-        let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
+        self.outstanding
+            .insert(seq, Outstanding { issued_at, generation: self.generation, read });
+        let payload = if read { self.read_payload.clone() } else { self.payload.clone() };
+        if !read {
+            self.write_issues.push(issued_at);
+        }
+        let cmd = Command { client: self.id, seq, payload };
         let lowest = self.lowest_outstanding();
         fx.send(self.leader(), Msg::ClientRequest { group: self.group, cmd, lowest });
         fx.timer(
             self.spec.resend_after,
             Timer::ClientResend { seq, generation: self.generation },
+        );
+    }
+
+    /// Issue a brand-new linearizable read to a replica (reads spread
+    /// across the replica set by seq, shifted by the rotation hint).
+    fn send_read(&mut self, issued_at: Time, _now: Time, fx: &mut Effects) {
+        let seq = self.read_next_seq;
+        self.read_next_seq += 1;
+        self.generation += 1;
+        self.read_outstanding
+            .insert(seq, Outstanding { issued_at, generation: self.generation, read: true });
+        let n = self.replicas.len();
+        let target = self.replicas[(seq as usize + self.id as usize + self.replica_hint) % n];
+        fx.send(
+            target,
+            Msg::Read { group: self.group, seq, payload: self.read_payload.clone() },
+        );
+        fx.timer(
+            self.spec.resend_after,
+            Timer::ReadResend { seq, generation: self.generation },
         );
     }
 
@@ -164,10 +253,37 @@ impl Client {
             return;
         };
         o.generation = generation;
-        let cmd = Command { client: self.id, seq, payload: self.payload.clone() };
+        let payload = if o.read { self.read_payload.clone() } else { self.payload.clone() };
+        let cmd = Command { client: self.id, seq, payload };
         let lowest = self.lowest_outstanding();
         fx.send(self.leader(), Msg::ClientRequest { group: self.group, cmd, lowest });
         fx.timer(self.spec.resend_after, Timer::ClientResend { seq, generation });
+    }
+
+    /// Re-send one in-flight read to the (rotated) replica target.
+    fn resend_read_one(&mut self, seq: u64, now: Time, fx: &mut Effects) {
+        if now >= self.spec.stop_at {
+            if self.read_outstanding.remove(&seq).is_some() {
+                self.abandoned += 1;
+            }
+            return;
+        }
+        self.generation += 1;
+        let generation = self.generation;
+        let Some(o) = self.read_outstanding.get_mut(&seq) else {
+            return;
+        };
+        o.generation = generation;
+        let n = self.replicas.len();
+        if n == 0 {
+            return;
+        }
+        let target = self.replicas[(seq as usize + self.id as usize + self.replica_hint) % n];
+        fx.send(
+            target,
+            Msg::Read { group: self.group, seq, payload: self.read_payload.clone() },
+        );
+        fx.timer(self.spec.resend_after, Timer::ReadResend { seq, generation });
     }
 
     /// Closed-loop refill: keep `window` requests outstanding until the
@@ -176,9 +292,10 @@ impl Client {
         let WorkloadMode::ClosedLoop { window } = self.spec.mode else {
             return;
         };
-        while self.outstanding.len() < window && now < self.spec.stop_at {
+        while self.in_flight() < window && now < self.spec.stop_at {
             self.offered += 1;
-            self.send_request(now, now, fx);
+            let read = self.classify();
+            self.dispatch(read, now, now, fx);
         }
     }
 
@@ -191,10 +308,11 @@ impl Client {
             return; // stop the arrival chain
         }
         self.offered += 1;
-        if self.outstanding.len() < max_in_flight {
-            self.send_request(now, now, fx);
+        let read = self.classify();
+        if self.in_flight() < max_in_flight {
+            self.dispatch(read, now, now, fx);
         } else {
-            self.backlog.push_back(now);
+            self.backlog.push_back((now, read));
         }
         let gap = if poisson {
             // Exponential gap with mean `interval`, from the per-client
@@ -205,6 +323,24 @@ impl Client {
             interval
         };
         fx.timer(gap.max(1), Timer::Wakeup { tag: TAG_ARRIVAL });
+    }
+
+    /// A completion freed an in-flight slot: refill the closed-loop
+    /// window, or drain one backlogged open-loop arrival (abandoning
+    /// the backlog past the stop deadline, keeping offered = completed
+    /// + abandoned + in-flight).
+    fn refill(&mut self, now: Time, fx: &mut Effects) {
+        match self.spec.mode {
+            WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+            WorkloadMode::OpenLoop { .. } => {
+                if now >= self.spec.stop_at {
+                    self.abandoned += self.backlog.len() as u64;
+                    self.backlog.clear();
+                } else if let Some((arrived, read)) = self.backlog.pop_front() {
+                    self.dispatch(read, arrived, now, fx);
+                }
+            }
+        }
     }
 
     /// Start generating work (at start time, or immediately).
@@ -227,25 +363,43 @@ impl Node for Client {
 
     fn on_msg(&mut self, now: Time, _from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientReply { seq, .. } => {
+            Msg::ClientReply { seq, result, .. } => {
                 let Some(o) = self.outstanding.remove(&seq) else {
                     return; // stale/duplicate reply (other replicas)
                 };
                 self.samples.push((now, now - o.issued_at));
                 self.completed += 1;
-                match self.spec.mode {
-                    WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
-                    WorkloadMode::OpenLoop { .. } => {
-                        if now >= self.spec.stop_at {
-                            // Queued arrivals were counted as offered;
-                            // discarding them at the stop deadline makes
-                            // them abandoned, keeping offered =
-                            // completed + abandoned + in-flight.
-                            self.abandoned += self.backlog.len() as u64;
-                            self.backlog.clear();
-                        } else if let Some(arrived) = self.backlog.pop_front() {
-                            self.send_request(arrived, now, fx);
-                        }
+                if o.read {
+                    // Baseline path: a read that rode through the log.
+                    self.reads_completed += 1;
+                    self.reads.push((o.issued_at, now, result));
+                } else {
+                    self.writes.push((o.issued_at, now));
+                }
+                self.refill(now, fx);
+            }
+            Msg::ReadReply { seq, result, .. } => {
+                let Some(o) = self.read_outstanding.remove(&seq) else {
+                    return; // stale/duplicate reply
+                };
+                self.samples.push((now, now - o.issued_at));
+                self.completed += 1;
+                self.reads_completed += 1;
+                self.reads.push((o.issued_at, now, result));
+                self.refill(now, fx);
+            }
+            Msg::NotLeaseholder { .. } => {
+                // The replica can't serve reads right now: rotate to the
+                // next one and re-send the read window, at most once per
+                // millisecond (mirrors the NotLeader throttle).
+                self.replica_hint = self.replica_hint.wrapping_add(1);
+                if now.saturating_sub(self.last_read_redirect) >= MS
+                    || self.last_read_redirect == 0
+                {
+                    self.last_read_redirect = now.max(1);
+                    let seqs: Vec<u64> = self.read_outstanding.keys().copied().collect();
+                    for seq in seqs {
+                        self.resend_read_one(seq, now, fx);
                     }
                 }
             }
@@ -303,6 +457,21 @@ impl Node for Client {
                         self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
                     }
                     self.resend_one(seq, now, fx);
+                }
+            }
+            Timer::ReadResend { seq, generation } => {
+                let live = self
+                    .read_outstanding
+                    .get(&seq)
+                    .map_or(false, |o| o.generation == generation);
+                if live {
+                    // The target replica may be down or leaderless:
+                    // rotate, but only on the oldest read's timeout so a
+                    // burst rotates once.
+                    if self.read_outstanding.keys().next() == Some(&seq) {
+                        self.replica_hint = self.replica_hint.wrapping_add(1);
+                    }
+                    self.resend_read_one(seq, now, fx);
                 }
             }
             Timer::Wakeup { tag: TAG_START } => {
@@ -515,6 +684,139 @@ mod tests {
         let mut fx4 = Effects::new();
         c.on_timer(300 * MS, Timer::ClientResend { seq: 1, generation: 2 }, &mut fx4);
         assert!(!sent_seqs(&fx4).contains(&1));
+    }
+
+    fn read_mix_client(replicas: Vec<NodeId>) -> Client {
+        let spec = WorkloadSpec::pipelined(4).read_fraction(1.0).read_payload(vec![9]);
+        let mut c = Client::new(10, vec![0, 1], spec);
+        c.replicas = replicas;
+        c
+    }
+
+    fn sent_reads(fx: &Effects) -> Vec<(NodeId, u64)> {
+        fx.msgs
+            .iter()
+            .filter_map(|(to, m)| match m {
+                Msg::Read { seq, .. } => Some((*to, *seq)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reads_route_to_replicas_with_own_seq_space() {
+        let mut c = read_mix_client(vec![20, 21, 22]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        // read_fraction 1.0: the whole window is reads, to replicas.
+        let reads = sent_reads(&fx);
+        assert_eq!(reads.len(), 4);
+        assert!(sent_seqs(&fx).is_empty(), "no ClientRequests in an all-read mix");
+        assert_eq!(c.in_flight(), 4);
+        // Read seqs are 1..=4 in their own space, spread over replicas.
+        let seqs: Vec<u64> = reads.iter().map(|r| r.1).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+        assert!(reads.iter().all(|(to, _)| (20..=22).contains(to)));
+        // A ReadReply completes, records, and refills the window.
+        let mut fx2 = Effects::new();
+        c.on_msg(
+            MS,
+            20,
+            Msg::ReadReply { group: 0, seq: 1, result: vec![7] },
+            &mut fx2,
+        );
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.reads_completed, 1);
+        assert_eq!(c.reads, vec![(0, MS, vec![7])]);
+        assert_eq!(c.in_flight(), 4, "window refilled");
+        assert_eq!(sent_reads(&fx2).len(), 1);
+    }
+
+    #[test]
+    fn reads_without_replicas_ride_the_log() {
+        // The all-through-Phase-2 baseline: no replica set, so the read
+        // payload goes through the leader as an ordinary command and
+        // the reply is recorded as a read.
+        let mut c = read_mix_client(vec![]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert!(sent_reads(&fx).is_empty());
+        assert_eq!(sent_seqs(&fx), vec![1, 2, 3, 4]);
+        for (_, m) in &fx.msgs {
+            if let Msg::ClientRequest { cmd, .. } = m {
+                assert_eq!(cmd.payload, vec![9], "read payload rides the log");
+            }
+        }
+        let fx2 = reply(&mut c, MS, 1);
+        assert_eq!(c.reads_completed, 1);
+        assert_eq!(c.reads.len(), 1);
+        assert!(c.writes.is_empty());
+        assert_eq!(sent_seqs(&fx2).len(), 1);
+    }
+
+    #[test]
+    fn mixed_workload_records_writes_and_write_issues() {
+        let spec = WorkloadSpec::pipelined(32).read_fraction(0.5);
+        let mut c = Client::new(10, vec![0], spec);
+        c.replicas = vec![20, 21, 22];
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let n_reads = sent_reads(&fx).len();
+        let n_writes = sent_seqs(&fx).len();
+        assert_eq!(n_reads + n_writes, 32);
+        assert!(n_reads > 0 && n_writes > 0, "seeded mix covers both kinds");
+        assert_eq!(c.write_issues.len(), n_writes);
+        // Completing a write records (issued, completed).
+        if let Some(&wseq) = c.outstanding.keys().next() {
+            reply(&mut c, 2 * MS, wseq);
+            assert_eq!(c.writes.len(), 1);
+            assert_eq!(c.writes[0].1, 2 * MS);
+        }
+    }
+
+    #[test]
+    fn read_resend_rotates_replica_and_respects_stop() {
+        let spec = WorkloadSpec::pipelined(1)
+            .read_fraction(1.0)
+            .stop_at(crate::SEC);
+        let mut c = Client::new(10, vec![0], spec);
+        c.replicas = vec![20, 21];
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let first_target = sent_reads(&fx)[0].0;
+        // Timeout of the oldest read rotates the replica hint.
+        let mut fx2 = Effects::new();
+        c.on_timer(100 * MS, Timer::ReadResend { seq: 1, generation: 1 }, &mut fx2);
+        let second = sent_reads(&fx2);
+        assert_eq!(second.len(), 1);
+        assert_ne!(second[0].0, first_target, "resend rotated to the other replica");
+        // Stale generation: no-op.
+        let mut fx3 = Effects::new();
+        c.on_timer(200 * MS, Timer::ReadResend { seq: 1, generation: 1 }, &mut fx3);
+        assert!(sent_reads(&fx3).is_empty());
+        // Past stop_at: abandoned, not retried.
+        let gen = c.read_outstanding[&1].generation;
+        let mut fx4 = Effects::new();
+        c.on_timer(2 * crate::SEC, Timer::ReadResend { seq: 1, generation: gen }, &mut fx4);
+        assert!(sent_reads(&fx4).is_empty());
+        assert_eq!(c.abandoned, 1);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn not_leaseholder_redirects_read_window() {
+        let mut c = read_mix_client(vec![20, 21]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let before = c.replica_hint;
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 20, Msg::NotLeaseholder { group: 0, hint: None }, &mut fx2);
+        assert_eq!(c.replica_hint, before + 1);
+        assert_eq!(sent_reads(&fx2).len(), 4, "whole read window re-sent");
+        // A second redirect inside the throttle window only rotates.
+        let mut fx3 = Effects::new();
+        c.on_msg(MS + 1, 21, Msg::NotLeaseholder { group: 0, hint: None }, &mut fx3);
+        assert!(sent_reads(&fx3).is_empty());
     }
 
     #[test]

@@ -121,6 +121,21 @@ enum Install {
         /// Largest chosen watermark reported by any acceptor.
         acc_watermark: Slot,
     },
+    /// Phase 1 is complete on a *leader change* with read leases
+    /// enabled: hold every Phase-2 proposal (re-proposals included —
+    /// replicas execute and ack re-chosen values, which would be new
+    /// acknowledgements invisible to a still-valid old lease) until the
+    /// previous leader's possible leases have expired
+    /// (`Timer::LeaseFence`; DESIGN.md §Reads).
+    LeaseFence {
+        /// The merged Phase-1 votes, re-proposed when the fence lifts.
+        votes: BTreeMap<Slot, (Round, Value)>,
+        /// Largest chosen watermark reported by any acceptor.
+        acc_watermark: Slot,
+        /// Absolute fence deadline. A stale `LeaseFence` timer from an
+        /// earlier leadership stint must not lift a newer fence early.
+        until: Time,
+    },
 }
 
 /// Garbage-collection driver state (§5.3).
@@ -250,6 +265,45 @@ pub struct Leader {
     last_leader: Option<NodeId>,
     started: bool,
 
+    // ---- Read-lease state (DESIGN.md §Reads) ----
+    /// Renewal sequence number (matches acks to the renewal in flight).
+    lease_seq: u64,
+    /// Outstanding renewal: `(seq, sent_at, acks)`. Validity is counted
+    /// from the *send* time, so a slow quorum yields a short lease, not
+    /// an unsafe one.
+    lease_inflight: Option<(u64, Time, BTreeSet<NodeId>)>,
+    /// Self-lease horizon: a P2 quorum of the active configuration has
+    /// confirmed (via renewals) that no higher round intruded through
+    /// here. Zeroed on step-down.
+    lease_valid_until: Time,
+    /// When the last `LeaseGrant` was broadcast (throttles the
+    /// watermark-advance pushes to `LeaseSpec::push_gap`).
+    last_grant_at: Time,
+    /// Whether the `LeaseRenewTick` chain is armed.
+    lease_timer_armed: bool,
+    /// ReadIndex requests awaiting a quorum-confirmed renewal:
+    /// `(replica, request id, arrived_at)`. Answered only by a renewal
+    /// *sent* at or after they arrived.
+    pending_read_index: Vec<(NodeId, u64, Time)>,
+    /// Set on `become_leader`: the next Phase-1 completion must fence
+    /// out the previous leader's leases before any Phase-2 proposal.
+    lease_fence_pending: bool,
+    /// A new leader's chosen watermark lags writes acknowledged under
+    /// the previous lineage until every Phase-1-recovered slot is
+    /// re-chosen (the Raft §6.4 subtlety: a leader must commit in its
+    /// own term before serving reads). No grant is pushed and no
+    /// ReadIndex answered until `chosen_watermark` reaches this barrier
+    /// — `Slot::MAX` from election until Phase 1 fixes it, the first
+    /// install's barrier afterwards. Same-leader reconfigurations keep
+    /// a continuous watermark lineage and never raise it.
+    read_barrier: Slot,
+    /// ReadIndex requests answered instantly under the self-lease
+    /// (metrics).
+    pub read_index_fast: u64,
+    /// ReadIndex requests answered after a quorum-confirmed renewal
+    /// (metrics).
+    pub read_index_confirmed: u64,
+
     /// Bumped on every round/phase change; invalidates stale resend timers.
     generation: u64,
     /// Whether the Phase-2 watchdog timer is armed.
@@ -318,6 +372,16 @@ impl Leader {
             last_leader_hb: 0,
             last_leader: None,
             started: false,
+            lease_seq: 0,
+            lease_inflight: None,
+            lease_valid_until: 0,
+            last_grant_at: 0,
+            lease_timer_armed: false,
+            pending_read_index: Vec::new(),
+            lease_fence_pending: false,
+            read_barrier: 0,
+            read_index_fast: 0,
+            read_index_confirmed: 0,
             generation: 0,
             watchdog_armed: false,
             mm_reconfig: None,
@@ -372,6 +436,17 @@ impl Leader {
         self.round = Round::first(self.epoch_seen, self.id);
         self.active_round = None;
         self.generation += 1;
+        // A leader change invalidates outstanding read leases: before
+        // this round's first Phase-2 proposal, the previous leader's
+        // possible grants must have expired (DESIGN.md §Reads). Our own
+        // old self-lease is from a dead round lineage — drop it too.
+        self.lease_fence_pending = self.opts.leases.enabled;
+        self.lease_valid_until = 0;
+        self.lease_inflight = None;
+        self.pending_read_index.clear();
+        // Unknown until Phase 1 reveals the previous lineage's reach:
+        // until then this leader must answer no read (see `read_barrier`).
+        self.read_barrier = Slot::MAX;
         // Learn the chosen prefix from the replicas (§4.1).
         for &r in &self.replicas.clone() {
             fx.send(r, Msg::ReadPrefix { from: self.chosen_watermark });
@@ -572,6 +647,35 @@ impl Leader {
         let votes = votes.clone();
         let acc_watermark = *acc_watermark;
 
+        // Leader change with read leases: Phase 1 is done, but the old
+        // leader may still hold a lease whose last successful renewal
+        // was sent before our Phase-1 quorum assembled (any later one
+        // is nacked by the quorum intersection). Wait out one full
+        // lease duration plus the drift bound before proposing
+        // anything — including hole-filling re-proposals, whose
+        // execution acks would be invisible to the old lease's grants.
+        if self.lease_fence_pending {
+            self.lease_fence_pending = false;
+            let delay = self.opts.leases.duration + self.opts.leases.drift;
+            self.install = Install::LeaseFence { votes, acc_watermark, until: now + delay };
+            self.generation += 1;
+            fx.timer(delay, Timer::LeaseFence);
+            return;
+        }
+        self.finish_phase1(votes, acc_watermark, now, fx);
+    }
+
+    /// The back half of Phase 1: adopt watermarks, re-propose the voted
+    /// middle subsequence, enter steady state. Runs immediately for
+    /// same-leader installations, or when the lease fence lifts after a
+    /// leader change.
+    fn finish_phase1(
+        &mut self,
+        votes: BTreeMap<Slot, (Round, Value)>,
+        acc_watermark: Slot,
+        now: Time,
+        fx: &mut Effects,
+    ) {
         // Slots below the acceptor watermark are chosen & replica-stored
         // (Scenario 3): skip them entirely.
         self.chosen_watermark = self.chosen_watermark.max(acc_watermark);
@@ -580,6 +684,13 @@ impl Leader {
             Some(m) => (m + 1).max(self.next_slot).max(self.chosen_watermark),
             None => self.next_slot.max(self.chosen_watermark),
         };
+        // Every slot the previous lineage could have chosen (and had
+        // acknowledged) is below the barrier — its P2 quorum intersects
+        // our P1 quorum, so it appeared in `votes`. Reads may be served
+        // once our watermark covers it (the re-proposals just below).
+        if self.read_barrier == Slot::MAX {
+            self.read_barrier = barrier;
+        }
 
         // Repropose the middle subsequence in our round; fill holes with
         // no-ops (§4.1, Figure 5).
@@ -606,6 +717,17 @@ impl Leader {
         self.generation += 1;
         self.reconfigs_completed += 1;
         fx.announce(Announce::LeaderSteady { round: self.round });
+
+        // Resume (or begin) the read-lease renewal chain in the new
+        // round. Same-leader reconfigurations keep the same watermark
+        // lineage, so grants simply continue under the new round; a
+        // leader change reaches here only after the lease fence lifted.
+        // With leases disabled this still fires when ReadIndex requests
+        // queued up during the installation — they need a confirm round
+        // now, not at the replicas' next retry tick.
+        if self.opts.leases.enabled || !self.pending_read_index.is_empty() {
+            self.start_lease_renewal(now, fx);
+        }
 
         // Drain commands stalled during installation, then flush any
         // partial batch immediately — the stall already cost them latency.
@@ -647,7 +769,7 @@ impl Leader {
                 if let Some(&slot) = self.cmd_slots.get(&cmd.id()) {
                     if self.log.get(&slot).map_or(false, |s| s.chosen) {
                         let value = self.log[&slot].value.clone();
-                        fx.broadcast(&self.replicas.clone(), &Msg::Chosen { slot, value });
+                        fx.broadcast_move(&self.replicas, Msg::Chosen { slot, value });
                     }
                 }
             }
@@ -766,10 +888,22 @@ impl Leader {
         ss.chosen = true;
         let value = ss.value.clone();
         fx.announce(Announce::Chosen { group: self.group, slot, round, value: value.clone() });
-        fx.broadcast(&self.replicas, &Msg::Chosen { slot, value });
+        // Hot path: move the value into the fan-out instead of cloning a
+        // broadcast template (one full Value clone saved per chosen slot).
+        fx.broadcast_move(&self.replicas, Msg::Chosen { slot, value });
         // Advance the contiguous chosen prefix.
+        let before = self.chosen_watermark;
         while self.log.get(&self.chosen_watermark).map_or(false, |s| s.chosen) {
             self.chosen_watermark += 1;
+        }
+        // Piggyback a lease grant on watermark advances (throttled), so
+        // replicas' pending leased reads resolve at write-traffic
+        // cadence instead of waiting for the next renewal tick.
+        if self.opts.leases.enabled
+            && self.chosen_watermark > before
+            && now.saturating_sub(self.last_grant_at) >= self.opts.leases.push_gap()
+        {
+            self.push_grant(now, fx);
         }
         self.gc_advance(now, fx);
     }
@@ -877,9 +1011,9 @@ impl Leader {
         }
         self.last_wm_propagated = self.persisted_f1;
         let cfg = self.round_configs.get(&round).unwrap_or(&self.config).clone();
-        fx.broadcast(
+        fx.broadcast_move(
             &cfg.acceptors,
-            &Msg::PrefixPersisted { round, upto: self.persisted_f1 },
+            Msg::PrefixPersisted { round, upto: self.persisted_f1 },
         );
     }
 
@@ -939,6 +1073,191 @@ impl Leader {
         let round = self.gc.round;
         self.round_configs = self.round_configs.split_off(&round);
         fx.announce(Announce::ConfigRetired { group: self.group, round });
+    }
+
+    // =====================================================================
+    // Read leases + ReadIndex (DESIGN.md §Reads)
+    // =====================================================================
+
+    /// Send a lease renewal to the active configuration's acceptors (if
+    /// none is in flight) and keep the renewal tick armed. Skipped
+    /// while an installation or a matchmaker migration is in flight —
+    /// leases deliberately lapse there, so reads fall back to the
+    /// ReadIndex path instead of trusting a lease across the change.
+    ///
+    /// With leases *disabled* this still runs whenever ReadIndex
+    /// requests are queued: the renewal round then acts as a pure
+    /// leadership confirmation (no grants are pushed, no self-lease
+    /// fast path), which is what keeps the no-lease fallback both live
+    /// and linearizable.
+    fn start_lease_renewal(&mut self, now: Time, fx: &mut Effects) {
+        if !self.is_leader {
+            return;
+        }
+        if !self.opts.leases.enabled && self.pending_read_index.is_empty() {
+            return;
+        }
+        if !matches!(self.install, Install::None) || self.mm_reconfig.is_some() {
+            return;
+        }
+        let Some(round) = self.active_round else {
+            return;
+        };
+        if self.lease_inflight.is_none() {
+            self.lease_seq += 1;
+            self.lease_inflight = Some((self.lease_seq, now, BTreeSet::new()));
+            let msg = Msg::LeaseRenew { round, seq: self.lease_seq };
+            let cfg = self.round_configs.get(&round).unwrap_or(&self.config);
+            fx.broadcast(&cfg.acceptors, &msg);
+        }
+        if !self.lease_timer_armed {
+            self.lease_timer_armed = true;
+            fx.timer(self.opts.leases.refresh, Timer::LeaseRenewTick);
+        }
+    }
+
+    fn on_lease_renew_ack(
+        &mut self,
+        from: NodeId,
+        round: Round,
+        seq: u64,
+        now: Time,
+        fx: &mut Effects,
+    ) {
+        if !self.is_leader || self.active_round != Some(round) {
+            return;
+        }
+        // Hot path (one renewal per refresh tick, forever): the quorum
+        // check runs against the ack set in place, no clone.
+        let (sent_at, quorum) = {
+            let Some((cur, sent, acks)) = &mut self.lease_inflight else {
+                return;
+            };
+            if *cur != seq {
+                return;
+            }
+            acks.insert(from);
+            let cfg = self.round_configs.get(&round).unwrap_or(&self.config);
+            (*sent, cfg.is_p2_quorum(acks))
+        };
+        if !quorum {
+            return;
+        }
+        // Quorum-confirmed: no round above ours reached a P2 quorum of
+        // this configuration before `sent_at` (a newer round's Phase 1
+        // would have left at least one nacking acceptor in the quorum).
+        self.lease_inflight = None;
+        self.lease_valid_until = self.lease_valid_until.max(sent_at + self.opts.leases.duration);
+        self.push_grant(now, fx);
+        self.answer_pending_read_index(sent_at, now, fx);
+    }
+
+    /// Broadcast the lease (round, chosen watermark, validity) to the
+    /// replicas. Called on every renewal confirmation and — throttled to
+    /// [`crate::config::LeaseSpec::push_gap`] — on chosen-watermark
+    /// advances, so a replica's pending reads resolve within a fraction
+    /// of the refresh interval under write load.
+    fn push_grant(&mut self, now: Time, fx: &mut Effects) {
+        if !self.opts.leases.enabled || !self.is_leader {
+            return;
+        }
+        if !matches!(self.install, Install::None) {
+            return;
+        }
+        let Some(round) = self.active_round else {
+            return;
+        };
+        // A fresh leader's watermark must first cover everything the
+        // previous lineage could have acknowledged (`read_barrier`) —
+        // until then a grant could carry a watermark below an already
+        // acknowledged write.
+        if self.chosen_watermark < self.read_barrier {
+            return;
+        }
+        // Advertise the validity minus the drift bound: replicas may
+        // trust it on their own clocks.
+        let valid_until = self.lease_valid_until.saturating_sub(self.opts.leases.drift);
+        if valid_until <= now {
+            return;
+        }
+        self.last_grant_at = now;
+        // `granted_at` is compared against read-arrival times on the
+        // *replica's* clock, so discount it by the drift bound too: a
+        // replica then only resolves a read against a grant provably
+        // issued after the read arrived, even with skewed clocks.
+        let granted_at = now.saturating_sub(self.opts.leases.drift);
+        fx.broadcast_move(
+            &self.replicas,
+            Msg::LeaseGrant { round, upto: self.chosen_watermark, granted_at, valid_until },
+        );
+    }
+
+    /// A replica asks for the chosen watermark (ReadIndex). Under an
+    /// active self-lease the answer is immediate; otherwise it is
+    /// deferred until a renewal *sent after the request arrived*
+    /// completes at a P2 quorum — a deposed leader can never answer,
+    /// because its renewals are nacked from the new round's Phase 1 on.
+    fn on_read_index_req(&mut self, from: NodeId, id: u64, now: Time, fx: &mut Effects) {
+        if !self.is_leader {
+            fx.send(from, Msg::NotLeader { group: self.group, hint: self.last_leader });
+            return;
+        }
+        let steady = matches!(self.install, Install::None) && self.active_round.is_some();
+        if steady
+            && self.opts.leases.enabled
+            && self.chosen_watermark >= self.read_barrier
+            && now + self.opts.leases.drift < self.lease_valid_until
+        {
+            self.read_index_fast += 1;
+            fx.send(from, Msg::ReadIndexResp { id, upto: self.chosen_watermark });
+            return;
+        }
+        if self.pending_read_index.len() >= 1024 {
+            return; // overload guard; the replica's retry re-asks
+        }
+        self.pending_read_index.push((from, id, now));
+        if steady {
+            self.start_lease_renewal(now, fx);
+        }
+    }
+
+    /// Answer queued ReadIndex requests covered by a renewal sent at
+    /// `sent_at` (only those that arrived before the renewal was sent —
+    /// the watermark must postdate the read's arrival). Later arrivals
+    /// wait for the next renewal, triggered here if needed.
+    fn answer_pending_read_index(&mut self, sent_at: Time, now: Time, fx: &mut Effects) {
+        if self.pending_read_index.is_empty() {
+            return;
+        }
+        // New-leader gate (see `read_barrier`): hold the answers until
+        // the re-proposed prefix is re-chosen. The renewal tick keeps
+        // confirm rounds coming while requests are pending, so these
+        // are answered within a refresh of the barrier being crossed.
+        if self.chosen_watermark < self.read_barrier {
+            return;
+        }
+        let upto = self.chosen_watermark;
+        let mut keep = Vec::new();
+        for (rep, id, arrived) in std::mem::take(&mut self.pending_read_index) {
+            if arrived <= sent_at {
+                self.read_index_confirmed += 1;
+                fx.send(rep, Msg::ReadIndexResp { id, upto });
+            } else {
+                keep.push((rep, id, arrived));
+            }
+        }
+        self.pending_read_index = keep;
+        if !self.pending_read_index.is_empty() {
+            self.start_lease_renewal(now, fx);
+        }
+    }
+
+    /// Drop all lease authority (step-down): a deposed leader must
+    /// neither grant nor answer ReadIndex requests.
+    fn drop_lease(&mut self) {
+        self.lease_valid_until = 0;
+        self.lease_inflight = None;
+        self.pending_read_index.clear();
     }
 
     // =====================================================================
@@ -1111,6 +1430,7 @@ impl Leader {
             self.install = Install::None;
             self.active_round = None;
             self.generation += 1;
+            self.drop_lease();
         }
     }
 }
@@ -1158,6 +1478,10 @@ impl Node for Leader {
                 self.on_phase1b(from, round, votes, chosen_watermark, now, fx)
             }
             Msg::Phase2B { round, slot } => self.on_phase2b(from, round, slot, now, fx),
+            Msg::LeaseRenewAck { round, seq } => {
+                self.on_lease_renew_ack(from, round, seq, now, fx)
+            }
+            Msg::ReadIndexReq { id } => self.on_read_index_req(from, id, now, fx),
             Msg::Nack { round: _, higher } => self.handle_nack(higher, now, fx),
             Msg::ReplicaAck { upto } => self.on_replica_ack(from, upto, now, fx),
             Msg::PrefixResp { entries, upto } => {
@@ -1215,6 +1539,7 @@ impl Node for Leader {
                         self.is_leader = false;
                         self.install = Install::None;
                         self.active_round = None;
+                        self.drop_lease();
                     }
                 }
             }
@@ -1262,7 +1587,7 @@ impl Node for Leader {
                                 .get(&round)
                                 .unwrap_or(&self.config)
                                 .clone();
-                            fx.broadcast(&cfg.acceptors, &Msg::Phase2A { round, slot, value });
+                            fx.broadcast_move(&cfg.acceptors, Msg::Phase2A { round, slot, value });
                             if let Some(ss) = self.log.get_mut(&slot) {
                                 ss.proposed_at = now;
                             }
@@ -1306,7 +1631,60 @@ impl Node for Leader {
                         self.send_phase1a(fx);
                         fx.timer(self.timing.phase_resend, Timer::PhaseResend { generation });
                     }
+                    // Waiting out the lease fence: nothing to re-send —
+                    // the LeaseFence timer finishes the installation.
+                    Install::LeaseFence { .. } => {}
                     Install::None => {}
+                }
+            }
+            Timer::LeaseFence => {
+                if !self.is_leader {
+                    return;
+                }
+                // The previous leader's possible leases have expired:
+                // finish the installation (re-proposals + steady state).
+                // A stale timer from an earlier stint fires before the
+                // current fence's deadline and is ignored — the timer
+                // armed with this fence lifts it.
+                if let Install::LeaseFence { until, .. } = &self.install {
+                    if now < *until {
+                        return;
+                    }
+                    let Install::LeaseFence { votes, acc_watermark, .. } =
+                        std::mem::replace(&mut self.install, Install::None)
+                    else {
+                        unreachable!()
+                    };
+                    self.finish_phase1(votes, acc_watermark, now, fx);
+                }
+            }
+            Timer::LeaseRenewTick => {
+                self.lease_timer_armed = false;
+                if !self.is_leader {
+                    return;
+                }
+                if !self.opts.leases.enabled && self.pending_read_index.is_empty() {
+                    // Leases off and no confirm rounds needed: let the
+                    // chain die (it re-arms from the next ReadIndexReq).
+                    self.lease_inflight = None;
+                    return;
+                }
+                // A renewal unanswered for a full refresh interval is
+                // dead (lost or nacked): clear it so the next starts.
+                let stale = matches!(
+                    &self.lease_inflight,
+                    Some((_, sent, _)) if now.saturating_sub(*sent) >= self.opts.leases.refresh
+                );
+                if stale {
+                    self.lease_inflight = None;
+                }
+                self.start_lease_renewal(now, fx);
+                if !self.lease_timer_armed {
+                    // Not steady right now (installation / matchmaker
+                    // migration in flight): keep the chain alive so
+                    // renewals resume when steady state returns.
+                    self.lease_timer_armed = true;
+                    fx.timer(self.opts.leases.refresh, Timer::LeaseRenewTick);
                 }
             }
             Timer::HeartbeatTick => {
@@ -1619,6 +1997,108 @@ mod tests {
         assert_eq!(p.chosen_count(), 1);
         for r in &p.reps {
             assert_eq!(r.executed, 1);
+        }
+    }
+
+    fn lease_opts() -> OptFlags {
+        let mut o = OptFlags::default();
+        o.leases = crate::config::LeaseSpec::every(50 * MS, 2 * MS, crate::US);
+        o
+    }
+
+    #[test]
+    fn lease_fence_gates_first_proposals_after_election() {
+        let mut p = Pump::new(lease_opts());
+        p.start();
+        // Phase 1 completed, but the fence holds: not steady, and a
+        // client command stalls instead of being proposed.
+        assert!(!p.leader.is_steady(), "leases on: must wait out the fence");
+        let mut fx = Effects::new();
+        let cmd = Command { client: 100, seq: 1, payload: vec![0] };
+        p.leader.on_msg(1, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut fx);
+        assert!(fx.msgs.is_empty(), "commands must stall during the fence");
+        assert_eq!(p.chosen_count(), 0);
+        // A stale (premature) fence timer is ignored.
+        let mut early = Effects::new();
+        p.leader.on_timer(MS, Timer::LeaseFence, &mut early);
+        assert!(!p.leader.is_steady());
+        // The real fence lifts: steady, the stalled command is chosen,
+        // and the renewal chain produced a self-lease plus grants.
+        let mut fx2 = Effects::new();
+        p.leader.on_timer(51 * MS, Timer::LeaseFence, &mut fx2);
+        p.pump(fx2, 51 * MS);
+        assert!(p.leader.is_steady());
+        assert_eq!(p.chosen_count(), 1);
+        assert!(p.leader.lease_valid_until > 51 * MS, "renewal quorum confirmed");
+        for r in &p.reps {
+            assert!(r.lease_active(52 * MS), "replica {} missing a grant", r.id);
+        }
+    }
+
+    #[test]
+    fn read_index_fast_under_self_lease_confirmed_without() {
+        let mut p = Pump::new(lease_opts());
+        p.start();
+        let mut fxf = Effects::new();
+        p.leader.on_timer(51 * MS, Timer::LeaseFence, &mut fxf);
+        p.pump(fxf, 51 * MS);
+        // Active self-lease: immediate ReadIndexResp, no quorum round.
+        let mut fx = Effects::new();
+        p.leader.on_msg(52 * MS, 10, Msg::ReadIndexReq { id: 1 }, &mut fx);
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 10 && matches!(m, Msg::ReadIndexResp { id: 1, .. })));
+        assert_eq!(p.leader.read_index_fast, 1);
+        // Past expiry: the answer is deferred until a renewal sent at or
+        // after the request completes at a P2 quorum.
+        let late = p.leader.lease_valid_until + MS;
+        let mut fx2 = Effects::new();
+        p.leader.on_msg(late, 10, Msg::ReadIndexReq { id: 2 }, &mut fx2);
+        assert!(
+            fx2.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadIndexResp { .. })),
+            "no immediate answer without an active self-lease"
+        );
+        p.pump(fx2, late);
+        assert_eq!(p.leader.read_index_confirmed, 1);
+        assert!(p.leader.lease_valid_until > late);
+    }
+
+    #[test]
+    fn nack_deposes_leader_and_drops_lease() {
+        let mut p = Pump::new(lease_opts());
+        p.start();
+        let mut fxf = Effects::new();
+        p.leader.on_timer(51 * MS, Timer::LeaseFence, &mut fxf);
+        p.pump(fxf, 51 * MS);
+        assert!(p.leader.lease_valid_until > 0);
+        let higher = Round { epoch: 9, proposer: 1, seq: 0 };
+        let mut fx = Effects::new();
+        p.leader.on_msg(
+            60 * MS,
+            4,
+            Msg::Nack { round: p.leader.current_round(), higher },
+            &mut fx,
+        );
+        assert!(!p.leader.is_leader);
+        assert_eq!(p.leader.lease_valid_until, 0, "deposed leader must drop its lease");
+        // A ReadIndex request now gets a redirect, never a watermark.
+        let mut fx2 = Effects::new();
+        p.leader.on_msg(61 * MS, 10, Msg::ReadIndexReq { id: 3 }, &mut fx2);
+        assert!(fx2.msgs.iter().any(|(_, m)| matches!(m, Msg::NotLeader { .. })));
+        assert!(fx2.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadIndexResp { .. })));
+    }
+
+    #[test]
+    fn leases_disabled_no_fence_no_grants() {
+        // The default path is byte-for-byte the old behavior: steady
+        // immediately after startup, no lease traffic at all.
+        let mut p = Pump::new(OptFlags::default());
+        p.start();
+        assert!(p.leader.is_steady());
+        assert_eq!(p.leader.lease_valid_until, 0);
+        for r in &p.reps {
+            assert!(!r.lease_active(MS));
         }
     }
 

@@ -24,8 +24,8 @@ use crate::config::SnapshotSpec;
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::statemachine::StateMachine;
-use crate::{GroupId, NodeId, Slot, Time, MS};
-use std::collections::{BTreeMap, HashMap};
+use crate::{GroupId, NodeId, Slot, Time, MS, SEC};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Per-client execution history: dedup cursor plus a bounded window of
 /// recent results. Pipelined clients can lose the reply to seq `k` while
@@ -45,6 +45,49 @@ pub struct ClientHistory {
 /// How long a replica waits for a `SnapshotResp` before re-requesting
 /// (the response may be lost on a lossy network).
 const CATCHUP_RETRY: Time = 50 * MS;
+
+/// How often pending reads are re-driven: a lost `ReadIndexReq`/`Resp`
+/// is re-sent (rotating the leader target) and lapsed-lease reads fall
+/// back to the ReadIndex path at this cadence.
+const READ_RETRY: Time = 10 * MS;
+
+/// A read that has waited this long for a fresh lease grant falls back
+/// to the one-message ReadIndex path (the lease lapsed, or the leader
+/// paused grants for an installation).
+const READ_GRANT_PATIENCE: Time = 10 * MS;
+
+/// Pending reads older than this are dropped: the client's resend has
+/// long since taken the read to another replica, and an unbounded queue
+/// would be a memory leak under partition.
+const READ_EXPIRE: Time = SEC;
+
+/// Hard bound on the pending-read queue (overload guard; the client's
+/// retry path recovers anything shed here).
+const MAX_PENDING_READS: usize = 8192;
+
+/// How a pending read is waiting to be served.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ReadState {
+    /// Leased fast path: waiting for the first `LeaseGrant` issued at
+    /// or after the read arrived (grants carry the chosen watermark and
+    /// are pushed continuously, so this costs no per-read messages).
+    AwaitGrant,
+    /// Fallback: waiting for the `ReadIndexResp` of a request sent at
+    /// or after the read arrived.
+    AwaitIndex,
+    /// Read index resolved: serve once `exec_watermark` covers it.
+    Ready(Slot),
+}
+
+/// One queued linearizable read.
+#[derive(Debug)]
+struct PendingRead {
+    client: NodeId,
+    seq: u64,
+    payload: Vec<u8>,
+    arrived_at: Time,
+    state: ReadState,
+}
 
 /// How many per-client results a replica retains for retry re-replies.
 /// Covers the largest client in-flight window (workload specs clamp
@@ -90,6 +133,28 @@ pub struct Replica {
     /// High-water mark of `log.len()` (metrics: the X5 bounded-memory
     /// acceptance gate reads this).
     pub max_log_len: usize,
+    /// The group's proposers, ReadIndex fallback targets (wired by the
+    /// harness / deployment launcher like `peers`).
+    pub proposers: Vec<NodeId>,
+    /// Reads served from a lease grant, no leader round trip (metrics).
+    pub reads_leased: u64,
+    /// Reads served via the ReadIndex fallback (metrics).
+    pub reads_indexed: u64,
+    /// Latest lease grant: `(upto, granted_at, valid_until)`. The
+    /// validity already discounts the leader's drift bound.
+    lease: Option<(Slot, Time, Time)>,
+    /// Queued linearizable reads, FIFO by arrival.
+    pending_reads: VecDeque<PendingRead>,
+    /// Best current-leader guess (sender of the last `Chosen` or
+    /// `LeaseGrant`); `proposers[leader_hint]` is the fallback.
+    last_leader: Option<NodeId>,
+    leader_hint: usize,
+    /// Next ReadIndex request id.
+    read_req_next: u64,
+    /// Outstanding ReadIndex request: `(id, sent_at)`.
+    read_req_inflight: Option<(u64, Time)>,
+    /// Whether the `ReadIndexRetry` chain is armed.
+    read_timer_armed: bool,
     /// Most recent periodic snapshot: `(watermark, serialized state)`.
     last_snapshot: Option<(Slot, Vec<u8>)>,
     /// Active catch-up: `(peer, target watermark, last request time)`.
@@ -120,6 +185,16 @@ impl Replica {
             snapshots_taken: 0,
             snapshots_installed: 0,
             max_log_len: 0,
+            proposers: Vec::new(),
+            reads_leased: 0,
+            reads_indexed: 0,
+            lease: None,
+            pending_reads: VecDeque::new(),
+            last_leader: None,
+            leader_hint: 0,
+            read_req_next: 0,
+            read_req_inflight: None,
+            read_timer_armed: false,
             last_snapshot: None,
             catchup: None,
             catchup_timer_armed: false,
@@ -168,6 +243,9 @@ impl Replica {
         }
         if self.exec_watermark != before {
             fx.send(leader, Msg::ReplicaAck { upto: self.exec_watermark });
+            // The applied prefix advanced: resolved reads waiting on it
+            // may now be servable.
+            self.serve_ready_reads(fx);
         }
     }
 
@@ -274,6 +352,108 @@ impl Replica {
         fx.timer(self.snapshot.interval, Timer::SnapshotTick);
     }
 
+    /// Whether this replica holds an unexpired lease grant at `now`
+    /// (tests/metrics; the grant's validity is already drift-discounted
+    /// by the leader).
+    pub fn lease_active(&self, now: Time) -> bool {
+        matches!(self.lease, Some((_, _, valid_until)) if valid_until > now)
+    }
+
+    /// Pending linearizable reads (tests/metrics).
+    pub fn pending_read_count(&self) -> usize {
+        self.pending_reads.len()
+    }
+
+    /// Where a ReadIndex request should go: the observed leader, else
+    /// the rotating proposer hint.
+    fn read_index_target(&self) -> Option<NodeId> {
+        if let Some(l) = self.last_leader {
+            return Some(l);
+        }
+        if self.proposers.is_empty() {
+            None
+        } else {
+            Some(self.proposers[self.leader_hint % self.proposers.len()])
+        }
+    }
+
+    /// Send a ReadIndex request if none is outstanding.
+    fn ensure_read_index(&mut self, now: Time, fx: &mut Effects) {
+        if self.read_req_inflight.is_some() {
+            return;
+        }
+        let Some(target) = self.read_index_target() else {
+            return;
+        };
+        self.read_req_next += 1;
+        self.read_req_inflight = Some((self.read_req_next, now));
+        fx.send(target, Msg::ReadIndexReq { id: self.read_req_next });
+    }
+
+    fn arm_read_timer(&mut self, fx: &mut Effects) {
+        if !self.read_timer_armed {
+            self.read_timer_armed = true;
+            fx.timer(READ_RETRY, Timer::ReadIndexRetry);
+        }
+    }
+
+    /// Answer every resolved read whose read index the applied prefix
+    /// now covers. The comparison is against `exec_watermark` — the
+    /// *post-restore applied index* — never the raw chosen-log length,
+    /// so a snapshot-truncated replica that caught up via state
+    /// transfer serves correctly even though its log holds only the
+    /// retained tail.
+    fn serve_ready_reads(&mut self, fx: &mut Effects) {
+        if self.pending_reads.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.pending_reads.len() {
+            let ready = match self.pending_reads[i].state {
+                ReadState::Ready(w) => w <= self.exec_watermark,
+                _ => false,
+            };
+            if ready {
+                let pr = self.pending_reads.remove(i).expect("index in bounds");
+                let result = self.sm.query(&pr.payload);
+                fx.send(
+                    pr.client,
+                    Msg::ReadReply { group: self.group, seq: pr.seq, result },
+                );
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// A linearizable read arrived from a client. Under an active lease
+    /// it waits for the next grant (issued after arrival) to learn a
+    /// covering watermark for free; otherwise it takes the one-message
+    /// ReadIndex path; with no possible leader target it redirects the
+    /// client to try another replica.
+    fn on_read(&mut self, from: NodeId, seq: u64, payload: Vec<u8>, now: Time, fx: &mut Effects) {
+        if self.pending_reads.len() >= MAX_PENDING_READS {
+            return; // shed; the client's resend recovers
+        }
+        let state = if self.lease_active(now) {
+            ReadState::AwaitGrant
+        } else if self.read_index_target().is_some() {
+            self.ensure_read_index(now, fx);
+            ReadState::AwaitIndex
+        } else {
+            fx.send(from, Msg::NotLeaseholder { group: self.group, hint: None });
+            return;
+        };
+        self.pending_reads.push_back(PendingRead {
+            client: from,
+            seq,
+            payload,
+            arrived_at: now,
+            state,
+        });
+        self.arm_read_timer(fx);
+    }
+
     /// The next catch-up peer after `cur`: rotate through the peer list
     /// (excluding ourselves) so retries don't hammer a dead node forever.
     fn next_peer(&self, cur: NodeId) -> NodeId {
@@ -354,6 +534,9 @@ impl Node for Replica {
     fn on_msg(&mut self, now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
             Msg::Chosen { slot, value } => {
+                // The sender is the live leader: remember it as the
+                // ReadIndex target.
+                self.last_leader = Some(from);
                 // Idempotent insert: chosen values never conflict (safety),
                 // so a duplicate insert is a no-op. Slots below the
                 // truncation floor are already covered by the snapshot.
@@ -473,6 +656,77 @@ impl Node for Replica {
                     _ => {}
                 }
             }
+            // ---- Linearizable reads (DESIGN.md §Reads) ----
+            Msg::Read { group, seq, payload } => {
+                // Static routing: a read for another group means a
+                // broken router.
+                debug_assert_eq!(group, self.group, "read routed to wrong group");
+                if group != self.group {
+                    return;
+                }
+                self.on_read(from, seq, payload, now, fx);
+            }
+            Msg::LeaseGrant { round: _, upto, granted_at, valid_until } => {
+                self.last_leader = Some(from);
+                // Adopt the newest grant (by issue time).
+                let newer = self
+                    .lease
+                    .map_or(true, |(_, g, _)| granted_at >= g);
+                if newer {
+                    self.lease = Some((upto, granted_at, valid_until));
+                }
+                // A grant issued at `granted_at` carries a watermark
+                // covering every write acknowledged anywhere before it:
+                // reads that arrived earlier resolve against it.
+                for pr in self.pending_reads.iter_mut() {
+                    if pr.state == ReadState::AwaitGrant && pr.arrived_at <= granted_at {
+                        pr.state = ReadState::Ready(upto);
+                        self.reads_leased += 1;
+                    }
+                }
+                self.serve_ready_reads(fx);
+            }
+            Msg::ReadIndexResp { id, upto } => {
+                let Some((cur, sent_at)) = self.read_req_inflight else {
+                    return;
+                };
+                if cur != id {
+                    return; // stale response (we moved on)
+                }
+                self.read_req_inflight = None;
+                // The response covers reads that arrived before the
+                // request was sent; later arrivals need a fresh request.
+                let mut uncovered = false;
+                for pr in self.pending_reads.iter_mut() {
+                    if pr.state == ReadState::AwaitIndex {
+                        if pr.arrived_at <= sent_at {
+                            pr.state = ReadState::Ready(upto);
+                            self.reads_indexed += 1;
+                        } else {
+                            uncovered = true;
+                        }
+                    }
+                }
+                self.serve_ready_reads(fx);
+                if uncovered {
+                    self.ensure_read_index(now, fx);
+                }
+            }
+            Msg::NotLeader { group, hint } => {
+                // Our ReadIndex request hit a follower: retarget and
+                // re-ask under a fresh request id (a late answer from
+                // the old id is ignored).
+                if group != self.group {
+                    return;
+                }
+                self.last_leader = hint;
+                if hint.is_none() && !self.proposers.is_empty() {
+                    self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
+                }
+                if self.read_req_inflight.take().is_some() {
+                    self.ensure_read_index(now, fx);
+                }
+            }
             _ => {}
         }
     }
@@ -480,6 +734,52 @@ impl Node for Replica {
     fn on_timer(&mut self, now: Time, timer: Timer, fx: &mut Effects) {
         match timer {
             Timer::SnapshotTick => self.on_snapshot_tick(now, fx),
+            Timer::ReadIndexRetry => {
+                self.read_timer_armed = false;
+                if self.pending_reads.is_empty() {
+                    return;
+                }
+                // Expire abandoned reads (FIFO by arrival, so the front
+                // is always the oldest).
+                while let Some(front) = self.pending_reads.front() {
+                    if now.saturating_sub(front.arrived_at) >= READ_EXPIRE {
+                        self.pending_reads.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                // Lease-expiry fallback: grant-waiting reads past the
+                // patience window switch to the ReadIndex path (the
+                // lease lapsed, or grants paused for an installation).
+                let mut need_index = false;
+                for pr in self.pending_reads.iter_mut() {
+                    if pr.state == ReadState::AwaitGrant
+                        && now.saturating_sub(pr.arrived_at) >= READ_GRANT_PATIENCE
+                    {
+                        pr.state = ReadState::AwaitIndex;
+                    }
+                    if pr.state == ReadState::AwaitIndex {
+                        need_index = true;
+                    }
+                }
+                // A request unanswered for a full retry window is lost
+                // or its target is down/deposed: rotate and re-ask.
+                if let Some((_, sent)) = self.read_req_inflight {
+                    if now.saturating_sub(sent) >= READ_RETRY {
+                        self.read_req_inflight = None;
+                        self.last_leader = None;
+                        if !self.proposers.is_empty() {
+                            self.leader_hint = (self.leader_hint + 1) % self.proposers.len();
+                        }
+                    }
+                }
+                if need_index {
+                    self.ensure_read_index(now, fx);
+                }
+                if !self.pending_reads.is_empty() {
+                    self.arm_read_timer(fx);
+                }
+            }
             Timer::CatchupRetry => {
                 self.catchup_timer_armed = false;
                 let Some((peer, below, last)) = self.catchup else {
@@ -864,6 +1164,210 @@ mod tests {
         );
         assert_eq!(r.exec_watermark, 10);
         assert_eq!(r.snapshots_installed, 0);
+    }
+
+    // ---- Linearizable reads ----
+
+    /// A real kv `set k=v` command (the `cmd` helper above carries raw
+    /// bytes, which the KvStore treats as malformed — fine for the
+    /// exec-count tests, wrong for value assertions).
+    fn kv_set(client: NodeId, seq: u64) -> Value {
+        Value::Cmd(Command { client, seq, payload: KvStore::enc_set(b"k", b"v") })
+    }
+
+    #[test]
+    fn leased_read_waits_for_fresh_grant_then_serves() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        r.proposers = vec![0];
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: kv_set(7, 1) });
+        // An active lease from before the read.
+        let mut fx = Effects::new();
+        r.on_msg(
+            MS,
+            0,
+            Msg::LeaseGrant { round: crate::round::Round::first(0, 0), upto: 1, granted_at: MS, valid_until: 60 * MS },
+            &mut fx,
+        );
+        assert!(r.lease_active(2 * MS));
+        // Read arrives at 2 ms: it must NOT be served off the old grant
+        // (a write could have been acknowledged between the grant and
+        // the read) — it waits for the next grant.
+        let mut fx2 = Effects::new();
+        r.on_msg(2 * MS, 9, Msg::Read { group: 0, seq: 1, payload: KvStore::enc_get(b"k") }, &mut fx2);
+        assert!(fx2.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadReply { .. })));
+        assert_eq!(r.pending_read_count(), 1);
+        // No ReadIndex traffic on the leased path.
+        assert!(fx2.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadIndexReq { .. })));
+        // The next grant (issued after arrival) resolves and serves it.
+        let mut fx3 = Effects::new();
+        r.on_msg(
+            3 * MS,
+            0,
+            Msg::LeaseGrant { round: crate::round::Round::first(0, 0), upto: 1, granted_at: 3 * MS, valid_until: 60 * MS },
+            &mut fx3,
+        );
+        let reply = fx3.msgs.iter().find_map(|(to, m)| match m {
+            Msg::ReadReply { seq, result, .. } => Some((*to, *seq, result.clone())),
+            _ => None,
+        });
+        assert_eq!(reply, Some((9, 1, b"v".to_vec())));
+        assert_eq!(r.reads_leased, 1);
+        assert_eq!(r.pending_read_count(), 0);
+    }
+
+    #[test]
+    fn leased_read_blocks_until_applied_covers_watermark() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        // Grant active, read arrives, next grant carries upto = 2 but
+        // we have applied nothing: the read must wait for execution.
+        let g = |at: Time, upto: Slot| Msg::LeaseGrant {
+            round: crate::round::Round::first(0, 0),
+            upto,
+            granted_at: at,
+            valid_until: 100 * MS,
+        };
+        deliver(&mut r, 0, g(MS, 0));
+        let mut fx = Effects::new();
+        r.on_msg(2 * MS, 9, Msg::Read { group: 0, seq: 1, payload: KvStore::enc_get(b"k") }, &mut fx);
+        let fx2 = deliver(&mut r, 0, g(3 * MS, 2));
+        assert!(
+            fx2.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadReply { .. })),
+            "must not serve below the read index"
+        );
+        // Applying slots 0..2 unblocks it, with the freshest value.
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: kv_set(7, 1) });
+        let fx3 = deliver(&mut r, 0, Msg::Chosen { slot: 1, value: kv_set(7, 2) });
+        assert!(fx3
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 9 && matches!(m, Msg::ReadReply { seq: 1, .. })));
+    }
+
+    #[test]
+    fn unleased_read_takes_read_index_path() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        r.proposers = vec![0, 5];
+        deliver(&mut r, 0, Msg::Chosen { slot: 0, value: kv_set(7, 1) });
+        // No lease: the read triggers one ReadIndexReq to the observed
+        // leader (the Chosen sender).
+        let mut fx = Effects::new();
+        r.on_msg(MS, 9, Msg::Read { group: 0, seq: 1, payload: KvStore::enc_get(b"k") }, &mut fx);
+        let req = fx.msgs.iter().find_map(|(to, m)| match m {
+            Msg::ReadIndexReq { id } => Some((*to, *id)),
+            _ => None,
+        });
+        let (to, id) = req.expect("ReadIndexReq sent");
+        assert_eq!(to, 0, "targets the observed leader");
+        // A second read shares the outstanding request (batching).
+        let mut fxb = Effects::new();
+        r.on_msg(MS + 1, 8, Msg::Read { group: 0, seq: 1, payload: KvStore::enc_get(b"k") }, &mut fxb);
+        assert!(fxb.msgs.iter().all(|(_, m)| !matches!(m, Msg::ReadIndexReq { .. })));
+        // The response resolves both (they arrived before... the second
+        // arrived after the send, so it needs a fresh request).
+        let mut fx2 = Effects::new();
+        r.on_msg(2 * MS, 0, Msg::ReadIndexResp { id, upto: 1 }, &mut fx2);
+        assert!(fx2
+            .msgs
+            .iter()
+            .any(|(to2, m)| *to2 == 9 && matches!(m, Msg::ReadReply { seq: 1, .. })));
+        assert_eq!(r.reads_indexed, 1);
+        // The uncovered read re-asked.
+        assert!(fx2.msgs.iter().any(|(_, m)| matches!(m, Msg::ReadIndexReq { .. })));
+    }
+
+    #[test]
+    fn read_with_no_possible_target_redirects() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        // No lease, no proposers, no observed leader: NotLeaseholder.
+        let mut fx = Effects::new();
+        r.on_msg(MS, 9, Msg::Read { group: 0, seq: 1, payload: vec![] }, &mut fx);
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 9 && matches!(m, Msg::NotLeaseholder { .. })));
+        assert_eq!(r.pending_read_count(), 0);
+    }
+
+    #[test]
+    fn read_retry_falls_back_and_rotates() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        r.proposers = vec![0, 5];
+        // Active lease, read queued on the grant path...
+        deliver(
+            &mut r,
+            0,
+            Msg::LeaseGrant { round: crate::round::Round::first(0, 0), upto: 0, granted_at: 0, valid_until: 5 * MS },
+        );
+        let mut fx = Effects::new();
+        r.on_msg(MS, 9, Msg::Read { group: 0, seq: 1, payload: vec![] }, &mut fx);
+        assert!(fx.timers.iter().any(|(_, t)| *t == Timer::ReadIndexRetry));
+        // ... but grants stop (lease lapses). The retry tick converts it
+        // to the ReadIndex path.
+        let mut fx2 = Effects::new();
+        r.on_timer(MS + READ_RETRY, Timer::ReadIndexRetry, &mut fx2);
+        assert!(fx2.msgs.iter().any(|(_, m)| matches!(m, Msg::ReadIndexReq { .. })));
+        assert!(fx2.timers.iter().any(|(_, t)| *t == Timer::ReadIndexRetry));
+        // An unanswered request rotates to another proposer. The hint
+        // from the first grant (node 0) is dropped; hint cycling covers
+        // the proposer list.
+        let mut fx3 = Effects::new();
+        r.on_timer(MS + 2 * READ_RETRY, Timer::ReadIndexRetry, &mut fx3);
+        let retarget = fx3.msgs.iter().find_map(|(to, m)| match m {
+            Msg::ReadIndexReq { .. } => Some(*to),
+            _ => None,
+        });
+        assert!(retarget.is_some());
+        // Expiry: a read stuck past READ_EXPIRE is dropped.
+        let mut fx4 = Effects::new();
+        r.on_timer(MS + READ_EXPIRE, Timer::ReadIndexRetry, &mut fx4);
+        assert_eq!(r.pending_read_count(), 0);
+    }
+
+    /// Regression (satellite): a replica whose log was snapshot-truncated
+    /// still serves a correct ReadIndex read after catch-up — the
+    /// watermark comparison must use the post-restore applied index, not
+    /// the raw chosen-log length (after a snapshot install the log holds
+    /// only the tail, far fewer entries than the applied prefix).
+    #[test]
+    fn snapshot_truncated_replica_serves_read_index_read() {
+        // Peer executes 20 commands, snapshots, truncates to a 4-tail.
+        let mut peer = snapshotting_replica(4);
+        for s in 0..20 {
+            deliver(&mut peer, 0, Msg::Chosen { slot: s, value: kv_set(7, s + 1) });
+        }
+        tick(&mut peer, MS);
+        // Fresh replica catches up purely via snapshot transfer.
+        let mut fresh = snapshotting_replica(4);
+        fresh.id = 2;
+        fresh.proposers = vec![0];
+        let resp = deliver(&mut peer, 2, Msg::SnapshotRequest { from: 0 });
+        let snap = resp.msgs[0].1.clone();
+        deliver(&mut fresh, 1, snap);
+        assert_eq!(fresh.exec_watermark, 20);
+        assert!(fresh.log_len() < 20, "log holds at most the tail after install");
+        // A read with read index 20 must be served: applied (20) covers
+        // it even though the raw log length does not.
+        let mut fx = Effects::new();
+        fresh.on_msg(
+            10 * MS,
+            9,
+            Msg::Read { group: 0, seq: 1, payload: KvStore::enc_get(b"k") },
+            &mut fx,
+        );
+        let req_id = fx
+            .msgs
+            .iter()
+            .find_map(|(_, m)| match m {
+                Msg::ReadIndexReq { id } => Some(*id),
+                _ => None,
+            })
+            .expect("fallback ReadIndexReq");
+        let fx2 = deliver(&mut fresh, 0, Msg::ReadIndexResp { id: req_id, upto: 20 });
+        let reply = fx2.msgs.iter().find_map(|(to, m)| match m {
+            Msg::ReadReply { seq, result, .. } => Some((*to, *seq, result.clone())),
+            _ => None,
+        });
+        assert_eq!(reply, Some((9, 1, b"v".to_vec())), "post-restore applied index must serve");
     }
 
     #[test]

@@ -73,6 +73,10 @@ struct Outstanding {
     generation: u64,
     /// The routing key (resends must rebuild the same payload).
     key: u64,
+    /// Whether this operation is a read (read payload; recorded
+    /// separately on completion). Reads ride the replica path when the
+    /// lane knows its replicas, else through the log (baseline).
+    read: bool,
 }
 
 /// Per-group client state: an independent seq stream, in-flight window
@@ -83,14 +87,25 @@ struct Lane {
     /// The group's proposers, in fallback order.
     proposers: Vec<NodeId>,
     leader_hint: usize,
+    /// The group's replicas: linearizable-read targets (empty = route
+    /// reads through the log; see [`ShardClient::replicas_per_group`]).
+    replicas: Vec<NodeId>,
+    /// Rotation offset into `replicas` for read targeting.
+    replica_hint: usize,
     /// Next seq to assign in this lane (first command is seq 1).
     next_seq: u64,
     outstanding: BTreeMap<u64, Outstanding>,
+    /// Next read seq in this lane (reads have their own seq space so
+    /// they never perturb the group leader's FIFO sequencer).
+    read_next_seq: u64,
+    read_outstanding: BTreeMap<u64, Outstanding>,
     /// Bumped on every (re)send in this lane; stale timers are ignored.
     generation: u64,
     /// Redirect-storm throttle (see [`crate::roles::Client`]).
     last_redirect: Time,
     last_probe: Time,
+    /// `NotLeaseholder` redirect throttle for the read window.
+    last_read_redirect: Time,
 }
 
 impl Lane {
@@ -123,17 +138,29 @@ pub struct ShardClient {
     pub completed: u64,
     /// Requests dropped at the stop deadline.
     pub abandoned: u64,
+    /// Reads completed (subset of `completed`).
+    pub reads_completed: u64,
+    /// Completed writes `(issued_at, completed_at)`, all lanes merged.
+    pub writes: Vec<(Time, Time)>,
+    /// Issue times of every write ever sent (including never-completed
+    /// ones — see [`crate::roles::Client::write_issues`]).
+    pub write_issues: Vec<Time>,
+    /// Completed reads `(issued_at, completed_at, result)`, all lanes.
+    pub reads: Vec<(Time, Time, Vec<u8>)>,
 
     lanes: Vec<Lane>,
     /// Open-loop arrivals waiting for a free in-flight slot: `(arrival
-    /// time, key)`. The key is drawn at arrival so routing is
-    /// arrival-deterministic, not drain-order-dependent.
-    backlog: VecDeque<(Time, u64)>,
-    /// Total requests on the wire across all lanes.
+    /// time, key, read?)`. Key and classification are drawn at arrival
+    /// so routing and mix are arrival-deterministic, not
+    /// drain-order-dependent.
+    backlog: VecDeque<(Time, u64, bool)>,
+    /// Total requests on the wire across all lanes (reads + writes).
     in_flight: usize,
     /// Per-command payload suffix (resolved from the spec once); the
     /// 8-byte key prefix is prepended per request.
     payload_suffix: Vec<u8>,
+    /// Per-read payload suffix (resolved once), same key-prefix scheme.
+    read_payload_suffix: Vec<u8>,
     /// Deterministic per-client RNG: key draws + Poisson gaps.
     rng: Rng,
 }
@@ -145,6 +172,7 @@ impl ShardClient {
     pub fn new(id: NodeId, groups: Vec<Vec<NodeId>>, spec: WorkloadSpec) -> ShardClient {
         assert!(!groups.is_empty(), "ShardClient needs at least one group");
         let payload_suffix = spec.payload.bytes_for(id);
+        let read_payload_suffix = spec.read_payload.bytes_for(id);
         ShardClient {
             id,
             lanes: groups
@@ -154,11 +182,16 @@ impl ShardClient {
                     group: g as GroupId,
                     proposers,
                     leader_hint: 0,
+                    replicas: Vec::new(),
+                    replica_hint: 0,
                     next_seq: 1,
                     outstanding: BTreeMap::new(),
+                    read_next_seq: 1,
+                    read_outstanding: BTreeMap::new(),
                     generation: 0,
                     last_redirect: 0,
                     last_probe: 0,
+                    last_read_redirect: 0,
                 })
                 .collect(),
             spec,
@@ -166,10 +199,23 @@ impl ShardClient {
             offered: 0,
             completed: 0,
             abandoned: 0,
+            reads_completed: 0,
+            writes: Vec::new(),
+            write_issues: Vec::new(),
+            reads: Vec::new(),
             backlog: VecDeque::new(),
             in_flight: 0,
             payload_suffix,
+            read_payload_suffix,
             rng: Rng::new(0x51ab_c11e_0000_0000 ^ id as u64),
+        }
+    }
+
+    /// Wire each group's replica set (read targets), in group order.
+    /// Without this, read-classified requests ride the log (baseline).
+    pub fn replicas_per_group(&mut self, replicas: Vec<Vec<NodeId>>) {
+        for (lane, reps) in self.lanes.iter_mut().zip(replicas) {
+            lane.replicas = reps;
         }
     }
 
@@ -184,10 +230,11 @@ impl ShardClient {
         self.lanes.iter().map(|l| (l.group, l.next_seq)).collect()
     }
 
-    fn payload_for(&self, key: u64) -> Vec<u8> {
-        let mut p = Vec::with_capacity(8 + self.payload_suffix.len());
+    fn payload_for(&self, key: u64, read: bool) -> Vec<u8> {
+        let suffix = if read { &self.read_payload_suffix } else { &self.payload_suffix };
+        let mut p = Vec::with_capacity(8 + suffix.len());
         p.extend_from_slice(&key.to_le_bytes());
-        p.extend_from_slice(&self.payload_suffix);
+        p.extend_from_slice(suffix);
         p
     }
 
@@ -195,14 +242,35 @@ impl ShardClient {
         self.rng.gen_range(self.spec.keys.max(1))
     }
 
-    /// Issue a brand-new request for `key` on its home lane.
-    fn send_request(&mut self, key: u64, issued_at: Time, _now: Time, fx: &mut Effects) {
-        let payload = self.payload_for(key);
+    /// Draw the read/write classification (RNG untouched at
+    /// `read_fraction == 0`, keeping all-write runs bit-identical).
+    fn classify(&mut self) -> bool {
+        self.spec.read_fraction > 0.0 && self.rng.next_f64() < self.spec.read_fraction
+    }
+
+    /// Route one new operation: reads go to a replica of the key's home
+    /// group when that lane knows its replicas, else through the log.
+    fn dispatch(&mut self, key: u64, read: bool, issued_at: Time, now: Time, fx: &mut Effects) {
+        let lane_idx = shard_of(key, self.lanes.len()) as usize;
+        if read && !self.lanes[lane_idx].replicas.is_empty() {
+            self.send_read(key, issued_at, now, fx);
+        } else {
+            self.send_request(key, read, issued_at, now, fx);
+        }
+    }
+
+    /// Issue a brand-new request for `key` through its home lane's log.
+    fn send_request(&mut self, key: u64, read: bool, issued_at: Time, _now: Time, fx: &mut Effects) {
+        let payload = self.payload_for(key, read);
+        if !read {
+            self.write_issues.push(issued_at);
+        }
         let lane = &mut self.lanes[shard_of(key, self.lanes.len()) as usize];
         let seq = lane.next_seq;
         lane.next_seq += 1;
         lane.generation += 1;
-        lane.outstanding.insert(seq, Outstanding { issued_at, generation: lane.generation, key });
+        lane.outstanding
+            .insert(seq, Outstanding { issued_at, generation: lane.generation, key, read });
         self.in_flight += 1;
         let cmd = Command { client: self.id, seq, payload };
         let lowest = lane.lowest();
@@ -210,6 +278,57 @@ impl ShardClient {
         fx.timer(
             self.spec.resend_after,
             Timer::ShardResend { group: lane.group, seq, generation: lane.generation },
+        );
+    }
+
+    /// Issue a brand-new linearizable read for `key` to a replica of
+    /// its home group (spread by read seq plus the rotation hint).
+    fn send_read(&mut self, key: u64, issued_at: Time, _now: Time, fx: &mut Effects) {
+        let payload = self.payload_for(key, true);
+        let lane = &mut self.lanes[shard_of(key, self.lanes.len()) as usize];
+        let seq = lane.read_next_seq;
+        lane.read_next_seq += 1;
+        lane.generation += 1;
+        lane.read_outstanding
+            .insert(seq, Outstanding { issued_at, generation: lane.generation, key, read: true });
+        self.in_flight += 1;
+        let n = lane.replicas.len();
+        let target = lane.replicas[(seq as usize + lane.replica_hint) % n];
+        fx.send(target, Msg::Read { group: lane.group, seq, payload });
+        fx.timer(
+            self.spec.resend_after,
+            Timer::ShardReadResend { group: lane.group, seq, generation: lane.generation },
+        );
+    }
+
+    /// Re-send one in-flight read of a lane (rotated target), bounded
+    /// by the stop deadline.
+    fn resend_read_one(&mut self, lane_idx: usize, seq: u64, now: Time, fx: &mut Effects) {
+        if now >= self.spec.stop_at {
+            if self.lanes[lane_idx].read_outstanding.remove(&seq).is_some() {
+                self.abandoned += 1;
+                self.in_flight -= 1;
+            }
+            return;
+        }
+        let Some(&Outstanding { key, .. }) = self.lanes[lane_idx].read_outstanding.get(&seq)
+        else {
+            return;
+        };
+        let payload = self.payload_for(key, true);
+        let lane = &mut self.lanes[lane_idx];
+        if lane.replicas.is_empty() {
+            return;
+        }
+        lane.generation += 1;
+        let generation = lane.generation;
+        lane.read_outstanding.get_mut(&seq).unwrap().generation = generation;
+        let n = lane.replicas.len();
+        let target = lane.replicas[(seq as usize + lane.replica_hint) % n];
+        fx.send(target, Msg::Read { group: lane.group, seq, payload });
+        fx.timer(
+            self.spec.resend_after,
+            Timer::ShardReadResend { group: lane.group, seq, generation },
         );
     }
 
@@ -225,10 +344,11 @@ impl ShardClient {
         }
         let id = self.id;
         let resend_after = self.spec.resend_after;
-        let Some(&Outstanding { key, .. }) = self.lanes[lane_idx].outstanding.get(&seq) else {
+        let Some(&Outstanding { key, read, .. }) = self.lanes[lane_idx].outstanding.get(&seq)
+        else {
             return;
         };
-        let payload = self.payload_for(key);
+        let payload = self.payload_for(key, read);
         let lane = &mut self.lanes[lane_idx];
         lane.generation += 1;
         let generation = lane.generation;
@@ -248,7 +368,8 @@ impl ShardClient {
         while self.in_flight < window && now < self.spec.stop_at {
             self.offered += 1;
             let key = self.draw_key();
-            self.send_request(key, now, now, fx);
+            let read = self.classify();
+            self.dispatch(key, read, now, now, fx);
         }
     }
 
@@ -262,10 +383,11 @@ impl ShardClient {
         }
         self.offered += 1;
         let key = self.draw_key();
+        let read = self.classify();
         if self.in_flight < max_in_flight {
-            self.send_request(key, now, now, fx);
+            self.dispatch(key, read, now, now, fx);
         } else {
-            self.backlog.push_back((now, key));
+            self.backlog.push_back((now, key, read));
         }
         let gap = if poisson {
             let u = self.rng.next_f64();
@@ -274,6 +396,22 @@ impl ShardClient {
             interval
         };
         fx.timer(gap.max(1), Timer::Wakeup { tag: TAG_ARRIVAL });
+    }
+
+    /// A completion freed an in-flight slot: refill the window or drain
+    /// one backlogged arrival (abandoning the backlog past `stop_at`).
+    fn refill(&mut self, now: Time, fx: &mut Effects) {
+        match self.spec.mode {
+            WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
+            WorkloadMode::OpenLoop { .. } => {
+                if now >= self.spec.stop_at {
+                    self.abandoned += self.backlog.len() as u64;
+                    self.backlog.clear();
+                } else if let Some((arrived, key, read)) = self.backlog.pop_front() {
+                    self.dispatch(key, read, arrived, now, fx);
+                }
+            }
+        }
     }
 
     fn begin(&mut self, now: Time, fx: &mut Effects) {
@@ -302,7 +440,7 @@ impl Node for ShardClient {
 
     fn on_msg(&mut self, now: Time, _from: NodeId, msg: Msg, fx: &mut Effects) {
         match msg {
-            Msg::ClientReply { group, seq, .. } => {
+            Msg::ClientReply { group, seq, result } => {
                 let Some(idx) = self.lane_index(group) else {
                     return;
                 };
@@ -312,15 +450,41 @@ impl Node for ShardClient {
                 self.in_flight -= 1;
                 self.samples.push((now, now - o.issued_at));
                 self.completed += 1;
-                match self.spec.mode {
-                    WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
-                    WorkloadMode::OpenLoop { .. } => {
-                        if now >= self.spec.stop_at {
-                            self.abandoned += self.backlog.len() as u64;
-                            self.backlog.clear();
-                        } else if let Some((arrived, key)) = self.backlog.pop_front() {
-                            self.send_request(key, arrived, now, fx);
-                        }
+                if o.read {
+                    self.reads_completed += 1;
+                    self.reads.push((o.issued_at, now, result));
+                } else {
+                    self.writes.push((o.issued_at, now));
+                }
+                self.refill(now, fx);
+            }
+            Msg::ReadReply { group, seq, result } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let Some(o) = self.lanes[idx].read_outstanding.remove(&seq) else {
+                    return; // stale/duplicate reply
+                };
+                self.in_flight -= 1;
+                self.samples.push((now, now - o.issued_at));
+                self.completed += 1;
+                self.reads_completed += 1;
+                self.reads.push((o.issued_at, now, result));
+                self.refill(now, fx);
+            }
+            Msg::NotLeaseholder { group, hint: _ } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let lane = &mut self.lanes[idx];
+                lane.replica_hint = lane.replica_hint.wrapping_add(1);
+                if now.saturating_sub(lane.last_read_redirect) >= MS
+                    || lane.last_read_redirect == 0
+                {
+                    lane.last_read_redirect = now.max(1);
+                    let seqs: Vec<u64> = lane.read_outstanding.keys().copied().collect();
+                    for seq in seqs {
+                        self.resend_read_one(idx, seq, now, fx);
                     }
                 }
             }
@@ -376,6 +540,24 @@ impl Node for ShardClient {
                         lane.leader_hint = (lane.leader_hint + 1) % lane.proposers.len();
                     }
                     self.resend_one(idx, seq, now, fx);
+                }
+            }
+            Timer::ShardReadResend { group, seq, generation } => {
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                let lane = &mut self.lanes[idx];
+                let live = lane
+                    .read_outstanding
+                    .get(&seq)
+                    .map_or(false, |o| o.generation == generation);
+                if live {
+                    // Rotate the lane's replica target on the oldest
+                    // read's timeout (one rotation per burst).
+                    if lane.read_outstanding.keys().next() == Some(&seq) {
+                        lane.replica_hint = lane.replica_hint.wrapping_add(1);
+                    }
+                    self.resend_read_one(idx, seq, now, fx);
                 }
             }
             Timer::Wakeup { tag: TAG_START } => self.begin(now, fx),
@@ -529,7 +711,7 @@ mod tests {
         c.on_timer(MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut fx2);
         assert_eq!(c.backlog.len(), 1, "second arrival queues");
         assert_eq!(c.offered, 2);
-        let (arrived, queued_key) = c.backlog[0];
+        let (arrived, queued_key, _) = c.backlog[0];
         assert_eq!(arrived, MS);
         // Complete the in-flight request: the backlogged key drains to
         // its own home lane with latency from its arrival time.
@@ -590,6 +772,108 @@ mod tests {
         let resends = sent(&fx2);
         assert_eq!(resends.len(), lane0_count, "only lane 0's window re-sent");
         assert!(resends.iter().all(|s| s.0 == 1 && s.1 == 0));
+    }
+
+    #[test]
+    fn reads_route_to_home_group_replicas() {
+        let spec = WorkloadSpec::pipelined(8).read_fraction(1.0).read_payload(vec![7]);
+        let mut c = two_group_client(spec);
+        // Group 0 replicas 30,31; group 1 replicas 40,41.
+        c.replicas_per_group(vec![vec![30, 31], vec![40, 41]]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 8);
+        let reads: Vec<(NodeId, GroupId, u64)> = fx
+            .msgs
+            .iter()
+            .filter_map(|(to, m)| match m {
+                Msg::Read { group, seq, payload } => {
+                    // The key prefix routes to the replica's group, and
+                    // the read suffix follows it.
+                    let key = key_of_payload(payload).expect("key prefix");
+                    assert_eq!(shard_of(key, 2), *group);
+                    assert_eq!(payload[8..], [7]);
+                    Some((*to, *group, *seq))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reads.len(), 8, "all-read mix goes to replicas");
+        for (to, group, _) in &reads {
+            let expect: &[NodeId] = if *group == 0 { &[30, 31] } else { &[40, 41] };
+            assert!(expect.contains(to), "read sent to {to} outside group {group}");
+        }
+        // Per-lane read seqs are contiguous from 1.
+        for lane in 0..2u32 {
+            let mut seqs: Vec<u64> =
+                reads.iter().filter(|r| r.1 == lane).map(|r| r.2).collect();
+            seqs.sort_unstable();
+            let expect: Vec<u64> = (1..=seqs.len() as u64).collect();
+            assert_eq!(seqs, expect);
+        }
+        // A ReadReply completes against its lane and refills.
+        let (to0, g0, s0) = reads[0];
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, to0, Msg::ReadReply { group: g0, seq: s0, result: vec![1] }, &mut fx2);
+        assert_eq!(c.reads_completed, 1);
+        assert_eq!(c.reads.len(), 1);
+        assert_eq!(c.in_flight(), 8, "window refilled");
+    }
+
+    #[test]
+    fn reads_without_replicas_ride_the_log_per_lane() {
+        // Baseline: no replica wiring, so read-classified requests go
+        // through each lane's leader with the read payload.
+        let spec = WorkloadSpec::pipelined(4).read_fraction(1.0).read_payload(vec![7]);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert!(fx.msgs.iter().all(|(_, m)| !matches!(m, Msg::Read { .. })));
+        let sends = sent(&fx);
+        assert_eq!(sends.len(), 4);
+        for (_, m) in &fx.msgs {
+            if let Msg::ClientRequest { cmd, .. } = m {
+                assert_eq!(cmd.payload[8..], [7]);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_read_resend_rotates_and_abandons_at_stop() {
+        let spec = WorkloadSpec::pipelined(1)
+            .read_fraction(1.0)
+            .stop_at(crate::SEC);
+        let mut c = two_group_client(spec);
+        c.replicas_per_group(vec![vec![30, 31], vec![40, 41]]);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (first_to, group, seq) = fx
+            .msgs
+            .iter()
+            .find_map(|(to, m)| match m {
+                Msg::Read { group, seq, .. } => Some((*to, *group, *seq)),
+                _ => None,
+            })
+            .expect("one read in flight");
+        let generation = c.lanes[group as usize].read_outstanding[&seq].generation;
+        // Timeout: rotated resend within the same group's replicas.
+        let mut fx2 = Effects::new();
+        c.on_timer(100 * MS, Timer::ShardReadResend { group, seq, generation }, &mut fx2);
+        let second = fx2
+            .msgs
+            .iter()
+            .find_map(|(to, m)| match m {
+                Msg::Read { .. } => Some(*to),
+                _ => None,
+            })
+            .expect("resend");
+        assert_ne!(second, first_to, "rotated to the lane's other replica");
+        // Past stop_at: abandoned.
+        let generation = c.lanes[group as usize].read_outstanding[&seq].generation;
+        let mut fx3 = Effects::new();
+        c.on_timer(2 * crate::SEC, Timer::ShardReadResend { group, seq, generation }, &mut fx3);
+        assert_eq!(c.abandoned, 1);
+        assert_eq!(c.in_flight(), 0);
     }
 
     #[test]

@@ -25,6 +25,20 @@ pub trait StateMachine: Send {
         payloads.iter().map(|p| self.apply(p)).collect()
     }
 
+    /// Answer a read-only query against the current state **without
+    /// mutating it**. This is the replica-served linearizable-read
+    /// entry point ([`crate::msg::Msg::Read`]): the replica resolves a
+    /// read index, waits until its applied prefix covers it, then
+    /// answers from here — the query never enters the chosen log.
+    /// Implementations must match the read-only subset of
+    /// [`StateMachine::apply`] (a kv `get` query returns exactly what
+    /// the same `get` payload would return through `apply`), so the
+    /// all-through-Phase-2 baseline and the leased path agree. Default:
+    /// empty (the no-op machine has no readable state).
+    fn query(&self, _payload: &[u8]) -> Vec<u8> {
+        Vec::new()
+    }
+
     /// A digest of the current state, used by tests to check replica
     /// convergence. Default: empty (stateless machines).
     fn digest(&self) -> u64 {
@@ -149,6 +163,15 @@ impl StateMachine for KvStore {
         }
     }
 
+    /// Read-only queries: `g<klen><key>` returns the value (mirroring
+    /// the `apply` get path); mutating or malformed payloads are `ERR`.
+    fn query(&self, payload: &[u8]) -> Vec<u8> {
+        match KvStore::parse(payload) {
+            Some((b'g', key, _)) => self.map.get(key).cloned().unwrap_or_default(),
+            _ => b"ERR".to_vec(),
+        }
+    }
+
     fn digest(&self) -> u64 {
         let mut h = 0u64;
         for (k, v) in &self.map {
@@ -214,6 +237,10 @@ impl StateMachine for Register {
     fn apply(&mut self, payload: &[u8]) -> Vec<u8> {
         std::mem::replace(&mut self.value, payload.to_vec())
     }
+    /// Read-only query: the current value (payload ignored).
+    fn query(&self, _payload: &[u8]) -> Vec<u8> {
+        self.value.clone()
+    }
     fn digest(&self) -> u64 {
         fnv1a(0, &self.value)
     }
@@ -253,6 +280,12 @@ impl StateMachine for Counter {
         let n = payload.len().min(8);
         buf[..n].copy_from_slice(&payload[..n]);
         self.total = self.total.wrapping_add(i64::from_le_bytes(buf));
+        self.total.to_le_bytes().to_vec()
+    }
+    /// Read-only query: the current total (payload ignored) — identical
+    /// to what a delta-0 `apply` would return, so leased reads and the
+    /// through-the-log baseline agree.
+    fn query(&self, _payload: &[u8]) -> Vec<u8> {
         self.total.to_le_bytes().to_vec()
     }
     fn digest(&self) -> u64 {
@@ -350,6 +383,34 @@ mod tests {
         assert_eq!(batched, sequential);
         assert_eq!(a.digest(), b.digest());
         assert_eq!(batched[2], b"1");
+    }
+
+    #[test]
+    fn query_matches_read_only_apply() {
+        // kv: query(get) == apply(get); mutations through query are
+        // refused.
+        let mut kv = KvStore::new();
+        kv.apply(&KvStore::enc_set(b"k", b"v1"));
+        assert_eq!(kv.query(&KvStore::enc_get(b"k")), b"v1");
+        assert_eq!(kv.query(&KvStore::enc_get(b"missing")), b"");
+        assert_eq!(kv.query(&KvStore::enc_set(b"k", b"v2")), b"ERR");
+        assert_eq!(kv.query(&KvStore::enc_get(b"k")), b"v1", "query must not mutate");
+
+        // register: query returns the current value, without the
+        // swap-and-return-previous of apply.
+        let mut reg = Register::new();
+        reg.apply(b"abc");
+        assert_eq!(reg.query(b""), b"abc");
+        assert_eq!(reg.query(b""), b"abc");
+
+        // counter: query == a delta-0 apply.
+        let mut c = Counter::new();
+        c.apply(&7i64.to_le_bytes());
+        assert_eq!(c.query(&[]), 7i64.to_le_bytes());
+        assert_eq!(c.digest(), 7);
+
+        // stateless default: empty.
+        assert!(Noop.query(b"anything").is_empty());
     }
 
     #[test]

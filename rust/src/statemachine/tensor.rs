@@ -238,6 +238,22 @@ impl StateMachine for TensorStateMachine {
         h
     }
 
+    /// Read-only query. Empty payload (or anything shorter than 8
+    /// bytes): the FNV digest of the full state, LE u64 — the cheap
+    /// "model version" probe. An 8-byte LE row index: that state row as
+    /// `D` little-endian f32s — a read of one row of the replicated
+    /// tensor without a round through the log.
+    fn query(&self, payload: &[u8]) -> Vec<u8> {
+        if payload.len() >= 8 {
+            let row = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize % D;
+            return self.state[row * D..(row + 1) * D]
+                .iter()
+                .flat_map(|x| x.to_le_bytes())
+                .collect();
+        }
+        self.digest().to_le_bytes().to_vec()
+    }
+
     /// The `D×D` f32 state, little-endian (backend-independent: a
     /// reference-backend snapshot restores into a PJRT-backed replica and
     /// vice versa).
@@ -428,6 +444,28 @@ mod tests {
         assert_eq!(a.apply(&p), b.apply(&p));
         // Wrong-size snapshots are refused.
         assert!(!StateMachine::restore(&mut b, &snap[..8]));
+    }
+
+    #[test]
+    fn query_digest_and_row_reads() {
+        let mut sm = TensorStateMachine::load().unwrap();
+        sm.apply(&TensorStateMachine::encode(&cmd(3)));
+        // Empty payload: the state digest, LE u64, and no mutation.
+        let d0 = StateMachine::digest(&sm);
+        assert_eq!(sm.query(&[]), d0.to_le_bytes().to_vec());
+        assert_eq!(StateMachine::digest(&sm), d0);
+        // Row read: D little-endian f32s matching the state slice.
+        let row = 2u64;
+        let bytes = sm.query(&row.to_le_bytes());
+        assert_eq!(bytes.len(), D * 4);
+        let got: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(got.as_slice(), &sm.state()[2 * D..3 * D]);
+        // Out-of-range rows wrap instead of panicking.
+        let huge = (D as u64 + 2).to_le_bytes();
+        assert_eq!(sm.query(&huge), sm.query(&2u64.to_le_bytes()));
     }
 
     #[test]

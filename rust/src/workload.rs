@@ -90,6 +90,18 @@ pub struct WorkloadSpec {
     pub mode: WorkloadMode,
     /// What bytes each command carries.
     pub payload: PayloadSpec,
+    /// What bytes read-only queries carry (interpreted by
+    /// [`crate::statemachine::StateMachine::query`]). Defaults to an
+    /// empty payload — the register/counter queries ignore it; kv
+    /// workloads set an encoded `get`.
+    pub read_payload: PayloadSpec,
+    /// Fraction of requests issued as linearizable read-only queries
+    /// (`0.0` = the all-write default; `0.9` = the X7 read-heavy mix).
+    /// Reads are served by replicas off the Phase-2 hot path when the
+    /// client knows the replica set ([`crate::roles::Client::replicas`]);
+    /// otherwise the read payload is routed through the log like any
+    /// command, which is the all-through-Phase-2 baseline.
+    pub read_fraction: f64,
     /// Start issuing at this time (0 = immediately on start).
     pub start_at: Time,
     /// Stop issuing new requests — and retrying lost ones — at this time
@@ -116,6 +128,8 @@ impl WorkloadSpec {
         WorkloadSpec {
             mode,
             payload: PayloadSpec::Fixed(vec![0u8]),
+            read_payload: PayloadSpec::Fixed(Vec::new()),
+            read_fraction: 0.0,
             start_at: 0,
             stop_at: u64::MAX,
             resend_after: 100 * MS,
@@ -170,6 +184,25 @@ impl WorkloadSpec {
     /// Per-client payload generator (see [`PayloadSpec::PerClient`]).
     pub fn payload_with(mut self, f: fn(NodeId) -> Vec<u8>) -> WorkloadSpec {
         self.payload = PayloadSpec::PerClient(f);
+        self
+    }
+
+    /// Fraction of requests issued as linearizable reads (clamped to
+    /// `[0, 1]`; default 0: the paper's all-write workload).
+    pub fn read_fraction(mut self, f: f64) -> WorkloadSpec {
+        self.read_fraction = if f.is_finite() { f.clamp(0.0, 1.0) } else { 0.0 };
+        self
+    }
+
+    /// Exact payload bytes for every read-only query (default: empty).
+    pub fn read_payload(mut self, bytes: Vec<u8>) -> WorkloadSpec {
+        self.read_payload = PayloadSpec::Fixed(bytes);
+        self
+    }
+
+    /// Per-client read payload generator.
+    pub fn read_payload_with(mut self, f: fn(NodeId) -> Vec<u8>) -> WorkloadSpec {
+        self.read_payload = PayloadSpec::PerClient(f);
         self
     }
 
@@ -306,6 +339,22 @@ mod tests {
         assert_eq!(w.in_flight_bound(), 16);
         assert_eq!(w.payload, PayloadSpec::Fixed(vec![0u8; 32]));
         assert_eq!((w.start_at, w.stop_at, w.resend_after), (5, 99, 7));
+    }
+
+    #[test]
+    fn read_knobs_default_off_and_clamp() {
+        let w = WorkloadSpec::closed_loop();
+        assert_eq!(w.read_fraction, 0.0);
+        assert_eq!(w.read_payload, PayloadSpec::Fixed(Vec::new()));
+        let w = WorkloadSpec::open_loop(100.0)
+            .read_fraction(0.9)
+            .read_payload(vec![b'g', 1, b'k']);
+        assert!((w.read_fraction - 0.9).abs() < 1e-9);
+        assert_eq!(w.read_payload.bytes_for(3), vec![b'g', 1, b'k']);
+        // Out-of-range fractions clamp rather than panic.
+        assert_eq!(WorkloadSpec::closed_loop().read_fraction(7.0).read_fraction, 1.0);
+        assert_eq!(WorkloadSpec::closed_loop().read_fraction(-1.0).read_fraction, 0.0);
+        assert_eq!(WorkloadSpec::closed_loop().read_fraction(f64::NAN).read_fraction, 0.0);
     }
 
     #[test]

@@ -125,6 +125,63 @@ fn retention_messages_roundtrip() {
 }
 
 #[test]
+fn read_and_lease_messages_roundtrip() {
+    // Dedicated round-trips for the linearizable-read path (tags 35–39)
+    // and the lease protocol (tags 40–42).
+    for group in [0u32, 3, u32::MAX] {
+        let m = Msg::Read { group, seq: 1, payload: vec![b'g', 1, b'k'] };
+        assert_eq!(rt(m.clone()), m);
+        let m = Msg::Read { group, seq: u64::MAX, payload: vec![] };
+        assert_eq!(rt(m.clone()), m);
+        let m = Msg::ReadReply { group, seq: 9, result: vec![0xff; 64] };
+        assert_eq!(rt(m.clone()), m);
+        let m = Msg::NotLeaseholder { group, hint: Some(14) };
+        assert_eq!(rt(m.clone()), m);
+        let m = Msg::NotLeaseholder { group, hint: None };
+        assert_eq!(rt(m.clone()), m);
+    }
+    let m = Msg::ReadIndexReq { id: 0 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::ReadIndexResp { id: u64::MAX, upto: 1 << 40 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::LeaseRenew { round: r(2, 1, 7), seq: 99 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::LeaseRenewAck { round: r(2, 1, 7), seq: 99 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::LeaseGrant {
+        round: r(2, 1, 7),
+        upto: u64::MAX,
+        granted_at: 123_456_789,
+        valid_until: u64::MAX - 1,
+    };
+    assert_eq!(rt(m.clone()), m);
+}
+
+#[test]
+fn read_and_lease_messages_reject_truncation() {
+    let msgs = vec![
+        Msg::Read { group: 1, seq: 2, payload: vec![3, 4] },
+        Msg::ReadReply { group: 1, seq: 2, result: vec![5] },
+        Msg::ReadIndexReq { id: 6 },
+        Msg::ReadIndexResp { id: 6, upto: 7 },
+        Msg::NotLeaseholder { group: 1, hint: Some(8) },
+        Msg::LeaseRenew { round: r(1, 2, 3), seq: 4 },
+        Msg::LeaseRenewAck { round: r(1, 2, 3), seq: 4 },
+        Msg::LeaseGrant { round: r(1, 2, 3), upto: 5, granted_at: 6, valid_until: 7 },
+    ];
+    for m in msgs {
+        let bytes = m.encode();
+        assert_eq!(Msg::decode(&bytes).unwrap(), m);
+        for cut in 0..bytes.len() {
+            assert!(
+                Msg::decode(&bytes[..cut]).is_err(),
+                "prefix of len {cut} of {m:?} decoded"
+            );
+        }
+    }
+}
+
+#[test]
 fn retention_messages_reject_truncation() {
     // Every strict prefix of an encoding must fail to decode (no panic,
     // no silent success) — the framing property the TCP runtime relies

@@ -7,7 +7,8 @@
 //! fully offline.
 
 use matchmaker::codec::{sample_messages, Wire};
-use matchmaker::config::{Configuration, OptFlags, SnapshotSpec};
+use matchmaker::config::{Configuration, LeaseSpec, OptFlags, SnapshotSpec};
+use matchmaker::metrics::check_counter_reads;
 use matchmaker::harness::{msec, secs, Cluster, ShardedCluster};
 use matchmaker::msg::{Envelope, Msg, Value};
 use matchmaker::node::Announce;
@@ -254,6 +255,159 @@ fn pipelined_and_open_loop_exactly_once_fifo_across_reconfig() {
             });
         }
     }
+}
+
+/// Leased-reads tentpole property: linearizable reads never return
+/// stale values across a reconfiguration storm on a lossy network.
+/// Counter state machine (+1 writes, total-reads), interleaved
+/// reads/writes with reads landing at every replica, across: leases on
+/// (grant fast path, with natural expiry/revocation as the storm pauses
+/// renewals), leases on with Optimizations 1/2 off (reads span full
+/// Phase-1 installs), leases off (the pure one-message ReadIndex
+/// fallback), and leases on across a leader crash + election (the
+/// lease-fence path). Every completed read is checked against the
+/// global write history: it must observe at least every write
+/// acknowledged before it was issued.
+#[test]
+fn leased_reads_never_stale_across_reconfig_storm() {
+    let variants: [(bool, bool, bool, bool); 4] = [
+        // (leases, opt1 proactive, opt2 bypass, crash the leader)
+        (true, true, true, false),
+        (true, false, false, false),
+        (false, true, true, false),
+        (true, true, true, true),
+    ];
+    for (leases_on, proactive, bypass, crash) in variants {
+        let name = format!(
+            "leased reads (leases={leases_on}, opt1={proactive}, opt2={bypass}, crash={crash})"
+        );
+        property(&name, 3, |seed| {
+            let mut opts = OptFlags::default();
+            opts.proactive_matchmaking = proactive;
+            opts.phase1_bypass = bypass;
+            if leases_on {
+                opts.leases = LeaseSpec::every(msec(30), msec(2), 100 * matchmaker::US);
+            }
+            let net = NetworkModel {
+                drop_prob: 0.03,
+                jitter: 80 * matchmaker::US,
+                ..NetworkModel::default()
+            };
+            let spec = WorkloadSpec::open_loop(800.0)
+                .max_in_flight(8)
+                .read_fraction(0.5)
+                .payload(1i64.to_le_bytes().to_vec())
+                .read_payload(Vec::new())
+                .stop_at(msec(2200));
+            let mut cluster = Cluster::builder()
+                .clients(4)
+                .workload(spec)
+                .opts(opts)
+                .net(net)
+                .seed(seed)
+                .build();
+            for &r in &cluster.layout.replicas.clone() {
+                if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+                    rep.sm = Box::new(Counter::new());
+                }
+            }
+            let p0 = cluster.initial_leader();
+            // 5-reconfiguration storm while reads and writes interleave
+            // (all scheduled before the optional crash at 700 ms, so no
+            // control-plane call ever targets a dead node).
+            for i in 0..5u64 {
+                let cfg = cluster.random_config(i + 1);
+                cluster.sim.schedule(msec(300 + i * 80), move |s| {
+                    s.with_node::<Leader, _>(p0, |l, now, fx| {
+                        l.reconfigure(cfg.clone(), now, fx)
+                    });
+                });
+            }
+            if crash {
+                // Leader change mid-storm: outstanding leases must be
+                // fenced out before the new leader's Phase 2.
+                let p1 = cluster.layout.proposers[1];
+                if let Some(l) = cluster.sim.node_mut::<Leader>(p1) {
+                    l.timing.election_timeout = msec(300);
+                }
+                cluster.sim.schedule(msec(700), move |s| s.crash(p0));
+            }
+            cluster.sim.run_until(secs(3));
+            cluster.assert_safe();
+            let reads = cluster.read_records();
+            let (completions, issues) = cluster.write_records();
+            assert!(!reads.is_empty(), "no reads completed (seed {seed})");
+            if let Err(e) = check_counter_reads(&reads, &completions, &issues) {
+                panic!("stale read (seed {seed}): {e}");
+            }
+            // Reads were served at every replica, via the expected path.
+            let stats = cluster.read_path_stats();
+            for (r, leased, indexed) in &stats {
+                assert!(
+                    leased + indexed > 0,
+                    "replica {r} served no reads (seed {seed}): {stats:?}"
+                );
+                if !leases_on {
+                    assert_eq!(*leased, 0, "grant served with leases off (seed {seed})");
+                }
+            }
+            if leases_on && !crash {
+                assert!(
+                    stats.iter().any(|(_, l, _)| *l > 0),
+                    "leased fast path never used (seed {seed}): {stats:?}"
+                );
+            }
+        });
+    }
+}
+
+/// X7 acceptance gate (ISSUE 5): at equal offered load under the
+/// 40 µs/msg egress model, the 90/10 leased mix sustains ≥ 2x the
+/// all-through-Phase-2 baseline's throughput; zero stale reads across
+/// the 5-reconfiguration storm in every variant; and the lease-expiry
+/// fallback (no lease → one-message ReadIndex) stays linearizable.
+#[test]
+fn read_scaling_meets_acceptance() {
+    use matchmaker::harness::experiments::{run_read_scaling, ReadVariant};
+    let duration = secs(3);
+    let base = run_read_scaling(42, ReadVariant::Baseline, duration);
+    let fallback = run_read_scaling(42, ReadVariant::ReadIndexOnly, duration);
+    let leased = run_read_scaling(42, ReadVariant::Leased, duration);
+    for (label, run) in
+        [("baseline", &base), ("read-index", &fallback), ("leased", &leased)]
+    {
+        run.check_linearizable()
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(
+            run.reconfigs_completed >= 6,
+            "{label}: storm incomplete ({} installs)",
+            run.reconfigs_completed
+        );
+        assert!(run.summary.reads > 1000, "{label}: only {} reads", run.summary.reads);
+    }
+    // Offered load is identical by construction; the leased mix must at
+    // least double aggregate throughput.
+    let ratio = leased.summary.completed_per_sec / base.summary.completed_per_sec;
+    assert!(
+        ratio >= 2.0,
+        "leased reads gained only {ratio:.2}x ({:.0} vs {:.0} ops/s at {:.0}/s offered)",
+        leased.summary.completed_per_sec,
+        base.summary.completed_per_sec,
+        base.summary.offered_per_sec
+    );
+    // The leased run actually served the bulk of its reads from grants,
+    // not the fallback; the no-lease run used only the fallback.
+    let grants: u64 = leased.read_path.iter().map(|(_, l, _)| *l).sum();
+    let indexed: u64 = leased.read_path.iter().map(|(_, _, i)| *i).sum();
+    assert!(
+        grants > indexed,
+        "leases barely used: {grants} leased vs {indexed} indexed"
+    );
+    assert!(
+        fallback.read_path.iter().all(|(_, l, _)| *l == 0),
+        "no-lease run served grant reads: {:?}",
+        fallback.read_path
+    );
 }
 
 /// State-retention tentpole property: snapshots + log truncation +
