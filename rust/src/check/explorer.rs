@@ -1,0 +1,413 @@
+//! Bounded explicit-state exploration of small protocol instances.
+//!
+//! Stateright-style, but native to this repo's sans-io [`crate::sim`]:
+//! the simulator is treated as a transition system whose frontier is the
+//! pending event queue. An enabled action either *fires* one pending
+//! event out of timestamp order ([`crate::sim::Sim::fire`]) or *drops*
+//! one in-flight message ([`crate::sim::Sim::drop_event`], budgeted per
+//! instance). The explorer runs depth-bounded DFS over action sequences,
+//! deduplicating states by fingerprint
+//! ([`crate::sim::Sim::fingerprint`] folded with the invariant catalog's
+//! digest), and evaluates the [`InvariantSet`] incrementally after every
+//! action.
+//!
+//! **Replay-based:** simulator states are not cloneable (nodes are
+//! `Box<dyn Node>`, controls are `FnOnce`), so instead of snapshotting,
+//! the explorer rebuilds the instance and re-applies the action prefix
+//! for every state it expands. Event seqs are assigned deterministically
+//! (creation order), so a prefix names the same schedule on every
+//! rebuild — the same property that makes trace files replayable.
+//!
+//! Reduction choices (documented in DESIGN.md §Model checking):
+//!
+//! * **Per-channel FIFO:** only the *head* message of each `(src, dst)`
+//!   channel is enabled. Real TCP links don't reorder, and the protocol
+//!   makes no ordering assumptions beyond that; this is the classic
+//!   reduction that keeps the branching factor at (#non-empty channels),
+//!   not (#in-flight messages).
+//! * **Timers are filtered**, not branched, by an instance predicate —
+//!   the loss-free instances need no timeout paths, and every timer left
+//!   in the queue still participates in fingerprints.
+//! * **Auto events** (per-instance predicate, e.g. deliveries to the
+//!   workload sink) fire immediately after every action and are excluded
+//!   from frontiers and traces.
+//!
+//! On a violation the offending action sequence is shrunk to a local
+//! minimum ([`shrink`]) before being reported: every action whose
+//! removal still reproduces the same invariant's violation is removed,
+//! to a fixpoint.
+
+use super::invariants::{InvariantSet, Violation};
+use crate::node::Timer;
+use crate::sim::{PendingEvent, PendingKind, Sim};
+use crate::NodeId;
+use std::collections::BTreeSet;
+
+/// A small, fully described protocol instance the explorer can rebuild
+/// from scratch deterministically (the checker's unit of configuration).
+pub struct Instance {
+    /// Stable name (`repro check <name>`, trace files).
+    pub name: &'static str,
+    /// One-line description for `repro check list`.
+    pub about: &'static str,
+    /// Build the instance: construct nodes, run the deterministic warmup
+    /// (leader election, steady state), inject the workload, schedule
+    /// controls. Must be deterministic — every call yields the same sim
+    /// with the same event seqs.
+    pub build: fn() -> Sim,
+    /// The invariant catalog this instance is checked against.
+    pub invariants: fn() -> InvariantSet,
+    /// `Some(name)`: this instance exists to *demonstrate* that the named
+    /// invariant catches a seeded bug; exploration must find a violation
+    /// of exactly that invariant. `None`: exploration must be clean.
+    pub expect_violation: Option<&'static str>,
+    /// Depth bound (actions per schedule) for `--mode full`.
+    pub depth: usize,
+    /// Depth bound for the CI fast-loop `--mode smoke`.
+    pub smoke_depth: usize,
+    /// Which pending timers are explorable (fired as branches). Timers
+    /// failing the predicate stay queued forever — loss-free instances
+    /// never need timeout paths.
+    pub timers: fn(&Timer) -> bool,
+    /// Events fired automatically (not branched, not recorded): responses
+    /// draining to the workload sink.
+    pub auto: fn(&PendingEvent) -> bool,
+    /// Total network drops the explorer may inject per schedule.
+    pub max_drops: usize,
+}
+
+/// Seq sentinel meaning "the lowest-seq pending event whose signature
+/// matches" — written as `*` in trace files. Lets regression traces be
+/// authored (and read) in terms of protocol messages instead of raw
+/// scheduler ids; resolution is deterministic because pending events are
+/// enumerated in seq order. The explorer itself always emits concrete
+/// seqs.
+pub const WILDCARD_SEQ: u64 = u64::MAX;
+
+/// One step of a schedule. The `String` is the event signature
+/// ([`PendingEvent::sig`]): replays validate it so a stale trace fails
+/// loudly instead of silently exploring a different schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Deliver/execute the pending event with this seq ([`WILDCARD_SEQ`]:
+    /// lowest seq matching the signature).
+    Fire(u64, String),
+    /// Drop the pending message with this seq (same wildcard rule).
+    Drop(u64, String),
+}
+
+impl Action {
+    pub fn seq(&self) -> u64 {
+        match self {
+            Action::Fire(s, _) | Action::Drop(s, _) => *s,
+        }
+    }
+
+    pub fn sig(&self) -> &str {
+        match self {
+            Action::Fire(_, sig) | Action::Drop(_, sig) => sig,
+        }
+    }
+}
+
+/// Outcome of re-applying an action prefix to a freshly built instance.
+pub enum Replayed {
+    /// Clean: the resulting state and the caught-up invariant set.
+    State(Sim, InvariantSet),
+    /// An invariant fired after applying `usize` actions of the prefix.
+    Violation(Violation, usize),
+    /// The prefix does not apply (hand-edited or stale trace).
+    Invalid(String),
+}
+
+/// Fire every pending event matching the instance's `auto` predicate, in
+/// seq order, until none remain (one auto event may schedule another).
+fn drain_autos(inst: &Instance, sim: &mut Sim) {
+    loop {
+        let next = sim.pending().into_iter().find(|e| (inst.auto)(e));
+        match next {
+            Some(e) => {
+                sim.fire(e.seq);
+            }
+            None => break,
+        }
+    }
+}
+
+/// Rebuild `inst` and re-apply `actions`, feeding the invariant catalog
+/// after the warmup and after every action.
+pub fn replay(inst: &Instance, actions: &[Action]) -> Replayed {
+    let mut sim = (inst.build)();
+    let mut invs = (inst.invariants)();
+    drain_autos(inst, &mut sim);
+    if let Err(v) = invs.feed(&sim.announces) {
+        return Replayed::Violation(v, 0);
+    }
+    for (i, act) in actions.iter().enumerate() {
+        let seq = if act.seq() == WILDCARD_SEQ {
+            match sim.pending().into_iter().find(|e| e.sig == act.sig()) {
+                Some(e) => e.seq,
+                None => {
+                    return Replayed::Invalid(format!(
+                        "action {i}: no pending event matches signature {}",
+                        act.sig()
+                    ));
+                }
+            }
+        } else {
+            act.seq()
+        };
+        let got = match act {
+            Action::Fire(..) => sim.fire(seq),
+            Action::Drop(..) => sim.drop_event(seq),
+        };
+        match got {
+            Some(sig) if sig == act.sig() => {}
+            Some(sig) => {
+                return Replayed::Invalid(format!(
+                    "action {i}: trace says {} for seq {}, queue had {sig}",
+                    act.sig(),
+                    act.seq()
+                ));
+            }
+            None => {
+                return Replayed::Invalid(format!(
+                    "action {i}: no pending event with seq {} ({})",
+                    act.seq(),
+                    act.sig()
+                ));
+            }
+        }
+        drain_autos(inst, &mut sim);
+        if let Err(v) = invs.feed(&sim.announces) {
+            return Replayed::Violation(v, i + 1);
+        }
+    }
+    Replayed::State(sim, invs)
+}
+
+/// Enumerate the actions enabled in `sim` under the instance's reduction
+/// rules: the head of every non-empty `(src, dst)` channel (fire, plus
+/// drop while budget remains), the lowest-id pending control, and any
+/// pending timer passing the instance filter.
+pub fn enabled_actions(inst: &Instance, sim: &Sim, prefix: &[Action]) -> Vec<Action> {
+    let drops_used = prefix.iter().filter(|a| matches!(a, Action::Drop(..))).count();
+    let mut heads: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
+    let mut control_seen = false;
+    let mut acts = Vec::new();
+    for ev in sim.pending() {
+        match ev.kind {
+            PendingKind::Deliver { from, to } => {
+                if heads.insert((from, to)) {
+                    if drops_used < inst.max_drops {
+                        acts.push(Action::Drop(ev.seq, ev.sig.clone()));
+                    }
+                    acts.push(Action::Fire(ev.seq, ev.sig));
+                }
+            }
+            PendingKind::Timer { timer, .. } => {
+                if (inst.timers)(&timer) {
+                    acts.push(Action::Fire(ev.seq, ev.sig));
+                }
+            }
+            PendingKind::Control => {
+                // Controls fire in id order (they model an experiment
+                // script, which is sequential).
+                if !control_seen {
+                    control_seen = true;
+                    acts.push(Action::Fire(ev.seq, ev.sig));
+                }
+            }
+        }
+    }
+    acts
+}
+
+/// Does `actions` reproduce a violation of invariant `name` on a fresh
+/// rebuild? (Feed violations count anywhere; end-of-run violations count
+/// only at terminal states, where `finish` is meaningful.)
+fn reproduces(inst: &Instance, actions: &[Action], name: &str) -> bool {
+    match replay(inst, actions) {
+        Replayed::Violation(v, _) => v.invariant == name,
+        Replayed::State(sim, invs) => {
+            enabled_actions(inst, &sim, actions).is_empty()
+                && invs.finish().err().is_some_and(|v| v.invariant == name)
+        }
+        Replayed::Invalid(_) => false,
+    }
+}
+
+/// Greedy ddmin-style minimization: repeatedly delete any single action
+/// whose removal preserves the violation, to a fixpoint. Quadratic in
+/// trace length per pass, which is fine at checker scale — traces are
+/// tens of actions.
+pub fn shrink(inst: &Instance, actions: &[Action], v: &Violation) -> Vec<Action> {
+    let mut cur = actions.to_vec();
+    loop {
+        let mut improved = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if reproduces(inst, &cand, v.invariant) {
+                cur = cand;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// What an exploration found.
+#[derive(Debug)]
+pub struct Report {
+    pub instance: &'static str,
+    /// Depth bound the run used.
+    pub depth: usize,
+    /// Prefixes actually rebuilt and replayed — the work the run did.
+    pub replays: u64,
+    /// States a dedup-free depth-bounded DFS would have expanded: the
+    /// exact size of the unfolded schedule tree, computed by memoized
+    /// subtree counting (no naive run happens). `f64` because diamonds
+    /// compound multiplicatively — at full depth this overflows `u64`.
+    pub raw_states: f64,
+    /// Distinct state fingerprints.
+    pub unique_states: u64,
+    /// Distinct states with no enabled actions (full schedules).
+    pub terminal_states: u64,
+    /// Distinct states cut by the depth bound.
+    pub depth_truncated: u64,
+    /// The replay cap stopped the run early.
+    pub hit_state_cap: bool,
+    /// First violation found, if any.
+    pub violation: Option<Violation>,
+    /// Minimized violating schedule (empty when `violation` is `None`).
+    pub trace: Vec<Action>,
+}
+
+impl Report {
+    /// raw/unique — how much of the schedule tree fingerprint dedup
+    /// collapsed.
+    pub fn dedup_ratio(&self) -> f64 {
+        crate::metrics::dedup_ratio(self.raw_states, self.unique_states)
+    }
+}
+
+struct Search<'a> {
+    inst: &'a Instance,
+    depth: usize,
+    max_replays: u64,
+    /// `(fingerprint, remaining depth) → naive subtree size`. Keying on
+    /// remaining depth (not just the fingerprint) keeps the search
+    /// complete when the same state is reached at different depths — a
+    /// shallower revisit still explores the deeper frontier.
+    memo: std::collections::BTreeMap<(u64, usize), f64>,
+    seen: BTreeSet<u64>,
+    report: Report,
+    done: bool,
+}
+
+impl Search<'_> {
+    /// Expand the state reached by `prefix`; returns the size of the
+    /// schedule tree a dedup-free DFS would build below it (inclusive).
+    fn dfs(&mut self, prefix: &mut Vec<Action>) -> f64 {
+        if self.done {
+            return 0.0;
+        }
+        if self.report.replays >= self.max_replays {
+            self.report.hit_state_cap = true;
+            self.done = true;
+            return 0.0;
+        }
+        self.report.replays += 1;
+        match replay(self.inst, prefix) {
+            Replayed::Violation(v, consumed) => {
+                self.report.trace = shrink(self.inst, &prefix[..consumed], &v);
+                self.report.violation = Some(v);
+                self.done = true;
+                1.0
+            }
+            Replayed::Invalid(e) => {
+                // Replays of explorer-enumerated actions are deterministic;
+                // a mismatch means the instance's `build` is not.
+                panic!("instance {} is nondeterministic: {e}", self.inst.name);
+            }
+            Replayed::State(sim, invs) => {
+                let fp = sim.fingerprint(invs.digest());
+                let remaining = self.depth - prefix.len();
+                if let Some(&n) = self.memo.get(&(fp, remaining)) {
+                    return n;
+                }
+                let fresh = self.seen.insert(fp);
+                let acts = enabled_actions(self.inst, &sim, prefix);
+                let n = if acts.is_empty() {
+                    if fresh {
+                        self.report.terminal_states += 1;
+                        // End-of-run invariants are meaningful only at
+                        // quiescent states (nothing further will happen).
+                        if let Err(v) = invs.finish() {
+                            self.report.trace = shrink(self.inst, prefix, &v);
+                            self.report.violation = Some(v);
+                            self.done = true;
+                        }
+                    }
+                    1.0
+                } else if remaining == 0 {
+                    if fresh {
+                        self.report.depth_truncated += 1;
+                    }
+                    1.0
+                } else {
+                    let mut total = 1.0;
+                    for act in acts {
+                        prefix.push(act);
+                        total += self.dfs(prefix);
+                        prefix.pop();
+                        if self.done {
+                            break;
+                        }
+                    }
+                    total
+                };
+                if !self.done {
+                    self.memo.insert((fp, remaining), n);
+                }
+                n
+            }
+        }
+    }
+}
+
+/// Depth-bounded DFS from the instance's initial (post-warmup) state.
+/// Stops at the first violation (after shrinking it) or when the
+/// frontier is exhausted / `max_replays` prefix replays are spent.
+pub fn explore(inst: &Instance, depth: usize, max_replays: u64) -> Report {
+    let mut search = Search {
+        inst,
+        depth,
+        max_replays,
+        memo: Default::default(),
+        seen: Default::default(),
+        report: Report {
+            instance: inst.name,
+            depth,
+            replays: 0,
+            raw_states: 0.0,
+            unique_states: 0,
+            terminal_states: 0,
+            depth_truncated: 0,
+            hit_state_cap: false,
+            violation: None,
+            trace: Vec::new(),
+        },
+        done: false,
+    };
+    let mut prefix = Vec::new();
+    search.report.raw_states = search.dfs(&mut prefix);
+    search.report.unique_states = search.seen.len() as u64;
+    search.report
+}

@@ -1,0 +1,338 @@
+//! The catalog of checked instances: small, fully deterministic
+//! deployments sized for exhaustive exploration (ISSUE: f = 1, two
+//! proposers, a handful of slots, one reconfiguration).
+//!
+//! Every instance shares the same cluster shape — acceptors `{0,1,2}`
+//! plus spare `10`, matchmakers `{3,4,5}`, proposers `{6,7}` (proposer 6
+//! self-elects at start), replicas `{8,9}` — and drives traffic from
+//! *sink* clients (ids ≥ [`SINK_CLIENTS`]) that are never added as
+//! nodes: their requests are injected directly and replies to them are
+//! auto-fired and discarded, which keeps client-side bookkeeping out of
+//! the explored state space.
+//!
+//! * [`base`] — happy-path: four commands from three clients racing one
+//!   acceptor reconfiguration `{0,1,2} → {1,2,10}`. Checked against the
+//!   strict invariant catalog; expected clean.
+//! * [`lossy`] — the same deployment, but the explorer may also drop one
+//!   message per schedule. Checked against the standard (lenient)
+//!   catalog — commands may be lost, but safety must hold. Expected
+//!   clean.
+//! * [`badquorum`] — a deliberately broken configuration whose P1 and
+//!   P2 quorums do not intersect (`P1 = {{0,1}}`, `P2 = {{2}}`). The
+//!   explorer must find the classic two-leader chosen-value divergence;
+//!   this is the checker-check that proves the explorer can actually
+//!   catch protocol bugs (and the source of the checked-in regression
+//!   trace).
+
+use super::explorer::Instance;
+use super::invariants::InvariantSet;
+use crate::config::{Configuration, OptFlags};
+use crate::msg::{Command, Msg};
+use crate::quorum::QuorumSpec;
+use crate::roles::{Acceptor, Leader, Matchmaker, Replica};
+use crate::sim::{NetworkModel, PendingEvent, PendingKind, Sim};
+use crate::statemachine::Noop;
+use crate::{NodeId, MS};
+
+/// Node ids at or above this are workload sinks: never added to the
+/// simulator, requests injected on their behalf, replies auto-fired.
+pub const SINK_CLIENTS: NodeId = 90;
+
+/// A deterministic network: fixed one-way delay, no jitter, no drops
+/// (the explorer injects drops itself, as first-class schedule actions).
+fn det_net() -> NetworkModel {
+    NetworkModel { jitter: 0, drop_prob: 0.0, ..NetworkModel::default() }
+}
+
+/// Auto-fire rule shared by all instances: replies addressed to sink
+/// clients carry no protocol state, so they are executed immediately
+/// (into the void — the sink is not a node) instead of multiplying the
+/// explored interleavings.
+fn auto_sink(ev: &PendingEvent) -> bool {
+    matches!(ev.kind, PendingKind::Deliver { to, .. } if to >= SINK_CLIENTS)
+}
+
+/// Timer rule shared by all instances: no timer fires. The checked
+/// instances have no drops the protocol must recover from (the lossy
+/// instance checks safety, not liveness, under its one drop), so
+/// retry/heartbeat/lease machinery would only blow up the state space —
+/// and excluding timers is exactly the "timing quotient" documented in
+/// DESIGN.md §Model checking.
+fn no_timers(_: &crate::node::Timer) -> bool {
+    false
+}
+
+/// Build the shared cluster shape and run it to a steady state: proposer
+/// 6 elected, no client traffic yet. `leader_replicas` is the replica
+/// set the leaders broadcast Chosen to — `badquorum` passes `[]` so the
+/// new leader cannot learn the chosen prefix from a replica (the point
+/// of that instance is what the *quorums* fail to tell it); the Chosen
+/// announce itself comes from the leader, so invariants see every
+/// decision either way.
+fn core(opts: OptFlags, initial: Configuration, seed: u64, leader_replicas: Vec<NodeId>) -> Sim {
+    let mut sim = Sim::new(seed, det_net());
+    for a in [0u32, 1, 2, 10] {
+        sim.add_node(a, Box::new(Acceptor::new(a)));
+    }
+    for m in [3u32, 4, 5] {
+        sim.add_node(m, Box::new(Matchmaker::new(m)));
+    }
+    for r in [8u32, 9] {
+        let mut rep = Replica::new(r, Box::new(Noop));
+        rep.peers = vec![8, 9];
+        rep.proposers = vec![6, 7];
+        sim.add_node(r, Box::new(rep));
+    }
+    for p in [6u32, 7] {
+        let leader = Leader::new(
+            p,
+            1,
+            initial.clone(),
+            vec![3, 4, 5],
+            leader_replicas.clone(),
+            vec![6, 7],
+            opts,
+            seed,
+        );
+        sim.add_node(p, Box::new(leader));
+    }
+    sim
+}
+
+fn request(client: NodeId, seq: u64, payload: u8) -> Msg {
+    Msg::ClientRequest {
+        group: 0,
+        cmd: Command { client, seq, payload: vec![payload] },
+        lowest: 1,
+    }
+}
+
+/// Build the `base`/`lossy` start state: steady cluster, four in-flight
+/// commands from three sink clients, and one scheduled acceptor
+/// reconfiguration `{0,1,2} → {1,2,10}` racing them.
+fn base_build() -> Sim {
+    let mut sim =
+        core(OptFlags::none(), Configuration::majority(0, vec![0, 1, 2]), 1, vec![8, 9]);
+    sim.run_until(50 * MS);
+    for (client, seq, payload) in [(90, 1, 1u8), (90, 2, 2), (91, 1, 3), (92, 1, 4)] {
+        sim.inject(client, 6, request(client, seq, payload));
+    }
+    let at = sim.now();
+    sim.schedule(at, |s| {
+        s.with_node::<Leader, _>(6, |l, now, fx| {
+            l.reconfigure(Configuration::majority(1, vec![1, 2, 10]), now, fx);
+        });
+    });
+    sim
+}
+
+/// The happy-path instance: every interleaving of four commands against
+/// one reconfiguration must satisfy the *strict* catalog (exactly-once,
+/// FIFO-contiguous client ordering included).
+pub fn base() -> Instance {
+    Instance {
+        name: "base",
+        about: "4 commands from 3 clients racing one acceptor reconfiguration {0,1,2}->{1,2,10}; \
+                strict invariants, no drops",
+        build: base_build,
+        invariants: InvariantSet::strict,
+        expect_violation: None,
+        depth: 48,
+        smoke_depth: 9,
+        timers: no_timers,
+        auto: auto_sink,
+        max_drops: 0,
+    }
+}
+
+/// The lossy instance: same deployment, but each schedule may also drop
+/// one in-flight message. Liveness is forfeit (no retry timers fire), so
+/// the lenient catalog applies: safety invariants only, client FIFO
+/// checked for payload consistency but not completion.
+pub fn lossy() -> Instance {
+    Instance {
+        name: "lossy",
+        about: "base deployment, but schedules may drop one message; standard (safety-only) \
+                invariants",
+        build: base_build,
+        invariants: InvariantSet::standard,
+        expect_violation: None,
+        depth: 32,
+        smoke_depth: 7,
+        timers: no_timers,
+        auto: auto_sink,
+        max_drops: 1,
+    }
+}
+
+/// Build the `badquorum` start state: a configuration whose P1 quorum
+/// `{0,1}` and P2 quorum `{2}` do not intersect (violating the paper's
+/// §3.2 quorum requirement), thriftiness on so Phase 2 really does touch
+/// only acceptor 2. During warmup, proposer 6 chooses client 90's
+/// command in slot 0 via the P2 quorum `{2}`. The scheduled control then
+/// makes proposer 7 grab leadership; its Phase 1 quorum `{0,1}` never
+/// intersects the vote, so schedules exist where it proposes client 91's
+/// command in the same slot — the divergence the checker must find.
+fn badquorum_build() -> Sim {
+    let bad = Configuration {
+        id: 0,
+        acceptors: vec![0, 1, 2],
+        quorum: QuorumSpec::Explicit {
+            p1: vec![[0usize, 1].into_iter().collect()],
+            p2: vec![[2usize].into_iter().collect()],
+        },
+    };
+    let opts = OptFlags { thrifty: true, ..OptFlags::none() };
+    let mut sim = core(opts, bad, 1, Vec::new());
+    sim.run_until(20 * MS);
+    sim.inject(90, 6, request(90, 1, 1));
+    // Let the first command be chosen (via P2 = {2}) inside the warmup:
+    // the explored schedules start from "slot 0 already decided".
+    sim.run_until(40 * MS);
+    let at = sim.now();
+    sim.schedule(at, |s| {
+        s.with_node::<Leader, _>(7, |l, now, fx| l.become_leader(now, fx));
+    });
+    sim.inject(91, 7, request(91, 1, 2));
+    sim
+}
+
+/// The deliberately broken instance: non-intersecting quorums. The
+/// quorum-intersection guard invariant is excluded — it would flag the
+/// configuration the moment it is announced, which is the *lint* view of
+/// this bug; this instance instead proves the explorer catches the
+/// *semantic* consequence (two values chosen in one slot).
+pub fn badquorum() -> Instance {
+    Instance {
+        name: "badquorum",
+        about: "non-intersecting P1/P2 quorums (P1={{0,1}}, P2={{2}}): the explorer must find \
+                two values chosen in slot 0 after a leader change",
+        build: badquorum_build,
+        invariants: || InvariantSet::strict().without("quorum-intersection"),
+        expect_violation: Some("chosen-unique"),
+        depth: 28,
+        smoke_depth: 28,
+        timers: no_timers,
+        auto: auto_sink,
+        max_drops: 0,
+    }
+}
+
+/// Every checked instance, in documentation order.
+pub fn all() -> Vec<Instance> {
+    vec![base(), lossy(), badquorum()]
+}
+
+/// Look up an instance by name.
+pub fn find(name: &str) -> Option<Instance> {
+    all().into_iter().find(|i| i.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::explorer::{enabled_actions, explore, replay, Action, Replayed};
+
+    #[test]
+    fn registry_finds_every_instance() {
+        for inst in all() {
+            assert!(find(inst.name).is_some(), "{} not findable", inst.name);
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn builds_are_deterministic() {
+        for inst in all() {
+            let a = (inst.build)();
+            let b = (inst.build)();
+            assert_eq!(a.pending(), b.pending(), "{}: pending events differ", inst.name);
+            let da = (inst.invariants)().digest();
+            let db = (inst.invariants)().digest();
+            assert_eq!(da, db, "{}: invariant digests differ", inst.name);
+            assert_eq!(
+                a.fingerprint(da),
+                b.fingerprint(db),
+                "{}: fingerprints differ",
+                inst.name
+            );
+        }
+    }
+
+    #[test]
+    fn warmup_is_clean() {
+        // The announces produced while building each instance must
+        // already satisfy its own invariant catalog (violations are
+        // supposed to come from explored schedules, not the warmup).
+        for inst in all() {
+            let sim = (inst.build)();
+            let mut invs = (inst.invariants)();
+            if let Err(v) = invs.feed(&sim.announces) {
+                panic!("{} warmup violates {v}", inst.name);
+            }
+        }
+    }
+
+    #[test]
+    fn base_has_pending_work() {
+        let inst = base();
+        let sim = (inst.build)();
+        let actions = enabled_actions(&inst, &sim, &[]);
+        assert!(!actions.is_empty());
+        // The scheduled reconfiguration is an enabled control action.
+        assert!(
+            actions.iter().any(|a| a.sig().starts_with('c')),
+            "no control action in {actions:?}"
+        );
+        // Per-channel FIFO: client 90 has two requests in flight on the
+        // same channel, so exactly one 90->6 deliver is enabled.
+        let from_90 =
+            actions.iter().filter(|a| a.sig().starts_with("d90->6:")).count();
+        assert_eq!(from_90, 1, "channel head reduction broken: {actions:?}");
+    }
+
+    #[test]
+    fn lossy_offers_drops_within_budget() {
+        let inst = lossy();
+        let sim = (inst.build)();
+        let actions = enabled_actions(&inst, &sim, &[]);
+        assert!(actions.iter().any(|a| matches!(a, Action::Drop(..))));
+        // After one drop is in the prefix, the budget is exhausted.
+        let first_drop =
+            actions.iter().find(|a| matches!(a, Action::Drop(..))).unwrap().clone();
+        match replay(&inst, std::slice::from_ref(&first_drop)) {
+            Replayed::State(sim2, _) => {
+                let next = enabled_actions(&inst, &sim2, std::slice::from_ref(&first_drop));
+                assert!(
+                    next.iter().all(|a| matches!(a, Action::Fire(..))),
+                    "drop budget not enforced: {next:?}"
+                );
+            }
+            Replayed::Violation(v, _) => panic!("unexpected violation: {v}"),
+            Replayed::Invalid(e) => panic!("invalid replay: {e}"),
+        }
+    }
+
+    #[test]
+    fn shallow_exploration_of_base_is_clean_and_dedups() {
+        let report = explore(&base(), 5, 20_000);
+        assert!(report.violation.is_none(), "{:?}", report.violation);
+        assert!(report.unique_states > 1);
+        assert!(
+            report.raw_states > report.unique_states as f64,
+            "no merging at all: raw {} unique {}",
+            report.raw_states,
+            report.unique_states
+        );
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let a = explore(&base(), 4, 5_000);
+        let b = explore(&base(), 4, 5_000);
+        assert_eq!(a.replays, b.replays);
+        assert_eq!(a.raw_states.to_bits(), b.raw_states.to_bits());
+        assert_eq!(a.unique_states, b.unique_states);
+        assert_eq!(a.trace, b.trace);
+    }
+}

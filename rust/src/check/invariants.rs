@@ -1,0 +1,976 @@
+//! The machine-checked protocol invariant catalog.
+//!
+//! Each [`Invariant`] consumes the simulator's announcement stream
+//! ([`crate::sim::Sim::announces`]) — including the model-checker probe
+//! variants of [`Announce`] — and reports the first violation it sees.
+//! The catalog is evaluated incrementally after *every* explored event
+//! ([`InvariantSet::feed`]), so a violating schedule is caught at the
+//! exact step that breaks the property, and the set's [`digest`]
+//! participates in state fingerprints so two paths with different
+//! violation-relevant history never merge in the explorer's dedup table.
+//!
+//! The catalog (paper references per invariant):
+//!
+//! | name                  | property                                     |
+//! |-----------------------|----------------------------------------------|
+//! | `chosen-unique`       | ≤1 value per (group, slot) — §3 Theorem 1    |
+//! | `quorum-intersection` | every P1 quorum meets every P2 quorum — §3.2 |
+//! | `matchmaker-monotonic`| MatchB rounds non-decreasing, ≥ GC watermark — Alg. 1/4 |
+//! | `mm-merge`            | Figure-7 merge of stopped logs is correct — §6 |
+//! | `lease-fence`         | old grants expire before a new fence lifts    |
+//! | `watermark-order`     | truncate ≤ executed/durable; snapshots advance |
+//! | `client-fifo`         | per-client exactly-once / FIFO execution order |
+//!
+//! [`digest`]: InvariantSet::digest
+
+use crate::config::Configuration;
+use crate::msg::{Command, MmLog, Value};
+use crate::node::Announce;
+use crate::round::Round;
+use crate::util::Fnv;
+use crate::{GroupId, NodeId, Slot, Time};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A violated invariant: which one, where in the run, and why.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// [`Invariant::name`] of the violated invariant.
+    pub invariant: &'static str,
+    /// Virtual time of the violating announcement (0 for end-of-run
+    /// checks).
+    pub at: Time,
+    /// Node that emitted the violating announcement.
+    pub node: NodeId,
+    /// Human-readable explanation.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invariant {} violated at t={} by node {}: {}",
+            self.invariant, self.at, self.node, self.detail
+        )
+    }
+}
+
+/// A machine-checked protocol property over the announcement stream.
+///
+/// Implementations are incremental state machines: [`observe`] feeds one
+/// announcement (with its timestamp and emitting node) and returns the
+/// violation message if the property just broke. [`digest`] must hash all
+/// state that future verdicts depend on — it feeds the explorer's state
+/// fingerprints. [`finish`] runs once at a *terminal* state (quiescent,
+/// nothing left to deliver) for properties that are only required
+/// eventually (e.g. FIFO contiguity).
+///
+/// [`observe`]: Invariant::observe
+/// [`digest`]: Invariant::digest
+/// [`finish`]: Invariant::finish
+pub trait Invariant {
+    /// Stable kebab-case name (used in traces and `expect` lines).
+    fn name(&self) -> &'static str;
+
+    /// Feed one announcement; `Err` describes the violation.
+    fn observe(&mut self, at: Time, node: NodeId, a: &Announce) -> Result<(), String>;
+
+    /// FNV-1a digest of all verdict-relevant internal state.
+    fn digest(&self) -> u64;
+
+    /// End-of-run check at a terminal (quiescent) state.
+    fn finish(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+fn fnv_of(s: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(s);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------
+// chosen-unique
+// ---------------------------------------------------------------------
+
+/// §3 Theorem 1: at most one value is ever chosen per `(group, slot)`,
+/// across all rounds, leaders, and configurations. The generalization of
+/// [`crate::sim::Sim::check_chosen_safety`] to incremental evaluation.
+#[derive(Default)]
+struct ChosenUnique {
+    chosen: BTreeMap<(GroupId, Slot), Value>,
+}
+
+impl Invariant for ChosenUnique {
+    fn name(&self) -> &'static str {
+        "chosen-unique"
+    }
+
+    fn observe(&mut self, _at: Time, _node: NodeId, a: &Announce) -> Result<(), String> {
+        let (group, slot, value) = match a {
+            Announce::Chosen { group, slot, value, .. } => (*group, *slot, value),
+            _ => return Ok(()),
+        };
+        match self.chosen.get(&(group, slot)) {
+            None => {
+                self.chosen.insert((group, slot), value.clone());
+                Ok(())
+            }
+            Some(prev) if prev == value => Ok(()),
+            Some(prev) => Err(format!(
+                "group {group} slot {slot}: two distinct values chosen: {prev:?} then {value:?}"
+            )),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for ((g, s), v) in &self.chosen {
+            h.write_u64(*g as u64);
+            h.write_u64(*s);
+            h.write_str(&format!("{v:?}"));
+        }
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// quorum-intersection
+// ---------------------------------------------------------------------
+
+/// §3.2 (Theorem 1's precondition): in every configuration a leader
+/// activates, every Phase-1 quorum intersects every Phase-2 quorum.
+/// Stateless — the property is per-announcement.
+struct QuorumIntersection;
+
+impl Invariant for QuorumIntersection {
+    fn name(&self) -> &'static str {
+        "quorum-intersection"
+    }
+
+    fn observe(&mut self, _at: Time, _node: NodeId, a: &Announce) -> Result<(), String> {
+        let Announce::QuorumConfig { group, round, config } = a else {
+            return Ok(());
+        };
+        if let Err(e) = config.validate() {
+            return Err(format!(
+                "group {group} round {round:?}: activated invalid configuration {config:?}: {e}"
+            ));
+        }
+        if !config.quorum.intersects(config.acceptors.len()) {
+            return Err(format!(
+                "group {group} round {round:?}: some P1 quorum misses some P2 quorum in {config:?}"
+            ));
+        }
+        Ok(())
+    }
+
+    fn digest(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// matchmaker-monotonic
+// ---------------------------------------------------------------------
+
+/// Algorithm 1's refusal discipline and Algorithm 4's GC watermark, per
+/// (matchmaker, group): the rounds a matchmaker answers `MatchB` for
+/// never decrease, never dip below its GC watermark, and the watermark
+/// itself only rises. Resets on [`Announce::NodeRestarted`] (a fresh
+/// incarnation legitimately starts over).
+#[derive(Default)]
+struct MatchmakerMonotonic {
+    answered: BTreeMap<(NodeId, GroupId), Round>,
+    gc: BTreeMap<(NodeId, GroupId), Round>,
+}
+
+impl Invariant for MatchmakerMonotonic {
+    fn name(&self) -> &'static str {
+        "matchmaker-monotonic"
+    }
+
+    fn observe(&mut self, _at: Time, node: NodeId, a: &Announce) -> Result<(), String> {
+        match a {
+            Announce::MatchAnswered { group, round } => {
+                if let Some(prev) = self.answered.get(&(node, *group)) {
+                    if round < prev {
+                        return Err(format!(
+                            "matchmaker {node} group {group}: answered round {round:?} after \
+                             {prev:?} (refusal discipline requires non-decreasing rounds)"
+                        ));
+                    }
+                }
+                if let Some(w) = self.gc.get(&(node, *group)) {
+                    if round < w {
+                        return Err(format!(
+                            "matchmaker {node} group {group}: answered round {round:?} below \
+                             its GC watermark {w:?}"
+                        ));
+                    }
+                }
+                self.answered.insert((node, *group), *round);
+                Ok(())
+            }
+            Announce::MmGc { group, round } => {
+                if let Some(prev) = self.gc.get(&(node, *group)) {
+                    if round < prev {
+                        return Err(format!(
+                            "matchmaker {node} group {group}: GC watermark regressed \
+                             {prev:?} -> {round:?}"
+                        ));
+                    }
+                }
+                self.gc.insert((node, *group), *round);
+                Ok(())
+            }
+            Announce::NodeRestarted { node: n } => {
+                self.answered.retain(|(id, _), _| id != n);
+                self.gc.retain(|(id, _), _| id != n);
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_str(&format!("{:?}|{:?}", self.answered, self.gc));
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// mm-merge
+// ---------------------------------------------------------------------
+
+/// §6 / Figure 7: when a leader merges the logs of `f+1` stopped
+/// matchmakers, the merged log must be, per group, the union of the
+/// input logs with every entry below the maximum input watermark
+/// removed, and the merged watermarks the pointwise maxima. This is an
+/// independent re-derivation from the announced *inputs* — it does not
+/// call [`crate::roles::matchmaker::merge_stopped`], so a bug there
+/// (or an announcement that misreports its inputs) is caught.
+struct MmMergeConsistent;
+
+impl Invariant for MmMergeConsistent {
+    fn name(&self) -> &'static str {
+        "mm-merge"
+    }
+
+    fn observe(&mut self, _at: Time, node: NodeId, a: &Announce) -> Result<(), String> {
+        let Announce::MmMerged { inputs, merged, watermarks } = a else {
+            return Ok(());
+        };
+        let mut want_wms: BTreeMap<GroupId, Round> = BTreeMap::new();
+        for (_, wms) in inputs {
+            for (g, w) in wms {
+                let e = want_wms.entry(*g).or_insert(*w);
+                if w > e {
+                    *e = *w;
+                }
+            }
+        }
+        let mut want: MmLog = BTreeMap::new();
+        for (log, _) in inputs {
+            for (g, glog) in log {
+                let keep = want.entry(*g).or_default();
+                for (r, c) in glog {
+                    if want_wms.get(g).is_some_and(|w| r < w) {
+                        continue;
+                    }
+                    keep.insert(*r, c.clone());
+                }
+            }
+        }
+        if &want != merged {
+            return Err(format!(
+                "leader {node}: merged matchmaker log {merged:?} differs from the Figure-7 \
+                 merge of its inputs {want:?}"
+            ));
+        }
+        if &want_wms != watermarks {
+            return Err(format!(
+                "leader {node}: merged watermarks {watermarks:?} differ from pointwise maxima \
+                 {want_wms:?}"
+            ));
+        }
+        Ok(())
+    }
+
+    fn digest(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// lease-fence
+// ---------------------------------------------------------------------
+
+/// Lease safety (DESIGN.md §Reads): a new leader's post-election fence
+/// for round `r'` may only lift once every read-lease grant issued under
+/// a lower round has expired — otherwise an old leaseholder could serve
+/// a stale read concurrently with the new configuration choosing writes.
+#[derive(Default)]
+struct LeaseFence {
+    /// Per grant round: the latest `valid_until` ever granted.
+    grants: BTreeMap<Round, Time>,
+}
+
+impl Invariant for LeaseFence {
+    fn name(&self) -> &'static str {
+        "lease-fence"
+    }
+
+    fn observe(&mut self, at: Time, node: NodeId, a: &Announce) -> Result<(), String> {
+        match a {
+            Announce::LeaseGranted { round, valid_until } => {
+                let e = self.grants.entry(*round).or_insert(0);
+                if *valid_until > *e {
+                    *e = *valid_until;
+                }
+                Ok(())
+            }
+            Announce::FenceLifted { round } => {
+                for (r, vu) in &self.grants {
+                    if r < round && *vu > at {
+                        return Err(format!(
+                            "leader {node}: fence for {round:?} lifted at t={at} while a \
+                             grant under {r:?} is still valid until t={vu}"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for (r, vu) in &self.grants {
+            h.write_str(&format!("{r:?}"));
+            h.write_u64(*vu);
+        }
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// watermark-order
+// ---------------------------------------------------------------------
+
+/// Snapshot / GC watermark ordering (§5.3, DESIGN.md §Snapshots):
+/// * a replica only truncates below what it has executed
+///   (`ReplicaTruncated.below ≤ exec`), and its truncation point never
+///   regresses;
+/// * a leader only compacts below the `f+1`-replica durable watermark
+///   (`LogTruncated.below ≤ durable`), monotonically;
+/// * successive snapshots of one replica cover strictly more of the log
+///   (the role only snapshots when the executed watermark advanced).
+///
+/// All three reset for a node on [`Announce::NodeRestarted`].
+#[derive(Default)]
+struct WatermarkOrder {
+    snap_upto: BTreeMap<NodeId, Slot>,
+    replica_below: BTreeMap<NodeId, Slot>,
+    leader_below: BTreeMap<(NodeId, GroupId), Slot>,
+}
+
+impl Invariant for WatermarkOrder {
+    fn name(&self) -> &'static str {
+        "watermark-order"
+    }
+
+    fn observe(&mut self, _at: Time, node: NodeId, a: &Announce) -> Result<(), String> {
+        match a {
+            Announce::SnapshotTaken { replica, upto } => {
+                if let Some(prev) = self.snap_upto.get(replica) {
+                    if upto <= prev {
+                        return Err(format!(
+                            "replica {replica}: snapshot at {upto} does not advance past \
+                             the previous snapshot at {prev}"
+                        ));
+                    }
+                }
+                self.snap_upto.insert(*replica, *upto);
+                Ok(())
+            }
+            Announce::ReplicaTruncated { replica, below, exec } => {
+                if below > exec {
+                    return Err(format!(
+                        "replica {replica}: truncated below {below} but only executed \
+                         through {exec} (would discard unexecuted slots)"
+                    ));
+                }
+                if let Some(prev) = self.replica_below.get(replica) {
+                    if below < prev {
+                        return Err(format!(
+                            "replica {replica}: truncation point regressed {prev} -> {below}"
+                        ));
+                    }
+                }
+                self.replica_below.insert(*replica, *below);
+                Ok(())
+            }
+            Announce::LogTruncated { group, below, durable } => {
+                if below > durable {
+                    return Err(format!(
+                        "leader {node} group {group}: compacted below {below} but the \
+                         durable watermark is {durable} (a chosen value could be lost)"
+                    ));
+                }
+                if let Some(prev) = self.leader_below.get(&(node, *group)) {
+                    if below < prev {
+                        return Err(format!(
+                            "leader {node} group {group}: compaction point regressed \
+                             {prev} -> {below}"
+                        ));
+                    }
+                }
+                self.leader_below.insert((node, *group), *below);
+                Ok(())
+            }
+            Announce::NodeRestarted { node: n } => {
+                self.snap_upto.remove(n);
+                self.replica_below.remove(n);
+                self.leader_below.retain(|(id, _), _| id != n);
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_str(&format!(
+            "{:?}|{:?}|{:?}",
+            self.snap_upto, self.replica_below, self.leader_below
+        ));
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// client-fifo
+// ---------------------------------------------------------------------
+
+/// Per-client exactly-once / FIFO over the chosen log (§2's client
+/// interface contract, enforced by [`crate::roles::sequencer`] and the
+/// replica dedup table).
+///
+/// Two modes:
+///
+/// * **Lenient** (harness runs, crashy/lossy instances): only payload
+///   consistency — one `(group, client, seq)` never appears with two
+///   different payloads. Duplicate choices of the same command across
+///   slots are legal under leader failover (replicas dedup at
+///   execution).
+/// * **Strict** (crash-free checker instances): additionally, no
+///   `(client, seq)` is chosen in two different slots, first occurrences
+///   appear in seq order along the slot order, and at a terminal state
+///   each client's chosen seqs are contiguous (nothing admitted was
+///   lost).
+struct ClientFifo {
+    strict: bool,
+    /// (group, client, seq) → payload digest (both modes).
+    payloads: BTreeMap<(GroupId, NodeId, u64), u64>,
+    /// (group, client, seq) → slot of first choice (strict).
+    placed: BTreeMap<(GroupId, NodeId, u64), Slot>,
+    /// group → slot → commands, for the strict end-of-run FIFO scan.
+    slots: BTreeMap<GroupId, BTreeMap<Slot, Vec<Command>>>,
+}
+
+impl ClientFifo {
+    fn new(strict: bool) -> ClientFifo {
+        ClientFifo {
+            strict,
+            payloads: BTreeMap::new(),
+            placed: BTreeMap::new(),
+            slots: BTreeMap::new(),
+        }
+    }
+
+    fn commands(value: &Value) -> &[Command] {
+        match value {
+            Value::Cmd(c) => std::slice::from_ref(c),
+            Value::Batch(cs) => cs,
+            Value::Noop | Value::Reconfig(_) => &[],
+        }
+    }
+}
+
+impl Invariant for ClientFifo {
+    fn name(&self) -> &'static str {
+        "client-fifo"
+    }
+
+    fn observe(&mut self, _at: Time, _node: NodeId, a: &Announce) -> Result<(), String> {
+        let Announce::Chosen { group, slot, value, .. } = a else {
+            return Ok(());
+        };
+        for cmd in Self::commands(value) {
+            let key = (*group, cmd.client, cmd.seq);
+            let digest = {
+                let mut h = Fnv::new();
+                h.write(&cmd.payload);
+                h.finish()
+            };
+            match self.payloads.get(&key) {
+                None => {
+                    self.payloads.insert(key, digest);
+                }
+                Some(prev) if *prev == digest => {}
+                Some(_) => {
+                    return Err(format!(
+                        "group {group} client {} seq {}: chosen twice with different \
+                         payloads",
+                        cmd.client, cmd.seq
+                    ));
+                }
+            }
+            if self.strict {
+                match self.placed.get(&key) {
+                    None => {
+                        self.placed.insert(key, *slot);
+                    }
+                    Some(prev) if prev == slot => {}
+                    Some(prev) => {
+                        return Err(format!(
+                            "group {group} client {} seq {}: chosen in two slots \
+                             ({prev} and {slot}) in a crash-free run",
+                            cmd.client, cmd.seq
+                        ));
+                    }
+                }
+            }
+        }
+        if self.strict {
+            self.slots
+                .entry(*group)
+                .or_default()
+                .insert(*slot, Self::commands(value).to_vec());
+        }
+        Ok(())
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if !self.strict {
+            return Ok(());
+        }
+        for (group, slots) in &self.slots {
+            // Walk the chosen log in slot order; per client the seqs must
+            // read 1, 2, 3, ... — monotone (FIFO) and contiguous
+            // (exactly-once admission lost nothing).
+            let mut last: BTreeMap<NodeId, u64> = BTreeMap::new();
+            for cmds in slots.values() {
+                for cmd in cmds {
+                    let prev = last.entry(cmd.client).or_insert(cmd.seq.saturating_sub(1));
+                    if cmd.seq != *prev + 1 {
+                        return Err(format!(
+                            "group {group} client {}: seq {} follows {} in slot order \
+                             (FIFO/contiguity broken)",
+                            cmd.client, cmd.seq, prev
+                        ));
+                    }
+                    *prev = cmd.seq;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for ((g, c, q), p) in &self.payloads {
+            h.write_u64(*g as u64);
+            h.write_u64(*c as u64);
+            h.write_u64(*q);
+            h.write_u64(*p);
+        }
+        for ((g, c, q), s) in &self.placed {
+            h.write_u64(*g as u64);
+            h.write_u64(*c as u64);
+            h.write_u64(*q);
+            h.write_u64(*s);
+        }
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The set
+// ---------------------------------------------------------------------
+
+/// The full invariant catalog plus an incremental cursor over an
+/// announcement stream. [`feed`] consumes only announcements it has not
+/// seen yet, so the explorer can call it after every fired event without
+/// re-scanning history.
+///
+/// [`feed`]: InvariantSet::feed
+pub struct InvariantSet {
+    invs: Vec<Box<dyn Invariant>>,
+    cursor: usize,
+}
+
+impl InvariantSet {
+    /// The standard catalog (lenient client-FIFO): safe for any run,
+    /// including crashy and lossy ones. This is what the harness asserts
+    /// after every experiment.
+    pub fn standard() -> InvariantSet {
+        Self::with_fifo(false)
+    }
+
+    /// The strict catalog: adds exactly-once slot placement and
+    /// end-of-run FIFO contiguity. Sound only for crash-free runs where
+    /// every admitted command is eventually chosen (the explorer's
+    /// loss-free instances).
+    pub fn strict() -> InvariantSet {
+        Self::with_fifo(true)
+    }
+
+    fn with_fifo(strict: bool) -> InvariantSet {
+        InvariantSet {
+            invs: vec![
+                Box::new(ChosenUnique::default()),
+                Box::new(QuorumIntersection),
+                Box::new(MatchmakerMonotonic::default()),
+                Box::new(MmMergeConsistent),
+                Box::new(LeaseFence::default()),
+                Box::new(WatermarkOrder::default()),
+                Box::new(ClientFifo::new(strict)),
+            ],
+            cursor: 0,
+        }
+    }
+
+    /// Remove one invariant by name (checker instances that *demonstrate*
+    /// a violation disable the guard invariant that would fire first —
+    /// e.g. `badquorum` drops `quorum-intersection` so the explorer gets
+    /// to find the downstream chosen-safety violation itself).
+    pub fn without(mut self, name: &str) -> InvariantSet {
+        self.invs.retain(|i| i.name() != name);
+        self
+    }
+
+    /// Names of the invariants in the catalog, in evaluation order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.invs.iter().map(|i| i.name()).collect()
+    }
+
+    /// Feed the not-yet-seen suffix of `events` to every invariant.
+    pub fn feed(&mut self, events: &[(Time, NodeId, Announce)]) -> Result<(), Violation> {
+        while self.cursor < events.len() {
+            let (at, node, a) = &events[self.cursor];
+            self.cursor += 1;
+            for inv in &mut self.invs {
+                if let Err(detail) = inv.observe(*at, *node, a) {
+                    return Err(Violation {
+                        invariant: inv.name(),
+                        at: *at,
+                        node: *node,
+                        detail,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-run checks; call only at terminal (quiescent) states.
+    pub fn finish(&self) -> Result<(), Violation> {
+        for inv in &self.invs {
+            if let Err(detail) = inv.finish() {
+                return Err(Violation { invariant: inv.name(), at: 0, node: 0, detail });
+            }
+        }
+        Ok(())
+    }
+
+    /// One-shot evaluation of a complete announcement stream with the
+    /// standard catalog (no end-of-run checks — the stream may come from
+    /// a run that stopped mid-flight).
+    pub fn check_all(events: &[(Time, NodeId, Announce)]) -> Result<(), Violation> {
+        let mut set = InvariantSet::standard();
+        set.feed(events)
+    }
+
+    /// Combined digest of every invariant's state, for state
+    /// fingerprinting.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for inv in &self.invs {
+            h.write_str(inv.name());
+            h.write_u64(inv.digest());
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Command;
+    use crate::quorum::QuorumSpec;
+
+    fn r(epoch: u64) -> Round {
+        Round { epoch, proposer: 0, seq: 0 }
+    }
+
+    fn cmd(client: NodeId, seq: u64, payload: &[u8]) -> Value {
+        Value::Cmd(Command { client, seq, payload: payload.to_vec() })
+    }
+
+    fn chosen(group: GroupId, slot: Slot, v: Value) -> (Time, NodeId, Announce) {
+        (1, 6, Announce::Chosen { group, slot, round: r(1), value: v })
+    }
+
+    #[test]
+    fn clean_stream_passes() {
+        let events = vec![
+            chosen(0, 0, cmd(90, 1, b"a")),
+            chosen(0, 1, cmd(90, 2, b"b")),
+            chosen(1, 0, cmd(91, 1, b"c")), // same slot index, other group: fine
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+        let mut s = InvariantSet::strict();
+        s.feed(&events).unwrap();
+        s.finish().unwrap();
+    }
+
+    #[test]
+    fn chosen_unique_fires() {
+        let events = vec![chosen(0, 0, cmd(90, 1, b"a")), chosen(0, 0, cmd(91, 1, b"b"))];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "chosen-unique");
+    }
+
+    #[test]
+    fn quorum_intersection_fires() {
+        let bad = Configuration {
+            id: 9,
+            acceptors: vec![0, 1, 2],
+            quorum: QuorumSpec::Explicit {
+                p1: vec![[0, 1].into_iter().collect()],
+                p2: vec![[2].into_iter().collect()],
+            },
+        };
+        let events = vec![(
+            1,
+            6,
+            Announce::QuorumConfig { group: 0, round: r(1), config: bad },
+        )];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "quorum-intersection");
+    }
+
+    #[test]
+    fn matchmaker_monotonic_fires_on_regression() {
+        let events = vec![
+            (1, 3, Announce::MatchAnswered { group: 0, round: r(5) }),
+            (2, 3, Announce::MatchAnswered { group: 0, round: r(3) }),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "matchmaker-monotonic");
+    }
+
+    #[test]
+    fn matchmaker_monotonic_fires_below_watermark() {
+        let events = vec![
+            (1, 3, Announce::MmGc { group: 0, round: r(5) }),
+            (2, 3, Announce::MatchAnswered { group: 0, round: r(4) }),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "matchmaker-monotonic");
+    }
+
+    #[test]
+    fn matchmaker_monotonic_resets_on_restart() {
+        let events = vec![
+            (1, 3, Announce::MatchAnswered { group: 0, round: r(5) }),
+            (2, 3, Announce::NodeRestarted { node: 3 }),
+            (3, 3, Announce::MatchAnswered { group: 0, round: r(1) }),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn mm_merge_fires_on_wrong_merge() {
+        let cfg = Configuration::majority(1, vec![0, 1, 2]);
+        let mut log: MmLog = BTreeMap::new();
+        log.entry(0).or_default().insert(r(1), cfg.clone());
+        // Announced merge drops the entry without any watermark excuse.
+        let events = vec![(
+            1,
+            6,
+            Announce::MmMerged {
+                inputs: vec![(log, BTreeMap::new())],
+                merged: BTreeMap::new(),
+                watermarks: BTreeMap::new(),
+            },
+        )];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "mm-merge");
+    }
+
+    #[test]
+    fn mm_merge_accepts_figure7() {
+        let cfg = |id| Configuration::majority(id, vec![0, 1, 2]);
+        let mut log_a: MmLog = BTreeMap::new();
+        log_a.entry(0).or_default().insert(r(1), cfg(1));
+        log_a.entry(0).or_default().insert(r(2), cfg(2));
+        let mut log_b: MmLog = BTreeMap::new();
+        log_b.entry(0).or_default().insert(r(3), cfg(3));
+        let wms_b: BTreeMap<GroupId, Round> = [(0, r(2))].into_iter().collect();
+        // Expected: union minus rounds below watermark r(2).
+        let mut merged: MmLog = BTreeMap::new();
+        merged.entry(0).or_default().insert(r(2), cfg(2));
+        merged.entry(0).or_default().insert(r(3), cfg(3));
+        let events = vec![(
+            1,
+            6,
+            Announce::MmMerged {
+                inputs: vec![(log_a, BTreeMap::new()), (log_b, wms_b.clone())],
+                merged,
+                watermarks: wms_b,
+            },
+        )];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn lease_fence_fires_on_live_old_grant() {
+        let events = vec![
+            (10, 6, Announce::LeaseGranted { round: r(1), valid_until: 100 }),
+            (50, 7, Announce::FenceLifted { round: r(2) }),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "lease-fence");
+    }
+
+    #[test]
+    fn lease_fence_accepts_expired_grants() {
+        let events = vec![
+            (10, 6, Announce::LeaseGranted { round: r(1), valid_until: 100 }),
+            (150, 7, Announce::FenceLifted { round: r(2) }),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn watermark_order_fires_on_overtruncation() {
+        let events =
+            vec![(1, 8, Announce::ReplicaTruncated { replica: 8, below: 10, exec: 5 })];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "watermark-order");
+    }
+
+    #[test]
+    fn watermark_order_fires_on_leader_compaction_past_durable() {
+        let events = vec![(1, 6, Announce::LogTruncated { group: 0, below: 9, durable: 4 })];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "watermark-order");
+    }
+
+    #[test]
+    fn watermark_order_fires_on_stalled_snapshot() {
+        let events = vec![
+            (1, 8, Announce::SnapshotTaken { replica: 8, upto: 5 }),
+            (2, 8, Announce::SnapshotTaken { replica: 8, upto: 5 }),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "watermark-order");
+    }
+
+    #[test]
+    fn watermark_order_resets_on_restart() {
+        let events = vec![
+            (1, 8, Announce::SnapshotTaken { replica: 8, upto: 5 }),
+            (2, 8, Announce::NodeRestarted { node: 8 }),
+            (3, 8, Announce::SnapshotTaken { replica: 8, upto: 2 }),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn client_fifo_payload_consistency_fires_in_lenient_mode() {
+        let events = vec![chosen(0, 0, cmd(90, 1, b"a")), chosen(0, 1, cmd(90, 1, b"b"))];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "client-fifo");
+    }
+
+    #[test]
+    fn client_fifo_duplicate_slot_fires_only_in_strict_mode() {
+        let events = vec![chosen(0, 0, cmd(90, 1, b"a")), chosen(0, 1, cmd(90, 1, b"a"))];
+        // Lenient: duplicate choice with identical payload is legal
+        // (leader failover re-proposal).
+        assert!(InvariantSet::check_all(&events).is_ok());
+        let mut s = InvariantSet::strict();
+        let v = s.feed(&events).unwrap_err();
+        assert_eq!(v.invariant, "client-fifo");
+    }
+
+    #[test]
+    fn client_fifo_contiguity_fires_at_finish() {
+        // seq 1 then seq 3: nothing wrong mid-run, broken at quiescence.
+        let events = vec![chosen(0, 0, cmd(90, 1, b"a")), chosen(0, 1, cmd(90, 3, b"c"))];
+        let mut s = InvariantSet::strict();
+        s.feed(&events).unwrap();
+        let v = s.finish().unwrap_err();
+        assert_eq!(v.invariant, "client-fifo");
+    }
+
+    #[test]
+    fn client_fifo_order_fires_at_finish() {
+        // Chosen out of order across slots in a crash-free run.
+        let events = vec![chosen(0, 0, cmd(90, 2, b"b")), chosen(0, 1, cmd(90, 1, b"a"))];
+        let mut s = InvariantSet::strict();
+        s.feed(&events).unwrap();
+        assert!(s.finish().is_err());
+    }
+
+    #[test]
+    fn batches_unwrap_in_order() {
+        let batch = Value::Batch(vec![
+            Command { client: 90, seq: 1, payload: vec![1] },
+            Command { client: 90, seq: 2, payload: vec![2] },
+        ]);
+        let events = vec![chosen(0, 0, batch)];
+        let mut s = InvariantSet::strict();
+        s.feed(&events).unwrap();
+        s.finish().unwrap();
+    }
+
+    #[test]
+    fn without_removes_named_invariant() {
+        let s = InvariantSet::standard().without("quorum-intersection");
+        assert!(!s.names().contains(&"quorum-intersection"));
+        assert_eq!(s.names().len(), 6);
+    }
+
+    #[test]
+    fn digest_tracks_observed_history() {
+        let mut a = InvariantSet::standard();
+        let mut b = InvariantSet::standard();
+        assert_eq!(a.digest(), b.digest());
+        a.feed(&[chosen(0, 0, cmd(90, 1, b"a"))]).unwrap();
+        assert_ne!(a.digest(), b.digest());
+        b.feed(&[chosen(0, 0, cmd(90, 1, b"a"))]).unwrap();
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn feed_is_incremental() {
+        let mut s = InvariantSet::standard();
+        let mut events = vec![chosen(0, 0, cmd(90, 1, b"a"))];
+        s.feed(&events).unwrap();
+        // A second feed with the same prefix must not re-observe it
+        // (re-observation would false-positive strict dup detection and
+        // corrupt digests).
+        events.push(chosen(0, 1, cmd(90, 2, b"b")));
+        s.feed(&events).unwrap();
+        assert!(s.feed(&events).is_ok());
+    }
+}

@@ -1,0 +1,97 @@
+//! `repro check` — exhaustive model checking of the protocol on small
+//! instances (DESIGN.md §Model checking).
+//!
+//! Three layers:
+//!
+//! * [`invariants`] — a machine-checked catalog of the paper's safety
+//!   properties ([`Invariant`]), evaluated incrementally over the
+//!   simulator's announce stream: per-(group, slot) chosen-value
+//!   uniqueness, Phase-1/Phase-2 quorum intersection, matchmaker-log
+//!   monotonicity and Figure-7 merge consistency, lease/fence safety,
+//!   snapshot/GC watermark ordering, and per-client exactly-once/FIFO
+//!   delivery.
+//! * [`explorer`] — bounded explicit-state exploration: the simulator's
+//!   pending event queue is the frontier, enabled actions are enumerated
+//!   under per-channel-FIFO reduction, and schedules are replayed
+//!   depth-first with fingerprint dedup ([`explore`]).
+//! * [`trace`] — minimized violating schedules serialized as replayable
+//!   text files (`repro check replay <file>`), for regression-testing
+//!   found bugs.
+//!
+//! The checked instances live in [`instances`]; the randomized property
+//! suites in `rust/tests/` assert the same catalog via
+//! [`InvariantSet::check_all`].
+
+pub mod explorer;
+pub mod instances;
+pub mod invariants;
+pub mod trace;
+
+pub use explorer::{
+    enabled_actions, explore, replay, shrink, Action, Instance, Replayed, Report, WILDCARD_SEQ,
+};
+pub use invariants::{Invariant, InvariantSet, Violation};
+
+/// Run one instance end to end at the given bounds and print a report.
+/// Returns `Ok` if the outcome matches the instance's expectation
+/// (clean, or the seeded violation was found); the `Err` is a one-line
+/// explanation for the CLI to print before exiting nonzero.
+pub fn run_instance(
+    inst: &Instance,
+    depth: usize,
+    max_replays: u64,
+    emit_trace: Option<&std::path::Path>,
+) -> Result<Report, String> {
+    let report = explore(inst, depth, max_replays);
+    println!(
+        "check {}: depth {} | {} replays -> {:.3e} raw states, {} unique ({:.1}x dedup), \
+         {} terminal, {} depth-cut{}",
+        inst.name,
+        report.depth,
+        report.replays,
+        report.raw_states,
+        report.unique_states,
+        report.dedup_ratio(),
+        report.terminal_states,
+        report.depth_truncated,
+        if report.hit_state_cap { " [replay cap hit]" } else { "" },
+    );
+    match (&report.violation, inst.expect_violation) {
+        (None, None) => Ok(report),
+        (Some(v), Some(want)) if v.invariant == want => {
+            println!("  found expected violation: {v}");
+            println!("  minimized schedule ({} actions):", report.trace.len());
+            for line in trace::serialize(inst.name, Some(want), &report.trace).lines() {
+                println!("    {line}");
+            }
+            if let Some(path) = emit_trace {
+                let text = trace::serialize(inst.name, Some(want), &report.trace);
+                std::fs::write(path, text).map_err(|e| format!("writing {path:?}: {e}"))?;
+                println!("  trace written to {}", path.display());
+            }
+            Ok(report)
+        }
+        (Some(v), Some(want)) => Err(format!(
+            "{}: expected a {want} violation, found {v}",
+            inst.name
+        )),
+        (Some(v), None) => {
+            println!("  VIOLATION: {v}");
+            println!("  minimized schedule ({} actions):", report.trace.len());
+            for line in trace::serialize(inst.name, Some(v.invariant), &report.trace).lines() {
+                println!("    {line}");
+            }
+            if let Some(path) = emit_trace {
+                let text = trace::serialize(inst.name, Some(v.invariant), &report.trace);
+                std::fs::write(path, text).map_err(|e| format!("writing {path:?}: {e}"))?;
+                println!("  trace written to {}", path.display());
+            }
+            Err(format!("{}: invariant {} violated", inst.name, v.invariant))
+        }
+        (None, Some(want)) => Err(format!(
+            "{}: expected exploration to find a {want} violation (checker-check failed — \
+             the instance seeds a bug the catalog must catch)",
+            inst.name
+        )),
+    }
+}

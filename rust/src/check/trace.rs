@@ -1,0 +1,238 @@
+//! Minimized-schedule trace files: serialize, parse, replay.
+//!
+//! Format v1 — line-oriented text, one action per line, so traces diff
+//! cleanly and can be checked in as regression tests:
+//!
+//! ```text
+//! # repro-check trace v1
+//! instance badquorum
+//! expect violation chosen-unique
+//! fire 41 c0
+//! fire 44 d90->7:Client
+//! fire 47 d7->2:Phase2A
+//! ...
+//! ```
+//!
+//! * `instance <name>` — which [`Instance`] to rebuild.
+//! * `expect ok` / `expect violation <invariant>` — the outcome the
+//!   replay must reproduce (a regression trace that stops violating is a
+//!   *failure*: the bug it pinned is hidden, or the schedule went stale).
+//! * `fire <seq> <sig>` / `drop <seq> <sig>` — the schedule. Seqs are
+//!   the simulator's deterministic event ids; the signature is
+//!   re-validated on replay so a stale trace fails loudly instead of
+//!   silently exploring a different schedule. A seq of `*` means "the
+//!   lowest-seq pending event with this signature" — deterministic, and
+//!   lets regression traces be authored in terms of protocol messages
+//!   rather than raw scheduler ids.
+//! * `#`-lines and blank lines are comments.
+
+use super::explorer::{enabled_actions, replay, Action, Instance, Replayed, WILDCARD_SEQ};
+use std::fmt::Write;
+
+/// A parsed trace file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    pub instance: String,
+    /// `None` = `expect ok`; `Some(inv)` = `expect violation <inv>`.
+    pub expect: Option<String>,
+    pub actions: Vec<Action>,
+}
+
+/// Render a trace file (format v1).
+pub fn serialize(instance: &str, expect: Option<&str>, actions: &[Action]) -> String {
+    let mut out = String::from("# repro-check trace v1\n");
+    let _ = writeln!(out, "instance {instance}");
+    match expect {
+        Some(inv) => {
+            let _ = writeln!(out, "expect violation {inv}");
+        }
+        None => out.push_str("expect ok\n"),
+    }
+    for a in actions {
+        let (verb, seq, sig) = match a {
+            Action::Fire(seq, sig) => ("fire", *seq, sig),
+            Action::Drop(seq, sig) => ("drop", *seq, sig),
+        };
+        if seq == WILDCARD_SEQ {
+            let _ = writeln!(out, "{verb} * {sig}");
+        } else {
+            let _ = writeln!(out, "{verb} {seq} {sig}");
+        }
+    }
+    out
+}
+
+/// Parse a trace file (format v1).
+pub fn parse(text: &str) -> Result<Trace, String> {
+    let mut instance: Option<String> = None;
+    let mut expect: Option<Option<String>> = None;
+    let mut actions = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, ' ');
+        let verb = parts.next().unwrap_or("");
+        match verb {
+            "instance" => {
+                let name = parts.next().ok_or(format!("line {}: instance needs a name", ln + 1))?;
+                instance = Some(name.to_string());
+            }
+            "expect" => match parts.next() {
+                Some("ok") => expect = Some(None),
+                Some("violation") => {
+                    let inv = parts
+                        .next()
+                        .ok_or(format!("line {}: expect violation needs an invariant", ln + 1))?;
+                    expect = Some(Some(inv.trim().to_string()));
+                }
+                other => {
+                    return Err(format!(
+                        "line {}: expect must be `ok` or `violation <inv>`, got {other:?}",
+                        ln + 1
+                    ));
+                }
+            },
+            "fire" | "drop" => {
+                let seq: u64 = match parts.next() {
+                    Some("*") => WILDCARD_SEQ,
+                    Some(s) => s
+                        .parse()
+                        .map_err(|_| format!("line {}: {verb} needs a numeric seq or `*`", ln + 1))?,
+                    None => return Err(format!("line {}: {verb} needs a seq", ln + 1)),
+                };
+                let sig = parts
+                    .next()
+                    .ok_or(format!("line {}: {verb} needs an event signature", ln + 1))?
+                    .to_string();
+                actions.push(if verb == "fire" {
+                    Action::Fire(seq, sig)
+                } else {
+                    Action::Drop(seq, sig)
+                });
+            }
+            other => return Err(format!("line {}: unknown directive {other:?}", ln + 1)),
+        }
+    }
+    Ok(Trace {
+        instance: instance.ok_or("trace has no `instance` line")?,
+        expect: expect.ok_or("trace has no `expect` line")?,
+        actions,
+    })
+}
+
+/// Replay a trace against its instance and check the recorded
+/// expectation. `Ok` carries a one-line summary; `Err` explains the
+/// mismatch (which is a test failure for checked-in regression traces).
+pub fn run(inst: &Instance, trace: &Trace) -> Result<String, String> {
+    if inst.name != trace.instance {
+        return Err(format!(
+            "trace is for instance {:?}, replaying against {:?}",
+            trace.instance, inst.name
+        ));
+    }
+    let outcome = match replay(inst, &trace.actions) {
+        Replayed::Violation(v, consumed) => {
+            if consumed < trace.actions.len() {
+                return Err(format!(
+                    "violation fired after {consumed} of {} actions — trace has dead tail \
+                     (re-minimize): {v}",
+                    trace.actions.len()
+                ));
+            }
+            Some(v)
+        }
+        Replayed::State(sim, invs) => {
+            // End-of-run checks apply only if the trace ends quiescent.
+            if enabled_actions(inst, &sim, &trace.actions).is_empty() {
+                invs.finish().err()
+            } else {
+                None
+            }
+        }
+        Replayed::Invalid(e) => return Err(format!("trace does not replay: {e}")),
+    };
+    match (&trace.expect, outcome) {
+        (None, None) => Ok(format!(
+            "replayed {} actions on {}: clean, as expected",
+            trace.actions.len(),
+            inst.name
+        )),
+        (Some(want), Some(v)) if want == v.invariant => Ok(format!(
+            "replayed {} actions on {}: reproduced {v}",
+            trace.actions.len(),
+            inst.name
+        )),
+        (Some(want), Some(v)) => {
+            Err(format!("expected a {want} violation, got {v}"))
+        }
+        (Some(want), None) => Err(format!(
+            "expected a {want} violation, replay was clean — regression trace went stale"
+        )),
+        (None, Some(v)) => Err(format!("expected a clean replay, got {v}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let actions = vec![
+            Action::Fire(41, "c0".into()),
+            Action::Fire(44, "d90->7:Client".into()),
+            Action::Drop(47, "d7->2:Phase2A".into()),
+            Action::Fire(50, "t6:Phase2Watchdog".into()),
+        ];
+        let text = serialize("badquorum", Some("chosen-unique"), &actions);
+        let t = parse(&text).unwrap();
+        assert_eq!(t.instance, "badquorum");
+        assert_eq!(t.expect.as_deref(), Some("chosen-unique"));
+        assert_eq!(t.actions, actions);
+    }
+
+    #[test]
+    fn roundtrip_expect_ok() {
+        let text = serialize("base", None, &[]);
+        let t = parse(&text).unwrap();
+        assert_eq!(t.expect, None);
+        assert!(t.actions.is_empty());
+    }
+
+    #[test]
+    fn sig_with_spaces_survives() {
+        // Timer debug reprs contain spaces; the sig is the line's tail.
+        let actions = vec![Action::Fire(9, "t6:Phase2Retry { slot: 0, generation: 1 }".into())];
+        let text = serialize("base", None, &actions);
+        assert_eq!(parse(&text).unwrap().actions, actions);
+    }
+
+    #[test]
+    fn wildcard_seq_roundtrips() {
+        let actions = vec![
+            Action::Fire(WILDCARD_SEQ, "c0".into()),
+            Action::Drop(WILDCARD_SEQ, "d7->2:Phase2A".into()),
+        ];
+        let text = serialize("badquorum", Some("chosen-unique"), &actions);
+        assert!(text.contains("fire * c0"));
+        assert!(text.contains("drop * d7->2:Phase2A"));
+        assert_eq!(parse(&text).unwrap().actions, actions);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("instance x\nexpect ok\nfire nope sig").is_err());
+        assert!(parse("instance x\nexpect maybe\n").is_err());
+        assert!(parse("instance x\nexpect ok\nlaunch 3 x").is_err());
+        assert!(parse("expect ok\n").is_err(), "missing instance line");
+        assert!(parse("instance x\n").is_err(), "missing expect line");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = parse("# hello\n\ninstance base\n# mid\nexpect ok\n\n").unwrap();
+        assert_eq!(t.instance, "base");
+    }
+}

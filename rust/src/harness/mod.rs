@@ -339,10 +339,15 @@ impl Cluster {
         out
     }
 
-    /// Assert the global safety invariant (used by tests after every
-    /// experiment): at most one value chosen per slot.
+    /// Assert the protocol safety catalog (used by tests after every
+    /// experiment): the same machine-checked invariants the model
+    /// checker explores ([`crate::check::InvariantSet`], standard /
+    /// lenient tier — harness runs may include crashes and drops), fed
+    /// the full announcement history of the run.
     pub fn assert_safe(&self) {
-        self.sim.check_chosen_safety().expect("chosen-safety invariant");
+        if let Err(v) = crate::check::InvariantSet::check_all(&self.sim.announces) {
+            panic!("safety invariant violated: {v}");
+        }
     }
 
     /// Harvest per-replica state-retention counters (log lengths,
@@ -708,9 +713,14 @@ impl ShardedCluster {
         (completions, issues)
     }
 
-    /// Assert the per-group chosen-safety invariant.
+    /// Assert the protocol safety catalog per group — the model
+    /// checker's standard [`crate::check::InvariantSet`] over the whole
+    /// sharded run's announcement history (announces carry `GroupId`, so
+    /// one catalog checks every group independently).
     pub fn assert_safe(&self) {
-        self.sim.check_chosen_safety().expect("chosen-safety invariant");
+        if let Err(v) = crate::check::InvariantSet::check_all(&self.sim.announces) {
+            panic!("safety invariant violated: {v}");
+        }
     }
 }
 

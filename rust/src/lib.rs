@@ -116,6 +116,7 @@
 //! proving the three-layer Rust + JAX + Pallas stack composes with Python
 //! never on the request path.
 
+pub mod check;
 pub mod codec;
 pub mod config;
 pub mod discovery;

@@ -9,6 +9,9 @@
 //! * `repro gen-config [--f N] [--clients N] [--base-port P]` — emit a
 //!   cluster config template.
 //! * `repro smoke` — runtime smoke test: load + execute the AOT artifacts.
+//! * `repro check [list | replay FILE | NAME]` — exhaustive model
+//!   checking of the protocol on small instances (DESIGN.md §Model
+//!   checking).
 
 use anyhow::{Context, Result};
 use matchmaker::config::{Configuration, DeploymentConfig};
@@ -79,6 +82,11 @@ const USAGE: &str = "usage:
         --read-fraction F fraction of requests issued as linearizable reads (0..=1)
   repro gen-config [--f N] [--clients N] [--base-port P]
   repro smoke                      run the tensor state machine end to end
+  repro check [NAME] [--mode smoke|full] [--depth N] [--states N] [--emit-trace FILE]
+      exhaustively explore the checked protocol instances (default: all);
+      exits nonzero on any unexpected invariant violation
+  repro check list                 list the checked instances
+  repro check replay FILE          deterministically re-execute a trace file
 ";
 
 fn main() -> Result<()> {
@@ -116,6 +124,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "smoke" => smoke(),
+        "check" => check(&args),
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");
             std::process::exit(2);
@@ -321,6 +330,75 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
     }
     handle.join.join().ok();
     Ok(())
+}
+
+/// `repro check` — the model checker CLI (DESIGN.md §Model checking).
+fn check(args: &Args) -> Result<()> {
+    use matchmaker::check::{instances, run_instance, trace};
+
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            for inst in instances::all() {
+                println!(
+                    "{:<10} depth {:>2} (smoke {:>2}), {} drops, expect {:<13} {}",
+                    inst.name,
+                    inst.depth,
+                    inst.smoke_depth,
+                    inst.max_drops,
+                    inst.expect_violation.unwrap_or("clean"),
+                    inst.about
+                );
+            }
+            Ok(())
+        }
+        Some("replay") => {
+            let path = args
+                .positional
+                .get(1)
+                .context("check replay: missing trace file path")?;
+            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+            let t = trace::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let inst = instances::find(&t.instance)
+                .with_context(|| format!("{path}: unknown instance {:?}", t.instance))?;
+            let summary = trace::run(&inst, &t).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            println!("{summary}");
+            Ok(())
+        }
+        name => {
+            let smoke_mode = match args.flag("mode", "smoke".to_string())?.as_str() {
+                "smoke" => true,
+                "full" => false,
+                other => anyhow::bail!("--mode {other:?}: expected smoke|full"),
+            };
+            let default_cap: u64 = if smoke_mode { 20_000 } else { 300_000 };
+            let max_replays: u64 = args.flag("states", default_cap)?;
+            let emit = args.flags.get("emit-trace").map(std::path::PathBuf::from);
+            let targets = match name {
+                Some(n) => {
+                    vec![instances::find(n).with_context(|| {
+                        format!("unknown instance {n:?} (try `repro check list`)")
+                    })?]
+                }
+                None => instances::all(),
+            };
+            let mut failed = false;
+            for inst in &targets {
+                let default_depth = if smoke_mode { inst.smoke_depth } else { inst.depth };
+                let depth: usize = args.flag("depth", default_depth)?;
+                match run_instance(inst, depth, max_replays, emit.as_deref()) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        eprintln!("FAIL: {e}");
+                        failed = true;
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+    }
 }
 
 fn smoke() -> Result<()> {

@@ -320,6 +320,59 @@ impl Msg {
             | Msg::PrefixResp { .. } => MsgKind::Other,
         }
     }
+
+    /// The variant's source-level name. Total by construction (the match
+    /// below has no wildcard arm, so adding a variant without extending
+    /// it is a compile error) — which is what lets the codec's
+    /// [`crate::codec::MSG_TAG_TABLE`] exhaustiveness lint pair every
+    /// variant with exactly one wire tag.
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            Msg::MatchA { .. } => "MatchA",
+            Msg::MatchB { .. } => "MatchB",
+            Msg::MatchNack { .. } => "MatchNack",
+            Msg::Phase1A { .. } => "Phase1A",
+            Msg::Phase1B { .. } => "Phase1B",
+            Msg::Phase2A { .. } => "Phase2A",
+            Msg::Phase2B { .. } => "Phase2B",
+            Msg::Nack { .. } => "Nack",
+            Msg::Chosen { .. } => "Chosen",
+            Msg::ReplicaAck { .. } => "ReplicaAck",
+            Msg::PrefixPersisted { .. } => "PrefixPersisted",
+            Msg::PrefixAck { .. } => "PrefixAck",
+            Msg::ReadPrefix { .. } => "ReadPrefix",
+            Msg::PrefixResp { .. } => "PrefixResp",
+            Msg::GarbageA { .. } => "GarbageA",
+            Msg::GarbageB { .. } => "GarbageB",
+            Msg::ClientRequest { .. } => "ClientRequest",
+            Msg::ClientReply { .. } => "ClientReply",
+            Msg::NotLeader { .. } => "NotLeader",
+            Msg::StopA => "StopA",
+            Msg::StopB { .. } => "StopB",
+            Msg::Bootstrap { .. } => "Bootstrap",
+            Msg::BootstrapAck => "BootstrapAck",
+            Msg::MatchmakersActivated { .. } => "MatchmakersActivated",
+            Msg::MetaPhase1A { .. } => "MetaPhase1A",
+            Msg::MetaPhase1B { .. } => "MetaPhase1B",
+            Msg::MetaPhase2A { .. } => "MetaPhase2A",
+            Msg::MetaPhase2B { .. } => "MetaPhase2B",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::HeartbeatReply { .. } => "HeartbeatReply",
+            Msg::FastPropose { .. } => "FastPropose",
+            Msg::FastPhase2B { .. } => "FastPhase2B",
+            Msg::CatchUp { .. } => "CatchUp",
+            Msg::SnapshotRequest { .. } => "SnapshotRequest",
+            Msg::SnapshotResp { .. } => "SnapshotResp",
+            Msg::Read { .. } => "Read",
+            Msg::ReadReply { .. } => "ReadReply",
+            Msg::ReadIndexReq { .. } => "ReadIndexReq",
+            Msg::ReadIndexResp { .. } => "ReadIndexResp",
+            Msg::NotLeaseholder { .. } => "NotLeaseholder",
+            Msg::LeaseRenew { .. } => "LeaseRenew",
+            Msg::LeaseRenewAck { .. } => "LeaseRenewAck",
+            Msg::LeaseGrant { .. } => "LeaseGrant",
+        }
+    }
 }
 
 /// Coarse message classification (see [`Msg::kind`]).

@@ -103,6 +103,11 @@ struct TimerService {
 }
 
 impl TimerService {
+    // The TCP runtime is the one place wall-clock time is allowed: it
+    // exists to drive the sans-io roles in real time. Everything under
+    // roles/, sim/, and check/ must stay on virtual `Time` (clippy.toml
+    // disallowed-methods enforces this).
+    #[allow(clippy::disallowed_methods)]
     fn new(tx: Sender<Event>) -> TimerService {
         let queue: Arc<Mutex<Vec<(Instant, Timer)>>> = Arc::new(Mutex::new(Vec::new()));
         let q = queue.clone();
@@ -138,6 +143,7 @@ impl TimerService {
         TimerService { queue, tx }
     }
 
+    #[allow(clippy::disallowed_methods)] // wall clock is this runtime's job; see `new`
     fn arm(&self, delay: Time, t: Timer) {
         self.queue
             .lock()
@@ -164,6 +170,7 @@ impl NodeHandle {
 
 /// Start a node: bind `addrs[&id]`, dial peers lazily, run the event loop
 /// on a dedicated thread.
+#[allow(clippy::disallowed_methods)] // wall clock is this runtime's job; see TimerService
 pub fn spawn_node(
     id: NodeId,
     mut node: Box<dyn Node>,

@@ -10,9 +10,11 @@
 //! The same role implementations run under the deterministic simulator
 //! ([`crate::sim`]) and the TCP runtime ([`crate::net`]).
 
-use crate::msg::{Msg, Value};
+use crate::config::Configuration;
+use crate::msg::{MmLog, Msg, Value};
 use crate::round::Round;
 use crate::{GroupId, NodeId, Slot, Time};
+use std::collections::BTreeMap;
 
 /// Timers a node can request. The driver calls [`Node::on_timer`] when one
 /// expires; a node distinguishes stale timers itself (via generation
@@ -101,6 +103,53 @@ pub enum Announce {
     /// A replica installed a peer's snapshot covering slots `< base`
     /// (crash-rejoin / lagging-node catch-up).
     SnapshotInstalled { replica: NodeId, base: Slot },
+
+    // ---- Model-checker probes (crate::check). These expose protocol
+    // facts the invariant catalog needs but the metrics layer does not;
+    // like all announcements they are observation-only, never wire
+    // messages, so they have no codec tags. ----
+    /// A matchmaker answered `MatchA⟨i, C⟩` with a `MatchB` (Algorithm 1).
+    /// The refusal discipline makes the answered rounds per
+    /// (matchmaker, group) non-decreasing — the matchmaker-monotonic
+    /// invariant checks exactly that.
+    MatchAnswered { group: GroupId, round: Round },
+    /// A matchmaker raised (or confirmed) its per-group GC watermark to
+    /// `round` while handling `GarbageA` (Algorithm 4).
+    MmGc { group: GroupId, round: Round },
+    /// A leader merged `f+1` stopped matchmaker states (§6, Figure 7):
+    /// the inputs, the merged log, and the merged per-group watermarks.
+    /// The mm-merge invariant recomputes the merge from the inputs and
+    /// compares.
+    MmMerged {
+        inputs: Vec<(MmLog, BTreeMap<GroupId, Round>)>,
+        merged: MmLog,
+        watermarks: BTreeMap<GroupId, Round>,
+    },
+    /// The full configuration activated for `round` (a superset of
+    /// `ConfigActive`, which only carries the id): the
+    /// quorum-intersection invariant checks every Phase-1 quorum of
+    /// `config` intersects every Phase-2 quorum (§3.2, Theorem 1's
+    /// precondition).
+    QuorumConfig { group: GroupId, round: Round, config: Configuration },
+    /// The leader broadcast a read-lease grant valid until `valid_until`
+    /// under `round` (DESIGN.md §Reads).
+    LeaseGranted { round: Round, valid_until: Time },
+    /// A new leader's post-election lease fence lifted for `round`: every
+    /// grant issued under any lower round must already have expired —
+    /// the lease-fence invariant.
+    FenceLifted { round: Round },
+    /// The leader compacted its log below `below`; `durable` is the
+    /// f+1-replica-persisted watermark at that moment (`below ≤ durable`
+    /// or a not-yet-executed value could be lost — watermark-order
+    /// invariant).
+    LogTruncated { group: GroupId, below: Slot, durable: Slot },
+    /// A replica truncated its chosen log below `below`; `exec` is its
+    /// executed watermark (`below ≤ exec`: never GC an unexecuted slot).
+    ReplicaTruncated { replica: NodeId, below: Slot, exec: Slot },
+    /// The simulator replaced the node (crash recovery / fresh machine):
+    /// per-node monotonicity checks reset here. Synthesized by
+    /// [`crate::sim::Sim::replace_node`], never by a role.
+    NodeRestarted { node: NodeId },
 }
 
 /// The output of one activation of a node.
@@ -182,6 +231,20 @@ pub trait Node: Send {
 
     /// Role name for logs/metrics.
     fn role(&self) -> &'static str;
+
+    /// A canonical, time-free rendering of the node's protocol state,
+    /// consumed by the model checker's state fingerprinting
+    /// ([`crate::sim::Sim::fingerprint`]). Two nodes with equal reprs
+    /// must behave identically on any future message/timer sequence, so
+    /// implementations include all protocol state but exclude wall-era
+    /// artifacts (absolute timestamps, metrics counters) — including
+    /// those would only split equivalent states, never merge distinct
+    /// ones. `None` (the default) excludes the node from fingerprints,
+    /// appropriate for roles outside the checked protocol core
+    /// (workload clients, harness pumps).
+    fn state_repr(&self) -> Option<String> {
+        None
+    }
 
     /// Downcasting hook so harnesses can drive control-plane actions
     /// (e.g. "leader: reconfigure to these acceptors now") that in a real

@@ -184,6 +184,16 @@ impl Node for Acceptor {
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
     }
+
+    fn state_repr(&self) -> Option<String> {
+        // An acceptor's state is exactly Algorithm 2's (r, per-slot
+        // votes) plus the chosen-prefix watermark; none of it is
+        // time-valued.
+        Some(format!(
+            "acc r={:?} votes={:?} wm={} fast={}",
+            self.round, self.votes, self.chosen_watermark, self.fast
+        ))
+    }
 }
 
 #[cfg(test)]

@@ -555,6 +555,11 @@ impl Leader {
             round: self.round,
             config_id: self.config.id,
         });
+        fx.announce(Announce::QuorumConfig {
+            group: self.group,
+            round: self.round,
+            config: self.config.clone(),
+        });
 
         if bypass {
             // Optimization 2: every slot ≥ next_slot has k = -1 by
@@ -977,6 +982,11 @@ impl Leader {
                 self.log = self.log.split_off(&floor);
                 self.compacted_below = floor;
                 self.cmd_slots.retain(|_, slot| *slot >= floor);
+                fx.announce(Announce::LogTruncated {
+                    group: self.group,
+                    below: floor,
+                    durable: self.persisted_f1,
+                });
             }
             self.propagate_watermark(fx);
         } else if self.replica_acks.len() == self.replicas.len() {
@@ -988,6 +998,11 @@ impl Leader {
                 self.log = self.log.split_off(&min_ack);
                 self.compacted_below = min_ack;
                 self.cmd_slots.retain(|_, slot| *slot >= min_ack);
+                fx.announce(Announce::LogTruncated {
+                    group: self.group,
+                    below: min_ack,
+                    durable: self.persisted_f1,
+                });
             }
         }
         self.gc_advance(now, fx);
@@ -1186,6 +1201,7 @@ impl Leader {
         // replica then only resolves a read against a grant provably
         // issued after the read arrived, even with skewed clocks.
         let granted_at = now.saturating_sub(self.opts.leases.drift);
+        fx.announce(Announce::LeaseGranted { round, valid_until });
         fx.broadcast_move(
             &self.replicas,
             Msg::LeaseGrant { round, upto: self.chosen_watermark, granted_at, valid_until },
@@ -1304,6 +1320,11 @@ impl Leader {
         // all groups.
         let states: Vec<_> = acks.values().cloned().collect();
         let (merged, wms) = super::matchmaker::merge_stopped(&states);
+        fx.announce(Announce::MmMerged {
+            inputs: states,
+            merged: merged.clone(),
+            watermarks: wms.clone(),
+        });
         let new = mm.new.clone();
         mm.stage = MmStage::Bootstrapping { acks: BTreeSet::new() };
         let generation = self.mm_generation + 1;
@@ -1655,6 +1676,7 @@ impl Node for Leader {
                     else {
                         unreachable!()
                     };
+                    fx.announce(Announce::FenceLifted { round: self.round });
                     self.finish_phase1(votes, acc_watermark, now, fx);
                 }
             }
@@ -1717,6 +1739,63 @@ impl Node for Leader {
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn state_repr(&self) -> Option<String> {
+        use std::fmt::Write;
+        // All protocol state, minus absolute timestamps (heartbeat/lease
+        // clocks, `Install::LeaseFence::until`'s deadline is kept — it
+        // gates behavior) and minus pure metrics counters. HashMaps are
+        // rendered sorted.
+        let mut s = format!(
+            "ldr g={} r={:?} cfg={:?} rcfgs={:?} inst={:?} act={:?} next={} cw={} \
+             stalled={:?} batch={:?}/{} seq={:?} racks={:?} compacted={} pf1={} wmprop={} \
+             gc={:?}/{:?}/{:?} lead={} epoch={} fence={} rb={} gen={} mm={:?} mmgen={} \
+             pend={:?} li={:?} pri={:?}",
+            self.group,
+            self.round,
+            self.config,
+            self.round_configs,
+            self.install,
+            self.active_round,
+            self.next_slot,
+            self.chosen_watermark,
+            self.stalled,
+            self.pending_batch,
+            self.batch_timer_armed,
+            self.sequencer.state_repr(),
+            self.replica_acks,
+            self.compacted_below,
+            self.persisted_f1,
+            self.last_wm_propagated,
+            self.gc.round,
+            self.gc.barrier,
+            self.gc.stage,
+            self.is_leader,
+            self.epoch_seen,
+            self.lease_fence_pending,
+            self.read_barrier,
+            self.generation,
+            self.mm_reconfig,
+            self.mm_generation,
+            self.pending_reconfig,
+            self.lease_inflight,
+            self.pending_read_index.iter().map(|(r, id, _)| (*r, *id)).collect::<Vec<_>>(),
+        );
+        for (slot, ss) in &self.log {
+            // Time-free rendering: `proposed_at` is watchdog bookkeeping,
+            // not protocol state — including it would split states that
+            // differ only in when (not whether) a slot was proposed.
+            let _ = write!(
+                s,
+                " s{slot}={:?}@{:?} acks={:?} ch={} gen={}",
+                ss.value, ss.round, ss.acks, ss.chosen, ss.generation
+            );
+        }
+        let mut cmds: Vec<_> = self.cmd_slots.iter().collect();
+        cmds.sort();
+        let _ = write!(s, " cs={cmds:?} rng={:?}", self.rng.state());
+        Some(s)
     }
 }
 

@@ -24,7 +24,7 @@
 
 use crate::config::Configuration;
 use crate::msg::{MmLog, Msg};
-use crate::node::{Effects, Node, Timer};
+use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
 use crate::{GroupId, NodeId, Time};
 use std::collections::BTreeMap;
@@ -194,6 +194,7 @@ impl Node for Matchmaker {
                 let prior: BTreeMap<Round, Configuration> =
                     glog.range(..round).map(|(r, c)| (*r, c.clone())).collect();
                 glog.insert(round, config);
+                fx.announce(Announce::MatchAnswered { group, round });
                 fx.send(
                     from,
                     Msg::MatchB {
@@ -217,6 +218,7 @@ impl Node for Matchmaker {
                 if round > *w {
                     *w = round;
                 }
+                fx.announce(Announce::MmGc { group, round: *w });
                 fx.send(from, Msg::GarbageB { group, round });
             }
 
@@ -252,6 +254,16 @@ impl Node for Matchmaker {
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn state_repr(&self) -> Option<String> {
+        // Everything a matchmaker holds is protocol state (no clocks, no
+        // metrics): the per-group logs, GC watermarks, lifecycle flags,
+        // and the per-generation meta-Paxos acceptor state.
+        Some(format!(
+            "mm log={:?} wm={:?} stopped={} active={} gen={} meta={:?}",
+            self.log, self.gc_watermarks, self.stopped, self.active, self.generation, self.meta
+        ))
     }
 }
 

@@ -347,6 +347,11 @@ impl Replica {
                 for h in self.client_table.values_mut() {
                     h.recent.retain(|_, v| v.0 >= floor);
                 }
+                fx.announce(Announce::ReplicaTruncated {
+                    replica: self.id,
+                    below: floor,
+                    exec: self.exec_watermark,
+                });
             }
         }
         fx.timer(self.snapshot.interval, Timer::SnapshotTick);
@@ -809,6 +814,37 @@ impl Node for Replica {
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn state_repr(&self) -> Option<String> {
+        use std::fmt::Write;
+        let mut s = format!(
+            "rep g={} log={:?} exec={} trunc={} sm={:?} snap={:?} lease={:?}",
+            self.group,
+            self.log,
+            self.exec_watermark,
+            self.truncated_below,
+            self.sm.snapshot(),
+            self.last_snapshot.as_ref().map(|(w, _)| *w),
+            self.lease,
+        );
+        // client_table is a HashMap: render in sorted order so equal
+        // states hash equally.
+        let mut clients: Vec<(&NodeId, &ClientHistory)> = self.client_table.iter().collect();
+        clients.sort_by_key(|(id, _)| **id);
+        for (id, h) in clients {
+            let _ = write!(s, " c{}={{{},{:?}}}", id, h.highest, h.recent);
+        }
+        // Pending reads matter for future behavior; their arrival times
+        // do not (the repr must stay time-free where possible, and the
+        // expiry paths are driven by excluded retry timers anyway).
+        for p in &self.pending_reads {
+            let _ = write!(s, " pr={}/{}:{:?}", p.client, p.seq, p.state);
+        }
+        if let Some((peer, target, _)) = &self.catchup {
+            let _ = write!(s, " cu={peer}->{target}");
+        }
+        Some(s)
     }
 }
 

@@ -85,6 +85,20 @@ impl ClientSequencer {
     pub fn buffered(&self) -> usize {
         self.cursors.values().map(|c| c.pending.len()).sum()
     }
+
+    /// Canonical (sorted) rendering for the model checker's state
+    /// fingerprint — the cursors live in a `HashMap`, whose `Debug`
+    /// order is not deterministic across processes.
+    pub fn state_repr(&self) -> String {
+        let mut clients: Vec<(&NodeId, &ClientCursor)> = self.cursors.iter().collect();
+        clients.sort_by_key(|(id, _)| **id);
+        let mut s = String::new();
+        for (id, cur) in clients {
+            use std::fmt::Write;
+            let _ = write!(s, "c{}@{}{:?};", id, cur.next, cur.pending);
+        }
+        s
+    }
 }
 
 #[cfg(test)]

@@ -13,9 +13,9 @@
 //! joining. Scheduled control closures ([`Sim::schedule`]) script the
 //! experiment timelines (reconfigure at t, fail at t, ...).
 
-use crate::msg::{Envelope, MsgKind};
+use crate::msg::{Envelope, Msg, MsgKind};
 use crate::node::{Announce, Effects, Node, Timer};
-use crate::util::Rng;
+use crate::util::{Fnv, Rng};
 use crate::{NodeId, Time, MS, US};
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
@@ -104,6 +104,61 @@ impl Ord for Event {
     }
 }
 
+impl Event {
+    /// Short content signature, excluding the scheduled time: what trace
+    /// files record and replays validate. Deliberately coarse (message
+    /// *kind*, not payload) so traces stay readable and survive payload
+    /// tweaks; full-payload identity is the fingerprint's job.
+    fn sig(&self) -> String {
+        match &self.kind {
+            EventKind::Deliver(env) => format!("d{}->{}:{:?}", env.from, env.to, env.msg.kind()),
+            EventKind::Timer(id, t) => format!("t{id}:{t:?}"),
+            EventKind::Control(cid) => format!("c{cid}"),
+        }
+    }
+
+    /// Full content signature for state fingerprints: unlike [`Event::sig`]
+    /// this includes the entire message payload, so two in-flight
+    /// `Phase2A`s carrying different values never collapse into one
+    /// fingerprint bucket (which would make dedup unsound).
+    fn content_sig(&self) -> String {
+        match &self.kind {
+            EventKind::Deliver(env) => format!("d{}->{}:{:?}", env.from, env.to, env.msg),
+            EventKind::Timer(id, t) => format!("t{id}:{t:?}"),
+            EventKind::Control(cid) => format!("c{cid}"),
+        }
+    }
+}
+
+/// A pending (scheduled but not yet executed) event, as enumerated by
+/// [`Sim::pending`] for the model checker ([`crate::check`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PendingEvent {
+    /// Scheduler sequence number — the stable identity used by
+    /// [`Sim::fire`] / [`Sim::drop_event`] / [`Sim::duplicate_event`].
+    /// Seqs are assigned deterministically in creation order, so replaying
+    /// the same action prefix on a rebuilt instance yields the same seqs.
+    pub seq: u64,
+    /// Scheduled execution time. The explorer ignores it (it explores
+    /// *orders*, not timings) but replays respect it for the clock.
+    pub at: Time,
+    /// Short content signature (see trace format in DESIGN.md).
+    pub sig: String,
+    pub kind: PendingKind,
+}
+
+/// Discriminant of a [`PendingEvent`], with the routing the explorer's
+/// enabled-action filter needs (channel FIFO, timer filtering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PendingKind {
+    /// An in-flight message.
+    Deliver { from: NodeId, to: NodeId },
+    /// An armed timer.
+    Timer { node: NodeId, timer: Timer },
+    /// A scheduled control closure (experiment script step).
+    Control,
+}
+
 type Control = Box<dyn FnOnce(&mut Sim) + Send>;
 
 /// The simulator.
@@ -180,7 +235,16 @@ impl Sim {
     }
 
     /// Replace a crashed node with a fresh instance (recovery/new machine).
+    ///
+    /// Emits [`Announce::NodeRestarted`] so per-node monotonicity
+    /// invariants ([`crate::check`]) reset their cursors: a fresh
+    /// incarnation legitimately restarts its snapshot/truncation
+    /// watermarks from zero.
     pub fn replace_node(&mut self, id: NodeId, node: Box<dyn Node>) {
+        if self.nodes.get(id as usize).is_some_and(|n| n.is_some()) {
+            self.announces
+                .push((self.clock, id, Announce::NodeRestarted { node: id }));
+        }
         self.add_node(id, node);
     }
 
@@ -291,6 +355,48 @@ impl Sim {
         }
     }
 
+    /// Execute one already-dequeued event against the current state.
+    /// The clock must already be advanced to (at least) the event's time;
+    /// callers ([`Sim::run_until`], [`Sim::fire`]) own that policy.
+    fn execute(&mut self, ev: Event) {
+        match ev.kind {
+            EventKind::Deliver(env) => {
+                let idx = env.to as usize;
+                if self.crashed.get(idx).copied().unwrap_or(true) {
+                    return;
+                }
+                let mut fx = Effects::new();
+                let now = self.clock;
+                if let Some(Some(node)) = self.nodes.get_mut(idx) {
+                    node.on_msg(now, env.from, env.msg, &mut fx);
+                    self.delivered += 1;
+                } else {
+                    return;
+                }
+                self.apply_effects(env.to, fx);
+            }
+            EventKind::Timer(id, timer) => {
+                let idx = id as usize;
+                if self.crashed.get(idx).copied().unwrap_or(true) {
+                    return;
+                }
+                let mut fx = Effects::new();
+                let now = self.clock;
+                if let Some(Some(node)) = self.nodes.get_mut(idx) {
+                    node.on_timer(now, timer, &mut fx);
+                } else {
+                    return;
+                }
+                self.apply_effects(id, fx);
+            }
+            EventKind::Control(cid) => {
+                if let Some(f) = self.controls.remove(&cid) {
+                    f(self);
+                }
+            }
+        }
+    }
+
     /// Run until the virtual clock reaches `until` (events at exactly
     /// `until` are processed) or the event queue drains.
     pub fn run_until(&mut self, until: Time) {
@@ -300,44 +406,195 @@ impl Sim {
             }
             let ev = self.heap.pop().unwrap();
             self.clock = self.clock.max(ev.at);
-            match ev.kind {
-                EventKind::Deliver(env) => {
-                    let idx = env.to as usize;
-                    if self.crashed.get(idx).copied().unwrap_or(true) {
-                        continue;
+            self.execute(ev);
+        }
+        self.clock = self.clock.max(until);
+    }
+
+    /// Execute the single earliest pending event (timestamp order, the
+    /// same policy as [`Sim::run_until`]). Returns `false` when the queue
+    /// is empty. This is the step primitive the invariant layer uses to
+    /// evaluate the catalog after *every* event rather than per run.
+    pub fn step(&mut self) -> bool {
+        match self.heap.pop() {
+            Some(ev) => {
+                self.clock = self.clock.max(ev.at);
+                self.execute(ev);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Scheduled time of the earliest pending event, if any.
+    pub fn next_event_at(&self) -> Option<Time> {
+        self.heap.peek().map(|ev| ev.at)
+    }
+
+    // ---- Model-checker surface (crate::check) -------------------------
+    //
+    // The explorer treats the simulator as a transition system: `pending`
+    // enumerates the frontier, `fire`/`drop_event`/`duplicate_event`
+    // apply one transition by seq, and `fingerprint` names the resulting
+    // state for dedup. Seqs are assigned deterministically, so replaying
+    // an action prefix on a freshly built instance reproduces them.
+
+    /// Inject a message as if `from` had sent it now (bypassing the
+    /// network model's delay/drop machinery — it lands on the frontier as
+    /// a normal pending Deliver). Checker instances use this to introduce
+    /// client traffic at branch points.
+    pub fn inject(&mut self, from: NodeId, to: NodeId, msg: Msg) {
+        let at = self.clock;
+        self.push(at, EventKind::Deliver(Box::new(Envelope { from, to, msg })));
+    }
+
+    /// Snapshot of every pending event, sorted by seq (creation order).
+    pub fn pending(&self) -> Vec<PendingEvent> {
+        let mut v: Vec<PendingEvent> = self
+            .heap
+            .iter()
+            .map(|ev| PendingEvent {
+                seq: ev.seq,
+                at: ev.at,
+                sig: ev.sig(),
+                kind: match &ev.kind {
+                    EventKind::Deliver(env) => {
+                        PendingKind::Deliver { from: env.from, to: env.to }
                     }
-                    let mut fx = Effects::new();
-                    let now = self.clock;
-                    if let Some(Some(node)) = self.nodes.get_mut(idx) {
-                        node.on_msg(now, env.from, env.msg, &mut fx);
-                        self.delivered += 1;
-                    } else {
-                        continue;
-                    }
-                    self.apply_effects(env.to, fx);
-                }
-                EventKind::Timer(id, timer) => {
-                    let idx = id as usize;
-                    if self.crashed.get(idx).copied().unwrap_or(true) {
-                        continue;
-                    }
-                    let mut fx = Effects::new();
-                    let now = self.clock;
-                    if let Some(Some(node)) = self.nodes.get_mut(idx) {
-                        node.on_timer(now, timer, &mut fx);
-                    } else {
-                        continue;
-                    }
-                    self.apply_effects(id, fx);
-                }
-                EventKind::Control(cid) => {
-                    if let Some(f) = self.controls.remove(&cid) {
-                        f(self);
-                    }
+                    EventKind::Timer(id, t) => PendingKind::Timer { node: *id, timer: *t },
+                    EventKind::Control(_) => PendingKind::Control,
+                },
+            })
+            .collect();
+        v.sort_by_key(|p| p.seq);
+        v
+    }
+
+    /// Remove the event with the given seq from the queue (linear scan +
+    /// heap rebuild; checker frontiers are tens of events, not millions).
+    fn take_event(&mut self, seq: u64) -> Option<Event> {
+        let mut found = None;
+        let mut rest = Vec::with_capacity(self.heap.len());
+        for ev in self.heap.drain() {
+            if ev.seq == seq && found.is_none() {
+                found = Some(ev);
+            } else {
+                rest.push(ev);
+            }
+        }
+        self.heap = rest.into();
+        found
+    }
+
+    /// Execute the pending event with the given seq *now*, regardless of
+    /// its position in the timestamp order (the explorer's reordering
+    /// lever). The clock still advances to at least the event's scheduled
+    /// time, so `now` never runs backwards. Returns the event's signature,
+    /// or `None` if no such seq is pending.
+    pub fn fire(&mut self, seq: u64) -> Option<String> {
+        let ev = self.take_event(seq)?;
+        self.clock = self.clock.max(ev.at);
+        let sig = ev.sig();
+        self.execute(ev);
+        Some(sig)
+    }
+
+    /// Discard a pending *message* (models a network drop at a point of
+    /// the explorer's choosing). Timers and controls cannot be dropped —
+    /// the event is left in place and `None` is returned.
+    pub fn drop_event(&mut self, seq: u64) -> Option<String> {
+        let ev = self.take_event(seq)?;
+        if !matches!(ev.kind, EventKind::Deliver(_)) {
+            self.heap.push(ev);
+            return None;
+        }
+        let sig = ev.sig();
+        self.dropped += 1;
+        Some(sig)
+    }
+
+    /// Re-enqueue a copy of a pending *message* (models network
+    /// duplication). The copy gets a fresh seq. Returns the signature, or
+    /// `None` if the seq is missing or not a Deliver.
+    pub fn duplicate_event(&mut self, seq: u64) -> Option<String> {
+        let (at, env) = {
+            let ev = self.heap.iter().find(|ev| ev.seq == seq)?;
+            match &ev.kind {
+                EventKind::Deliver(env) => (ev.at, env.clone()),
+                _ => return None,
+            }
+        };
+        let sig = format!("d{}->{}:{:?}", env.from, env.to, env.msg.kind());
+        self.push(at, EventKind::Deliver(env));
+        Some(sig)
+    }
+
+    /// FNV-1a fingerprint of the explorable state: crash flags, every
+    /// node's [`Node::state_repr`], the pending in-flight messages as
+    /// per-channel *ordered sequences* (scheduled times excluded — the
+    /// explorer quotients over timing), pending timers/controls as a
+    /// sorted multiset, the network RNG state, and a caller-supplied
+    /// `extra` (the invariant layer folds its own digest in so two paths
+    /// with different violation-relevant history never merge).
+    ///
+    /// Per-channel ORDER matters: the explorer delivers each `(from,
+    /// to)` channel in FIFO order, so two states whose channels hold the
+    /// same messages in different orders have different future behavior
+    /// and must not merge. Timers and controls are order-insensitive
+    /// (controls fire in deterministic id order; timers are identified
+    /// by content).
+    ///
+    /// Deliberately excluded: the clock and `tx_busy` (pure timing),
+    /// `delivered`/`dropped`/`announces` (history, not behavior — the
+    /// behaviorally relevant part of history is `extra`'s job).
+    pub fn fingerprint(&self, extra: u64) -> u64 {
+        let mut h = Fnv::new();
+        h.write_u64(extra);
+        for (i, c) in self.crashed.iter().enumerate() {
+            h.write_u64(i as u64);
+            h.write(&[*c as u8]);
+        }
+        for (i, slot) in self.nodes.iter().enumerate() {
+            if let Some(node) = slot {
+                h.write_u64(i as u64);
+                match node.state_repr() {
+                    Some(r) => h.write_str(&r),
+                    // A node without a repr makes dedup unsound; fold in
+                    // its role so at least distinct topologies differ.
+                    None => h.write_str(node.role()),
                 }
             }
         }
-        self.clock = self.clock.max(until);
+        let mut evs: Vec<&Event> = self.heap.iter().collect();
+        evs.sort_by_key(|ev| ev.seq);
+        let mut channels: BTreeMap<(NodeId, NodeId), Vec<String>> = BTreeMap::new();
+        let mut others: Vec<String> = Vec::new();
+        for ev in &evs {
+            match &ev.kind {
+                EventKind::Deliver(env) => channels
+                    .entry((env.from, env.to))
+                    .or_default()
+                    .push(format!("{:?}", env.msg)),
+                _ => others.push(ev.content_sig()),
+            }
+        }
+        for ((from, to), msgs) in &channels {
+            h.write_u64(*from as u64);
+            h.write_u64(*to as u64);
+            h.write_u64(msgs.len() as u64);
+            for m in msgs {
+                h.write_str(m);
+            }
+        }
+        others.sort();
+        h.write_u64(others.len() as u64);
+        for s in &others {
+            h.write_str(s);
+        }
+        for w in self.rng.state() {
+            h.write_u64(w);
+        }
+        h.finish()
     }
 
     /// Run until the queue is empty or `max_t` is reached. Returns the

@@ -91,6 +91,55 @@ impl Rng {
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
+
+    /// The raw generator state (model-checker state fingerprinting: two
+    /// nodes whose RNGs diverged can behave differently later, so the
+    /// state must participate in equality).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+}
+
+/// A tiny FNV-1a 64-bit hasher for model-checker state fingerprints.
+///
+/// Hand-rolled for the same reason as [`Rng`]: fingerprints must be
+/// bit-for-bit stable across platforms and toolchain bumps (checked-in
+/// traces and dedup counts in CI depend on them), which rules out
+/// `DefaultHasher` (its algorithm is explicitly unspecified).
+#[derive(Clone, Debug)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write(s.as_bytes());
+        // Length-prefix-free framing: terminate so "ab"+"c" != "a"+"bc".
+        self.write(&[0xff]);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
 }
 
 /// Summary statistics used throughout the evaluation harness: the paper
