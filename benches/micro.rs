@@ -143,6 +143,44 @@ fn main() {
         std::hint::black_box(&fx.msgs);
     });
 
+    // --- storage: the per-ack durability cost an acceptor pays before
+    // answering Phase 1/2 (DESIGN.md §Durability). MemStorage bounds the
+    // trait overhead; the WAL rows split framing+write from the fsync
+    // itself, which is the number that sets the durable-mode ack floor.
+    let vote = matchmaker::storage::WalRecord::Vote {
+        slot: 42,
+        vr: Round::first(1, 0),
+        vv: Value::Cmd(Command { client: 10, seq: 5, payload: vec![0u8; 16] }),
+    };
+    bench("storage: MemStorage append (vote)", |n| {
+        use matchmaker::storage::{MemStorage, Storage};
+        let mut st = MemStorage::default();
+        for _ in 0..n {
+            st.append(&vote).unwrap();
+        }
+        std::hint::black_box(&st);
+    });
+    for &fsync in &[false, true] {
+        let name = if fsync {
+            "storage: WAL append + fsync (vote)"
+        } else {
+            "storage: WAL append, no fsync (vote)"
+        };
+        bench(name, |n| {
+            use matchmaker::storage::wal::{WalOptions, WalStorage};
+            use matchmaker::storage::{scratch_dir, Storage};
+            let dir = scratch_dir("bench-wal");
+            let opts = WalOptions { fsync, ..WalOptions::default() };
+            let mut st = WalStorage::open(&dir, opts).unwrap();
+            for _ in 0..n {
+                st.append(&vote).unwrap();
+            }
+            std::hint::black_box(&st);
+            drop(st);
+            let _ = std::fs::remove_dir_all(&dir);
+        });
+    }
+
     // --- simulator event throughput, end-to-end cluster ---
     bench("sim: end-to-end command (8 clients)", |n| {
         // One simulated second ≈ 14.6k commands with 8 clients; scale the

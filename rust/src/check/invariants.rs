@@ -20,6 +20,7 @@
 //! | `lease-fence`         | old grants expire before a new fence lifts    |
 //! | `watermark-order`     | truncate ≤ executed/durable; snapshots advance |
 //! | `client-fifo`         | per-client exactly-once / FIFO execution order |
+//! | `recovery-sound`      | WAL replay restores ≥ everything durably acked — DESIGN.md §Durability |
 //!
 //! [`digest`]: InvariantSet::digest
 
@@ -601,6 +602,134 @@ impl Invariant for ClientFifo {
 }
 
 // ---------------------------------------------------------------------
+// recovery-sound
+// ---------------------------------------------------------------------
+
+/// Durability soundness (DESIGN.md §Durability): an acceptor that
+/// crashes and replays its WAL must come back knowing *at least*
+/// everything it durably acknowledged before the crash. The storage
+/// layer fsyncs before every ack precisely so that P1∩P2 intersection
+/// arguments survive `kill -9`; this invariant checks the contract from
+/// the outside.
+///
+/// A *durable shadow* accumulates per acceptor from the probe
+/// announcements ([`Announce::DurablePromise`], [`Announce::DurableVote`],
+/// [`Announce::AcceptorWatermark`]); at [`Announce::AcceptorRecovered`]
+/// the restored state is compared against it:
+///
+/// * the restored promise may not be below the highest durably-acked
+///   promise (an "un-promise" would let an old leader slip a quorum);
+/// * the restored chosen-prefix watermark may not regress;
+/// * every durably-acked vote at or above the restored watermark must be
+///   restored with an equal-or-higher vote round (votes *below* the
+///   watermark are legally compacted — they are durable on `f+1`
+///   replicas).
+///
+/// Unlike the per-node monotonicity checks, the shadow deliberately
+/// survives [`Announce::NodeRestarted`] — outliving the crash is the
+/// property.
+#[derive(Default)]
+struct RecoverySound {
+    /// Highest durably-acked promise per acceptor.
+    promised: BTreeMap<NodeId, Round>,
+    /// Durably-acked votes per acceptor: slot → highest vote round.
+    votes: BTreeMap<NodeId, BTreeMap<Slot, Round>>,
+    /// Durably-acked chosen-prefix watermark per acceptor.
+    watermark: BTreeMap<NodeId, Slot>,
+}
+
+impl Invariant for RecoverySound {
+    fn name(&self) -> &'static str {
+        "recovery-sound"
+    }
+
+    fn observe(&mut self, _at: Time, _node: NodeId, a: &Announce) -> Result<(), String> {
+        match a {
+            Announce::DurablePromise { node, round } => {
+                let e = self.promised.entry(*node).or_insert(*round);
+                if *round > *e {
+                    *e = *round;
+                }
+                Ok(())
+            }
+            Announce::DurableVote { node, slot, vr } => {
+                let e = self.votes.entry(*node).or_default().entry(*slot).or_insert(*vr);
+                if *vr > *e {
+                    *e = *vr;
+                }
+                Ok(())
+            }
+            Announce::AcceptorWatermark { node, upto } => {
+                let w = self.watermark.entry(*node).or_insert(0);
+                if *upto > *w {
+                    *w = *upto;
+                }
+                // Compacted votes are off the durability hook.
+                if let Some(vs) = self.votes.get_mut(node) {
+                    vs.retain(|s, _| s >= upto);
+                }
+                Ok(())
+            }
+            Announce::AcceptorRecovered { node, round, watermark, votes } => {
+                if let Some(want) = self.promised.get(node) {
+                    if (*round).map_or(true, |r| r < *want) {
+                        return Err(format!(
+                            "acceptor {node}: recovered promise {round:?} below the \
+                             durably-acked {want:?} (un-promise: an old leader could \
+                             slip a quorum past the crash)"
+                        ));
+                    }
+                }
+                let want_wm = self.watermark.get(node).copied().unwrap_or(0);
+                if *watermark < want_wm {
+                    return Err(format!(
+                        "acceptor {node}: recovered chosen-prefix watermark {watermark} \
+                         below the durably-acked {want_wm}"
+                    ));
+                }
+                if let Some(want_votes) = self.votes.get(node) {
+                    for (slot, vr) in want_votes {
+                        if slot < watermark {
+                            continue; // legally compacted by the recovery itself
+                        }
+                        let got = votes.iter().find(|(s, _)| s == slot).map(|(_, r)| *r);
+                        if got.map_or(true, |g| g < *vr) {
+                            return Err(format!(
+                                "acceptor {node}: durably-acked vote at slot {slot} in \
+                                 {vr:?} recovered as {got:?} (a promised quorum could \
+                                 miss it)"
+                            ));
+                        }
+                    }
+                }
+                // The restored state is the new durable baseline.
+                if let Some(r) = round {
+                    let e = self.promised.entry(*node).or_insert(*r);
+                    if *r > *e {
+                        *e = *r;
+                    }
+                }
+                let w = self.watermark.entry(*node).or_insert(0);
+                if *watermark > *w {
+                    *w = *watermark;
+                }
+                if let Some(vs) = self.votes.get_mut(node) {
+                    vs.retain(|s, _| s >= watermark);
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_str(&format!("{:?}|{:?}|{:?}", self.promised, self.votes, self.watermark));
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
 // The set
 // ---------------------------------------------------------------------
 
@@ -641,6 +770,7 @@ impl InvariantSet {
                 Box::new(LeaseFence::default()),
                 Box::new(WatermarkOrder::default()),
                 Box::new(ClientFifo::new(strict)),
+                Box::new(RecoverySound::default()),
             ],
             cursor: 0,
         }
@@ -947,7 +1077,129 @@ mod tests {
     fn without_removes_named_invariant() {
         let s = InvariantSet::standard().without("quorum-intersection");
         assert!(!s.names().contains(&"quorum-intersection"));
-        assert_eq!(s.names().len(), 6);
+        assert_eq!(s.names().len(), 7);
+    }
+
+    #[test]
+    fn recovery_sound_accepts_faithful_replay() {
+        let events = vec![
+            (1, 2, Announce::DurablePromise { node: 2, round: r(3) }),
+            (2, 2, Announce::DurableVote { node: 2, slot: 0, vr: r(3) }),
+            (3, 2, Announce::NodeRestarted { node: 2 }),
+            (
+                4,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: Some(r(3)),
+                    watermark: 0,
+                    votes: vec![(0, r(3))],
+                },
+            ),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn recovery_sound_fires_on_unpromise() {
+        let events = vec![
+            (1, 2, Announce::DurablePromise { node: 2, round: r(5) }),
+            (2, 2, Announce::NodeRestarted { node: 2 }),
+            (
+                3,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: Some(r(3)),
+                    watermark: 0,
+                    votes: vec![],
+                },
+            ),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "recovery-sound");
+        assert!(v.detail.contains("un-promise"), "{}", v.detail);
+    }
+
+    #[test]
+    fn recovery_sound_fires_on_lost_vote() {
+        let events = vec![
+            (1, 2, Announce::DurableVote { node: 2, slot: 7, vr: r(2) }),
+            (
+                2,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: None,
+                    watermark: 0,
+                    votes: vec![],
+                },
+            ),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "recovery-sound");
+        assert!(v.detail.contains("slot 7"), "{}", v.detail);
+    }
+
+    #[test]
+    fn recovery_sound_accepts_votes_compacted_below_watermark() {
+        // The vote at slot 3 is below both the durably-acked and the
+        // recovered watermark: compaction legally forgot it.
+        let events = vec![
+            (1, 2, Announce::DurableVote { node: 2, slot: 3, vr: r(2) }),
+            (2, 2, Announce::AcceptorWatermark { node: 2, upto: 5 }),
+            (
+                3,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: None,
+                    watermark: 5,
+                    votes: vec![],
+                },
+            ),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn recovery_sound_fires_on_watermark_regression() {
+        let events = vec![
+            (1, 2, Announce::AcceptorWatermark { node: 2, upto: 9 }),
+            (
+                2,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: None,
+                    watermark: 4,
+                    votes: vec![],
+                },
+            ),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "recovery-sound");
+    }
+
+    #[test]
+    fn recovery_sound_fires_on_stale_vote_round() {
+        // The slot survives recovery but with a *lower* vote round than
+        // was durably acked — a promised quorum could miss the real vote.
+        let events = vec![
+            (1, 2, Announce::DurableVote { node: 2, slot: 0, vr: r(4) }),
+            (
+                2,
+                2,
+                Announce::AcceptorRecovered {
+                    node: 2,
+                    round: None,
+                    watermark: 0,
+                    votes: vec![(0, r(2))],
+                },
+            ),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "recovery-sound");
     }
 
     #[test]

@@ -587,6 +587,18 @@ impl Wire for Msg {
                 e.u64(*granted_at);
                 e.u64(*valid_until);
             }
+            SnapshotChunk { base, seq, total, bytes } => {
+                e.u8(43);
+                e.u64(*base);
+                e.u32(*seq);
+                e.u32(*total);
+                e.bytes(bytes);
+            }
+            SnapshotResume { base, next } => {
+                e.u8(44);
+                e.u64(*base);
+                e.u32(*next);
+            }
         }
     }
 
@@ -662,6 +674,13 @@ impl Wire for Msg {
                 granted_at: d.u64()?,
                 valid_until: d.u64()?,
             },
+            43 => SnapshotChunk {
+                base: d.u64()?,
+                seq: d.u32()?,
+                total: d.u32()?,
+                bytes: d.bytes()?,
+            },
+            44 => SnapshotResume { base: d.u64()?, next: d.u32()? },
             t => return err(&format!("bad Msg tag {t}")),
         })
     }
@@ -761,6 +780,8 @@ pub fn sample_messages() -> Vec<Msg> {
         LeaseRenew { round: r1, seq: 12 },
         LeaseRenewAck { round: r1, seq: 12 },
         LeaseGrant { round: r1, upto: 4098, granted_at: 77_000, valid_until: 50_077_000 },
+        SnapshotChunk { base: 4096, seq: 1, total: 3, bytes: vec![0xca, 0xfe] },
+        SnapshotResume { base: 4096, next: 2 },
     ]
 }
 
@@ -816,6 +837,8 @@ pub const MSG_TAG_TABLE: &[(u8, &str)] = &[
     (40, "LeaseRenew"),
     (41, "LeaseRenewAck"),
     (42, "LeaseGrant"),
+    (43, "SnapshotChunk"),
+    (44, "SnapshotResume"),
 ];
 
 /// Validate a tag table: tags must be exactly `0..table.len()` with no
@@ -859,10 +882,10 @@ mod tests {
 
     #[test]
     fn sample_covers_all_tags() {
-        // 43 variants, tags 0..=42: decoding tag 43 must fail.
-        assert_eq!(sample_messages().len(), 43);
+        // 45 variants, tags 0..=44: decoding tag 45 must fail.
+        assert_eq!(sample_messages().len(), 45);
         let mut e = Enc::new();
-        e.u8(43);
+        e.u8(45);
         assert!(Msg::decode(&e.buf).is_err());
     }
 

@@ -182,6 +182,66 @@ impl LeaseSpec {
     }
 }
 
+/// Durable-storage policy for the TCP runtime (DESIGN.md §Durability).
+/// When enabled — and `repro run` is given a `--data-dir` — every role
+/// opens a [`crate::storage::wal::WalStorage`] under
+/// `<data-dir>/<role>-<id>` and persists its critical state (acceptor
+/// promises/votes, matchmaker logs, leader epochs, replica chosen
+/// entries + snapshots) *before* acknowledging, then replays it on
+/// restart. The simulator and model checker ignore this spec entirely:
+/// they attach [`crate::storage::MemStorage`] (or nothing) directly in
+/// tests, keeping the sim hot path allocation-identical to a
+/// storage-free build.
+///
+/// Disabled by default: the paper's experiments measure the in-memory
+/// protocol; durability is the X10 extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StorageSpec {
+    /// Whether roles attach WALs at all (also requires `--data-dir`).
+    pub enabled: bool,
+    /// fsync every append before the role acks. This is what makes
+    /// `kill -9` recovery sound — a promise/vote that reached a quorum
+    /// member's ack must survive its crash, or the P1∩P2 intersection
+    /// argument silently loses votes. Turning it off is for benchmarks
+    /// only (the micro-bench measures the gap).
+    pub fsync: bool,
+    /// WAL segment rotation threshold in bytes.
+    pub segment_bytes: u64,
+    /// Every `full_every`'th replica snapshot is stored in full; the
+    /// ones between are byte-deltas against the last full.
+    pub full_every: u32,
+}
+
+impl Default for StorageSpec {
+    fn default() -> Self {
+        let d = crate::storage::wal::WalOptions::default();
+        StorageSpec {
+            enabled: false,
+            fsync: d.fsync,
+            segment_bytes: d.segment_bytes,
+            full_every: d.full_every,
+        }
+    }
+}
+
+impl StorageSpec {
+    /// An enabled policy with the safe defaults (fsync on). Segment
+    /// size is clamped to ≥ 4 KiB so rotation stays coarser than
+    /// individual records.
+    pub fn wal() -> StorageSpec {
+        StorageSpec { enabled: true, ..StorageSpec::default() }
+    }
+
+    /// The [`crate::storage::wal::WalOptions`] this spec describes.
+    pub fn wal_options(&self) -> crate::storage::wal::WalOptions {
+        crate::storage::wal::WalOptions {
+            fsync: self.fsync,
+            segment_bytes: self.segment_bytes.max(4 << 10),
+            full_every: self.full_every.max(1),
+        }
+    }
+}
+
 /// Protocol optimization flags (§3.4, §8.2 ablation). All on by default;
 /// the ablation experiment (Figure 17) toggles subsets off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -221,6 +281,9 @@ pub struct OptFlags {
     /// Read-lease policy for replica-served linearizable reads (off by
     /// default; see [`LeaseSpec`]).
     pub leases: LeaseSpec,
+    /// Durable-storage policy for the TCP runtime (off by default; see
+    /// [`StorageSpec`]).
+    pub storage: StorageSpec,
 }
 
 impl Default for OptFlags {
@@ -236,6 +299,7 @@ impl Default for OptFlags {
             batch_delay: MS,
             snapshot: SnapshotSpec::default(),
             leases: LeaseSpec::default(),
+            storage: StorageSpec::default(),
         }
     }
 }
@@ -254,6 +318,7 @@ impl OptFlags {
             batch_delay: MS,
             snapshot: SnapshotSpec::default(),
             leases: LeaseSpec::default(),
+            storage: StorageSpec::default(),
         }
     }
 
@@ -273,6 +338,12 @@ impl OptFlags {
     /// Enable read leases (builder-style).
     pub fn with_leases(mut self, spec: LeaseSpec) -> OptFlags {
         self.leases = spec;
+        self
+    }
+
+    /// Enable durable storage for the TCP runtime (builder-style).
+    pub fn with_storage(mut self, spec: StorageSpec) -> OptFlags {
+        self.storage = spec;
         self
     }
 }
@@ -538,6 +609,14 @@ impl DeploymentConfig {
                 o.leases.drift / US
             ));
         }
+        if o.storage.enabled {
+            out.push_str(&format!(
+                "storage = fsync:{},segment_kb:{},full_every:{}\n",
+                o.storage.fsync,
+                o.storage.segment_bytes / 1024,
+                o.storage.full_every
+            ));
+        }
         let w = &self.workload;
         let mut wl = String::from("workload = ");
         match w.mode {
@@ -713,6 +792,40 @@ impl DeploymentConfig {
                         return Err("leases duration must be positive".into());
                     }
                     cfg.opts.leases = LeaseSpec::every(duration, refresh, drift);
+                }
+                "storage" => {
+                    let mut spec = StorageSpec::wal();
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("storage: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        match k.trim() {
+                            "fsync" => {
+                                spec.fsync =
+                                    v.parse().map_err(|e| format!("storage fsync: {e}"))?;
+                            }
+                            "segment_kb" => {
+                                let kb: u64 = v
+                                    .parse()
+                                    .map_err(|e| format!("storage segment_kb: {e}"))?;
+                                spec.segment_bytes = kb * 1024;
+                            }
+                            "full_every" => {
+                                spec.full_every = v
+                                    .parse()
+                                    .map_err(|e| format!("storage full_every: {e}"))?;
+                            }
+                            other => return Err(format!("unknown storage key {other:?}")),
+                        }
+                    }
+                    if spec.segment_bytes == 0 {
+                        return Err("storage segment_kb must be positive".into());
+                    }
+                    if spec.full_every == 0 {
+                        return Err("storage full_every must be positive".into());
+                    }
+                    cfg.opts.storage = spec;
                 }
                 "workload" => {
                     let mut mode = "closed".to_string();
@@ -1068,6 +1181,45 @@ mod tests {
         assert!(DeploymentConfig::from_text(&format!("{base}leases = bogus:1\n")).is_err());
         assert!(
             DeploymentConfig::from_text(&format!("{base}leases = duration_us:0\n")).is_err()
+        );
+    }
+
+    #[test]
+    fn text_config_storage_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        // Default: disabled (no storage line emitted).
+        assert!(!base.contains("storage ="));
+        assert!(!DeploymentConfig::from_text(&base).unwrap().opts.storage.enabled);
+        // A storage line enables it; omitted knobs keep the safe
+        // defaults (fsync on).
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}storage = segment_kb:64,full_every:2\n"
+        ))
+        .unwrap();
+        assert!(cfg.opts.storage.enabled);
+        assert!(cfg.opts.storage.fsync);
+        assert_eq!(cfg.opts.storage.segment_bytes, 64 * 1024);
+        assert_eq!(cfg.opts.storage.full_every, 2);
+        // fsync:false parses (benchmark mode).
+        let cfg = DeploymentConfig::from_text(&format!("{base}storage = fsync:false\n")).unwrap();
+        assert!(cfg.opts.storage.enabled && !cfg.opts.storage.fsync);
+        // Round trip through to_text.
+        let mut with = DeploymentConfig::standard(1, 1);
+        with.opts.storage =
+            StorageSpec { enabled: true, fsync: true, segment_bytes: 256 * 1024, full_every: 8 };
+        let back = DeploymentConfig::from_text(&with.to_text()).unwrap();
+        assert_eq!(back.opts.storage, with.opts.storage);
+        // wal_options clamps pathological values rather than erroring.
+        let opts = StorageSpec { segment_bytes: 1, full_every: 1, ..StorageSpec::wal() }
+            .wal_options();
+        assert_eq!(opts.segment_bytes, 4 << 10);
+        // Bad keys / zero knobs rejected.
+        assert!(DeploymentConfig::from_text(&format!("{base}storage = bogus:1\n")).is_err());
+        assert!(
+            DeploymentConfig::from_text(&format!("{base}storage = segment_kb:0\n")).is_err()
+        );
+        assert!(
+            DeploymentConfig::from_text(&format!("{base}storage = full_every:0\n")).is_err()
         );
     }
 

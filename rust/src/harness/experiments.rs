@@ -1202,6 +1202,11 @@ pub fn read_scaling_figure(seed: u64) -> ReadReport {
     rep
 }
 
+// X10 lives in `harness::crash` (it drives the real TCP runtime, not
+// the simulator) but is re-exported here so `repro exp` resolves every
+// experiment through one module.
+pub use super::crash::crash_recovery_figure;
+
 /// Machine-readable perf rows for the `--bench-json` trajectory
 /// (satellite: BENCH_x*.json; schema in DESIGN.md §Bench trajectory).
 /// Purpose-built short runs — not the full figures — so CI can emit a
@@ -1278,6 +1283,25 @@ pub fn bench_json_for(id: &str, seed: u64) -> Option<BenchJson> {
             )
         })
         .collect(),
+        "x10" | "recovery" => {
+            // Real wall clock + real fsyncs (the TCP runtime), so the
+            // bench run keeps the storm short: 2 rounds. `throughput` is
+            // executed-announcement rate (3 replicas announcing); the
+            // recovery rows carry restart-to-first-execution latency in
+            // `p50_ms` and NaN elsewhere.
+            let r = crate::harness::crash::run_crash_storm(seed, 2);
+            let mut rows = vec![row("pre_crash", r.pre_tput, f64::NAN, f64::NAN, f64::NAN)];
+            for (i, (ms, _)) in r.rounds.iter().enumerate() {
+                rows.push(row(
+                    &format!("recovery_round_{i}"),
+                    f64::NAN,
+                    *ms,
+                    f64::NAN,
+                    f64::NAN,
+                ));
+            }
+            rows
+        }
         _ => return None,
     };
     Some(BenchJson { experiment: id.to_string(), seed, rows })

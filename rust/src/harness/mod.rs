@@ -29,6 +29,7 @@
 //! cluster.assert_safe();
 //! ```
 
+pub mod crash;
 pub mod experiments;
 pub mod report;
 

@@ -132,6 +132,7 @@ pub mod round;
 pub mod runtime;
 pub mod sim;
 pub mod statemachine;
+pub mod storage;
 pub mod util;
 pub mod workload;
 

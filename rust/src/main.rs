@@ -70,10 +70,14 @@ impl Args {
 
 const USAGE: &str = "usage:
   repro exp <id> [--seed N] [--bench-json PATH]
-      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 all)
+      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 x10 all)
       --bench-json PATH   write a machine-readable BENCH_<id>.json row set
-                          (x3-x7; purpose-built short runs, schema in DESIGN.md)
-  repro run --role R --id N --config FILE [--duration SECS]
+                          (x3-x7 and x10; purpose-built short runs, schema in DESIGN.md)
+      x10: kill -9 + recovery storm on a live TCP cluster with fsync'd
+           WALs (needs a writable tempdir and two free local port ranges)
+  repro run --role R --id N --config FILE [--duration SECS] [--data-dir DIR]
+      --data-dir DIR    open fsync'd WALs under DIR/<role>-<id>; replay
+                        them on start (crash recovery, DESIGN.md §Durability)
       client role workload flags (override the config's `workload =` line):
         --workload closed|pipelined|open|open-poisson
         --rate N          open-loop arrivals/sec per client
@@ -167,6 +171,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x5" | "retention" => print!("{}", exp::retention_figure(seed).render()),
         "x6" | "shards" => print!("{}", exp::sharding_figure(seed).render()),
         "x7" | "reads" => print!("{}", exp::read_scaling_figure(seed).render()),
+        "x10" | "recovery" => print!("{}", exp::crash_recovery_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -183,7 +188,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
 /// schema in DESIGN.md §Bench trajectory).
 fn write_bench_json(id: &str, seed: u64, path: &str) -> Result<()> {
     let bench = exp::bench_json_for(id, seed)
-        .with_context(|| format!("--bench-json supports x3..x7, not {id:?}"))?;
+        .with_context(|| format!("--bench-json supports x3..x7 and x10, not {id:?}"))?;
     let json = bench.to_json();
     std::fs::write(path, &json).with_context(|| format!("write {path}"))?;
     print!("{json}");
@@ -254,6 +259,20 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
         .with_context(|| format!("read {config_path}"))?;
     let cfg = DeploymentConfig::from_text(&text).map_err(|e| anyhow::anyhow!(e))?;
     let layout = cfg.layout.clone();
+    // Durable storage (DESIGN.md §Durability): with `--data-dir DIR`,
+    // each role opens a WAL under `DIR/<role>-<id>`, replays whatever a
+    // previous incarnation persisted, and only then starts serving. The
+    // config's `storage =` line tunes fsync/segmentation; without one
+    // the safe defaults (fsync on) apply.
+    let data_dir = args.flags.get("data-dir").cloned();
+    let wal_for = |role: &str| -> Result<Option<Box<dyn matchmaker::storage::Storage>>> {
+        let Some(dir) = &data_dir else { return Ok(None) };
+        let path = std::path::Path::new(dir).join(format!("{role}-{id}"));
+        let wal =
+            matchmaker::storage::wal::WalStorage::open(path.clone(), cfg.opts.storage.wal_options())
+                .with_context(|| format!("open WAL at {}", path.display()))?;
+        Ok(Some(Box::new(wal)))
+    };
     // Sharded deployments (`shards = N`): the proposer/acceptor/replica
     // lists partition into N groups sharing the matchmaker pool; each
     // group-scoped role finds its slice by its node id.
@@ -266,10 +285,25 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
             .map(|(g, gl)| (g as GroupId, gl.clone()))
     };
     let node: Box<dyn matchmaker::Node> = match role {
-        "acceptor" => Box::new(Acceptor::new(id)),
+        "acceptor" => {
+            let mut a = Acceptor::new(id);
+            if let Some(wal) = wal_for("acceptor")? {
+                a.attach_storage(wal);
+                // Recovery predates the network; its effects (the
+                // AcceptorRecovered announce) have nowhere to go yet.
+                a.recover(&mut matchmaker::Effects::new());
+            }
+            Box::new(a)
+        }
         "matchmaker" => {
             let active = layout.initial_matchmakers().contains(&id);
-            Box::new(if active { Matchmaker::new(id) } else { Matchmaker::new_standby(id) })
+            let mut m =
+                if active { Matchmaker::new(id) } else { Matchmaker::new_standby(id) };
+            if let Some(wal) = wal_for("matchmaker")? {
+                m.attach_storage(wal);
+                m.recover();
+            }
+            Box::new(m)
         }
         "replica" => {
             let sm: Box<dyn statemachine::StateMachine> = if cfg.state_machine == "tensor" {
@@ -285,6 +319,10 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
             rep.snapshot = cfg.opts.snapshot;
             rep.peers = gl.replicas.clone();
             rep.proposers = gl.proposers.clone();
+            if let Some(wal) = wal_for("replica")? {
+                rep.attach_storage(wal);
+                rep.recover();
+            }
             Box::new(rep)
         }
         "proposer" => {
@@ -303,6 +341,10 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
                 id as u64,
             );
             leader.group = group;
+            if let Some(wal) = wal_for("proposer")? {
+                leader.attach_storage(wal);
+                leader.recover();
+            }
             Box::new(leader)
         }
         "client" => {

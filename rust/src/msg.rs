@@ -151,6 +151,25 @@ pub enum Msg {
     /// + client dedup table) covering all slots `< base`, plus the
     /// retained tail of chosen entries at slots `>= base`.
     SnapshotResp { base: Slot, state: Vec<u8>, entries: Vec<(Slot, Value)> },
+    /// Peer replica → requester: one chunk of a chunked snapshot
+    /// transfer (the GB-scale replacement for one-shot [`Msg::SnapshotResp`];
+    /// see DESIGN.md §Durability). The serialized replica state covering
+    /// slots `< base` is split into `total` chunks of bounded size and
+    /// streamed in order; `seq` is this chunk's 0-based index. The
+    /// receiver assembles chunks keyed by `(sender, base)`, so a sender
+    /// restart (which re-snapshots at a new `base`) implicitly restarts
+    /// the transfer, and a receiver restart resumes with
+    /// [`Msg::SnapshotResume`]. After the final chunk the receiver
+    /// installs the snapshot and fetches the retained tail of chosen
+    /// entries with an ordinary [`Msg::SnapshotRequest`]`{ from: base }`.
+    SnapshotChunk { base: Slot, seq: u32, total: u32, bytes: Vec<u8> },
+    /// Requester → peer replica: resume cursor for an in-flight chunked
+    /// transfer — "re-send snapshot `base` starting from chunk `next`".
+    /// Sent after a receiver restart (the assembly buffer was lost up to
+    /// the durable cursor) or when the stream stalls mid-transfer. A
+    /// sender that no longer holds snapshot `base` answers with a fresh
+    /// transfer at its current base.
+    SnapshotResume { base: Slot, next: u32 },
 
     // ---- Client path ----
     /// Client → leader. `group` names the consensus group the command is
@@ -302,7 +321,9 @@ impl Msg {
             Msg::GarbageA { .. } | Msg::GarbageB { .. } => MsgKind::Gc,
             Msg::CatchUp { .. }
             | Msg::SnapshotRequest { .. }
-            | Msg::SnapshotResp { .. } => MsgKind::Snapshot,
+            | Msg::SnapshotResp { .. }
+            | Msg::SnapshotChunk { .. }
+            | Msg::SnapshotResume { .. } => MsgKind::Snapshot,
             Msg::StopA
             | Msg::StopB { .. }
             | Msg::Bootstrap { .. }
@@ -363,6 +384,8 @@ impl Msg {
             Msg::CatchUp { .. } => "CatchUp",
             Msg::SnapshotRequest { .. } => "SnapshotRequest",
             Msg::SnapshotResp { .. } => "SnapshotResp",
+            Msg::SnapshotChunk { .. } => "SnapshotChunk",
+            Msg::SnapshotResume { .. } => "SnapshotResume",
             Msg::Read { .. } => "Read",
             Msg::ReadReply { .. } => "ReadReply",
             Msg::ReadIndexReq { .. } => "ReadIndexReq",
@@ -393,7 +416,8 @@ pub enum MsgKind {
     /// `LeaseGrant`).
     Lease,
     Gc,
-    /// Snapshot catch-up traffic (`CatchUp`/`SnapshotRequest`/`SnapshotResp`).
+    /// Snapshot catch-up traffic (`CatchUp`/`SnapshotRequest`/
+    /// `SnapshotResp`/`SnapshotChunk`/`SnapshotResume`).
     Snapshot,
     MmReconfig,
     Heartbeat,
@@ -485,6 +509,11 @@ mod tests {
         );
         assert_eq!(Msg::SnapshotRequest { from: 3 }.kind(), MsgKind::Snapshot);
         assert_eq!(Msg::CatchUp { below: 9, peer: 1 }.kind(), MsgKind::Snapshot);
+        assert_eq!(
+            Msg::SnapshotChunk { base: 9, seq: 0, total: 2, bytes: vec![1] }.kind(),
+            MsgKind::Snapshot
+        );
+        assert_eq!(Msg::SnapshotResume { base: 9, next: 1 }.kind(), MsgKind::Snapshot);
     }
 
     #[test]

@@ -55,12 +55,28 @@ pub fn encode_frame_into(env: &Envelope, scratch: &mut Enc) {
     scratch.buf[..4].copy_from_slice(&body_len.to_be_bytes());
 }
 
-/// Read one frame from a stream (blocking).
-pub fn read_frame(stream: &mut TcpStream) -> Result<Envelope> {
+/// Largest frame the transport will accept. The length prefix is
+/// attacker-/bug-controlled bytes off the wire, and `read_frame`
+/// allocates the full body up front — without a cap, one corrupt or
+/// malicious prefix is a 4 GiB allocation. 64 MiB comfortably clears
+/// every protocol message (snapshot *chunks* are 256 KiB precisely so
+/// state transfer never needs giant frames; see
+/// [`crate::roles::Replica`]).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Read one frame from a stream (blocking). Generic over `Read` so the
+/// oversize guard is testable against in-memory buffers, not just live
+/// sockets.
+pub fn read_frame(stream: &mut impl Read) -> Result<Envelope> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_be_bytes(len_buf) as usize;
-    anyhow::ensure!(len <= 64 << 20, "frame too large: {len}");
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "frame length {len} exceeds MAX_FRAME ({MAX_FRAME} bytes): \
+         refusing to allocate — corrupt length prefix, or a message that \
+         should be chunked (snapshots travel as SnapshotChunk frames)"
+    );
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body)?;
     Envelope::decode(&body).map_err(|e| anyhow::anyhow!("decode: {e}"))
@@ -156,6 +172,12 @@ impl TimerService {
 /// Handle for a running node.
 pub struct NodeHandle {
     shutdown: Sender<Event>,
+    /// Tells the accept loop to stop and release the listening socket
+    /// (so a restarted incarnation can rebind the same address — the
+    /// crash-recovery harness depends on this).
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Own address, used to poke the blocking accept loop awake.
+    addr: String,
     /// Join handle for the node thread.
     pub join: std::thread::JoinHandle<()>,
     /// Announcements observed (metrics / tests).
@@ -163,8 +185,19 @@ pub struct NodeHandle {
 }
 
 impl NodeHandle {
+    /// Stop the node's event loop and release its listening socket.
+    ///
+    /// Nothing is flushed on the way down — the event loop simply stops
+    /// and every in-memory structure is dropped. Durability-wise this is
+    /// indistinguishable from `kill -9`: a node with a WAL attached
+    /// fsyncs each record *before* acting on it, never at exit, so the
+    /// crash-recovery harness uses this as its kill switch.
     pub fn shutdown(&self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
         let _ = self.shutdown.send(Event::Shutdown);
+        // Wake the accept loop (blocked in `incoming()`) so it observes
+        // the stop flag and drops the listener.
+        let _ = TcpStream::connect(&self.addr);
     }
 }
 
@@ -182,10 +215,17 @@ pub fn spawn_node(
     let (ev_tx, ev_rx) = channel::<Event>();
     let (ann_tx, ann_rx) = channel::<(Time, Announce)>();
 
-    // Accept loop.
+    // Accept loop. Exits (releasing the listener, so the port can be
+    // rebound by a restarted incarnation) when the stop flag is set and
+    // `shutdown()` pokes it awake with a dummy connection.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let accept_stop = stop.clone();
     let accept_tx = ev_tx.clone();
     std::thread::spawn(move || {
         for stream in listener.incoming() {
+            if accept_stop.load(std::sync::atomic::Ordering::SeqCst) {
+                break;
+            }
             let Ok(mut stream) = stream else { break };
             let tx = accept_tx.clone();
             std::thread::spawn(move || {
@@ -247,7 +287,7 @@ pub fn spawn_node(
         }
     });
 
-    Ok(NodeHandle { shutdown: shutdown_tx, join, announces: ann_rx })
+    Ok(NodeHandle { shutdown: shutdown_tx, stop, addr: my_addr, join, announces: ann_rx })
 }
 
 /// Allocate `n` consecutive loopback addresses starting at `base_port`.
@@ -284,6 +324,57 @@ mod tests {
             encode_frame_into(&env, &mut scratch);
             assert_eq!(scratch.buf, encode_frame(&env));
         }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_with_descriptive_error() {
+        // A deliberately huge SnapshotResp — the exact message class the
+        // chunked-transfer protocol exists to avoid — encodes past
+        // MAX_FRAME and must be refused at the framing layer before the
+        // body allocation happens.
+        let env = Envelope {
+            from: 1,
+            to: 2,
+            msg: Msg::SnapshotResp {
+                base: 10,
+                state: vec![7u8; MAX_FRAME],
+                entries: Vec::new(),
+            },
+        };
+        let frame = encode_frame(&env);
+        assert!(frame.len() > MAX_FRAME + 4);
+        let err = read_frame(&mut std::io::Cursor::new(frame)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("exceeds MAX_FRAME"), "unhelpful error: {msg}");
+        assert!(msg.contains("SnapshotChunk"), "error should point at chunking: {msg}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_rejected_without_allocating() {
+        // A corrupt prefix claiming ~4 GiB must fail fast on the length
+        // check — reading it as an allocation size would abort the
+        // process long before read_exact ever ran.
+        let frame = u32::MAX.to_be_bytes().to_vec();
+        let err = read_frame(&mut std::io::Cursor::new(frame)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds MAX_FRAME"));
+    }
+
+    #[test]
+    fn frame_at_limit_still_accepted() {
+        // The guard is about the prefix, not honest big-but-legal
+        // frames: just-under-limit messages round-trip.
+        let env = Envelope {
+            from: 1,
+            to: 2,
+            msg: Msg::SnapshotResp {
+                base: 10,
+                state: vec![7u8; 1 << 20],
+                entries: Vec::new(),
+            },
+        };
+        let frame = encode_frame(&env);
+        let back = read_frame(&mut std::io::Cursor::new(frame)).unwrap();
+        assert_eq!(back, env);
     }
 
     #[test]

@@ -150,6 +150,32 @@ pub enum Announce {
     /// per-node monotonicity checks reset here. Synthesized by
     /// [`crate::sim::Sim::replace_node`], never by a role.
     NodeRestarted { node: NodeId },
+
+    // ---- Durability probes (crate::storage; DESIGN.md §Durability).
+    // Emitted only when a role has a Storage attached — the default
+    // in-memory deployments produce none of these. ----
+    /// An acceptor durably logged a promise for `round` (WAL appended
+    /// and fsync'd) before its Phase-1/lease ack left the node.
+    DurablePromise { node: NodeId, round: Round },
+    /// An acceptor durably logged a vote `(slot, vr)` before its
+    /// Phase-2B left the node.
+    DurableVote { node: NodeId, slot: Slot, vr: Round },
+    /// An acceptor durably advanced its chosen-prefix watermark to
+    /// `upto`: votes below it are compacted from the log (they are
+    /// durable on f+1 replicas), so the recovery-soundness shadow
+    /// forgets them too.
+    AcceptorWatermark { node: NodeId, upto: Slot },
+    /// An acceptor finished WAL replay after a crash: its restored
+    /// promise, watermark, and per-slot vote rounds. The
+    /// recovery-soundness invariant checks this against the durable
+    /// shadow accumulated from the probes above — a restored state
+    /// below anything durably acked (an "un-promise") is a safety bug.
+    AcceptorRecovered {
+        node: NodeId,
+        round: Option<Round>,
+        watermark: Slot,
+        votes: Vec<(Slot, Round)>,
+    },
 }
 
 /// The output of one activation of a node.

@@ -6,8 +6,9 @@
 //! proposer/leader. This is the heart of the paper's generality argument.
 
 use crate::msg::{Msg, SlotVote, Value};
-use crate::node::{Effects, Node, Timer};
+use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
+use crate::storage::{Storage, WalRecord};
 use crate::{NodeId, Slot, Time};
 use std::collections::BTreeMap;
 
@@ -37,6 +38,14 @@ pub struct Acceptor {
     /// Also serve fast rounds (Matchmaker Fast Paxos, §7). A fast acceptor
     /// votes for the first value it sees in a fast round.
     pub fast: bool,
+    /// Durable log, when attached (`repro run --data-dir`, recovery
+    /// tests). `None` — the sim default — keeps the hot path free of
+    /// clones and I/O. With a log attached, every promise/vote/watermark
+    /// is appended (and fsync'd by [`crate::storage::WalStorage`])
+    /// *before* the corresponding ack is queued: fsync-before-ack, the
+    /// ordering that keeps the P1 ∩ P2 intersection argument sound
+    /// across `kill -9` (DESIGN.md §Durability).
+    storage: Option<Box<dyn Storage>>,
 }
 
 impl Acceptor {
@@ -48,6 +57,7 @@ impl Acceptor {
             votes: BTreeMap::new(),
             chosen_watermark: 0,
             fast: false,
+            storage: None,
         }
     }
 
@@ -66,6 +76,86 @@ impl Acceptor {
         let w = self.chosen_watermark;
         self.votes.retain(|&s, _| s >= w);
     }
+
+    /// Attach a durable log. Call before the node starts; follow with
+    /// [`Acceptor::recover`] when rejoining after a crash.
+    pub fn attach_storage(&mut self, storage: Box<dyn Storage>) {
+        self.storage = Some(storage);
+    }
+
+    /// Detach and return the durable log (crash simulation: the "disk"
+    /// survives the process, so tests move it into a fresh instance).
+    pub fn take_storage(&mut self) -> Option<Box<dyn Storage>> {
+        self.storage.take()
+    }
+
+    /// Append `rec` to the attached log, if any. A storage failure is
+    /// fatal by design: an acceptor that cannot persist must stop
+    /// acking, and crashing before the ack is queued is exactly the
+    /// failure mode the protocol already tolerates.
+    fn persist(&mut self, rec: WalRecord) {
+        if let Some(s) = self.storage.as_mut() {
+            s.append(&rec).expect("acceptor wal append failed");
+        }
+    }
+
+    /// Rewrite the durable log to the live set — promise + watermark +
+    /// surviving votes — reclaiming everything the chosen-prefix
+    /// watermark retired (watermark-driven truncation, §5.3).
+    fn compact_storage(&mut self) {
+        if self.storage.is_none() {
+            return;
+        }
+        let mut live = Vec::with_capacity(self.votes.len() + 2);
+        if let Some(round) = self.round {
+            live.push(WalRecord::Promise { round });
+        }
+        live.push(WalRecord::Watermark { upto: self.chosen_watermark });
+        for (&slot, v) in &self.votes {
+            live.push(WalRecord::Vote { slot, vr: v.vr, vv: v.vv.clone() });
+        }
+        let s = self.storage.as_mut().unwrap();
+        s.compact(&live).expect("acceptor wal compact failed");
+    }
+
+    /// Rebuild promise/vote state by replaying the attached log — the
+    /// `kill -9` recovery path. Replay is idempotent over the duplicate
+    /// records a crash mid-`compact` can leave behind: promises and
+    /// watermarks only ratchet up, votes are last-write-wins per slot.
+    /// Announces [`Announce::AcceptorRecovered`] so the
+    /// recovery-soundness invariant can compare the restored state
+    /// against everything durably acked before the crash.
+    pub fn recover(&mut self, fx: &mut Effects) {
+        let Some(s) = self.storage.as_mut() else {
+            return;
+        };
+        let recs = s.replay().expect("acceptor wal replay failed");
+        for rec in recs {
+            match rec {
+                WalRecord::Promise { round } => {
+                    if self.round.map_or(true, |cur| round > cur) {
+                        self.round = Some(round);
+                    }
+                }
+                WalRecord::Vote { slot, vr, vv } => {
+                    self.votes.insert(slot, Vote { vr, vv });
+                }
+                WalRecord::Watermark { upto } => {
+                    if upto > self.chosen_watermark {
+                        self.chosen_watermark = upto;
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.compact();
+        fx.announce(Announce::AcceptorRecovered {
+            node: self.id,
+            round: self.round,
+            watermark: self.chosen_watermark,
+            votes: self.votes.iter().map(|(&s, v)| (s, v.vr)).collect(),
+        });
+    }
 }
 
 impl Node for Acceptor {
@@ -81,7 +171,12 @@ impl Node for Acceptor {
                     fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
                     return;
                 }
+                let raised = self.round != Some(round);
                 self.round = Some(round);
+                if raised && self.storage.is_some() {
+                    self.persist(WalRecord::Promise { round });
+                    fx.announce(Announce::DurablePromise { node: self.id, round });
+                }
                 let votes: Vec<SlotVote> = self
                     .votes
                     .range(from_slot.max(self.chosen_watermark)..)
@@ -99,7 +194,16 @@ impl Node for Acceptor {
                     fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
                     return;
                 }
+                let raised = self.round != Some(round);
                 self.round = Some(round);
+                if self.storage.is_some() {
+                    if raised {
+                        self.persist(WalRecord::Promise { round });
+                        fx.announce(Announce::DurablePromise { node: self.id, round });
+                    }
+                    self.persist(WalRecord::Vote { slot, vr: round, vv: value.clone() });
+                    fx.announce(Announce::DurableVote { node: self.id, slot, vr: round });
+                }
                 self.votes.insert(slot, Vote { vr: round, vv: value });
                 fx.send(from, Msg::Phase2B { round, slot });
             }
@@ -117,24 +221,29 @@ impl Node for Acceptor {
                     return;
                 }
                 // Slot 0: the fast variant is single-decree.
-                let entry = self.votes.entry(0);
-                let vote = match entry {
-                    std::collections::btree_map::Entry::Occupied(o) if o.get().vr == round => {
+                let vote = match self.votes.get(&0) {
+                    Some(v) if v.vr == round => {
                         // Already voted in this fast round: report the
                         // existing vote (do not change it).
-                        o.into_mut().clone()
+                        v.clone()
                     }
-                    e => {
+                    _ => {
+                        let raised = self.round != Some(round);
                         self.round = Some(round);
                         let v = Vote { vr: round, vv: value };
-                        match e {
-                            std::collections::btree_map::Entry::Occupied(mut o) => {
-                                o.insert(v.clone());
+                        if self.storage.is_some() {
+                            if raised {
+                                self.persist(WalRecord::Promise { round });
+                                fx.announce(Announce::DurablePromise { node: self.id, round });
                             }
-                            std::collections::btree_map::Entry::Vacant(vac) => {
-                                vac.insert(v.clone());
-                            }
+                            self.persist(WalRecord::Vote {
+                                slot: 0,
+                                vr: round,
+                                vv: v.vv.clone(),
+                            });
+                            fx.announce(Announce::DurableVote { node: self.id, slot: 0, vr: round });
                         }
+                        self.votes.insert(0, v.clone());
                         v
                     }
                 };
@@ -152,7 +261,12 @@ impl Node for Acceptor {
                     fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
                     return;
                 }
+                let raised = self.round != Some(round);
                 self.round = Some(round);
+                if raised && self.storage.is_some() {
+                    self.persist(WalRecord::Promise { round });
+                    fx.announce(Announce::DurablePromise { node: self.id, round });
+                }
                 fx.send(from, Msg::LeaseRenewAck { round, seq });
             }
 
@@ -163,10 +277,23 @@ impl Node for Acceptor {
                     fx.send(from, Msg::Nack { round, higher: self.round.unwrap() });
                     return;
                 }
+                let raised = self.round != Some(round);
                 self.round = Some(round);
+                if raised && self.storage.is_some() {
+                    self.persist(WalRecord::Promise { round });
+                    fx.announce(Announce::DurablePromise { node: self.id, round });
+                }
                 if upto > self.chosen_watermark {
                     self.chosen_watermark = upto;
                     self.compact();
+                    if self.storage.is_some() {
+                        self.persist(WalRecord::Watermark { upto });
+                        // The watermark retired the prefix everywhere:
+                        // rewrite the log to the live set so disk usage
+                        // tracks the in-memory footprint.
+                        self.compact_storage();
+                        fx.announce(Announce::AcceptorWatermark { node: self.id, upto });
+                    }
                 }
                 fx.send(from, Msg::PrefixAck { round, upto: self.chosen_watermark });
             }
@@ -188,7 +315,8 @@ impl Node for Acceptor {
     fn state_repr(&self) -> Option<String> {
         // An acceptor's state is exactly Algorithm 2's (r, per-slot
         // votes) plus the chosen-prefix watermark; none of it is
-        // time-valued.
+        // time-valued. The durable log is a mirror of this state, not
+        // additional state, so it is excluded.
         Some(format!(
             "acc r={:?} votes={:?} wm={} fast={}",
             self.round, self.votes, self.chosen_watermark, self.fast
@@ -315,5 +443,66 @@ mod tests {
         let mut a = Acceptor::new(1);
         let out = run(&mut a, 8, Msg::FastPropose { round: r(0, 0, 0), value: Value::Noop });
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn crash_recovery_restores_durable_state() {
+        use crate::node::Announce;
+        use crate::storage::MemStorage;
+        let mut a = Acceptor::new(1);
+        a.attach_storage(Box::new(MemStorage::new()));
+        run(&mut a, 0, Msg::Phase1A { round: r(2, 0, 0), from_slot: 0 });
+        for s in 0..5 {
+            run(&mut a, 0, Msg::Phase2A { round: r(2, 0, 0), slot: s, value: Value::Noop });
+        }
+        run(&mut a, 0, Msg::PrefixPersisted { round: r(2, 0, 0), upto: 2 });
+        // "kill -9": only the disk survives.
+        let disk = a.take_storage().unwrap();
+        let mut b = Acceptor::new(1);
+        b.attach_storage(disk);
+        let mut fx = Effects::new();
+        b.recover(&mut fx);
+        assert_eq!(b.round, Some(r(2, 0, 0)));
+        assert_eq!(b.chosen_watermark, 2);
+        assert_eq!(b.votes, a.votes);
+        match fx.announces.last() {
+            Some(Announce::AcceptorRecovered { node: 1, round, watermark: 2, votes }) => {
+                assert_eq!(*round, Some(r(2, 0, 0)));
+                assert_eq!(votes.len(), 3); // slots 2..5 survive the watermark
+            }
+            other => panic!("expected AcceptorRecovered, got {other:?}"),
+        }
+        // Restored and pre-crash state render identically.
+        assert_eq!(a.state_repr(), b.state_repr());
+    }
+
+    #[test]
+    fn durable_acks_announce_persistence() {
+        use crate::node::Announce;
+        use crate::storage::MemStorage;
+        let mut a = Acceptor::new(1);
+        a.attach_storage(Box::new(MemStorage::new()));
+        let mut fx = Effects::new();
+        a.on_msg(0, 0, Msg::Phase1A { round: r(1, 0, 0), from_slot: 0 }, &mut fx);
+        assert!(matches!(
+            fx.announces[..],
+            [Announce::DurablePromise { node: 1, .. }]
+        ));
+        let mut fx = Effects::new();
+        a.on_msg(
+            0,
+            0,
+            Msg::Phase2A { round: r(1, 0, 0), slot: 4, value: Value::Noop },
+            &mut fx,
+        );
+        assert!(matches!(
+            fx.announces[..],
+            [Announce::DurableVote { node: 1, slot: 4, .. }]
+        ));
+        // Without storage: no durability probes at all.
+        let mut plain = Acceptor::new(2);
+        let mut fx = Effects::new();
+        plain.on_msg(0, 0, Msg::Phase1A { round: r(1, 0, 0), from_slot: 0 }, &mut fx);
+        assert!(fx.announces.is_empty());
     }
 }

@@ -48,6 +48,7 @@ use crate::config::{Configuration, OptFlags};
 use crate::msg::{Command, MmLog, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
+use crate::storage::{Storage, WalRecord};
 use crate::util::Rng;
 use crate::{GroupId, NodeId, Slot, Time, MS};
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
@@ -314,6 +315,13 @@ pub struct Leader {
     /// Queued acceptor reconfiguration (applied when the current install
     /// completes).
     pending_reconfig: Option<Configuration>,
+    /// Durable epoch log (`None` in sim/model-checker runs; the TCP
+    /// runtime attaches a WAL). Every activated `(round, config)` is
+    /// persisted before it is announced, so a proposer restarted after
+    /// `kill -9` re-elects in a strictly higher epoch than any round it
+    /// ever used — reusing a round with amnesia could contradict the
+    /// Phase-1/Phase-2 state it previously established under it.
+    storage: Option<Box<dyn Storage>>,
 
     // ---- Metrics (read by the harness) ----
     /// Rounds installed to steady state (startup counts as one).
@@ -387,6 +395,7 @@ impl Leader {
             mm_reconfig: None,
             mm_generation: 0,
             pending_reconfig: None,
+            storage: None,
             reconfigs_completed: 0,
             gc_completed: 0,
             max_prior_configs: 0,
@@ -421,6 +430,58 @@ impl Leader {
     /// Diagnostics: `(next_slot, chosen_watermark, persisted_f1)`.
     pub fn log_watermarks(&self) -> (Slot, Slot, Slot) {
         (self.next_slot, self.chosen_watermark, self.persisted_f1)
+    }
+
+    // =====================================================================
+    // Durability (DESIGN.md §Durability)
+    // =====================================================================
+
+    /// Attach a durable epoch log. Call before `on_start`; combine with
+    /// [`Leader::recover`] when the directory may hold state from a
+    /// previous incarnation.
+    pub fn attach_storage(&mut self, storage: Box<dyn Storage>) {
+        self.storage = Some(storage);
+    }
+
+    /// Detach and return the durable log (crash simulation: the "disk"
+    /// survives the process, so tests move it into a fresh instance).
+    pub fn take_storage(&mut self) -> Option<Box<dyn Storage>> {
+        self.storage.take()
+    }
+
+    /// Append `rec` to the attached log, if any. A storage failure is
+    /// fatal by design: a leader that cannot persist its active round
+    /// must not propose in it.
+    fn persist(&mut self, rec: WalRecord) {
+        if let Some(s) = self.storage.as_mut() {
+            s.append(&rec).expect("leader wal append failed");
+        }
+    }
+
+    /// Replay the durable epoch log after a crash: raise the election
+    /// epoch floor above every round this proposer ever activated and
+    /// restore the newest configuration as the matchmaking guess. The
+    /// restarted proposer comes back as a *follower* — the epoch floor
+    /// only guarantees that if it is elected again, `become_leader`
+    /// picks a round strictly above everything it used before.
+    pub fn recover(&mut self) {
+        let Some(s) = self.storage.as_mut() else {
+            return;
+        };
+        let recs = s.replay().expect("leader wal replay failed");
+        let mut best: Option<Round> = None;
+        for rec in recs {
+            if let WalRecord::LeaderEpoch { group, round, config } = rec {
+                if group != self.group {
+                    continue;
+                }
+                self.epoch_seen = self.epoch_seen.max(round.epoch);
+                if best.map_or(true, |cur| round > cur) {
+                    best = Some(round);
+                    self.config = config;
+                }
+            }
+        }
     }
 
     // =====================================================================
@@ -550,6 +611,16 @@ impl Leader {
         h.remove(&self.round);
         self.max_prior_configs = self.max_prior_configs.max(h.len());
         self.round_configs.insert(self.round, self.config.clone());
+        // Persist the activated (round, config) before announcing or
+        // proposing anything in it: a post-crash restart must never
+        // reuse this round (fsync-before-act, DESIGN.md §Durability).
+        if self.storage.is_some() {
+            self.persist(WalRecord::LeaderEpoch {
+                group: self.group,
+                round: self.round,
+                config: self.config.clone(),
+            });
+        }
         fx.announce(Announce::ConfigActive {
             group: self.group,
             round: self.round,
@@ -1977,6 +2048,31 @@ mod tests {
         for m in &p.mms {
             assert_eq!(m.group_log_len(0), 1);
         }
+    }
+
+    #[test]
+    fn crash_recovery_raises_epoch_floor_above_used_rounds() {
+        let mut p = Pump::new(OptFlags::default());
+        p.leader.attach_storage(Box::new(crate::storage::MemStorage::new()));
+        p.start();
+        let newcfg = Configuration::majority(1, vec![7, 8, 9]);
+        let mut fx = Effects::new();
+        p.leader.reconfigure(newcfg.clone(), 2, &mut fx);
+        p.pump(fx, 2);
+        let used = p.leader.current_round();
+        // kill -9: the disk survives, the process state does not.
+        let disk = p.leader.take_storage().expect("storage attached");
+        let cfg = Configuration::majority(0, vec![4, 5, 6]);
+        let mut l =
+            Leader::new(0, 1, cfg, vec![1, 2, 3], vec![10, 11, 12], vec![0], OptFlags::default(), 7);
+        l.attach_storage(disk);
+        l.recover();
+        assert_eq!(l.current_config(), &newcfg, "newest activated config restored");
+        assert!(!l.is_leader, "recovery does not self-elect");
+        let mut fx = Effects::new();
+        l.become_leader(3, &mut fx);
+        assert!(l.current_round() > used, "must re-elect strictly above every used round");
+        assert_eq!(l.current_round().epoch, used.epoch + 1);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::config::Configuration;
 use crate::msg::{MmLog, Msg};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
+use crate::storage::{Storage, WalRecord};
 use crate::{GroupId, NodeId, Time};
 use std::collections::BTreeMap;
 
@@ -54,6 +55,14 @@ pub struct Matchmaker {
     // generation-(g+1) set. Keyed by generation so votes can never leak
     // across instances, even when sets overlap. ---
     meta: BTreeMap<u64, MetaAcceptor>,
+
+    /// Durable log, when attached (`repro run --data-dir`). The `(group,
+    /// round)` log, GC watermarks, §6 lifecycle, and meta-Paxos state are
+    /// persisted before the corresponding answer leaves the node — the
+    /// refusal discipline ("never answer a round ≤ i again") must survive
+    /// `kill -9`, or a restarted matchmaker could contradict an answer it
+    /// already gave (DESIGN.md §Durability).
+    storage: Option<Box<dyn Storage>>,
 }
 
 /// Per-instance meta-Paxos acceptor state.
@@ -75,6 +84,7 @@ impl Matchmaker {
             active: true,
             generation: 0,
             meta: BTreeMap::new(),
+            storage: None,
         }
     }
 
@@ -97,6 +107,118 @@ impl Matchmaker {
     pub fn total_log_len(&self) -> usize {
         self.log.values().map(|l| l.len()).sum()
     }
+
+    /// Attach a durable log. Call before the node starts; follow with
+    /// [`Matchmaker::recover`] when rejoining after a crash.
+    pub fn attach_storage(&mut self, storage: Box<dyn Storage>) {
+        self.storage = Some(storage);
+    }
+
+    /// Detach and return the durable log (crash simulation).
+    pub fn take_storage(&mut self) -> Option<Box<dyn Storage>> {
+        self.storage.take()
+    }
+
+    /// Append `rec` to the attached log, if any (fatal on failure: a
+    /// matchmaker that cannot persist must not answer).
+    fn persist(&mut self, rec: WalRecord) {
+        if let Some(s) = self.storage.as_mut() {
+            s.append(&rec).expect("matchmaker wal append failed");
+        }
+    }
+
+    /// Persist the §6 lifecycle (generation, stopped, active).
+    fn persist_lifecycle(&mut self) {
+        if self.storage.is_some() {
+            self.persist(WalRecord::MmLifecycle {
+                generation: self.generation,
+                stopped: self.stopped,
+                active: self.active,
+            });
+        }
+    }
+
+    /// Rewrite the durable log to the live set: lifecycle, per-group
+    /// watermarks, surviving log entries, and meta-Paxos state. Called
+    /// after GC (the retired configurations' records are reclaimed) and
+    /// after Bootstrap (the merged state replaces everything).
+    fn compact_storage(&mut self) {
+        if self.storage.is_none() {
+            return;
+        }
+        let mut live = vec![WalRecord::MmLifecycle {
+            generation: self.generation,
+            stopped: self.stopped,
+            active: self.active,
+        }];
+        for (&g, &w) in &self.gc_watermarks {
+            live.push(WalRecord::MmGcWatermark { group: g, round: w });
+        }
+        for (&g, glog) in &self.log {
+            for (&r, c) in glog {
+                live.push(WalRecord::MmEntry { group: g, round: r, config: c.clone() });
+            }
+        }
+        for (&generation, inst) in &self.meta {
+            if let Some(round) = inst.round {
+                live.push(WalRecord::MetaPromise { generation, round });
+            }
+            if let (Some(vr), Some(set)) = (inst.vr, inst.vv.clone()) {
+                live.push(WalRecord::MetaVote { generation, vr, set });
+            }
+        }
+        let s = self.storage.as_mut().unwrap();
+        s.compact(&live).expect("matchmaker wal compact failed");
+    }
+
+    /// Rebuild the matchmaker's state by replaying the attached log —
+    /// the `kill -9` recovery path. Idempotent over duplicated records
+    /// (watermarks ratchet, log/meta inserts are last-write-wins).
+    pub fn recover(&mut self) {
+        let Some(s) = self.storage.as_mut() else {
+            return;
+        };
+        let recs = s.replay().expect("matchmaker wal replay failed");
+        for rec in recs {
+            match rec {
+                WalRecord::MmEntry { group, round, config } => {
+                    self.log.entry(group).or_default().insert(round, config);
+                }
+                WalRecord::MmGcWatermark { group, round } => {
+                    let w = self.gc_watermarks.entry(group).or_insert(round);
+                    if round > *w {
+                        *w = round;
+                    }
+                }
+                WalRecord::MmLifecycle { generation, stopped, active } => {
+                    self.generation = generation;
+                    self.stopped = stopped;
+                    self.active = active;
+                }
+                WalRecord::MetaPromise { generation, round } => {
+                    let inst = self.meta.entry(generation).or_default();
+                    if inst.round.map_or(true, |cur| round > cur) {
+                        inst.round = Some(round);
+                    }
+                }
+                WalRecord::MetaVote { generation, vr, set } => {
+                    let inst = self.meta.entry(generation).or_default();
+                    if inst.vr.map_or(true, |cur| vr >= cur) {
+                        inst.vr = Some(vr);
+                        inst.vv = Some(set);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Re-apply each group's watermark to the restored log (records
+        // can interleave entries and watermarks in either order).
+        for (g, w) in &self.gc_watermarks {
+            if let Some(glog) = self.log.get_mut(g) {
+                *glog = glog.split_off(w);
+            }
+        }
+    }
 }
 
 impl Node for Matchmaker {
@@ -110,10 +232,14 @@ impl Node for Matchmaker {
                     return;
                 }
                 inst.round = Some(*round);
-                fx.send(
-                    from,
-                    Msg::MetaPhase1B { round: *round, vr: inst.vr, vv: inst.vv.clone() },
-                );
+                let (vr, vv) = (inst.vr, inst.vv.clone());
+                if self.storage.is_some() {
+                    self.persist(WalRecord::MetaPromise {
+                        generation: *generation,
+                        round: *round,
+                    });
+                }
+                fx.send(from, Msg::MetaPhase1B { round: *round, vr, vv });
                 return;
             }
             Msg::MetaPhase2A { round, generation, matchmakers } => {
@@ -124,6 +250,17 @@ impl Node for Matchmaker {
                 inst.round = Some(*round);
                 inst.vr = Some(*round);
                 inst.vv = Some(matchmakers.clone());
+                if self.storage.is_some() {
+                    self.persist(WalRecord::MetaPromise {
+                        generation: *generation,
+                        round: *round,
+                    });
+                    self.persist(WalRecord::MetaVote {
+                        generation: *generation,
+                        vr: *round,
+                        set: matchmakers.clone(),
+                    });
+                }
                 fx.send(from, Msg::MetaPhase2B { round: *round });
                 return;
             }
@@ -142,6 +279,10 @@ impl Node for Matchmaker {
                 self.generation = *generation;
                 self.stopped = false;
                 self.active = false;
+                // The merged state replaces everything durably too —
+                // a full rewrite, before the ack, so a crashed-and-
+                // restarted new matchmaker still holds the merge.
+                self.compact_storage();
                 fx.send(from, Msg::BootstrapAck);
                 return;
             }
@@ -193,7 +334,12 @@ impl Node for Matchmaker {
                 // H_i = all of the group's configurations at rounds < i.
                 let prior: BTreeMap<Round, Configuration> =
                     glog.range(..round).map(|(r, c)| (*r, c.clone())).collect();
-                glog.insert(round, config);
+                // Durable before the MatchB leaves: the answer is the
+                // promise, and the promise must survive kill -9.
+                if self.storage.is_some() {
+                    self.persist(WalRecord::MmEntry { group, round, config: config.clone() });
+                }
+                self.log.entry(group).or_default().insert(round, config);
                 fx.announce(Announce::MatchAnswered { group, round });
                 fx.send(
                     from,
@@ -214,17 +360,32 @@ impl Node for Matchmaker {
                 if let Some(glog) = self.log.get_mut(&group) {
                     *glog = glog.split_off(&round);
                 }
-                let w = self.gc_watermarks.entry(group).or_insert(round);
-                if round > *w {
-                    *w = round;
+                let w = {
+                    let w = self.gc_watermarks.entry(group).or_insert(round);
+                    if round > *w {
+                        *w = round;
+                    }
+                    *w
+                };
+                if self.storage.is_some() {
+                    self.persist(WalRecord::MmGcWatermark { group, round: w });
+                    // GC is the truncation point: rewrite the log to the
+                    // live set so retired configurations are reclaimed
+                    // on disk as well as in memory (§5's watermarks
+                    // drive the WAL's truncation too).
+                    self.compact_storage();
                 }
-                fx.announce(Announce::MmGc { group, round: *w });
+                fx.announce(Announce::MmGc { group, round: w });
                 fx.send(from, Msg::GarbageB { group, round });
             }
 
             // Matchmaker reconfiguration (§6).
             Msg::StopA => {
                 self.stopped = true;
+                // A stop that does not survive a crash would let the
+                // restarted matchmaker keep answering for a set that the
+                // reconfigurer already replaced.
+                self.persist_lifecycle();
                 fx.send(
                     from,
                     Msg::StopB {
@@ -239,6 +400,7 @@ impl Node for Matchmaker {
                 // that has since been re-bootstrapped for a newer set.
                 if generation == self.generation {
                     self.active = true;
+                    self.persist_lifecycle();
                 }
             }
 
@@ -500,6 +662,41 @@ mod tests {
         assert_eq!(wms.get(&0), Some(&r(2)));
         let rounds: Vec<Round> = merged[&0].keys().copied().collect();
         assert_eq!(rounds, vec![r(2), r(3), r(4)]);
+    }
+
+    #[test]
+    fn crash_recovery_restores_log_watermarks_and_lifecycle() {
+        use crate::storage::MemStorage;
+        let mut m = Matchmaker::new(0);
+        m.attach_storage(Box::new(MemStorage::new()));
+        for i in [0u64, 1, 2, 3] {
+            run(&mut m, match_a(r(i), cfg(i)));
+        }
+        run(&mut m, Msg::GarbageA { group: 0, round: r(2) });
+        run(&mut m, Msg::MetaPhase1A { round: r(0), generation: 0 });
+        run(
+            &mut m,
+            Msg::MetaPhase2A { round: r(0), generation: 0, matchmakers: vec![4, 5, 6] },
+        );
+        // "kill -9": only the disk survives.
+        let disk = m.take_storage().unwrap();
+        let mut n = Matchmaker::new(0);
+        n.attach_storage(disk);
+        n.recover();
+        assert_eq!(n.group_log_len(0), 2); // rounds 2 and 3, as pre-crash
+        assert_eq!(n.gc_watermarks.get(&0), Some(&r(2)));
+        assert!(n.active && !n.stopped);
+        // Restored and pre-crash state render identically.
+        assert_eq!(m.state_repr(), n.state_repr());
+        // The restored matchmaker keeps its promises: a round below the
+        // watermark is still refused, and the meta vote is still seen.
+        let out = run(&mut n, match_a(r(1), cfg(1)));
+        assert_eq!(out[0], Msg::MatchNack { group: 0, round: r(1), blocking: r(2) });
+        let out = run(&mut n, Msg::MetaPhase1A { round: r(1), generation: 0 });
+        assert_eq!(
+            out[0],
+            Msg::MetaPhase1B { round: r(1), vr: Some(r(0)), vv: Some(vec![4, 5, 6]) }
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::config::SnapshotSpec;
 use crate::msg::{Command, Msg, Value};
 use crate::node::{Announce, Effects, Node, Timer};
 use crate::statemachine::StateMachine;
+use crate::storage::{Storage, WalRecord};
 use crate::{GroupId, NodeId, Slot, Time, MS, SEC};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
@@ -45,6 +46,42 @@ pub struct ClientHistory {
 /// How long a replica waits for a `SnapshotResp` before re-requesting
 /// (the response may be lost on a lossy network).
 const CATCHUP_RETRY: Time = 50 * MS;
+
+/// Default size of one `SnapshotChunk` payload. Large enough that the
+/// per-chunk overhead is negligible, small enough that a chunk never
+/// approaches the network frame cap ([`crate::net`]'s `MAX_FRAME`) no
+/// matter how big the snapshotted state grows.
+const SNAPSHOT_CHUNK: usize = 256 << 10;
+
+/// Retry ticks a chunk assembly may sit with no new chunk before it is
+/// abandoned (the sender likely died mid-stream) and catch-up falls
+/// back to rotating `SnapshotRequest`s. The first silent tick resumes
+/// the stream via `SnapshotResume` instead of giving up — one lost
+/// chunk must not restart a multi-megabyte transfer from scratch.
+const MAX_RESUME_STALLS: u32 = 3;
+
+/// An in-progress chunked snapshot transfer (receiver side). Chunks
+/// are applied strictly in order; `next_seq` doubles as the resume
+/// cursor sent in [`Msg::SnapshotResume`] when the stream stalls.
+#[derive(Debug)]
+struct ChunkAssembly {
+    /// Peer streaming the snapshot.
+    peer: NodeId,
+    /// Snapshot base: the assembled state covers slots `< base`.
+    base: Slot,
+    /// Total chunks in this transfer.
+    total: u32,
+    /// Next expected chunk seq (== number of chunks received).
+    next_seq: u32,
+    /// Assembled snapshot bytes.
+    buf: Vec<u8>,
+    /// Consecutive retry ticks without progress (see
+    /// [`MAX_RESUME_STALLS`]).
+    stalls: u32,
+    /// `next_seq` observed at the previous retry tick (progress
+    /// detector: a flowing stream never triggers a resume).
+    seq_at_last_tick: u32,
+}
 
 /// How often pending reads are re-driven: a lost `ReadIndexReq`/`Resp`
 /// is re-sent (rotating the leader target) and lapsed-lease reads fall
@@ -164,6 +201,18 @@ pub struct Replica {
     /// Whether a `CatchupRetry` timer is outstanding (one chain at a
     /// time, same idiom as the leader's Phase 2 watchdog).
     catchup_timer_armed: bool,
+    /// Size of one outgoing `SnapshotChunk` payload (tests shrink it
+    /// to force multi-chunk transfers).
+    pub chunk_bytes: usize,
+    /// In-progress chunked snapshot assembly, if any.
+    assembly: Option<ChunkAssembly>,
+    /// Durable chosen-log + snapshot store (`None` in sim/model-checker
+    /// runs; the TCP runtime attaches a WAL). Every fresh chosen entry
+    /// is appended *before* it can influence a `ReplicaAck`, and every
+    /// periodic snapshot is stored before the record log is truncated
+    /// to the retained tail — so `kill -9` at any instant loses nothing
+    /// the replica ever acknowledged (DESIGN.md §Durability).
+    storage: Option<Box<dyn Storage>>,
 }
 
 impl Replica {
@@ -198,7 +247,110 @@ impl Replica {
             last_snapshot: None,
             catchup: None,
             catchup_timer_armed: false,
+            chunk_bytes: SNAPSHOT_CHUNK,
+            assembly: None,
+            storage: None,
         }
+    }
+
+    // =====================================================================
+    // Durability (DESIGN.md §Durability)
+    // =====================================================================
+
+    /// Attach a durable store. Call before `on_start`; combine with
+    /// [`Replica::recover`] when the directory may hold state from a
+    /// previous incarnation.
+    pub fn attach_storage(&mut self, storage: Box<dyn Storage>) {
+        self.storage = Some(storage);
+    }
+
+    /// Detach and return the durable store (crash simulation: the
+    /// "disk" survives the process, so tests move it into a fresh
+    /// instance).
+    pub fn take_storage(&mut self) -> Option<Box<dyn Storage>> {
+        self.storage.take()
+    }
+
+    /// Append `rec` to the attached log, if any. A storage failure is
+    /// fatal by design: a replica that cannot persist must stop
+    /// executing and acking.
+    fn persist(&mut self, rec: WalRecord) {
+        if let Some(s) = self.storage.as_mut() {
+            s.append(&rec).expect("replica wal append failed");
+        }
+    }
+
+    /// Rewrite the durable record log to the retained chosen tail —
+    /// watermark-driven truncation of the replica's WAL, mirroring the
+    /// in-memory `log` truncation. Everything below the truncation
+    /// floor is covered by the stored snapshot.
+    fn compact_storage(&mut self) {
+        if self.storage.is_none() {
+            return;
+        }
+        let live: Vec<WalRecord> = self
+            .log
+            .iter()
+            .map(|(&slot, v)| WalRecord::Chosen { slot, value: v.clone() })
+            .collect();
+        let s = self.storage.as_mut().unwrap();
+        s.compact(&live).expect("replica wal compact failed");
+    }
+
+    /// Durably store a snapshot covering slots `< base`, then truncate
+    /// the record log to the retained tail. The snapshot lands first:
+    /// a crash between the two leaves a WAL that still covers
+    /// everything the snapshot does (replay is idempotent), never a
+    /// gap.
+    fn store_snapshot(&mut self, base: Slot, bytes: &[u8]) {
+        if self.storage.is_none() {
+            return;
+        }
+        self.storage
+            .as_mut()
+            .unwrap()
+            .put_snapshot(base, bytes)
+            .expect("replica snapshot store failed");
+        self.compact_storage();
+    }
+
+    /// Rebuild executed state after a crash: install the newest durable
+    /// snapshot, re-insert the durable chosen tail, and re-execute it
+    /// *quietly* — the state machine, dedup table, and watermarks all
+    /// advance, but no client replies or leader acks are emitted (the
+    /// pre-crash incarnation already sent them; recovery must not
+    /// re-publish).
+    pub fn recover(&mut self) {
+        let (snap, recs) = {
+            let Some(s) = self.storage.as_mut() else {
+                return;
+            };
+            let snap = s.load_snapshot().expect("replica snapshot load failed");
+            let recs = s.replay().expect("replica wal replay failed");
+            (snap, recs)
+        };
+        if let Some((base, bytes)) = snap {
+            assert!(
+                self.install_snapshot(base, &bytes),
+                "durable snapshot failed to install (corrupt store)"
+            );
+            // The recovered replica can serve snapshot catch-up again
+            // right away.
+            self.last_snapshot = Some((base, bytes));
+        }
+        for rec in recs {
+            if let WalRecord::Chosen { slot, value } = rec {
+                if slot >= self.truncated_below {
+                    self.log.entry(slot).or_insert(value);
+                }
+            }
+        }
+        self.max_log_len = self.max_log_len.max(self.log.len());
+        let mut quiet = Effects::new();
+        self.execute_ready(self.id, &mut quiet);
+        // Re-establish the durable live set (the snapshot install path
+        // is storage-pure, so the tail on disk may predate it).
+        self.compact_storage();
     }
 
     /// Execute every contiguous chosen slot, reply to clients, and ack the
@@ -337,7 +489,17 @@ impl Replica {
         }
         let upto = self.exec_watermark;
         if upto > self.last_snapshot.as_ref().map_or(0, |(s, _)| *s) {
-            self.last_snapshot = Some((upto, self.encode_snapshot()));
+            let bytes = self.encode_snapshot();
+            // Durable store first: the WAL truncation below must never
+            // outrun the snapshot that covers what it drops.
+            if self.storage.is_some() {
+                self.storage
+                    .as_mut()
+                    .unwrap()
+                    .put_snapshot(upto, &bytes)
+                    .expect("replica snapshot store failed");
+            }
+            self.last_snapshot = Some((upto, bytes));
             self.snapshots_taken += 1;
             fx.announce(Announce::SnapshotTaken { replica: self.id, upto });
             let floor = upto.saturating_sub(self.snapshot.tail);
@@ -353,6 +515,7 @@ impl Replica {
                     exec: self.exec_watermark,
                 });
             }
+            self.compact_storage();
         }
         fx.timer(self.snapshot.interval, Timer::SnapshotTick);
     }
@@ -472,6 +635,69 @@ impl Replica {
             None => candidates[0],
         }
     }
+
+    /// Stream `state` (covering slots `< base`) to `to` as ordered
+    /// [`Msg::SnapshotChunk`]s, starting at chunk `from_seq` — 0 for a
+    /// fresh transfer, the receiver's cursor for a resume. The sender
+    /// keeps no per-receiver state: a resume re-chunks the cached
+    /// snapshot bytes, which is what makes resumption after a
+    /// *receiver* restart possible at all.
+    fn send_chunks(&self, to: NodeId, base: Slot, state: &[u8], from_seq: u32, fx: &mut Effects) {
+        let size = self.chunk_bytes.max(1);
+        if state.is_empty() {
+            // Degenerate but legal: one empty chunk keeps the receiver
+            // protocol uniform.
+            if from_seq == 0 {
+                fx.send(to, Msg::SnapshotChunk { base, seq: 0, total: 1, bytes: Vec::new() });
+            }
+            return;
+        }
+        let total = state.chunks(size).len() as u32;
+        for (seq, chunk) in state.chunks(size).enumerate() {
+            let seq = seq as u32;
+            if seq < from_seq {
+                continue;
+            }
+            fx.send(to, Msg::SnapshotChunk { base, seq, total, bytes: chunk.to_vec() });
+        }
+    }
+
+    /// Serve snapshot-plus-tail catch-up to `to`, whose applied prefix
+    /// is `req_from`. When the retained log alone covers the gap, a
+    /// single entries-only `SnapshotResp` suffices; otherwise the state
+    /// snapshot is streamed as ordered `SnapshotChunk`s and the
+    /// requester fetches the entries tail with a follow-up
+    /// `SnapshotRequest` once it installs the assembled state.
+    fn serve_snapshot_request(&mut self, to: NodeId, req_from: Slot, fx: &mut Effects) {
+        if req_from >= self.truncated_below {
+            let entries: Vec<(Slot, Value)> = if req_from < self.exec_watermark {
+                self.log
+                    .range(req_from..self.exec_watermark)
+                    .map(|(s, v)| (*s, v.clone()))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            fx.send(to, Msg::SnapshotResp { base: req_from, state: Vec::new(), entries });
+            return;
+        }
+        // The stored snapshot must also cover our own truncation floor
+        // (it can briefly lag right after we installed a peer snapshot
+        // ourselves) or the tail would have gaps.
+        let (base, state) = match &self.last_snapshot {
+            Some((s, bytes)) if *s > req_from && *s >= self.truncated_below => {
+                (*s, bytes.clone())
+            }
+            _ => {
+                let state = self.encode_snapshot();
+                // Cache it: a mid-transfer `SnapshotResume` for this
+                // base must be able to re-chunk the identical bytes.
+                self.last_snapshot = Some((self.exec_watermark, state.clone()));
+                (self.exec_watermark, state)
+            }
+        };
+        self.send_chunks(to, base, &state, 0, fx);
+    }
 }
 
 /// Execute a run of commands from one slot: deduplicate retries
@@ -545,8 +771,16 @@ impl Node for Replica {
                 // Idempotent insert: chosen values never conflict (safety),
                 // so a duplicate insert is a no-op. Slots below the
                 // truncation floor are already covered by the snapshot.
+                // Fresh entries hit the durable log *before* they can
+                // influence the `ReplicaAck` below (fsync-before-ack:
+                // the leader GC-truncates on the strength of our acks).
                 if slot >= self.truncated_below {
-                    self.log.entry(slot).or_insert(value);
+                    if !self.log.contains_key(&slot) {
+                        if self.storage.is_some() {
+                            self.persist(WalRecord::Chosen { slot, value: value.clone() });
+                        }
+                        self.log.insert(slot, value);
+                    }
                     self.max_log_len = self.max_log_len.max(self.log.len());
                 }
                 let before = self.exec_watermark;
@@ -601,30 +835,94 @@ impl Node for Replica {
             }
             // Serve snapshot-plus-tail catch-up. When the retained log
             // alone covers the requester's gap, skip the state transfer
-            // entirely and ship just the entries; otherwise send the
+            // entirely and ship just the entries; otherwise stream the
             // stored periodic snapshot (or a fresh one at the current
-            // watermark) plus every retained chosen entry above its base.
+            // watermark) as ordered chunks.
             Msg::SnapshotRequest { from: req_from } => {
-                let (base, state) = if req_from >= self.truncated_below {
-                    (req_from, Vec::new())
+                self.serve_snapshot_request(from, req_from, fx);
+            }
+            // A mid-transfer receiver asking us to re-send from its
+            // cursor. If we still hold the snapshot it was receiving,
+            // resume exactly there; otherwise (we restarted, or a newer
+            // snapshot replaced it) restart the transfer from our
+            // current best — the receiver discards chunks for the
+            // now-stale base and assembles the new one.
+            Msg::SnapshotResume { base, next } => {
+                let resumable = matches!(&self.last_snapshot, Some((s, _)) if *s == base);
+                if resumable {
+                    let (_, bytes) = self.last_snapshot.as_ref().expect("checked above");
+                    self.send_chunks(from, base, bytes, next, fx);
                 } else {
-                    // The stored snapshot must also cover our own
-                    // truncation floor (it can briefly lag right after we
-                    // installed a peer snapshot ourselves) or the tail
-                    // would have gaps.
-                    match &self.last_snapshot {
-                        Some((s, bytes)) if *s > req_from && *s >= self.truncated_below => {
-                            (*s, bytes.clone())
-                        }
-                        _ => (self.exec_watermark, self.encode_snapshot()),
-                    }
+                    self.serve_snapshot_request(from, 0, fx);
+                }
+            }
+            // One chunk of a peer's snapshot stream. Strictly in-order
+            // assembly: a gap parks the transfer until the retry tick
+            // sends a `SnapshotResume` from the cursor.
+            Msg::SnapshotChunk { base, seq, total, bytes } => {
+                if base <= self.exec_watermark || total == 0 {
+                    return; // stale transfer (or nonsense): already past it
+                }
+                let fresh_needed = match &self.assembly {
+                    Some(a) => a.peer != from || a.base != base || a.total != total,
+                    None => true,
                 };
-                let entries: Vec<(Slot, Value)> = self
-                    .log
-                    .range(base..self.exec_watermark)
-                    .map(|(s, v)| (*s, v.clone()))
-                    .collect();
-                fx.send(from, Msg::SnapshotResp { base, state, entries });
+                if fresh_needed {
+                    if seq != 0 {
+                        // Mid-stream chunk of a transfer we are not
+                        // assembling (we restarted, or abandoned it):
+                        // ask for the prefix we are missing.
+                        fx.send(from, Msg::SnapshotResume { base, next: 0 });
+                        return;
+                    }
+                    self.assembly = Some(ChunkAssembly {
+                        peer: from,
+                        base,
+                        total,
+                        next_seq: 0,
+                        buf: Vec::new(),
+                        stalls: 0,
+                        seq_at_last_tick: 0,
+                    });
+                }
+                let a = self.assembly.as_mut().expect("assembly ensured above");
+                if seq != a.next_seq {
+                    return; // duplicate or gap; the retry tick resumes
+                }
+                a.buf.extend_from_slice(&bytes);
+                a.next_seq += 1;
+                // Streaming counts as catch-up progress (quiets the
+                // rotating-request retry path while chunks flow).
+                if let Some(c) = &mut self.catchup {
+                    c.2 = now;
+                }
+                if a.next_seq < a.total {
+                    // Stall insurance even when no leader CatchUp armed
+                    // the chain (e.g. an unsolicited restarted transfer).
+                    if !self.catchup_timer_armed {
+                        self.catchup_timer_armed = true;
+                        fx.timer(CATCHUP_RETRY, Timer::CatchupRetry);
+                    }
+                    return;
+                }
+                let ChunkAssembly { base, buf, .. } =
+                    self.assembly.take().expect("assembly complete");
+                if !self.install_snapshot(base, &buf) {
+                    return; // malformed: the retry path re-requests
+                }
+                self.store_snapshot(base, &buf);
+                self.snapshots_installed += 1;
+                fx.announce(Announce::SnapshotInstalled { replica: self.id, base });
+                // The applied prefix jumped to `base`: resolved reads
+                // waiting on it may now be servable.
+                self.serve_ready_reads(fx);
+                // Fetch the chosen tail above the base (entries-only
+                // path on the sender, since `base >= truncated_below`
+                // there).
+                fx.send(from, Msg::SnapshotRequest { from: self.exec_watermark });
+                if let Some(c) = &mut self.catchup {
+                    c.2 = now;
+                }
             }
             Msg::SnapshotResp { base, state, entries } => {
                 let before = self.exec_watermark;
@@ -632,12 +930,16 @@ impl Node for Replica {
                     if !self.install_snapshot(base, &state) {
                         return;
                     }
+                    self.store_snapshot(base, &state);
                     self.snapshots_installed += 1;
                     fx.announce(Announce::SnapshotInstalled { replica: self.id, base });
                 }
                 for (slot, value) in entries {
-                    if slot >= self.truncated_below {
-                        self.log.entry(slot).or_insert(value);
+                    if slot >= self.truncated_below && !self.log.contains_key(&slot) {
+                        if self.storage.is_some() {
+                            self.persist(WalRecord::Chosen { slot, value: value.clone() });
+                        }
+                        self.log.insert(slot, value);
                     }
                 }
                 self.max_log_len = self.max_log_len.max(self.log.len());
@@ -787,22 +1089,53 @@ impl Node for Replica {
             }
             Timer::CatchupRetry => {
                 self.catchup_timer_armed = false;
-                let Some((peer, below, last)) = self.catchup else {
-                    return;
-                };
-                if self.exec_watermark >= below {
-                    self.catchup = None;
-                    return;
+                // Drop state that caught up some other way.
+                if self.assembly.as_ref().map_or(false, |a| a.base <= self.exec_watermark) {
+                    self.assembly = None;
                 }
-                if now.saturating_sub(last) >= CATCHUP_RETRY {
-                    // No response within the window: the peer may be slow,
-                    // the message lost, or the peer dead — rotate.
-                    let peer = self.next_peer(peer);
-                    self.catchup = Some((peer, below, now));
-                    fx.send(peer, Msg::SnapshotRequest { from: self.exec_watermark });
+                if let Some((_, below, _)) = self.catchup {
+                    if self.exec_watermark >= below {
+                        self.catchup = None;
+                    }
                 }
-                self.catchup_timer_armed = true;
-                fx.timer(CATCHUP_RETRY, Timer::CatchupRetry);
+                // An in-flight chunk assembly owns the retry slot: while
+                // the stream flows nothing is sent; on the first silent
+                // ticks the transfer resumes from the cursor; after
+                // MAX_RESUME_STALLS silent ticks the sender is presumed
+                // dead and catch-up falls back to peer rotation below.
+                let mut rotate = self.catchup.is_some();
+                if let Some(a) = &mut self.assembly {
+                    if a.next_seq > a.seq_at_last_tick {
+                        a.seq_at_last_tick = a.next_seq;
+                        a.stalls = 0;
+                        rotate = false;
+                    } else {
+                        a.stalls += 1;
+                        if a.stalls < MAX_RESUME_STALLS {
+                            let (peer, base, next) = (a.peer, a.base, a.next_seq);
+                            fx.send(peer, Msg::SnapshotResume { base, next });
+                            rotate = false;
+                        } else {
+                            self.assembly = None;
+                        }
+                    }
+                }
+                if rotate {
+                    if let Some((peer, below, last)) = self.catchup {
+                        if now.saturating_sub(last) >= CATCHUP_RETRY {
+                            // No response within the window: the peer may
+                            // be slow, the message lost, or the peer dead
+                            // — rotate.
+                            let peer = self.next_peer(peer);
+                            self.catchup = Some((peer, below, now));
+                            fx.send(peer, Msg::SnapshotRequest { from: self.exec_watermark });
+                        }
+                    }
+                }
+                if self.catchup.is_some() || self.assembly.is_some() {
+                    self.catchup_timer_armed = true;
+                    fx.timer(CATCHUP_RETRY, Timer::CatchupRetry);
+                }
             }
             _ => {}
         }
@@ -843,6 +1176,11 @@ impl Node for Replica {
         }
         if let Some((peer, target, _)) = &self.catchup {
             let _ = write!(s, " cu={peer}->{target}");
+        }
+        // The attached durable store is deliberately excluded: it is a
+        // mirror of this state, not additional state.
+        if let Some(a) = &self.assembly {
+            let _ = write!(s, " asm={}@{}:{}/{}", a.peer, a.base, a.next_seq, a.total);
         }
         Some(s)
     }
@@ -1116,20 +1454,39 @@ mod tests {
         fresh.on_msg(10 * MS + 2 * CATCHUP_RETRY, 0, Msg::CatchUp { below: 16, peer: 1 }, &mut fx3);
         assert_eq!(fx3.msgs.len(), 1);
 
-        // The peer serves snapshot-plus-tail; the fresh replica installs
-        // it and converges to the same state without re-executing.
+        // The peer streams its stored snapshot as chunks; the fresh
+        // replica assembles and installs it, then fetches the entries
+        // tail, converging without re-executing.
         let resp = deliver(&mut peer, 2, Msg::SnapshotRequest { from: 0 });
-        let (base, state, entries) = match &resp.msgs[0] {
-            (2, Msg::SnapshotResp { base, state, entries }) => {
-                (*base, state.clone(), entries.clone())
+        let (base, seq, total, bytes) = match &resp.msgs[0] {
+            (2, Msg::SnapshotChunk { base, seq, total, bytes }) => {
+                (*base, *seq, *total, bytes.clone())
             }
             other => panic!("{other:?}"),
         };
         assert_eq!(base, 20, "stored snapshot covers the full executed prefix");
-        assert!(entries.is_empty(), "nothing above the snapshot base yet");
-        let fx4 = deliver(&mut fresh, 1, Msg::SnapshotResp { base, state, entries });
+        assert_eq!((seq, total), (0, 1), "small state fits one chunk");
+        let fx4 = deliver(&mut fresh, 1, Msg::SnapshotChunk { base, seq, total, bytes });
         assert_eq!(fresh.exec_watermark, 20);
         assert_eq!(fresh.snapshots_installed, 1);
+        // The install triggers the entries-tail fetch; the peer answers
+        // entries-only (nothing above the base yet).
+        assert!(
+            fx4.msgs
+                .iter()
+                .any(|(to, m)| *to == 1 && matches!(m, Msg::SnapshotRequest { from: 20 })),
+            "{:?}",
+            fx4.msgs
+        );
+        let tail = deliver(&mut peer, 2, Msg::SnapshotRequest { from: 20 });
+        match &tail.msgs[0].1 {
+            Msg::SnapshotResp { base: 20, state, entries } => {
+                assert!(state.is_empty() && entries.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        let tail_resp = tail.msgs[0].1.clone();
+        deliver(&mut fresh, 1, tail_resp);
         // Caught up past the target: the catch-up state cleared, so the
         // pending retry timer becomes a no-op.
         let mut fxq = Effects::new();
@@ -1200,6 +1557,143 @@ mod tests {
         );
         assert_eq!(r.exec_watermark, 10);
         assert_eq!(r.snapshots_installed, 0);
+    }
+
+    // ---- Durability (DESIGN.md §Durability) ----
+
+    fn deliver_at(r: &mut Replica, from: NodeId, m: Msg, now: Time) -> Effects {
+        let mut fx = Effects::new();
+        r.on_msg(now, from, m, &mut fx);
+        fx
+    }
+
+    #[test]
+    fn crash_recovery_restores_snapshot_and_chosen_tail() {
+        use crate::storage::MemStorage;
+        let mut r = snapshotting_replica(4);
+        r.attach_storage(Box::new(MemStorage::new()));
+        for s in 0..10 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        tick(&mut r, MS); // snapshot at 10, truncate below 6, compact the WAL
+        for s in 10..12 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        let digest = r.sm.digest();
+        // kill -9: the disk survives, the process state does not.
+        let disk = r.take_storage().expect("storage attached");
+        let mut b = snapshotting_replica(4);
+        b.attach_storage(disk);
+        b.recover();
+        assert_eq!(b.exec_watermark, 12);
+        assert_eq!(b.sm.digest(), digest);
+        assert_eq!(b.client_table[&7].highest, 12, "dedup cursor survives the crash");
+        assert_eq!(b.snapshots_taken, 0, "recovery installs, it does not re-snapshot");
+        // Exactly-once survives the crash: a re-chosen pre-crash command
+        // is deduped (cached reply, no re-execution).
+        let executed = b.executed;
+        let fx = deliver(&mut b, 0, Msg::Chosen { slot: 12, value: cmd(7, 12, b"skv") });
+        assert_eq!(b.executed, executed, "retry must not re-execute after recovery");
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 7 && matches!(m, Msg::ClientReply { seq: 12, .. })));
+        // And fresh commands continue from the recovered watermark.
+        deliver(&mut b, 0, Msg::Chosen { slot: 13, value: cmd(7, 13, b"skv") });
+        assert_eq!(b.exec_watermark, 14);
+    }
+
+    #[test]
+    fn chunked_transfer_resumes_from_cursor_after_loss() {
+        let mut peer = snapshotting_replica(4);
+        for s in 0..20 {
+            deliver(&mut peer, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        tick(&mut peer, MS);
+        peer.chunk_bytes = 16; // force a many-chunk transfer
+        let mut fresh = snapshotting_replica(4);
+        fresh.id = 2;
+        let mut fx = Effects::new();
+        fresh.on_msg(10 * MS, 0, Msg::CatchUp { below: 16, peer: 1 }, &mut fx);
+        let chunks: Vec<Msg> = deliver(&mut peer, 2, Msg::SnapshotRequest { from: 0 })
+            .msgs
+            .into_iter()
+            .map(|(_, m)| m)
+            .collect();
+        assert!(chunks.len() >= 3, "chunk size 16 must split the state: {}", chunks.len());
+        match &chunks[0] {
+            Msg::SnapshotChunk { total, .. } => assert_eq!(*total as usize, chunks.len()),
+            other => panic!("{other:?}"),
+        }
+        // Deliver only the first two chunks; the rest are "lost".
+        for c in chunks.iter().take(2) {
+            deliver_at(&mut fresh, 1, c.clone(), 11 * MS);
+        }
+        assert_eq!(fresh.snapshots_installed, 0);
+        // First retry tick: the stream made progress since the last
+        // tick — no resume yet.
+        let mut fx1 = Effects::new();
+        fresh.on_timer(11 * MS + CATCHUP_RETRY, Timer::CatchupRetry, &mut fx1);
+        assert!(fx1.msgs.is_empty(), "{:?}", fx1.msgs);
+        // Second tick: stalled — resume from the cursor (chunk 2).
+        let mut fx2 = Effects::new();
+        fresh.on_timer(11 * MS + 2 * CATCHUP_RETRY, Timer::CatchupRetry, &mut fx2);
+        let resume = fx2.msgs.iter().find_map(|(to, m)| match m {
+            Msg::SnapshotResume { base, next } => Some((*to, *base, *next)),
+            _ => None,
+        });
+        assert_eq!(resume, Some((1, 20, 2)));
+        // The peer re-sends exactly the missing suffix, from the cursor.
+        let rest = deliver(&mut peer, 2, Msg::SnapshotResume { base: 20, next: 2 });
+        assert_eq!(rest.msgs.len(), chunks.len() - 2);
+        match &rest.msgs[0].1 {
+            Msg::SnapshotChunk { seq: 2, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        for (_, m) in rest.msgs {
+            deliver_at(&mut fresh, 1, m, 200 * MS);
+        }
+        assert_eq!(fresh.snapshots_installed, 1);
+        assert_eq!(fresh.exec_watermark, 20);
+        assert_eq!(fresh.sm.digest(), peer.sm.digest());
+    }
+
+    #[test]
+    fn resume_for_unknown_base_restarts_transfer() {
+        let mut r = Replica::new(1, Box::new(KvStore::new()));
+        for s in 0..5 {
+            deliver(&mut r, 0, Msg::Chosen { slot: s, value: cmd(7, s + 1, b"skv") });
+        }
+        // The sender restarted (or replaced its snapshot): a resume for
+        // a base it no longer holds restarts the transfer from its
+        // current best — nothing truncated here, so entries-only.
+        let fx = deliver(&mut r, 9, Msg::SnapshotResume { base: 99, next: 3 });
+        match &fx.msgs[0].1 {
+            Msg::SnapshotResp { base: 0, state, entries } => {
+                assert!(state.is_empty());
+                assert_eq!(entries.len(), 5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_stream_chunk_after_receiver_restart_requests_prefix() {
+        let mut r = snapshotting_replica(4);
+        // A chunk with seq > 0 for a transfer we are not assembling
+        // (receiver restart lost the partial buffer): ask the sender to
+        // re-send from chunk 0 rather than dropping the stream.
+        let fx = deliver(&mut r, 1, Msg::SnapshotChunk {
+            base: 50,
+            seq: 3,
+            total: 8,
+            bytes: vec![1, 2],
+        });
+        assert!(fx
+            .msgs
+            .iter()
+            .any(|(to, m)| *to == 1 && matches!(m, Msg::SnapshotResume { base: 50, next: 0 })));
+        assert_eq!(r.pending_read_count(), 0);
     }
 
     // ---- Linearizable reads ----

@@ -1,0 +1,503 @@
+//! Durable storage for role state (DESIGN.md §Durability).
+//!
+//! The paper's reconfiguration machinery assumes acceptor promises/votes
+//! and matchmaker logs survive the crash of the machine that holds them —
+//! Phase 1's `P1 ∩ P2` intersection argument (§3.2) and the Figure-7
+//! matchmaker merge are both *about* state that outlives a process. This
+//! module makes that assumption true on the TCP runtime: every role's
+//! durable state is a stream of [`WalRecord`]s behind the [`Storage`]
+//! trait, with two implementations:
+//!
+//! * [`MemStorage`] — an in-memory record log. Keeps the simulator and
+//!   model checker fast and allocation-light while still letting crash/
+//!   restart tests replay "disk" state into a fresh role instance.
+//! * [`wal::WalStorage`] — fsync'd, CRC-framed, length-prefixed segment
+//!   files with rotation and watermark-driven compaction (reusing the
+//!   §5 GC watermarks). This is what `repro run --data-dir` attaches, so
+//!   any role can be `kill -9`'d and rejoin with identical state (the
+//!   X10 experiment).
+//!
+//! The contract every role relies on: [`Storage::append`] returns only
+//! after the record is durable (fsync-before-ack), and
+//! [`Storage::replay`] returns the longest valid record prefix — a torn
+//! tail from a mid-write crash is detected by the CRC frame and cleanly
+//! truncated, never replayed as garbage.
+//!
+//! Record framing in a segment file (all integers little-endian, like
+//! [`crate::codec`]):
+//!
+//! ```text
+//! [u32 len][u32 crc32(body)][body: WalRecord wire encoding]
+//! ```
+
+use crate::codec::{CodecError, Dec, Enc, Wire};
+use crate::config::Configuration;
+use crate::msg::Value;
+use crate::round::Round;
+use crate::{GroupId, NodeId, Slot};
+use std::fmt;
+
+pub mod wal;
+
+pub use wal::{WalOptions, WalStorage};
+
+/// Largest record body accepted on replay (matches the codec's own
+/// [`Dec::bytes`] cap — anything bigger is treated as corruption).
+pub const MAX_RECORD: usize = 64 << 20;
+
+/// A storage failure. I/O errors are fatal for a durability layer (a
+/// role that cannot persist must stop acking, so callers `expect` these);
+/// corruption is *not* an error — [`Storage::replay`] absorbs it by
+/// truncating to the valid prefix.
+#[derive(Debug)]
+pub enum StorageError {
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+    /// A record failed to re-encode/decode outside the replay path.
+    Codec(String),
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StorageError::Io(e) => write!(f, "storage io: {e}"),
+            StorageError::Codec(e) => write!(f, "storage codec: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+impl From<std::io::Error> for StorageError {
+    fn from(e: std::io::Error) -> StorageError {
+        StorageError::Io(e)
+    }
+}
+
+/// One durable state transition. Each role appends exactly the records
+/// that its safety argument needs to survive a crash (the map lives in
+/// DESIGN.md §Durability):
+///
+/// * acceptor — `Promise` / `Vote` / `Watermark` (Algorithm 2's `r`,
+///   per-slot `(vr, vv)`, and the §5.3 chosen-prefix watermark)
+/// * matchmaker — `MmEntry` / `MmGcWatermark` / `MmLifecycle` /
+///   `MetaPromise` / `MetaVote` (the `(group, round) → config` log,
+///   per-group GC watermarks, §6 stop/bootstrap generation, and the
+///   meta-Paxos acceptor state)
+/// * leader — `LeaderEpoch` (the active-config epoch, so a restarted
+///   leader re-elects above every round it ever used)
+/// * replica — `Chosen` (the chosen tail above the last snapshot; the
+///   snapshot itself goes through [`Storage::put_snapshot`])
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// Acceptor promise: largest round seen.
+    Promise { round: Round },
+    /// Acceptor per-slot vote.
+    Vote { slot: Slot, vr: Round, vv: Value },
+    /// Acceptor chosen-prefix watermark (`PrefixPersisted`).
+    Watermark { upto: Slot },
+    /// Matchmaker log entry: `(group, round) → configuration`.
+    MmEntry { group: GroupId, round: Round, config: Configuration },
+    /// Matchmaker per-group GC watermark (Algorithm 4).
+    MmGcWatermark { group: GroupId, round: Round },
+    /// Matchmaker §6 lifecycle: generation + stopped/active flags.
+    MmLifecycle { generation: u64, stopped: bool, active: bool },
+    /// Leader active-config epoch: the round + configuration activated.
+    LeaderEpoch { group: GroupId, round: Round, config: Configuration },
+    /// Replica chosen-log entry (the tail above the last snapshot).
+    Chosen { slot: Slot, value: Value },
+    /// Matchmaker meta-Paxos promise (§6), keyed by the instance's
+    /// generation (instance g chooses generation g+1).
+    MetaPromise { generation: u64, round: Round },
+    /// Matchmaker meta-Paxos vote (§6): the new matchmaker set.
+    MetaVote { generation: u64, vr: Round, set: Vec<NodeId> },
+}
+
+impl Wire for WalRecord {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            WalRecord::Promise { round } => {
+                e.u8(0);
+                round.enc(e);
+            }
+            WalRecord::Vote { slot, vr, vv } => {
+                e.u8(1);
+                e.u64(*slot);
+                vr.enc(e);
+                vv.enc(e);
+            }
+            WalRecord::Watermark { upto } => {
+                e.u8(2);
+                e.u64(*upto);
+            }
+            WalRecord::MmEntry { group, round, config } => {
+                e.u8(3);
+                e.u32(*group);
+                round.enc(e);
+                config.enc(e);
+            }
+            WalRecord::MmGcWatermark { group, round } => {
+                e.u8(4);
+                e.u32(*group);
+                round.enc(e);
+            }
+            WalRecord::MmLifecycle { generation, stopped, active } => {
+                e.u8(5);
+                e.u64(*generation);
+                e.bool(*stopped);
+                e.bool(*active);
+            }
+            WalRecord::LeaderEpoch { group, round, config } => {
+                e.u8(6);
+                e.u32(*group);
+                round.enc(e);
+                config.enc(e);
+            }
+            WalRecord::Chosen { slot, value } => {
+                e.u8(7);
+                e.u64(*slot);
+                value.enc(e);
+            }
+            WalRecord::MetaPromise { generation, round } => {
+                e.u8(8);
+                e.u64(*generation);
+                round.enc(e);
+            }
+            WalRecord::MetaVote { generation, vr, set } => {
+                e.u8(9);
+                e.u64(*generation);
+                vr.enc(e);
+                set.enc(e);
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, CodecError> {
+        Ok(match d.u8()? {
+            0 => WalRecord::Promise { round: Round::dec(d)? },
+            1 => WalRecord::Vote { slot: d.u64()?, vr: Round::dec(d)?, vv: Value::dec(d)? },
+            2 => WalRecord::Watermark { upto: d.u64()? },
+            3 => WalRecord::MmEntry {
+                group: d.u32()?,
+                round: Round::dec(d)?,
+                config: Configuration::dec(d)?,
+            },
+            4 => WalRecord::MmGcWatermark { group: d.u32()?, round: Round::dec(d)? },
+            5 => WalRecord::MmLifecycle {
+                generation: d.u64()?,
+                stopped: d.bool()?,
+                active: d.bool()?,
+            },
+            6 => WalRecord::LeaderEpoch {
+                group: d.u32()?,
+                round: Round::dec(d)?,
+                config: Configuration::dec(d)?,
+            },
+            7 => WalRecord::Chosen { slot: d.u64()?, value: Value::dec(d)? },
+            8 => WalRecord::MetaPromise { generation: d.u64()?, round: Round::dec(d)? },
+            9 => WalRecord::MetaVote {
+                generation: d.u64()?,
+                vr: Round::dec(d)?,
+                set: Vec::<NodeId>::dec(d)?,
+            },
+            t => return Err(crate::codec::CodecError(format!("unknown wal record tag {t}"))),
+        })
+    }
+}
+
+/// Durable role state behind a uniform interface. `append` must be
+/// durable when it returns (that ordering — persist, then ack — is what
+/// makes Phase-1 recovery sound, see DESIGN.md §Durability); `replay`
+/// returns every surviving record in append order; `compact` atomically
+/// replaces the whole log with the given live set (watermark-driven
+/// truncation); snapshots are stored out of band from the record log
+/// (they can be large).
+pub trait Storage: Send + fmt::Debug {
+    /// Durably append one record. Returns only once the record would
+    /// survive `kill -9`.
+    fn append(&mut self, rec: &WalRecord) -> Result<(), StorageError>;
+
+    /// Read back every surviving record, oldest first. Corruption (torn
+    /// tail, bit flip) ends the replay at the last valid record — never
+    /// an error, never a panic — and repairs the log so subsequent
+    /// appends extend the valid prefix.
+    fn replay(&mut self) -> Result<Vec<WalRecord>, StorageError>;
+
+    /// Atomically replace the log with `live` (the records still needed
+    /// above the GC watermark). Everything older becomes unreachable and
+    /// reclaimable.
+    fn compact(&mut self, live: &[WalRecord]) -> Result<(), StorageError>;
+
+    /// Durably store the replica snapshot covering slots `< base`.
+    fn put_snapshot(&mut self, base: Slot, bytes: &[u8]) -> Result<(), StorageError>;
+
+    /// The most recent snapshot, if any.
+    fn load_snapshot(&mut self) -> Result<Option<(Slot, Vec<u8>)>, StorageError>;
+
+    /// `"mem"` or `"wal"` (diagnostics).
+    fn kind(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE), table-driven — used by the WAL frame and the tests that
+// corrupt it. No dependency; the table is built at compile time.
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 of `bytes` (the polynomial zlib/gzip use).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+// ---------------------------------------------------------------------
+// MemStorage
+// ---------------------------------------------------------------------
+
+/// In-memory [`Storage`]: a `Vec` of records plus the latest snapshot.
+/// The simulator's crash/restart tests persist through this — same
+/// replay semantics as the WAL, none of the I/O.
+#[derive(Debug, Default)]
+pub struct MemStorage {
+    records: Vec<WalRecord>,
+    snapshot: Option<(Slot, Vec<u8>)>,
+}
+
+impl MemStorage {
+    pub fn new() -> MemStorage {
+        MemStorage::default()
+    }
+
+    /// Number of live records (tests).
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+impl Storage for MemStorage {
+    fn append(&mut self, rec: &WalRecord) -> Result<(), StorageError> {
+        self.records.push(rec.clone());
+        Ok(())
+    }
+
+    fn replay(&mut self) -> Result<Vec<WalRecord>, StorageError> {
+        Ok(self.records.clone())
+    }
+
+    fn compact(&mut self, live: &[WalRecord]) -> Result<(), StorageError> {
+        self.records = live.to_vec();
+        Ok(())
+    }
+
+    fn put_snapshot(&mut self, base: Slot, bytes: &[u8]) -> Result<(), StorageError> {
+        self.snapshot = Some((base, bytes.to_vec()));
+        Ok(())
+    }
+
+    fn load_snapshot(&mut self) -> Result<Option<(Slot, Vec<u8>)>, StorageError> {
+        Ok(self.snapshot.clone())
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Delta snapshots (full-to-full byte diffs)
+// ---------------------------------------------------------------------
+
+/// Encode `new` as a delta against `base`: the new length plus the byte
+/// runs that differ. GB-scale tensor state changes sparsely between
+/// snapshot ticks, so deltas are small; a delta is applied on top of the
+/// last *full* snapshot at load time (the WAL stores `full_every - 1`
+/// deltas between fulls).
+pub fn encode_delta(base: &[u8], new: &[u8]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(new.len() as u64);
+    let mut runs: Vec<(u64, &[u8])> = Vec::new();
+    let mut i = 0usize;
+    while i < new.len() {
+        let same = i < base.len() && base[i] == new[i];
+        if same {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < new.len() && !(i < base.len() && base[i] == new[i]) {
+            i += 1;
+        }
+        runs.push((start as u64, &new[start..i]));
+    }
+    e.u32(runs.len() as u32);
+    for (off, bytes) in runs {
+        e.u64(off);
+        e.bytes(bytes);
+    }
+    e.buf
+}
+
+/// Apply a delta produced by [`encode_delta`] to `base`.
+pub fn apply_delta(base: &[u8], delta: &[u8]) -> Result<Vec<u8>, CodecError> {
+    let mut d = Dec::new(delta);
+    let new_len = d.u64()? as usize;
+    if new_len > MAX_RECORD {
+        return Err(crate::codec::CodecError("delta length too large".into()));
+    }
+    let mut out = vec![0u8; new_len];
+    let n = base.len().min(new_len);
+    out[..n].copy_from_slice(&base[..n]);
+    let runs = d.u32()?;
+    for _ in 0..runs {
+        let off = d.u64()? as usize;
+        let bytes = d.bytes()?;
+        if off + bytes.len() > out.len() {
+            return Err(crate::codec::CodecError("delta run out of range".into()));
+        }
+        out[off..off + bytes.len()].copy_from_slice(&bytes);
+    }
+    if !d.done() {
+        return Err(crate::codec::CodecError("trailing delta bytes".into()));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Test support
+// ---------------------------------------------------------------------
+
+/// A fresh scratch directory under the system temp dir, unique per
+/// process and call (no wall clock — determinism lint). Used by the WAL
+/// tests and benches; callers clean up with `remove_dir_all`.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "matchmaker-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(epoch: u64) -> Round {
+        Round { epoch, proposer: 1, seq: 0 }
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Promise { round: r(3) },
+            WalRecord::Vote { slot: 7, vr: r(3), vv: Value::Noop },
+            WalRecord::Watermark { upto: 4 },
+            WalRecord::MmEntry {
+                group: 2,
+                round: r(1),
+                config: Configuration::majority(5, vec![10, 11, 12]),
+            },
+            WalRecord::MmGcWatermark { group: 2, round: r(1) },
+            WalRecord::MmLifecycle { generation: 9, stopped: true, active: false },
+            WalRecord::LeaderEpoch {
+                group: 0,
+                round: r(2),
+                config: Configuration::majority(6, vec![10, 11, 12]),
+            },
+            WalRecord::Chosen {
+                slot: 11,
+                value: Value::Cmd(crate::msg::Command {
+                    client: 90,
+                    seq: 2,
+                    payload: vec![1, 2, 3],
+                }),
+            },
+            WalRecord::MetaPromise { generation: 8, round: r(4) },
+            WalRecord::MetaVote { generation: 8, vr: r(4), set: vec![3, 4, 5] },
+        ]
+    }
+
+    #[test]
+    fn wal_records_roundtrip() {
+        for rec in sample_records() {
+            let bytes = rec.encode();
+            assert_eq!(WalRecord::decode(&bytes).unwrap(), rec);
+            // Truncation rejection, like the message codec.
+            for cut in 0..bytes.len() {
+                assert!(WalRecord::decode(&bytes[..cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // zlib's published test vector.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn mem_storage_roundtrip_and_compact() {
+        let mut s = MemStorage::new();
+        for rec in sample_records() {
+            s.append(&rec).unwrap();
+        }
+        assert_eq!(s.replay().unwrap(), sample_records());
+        let live = vec![WalRecord::Watermark { upto: 9 }];
+        s.compact(&live).unwrap();
+        assert_eq!(s.replay().unwrap(), live);
+        s.put_snapshot(5, b"snapbytes").unwrap();
+        assert_eq!(s.load_snapshot().unwrap(), Some((5, b"snapbytes".to_vec())));
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let base = vec![0u8; 1000];
+        let mut new = base.clone();
+        new[17] = 9;
+        new[500..510].copy_from_slice(&[7; 10]);
+        new.extend_from_slice(&[1, 2, 3]); // grows
+        let delta = encode_delta(&base, &new);
+        assert!(delta.len() < 100, "delta not sparse: {}", delta.len());
+        assert_eq!(apply_delta(&base, &delta).unwrap(), new);
+        // Shrinking state round-trips too.
+        let small = vec![5u8; 10];
+        let delta = encode_delta(&new, &small);
+        assert_eq!(apply_delta(&new, &delta).unwrap(), small);
+    }
+
+    #[test]
+    fn delta_rejects_garbage() {
+        assert!(apply_delta(b"base", &[0xff; 3]).is_err());
+        let delta = encode_delta(b"aaaa", b"bbbb");
+        // Applying against the wrong base still yields *something* of the
+        // right length (deltas are positional), but corrupt framing errors.
+        assert!(apply_delta(b"", &delta[..delta.len() - 1]).is_err());
+    }
+}

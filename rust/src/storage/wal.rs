@@ -1,0 +1,486 @@
+//! [`WalStorage`]: the on-disk [`Storage`] — fsync'd, CRC-framed,
+//! length-prefixed segment files with rotation, watermark-driven
+//! compaction, and full/delta snapshot files.
+//!
+//! Layout of a data directory (one per role instance, e.g.
+//! `<data-dir>/acceptor-10/`):
+//!
+//! ```text
+//! wal-00000000.log     record segments, rotated at `segment_bytes`
+//! wal-00000001.log     (replayed in sequence order on restart)
+//! ...
+//! snap-<base>.full     latest full snapshot (slots < base applied)
+//! snap-<base>.delta    byte-delta against the latest full snapshot
+//! ```
+//!
+//! Crash semantics: a record is appended as `[len][crc][body]` and
+//! fsync'd before [`WalStorage::append`] returns, so a `kill -9` can
+//! only ever leave a *torn tail* — a partial frame at the end of the
+//! newest segment. Replay verifies each frame's CRC and stops at the
+//! first bad one, truncating the file there; everything acked before the
+//! crash survives by construction. Snapshots are written to a temp file,
+//! fsync'd, then renamed into place, so a crash mid-snapshot leaves the
+//! previous snapshot intact.
+
+use super::{apply_delta, crc32, encode_delta, Storage, StorageError, WalRecord, MAX_RECORD};
+use crate::codec::{Enc, Wire};
+use crate::Slot;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Tuning knobs for [`WalStorage`].
+#[derive(Clone, Copy, Debug)]
+pub struct WalOptions {
+    /// fsync each append before acking (the safe default). Turning this
+    /// off trades crash safety for throughput — benchmarks only.
+    pub fsync: bool,
+    /// Rotate to a fresh segment once the current one exceeds this.
+    pub segment_bytes: u64,
+    /// Write a full snapshot every `full_every` snapshots; the ones in
+    /// between are stored as byte-deltas against the last full.
+    pub full_every: u32,
+}
+
+impl Default for WalOptions {
+    fn default() -> WalOptions {
+        WalOptions { fsync: true, segment_bytes: 4 << 20, full_every: 4 }
+    }
+}
+
+/// The on-disk write-ahead log. See the module docs for the format.
+pub struct WalStorage {
+    dir: PathBuf,
+    opts: WalOptions,
+    /// Sequence number of the open (newest) segment.
+    seg_seq: u64,
+    /// The open segment, in append mode.
+    seg: File,
+    /// Bytes currently in the open segment.
+    seg_len: u64,
+    /// Scratch encoder reused across appends.
+    scratch: Enc,
+    /// Last *full* snapshot bytes (delta base), loaded lazily.
+    last_full: Option<(Slot, Vec<u8>)>,
+    /// Snapshots written since the last full one.
+    since_full: u32,
+}
+
+impl std::fmt::Debug for WalStorage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WalStorage")
+            .field("dir", &self.dir)
+            .field("seg_seq", &self.seg_seq)
+            .field("seg_len", &self.seg_len)
+            .finish_non_exhaustive()
+    }
+}
+
+fn seg_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("wal-{seq:08}.log"))
+}
+
+impl WalStorage {
+    /// Open (or create) the WAL in `dir`.
+    pub fn open(dir: impl Into<PathBuf>, opts: WalOptions) -> Result<WalStorage, StorageError> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let seg_seq = Self::segments(&dir)?.last().copied().unwrap_or(0);
+        let path = seg_path(&dir, seg_seq);
+        let seg = OpenOptions::new().create(true).append(true).open(&path)?;
+        let seg_len = seg.metadata()?.len();
+        Ok(WalStorage {
+            dir,
+            opts,
+            seg_seq,
+            seg,
+            seg_len,
+            scratch: Enc::new(),
+            last_full: None,
+            since_full: 0,
+        })
+    }
+
+    /// Existing segment sequence numbers, ascending.
+    fn segments(dir: &Path) -> Result<Vec<u64>, StorageError> {
+        let mut seqs = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(seq) = name
+                .strip_prefix("wal-")
+                .and_then(|s| s.strip_suffix(".log"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                seqs.push(seq);
+            }
+        }
+        seqs.sort_unstable();
+        Ok(seqs)
+    }
+
+    /// fsync the directory itself so renames/creates/removes are durable.
+    fn sync_dir(&self) -> Result<(), StorageError> {
+        if self.opts.fsync {
+            File::open(&self.dir)?.sync_all()?;
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<(), StorageError> {
+        self.seg.sync_all()?;
+        self.seg_seq += 1;
+        let path = seg_path(&self.dir, self.seg_seq);
+        self.seg = OpenOptions::new().create(true).append(true).open(path)?;
+        self.seg_len = 0;
+        self.sync_dir()
+    }
+
+    /// Parse the frames of one segment's bytes. Returns the decoded
+    /// records and the byte offset of the first invalid frame (== len
+    /// when the whole segment is valid).
+    fn scan(bytes: &[u8]) -> (Vec<WalRecord>, usize) {
+        let mut recs = Vec::new();
+        let mut pos = 0usize;
+        loop {
+            let Some(header) = bytes.get(pos..pos + 8) else {
+                return (recs, pos); // clean EOF or torn header
+            };
+            let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+            if len > MAX_RECORD {
+                return (recs, pos); // corrupt length
+            }
+            let Some(body) = bytes.get(pos + 8..pos + 8 + len) else {
+                return (recs, pos); // torn body
+            };
+            if crc32(body) != crc {
+                return (recs, pos); // bit flip / torn write
+            }
+            let Ok(rec) = WalRecord::decode(body) else {
+                return (recs, pos); // CRC-valid but undecodable: corrupt
+            };
+            recs.push(rec);
+            pos += 8 + len;
+        }
+    }
+
+    /// Number of record segments on disk (tests).
+    pub fn segment_count(&self) -> Result<usize, StorageError> {
+        Ok(Self::segments(&self.dir)?.len())
+    }
+
+    /// Every snapshot file on disk: `(base, is_full, path)`.
+    fn all_snapshot_files(&self) -> Result<Vec<(Slot, bool, PathBuf)>, StorageError> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(rest) = name.strip_prefix("snap-") else { continue };
+            let parse = |s: &str| s.parse::<Slot>().ok();
+            if let Some(base) = rest.strip_suffix(".full").and_then(parse) {
+                out.push((base, true, entry.path()));
+            } else if let Some(base) = rest.strip_suffix(".delta").and_then(parse) {
+                out.push((base, false, entry.path()));
+            }
+        }
+        Ok(out)
+    }
+
+    /// The newest full and newest delta snapshot files.
+    fn snapshot_files(
+        &self,
+    ) -> Result<(Option<(Slot, PathBuf)>, Option<(Slot, PathBuf)>), StorageError> {
+        let (mut full, mut delta): (Option<(Slot, PathBuf)>, Option<(Slot, PathBuf)>) =
+            (None, None);
+        for (base, is_full, path) in self.all_snapshot_files()? {
+            let slot = if is_full { &mut full } else { &mut delta };
+            if slot.as_ref().map_or(true, |(b, _)| base > *b) {
+                *slot = Some((base, path));
+            }
+        }
+        Ok((full, delta))
+    }
+
+    /// Write `bytes` to `name` atomically: temp file, fsync, rename.
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<(), StorageError> {
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        let path = self.dir.join(name);
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        if self.opts.fsync {
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        self.sync_dir()
+    }
+}
+
+impl Storage for WalStorage {
+    fn append(&mut self, rec: &WalRecord) -> Result<(), StorageError> {
+        if self.seg_len >= self.opts.segment_bytes {
+            self.rotate()?;
+        }
+        rec.encode_into(&mut self.scratch);
+        let body_len = self.scratch.buf.len();
+        let crc = crc32(&self.scratch.buf);
+        let mut frame = Vec::with_capacity(8 + body_len);
+        frame.extend_from_slice(&(body_len as u32).to_le_bytes());
+        frame.extend_from_slice(&crc.to_le_bytes());
+        frame.extend_from_slice(&self.scratch.buf);
+        // One write_all: a crash mid-call tears at most this frame, and
+        // the CRC catches whatever partial prefix made it to disk.
+        self.seg.write_all(&frame)?;
+        if self.opts.fsync {
+            self.seg.sync_data()?;
+        }
+        self.seg_len += frame.len() as u64;
+        Ok(())
+    }
+
+    fn replay(&mut self) -> Result<Vec<WalRecord>, StorageError> {
+        let mut recs = Vec::new();
+        let seqs = Self::segments(&self.dir)?;
+        for (i, &seq) in seqs.iter().enumerate() {
+            let path = seg_path(&self.dir, seq);
+            let mut bytes = Vec::new();
+            File::open(&path)?.read_to_end(&mut bytes)?;
+            let (segment_recs, valid) = Self::scan(&bytes);
+            recs.extend(segment_recs);
+            if valid < bytes.len() {
+                // Torn/corrupt frame: truncate the segment to its valid
+                // prefix and drop every later segment — the conservative
+                // prefix is exactly what was durably acked.
+                let f = OpenOptions::new().write(true).open(&path)?;
+                f.set_len(valid as u64)?;
+                f.sync_all()?;
+                for &later in &seqs[i + 1..] {
+                    fs::remove_file(seg_path(&self.dir, later))?;
+                }
+                self.sync_dir()?;
+                // Re-open the append handle at the repaired tail.
+                self.seg_seq = seq;
+                self.seg =
+                    OpenOptions::new().create(true).append(true).open(&path)?;
+                self.seg_len = valid as u64;
+                break;
+            }
+        }
+        Ok(recs)
+    }
+
+    fn compact(&mut self, live: &[WalRecord]) -> Result<(), StorageError> {
+        // Write the live set into a brand-new segment, fsync it, then
+        // drop every older segment. A crash between those steps leaves
+        // both the old and new copies — replay concatenates them, and
+        // role recovery is idempotent over duplicated records (last
+        // write wins per key), so this is safe without a manifest.
+        let old = Self::segments(&self.dir)?;
+        self.rotate()?;
+        for rec in live {
+            self.append(rec)?;
+        }
+        self.seg.sync_all()?;
+        for seq in old {
+            fs::remove_file(seg_path(&self.dir, seq))?;
+        }
+        self.sync_dir()
+    }
+
+    fn put_snapshot(&mut self, base: Slot, bytes: &[u8]) -> Result<(), StorageError> {
+        let write_full = self.last_full.is_none() || self.since_full + 1 >= self.opts.full_every;
+        if write_full {
+            self.write_atomic(&format!("snap-{base}.full"), bytes)?;
+            // The new full subsumes every older snapshot file.
+            for (old, _, path) in self.all_snapshot_files()? {
+                if old < base {
+                    fs::remove_file(path)?;
+                }
+            }
+            self.sync_dir()?;
+            self.last_full = Some((base, bytes.to_vec()));
+            self.since_full = 0;
+        } else {
+            let (_, full_bytes) = self.last_full.as_ref().unwrap();
+            let delta = encode_delta(full_bytes, bytes);
+            self.write_atomic(&format!("snap-{base}.delta"), &delta)?;
+            // Only the newest delta matters (it carries the whole diff
+            // against the full, not an incremental chain).
+            for (old, is_full, path) in self.all_snapshot_files()? {
+                if !is_full && old < base {
+                    fs::remove_file(path)?;
+                }
+            }
+            self.sync_dir()?;
+            self.since_full += 1;
+        }
+        Ok(())
+    }
+
+    fn load_snapshot(&mut self) -> Result<Option<(Slot, Vec<u8>)>, StorageError> {
+        let (full, delta) = self.snapshot_files()?;
+        let Some((full_base, full_path)) = full else { return Ok(None) };
+        let mut full_bytes = Vec::new();
+        File::open(&full_path)?.read_to_end(&mut full_bytes)?;
+        self.last_full = Some((full_base, full_bytes.clone()));
+        if let Some((delta_base, delta_path)) = delta {
+            if delta_base > full_base {
+                let mut delta_bytes = Vec::new();
+                File::open(&delta_path)?.read_to_end(&mut delta_bytes)?;
+                match apply_delta(&full_bytes, &delta_bytes) {
+                    Ok(bytes) => return Ok(Some((delta_base, bytes))),
+                    // A corrupt delta falls back to the full snapshot —
+                    // same conservative-prefix stance as the record log.
+                    Err(_) => return Ok(Some((full_base, full_bytes))),
+                }
+            }
+        }
+        Ok(Some((full_base, full_bytes)))
+    }
+
+    fn kind(&self) -> &'static str {
+        "wal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Value;
+    use crate::round::Round;
+    use crate::storage::scratch_dir;
+
+    fn r(epoch: u64) -> Round {
+        Round { epoch, proposer: 1, seq: 0 }
+    }
+
+    fn vote(slot: Slot) -> WalRecord {
+        WalRecord::Vote { slot, vr: r(1), vv: Value::Noop }
+    }
+
+    fn no_fsync() -> WalOptions {
+        // Tests hammer tiny appends; skipping fsync keeps them fast
+        // while exercising identical code paths.
+        WalOptions { fsync: false, ..WalOptions::default() }
+    }
+
+    #[test]
+    fn append_replay_roundtrip_across_reopen() {
+        let dir = scratch_dir("wal-rt");
+        let recs: Vec<WalRecord> = (0..100).map(vote).collect();
+        {
+            let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+            for rec in &recs {
+                w.append(rec).unwrap();
+            }
+        }
+        let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+        assert_eq!(w.replay().unwrap(), recs);
+        // Appends after replay extend the same log.
+        w.append(&vote(100)).unwrap();
+        let mut w2 = WalStorage::open(&dir, no_fsync()).unwrap();
+        assert_eq!(w2.replay().unwrap().len(), 101);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_spills_to_new_segments() {
+        let dir = scratch_dir("wal-rot");
+        let opts = WalOptions { segment_bytes: 256, ..no_fsync() };
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        for i in 0..50 {
+            w.append(&vote(i)).unwrap();
+        }
+        assert!(w.segment_count().unwrap() > 1, "no rotation happened");
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 50);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_drops_old_segments_and_keeps_live() {
+        let dir = scratch_dir("wal-compact");
+        let opts = WalOptions { segment_bytes: 256, ..no_fsync() };
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        for i in 0..50 {
+            w.append(&vote(i)).unwrap();
+        }
+        let live = vec![WalRecord::Promise { round: r(7) }, vote(49)];
+        w.compact(&live).unwrap();
+        assert_eq!(w.segment_count().unwrap(), 1);
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        assert_eq!(w.replay().unwrap(), live);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_log_reusable() {
+        let dir = scratch_dir("wal-torn");
+        {
+            let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+            for i in 0..10 {
+                w.append(&vote(i)).unwrap();
+            }
+        }
+        // Tear the last frame: chop 3 bytes off the segment.
+        let path = seg_path(&dir, 0);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+        let recs = w.replay().unwrap();
+        assert_eq!(recs.len(), 9, "torn record replayed");
+        assert_eq!(recs, (0..9).map(vote).collect::<Vec<_>>());
+        // The repaired log accepts appends and replays them.
+        w.append(&vote(99)).unwrap();
+        let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 10);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_stops_replay_at_flip() {
+        let dir = scratch_dir("wal-flip");
+        {
+            let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+            for i in 0..10 {
+                w.append(&vote(i)).unwrap();
+            }
+        }
+        let path = seg_path(&dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+        let recs = w.replay().unwrap();
+        assert!(recs.len() < 10, "flip not detected");
+        assert_eq!(recs, (0..recs.len() as u64).map(vote).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshots_full_then_delta_then_full() {
+        let dir = scratch_dir("wal-snap");
+        let opts = WalOptions { full_every: 2, ..no_fsync() };
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        let mut state = vec![0u8; 4096];
+        w.put_snapshot(10, &state).unwrap(); // full
+        state[100] = 1;
+        w.put_snapshot(20, &state).unwrap(); // delta vs full@10
+        assert_eq!(w.load_snapshot().unwrap(), Some((20, state.clone())));
+        state[200] = 2;
+        w.put_snapshot(30, &state).unwrap(); // full again (full_every=2)
+        assert_eq!(w.load_snapshot().unwrap(), Some((30, state.clone())));
+        // A fresh open reconstructs from disk alone.
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        assert_eq!(w.load_snapshot().unwrap(), Some((30, state.clone())));
+        state[300] = 3;
+        w.put_snapshot(40, &state).unwrap(); // delta vs full@30
+        let mut w = WalStorage::open(&dir, opts).unwrap();
+        assert_eq!(w.load_snapshot().unwrap(), Some((40, state)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -102,6 +102,26 @@ fn every_invariant_in_the_catalog_fires() {
             // Same (client, seq) chosen with two different payloads.
             vec![chosen(0, 90, 1, b"a"), chosen(1, 90, 1, b"b")],
         ),
+        (
+            "recovery-sound",
+            // An acceptor durably acks a promise, crashes, and replays
+            // to a lower round — the "un-promise" a fsync'd WAL exists
+            // to make impossible.
+            vec![
+                (1, 2, Announce::DurablePromise { node: 2, round: r(5) }),
+                (2, 2, Announce::NodeRestarted { node: 2 }),
+                (
+                    3,
+                    2,
+                    Announce::AcceptorRecovered {
+                        node: 2,
+                        round: Some(r(3)),
+                        watermark: 0,
+                        votes: vec![],
+                    },
+                ),
+            ],
+        ),
     ];
     let catalog = InvariantSet::standard().names();
     for name in &catalog {

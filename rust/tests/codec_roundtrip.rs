@@ -213,3 +213,43 @@ fn retention_messages_reject_truncation() {
         }
     }
 }
+
+#[test]
+fn snapshot_chunk_messages_roundtrip() {
+    // Dedicated round-trips for the chunked/resumable snapshot transfer
+    // (tags 43–44). Empty, single-byte, and chunk-sized payloads, plus
+    // the boundary seq/total values.
+    for bytes in [vec![], vec![0xa5u8], vec![0x3c; 256 * 1024]] {
+        let m = Msg::SnapshotChunk { base: 1 << 40, seq: 0, total: 1, bytes };
+        assert_eq!(rt(m.clone()), m);
+    }
+    let m = Msg::SnapshotChunk {
+        base: u64::MAX - 1,
+        seq: u32::MAX - 1,
+        total: u32::MAX,
+        bytes: vec![1, 2, 3],
+    };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::SnapshotResume { base: 0, next: 0 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::SnapshotResume { base: u64::MAX, next: u32::MAX };
+    assert_eq!(rt(m.clone()), m);
+}
+
+#[test]
+fn snapshot_chunk_messages_reject_truncation() {
+    let msgs = vec![
+        Msg::SnapshotChunk { base: 64, seq: 2, total: 9, bytes: vec![1, 2, 3, 4] },
+        Msg::SnapshotResume { base: 64, next: 3 },
+    ];
+    for m in msgs {
+        let bytes = m.encode();
+        assert_eq!(Msg::decode(&bytes).unwrap(), m);
+        for cut in 0..bytes.len() {
+            assert!(
+                Msg::decode(&bytes[..cut]).is_err(),
+                "prefix of len {cut} of {m:?} decoded"
+            );
+        }
+    }
+}
