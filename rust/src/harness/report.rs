@@ -285,7 +285,7 @@ impl ReadReport {
 }
 
 /// One perf-trajectory row: what a `BENCH_x*.json` line carries.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BenchRow {
     /// Variant label (e.g. "batch_32", "leases_on").
     pub label: String,
@@ -308,7 +308,7 @@ pub struct BenchRow {
 ///  "rows":[{"label":"leases_on","throughput":12345.0,
 ///           "p50_ms":0.42,"p99_ms":1.9,"offered_per_sec":16000.0}]}
 /// ```
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BenchJson {
     pub experiment: String,
     pub seed: u64,
@@ -353,6 +353,264 @@ impl BenchJson {
         }
         out.push_str("]}\n");
         out
+    }
+
+    /// Parse a BENCH-schema document back into a [`BenchJson`] — the
+    /// other half of the round trip, used by the sweep's baseline
+    /// compare (`repro sweep --compare`) to read committed
+    /// `benches/baselines/BENCH_*.json` files. Dependency-free like
+    /// the emitter: a tiny JSON reader that accepts exactly the value
+    /// shapes the schema uses (objects, arrays, strings, numbers,
+    /// `null` → NaN) and rejects everything else with a position.
+    pub fn parse(text: &str) -> Result<BenchJson, String> {
+        use json::Fields as _;
+        let v = json::parse(text)?;
+        let obj = v.as_obj("top level")?;
+        let experiment = obj.get_str("experiment")?;
+        let seed = obj.get_num("seed")?;
+        if !seed.is_finite() || seed < 0.0 || seed.fract() != 0.0 {
+            return Err(format!("\"seed\": expected a non-negative integer, got {seed}"));
+        }
+        let mut rows = Vec::new();
+        for (i, rv) in obj.get_arr("rows")?.iter().enumerate() {
+            let row = rv.as_obj(&format!("rows[{i}]"))?;
+            rows.push(BenchRow {
+                label: row.get_str("label")?,
+                throughput: row.get_num("throughput")?,
+                p50_ms: row.get_num("p50_ms")?,
+                p99_ms: row.get_num("p99_ms")?,
+                offered_per_sec: row.get_num("offered_per_sec")?,
+            });
+        }
+        Ok(BenchJson { experiment, seed: seed as u64, rows })
+    }
+}
+
+/// The minimal JSON reader behind [`BenchJson::parse`] (the build is
+/// dependency-free, so no serde). Supports the subset the BENCH schema
+/// emits; `null` maps to NaN so the emitter/parser pair round-trips
+/// unmeasured metrics.
+mod json {
+    pub enum Value {
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+        Null,
+    }
+
+    impl Value {
+        pub fn as_obj(&self, what: &str) -> Result<&Vec<(String, Value)>, String> {
+            match self {
+                Value::Obj(fields) => Ok(fields),
+                _ => Err(format!("{what}: expected an object")),
+            }
+        }
+    }
+
+    /// Field accessors for object field lists (duplicate keys keep the
+    /// first occurrence, like most readers).
+    pub trait Fields {
+        fn field(&self, key: &str) -> Result<&Value, String>;
+        fn get_str(&self, key: &str) -> Result<String, String> {
+            match self.field(key)? {
+                Value::Str(s) => Ok(s.clone()),
+                _ => Err(format!("\"{key}\": expected a string")),
+            }
+        }
+        fn get_num(&self, key: &str) -> Result<f64, String> {
+            match self.field(key)? {
+                Value::Num(x) => Ok(*x),
+                Value::Null => Ok(f64::NAN),
+                _ => Err(format!("\"{key}\": expected a number or null")),
+            }
+        }
+        fn get_arr(&self, key: &str) -> Result<&Vec<Value>, String> {
+            match self.field(key)? {
+                Value::Arr(items) => Ok(items),
+                _ => Err(format!("\"{key}\": expected an array")),
+            }
+        }
+    }
+
+    impl Fields for Vec<(String, Value)> {
+        fn field(&self, key: &str) -> Result<&Value, String> {
+            self.iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| format!("missing field \"{key}\""))
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing data after the document"));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        bytes: &'a [u8],
+        pos: usize,
+    }
+
+    impl Parser<'_> {
+        fn err(&self, msg: &str) -> String {
+            format!("JSON error at byte {}: {msg}", self.pos)
+        }
+
+        fn skip_ws(&mut self) {
+            while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.pos += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.bytes.get(self.pos).copied()
+        }
+
+        fn eat(&mut self, b: u8) -> Result<(), String> {
+            if self.peek() == Some(b) {
+                self.pos += 1;
+                Ok(())
+            } else {
+                Err(self.err(&format!("expected {:?}", b as char)))
+            }
+        }
+
+        fn value(&mut self) -> Result<Value, String> {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'{') => self.object(),
+                Some(b'[') => self.array(),
+                Some(b'"') => Ok(Value::Str(self.string()?)),
+                Some(b'n') => {
+                    self.keyword("null")?;
+                    Ok(Value::Null)
+                }
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                _ => Err(self.err("expected a value")),
+            }
+        }
+
+        fn keyword(&mut self, word: &str) -> Result<(), String> {
+            if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+                self.pos += word.len();
+                Ok(())
+            } else {
+                Err(self.err(&format!("expected {word}")))
+            }
+        }
+
+        fn object(&mut self) -> Result<Value, String> {
+            self.eat(b'{')?;
+            let mut fields = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(Value::Obj(fields));
+            }
+            loop {
+                self.skip_ws();
+                let key = self.string()?;
+                self.skip_ws();
+                self.eat(b':')?;
+                fields.push((key, self.value()?));
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b'}') => {
+                        self.pos += 1;
+                        return Ok(Value::Obj(fields));
+                    }
+                    _ => return Err(self.err("expected ',' or '}' in object")),
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value, String> {
+            self.eat(b'[')?;
+            let mut items = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(self.value()?);
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b']') => {
+                        self.pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(self.err("expected ',' or ']' in array")),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.peek() {
+                    Some(b'"') => {
+                        self.pos += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.pos += 1;
+                        match self.peek() {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'r') => out.push('\r'),
+                            _ => return Err(self.err("unsupported escape")),
+                        }
+                        self.pos += 1;
+                    }
+                    Some(c) if c < 0x20 => return Err(self.err("raw control byte in string")),
+                    Some(_) => {
+                        // Copy one UTF-8 scalar (the input is a &str,
+                        // so boundaries are valid).
+                        let s = &self.bytes[self.pos..];
+                        let ch_len = match s[0] {
+                            c if c < 0x80 => 1,
+                            c if c >= 0xF0 => 4,
+                            c if c >= 0xE0 => 3,
+                            _ => 2,
+                        };
+                        out.push_str(std::str::from_utf8(&s[..ch_len]).map_err(|_| {
+                            self.err("invalid UTF-8 in string")
+                        })?);
+                        self.pos += ch_len;
+                    }
+                    None => return Err(self.err("unterminated string")),
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Value, String> {
+            let start = self.pos;
+            if self.peek() == Some(b'-') {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
+            {
+                self.pos += 1;
+            }
+            std::str::from_utf8(&self.bytes[start..self.pos])
+                .ok()
+                .and_then(|s| s.parse::<f64>().ok())
+                .map(Value::Num)
+                .ok_or_else(|| self.err("malformed number"))
+        }
     }
 }
 
@@ -527,6 +785,64 @@ mod tests {
         assert!(j.contains("\"p50_ms\":null"));
         assert!(!j.contains("NaN"));
         assert!(j.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        // serialize → parse → compare: the emitter and parser agree on
+        // the schema, NaN → null → NaN included (compared via re-
+        // serialization, since NaN != NaN).
+        let b = BenchJson {
+            experiment: "sweep_smoke".into(),
+            seed: 42,
+            rows: vec![
+                BenchRow {
+                    label: "b32_s4_r90_loss10_rc500_lease_snap".into(),
+                    throughput: 3520.25,
+                    p50_ms: 0.875,
+                    p99_ms: 12.5,
+                    offered_per_sec: 4000.0,
+                },
+                BenchRow {
+                    label: "closed \"quoted\"\\slash".into(),
+                    throughput: 100.0,
+                    p50_ms: f64::NAN,
+                    p99_ms: f64::NAN,
+                    offered_per_sec: f64::NAN,
+                },
+            ],
+        };
+        let j = b.to_json();
+        let parsed = BenchJson::parse(&j).expect("parse own output");
+        assert_eq!(parsed.experiment, b.experiment);
+        assert_eq!(parsed.seed, b.seed);
+        assert_eq!(parsed.rows.len(), b.rows.len());
+        assert_eq!(parsed.rows[1].label, b.rows[1].label);
+        assert!(parsed.rows[1].p50_ms.is_nan());
+        assert_eq!(parsed.to_json(), j, "round trip must be byte-stable");
+    }
+
+    #[test]
+    fn bench_json_parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "{\"experiment\":\"x\",\"seed\":1}",           // missing rows
+            "{\"experiment\":\"x\",\"seed\":1,\"rows\":3}", // rows not an array
+            "{\"experiment\":\"x\",\"seed\":-1,\"rows\":[]}", // negative seed
+            "{\"experiment\":\"x\",\"seed\":1,\"rows\":[{\"label\":\"a\"}]}", // row missing fields
+            "{\"experiment\":\"x\",\"seed\":1,\"rows\":[]}trailing",
+        ] {
+            assert!(BenchJson::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // Whitespace and null metrics are fine.
+        let ok = "{ \"experiment\": \"x3\", \"seed\": 7,\n \"rows\": [\n  {\"label\": \"a\",\
+                  \"throughput\": 1.5, \"p50_ms\": null, \"p99_ms\": null, \
+                  \"offered_per_sec\": null} ] }";
+        let b = BenchJson::parse(ok).unwrap();
+        assert_eq!((b.experiment.as_str(), b.seed), ("x3", 7));
+        assert_eq!(b.rows[0].throughput, 1.5);
+        assert!(b.rows[0].p99_ms.is_nan());
     }
 
     #[test]

@@ -133,6 +133,7 @@ pub mod runtime;
 pub mod sim;
 pub mod statemachine;
 pub mod storage;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

@@ -12,6 +12,8 @@
 //! * `repro check [list | replay FILE | NAME]` — exhaustive model
 //!   checking of the protocol on small instances (DESIGN.md §Model
 //!   checking).
+//! * `repro sweep [--mode smoke|full] [--compare DIR]` — deterministic
+//!   parameter-space sweep + perf-regression gate (DESIGN.md §Sweeps).
 
 use anyhow::{Context, Result};
 use matchmaker::config::{Configuration, DeploymentConfig};
@@ -91,6 +93,17 @@ const USAGE: &str = "usage:
       exits nonzero on any unexpected invariant violation
   repro check list                 list the checked instances
   repro check replay FILE          deterministically re-execute a trace file
+  repro sweep [--mode smoke|full] [--seed N] [--jobs N] [--out DIR]
+              [--compare DIR] [--only LABEL]
+      deterministic parameter-space sweep on the simulator: smoke = a
+      seeded sample of the grid (CI fast loop), full = the whole grid
+      (release job); identical --mode/--seed runs are byte-identical
+      --jobs N       parallel workers (default: one per core)
+      --out DIR      write BENCH_sweep_<mode>.json + SWEEP_<mode>.csv
+      --compare DIR  diff against committed BENCH_*.json baselines
+                     (benches/baselines); exit 1 on >10% composite-score
+                     regression or a missing pinned configuration
+      --only LABEL   replay one configuration in isolation and print it
 ";
 
 fn main() -> Result<()> {
@@ -129,6 +142,7 @@ fn main() -> Result<()> {
         }
         "smoke" => smoke(),
         "check" => check(&args),
+        "sweep" => sweep(&args),
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");
             std::process::exit(2);
@@ -441,6 +455,73 @@ fn check(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `repro sweep` — deterministic parameter-space sweep + regression
+/// gate (DESIGN.md §Sweeps).
+fn sweep(args: &Args) -> Result<()> {
+    use matchmaker::sweep::{self, ParameterSpace, SweepMode};
+
+    let mode_str: String = args.flag("mode", "smoke".to_string())?;
+    let mode = SweepMode::parse(&mode_str)
+        .with_context(|| format!("--mode {mode_str:?}: expected smoke|full"))?;
+    let seed: u64 = args.flag("seed", 42)?;
+    let jobs: usize = args.flag("jobs", 0)?;
+
+    // `--only LABEL`: replay one configuration in isolation. Its seed
+    // depends only on (root seed, label), so the row matches the same
+    // label's row in a full sweep bit for bit.
+    if let Some(label) = args.flags.get("only") {
+        let cfg = ParameterSpace::default()
+            .grid()
+            .into_iter()
+            .find(|c| &c.label() == label)
+            .with_context(|| format!("--only {label:?}: no such configuration in the grid"))?;
+        let row = sweep::run_config(&cfg, seed, mode.duration());
+        print!("{}", sweep::to_csv(std::slice::from_ref(&row)));
+        if let Some(v) = &row.violation {
+            anyhow::bail!("configuration {label} violated an invariant: {v}");
+        }
+        return Ok(());
+    }
+
+    let configs = mode.configs(seed);
+    eprintln!(
+        "sweep {}: running {} configurations ({} jobs requested; 0 = per-core) ...",
+        mode.name(),
+        configs.len(),
+        jobs
+    );
+    let rows = sweep::run_sweep(&configs, seed, mode.duration(), jobs);
+    let bench = sweep::to_bench_json(&rows, mode, seed);
+    print!("{}", sweep::render_summary(&rows, mode, seed));
+
+    if let Some(dir) = args.flags.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        let json_path = dir.join(format!("BENCH_{}.json", mode.name()));
+        std::fs::write(&json_path, bench.to_json())
+            .with_context(|| format!("write {}", json_path.display()))?;
+        let csv_path = dir.join(format!("SWEEP_{}.csv", mode_str));
+        std::fs::write(&csv_path, sweep::to_csv(&rows))
+            .with_context(|| format!("write {}", csv_path.display()))?;
+        eprintln!("wrote {} and {}", json_path.display(), csv_path.display());
+    }
+
+    let violations = rows.iter().filter(|r| r.violation.is_some()).count();
+
+    if let Some(dir) = args.flags.get("compare") {
+        match sweep::compare_dir(std::path::Path::new(dir), &bench, seed) {
+            Ok(report) => print!("{report}"),
+            Err(report) => {
+                print!("{report}");
+                anyhow::bail!("perf regression gate failed (baselines: {dir})");
+            }
+        }
+    }
+
+    anyhow::ensure!(violations == 0, "{violations} configuration(s) violated invariants");
+    Ok(())
 }
 
 fn smoke() -> Result<()> {

@@ -1052,6 +1052,7 @@ impl Leader {
             if floor >= self.compacted_below + stride {
                 self.log = self.log.split_off(&floor);
                 self.compacted_below = floor;
+                #[allow(clippy::disallowed_methods)] // pure predicate, order-insensitive
                 self.cmd_slots.retain(|_, slot| *slot >= floor);
                 fx.announce(Announce::LogTruncated {
                     group: self.group,
@@ -1068,6 +1069,7 @@ impl Leader {
             if min_ack >= self.compacted_below + 4096 {
                 self.log = self.log.split_off(&min_ack);
                 self.compacted_below = min_ack;
+                #[allow(clippy::disallowed_methods)] // pure predicate, order-insensitive
                 self.cmd_slots.retain(|_, slot| *slot >= min_ack);
                 fx.announce(Announce::LogTruncated {
                     group: self.group,
@@ -1863,6 +1865,7 @@ impl Node for Leader {
                 ss.value, ss.round, ss.acks, ss.chosen, ss.generation
             );
         }
+        #[allow(clippy::disallowed_methods)] // sorted immediately below
         let mut cmds: Vec<_> = self.cmd_slots.iter().collect();
         cmds.sort();
         let _ = write!(s, " cs={cmds:?} rng={:?}", self.rng.state());

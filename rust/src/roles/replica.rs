@@ -414,6 +414,7 @@ impl Replica {
         let mut e = Enc::new();
         e.u64(self.exec_watermark);
         e.bytes(&self.sm.snapshot());
+        #[allow(clippy::disallowed_methods)] // sorted immediately below
         let mut clients: Vec<(&NodeId, &ClientHistory)> = self.client_table.iter().collect();
         clients.sort_by_key(|(id, _)| **id);
         e.u32(clients.len() as u32);
@@ -506,6 +507,8 @@ impl Replica {
             if floor > self.truncated_below {
                 self.truncated_below = floor;
                 self.log = self.log.split_off(&floor);
+                // Per-entry mutation, independent of visitation order.
+                #[allow(clippy::disallowed_methods)]
                 for h in self.client_table.values_mut() {
                     h.recent.retain(|_, v| v.0 >= floor);
                 }
@@ -1163,6 +1166,7 @@ impl Node for Replica {
         );
         // client_table is a HashMap: render in sorted order so equal
         // states hash equally.
+        #[allow(clippy::disallowed_methods)] // sorted immediately below
         let mut clients: Vec<(&NodeId, &ClientHistory)> = self.client_table.iter().collect();
         clients.sort_by_key(|(id, _)| **id);
         for (id, h) in clients {

@@ -82,6 +82,7 @@ impl ClientSequencer {
     }
 
     /// Number of requests buffered across all clients (diagnostics).
+    #[allow(clippy::disallowed_methods)] // order-insensitive sum over values
     pub fn buffered(&self) -> usize {
         self.cursors.values().map(|c| c.pending.len()).sum()
     }
@@ -90,6 +91,7 @@ impl ClientSequencer {
     /// fingerprint — the cursors live in a `HashMap`, whose `Debug`
     /// order is not deterministic across processes.
     pub fn state_repr(&self) -> String {
+        #[allow(clippy::disallowed_methods)] // sorted immediately below
         let mut clients: Vec<(&NodeId, &ClientCursor)> = self.cursors.iter().collect();
         clients.sort_by_key(|(id, _)| **id);
         let mut s = String::new();

@@ -1,0 +1,371 @@
+//! The perf-regression gate: diff a sweep/bench run against committed
+//! baselines (`repro sweep --compare <dir>`, DESIGN.md §Sweeps).
+//!
+//! Semantics: every row of a baseline file is a **pinned
+//! configuration**. Both sides are scored over the BENCH-schema fields
+//! with the same composite ([`super::score`]), matched by label, and a
+//! row whose score fell more than [`TOLERANCE`] below its baseline —
+//! or that disappeared — fails the compare. Improvements pass and
+//! print their delta. The diagnostic names the offending configuration
+//! *and* the axis (throughput / p50 / p99) that degraded most, so a
+//! regression points at its cause instead of just a scalar.
+
+use super::score::{composite_score, ScoreInputs};
+use crate::harness::report::{BenchJson, BenchRow};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Maximum tolerated relative composite-score drop per pinned row.
+pub const TOLERANCE: f64 = 0.10;
+
+/// One compared row.
+#[derive(Clone, Debug)]
+pub struct RowDelta {
+    pub label: String,
+    pub baseline_score: f64,
+    pub current_score: f64,
+    /// `(current - baseline) / baseline`; positive = improvement.
+    /// `0` when the baseline score is 0 (nothing to regress from).
+    pub delta: f64,
+    /// The metric that moved most against us ("throughput", "p50_ms",
+    /// "p99_ms", or "none").
+    pub axis: &'static str,
+    pub regressed: bool,
+}
+
+/// Outcome of comparing one baseline file.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    pub experiment: String,
+    pub deltas: Vec<RowDelta>,
+    /// Pinned labels missing from the current run (always failures:
+    /// a silently dropped configuration is not a pass).
+    pub missing: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl CompareOutcome {
+    /// Every failure this outcome carries, as diagnostics.
+    pub fn failures(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for d in &self.deltas {
+            if d.regressed {
+                out.push(format!(
+                    "{}: configuration {} regressed {:.1}% (score {:.3} -> {:.3}, \
+                     worst axis: {})",
+                    self.experiment,
+                    d.label,
+                    -d.delta * 100.0,
+                    d.baseline_score,
+                    d.current_score,
+                    d.axis
+                ));
+            }
+        }
+        for label in &self.missing {
+            out.push(format!(
+                "{}: pinned configuration {} is missing from the current run",
+                self.experiment, label
+            ));
+        }
+        out
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures().is_empty()
+    }
+
+    /// Human-readable per-row report (deltas for every pinned config,
+    /// improvements included).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "--- compare: {} ---", self.experiment);
+        for d in &self.deltas {
+            let verdict = if d.regressed {
+                "REGRESSION"
+            } else if d.delta > 0.0 {
+                "improved"
+            } else {
+                "ok"
+            };
+            let _ = writeln!(
+                out,
+                "{:<44} {:>10.3} -> {:>10.3}  {:>+7.1}%  {}",
+                d.label,
+                d.baseline_score,
+                d.current_score,
+                d.delta * 100.0,
+                verdict
+            );
+        }
+        for m in &self.missing {
+            let _ = writeln!(out, "{m:<44} MISSING from current run");
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
+/// Relative degradation of one metric (positive = got worse). Missing
+/// values (NaN) on either side contribute nothing.
+fn degradation(baseline: f64, current: f64, lower_is_better: bool) -> f64 {
+    if !baseline.is_finite() || !current.is_finite() || baseline <= 0.0 {
+        return 0.0;
+    }
+    if lower_is_better {
+        (current - baseline) / baseline
+    } else {
+        (baseline - current) / baseline
+    }
+}
+
+/// The metric that moved most against the current run.
+fn worst_axis(baseline: &BenchRow, current: &BenchRow) -> &'static str {
+    let axes = [
+        ("throughput", degradation(baseline.throughput, current.throughput, false)),
+        ("p50_ms", degradation(baseline.p50_ms, current.p50_ms, true)),
+        ("p99_ms", degradation(baseline.p99_ms, current.p99_ms, true)),
+    ];
+    let mut worst = ("none", 0.0);
+    for (name, d) in axes {
+        if d > worst.1 {
+            worst = (name, d);
+        }
+    }
+    worst.0
+}
+
+/// Diff `current` against `baseline`, row by row, matched by label.
+/// Rows only in `current` are ignored (a grown sweep is fine); rows
+/// only in `baseline` are failures. Scores come from the BENCH-schema
+/// fields on both sides, so emitter and parser disagree on nothing.
+pub fn compare_rows(baseline: &BenchJson, current: &BenchJson) -> CompareOutcome {
+    let mut out = CompareOutcome { experiment: baseline.experiment.clone(), ..Default::default() };
+    for brow in &baseline.rows {
+        let Some(crow) = current.rows.iter().find(|r| r.label == brow.label) else {
+            // A measured pin that disappeared is a failure; a bootstrap
+            // pin (score 0 — no measured numbers yet, see DESIGN.md
+            // §Sweeps) reserves the label without gating on it.
+            if composite_score(&ScoreInputs::from_bench_row(brow)) > 0.0 {
+                out.missing.push(brow.label.clone());
+            } else {
+                out.notes.push(format!(
+                    "bootstrap pin {} absent from this run — regenerate baselines",
+                    brow.label
+                ));
+            }
+            continue;
+        };
+        let bscore = composite_score(&ScoreInputs::from_bench_row(brow));
+        let cscore = composite_score(&ScoreInputs::from_bench_row(crow));
+        let delta = if bscore > 0.0 { (cscore - bscore) / bscore } else { 0.0 };
+        out.deltas.push(RowDelta {
+            label: brow.label.clone(),
+            baseline_score: bscore,
+            current_score: cscore,
+            delta,
+            axis: if delta < 0.0 { worst_axis(brow, crow) } else { "none" },
+            regressed: delta < -TOLERANCE,
+        });
+    }
+    out
+}
+
+/// Compare every `BENCH_*.json` under `dir` (sorted by file name):
+///
+/// * sweep baselines (`experiment` starting with `sweep_`) diff
+///   against `current_sweep` — the rows this invocation just produced;
+/// * experiment baselines (x3..x7) re-run their deterministic bench
+///   rows via [`crate::harness::experiments::bench_json_for`] at the
+///   **file's** recorded seed and diff against those;
+/// * wall-clock baselines (x10) are pinned for the trajectory but
+///   skipped by the gate — their numbers depend on the machine, not
+///   the code.
+///
+/// Returns the rendered report, or `Err(report)` if any pinned row
+/// regressed or went missing.
+pub fn compare_dir(
+    dir: &Path,
+    current_sweep: &BenchJson,
+    root_seed: u64,
+) -> Result<String, String> {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read baseline dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no BENCH_*.json baselines under {}", dir.display()));
+    }
+
+    let mut report = String::new();
+    let mut failures: Vec<String> = Vec::new();
+    for path in files {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string();
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read baseline {}: {e}", path.display()))?;
+        let baseline = BenchJson::parse(&text).map_err(|e| format!("{name}: {e}"))?;
+
+        let outcome = if baseline.experiment.starts_with("sweep_") {
+            if baseline.experiment != current_sweep.experiment {
+                let _ = writeln!(
+                    report,
+                    "note: {name} pins {:?} but this run is {:?} — skipped \
+                     (run the matching --mode to gate it)",
+                    baseline.experiment, current_sweep.experiment
+                );
+                continue;
+            }
+            if baseline.seed != root_seed {
+                failures.push(format!(
+                    "{name}: baseline pinned at root seed {} but this run used {} — \
+                     re-run with --seed {} (labels would not line up)",
+                    baseline.seed, root_seed, baseline.seed
+                ));
+                continue;
+            }
+            compare_rows(&baseline, current_sweep)
+        } else if baseline.experiment == "x10" || baseline.experiment == "recovery" {
+            let _ = writeln!(
+                report,
+                "note: {name} pins wall-clock recovery rows — trajectory only, not gated"
+            );
+            continue;
+        } else {
+            match crate::harness::experiments::bench_json_for(&baseline.experiment, baseline.seed)
+            {
+                Some(current) => compare_rows(&baseline, &current),
+                None => {
+                    failures.push(format!(
+                        "{name}: unknown experiment {:?} — stale baseline?",
+                        baseline.experiment
+                    ));
+                    continue;
+                }
+            }
+        };
+        report.push_str(&outcome.render());
+        failures.extend(outcome.failures());
+    }
+
+    if failures.is_empty() {
+        let _ = writeln!(report, "compare: all pinned configurations within {:.0}%", TOLERANCE * 100.0);
+        Ok(report)
+    } else {
+        for f in &failures {
+            let _ = writeln!(report, "FAIL: {f}");
+        }
+        Err(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(label: &str, tput: f64, p50: f64, p99: f64) -> BenchRow {
+        BenchRow {
+            label: label.into(),
+            throughput: tput,
+            p50_ms: p50,
+            p99_ms: p99,
+            offered_per_sec: 4000.0,
+        }
+    }
+
+    fn bench(rows: Vec<BenchRow>) -> BenchJson {
+        BenchJson { experiment: "sweep_smoke".into(), seed: 42, rows }
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let b = bench(vec![row("a", 1000.0, 0.5, 2.0), row("b", 500.0, 1.0, 4.0)]);
+        let out = compare_rows(&b, &b.clone());
+        assert!(out.passed(), "{:?}", out.failures());
+        assert!(out.deltas.iter().all(|d| d.delta.abs() < 1e-12));
+    }
+
+    #[test]
+    fn degraded_run_fails_naming_config_and_axis() {
+        let baseline = bench(vec![row("good", 1000.0, 0.5, 2.0), row("bad", 1000.0, 0.5, 2.0)]);
+        // "bad" loses 50% throughput — well past the 10% tolerance.
+        let current = bench(vec![row("good", 1000.0, 0.5, 2.0), row("bad", 500.0, 0.5, 2.0)]);
+        let out = compare_rows(&baseline, &current);
+        assert!(!out.passed());
+        let failures = out.failures();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("bad"), "{failures:?}");
+        assert!(failures[0].contains("throughput"), "{failures:?}");
+        assert!(!failures.iter().any(|f| f.contains("good")), "{failures:?}");
+    }
+
+    #[test]
+    fn latency_regression_names_the_latency_axis() {
+        let baseline = bench(vec![row("cfg", 1000.0, 0.5, 2.0)]);
+        let current = bench(vec![row("cfg", 1000.0, 0.5, 9.0)]);
+        let out = compare_rows(&baseline, &current);
+        assert!(!out.passed());
+        assert!(out.failures()[0].contains("p99_ms"), "{:?}", out.failures());
+    }
+
+    #[test]
+    fn improved_run_passes_and_reports_the_delta() {
+        let baseline = bench(vec![row("cfg", 1000.0, 0.5, 2.0)]);
+        let current = bench(vec![row("cfg", 1500.0, 0.4, 1.5)]);
+        let out = compare_rows(&baseline, &current);
+        assert!(out.passed());
+        assert!(out.deltas[0].delta > 0.0);
+        let rendered = out.render();
+        assert!(rendered.contains("improved"), "{rendered}");
+        assert!(rendered.contains('+'), "delta missing from {rendered}");
+    }
+
+    #[test]
+    fn small_wobble_within_tolerance_passes() {
+        let baseline = bench(vec![row("cfg", 1000.0, 0.5, 2.0)]);
+        let current = bench(vec![row("cfg", 950.0, 0.5, 2.1)]);
+        let out = compare_rows(&baseline, &current);
+        assert!(out.passed(), "{:?}", out.failures());
+    }
+
+    #[test]
+    fn missing_pinned_config_fails_extra_rows_pass() {
+        let baseline = bench(vec![row("kept", 1000.0, 0.5, 2.0), row("gone", 1.0, 0.5, 2.0)]);
+        let current = bench(vec![row("kept", 1000.0, 0.5, 2.0), row("new", 9.0, 0.5, 2.0)]);
+        let out = compare_rows(&baseline, &current);
+        let failures = out.failures();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("gone"), "{failures:?}");
+        assert!(failures[0].contains("missing"), "{failures:?}");
+    }
+
+    #[test]
+    fn missing_bootstrap_pin_is_a_note_not_a_failure() {
+        // A bootstrap baseline row (all-null metrics, score 0) reserves
+        // its label; its absence must not fail the gate.
+        let baseline = bench(vec![row("pinned_later", f64::NAN, f64::NAN, f64::NAN)]);
+        let current = bench(vec![row("something_else", 900.0, 0.5, 2.0)]);
+        let out = compare_rows(&baseline, &current);
+        assert!(out.passed(), "{:?}", out.failures());
+        assert_eq!(out.notes.len(), 1);
+        assert!(out.notes[0].contains("pinned_later"), "{:?}", out.notes);
+    }
+
+    #[test]
+    fn zero_score_baseline_cannot_regress() {
+        // A degenerate pinned row (zero completed) can't fail the gate
+        // on a relative delta — there is nothing to regress from.
+        let baseline = bench(vec![row("dead", 0.0, f64::NAN, f64::NAN)]);
+        let current = bench(vec![row("dead", 0.0, f64::NAN, f64::NAN)]);
+        assert!(compare_rows(&baseline, &current).passed());
+        let better = bench(vec![row("dead", 100.0, 1.0, 2.0)]);
+        assert!(compare_rows(&baseline, &better).passed());
+    }
+}

@@ -1,0 +1,271 @@
+//! `repro sweep` — deterministic parameter-space sweeps with committed
+//! perf baselines and a regression gate (DESIGN.md §Sweeps).
+//!
+//! The pipeline, end to end:
+//!
+//! 1. [`space`] enumerates the parameter grid (batching × shards ×
+//!    read mix × loss × reconfig cadence × leases × snapshots) or
+//!    draws a seeded sample of it;
+//! 2. [`runner`] executes each configuration as a self-contained
+//!    seeded simulation, in parallel across cores, each seed derived
+//!    from `(root seed, label)` so any row replays in isolation;
+//! 3. [`score`] folds each run into a composite health score
+//!    (throughput × latency factors × staleness × log growth);
+//! 4. this module renders the artifacts — a strict BENCH-schema JSON
+//!    (`BENCH_sweep_<mode>.json`) and a richer CSV — and ranks
+//!    configurations;
+//! 5. [`compare`] diffs against committed baselines under
+//!    `benches/baselines/`, failing on a >10% composite regression.
+//!
+//! Everything downstream of the root seed is deterministic: two sweeps
+//! with the same mode and seed produce byte-identical artifacts, on
+//! any machine, at any `--jobs` level.
+
+pub mod compare;
+pub mod runner;
+pub mod score;
+pub mod space;
+
+pub use compare::{compare_dir, compare_rows, CompareOutcome, RowDelta, TOLERANCE};
+pub use runner::{run_config, run_sweep, SweepRow};
+pub use score::{composite_score, ScoreInputs, LOG_GROWTH_NORM};
+pub use space::{ParameterSpace, SweepConfig};
+
+use crate::harness::report::{BenchJson, BenchRow};
+use crate::{Time, SEC};
+use std::fmt::Write as _;
+
+/// How many configurations the smoke sweep samples from the grid.
+pub const SMOKE_CONFIGS: usize = 56;
+
+/// A sweep preset: which slice of the space runs, and for how long.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// CI fast loop: a seeded sample of [`SMOKE_CONFIGS`] grid points,
+    /// 1 s of virtual time each.
+    Smoke,
+    /// Release job: the full cartesian grid, 2 s of virtual time each.
+    Full,
+}
+
+impl SweepMode {
+    pub fn parse(s: &str) -> Option<SweepMode> {
+        match s {
+            "smoke" => Some(SweepMode::Smoke),
+            "full" => Some(SweepMode::Full),
+            _ => None,
+        }
+    }
+
+    /// The BENCH `experiment` name ("sweep_smoke" / "sweep_full").
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepMode::Smoke => "sweep_smoke",
+            SweepMode::Full => "sweep_full",
+        }
+    }
+
+    /// Virtual-time horizon per configuration.
+    pub fn duration(&self) -> Time {
+        match self {
+            SweepMode::Smoke => SEC,
+            SweepMode::Full => 2 * SEC,
+        }
+    }
+
+    /// The mode's configuration list — a pure function of the root
+    /// seed (the smoke sample is drawn with it; the full grid ignores
+    /// it).
+    pub fn configs(&self, root_seed: u64) -> Vec<SweepConfig> {
+        let space = ParameterSpace::default();
+        match self {
+            SweepMode::Smoke => space.sample(SMOKE_CONFIGS, root_seed),
+            SweepMode::Full => space.grid(),
+        }
+    }
+}
+
+/// Render sweep rows as a strict BENCH-schema document (the same shape
+/// `repro exp --bench-json` emits, so baselines and experiment benches
+/// share parsers, emitters, and the compare gate).
+pub fn to_bench_json(rows: &[SweepRow], mode: SweepMode, root_seed: u64) -> BenchJson {
+    BenchJson {
+        experiment: mode.name().to_string(),
+        seed: root_seed,
+        rows: rows
+            .iter()
+            .map(|r| BenchRow {
+                label: r.config.label(),
+                throughput: r.throughput,
+                p50_ms: r.p50_ms,
+                p99_ms: r.p99_ms,
+                offered_per_sec: r.offered_per_sec,
+            })
+            .collect(),
+    }
+}
+
+/// The richer CSV report: BENCH columns plus the health components the
+/// BENCH schema doesn't carry (delivery, staleness, log growth,
+/// violations, seed, composite score). One row per configuration, in
+/// run order.
+pub fn to_csv(rows: &[SweepRow]) -> String {
+    let mut out = String::from(
+        "label,seed,throughput,p50_ms,p99_ms,offered_per_sec,delivery_ratio,\
+         stale_reads,max_log_len,violation,score\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{},{},{:.3},{:.4},{:.4},{:.3},{:.4},{},{},{},{:.4}",
+            r.config.label(),
+            r.seed,
+            r.throughput,
+            r.p50_ms,
+            r.p99_ms,
+            r.offered_per_sec,
+            r.delivery_ratio,
+            r.stale_reads.map_or("unchecked".to_string(), |n| n.to_string()),
+            r.max_log_len,
+            r.violation.as_deref().unwrap_or("").replace(',', ";"),
+            r.score,
+        );
+    }
+    out
+}
+
+/// Indices of `rows` ranked best-first by composite score, ties broken
+/// by label so the ranking is total and deterministic.
+pub fn ranked(rows: &[SweepRow]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..rows.len()).collect();
+    idx.sort_by(|&a, &b| {
+        rows[b]
+            .score
+            .partial_cmp(&rows[a].score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| rows[a].config.label().cmp(&rows[b].config.label()))
+    });
+    idx
+}
+
+/// Human summary printed after a sweep: totals, violations, and the
+/// best/worst-ranked configurations.
+pub fn render_summary(rows: &[SweepRow], mode: SweepMode, root_seed: u64) -> String {
+    let mut out = String::new();
+    let violations = rows.iter().filter(|r| r.violation.is_some()).count();
+    let _ = writeln!(
+        out,
+        "sweep {}: {} configurations, root seed {}, {} violation(s)",
+        mode.name(),
+        rows.len(),
+        root_seed,
+        violations
+    );
+    let order = ranked(rows);
+    let show = |out: &mut String, i: usize| {
+        let r = &rows[i];
+        let _ = writeln!(
+            out,
+            "  {:<44} score {:>10.3}  tput {:>9.1}/s  p99 {:>7.3} ms{}",
+            r.config.label(),
+            r.score,
+            r.throughput,
+            r.p99_ms,
+            r.violation.as_deref().map(|v| format!("  VIOLATION: {v}")).unwrap_or_default(),
+        );
+    };
+    let top = order.len().min(5);
+    let _ = writeln!(out, "top {top}:");
+    for &i in order.iter().take(top) {
+        show(&mut out, i);
+    }
+    if order.len() > top {
+        let _ = writeln!(out, "bottom {top}:");
+        for &i in order.iter().rev().take(top).rev() {
+            show(&mut out, i);
+        }
+    }
+    for r in rows.iter().filter(|r| r.violation.is_some()) {
+        let _ = writeln!(
+            out,
+            "VIOLATION {} (seed {}): {}",
+            r.config.label(),
+            r.seed,
+            r.violation.as_deref().unwrap_or("")
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_row(label_batch: usize, score: f64) -> SweepRow {
+        let config = SweepConfig {
+            batch_size: label_batch,
+            shards: 1,
+            read_pct: 0,
+            loss_pm: 0,
+            reconfig_ms: None,
+            leases: false,
+            snapshots: false,
+        };
+        SweepRow {
+            seed: config.seed(42),
+            config,
+            throughput: score,
+            p50_ms: 0.5,
+            p99_ms: 2.0,
+            offered_per_sec: 4000.0,
+            delivery_ratio: 0.99,
+            stale_reads: None,
+            max_log_len: 100,
+            violation: None,
+            score,
+        }
+    }
+
+    #[test]
+    fn modes_parse_and_describe_themselves() {
+        assert_eq!(SweepMode::parse("smoke"), Some(SweepMode::Smoke));
+        assert_eq!(SweepMode::parse("full"), Some(SweepMode::Full));
+        assert_eq!(SweepMode::parse("bogus"), None);
+        assert_eq!(SweepMode::Smoke.name(), "sweep_smoke");
+        assert_eq!(SweepMode::Full.name(), "sweep_full");
+        assert_eq!(SweepMode::Smoke.configs(42).len(), SMOKE_CONFIGS);
+        assert!(SMOKE_CONFIGS >= 50, "smoke mode must run at least 50 configurations");
+        assert_eq!(SweepMode::Full.configs(42).len(), ParameterSpace::default().len());
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_shared_schema() {
+        let rows = vec![fake_row(1, 900.0), fake_row(8, 1200.0)];
+        let j = to_bench_json(&rows, SweepMode::Smoke, 42);
+        let parsed = BenchJson::parse(&j.to_json()).expect("sweep BENCH output must parse");
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.experiment, "sweep_smoke");
+        assert_eq!(parsed.rows[0].label, rows[0].config.label());
+    }
+
+    #[test]
+    fn csv_has_header_and_one_line_per_row() {
+        let rows = vec![fake_row(1, 900.0), fake_row(8, 1200.0)];
+        let csv = to_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("label,seed,throughput"));
+        assert!(lines[1].starts_with(&rows[0].config.label()));
+    }
+
+    #[test]
+    fn ranking_is_best_first_and_deterministic() {
+        let rows = vec![fake_row(1, 900.0), fake_row(8, 1200.0), fake_row(32, 1100.0)];
+        let order = ranked(&rows);
+        assert_eq!(order, vec![1, 2, 0]);
+        assert_eq!(order, ranked(&rows));
+        let summary = render_summary(&rows, SweepMode::Smoke, 42);
+        assert!(summary.contains("3 configurations"));
+        assert!(summary.contains("b8_"), "{summary}");
+    }
+}

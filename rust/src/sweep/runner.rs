@@ -1,0 +1,325 @@
+//! Executes sweep configurations on the deterministic simulator, in
+//! parallel across cores (DESIGN.md §Sweeps).
+//!
+//! Each configuration is a self-contained run: its own `Sim`, its own
+//! seed derived from `(root seed, label)` — so results are independent
+//! of worker count, scheduling order, and which other configs ran.
+//! Workers pull config indices from an atomic counter and write rows
+//! into their grid slot; the returned vector is in input order, and
+//! two sweeps with the same root seed are byte-identical.
+
+use super::score::{composite_score, ScoreInputs};
+use super::space::SweepConfig;
+use crate::config::{LeaseSpec, OptFlags, SnapshotSpec};
+use crate::harness::{Cluster, ShardedCluster};
+use crate::metrics::{check_counter_reads, open_loop_summary};
+use crate::roles::{Leader, Replica};
+use crate::sim::NetworkModel;
+use crate::statemachine::Counter;
+use crate::workload::WorkloadSpec;
+use crate::{Time, MS, US};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executed configuration: the BENCH-schema fields plus the extra
+/// health components the richer CSV/JSON report carries.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub config: SweepConfig,
+    /// The run's derived simulation seed (`SweepConfig::seed`).
+    pub seed: u64,
+    /// Completed operations per simulated second.
+    pub throughput: f64,
+    /// Median latency, ms (NaN if nothing completed).
+    pub p50_ms: f64,
+    /// 99th-percentile latency, ms (NaN if nothing completed).
+    pub p99_ms: f64,
+    /// Offered arrivals per second.
+    pub offered_per_sec: f64,
+    /// `completed / offered`.
+    pub delivery_ratio: f64,
+    /// Stale linearizable reads (`None` = not checked: sharded runs,
+    /// or a zero read mix).
+    pub stale_reads: Option<u64>,
+    /// High-water chosen-log length across all replicas.
+    pub max_log_len: u64,
+    /// First safety/linearizability violation, if any (zeroes the
+    /// score and is carried into the CSV).
+    pub violation: Option<String>,
+    /// The composite health score ([`super::score::composite_score`]).
+    pub score: f64,
+}
+
+impl SweepRow {
+    /// The score inputs this row folds into its composite.
+    pub fn score_inputs(&self) -> ScoreInputs {
+        ScoreInputs {
+            throughput: if self.violation.is_some() { 0.0 } else { self.throughput },
+            p50_ms: self.p50_ms,
+            p99_ms: self.p99_ms,
+            stale_reads: self.stale_reads,
+            max_log_len: Some(self.max_log_len),
+        }
+    }
+}
+
+/// The shared per-run workload: 4 open-loop clients at 1000 arrivals/s
+/// each, in-flight bound 32, 8-byte `+1` counter increments (so the
+/// unsharded staleness check has counter semantics), read mix per
+/// config. Arrivals stop short of the horizon so in-flight tails drain.
+fn workload_for(cfg: &SweepConfig, duration: Time) -> WorkloadSpec {
+    let stop = duration.saturating_sub(300 * MS).max(duration / 2);
+    WorkloadSpec::open_loop(1000.0)
+        .max_in_flight(32)
+        .payload(1i64.to_le_bytes().to_vec())
+        .read_payload(Vec::new())
+        .read_fraction(cfg.read_fraction())
+        .keys(256)
+        .stop_at(stop)
+}
+
+fn opts_for(cfg: &SweepConfig) -> OptFlags {
+    let mut opts = OptFlags::default().with_batching(cfg.batch_size, 500 * US);
+    if cfg.leases {
+        opts = opts.with_leases(LeaseSpec::every(50 * MS, 5 * MS, 100 * US));
+    }
+    if cfg.snapshots {
+        opts = opts.with_snapshots(SnapshotSpec::every(100 * MS, 1024));
+    }
+    opts
+}
+
+fn net_for(cfg: &SweepConfig) -> NetworkModel {
+    NetworkModel { drop_prob: cfg.loss_rate(), ..NetworkModel::lan() }
+}
+
+/// Reconfiguration-storm issue times: from 30% to 90% of the run at
+/// the configured cadence, capped at 8 (a 500 ms cadence over a 1 s
+/// smoke run gives 1–2 storms; the cap bounds full-mode runs).
+fn storm_times(cfg: &SweepConfig, duration: Time) -> Vec<Time> {
+    let Some(every) = cfg.reconfig_every() else { return Vec::new() };
+    let mut out = Vec::new();
+    let mut t = duration * 3 / 10;
+    while t < duration * 9 / 10 && out.len() < 8 {
+        out.push(t);
+        t += every;
+    }
+    out
+}
+
+/// Run one configuration for `duration` of virtual time and score it.
+/// Pure function of `(cfg, root_seed, duration)` — the isolation
+/// guarantee behind `repro sweep --only`.
+pub fn run_config(cfg: &SweepConfig, root_seed: u64, duration: Time) -> SweepRow {
+    let seed = cfg.seed(root_seed);
+    if cfg.shards > 1 {
+        run_sharded(cfg, seed, duration)
+    } else {
+        run_single(cfg, seed, duration)
+    }
+}
+
+/// Unsharded run: a full [`Cluster`] with Counter replicas, so reads
+/// (when the mix has any) are linearizability-checked against the
+/// global write history — the staleness component of the score.
+fn run_single(cfg: &SweepConfig, seed: u64, duration: Time) -> SweepRow {
+    let mut cluster = Cluster::builder()
+        .clients(4)
+        .workload(workload_for(cfg, duration))
+        .opts(opts_for(cfg))
+        .net(net_for(cfg))
+        .seed(seed)
+        .build();
+    for &r in &cluster.layout.replicas.clone() {
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            rep.sm = Box::new(Counter::new());
+        }
+    }
+    let leader = cluster.initial_leader();
+    for (i, at) in storm_times(cfg, duration).into_iter().enumerate() {
+        let target = cluster.random_config(i as u64 + 1);
+        cluster.sim.schedule(at, move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(target.clone(), now, fx));
+        });
+    }
+    cluster.sim.run_until(duration);
+
+    let mut violation =
+        crate::check::InvariantSet::check_all(&cluster.sim.announces).err().map(|v| v.to_string());
+    let samples = cluster.samples();
+    let (offered, _, _) = cluster.workload_totals();
+    let mut stale_reads = None;
+    if cfg.read_pct > 0 {
+        let reads = cluster.read_records();
+        let (completions, issues) = cluster.write_records();
+        match check_counter_reads(&reads, &completions, &issues) {
+            Ok(()) => stale_reads = Some(0),
+            Err(e) => {
+                stale_reads = Some(1);
+                violation.get_or_insert(e);
+            }
+        }
+    }
+    let max_log_len =
+        cluster.retention_stats().iter().map(|r| r.max_log_len as u64).max().unwrap_or(0);
+    finish_row(cfg, seed, duration, &samples, offered, stale_reads, max_log_len, violation)
+}
+
+/// Sharded run: a [`ShardedCluster`] of `cfg.shards` groups behind one
+/// matchmaker set, Noop state machines (per-key counter semantics
+/// don't compose across groups, so staleness is left to the dedicated
+/// sharded property suites and reported as unchecked here).
+fn run_sharded(cfg: &SweepConfig, seed: u64, duration: Time) -> SweepRow {
+    let mut cluster = ShardedCluster::builder()
+        .shards(cfg.shards)
+        .clients(4)
+        .workload(workload_for(cfg, duration))
+        .opts(opts_for(cfg))
+        .net(net_for(cfg))
+        .seed(seed)
+        .build();
+    let leader = cluster.group_leader(0);
+    for (i, at) in storm_times(cfg, duration).into_iter().enumerate() {
+        let target = cluster.random_config(0, i as u64 + 1);
+        cluster.sim.schedule(at, move |s| {
+            s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(target.clone(), now, fx));
+        });
+    }
+    cluster.sim.run_until(duration);
+
+    let violation =
+        crate::check::InvariantSet::check_all(&cluster.sim.announces).err().map(|v| v.to_string());
+    let samples = cluster.samples();
+    let (offered, _, _) = cluster.workload_totals();
+    let replicas: Vec<crate::NodeId> =
+        cluster.groups.iter().flat_map(|g| g.replicas.iter().copied()).collect();
+    let mut max_log_len = 0u64;
+    for r in replicas {
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            max_log_len = max_log_len.max(rep.max_log_len as u64);
+        }
+    }
+    finish_row(cfg, seed, duration, &samples, offered, None, max_log_len, violation)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_row(
+    cfg: &SweepConfig,
+    seed: u64,
+    duration: Time,
+    samples: &[crate::metrics::Sample],
+    offered: u64,
+    stale_reads: Option<u64>,
+    max_log_len: u64,
+    violation: Option<String>,
+) -> SweepRow {
+    let summary = open_loop_summary(samples, offered, duration);
+    let mut row = SweepRow {
+        config: cfg.clone(),
+        seed,
+        throughput: summary.map_or(0.0, |s| s.completed_per_sec),
+        p50_ms: summary.map_or(f64::NAN, |s| s.latency.median),
+        p99_ms: summary.map_or(f64::NAN, |s| s.latency.p99),
+        offered_per_sec: summary
+            .map_or(offered as f64 / (duration as f64 / 1e9), |s| s.offered_per_sec),
+        delivery_ratio: summary.map_or(0.0, |s| s.delivery_ratio),
+        stale_reads,
+        max_log_len,
+        violation,
+        score: 0.0,
+    };
+    row.score = composite_score(&row.score_inputs());
+    row
+}
+
+/// Run every configuration, `jobs` at a time (`0` = one per available
+/// core). Rows come back in input order regardless of scheduling, so
+/// the sweep's artifacts are deterministic for a fixed root seed.
+pub fn run_sweep(
+    configs: &[SweepConfig],
+    root_seed: u64,
+    duration: Time,
+    jobs: usize,
+) -> Vec<SweepRow> {
+    let jobs = if jobs == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        jobs
+    }
+    .min(configs.len().max(1));
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<SweepRow>>> = Mutex::new(vec![None; configs.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= configs.len() {
+                    break;
+                }
+                let row = run_config(&configs[i], root_seed, duration);
+                slots.lock().expect("sweep worker panicked").as_mut_slice()[i] = Some(row);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("sweep worker panicked")
+        .into_iter()
+        .map(|r| r.expect("every config slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SEC;
+
+    fn quick_cfg() -> SweepConfig {
+        SweepConfig {
+            batch_size: 8,
+            shards: 1,
+            read_pct: 0,
+            loss_pm: 0,
+            reconfig_ms: None,
+            leases: false,
+            snapshots: false,
+        }
+    }
+
+    #[test]
+    fn single_config_runs_and_scores() {
+        let row = run_config(&quick_cfg(), 42, SEC / 2);
+        assert!(row.violation.is_none(), "{:?}", row.violation);
+        assert!(row.throughput > 100.0, "throughput {}", row.throughput);
+        assert!(row.score > 0.0);
+        assert!(row.p50_ms.is_finite());
+        assert_eq!(row.stale_reads, None, "all-write mix is not staleness-checked");
+    }
+
+    #[test]
+    fn sharded_config_runs_and_scores() {
+        let cfg = SweepConfig { shards: 2, ..quick_cfg() };
+        let row = run_config(&cfg, 42, SEC / 2);
+        assert!(row.violation.is_none(), "{:?}", row.violation);
+        assert!(row.throughput > 100.0, "throughput {}", row.throughput);
+        assert_eq!(row.stale_reads, None);
+    }
+
+    #[test]
+    fn read_mix_is_staleness_checked_when_unsharded() {
+        let cfg = SweepConfig { read_pct: 50, leases: true, ..quick_cfg() };
+        let row = run_config(&cfg, 42, SEC / 2);
+        assert_eq!(row.stale_reads, Some(0), "violation: {:?}", row.violation);
+        assert!(row.score > 0.0);
+    }
+
+    #[test]
+    fn storm_times_respect_cadence_and_cap() {
+        let cfg = SweepConfig { reconfig_ms: Some(100), ..quick_cfg() };
+        let times = storm_times(&cfg, SEC);
+        assert!(times.len() >= 2 && times.len() <= 8, "{times:?}");
+        assert_eq!(times[0], SEC * 3 / 10);
+        assert!(storm_times(&quick_cfg(), SEC).is_empty());
+    }
+}

@@ -1,0 +1,208 @@
+//! The composite health score: one scalar per sweep row, used to rank
+//! configurations and to gate the baseline compare (DESIGN.md §Sweeps).
+//!
+//! The score folds throughput, tail latency, read staleness, and log
+//! growth into a product of factors, each monotone in its component:
+//!
+//! ```text
+//! score = throughput                         (ops/s; 0 completed → 0)
+//!       × 1 / (1 + p50_ms)                   (missing/NaN → 1)
+//!       × 1 / (1 + p99_ms)                   (missing/NaN → 1)
+//!       × 0 if any stale read else 1         (unchecked → 1)
+//!       × 1 / (1 + max_log_len / 10_000)     (unchecked → 1)
+//! ```
+//!
+//! Multiplicative factors keep the score monotone in every component
+//! (more throughput is never worse, higher p99 is never better) while
+//! letting missing components degrade to a neutral `1` — a BENCH row
+//! that carries only throughput still scores, so the compare gate can
+//! diff rows produced by emitters that don't measure every column.
+//! Stale reads are a correctness failure, not a tradeoff, so they zero
+//! the score outright.
+
+use crate::harness::report::BenchRow;
+
+/// Chosen-log high-water mark at which the log-growth factor halves —
+/// roughly the X5 acceptance bound (tail + interval growth).
+pub const LOG_GROWTH_NORM: f64 = 10_000.0;
+
+/// Everything the score consumes. `f64::NAN` marks an unmeasured
+/// latency; `None` marks an unchecked component.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScoreInputs {
+    /// Completed operations per simulated second.
+    pub throughput: f64,
+    /// Median latency, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile latency, ms.
+    pub p99_ms: f64,
+    /// Stale linearizable reads observed (`None` = staleness not
+    /// checked for this configuration, e.g. sharded runs).
+    pub stale_reads: Option<u64>,
+    /// High-water chosen-log length across replicas (`None` = not
+    /// harvested, e.g. rows parsed from BENCH files).
+    pub max_log_len: Option<u64>,
+}
+
+impl ScoreInputs {
+    /// Score a bare BENCH-schema row (throughput/p50/p99 only; the
+    /// staleness and log-growth components are neutral). This is what
+    /// the compare gate uses on both sides of a diff, so baseline and
+    /// current rows are always scored over the same fields.
+    pub fn from_bench_row(r: &BenchRow) -> ScoreInputs {
+        ScoreInputs {
+            throughput: r.throughput,
+            p50_ms: r.p50_ms,
+            p99_ms: r.p99_ms,
+            stale_reads: None,
+            max_log_len: None,
+        }
+    }
+}
+
+/// A latency factor: `1 / (1 + ms)`, neutral (`1`) when the component
+/// was not measured. Strictly decreasing in `ms` over `[0, ∞)`.
+fn latency_factor(ms: f64) -> f64 {
+    if ms.is_finite() && ms >= 0.0 {
+        1.0 / (1.0 + ms)
+    } else {
+        1.0
+    }
+}
+
+/// Compute the composite health score. Degenerate rows (zero or
+/// non-finite throughput — a run that completed nothing) score 0.
+pub fn composite_score(s: &ScoreInputs) -> f64 {
+    if !s.throughput.is_finite() || s.throughput <= 0.0 {
+        return 0.0;
+    }
+    let stale = match s.stale_reads {
+        Some(n) if n > 0 => 0.0,
+        _ => 1.0,
+    };
+    let log = match s.max_log_len {
+        Some(len) => 1.0 / (1.0 + len as f64 / LOG_GROWTH_NORM),
+        None => 1.0,
+    };
+    s.throughput * latency_factor(s.p50_ms) * latency_factor(s.p99_ms) * stale * log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ScoreInputs {
+        ScoreInputs {
+            throughput: 1000.0,
+            p50_ms: 0.5,
+            p99_ms: 2.0,
+            stale_reads: Some(0),
+            max_log_len: Some(1000),
+        }
+    }
+
+    #[test]
+    fn monotone_in_throughput() {
+        let lo = composite_score(&base());
+        let hi = composite_score(&ScoreInputs { throughput: 2000.0, ..base() });
+        assert!(hi > lo, "more throughput must score higher: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn monotone_in_p50() {
+        let good = composite_score(&base());
+        let bad = composite_score(&ScoreInputs { p50_ms: 5.0, ..base() });
+        assert!(bad < good, "higher p50 must score lower: {bad} vs {good}");
+    }
+
+    #[test]
+    fn monotone_in_p99() {
+        let good = composite_score(&base());
+        let bad = composite_score(&ScoreInputs { p99_ms: 50.0, ..base() });
+        assert!(bad < good, "higher p99 must score lower: {bad} vs {good}");
+    }
+
+    #[test]
+    fn monotone_in_log_growth() {
+        let good = composite_score(&base());
+        let bad = composite_score(&ScoreInputs { max_log_len: Some(100_000), ..base() });
+        assert!(bad < good, "more log growth must score lower: {bad} vs {good}");
+    }
+
+    #[test]
+    fn stale_reads_zero_the_score() {
+        assert!(composite_score(&base()) > 0.0);
+        assert_eq!(composite_score(&ScoreInputs { stale_reads: Some(1), ..base() }), 0.0);
+        assert_eq!(composite_score(&ScoreInputs { stale_reads: Some(7), ..base() }), 0.0);
+    }
+
+    #[test]
+    fn degenerate_rows_score_zero() {
+        // Zero completed commands.
+        assert_eq!(composite_score(&ScoreInputs { throughput: 0.0, ..base() }), 0.0);
+        // Nonsense throughput (an emitter bug) must not rank first.
+        assert_eq!(composite_score(&ScoreInputs { throughput: f64::NAN, ..base() }), 0.0);
+        assert_eq!(
+            composite_score(&ScoreInputs { throughput: f64::INFINITY, ..base() }),
+            0.0
+        );
+        assert_eq!(composite_score(&ScoreInputs { throughput: -5.0, ..base() }), 0.0);
+    }
+
+    #[test]
+    fn missing_components_are_neutral() {
+        // Missing p99 (closed-loop BENCH rows): the p99 factor is 1,
+        // so the score equals the same row with p99 = 0.
+        let no_p99 = composite_score(&ScoreInputs { p99_ms: f64::NAN, ..base() });
+        let zero_p99 = composite_score(&ScoreInputs { p99_ms: 0.0, ..base() });
+        assert!((no_p99 - zero_p99).abs() < 1e-9);
+        // Unchecked staleness / log growth: neutral, not zero.
+        let unchecked = composite_score(&ScoreInputs {
+            stale_reads: None,
+            max_log_len: None,
+            ..base()
+        });
+        assert!(unchecked > 0.0);
+    }
+
+    #[test]
+    fn ranking_is_stable_across_recomputation() {
+        // Scoring is a pure function: ranking a fixed row set twice
+        // gives the same order (no hidden state, no clock).
+        let rows: Vec<ScoreInputs> = (1..=20)
+            .map(|i| ScoreInputs {
+                throughput: 100.0 * i as f64,
+                p50_ms: 0.1 * i as f64,
+                p99_ms: 0.7 * (21 - i) as f64,
+                stale_reads: Some(0),
+                max_log_len: Some(500 * i as u64),
+            })
+            .collect();
+        let rank = |rows: &[ScoreInputs]| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..rows.len()).collect();
+            idx.sort_by(|&a, &b| {
+                composite_score(&rows[b])
+                    .partial_cmp(&composite_score(&rows[a]))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            idx
+        };
+        assert_eq!(rank(&rows), rank(&rows));
+    }
+
+    #[test]
+    fn bench_row_scoring_uses_only_bench_fields() {
+        let r = BenchRow {
+            label: "x".into(),
+            throughput: 1000.0,
+            p50_ms: 0.5,
+            p99_ms: f64::NAN,
+            offered_per_sec: 2000.0,
+        };
+        let s = ScoreInputs::from_bench_row(&r);
+        assert_eq!(s.stale_reads, None);
+        assert_eq!(s.max_log_len, None);
+        assert!(composite_score(&s) > 0.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! The sweep's parameter space: every knob the repro's perf claims
+//! depend on, swept as an axis (DESIGN.md §Sweeps).
+//!
+//! A [`SweepConfig`] is one point in the space — all-integer fields so
+//! labels round-trip exactly and the grid order is total. The
+//! [`ParameterSpace`] enumerates the full cartesian grid in a fixed
+//! axis order, or draws a seeded-random sample from it (the smoke
+//! sweep); both are deterministic functions of their inputs.
+
+use crate::util::{Fnv, Rng};
+use crate::{Time, MS};
+
+/// One configuration of the sweep: a single simulated run's knobs.
+/// Fields are integers (percent / per-mille / ms) so that `label()` is
+/// an exact, parseable identity and configs are `Eq`/`Ord`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SweepConfig {
+    /// Phase 2 batch size (`OptFlags::batch_size`; 1 = unbatched).
+    pub batch_size: usize,
+    /// Consensus groups sharing one matchmaker set (1 = unsharded).
+    pub shards: usize,
+    /// Percent of requests issued as linearizable reads (0..=100).
+    pub read_pct: u8,
+    /// Network message-drop probability in per-mille (10 = 1%).
+    pub loss_pm: u32,
+    /// Reconfiguration cadence in ms (`None` = no reconfig storm).
+    pub reconfig_ms: Option<u64>,
+    /// Leader read leases on (`LeaseSpec`)?
+    pub leases: bool,
+    /// Replica snapshots + log truncation on (`SnapshotSpec`)?
+    pub snapshots: bool,
+}
+
+impl SweepConfig {
+    /// The config's identity: a stable label every artifact keys on
+    /// (BENCH rows, CSV rows, compare diagnostics, `--only`).
+    pub fn label(&self) -> String {
+        format!(
+            "b{}_s{}_r{}_loss{}_rc{}_{}_{}",
+            self.batch_size,
+            self.shards,
+            self.read_pct,
+            self.loss_pm,
+            match self.reconfig_ms {
+                Some(ms) => ms.to_string(),
+                None => "off".to_string(),
+            },
+            if self.leases { "lease" } else { "nolease" },
+            if self.snapshots { "snap" } else { "nosnap" },
+        )
+    }
+
+    /// Drop probability as a fraction.
+    pub fn loss_rate(&self) -> f64 {
+        self.loss_pm as f64 / 1000.0
+    }
+
+    /// Read fraction as a fraction.
+    pub fn read_fraction(&self) -> f64 {
+        self.read_pct as f64 / 100.0
+    }
+
+    /// Reconfiguration cadence in virtual time.
+    pub fn reconfig_every(&self) -> Option<Time> {
+        self.reconfig_ms.map(|ms| ms * MS)
+    }
+
+    /// The run's simulation seed, derived from the root seed and the
+    /// config's label (DESIGN.md §Sweeps: `splitmix64(root) ^
+    /// fnv1a64(label)`), so any row is replayable in isolation with
+    /// `repro sweep --only LABEL --seed ROOT` — no dependence on the
+    /// config's position in the grid or on which other configs ran.
+    pub fn seed(&self, root: u64) -> u64 {
+        let mut h = Fnv::new();
+        h.write_str(&self.label());
+        splitmix64(root) ^ h.finish()
+    }
+}
+
+/// One splitmix64 step — the standard seed spreader, so nearby root
+/// seeds don't produce correlated per-config seeds.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// The axes of the sweep. `ParameterSpace::default()` is the full
+/// space the release-job sweep grids over; tests shrink the axes to
+/// keep runtimes bounded.
+#[derive(Clone, Debug)]
+pub struct ParameterSpace {
+    pub batch_sizes: Vec<usize>,
+    pub shards: Vec<usize>,
+    pub read_pcts: Vec<u8>,
+    pub loss_pms: Vec<u32>,
+    pub reconfig_ms: Vec<Option<u64>>,
+    pub leases: Vec<bool>,
+    pub snapshots: Vec<bool>,
+}
+
+impl Default for ParameterSpace {
+    fn default() -> Self {
+        ParameterSpace {
+            batch_sizes: vec![1, 8, 32],
+            shards: vec![1, 2, 4],
+            read_pcts: vec![0, 50, 90],
+            loss_pms: vec![0, 10],
+            reconfig_ms: vec![None, Some(500)],
+            leases: vec![false, true],
+            snapshots: vec![false, true],
+        }
+    }
+}
+
+impl ParameterSpace {
+    /// Number of grid points.
+    pub fn len(&self) -> usize {
+        self.batch_sizes.len()
+            * self.shards.len()
+            * self.read_pcts.len()
+            * self.loss_pms.len()
+            * self.reconfig_ms.len()
+            * self.leases.len()
+            * self.snapshots.len()
+    }
+
+    /// Whether the space is empty (an axis with no values).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The full cartesian grid in fixed axis order (batch → shards →
+    /// read mix → loss → reconfig cadence → leases → snapshots), so
+    /// grid position is a pure function of the axes.
+    pub fn grid(&self) -> Vec<SweepConfig> {
+        let mut out = Vec::with_capacity(self.len());
+        for &batch_size in &self.batch_sizes {
+            for &shards in &self.shards {
+                for &read_pct in &self.read_pcts {
+                    for &loss_pm in &self.loss_pms {
+                        for &reconfig_ms in &self.reconfig_ms {
+                            for &leases in &self.leases {
+                                for &snapshots in &self.snapshots {
+                                    out.push(SweepConfig {
+                                        batch_size,
+                                        shards,
+                                        read_pct,
+                                        loss_pm,
+                                        reconfig_ms,
+                                        leases,
+                                        snapshots,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// A seeded-random sample of `n` **distinct** grid points: shuffle
+    /// the grid with the root-seeded RNG and take a prefix. Identical
+    /// `(axes, n, seed)` → identical sample, in identical order.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<SweepConfig> {
+        let mut grid = self.grid();
+        let mut rng = Rng::new(splitmix64(seed ^ 0x53ee_b0a7));
+        rng.shuffle(&mut grid);
+        grid.truncate(n);
+        grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::US;
+
+    #[test]
+    fn grid_is_full_cartesian_product() {
+        let space = ParameterSpace::default();
+        let grid = space.grid();
+        assert_eq!(grid.len(), space.len());
+        assert_eq!(grid.len(), 3 * 3 * 3 * 2 * 2 * 2 * 2);
+        // Labels are unique — they're the artifact key.
+        let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), grid.len());
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_distinct() {
+        let space = ParameterSpace::default();
+        let a = space.sample(56, 42);
+        let b = space.sample(56, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 56);
+        let mut labels: Vec<String> = a.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 56, "sampled configs must be distinct");
+        // A different seed draws a different prefix.
+        assert_ne!(space.sample(56, 43), a);
+    }
+
+    #[test]
+    fn seed_depends_only_on_root_and_label() {
+        let cfg = SweepConfig {
+            batch_size: 8,
+            shards: 2,
+            read_pct: 50,
+            loss_pm: 10,
+            reconfig_ms: Some(500),
+            leases: true,
+            snapshots: false,
+        };
+        assert_eq!(cfg.seed(42), cfg.clone().seed(42));
+        assert_ne!(cfg.seed(42), cfg.seed(43));
+        let mut other = cfg.clone();
+        other.batch_size = 1;
+        assert_ne!(cfg.seed(42), other.seed(42));
+    }
+
+    #[test]
+    fn label_encodes_every_axis() {
+        let cfg = SweepConfig {
+            batch_size: 32,
+            shards: 4,
+            read_pct: 90,
+            loss_pm: 10,
+            reconfig_ms: Some(500),
+            leases: true,
+            snapshots: true,
+        };
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rc500_lease_snap");
+        let cfg = SweepConfig { reconfig_ms: None, leases: false, snapshots: false, ..cfg };
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rcoff_nolease_nosnap");
+    }
+
+    #[test]
+    fn conversions() {
+        let cfg = SweepConfig {
+            batch_size: 1,
+            shards: 1,
+            read_pct: 90,
+            loss_pm: 10,
+            reconfig_ms: Some(500),
+            leases: false,
+            snapshots: false,
+        };
+        assert!((cfg.loss_rate() - 0.01).abs() < 1e-12);
+        assert!((cfg.read_fraction() - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.reconfig_every(), Some(500 * MS));
+        assert_eq!(cfg.reconfig_every().unwrap() / US, 500_000);
+    }
+}

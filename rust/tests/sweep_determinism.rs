@@ -1,0 +1,188 @@
+//! Integration tests for `repro sweep` (DESIGN.md §Sweeps): seeded
+//! determinism of the sweep pipeline end to end, and the baseline
+//! regression gate driven through real files on disk.
+
+use matchmaker::harness::report::{BenchJson, BenchRow};
+use matchmaker::sweep::{self, ParameterSpace, SweepConfig, SweepMode};
+use matchmaker::SEC;
+use std::path::PathBuf;
+
+/// A small seeded sample so the double-run determinism tests stay
+/// cheap; the full smoke sample is exercised by `repro sweep` in CI.
+fn small_sample() -> Vec<SweepConfig> {
+    ParameterSpace::default().sample(6, 7)
+}
+
+/// A scratch directory unique to this test binary run.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mm_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+#[test]
+fn smoke_mode_covers_at_least_fifty_distinct_configurations() {
+    let configs = SweepMode::Smoke.configs(42);
+    assert!(configs.len() >= 50, "smoke sweep must run >= 50 configs, got {}", configs.len());
+    let mut labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
+    labels.sort();
+    labels.dedup();
+    assert_eq!(labels.len(), configs.len(), "labels must be distinct");
+    // Per-config seeds are position-independent and pairwise distinct.
+    let mut seeds: Vec<u64> = configs.iter().map(|c| c.seed(42)).collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds.len(), configs.len(), "derived seeds must be distinct");
+}
+
+/// The tentpole determinism guarantee: same configs + same root seed →
+/// byte-identical artifacts (BENCH JSON and CSV, which includes every
+/// composite score), regardless of how many worker threads ran the
+/// sweep or how the scheduler interleaved them.
+#[test]
+fn same_root_seed_is_byte_identical_across_runs_and_job_counts() {
+    let configs = small_sample();
+    let duration = SEC / 2;
+    let a = sweep::run_sweep(&configs, 42, duration, 2);
+    let b = sweep::run_sweep(&configs, 42, duration, 5);
+
+    let json_a = sweep::to_bench_json(&a, SweepMode::Smoke, 42).to_json();
+    let json_b = sweep::to_bench_json(&b, SweepMode::Smoke, 42).to_json();
+    assert_eq!(json_a, json_b, "BENCH artifacts must be byte-identical");
+
+    let csv_a = sweep::to_csv(&a);
+    let csv_b = sweep::to_csv(&b);
+    assert_eq!(csv_a, csv_b, "CSV artifacts must be byte-identical");
+
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(
+            ra.score.to_bits(),
+            rb.score.to_bits(),
+            "composite score must be bit-identical for {}",
+            ra.config.label()
+        );
+    }
+}
+
+/// `repro sweep --only LABEL` replays one configuration in isolation;
+/// its row must match the same label's row from a full parallel sweep
+/// bit for bit (the seed depends only on the root seed and the label).
+#[test]
+fn single_config_replay_matches_its_row_in_a_full_sweep() {
+    let configs = small_sample();
+    let duration = SEC / 2;
+    let rows = sweep::run_sweep(&configs, 42, duration, 3);
+    let target = &rows[configs.len() / 2];
+    let solo = sweep::run_config(&target.config, 42, duration);
+    assert_eq!(solo.seed, target.seed);
+    assert_eq!(solo.throughput.to_bits(), target.throughput.to_bits());
+    assert_eq!(solo.p50_ms.to_bits(), target.p50_ms.to_bits());
+    assert_eq!(solo.p99_ms.to_bits(), target.p99_ms.to_bits());
+    assert_eq!(solo.score.to_bits(), target.score.to_bits());
+    assert_eq!(solo.max_log_len, target.max_log_len);
+}
+
+/// A different root seed re-derives every per-config simulation seed.
+#[test]
+fn different_root_seed_changes_every_derived_seed() {
+    let configs = small_sample();
+    for cfg in &configs {
+        assert_ne!(cfg.seed(42), cfg.seed(43), "{}", cfg.label());
+    }
+}
+
+/// The sweep's BENCH artifact survives a write → read → parse round
+/// trip through the filesystem, via the same schema as `repro exp
+/// --bench-json`.
+#[test]
+fn sweep_bench_artifact_round_trips_through_disk() {
+    let configs = ParameterSpace::default().sample(3, 11);
+    let rows = sweep::run_sweep(&configs, 42, SEC / 2, 0);
+    let bench = sweep::to_bench_json(&rows, SweepMode::Smoke, 42);
+    let dir = scratch("roundtrip");
+    let path = dir.join("BENCH_sweep_smoke.json");
+    std::fs::write(&path, bench.to_json()).unwrap();
+    let parsed = BenchJson::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(parsed, bench);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn fixture_row(label: &str, throughput: f64) -> BenchRow {
+    BenchRow {
+        label: label.to_string(),
+        throughput,
+        p50_ms: 0.5,
+        p99_ms: 2.0,
+        offered_per_sec: 4000.0,
+    }
+}
+
+fn fixture_bench(rows: Vec<BenchRow>) -> BenchJson {
+    BenchJson { experiment: "sweep_smoke".to_string(), seed: 42, rows }
+}
+
+/// The regression gate, driven through real baseline files: a
+/// synthetically degraded run must fail with a diagnostic naming the
+/// offending configuration and its worst axis; an improved run must
+/// pass and print the delta. Wall-clock baselines (x10) are skipped.
+#[test]
+fn compare_dir_gates_regressions_and_passes_improvements() {
+    let dir = scratch("gate");
+    // The committed baseline pins two configurations.
+    let baseline =
+        fixture_bench(vec![fixture_row("cfg_alpha", 1000.0), fixture_row("cfg_beta", 1000.0)]);
+    std::fs::write(dir.join("BENCH_sweep_smoke.json"), baseline.to_json()).unwrap();
+    // An x10 baseline rides along and must be skipped, not re-run.
+    let x10 = BenchJson {
+        experiment: "x10".to_string(),
+        seed: 42,
+        rows: vec![fixture_row("pre_crash", 300.0)],
+    };
+    std::fs::write(dir.join("BENCH_x10.json"), x10.to_json()).unwrap();
+
+    // Degraded: cfg_beta lost half its throughput.
+    let degraded =
+        fixture_bench(vec![fixture_row("cfg_alpha", 1000.0), fixture_row("cfg_beta", 500.0)]);
+    let report = sweep::compare_dir(&dir, &degraded, 42)
+        .expect_err("a 50% throughput drop must fail the 10% gate");
+    assert!(report.contains("cfg_beta"), "diagnostic must name the config: {report}");
+    assert!(report.contains("throughput"), "diagnostic must name the axis: {report}");
+    assert!(report.contains("FAIL"), "{report}");
+    assert!(!report.contains("cfg_alpha regressed"), "{report}");
+
+    // Improved: both configurations got faster — passes, prints deltas.
+    let improved =
+        fixture_bench(vec![fixture_row("cfg_alpha", 1400.0), fixture_row("cfg_beta", 1300.0)]);
+    let report = sweep::compare_dir(&dir, &improved, 42).expect("improvements must pass");
+    assert!(report.contains("improved"), "{report}");
+    assert!(report.contains('+'), "delta missing: {report}");
+    assert!(report.contains("not gated"), "x10 skip note missing: {report}");
+
+    // Identical: passes within tolerance.
+    sweep::compare_dir(&dir, &baseline, 42).expect("identical rows must pass");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A missing pinned configuration is a failure (a silently dropped
+/// config must not pass the gate), and a root-seed mismatch is called
+/// out rather than producing a wall of missing-label noise.
+#[test]
+fn compare_dir_rejects_missing_configs_and_seed_mismatch() {
+    let dir = scratch("missing");
+    let baseline =
+        fixture_bench(vec![fixture_row("cfg_kept", 1000.0), fixture_row("cfg_gone", 800.0)]);
+    std::fs::write(dir.join("BENCH_sweep_smoke.json"), baseline.to_json()).unwrap();
+
+    let current = fixture_bench(vec![fixture_row("cfg_kept", 1000.0)]);
+    let report = sweep::compare_dir(&dir, &current, 42).expect_err("dropped config must fail");
+    assert!(report.contains("cfg_gone"), "{report}");
+    assert!(report.contains("missing"), "{report}");
+
+    let report = sweep::compare_dir(&dir, &baseline, 99)
+        .expect_err("root-seed mismatch must fail loudly");
+    assert!(report.contains("--seed"), "{report}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
