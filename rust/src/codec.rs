@@ -599,6 +599,12 @@ impl Wire for Msg {
                 e.u64(*base);
                 e.u32(*next);
             }
+            Busy { group, seq, retry_after_us } => {
+                e.u8(45);
+                e.u32(*group);
+                e.u64(*seq);
+                e.u64(*retry_after_us);
+            }
         }
     }
 
@@ -681,6 +687,7 @@ impl Wire for Msg {
                 bytes: d.bytes()?,
             },
             44 => SnapshotResume { base: d.u64()?, next: d.u32()? },
+            45 => Busy { group: d.u32()?, seq: d.u64()?, retry_after_us: d.u64()? },
             t => return err(&format!("bad Msg tag {t}")),
         })
     }
@@ -782,6 +789,7 @@ pub fn sample_messages() -> Vec<Msg> {
         LeaseGrant { round: r1, upto: 4098, granted_at: 77_000, valid_until: 50_077_000 },
         SnapshotChunk { base: 4096, seq: 1, total: 3, bytes: vec![0xca, 0xfe] },
         SnapshotResume { base: 4096, next: 2 },
+        Busy { group: 1, seq: 42, retry_after_us: 2_500 },
     ]
 }
 
@@ -839,6 +847,7 @@ pub const MSG_TAG_TABLE: &[(u8, &str)] = &[
     (42, "LeaseGrant"),
     (43, "SnapshotChunk"),
     (44, "SnapshotResume"),
+    (45, "Busy"),
 ];
 
 /// Validate a tag table: tags must be exactly `0..table.len()` with no
@@ -882,10 +891,10 @@ mod tests {
 
     #[test]
     fn sample_covers_all_tags() {
-        // 45 variants, tags 0..=44: decoding tag 45 must fail.
-        assert_eq!(sample_messages().len(), 45);
+        // 46 variants, tags 0..=45: decoding tag 46 must fail.
+        assert_eq!(sample_messages().len(), 46);
         let mut e = Enc::new();
-        e.u8(45);
+        e.u8(46);
         assert!(Msg::decode(&e.buf).is_err());
     }
 

@@ -182,6 +182,74 @@ impl LeaseSpec {
     }
 }
 
+/// Leader-side overload-control policy (DESIGN.md §Overload; ROADMAP
+/// X9). While enabled, the leader:
+///
+/// * **bounds its proposal inbox** — when the number of admitted-but-
+///   unchosen commands (in-flight proposals plus the batch buffer and
+///   the stalled queue) reaches `inbox`, further client requests are
+///   shed with an explicit [`crate::msg::Msg::Busy`] instead of being
+///   queued. A shed request never touches the per-client FIFO
+///   sequencer (a Busy is a drop, not an ack), so the client retries
+///   it later without risking reordering or duplicate execution.
+/// * **adapts its batching** — a windowed p99 estimate of
+///   proposal→chosen latency steers the *effective*
+///   `batch_size`/`batch_delay` between the configured `batch_size`
+///   (the floor is 1, the ceiling the configured value) to hold the
+///   `target_p99_us` SLO: over target, batch harder (fewer slots per
+///   second, more commands per quorum round trip); under target, relax
+///   toward low-latency small batches.
+///
+/// Clients honor the pushback per `shed`: `true` drops the request on
+/// Busy (counted in the client's `abandoned` counter — load shedding);
+/// `false` schedules a delayed retry after the Busy's `retry_after_us`.
+///
+/// Disabled by default: the paper's experiments (and the saturation
+/// baselines in the harness tests) run with an unbounded inbox.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionSpec {
+    /// Whether the leader bounds its inbox and adapts batching at all.
+    pub enabled: bool,
+    /// Proposal-inbox bound: admitted-but-unchosen commands the leader
+    /// will hold before shedding with `Busy`.
+    pub inbox: usize,
+    /// SLO target for the windowed p99 of proposal→chosen latency, in
+    /// microseconds. Drives the adaptive batch tuner and the
+    /// `retry_after_us` hint carried in `Busy`.
+    pub target_p99_us: u64,
+    /// Client policy on Busy: shed (drop, count abandoned) when true,
+    /// delayed retry after `retry_after_us` when false.
+    pub shed: bool,
+}
+
+impl Default for AdmissionSpec {
+    fn default() -> Self {
+        AdmissionSpec { enabled: false, inbox: 1024, target_p99_us: 20_000, shed: false }
+    }
+}
+
+impl AdmissionSpec {
+    /// An enabled policy: inbox bound `inbox` (clamped to ≥ 1), p99
+    /// target `target_p99_us` µs (clamped to ≥ 1), client shedding per
+    /// `shed`.
+    pub fn slo(inbox: usize, target_p99_us: u64, shed: bool) -> AdmissionSpec {
+        AdmissionSpec {
+            enabled: true,
+            inbox: inbox.max(1),
+            target_p99_us: target_p99_us.max(1),
+            shed,
+        }
+    }
+
+    /// The retry-after hint a `Busy` carries: one SLO target's worth of
+    /// backoff — long enough for the inbox to drain at the target
+    /// latency, short enough that a recovered leader sees the retry
+    /// promptly.
+    pub fn retry_after(&self) -> Time {
+        self.target_p99_us.max(1) * US
+    }
+}
+
 /// Durable-storage policy for the TCP runtime (DESIGN.md §Durability).
 /// When enabled — and `repro run` is given a `--data-dir` — every role
 /// opens a [`crate::storage::wal::WalStorage`] under
@@ -284,6 +352,10 @@ pub struct OptFlags {
     /// Durable-storage policy for the TCP runtime (off by default; see
     /// [`StorageSpec`]).
     pub storage: StorageSpec,
+    /// Leader-side overload control: bounded proposal inbox with `Busy`
+    /// pushback plus latency-targeted adaptive batching (off by
+    /// default; see [`AdmissionSpec`]).
+    pub admission: AdmissionSpec,
 }
 
 impl Default for OptFlags {
@@ -300,6 +372,7 @@ impl Default for OptFlags {
             snapshot: SnapshotSpec::default(),
             leases: LeaseSpec::default(),
             storage: StorageSpec::default(),
+            admission: AdmissionSpec::default(),
         }
     }
 }
@@ -319,6 +392,7 @@ impl OptFlags {
             snapshot: SnapshotSpec::default(),
             leases: LeaseSpec::default(),
             storage: StorageSpec::default(),
+            admission: AdmissionSpec::default(),
         }
     }
 
@@ -344,6 +418,12 @@ impl OptFlags {
     /// Enable durable storage for the TCP runtime (builder-style).
     pub fn with_storage(mut self, spec: StorageSpec) -> OptFlags {
         self.storage = spec;
+        self
+    }
+
+    /// Enable leader-side overload control (builder-style).
+    pub fn with_admission(mut self, spec: AdmissionSpec) -> OptFlags {
+        self.admission = spec;
         self
     }
 }
@@ -617,16 +697,25 @@ impl DeploymentConfig {
                 o.storage.full_every
             ));
         }
+        if o.admission.enabled {
+            out.push_str(&format!(
+                "admission = inbox:{},target_p99_us:{},shed:{}\n",
+                o.admission.inbox, o.admission.target_p99_us, o.admission.shed
+            ));
+        }
         let w = &self.workload;
         let mut wl = String::from("workload = ");
         match w.mode {
             WorkloadMode::ClosedLoop { window } => {
                 wl.push_str(&format!("mode:closed,window:{window}"));
             }
-            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight, queue_cap } => {
                 wl.push_str(&format!(
                     "mode:open,interval_ns:{interval},poisson:{poisson},inflight:{max_in_flight}"
                 ));
+                if queue_cap != crate::workload::DEFAULT_QUEUE_CAP {
+                    wl.push_str(&format!(",queue_cap:{queue_cap}"));
+                }
             }
         }
         let payload_bytes = match &w.payload {
@@ -827,12 +916,47 @@ impl DeploymentConfig {
                     }
                     cfg.opts.storage = spec;
                 }
+                "admission" => {
+                    let mut inbox = AdmissionSpec::default().inbox;
+                    let mut target_p99_us = AdmissionSpec::default().target_p99_us;
+                    let mut shed = false;
+                    for part in value.split(',') {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| format!("admission: expected k:v in {part:?}"))?;
+                        let v = v.trim();
+                        match k.trim() {
+                            "inbox" => {
+                                inbox =
+                                    v.parse().map_err(|e| format!("admission inbox: {e}"))?;
+                            }
+                            "target_p99_us" => {
+                                target_p99_us = v
+                                    .parse()
+                                    .map_err(|e| format!("admission target_p99_us: {e}"))?;
+                            }
+                            "shed" => {
+                                shed =
+                                    v.parse().map_err(|e| format!("admission shed: {e}"))?;
+                            }
+                            other => return Err(format!("unknown admission key {other:?}")),
+                        }
+                    }
+                    if inbox == 0 {
+                        return Err("admission inbox must be >= 1".into());
+                    }
+                    if target_p99_us == 0 {
+                        return Err("admission target_p99_us must be positive".into());
+                    }
+                    cfg.opts.admission = AdmissionSpec::slo(inbox, target_p99_us, shed);
+                }
                 "workload" => {
                     let mut mode = "closed".to_string();
                     let mut window = 1usize;
                     let mut interval: Option<Time> = None;
                     let mut poisson = false;
                     let mut inflight = 64usize;
+                    let mut queue_cap = crate::workload::DEFAULT_QUEUE_CAP;
                     let mut payload_bytes = 1usize;
                     let mut resend_ms: u64 = 100;
                     let mut start_ms: u64 = 0;
@@ -870,6 +994,14 @@ impl DeploymentConfig {
                             "inflight" => {
                                 inflight =
                                     v.parse().map_err(|e| format!("workload inflight: {e}"))?
+                            }
+                            "queue_cap" => {
+                                queue_cap = v
+                                    .parse()
+                                    .map_err(|e| format!("workload queue_cap: {e}"))?;
+                                if queue_cap == 0 {
+                                    return Err("workload queue_cap must be >= 1".into());
+                                }
                             }
                             "payload_bytes" => {
                                 payload_bytes = v
@@ -925,6 +1057,7 @@ impl DeploymentConfig {
                             },
                             poisson,
                             max_in_flight: clamp(inflight),
+                            queue_cap,
                         },
                         other => {
                             return Err(format!(
@@ -1075,13 +1208,29 @@ mod tests {
         ))
         .unwrap();
         match cfg.workload.mode {
-            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight, queue_cap } => {
                 assert_eq!(interval, 1_000_000);
                 assert!(poisson);
                 assert_eq!(max_in_flight, 32);
+                assert_eq!(queue_cap, crate::workload::DEFAULT_QUEUE_CAP);
             }
             other => panic!("{other:?}"),
         }
+        // A queue_cap key parses and round-trips; zero is rejected.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:1000,queue_cap:256\n"
+        ))
+        .unwrap();
+        assert!(matches!(
+            cfg.workload.mode,
+            WorkloadMode::OpenLoop { queue_cap: 256, .. }
+        ));
+        let back = DeploymentConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.workload.mode, cfg.workload.mode);
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}workload = mode:open,rate:1000,queue_cap:0\n"
+        ))
+        .is_err());
         // Open mode without a rate is an error; so are unknown keys/modes.
         assert!(DeploymentConfig::from_text(&format!("{base}workload = mode:open\n")).is_err());
         assert!(
@@ -1221,6 +1370,36 @@ mod tests {
         assert!(
             DeploymentConfig::from_text(&format!("{base}storage = full_every:0\n")).is_err()
         );
+    }
+
+    #[test]
+    fn text_config_admission_knobs() {
+        let base = DeploymentConfig::standard(1, 1).to_text();
+        // Default: disabled (no admission line emitted).
+        assert!(!base.contains("admission ="));
+        assert!(!DeploymentConfig::from_text(&base).unwrap().opts.admission.enabled);
+        // An admission line enables it.
+        let cfg = DeploymentConfig::from_text(&format!(
+            "{base}admission = inbox:256,target_p99_us:5000,shed:true\n"
+        ))
+        .unwrap();
+        assert!(cfg.opts.admission.enabled);
+        assert_eq!(cfg.opts.admission.inbox, 256);
+        assert_eq!(cfg.opts.admission.target_p99_us, 5000);
+        assert!(cfg.opts.admission.shed);
+        assert_eq!(cfg.opts.admission.retry_after(), 5000 * US);
+        // Round trip through to_text.
+        let mut with = DeploymentConfig::standard(1, 1);
+        with.opts.admission = AdmissionSpec::slo(128, 10_000, false);
+        let back = DeploymentConfig::from_text(&with.to_text()).unwrap();
+        assert_eq!(back.opts.admission, with.opts.admission);
+        // Bad keys / zero knobs rejected.
+        assert!(DeploymentConfig::from_text(&format!("{base}admission = bogus:1\n")).is_err());
+        assert!(DeploymentConfig::from_text(&format!("{base}admission = inbox:0\n")).is_err());
+        assert!(DeploymentConfig::from_text(&format!(
+            "{base}admission = target_p99_us:0\n"
+        ))
+        .is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod experiments;
 pub mod report;
 
 use crate::config::{ClusterLayout, Configuration, GroupLayout, OptFlags};
-use crate::metrics::{merge_samples, RetentionSummary, Sample};
+use crate::metrics::{group_load_summary, merge_samples, GroupLoadSummary, RetentionSummary, Sample};
 use crate::node::Announce;
 use crate::roles::{
     Acceptor, Client, HorizontalLeader, Leader, Matchmaker, Replica, ShardClient,
@@ -199,6 +199,7 @@ impl ClusterBuilder {
             if route_reads {
                 cl.replicas = layout.replicas.clone();
             }
+            cl.shed_on_busy = opts.admission.enabled && opts.admission.shed;
             sim.add_node(c, Box::new(cl));
         }
         Cluster { layout, sim, opts, f, workload, rng: Rng::new(seed ^ 0xc1a5) }
@@ -338,6 +339,29 @@ impl Cluster {
             }
         }
         out
+    }
+
+    /// Leader-side overload signals for the (single) group: inbox
+    /// depth, Busy pushback counters, windowed p99 — see
+    /// [`GroupLoadSummary`]. `busy_rejections` sums over all proposers
+    /// (a deposed leader's rejections still happened); depth/p99 come
+    /// from the current leader.
+    pub fn group_load(&mut self) -> GroupLoadSummary {
+        let admitted = chosen_commands(&self.sim.announces, 0);
+        let proposers = self.layout.proposers.clone();
+        leader_load(&mut self.sim, 0, &proposers, admitted)
+    }
+
+    /// Total [`crate::msg::Msg::Busy`] pushbacks the clients saw.
+    pub fn busy_observed(&mut self) -> u64 {
+        let clients = self.layout.clients.clone();
+        let mut total = 0u64;
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<Client>(c) {
+                total += cl.busy_observed;
+            }
+        }
+        total
     }
 
     /// Assert the protocol safety catalog (used by tests after every
@@ -567,6 +591,7 @@ impl ShardedClusterBuilder {
             if route_reads {
                 cl.replicas_per_group(replica_lists.clone());
             }
+            cl.shed_on_busy = opts.admission.enabled && opts.admission.shed;
             sim.add_node(c, Box::new(cl));
         }
         ShardedCluster {
@@ -714,6 +739,35 @@ impl ShardedCluster {
         (completions, issues)
     }
 
+    /// Per-group leader-side overload signals — one
+    /// [`GroupLoadSummary`] per group, the X9 experiment's hot-group
+    /// map. Shard clients steer around hot groups with the same signal
+    /// delivered in-band (`Msg::Busy` marks a lane hot); this is the
+    /// out-of-band view for reports and operators.
+    pub fn group_load(&mut self) -> Vec<GroupLoadSummary> {
+        let shards = self.shards();
+        let mut out = Vec::with_capacity(shards);
+        for g in 0..shards {
+            let g = g as GroupId;
+            let admitted = chosen_commands(&self.sim.announces, g);
+            let proposers = self.groups[g as usize].proposers.clone();
+            out.push(leader_load(&mut self.sim, g, &proposers, admitted));
+        }
+        out
+    }
+
+    /// Total [`crate::msg::Msg::Busy`] pushbacks the shard clients saw.
+    pub fn busy_observed(&mut self) -> u64 {
+        let clients = self.clients.clone();
+        let mut total = 0u64;
+        for c in clients {
+            if let Some(cl) = self.sim.node_mut::<ShardClient>(c) {
+                total += cl.busy_observed;
+            }
+        }
+        total
+    }
+
     /// Assert the protocol safety catalog per group — the model
     /// checker's standard [`crate::check::InvariantSet`] over the whole
     /// sharded run's announcement history (announces carry `GroupId`, so
@@ -848,6 +902,46 @@ impl HorizontalCluster {
         }
         merge_samples(per_client)
     }
+}
+
+/// Chosen client commands for one group (batches flattened, slots
+/// deduplicated across leader retries) from an announce history — the
+/// "admitted" denominator of [`GroupLoadSummary::busy_rate`].
+fn chosen_commands(announces: &[(Time, NodeId, Announce)], g: GroupId) -> u64 {
+    let mut seen_slots = std::collections::BTreeSet::new();
+    let mut n = 0u64;
+    for (_, _, a) in announces {
+        if let Announce::Chosen { group, slot, value, .. } = a {
+            if *group != g || !seen_slots.insert(*slot) {
+                continue;
+            }
+            n += match value {
+                crate::msg::Value::Cmd(_) => 1,
+                crate::msg::Value::Batch(cmds) => cmds.len() as u64,
+                _ => 0,
+            };
+        }
+    }
+    n
+}
+
+/// Harvest one group's leader-side load counters: `busy_rejections`
+/// sums over every proposer (a deposed leader's pushbacks still
+/// happened); inbox depth and windowed p99 come from the proposer that
+/// currently leads (falling back to the first if none claims it).
+fn leader_load(sim: &mut Sim, g: GroupId, proposers: &[NodeId], admitted: u64) -> GroupLoadSummary {
+    let mut rejections = 0u64;
+    let mut lead: Option<(usize, Time)> = None;
+    for &p in proposers {
+        if let Some(l) = sim.node_mut::<Leader>(p) {
+            rejections += l.busy_rejections;
+            if l.is_leader || lead.is_none() {
+                lead = Some((l.inbox_depth(), l.windowed_p99()));
+            }
+        }
+    }
+    let (inbox, p99) = lead.unwrap_or((0, 0));
+    group_load_summary(g, inbox, rejections, admitted, p99)
 }
 
 /// Seconds helper for experiment scripts.
@@ -1066,6 +1160,51 @@ mod tests {
             (c.samples().len(), c.sim.delivered)
         };
         assert_eq!(run(9), run(9));
+    }
+
+    #[test]
+    fn admission_sheds_and_reports_group_load() {
+        // A one-slot inbox under 16k/s offered: the leader must push
+        // back with Busy, shedding clients must observe and abandon,
+        // and group_load must report consistent counters.
+        let opts = OptFlags::default()
+            .with_admission(crate::config::AdmissionSpec::slo(1, 1_000, true));
+        let spec = WorkloadSpec::open_loop(4000.0).max_in_flight(32);
+        let mut c = Cluster::builder().clients(4).workload(spec).opts(opts).seed(5).build();
+        c.sim.run_until(secs(1));
+        c.assert_safe();
+        let load = c.group_load();
+        assert!(load.busy_rejections > 0, "no pushback at inbox=1 under load");
+        assert!(load.busy_rate > 0.0 && load.busy_rate < 1.0, "rate {}", load.busy_rate);
+        // Every client-observed Busy was sent by a leader (stale Busys
+        // for already-shed seqs are dropped client-side, so ≤).
+        let observed = c.busy_observed();
+        assert!(observed > 0 && observed <= load.busy_rejections);
+        let (_, completed, abandoned) = c.workload_totals();
+        assert!(abandoned > 0, "shedding clients must abandon");
+        assert!(completed > 0, "admitted traffic still completes");
+    }
+
+    #[test]
+    fn sharded_group_load_reports_all_groups() {
+        let mut c = ShardedCluster::builder()
+            .shards(2)
+            .clients(2)
+            .workload(WorkloadSpec::pipelined(4))
+            .seed(17)
+            .build();
+        c.sim.run_until(msec(500));
+        c.assert_safe();
+        let load = c.group_load();
+        assert_eq!(load.len(), 2);
+        for (g, l) in load.iter().enumerate() {
+            assert_eq!(l.group as usize, g);
+            // Admission is off by default: nothing was rejected and
+            // busy_rate stays 0, but chosen traffic registers.
+            assert_eq!(l.busy_rejections, 0);
+            assert_eq!(l.busy_rate, 0.0);
+        }
+        assert_eq!(c.busy_observed(), 0);
     }
 
     #[test]

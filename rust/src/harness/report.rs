@@ -284,6 +284,82 @@ impl ReadReport {
     }
 }
 
+/// One X9 overload-sweep row: the outcome of a single offered-load
+/// point under one admission policy.
+#[derive(Clone, Debug)]
+pub struct OverloadRow {
+    /// Total offered arrivals per second (all clients).
+    pub offered_per_sec: f64,
+    /// Completed commands per second — the goodput the X9 gate holds.
+    pub goodput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Requests abandoned (client queue overflow + shed-on-Busy).
+    pub abandoned: u64,
+    /// Requests the leader rejected with `Busy`.
+    pub busy_rejections: u64,
+    /// Leader-side `busy_rejections / (busy_rejections + admitted)`.
+    pub busy_rate: f64,
+    /// Leader's proposal-inbox depth at harvest (arrivals stop before
+    /// the horizon, so a drained run ends near zero; mid-run depth is
+    /// what the admission cap bounds).
+    pub inbox_depth: usize,
+    /// Adaptive controller's final effective batch size.
+    pub eff_batch: usize,
+    /// Adaptive controller's final effective batch delay, µs.
+    pub eff_delay_us: u64,
+    /// Leader's own windowed p99 (the controller's input), ms.
+    pub ctl_p99_ms: f64,
+}
+
+/// The X9 overload-control experiment: an offered-load sweep past
+/// saturation, one series per admission policy (off / delayed-retry /
+/// shed), reporting goodput, tails, pushback counters, and the adaptive
+/// batching controller's state.
+#[derive(Debug, Default)]
+pub struct OverloadReport {
+    pub id: String,
+    pub title: String,
+    /// `(policy label, rows)` — one row per offered rate.
+    pub series: Vec<(String, Vec<OverloadRow>)>,
+    pub notes: Vec<String>,
+}
+
+impl OverloadReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        for (label, rows) in &self.series {
+            let _ = writeln!(out, "--- policy: {label} ---");
+            let _ = writeln!(
+                out,
+                "offered/s\tgoodput/s\tp50_ms\tp99_ms\tabandoned\tbusy\tbusy_rate\tinbox\tbatch\tdelay_us\tctl_p99_ms"
+            );
+            for r in rows {
+                let _ = writeln!(
+                    out,
+                    "{:.0}\t{:.0}\t{:.3}\t{:.3}\t{}\t{}\t{:.3}\t{}\t{}\t{}\t{:.3}",
+                    r.offered_per_sec,
+                    r.goodput,
+                    r.p50_ms,
+                    r.p99_ms,
+                    r.abandoned,
+                    r.busy_rejections,
+                    r.busy_rate,
+                    r.inbox_depth,
+                    r.eff_batch,
+                    r.eff_delay_us,
+                    r.ctl_p99_ms
+                );
+            }
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
 /// One perf-trajectory row: what a `BENCH_x*.json` line carries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchRow {

@@ -72,9 +72,11 @@ impl Args {
 
 const USAGE: &str = "usage:
   repro exp <id> [--seed N] [--bench-json PATH]
-      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 x10 all)
+      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 x9 x10 all)
       --bench-json PATH   write a machine-readable BENCH_<id>.json row set
-                          (x3-x7 and x10; purpose-built short runs, schema in DESIGN.md)
+                          (x3-x7, x9, and x10; purpose-built short runs, schema in DESIGN.md)
+      x9: leader overload control — offered-load sweep past saturation under
+          admission off / Busy-retry / Busy-shed policies (DESIGN.md §Overload)
       x10: kill -9 + recovery storm on a live TCP cluster with fsync'd
            WALs (needs a writable tempdir and two free local port ranges)
   repro run --role R --id N --config FILE [--duration SECS] [--data-dir DIR]
@@ -185,6 +187,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x5" | "retention" => print!("{}", exp::retention_figure(seed).render()),
         "x6" | "shards" => print!("{}", exp::sharding_figure(seed).render()),
         "x7" | "reads" => print!("{}", exp::read_scaling_figure(seed).render()),
+        "x9" | "overload" => print!("{}", exp::overload_figure(seed).render()),
         "x10" | "recovery" => print!("{}", exp::crash_recovery_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
@@ -202,7 +205,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
 /// schema in DESIGN.md §Bench trajectory).
 fn write_bench_json(id: &str, seed: u64, path: &str) -> Result<()> {
     let bench = exp::bench_json_for(id, seed)
-        .with_context(|| format!("--bench-json supports x3..x7 and x10, not {id:?}"))?;
+        .with_context(|| format!("--bench-json supports x3..x7, x9, and x10, not {id:?}"))?;
     let json = bench.to_json();
     std::fs::write(path, &json).with_context(|| format!("write {path}"))?;
     print!("{json}");

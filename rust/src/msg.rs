@@ -190,6 +190,16 @@ pub enum Msg {
     /// Any node → client/other: "I am not this group's leader; try
     /// `hint`".
     NotLeader { group: GroupId, hint: Option<NodeId> },
+    /// Leader → client: admission control pushback (DESIGN.md
+    /// §Overload). The leader's proposal inbox is over its configured
+    /// bound (`admission = inbox:N,...`), so the request identified by
+    /// `seq` was *dropped without side effects* — it never touched the
+    /// per-client FIFO sequencer, so the client may retry it after
+    /// `retry_after_us` µs (or shed it) without risking reordering or
+    /// duplicate execution. Critically, a Busy is NOT an ack: the client
+    /// must keep `seq` in its outstanding window so its advertised
+    /// `lowest` never advances past a shed command.
+    Busy { group: GroupId, seq: u64, retry_after_us: u64 },
 
     // ---- Linearizable reads off the Phase-2 hot path ----
     /// Client → replica: a linearizable read-only query. Reads never
@@ -310,6 +320,7 @@ impl Msg {
             Msg::Chosen { .. } => MsgKind::Chosen,
             Msg::ClientRequest { .. } => MsgKind::Client,
             Msg::ClientReply { .. } | Msg::NotLeader { .. } => MsgKind::Client,
+            Msg::Busy { .. } => MsgKind::Busy,
             Msg::Read { .. }
             | Msg::ReadReply { .. }
             | Msg::ReadIndexReq { .. }
@@ -368,6 +379,7 @@ impl Msg {
             Msg::ClientRequest { .. } => "ClientRequest",
             Msg::ClientReply { .. } => "ClientReply",
             Msg::NotLeader { .. } => "NotLeader",
+            Msg::Busy { .. } => "Busy",
             Msg::StopA => "StopA",
             Msg::StopB { .. } => "StopB",
             Msg::Bootstrap { .. } => "Bootstrap",
@@ -409,6 +421,10 @@ pub enum MsgKind {
     Phase2B,
     Chosen,
     Client,
+    /// Admission-control pushback (`Busy`): the leader shed a request
+    /// at its bounded inbox. Tracked as its own kind so per-group
+    /// busy-rate metrics can count pushback without string matching.
+    Busy,
     /// Linearizable-read traffic (`Read`/`ReadReply`/`ReadIndexReq`/
     /// `ReadIndexResp`/`NotLeaseholder`).
     Read,
@@ -464,6 +480,7 @@ mod tests {
             Msg::ReadIndexReq { id: 9 },
             Msg::ReadIndexResp { id: 9, upto: 123 },
             Msg::NotLeaseholder { group: 2, hint: Some(14) },
+            Msg::Busy { group: 1, seq: 42, retry_after_us: 5_000 },
             Msg::LeaseRenew { round: Round::first(0, 1), seq: 3 },
             Msg::LeaseRenewAck { round: Round::first(0, 1), seq: 3 },
             Msg::LeaseGrant {
@@ -495,6 +512,10 @@ mod tests {
             MsgKind::Phase1B
         );
         assert_eq!(Msg::StopA.kind(), MsgKind::MmReconfig);
+        assert_eq!(
+            Msg::Busy { group: 0, seq: 1, retry_after_us: 1000 }.kind(),
+            MsgKind::Busy
+        );
         assert_eq!(Msg::Heartbeat { epoch: 0 }.kind(), MsgKind::Heartbeat);
         assert_eq!(
             Msg::Read { group: 0, seq: 1, payload: vec![] }.kind(),

@@ -33,6 +33,27 @@ pub const TAG_START: u64 = 0;
 /// `Timer::Wakeup` tag: open-loop arrival tick.
 pub const TAG_ARRIVAL: u64 = 1;
 
+/// Retry backoff cap: resend delays stop doubling at
+/// `resend_after << BACKOFF_MAX_SHIFT` (32×).
+pub const BACKOFF_MAX_SHIFT: u32 = 5;
+
+/// Capped exponential backoff with deterministic jitter for retry timers
+/// (satellite fix: fixed-interval resends re-fire at full rate forever,
+/// so under overload every unacked request retries at line rate and
+/// amplifies the overload — a retry storm). The jitter is a pure
+/// [`crate::util::splitmix64`] hash of `(client, seq, attempt)`, NOT a
+/// draw from the client's RNG: that stream feeds arrival processes and
+/// read/write classification and must stay bit-identical with
+/// pre-backoff builds.
+pub(crate) fn backoff_delay(base: Time, id: NodeId, seq: u64, attempt: u32) -> Time {
+    let capped = base.saturating_mul(1 << attempt.min(BACKOFF_MAX_SHIFT));
+    let jitter_span = (base / 4).max(1);
+    let h = crate::util::splitmix64(
+        (id as u64) ^ seq.rotate_left(17) ^ ((attempt as u64) << 48) ^ 0xb0ff_5eed,
+    );
+    capped + h % jitter_span
+}
+
 /// One in-flight request.
 #[derive(Clone, Copy, Debug)]
 struct Outstanding {
@@ -48,6 +69,10 @@ struct Outstanding {
     /// the replica read path; with no known replicas they fall through
     /// the log like any command (the all-through-Phase-2 baseline).
     read: bool,
+    /// Resend attempts so far (0 for a fresh request; drives the capped
+    /// exponential backoff). "Reset on reply" falls out of removal: a
+    /// reply removes the entry, so a later request starts at 0.
+    attempt: u32,
 }
 
 /// A workload client (closed-loop, pipelined, or open-loop per its spec).
@@ -79,8 +104,18 @@ pub struct Client {
     /// Requests completed (a reply was received).
     pub completed: u64,
     /// Requests dropped at the stop deadline after losing their replies
-    /// (resends are bounded by `stop_at`).
+    /// (resends are bounded by `stop_at`), shed on `Busy` pushback
+    /// (`shed_on_busy`), or dropped because the open-loop arrival queue
+    /// hit its `queue_cap`.
     pub abandoned: u64,
+    /// `Msg::Busy` pushbacks received (admission control; the harness
+    /// derives per-group busy rates from this).
+    pub busy_observed: u64,
+    /// Policy on `Busy` pushback: `true` sheds the request (drop + count
+    /// in `abandoned`), `false` (default) retries after the leader's
+    /// `retry_after_us` hint. Wired by the harness from
+    /// [`crate::config::AdmissionSpec::shed`].
+    pub shed_on_busy: bool,
     /// Reads completed (subset of `completed`).
     pub reads_completed: u64,
     /// Completed write operations: `(issued_at, completed_at)`. With
@@ -144,6 +179,8 @@ impl Client {
             offered: 0,
             completed: 0,
             abandoned: 0,
+            busy_observed: 0,
+            shed_on_busy: false,
             reads_completed: 0,
             writes: Vec::new(),
             write_issues: Vec::new(),
@@ -203,7 +240,7 @@ impl Client {
         self.next_seq += 1;
         self.generation += 1;
         self.outstanding
-            .insert(seq, Outstanding { issued_at, generation: self.generation, read });
+            .insert(seq, Outstanding { issued_at, generation: self.generation, read, attempt: 0 });
         let payload = if read { self.read_payload.clone() } else { self.payload.clone() };
         if !read {
             self.write_issues.push(issued_at);
@@ -223,8 +260,10 @@ impl Client {
         let seq = self.read_next_seq;
         self.read_next_seq += 1;
         self.generation += 1;
-        self.read_outstanding
-            .insert(seq, Outstanding { issued_at, generation: self.generation, read: true });
+        self.read_outstanding.insert(
+            seq,
+            Outstanding { issued_at, generation: self.generation, read: true, attempt: 0 },
+        );
         let n = self.replicas.len();
         let target = self.replicas[(seq as usize + self.id as usize + self.replica_hint) % n];
         fx.send(
@@ -239,7 +278,9 @@ impl Client {
 
     /// Re-send one in-flight request, bounded by the stop deadline: a
     /// request whose replies keep getting lost is abandoned once `now`
-    /// passes `stop_at` instead of being retried forever.
+    /// passes `stop_at` instead of being retried forever. Each resend
+    /// backs the next timer off exponentially (capped, jittered) so a
+    /// saturated leader sees a shrinking — not constant — retry rate.
     fn resend_one(&mut self, seq: u64, now: Time, fx: &mut Effects) {
         if now >= self.spec.stop_at {
             if self.outstanding.remove(&seq).is_some() {
@@ -253,11 +294,14 @@ impl Client {
             return;
         };
         o.generation = generation;
+        o.attempt = o.attempt.saturating_add(1);
+        let attempt = o.attempt;
         let payload = if o.read { self.read_payload.clone() } else { self.payload.clone() };
         let cmd = Command { client: self.id, seq, payload };
         let lowest = self.lowest_outstanding();
         fx.send(self.leader(), Msg::ClientRequest { group: self.group, cmd, lowest });
-        fx.timer(self.spec.resend_after, Timer::ClientResend { seq, generation });
+        let delay = backoff_delay(self.spec.resend_after, self.id, seq, attempt);
+        fx.timer(delay, Timer::ClientResend { seq, generation });
     }
 
     /// Re-send one in-flight read to the (rotated) replica target.
@@ -274,6 +318,8 @@ impl Client {
             return;
         };
         o.generation = generation;
+        o.attempt = o.attempt.saturating_add(1);
+        let attempt = o.attempt;
         let n = self.replicas.len();
         if n == 0 {
             return;
@@ -283,7 +329,8 @@ impl Client {
             target,
             Msg::Read { group: self.group, seq, payload: self.read_payload.clone() },
         );
-        fx.timer(self.spec.resend_after, Timer::ReadResend { seq, generation });
+        let delay = backoff_delay(self.spec.resend_after, self.id, seq, attempt);
+        fx.timer(delay, Timer::ReadResend { seq, generation });
     }
 
     /// Closed-loop refill: keep `window` requests outstanding until the
@@ -301,7 +348,9 @@ impl Client {
 
     /// One open-loop arrival at `now`; schedules the next tick.
     fn on_arrival(&mut self, now: Time, fx: &mut Effects) {
-        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight } = self.spec.mode else {
+        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight, queue_cap } =
+            self.spec.mode
+        else {
             return;
         };
         if now >= self.spec.stop_at {
@@ -311,8 +360,14 @@ impl Client {
         let read = self.classify();
         if self.in_flight() < max_in_flight {
             self.dispatch(read, now, now, fx);
-        } else {
+        } else if self.backlog.len() < queue_cap {
             self.backlog.push_back((now, read));
+        } else {
+            // Queue bound (satellite fix): past saturation the arrival
+            // backlog would otherwise grow without limit; shed the
+            // arrival instead and account for it (offered = completed +
+            // abandoned + in-flight + queued still holds).
+            self.abandoned += 1;
         }
         let gap = if poisson {
             // Exponential gap with mean `interval`, from the per-client
@@ -387,6 +442,38 @@ impl Node for Client {
                 self.reads_completed += 1;
                 self.reads.push((o.issued_at, now, result));
                 self.refill(now, fx);
+            }
+            Msg::Busy { seq, retry_after_us, .. } => {
+                // Admission pushback (DESIGN.md §Overload): the leader
+                // dropped this request *without sequencer side effects*,
+                // so it is safe either to retry it later (it will be
+                // admitted in FIFO position like a first attempt) or to
+                // shed it (it never executed and never will).
+                if !self.outstanding.contains_key(&seq) {
+                    return; // stale Busy for a request that since completed
+                }
+                self.busy_observed += 1;
+                if self.shed_on_busy {
+                    self.outstanding.remove(&seq);
+                    self.abandoned += 1;
+                    self.refill(now, fx);
+                } else {
+                    // Delayed retry: the leader's hint is the backoff
+                    // base, so the first pushback waits ~retry_after_us
+                    // and repeated pushback widens the gap (capped,
+                    // jittered). Bumping the generation invalidates the
+                    // resend timer armed at send time, so pushback
+                    // *replaces* the blind resend instead of racing it.
+                    self.generation += 1;
+                    let generation = self.generation;
+                    let o = self.outstanding.get_mut(&seq).expect("checked above");
+                    o.generation = generation;
+                    o.attempt = o.attempt.saturating_add(1);
+                    let attempt = o.attempt;
+                    let hint = retry_after_us.max(1) * US;
+                    let delay = backoff_delay(hint, self.id, seq, attempt.saturating_sub(1));
+                    fx.timer(delay, Timer::ClientResend { seq, generation });
+                }
             }
             Msg::NotLeaseholder { .. } => {
                 // The replica can't serve reads right now: rotate to the
@@ -879,5 +966,131 @@ mod tests {
         let mut c = Client::new(10, vec![0], WorkloadSpec::closed_loop());
         let mut fx = Effects::new();
         c.on_timer(0, Timer::Wakeup { tag: 99 }, &mut fx);
+    }
+
+    // ---- Overload control (DESIGN.md §Overload) ----
+
+    fn next_resend(fx: &Effects) -> Option<(Time, Timer)> {
+        fx.timers
+            .iter()
+            .find(|(_, t)| matches!(t, Timer::ClientResend { .. }))
+            .map(|&(d, t)| (d, t))
+    }
+
+    #[test]
+    fn resend_backoff_bounds_retry_traffic() {
+        // Regression (satellite fix — retry storm): with the leader
+        // saturated and never answering, a fixed 100 ms resend interval
+        // would fire ~100 resends in 10 virtual seconds. Capped
+        // exponential backoff keeps it to a handful.
+        let spec = WorkloadSpec::closed_loop().stop_at(100 * SEC);
+        let mut c = Client::new(10, vec![0], spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(sent_seqs(&fx), vec![1]);
+        let (mut delay, mut timer) = next_resend(&fx).unwrap();
+        let mut now = 0;
+        let mut resends = 0u32;
+        while now + delay <= 10 * SEC {
+            now += delay;
+            let mut fx2 = Effects::new();
+            c.on_timer(now, timer, &mut fx2);
+            resends += sent_seqs(&fx2).len() as u32;
+            match next_resend(&fx2) {
+                Some((d, t)) => (delay, timer) = (d, t),
+                None => break,
+            }
+        }
+        assert!((1..=12).contains(&resends), "retry storm: {resends} resends in 10 s");
+        // The schedule saturates at the 32× cap (+ bounded jitter).
+        let base = c.spec.resend_after;
+        assert!(delay >= 32 * base && delay < 32 * base + base / 4, "uncapped delay {delay}");
+        // The request is still alive — backoff delays, it never drops.
+        assert_eq!(c.in_flight(), 1);
+        assert_eq!(c.abandoned, 0);
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_and_decorrelated() {
+        let base = 100 * MS;
+        // Same (client, seq, attempt): identical delay (replayable runs).
+        assert_eq!(backoff_delay(base, 1, 7, 3), backoff_delay(base, 1, 7, 3));
+        // Different clients desynchronize (no thundering herd).
+        assert_ne!(backoff_delay(base, 1, 7, 3), backoff_delay(base, 2, 7, 3));
+        // Cap respected far past the shift limit.
+        let d = backoff_delay(base, 1, 7, 40);
+        assert!(d >= 32 * base && d < 32 * base + base / 4);
+    }
+
+    #[test]
+    fn busy_shed_drops_and_counts() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::pipelined(2));
+        c.shed_on_busy = true;
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        assert_eq!(c.in_flight(), 2);
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::Busy { group: 0, seq: 1, retry_after_us: 1_000 }, &mut fx2);
+        assert_eq!((c.busy_observed, c.abandoned), (1, 1));
+        // The freed slot refills with a NEW seq; the shed seq is gone
+        // and later requests advertise lowest = 2 (the leader never saw
+        // seq 1, so nothing can be reordered around it).
+        assert_eq!(sent_seqs(&fx2), vec![3]);
+        assert!(!c.outstanding.contains_key(&1));
+        assert_eq!(c.lowest_outstanding(), 2);
+        // A stale Busy for the shed seq is a no-op.
+        let mut fx3 = Effects::new();
+        c.on_msg(2 * MS, 0, Msg::Busy { group: 0, seq: 1, retry_after_us: 1_000 }, &mut fx3);
+        assert_eq!(c.busy_observed, 1);
+        assert!(fx3.msgs.is_empty() && fx3.timers.is_empty());
+    }
+
+    #[test]
+    fn busy_delays_retry_honoring_hint() {
+        let mut c = Client::new(10, vec![0], WorkloadSpec::closed_loop());
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::Busy { group: 0, seq: 1, retry_after_us: 5_000 }, &mut fx2);
+        assert_eq!(c.busy_observed, 1);
+        // No immediate resend, and seq 1 stays outstanding: a Busy is a
+        // drop, not an ack — `lowest` must not advance past it.
+        assert!(sent_seqs(&fx2).is_empty());
+        assert_eq!(c.lowest_outstanding(), 1);
+        // One retry timer, ≥ the 5 ms hint plus bounded jitter.
+        let (delay, timer) = next_resend(&fx2).unwrap();
+        assert!(matches!(timer, Timer::ClientResend { seq: 1, .. }));
+        assert!(delay >= 5 * MS && delay < 5 * MS + 2 * MS, "delay {delay}");
+        // The send-time resend timer went stale (generation bumped):
+        // pushback replaces the blind resend instead of racing it.
+        let mut fx3 = Effects::new();
+        c.on_timer(10 * MS, Timer::ClientResend { seq: 1, generation: 1 }, &mut fx3);
+        assert!(sent_seqs(&fx3).is_empty());
+        // The Busy-armed timer fires the (single) delayed retry.
+        let mut fx4 = Effects::new();
+        c.on_timer(MS + delay, timer, &mut fx4);
+        assert_eq!(sent_seqs(&fx4), vec![1]);
+    }
+
+    #[test]
+    fn open_loop_queue_bounded_by_cap() {
+        // Regression (satellite fix — unbounded queue): arrivals past
+        // `max_in_flight` + `queue_cap` are shed into `abandoned`, so
+        // the memory-resident backlog stays ≤ cap past saturation.
+        let spec = WorkloadSpec::open_loop(1000.0).max_in_flight(1).queue_cap(2);
+        let mut c = Client::new(10, vec![0], spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx); // seq 1 in flight
+        for i in 1..=5u64 {
+            let mut f = Effects::new();
+            c.on_timer(i * MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut f);
+        }
+        assert_eq!(c.offered, 6);
+        assert_eq!(c.in_flight(), 1);
+        assert_eq!(c.backlog.len(), 2, "backlog capped");
+        assert_eq!(c.abandoned, 3, "overflow counted as abandoned");
+        // Replies drain the backlog normally — shed arrivals are gone.
+        reply(&mut c, 10 * MS, 1);
+        assert_eq!(c.backlog.len(), 1);
     }
 }

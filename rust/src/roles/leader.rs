@@ -50,7 +50,7 @@ use crate::node::{Announce, Effects, Node, Timer};
 use crate::round::Round;
 use crate::storage::{Storage, WalRecord};
 use crate::util::Rng;
-use crate::{GroupId, NodeId, Slot, Time, MS};
+use crate::{GroupId, NodeId, Slot, Time, MS, US};
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 /// Timing knobs. All values are virtual-time nanoseconds.
@@ -95,6 +95,135 @@ struct SlotState {
     generation: u64,
     /// When the last Phase2A fan-out for this slot was sent (watchdog).
     proposed_at: Time,
+}
+
+/// Sample window for the adaptive-batching controller. Small enough that
+/// the p99 estimate tracks a load step within a few dozen chosen slots,
+/// large enough that one straggler cannot flip the knobs.
+const TUNE_WINDOW: usize = 64;
+/// Re-tune every this many samples (not every sample — adjusting at the
+/// window cadence lets each knob change be observed before the next).
+const TUNE_EVERY: usize = 16;
+
+/// Latency-targeted adaptive batching controller (DESIGN.md §Overload).
+///
+/// Tracks a sliding window of proposal→chosen latencies and nudges the
+/// *effective* batch size / flush delay between hard bounds to hold the
+/// configured [`crate::config::AdmissionSpec::target_p99_us`] SLO: when
+/// the windowed p99 runs hot the controller grows batches (amortizing one
+/// quorum round trip over more commands drains the queue faster) and
+/// flushes promptly; when it runs comfortably cold it shrinks batches
+/// back toward 1 (stop paying batching latency for throughput headroom
+/// that is not needed). Multiplicative increase / additive decrease plus
+/// a ±10% hysteresis band around the target keep the knobs from
+/// oscillating on a step load change.
+///
+/// Identity when admission is disabled: `effective_*` return the
+/// configured knobs verbatim and `observe` is a no-op, so runs without an
+/// `admission =` config line behave exactly as before this controller
+/// existed.
+#[derive(Debug)]
+pub(crate) struct BatchTuner {
+    enabled: bool,
+    /// SLO target in virtual-time ns.
+    target: Time,
+    /// Configured knobs (the bounds: batch ∈ [1, cfg_batch], delay ∈
+    /// [cfg_delay/16, cfg_delay]).
+    cfg_batch: usize,
+    cfg_delay: Time,
+    /// Live knobs (admission enabled only).
+    batch: usize,
+    delay: Time,
+    /// Sliding latency window (ring buffer).
+    window: Vec<Time>,
+    cursor: usize,
+    since_adjust: usize,
+}
+
+impl BatchTuner {
+    pub(crate) fn new(opts: &OptFlags) -> BatchTuner {
+        BatchTuner {
+            enabled: opts.admission.enabled,
+            target: opts.admission.target_p99_us.max(1) * US,
+            cfg_batch: opts.batch_size,
+            cfg_delay: opts.batch_delay,
+            batch: opts.batch_size.max(1),
+            delay: opts.batch_delay.max(1),
+            window: Vec::new(),
+            cursor: 0,
+            since_adjust: 0,
+        }
+    }
+
+    /// Record one proposal→chosen latency sample; re-tunes every
+    /// [`TUNE_EVERY`] samples. No-op while admission is disabled.
+    pub(crate) fn observe(&mut self, latency: Time) {
+        if !self.enabled {
+            return;
+        }
+        if self.window.len() < TUNE_WINDOW {
+            self.window.push(latency);
+        } else {
+            self.window[self.cursor] = latency;
+        }
+        self.cursor = (self.cursor + 1) % TUNE_WINDOW;
+        self.since_adjust += 1;
+        if self.since_adjust >= TUNE_EVERY {
+            self.since_adjust = 0;
+            self.adjust();
+        }
+    }
+
+    /// Windowed p99 of proposal→chosen latency (nearest-rank; 0 until the
+    /// first sample or with admission disabled).
+    pub(crate) fn windowed_p99(&self) -> Time {
+        if self.window.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.window.clone();
+        sorted.sort_unstable();
+        sorted[(sorted.len() * 99 + 99) / 100 - 1]
+    }
+
+    fn min_delay(&self) -> Time {
+        (self.cfg_delay / 16).max(1)
+    }
+
+    fn adjust(&mut self) {
+        let p99 = self.windowed_p99();
+        let band = self.target / 10;
+        if p99 > self.target + band {
+            // Hot: amortize harder (multiplicative) and flush promptly —
+            // under queueing overload, throughput is the path back to the
+            // latency target.
+            self.batch = self.batch.saturating_mul(2).min(self.cfg_batch.max(1));
+            self.delay = (self.delay / 2).max(self.min_delay());
+        } else if p99 + band < self.target {
+            // Cold: back off gently (additive) toward minimal batching —
+            // small batches minimize per-command latency.
+            self.batch = self.batch.saturating_sub(1).max(1);
+            self.delay = (self.delay + self.cfg_delay / 8 + 1).min(self.cfg_delay.max(1));
+        }
+        // Inside the ±10% band: hold (hysteresis, no oscillation).
+    }
+
+    /// The batch-size knob Phase 2 should use right now.
+    pub(crate) fn effective_batch_size(&self) -> usize {
+        if self.enabled {
+            self.batch
+        } else {
+            self.cfg_batch
+        }
+    }
+
+    /// The flush-delay knob Phase 2 should use right now.
+    pub(crate) fn effective_batch_delay(&self) -> Time {
+        if self.enabled {
+            self.delay
+        } else {
+            self.cfg_delay
+        }
+    }
 }
 
 /// Installation state for the round being established.
@@ -331,6 +460,16 @@ pub struct Leader {
     /// Max |H_i| observed after matchmaking (paper: "matchmakers usually
     /// return just a single configuration").
     pub max_prior_configs: usize,
+
+    // ---- Overload control (DESIGN.md §Overload) ----
+    /// Adaptive batching controller. Identity (and sample-free) unless
+    /// `admission =` is configured, so admission-disabled runs — the
+    /// model checker's domain — are unaffected.
+    tuner: BatchTuner,
+    /// Requests refused with `Msg::Busy` because the proposal inbox was
+    /// over `AdmissionSpec::inbox` (metrics; `busy_rate` derives from
+    /// this).
+    pub busy_rejections: u64,
 }
 
 impl Leader {
@@ -347,6 +486,7 @@ impl Leader {
         opts: OptFlags,
         seed: u64,
     ) -> Leader {
+        let tuner = BatchTuner::new(&opts);
         Leader {
             id,
             group: 0,
@@ -399,6 +539,8 @@ impl Leader {
             reconfigs_completed: 0,
             gc_completed: 0,
             max_prior_configs: 0,
+            tuner,
+            busy_rejections: 0,
         }
     }
 
@@ -430,6 +572,34 @@ impl Leader {
     /// Diagnostics: `(next_slot, chosen_watermark, persisted_f1)`.
     pub fn log_watermarks(&self) -> (Slot, Slot, Slot) {
         (self.next_slot, self.chosen_watermark, self.persisted_f1)
+    }
+
+    /// Load metric: the proposal-inbox depth — in-flight unchosen slots
+    /// plus commands buffered for the next batch plus commands stalled on
+    /// an installation. This is the quantity `admission = inbox:N`
+    /// bounds; the scan is O(in-flight window), which admission itself
+    /// keeps bounded.
+    pub fn inbox_depth(&self) -> usize {
+        let inflight = self
+            .log
+            .range(self.chosen_watermark..)
+            .filter(|(_, s)| !s.chosen)
+            .count();
+        inflight + self.pending_batch.len() + self.stalled.len()
+    }
+
+    /// Load metric: the adaptive-batching controller's windowed p99 of
+    /// proposal→chosen latency (0 until the first sample; always 0 with
+    /// admission disabled).
+    pub fn windowed_p99(&self) -> Time {
+        self.tuner.windowed_p99()
+    }
+
+    /// The controller's current effective `(batch_size, batch_delay)`
+    /// (tests/harness; equals the configured knobs with admission
+    /// disabled).
+    pub fn effective_batch(&self) -> (usize, Time) {
+        (self.tuner.effective_batch_size(), self.tuner.effective_batch_delay())
     }
 
     // =====================================================================
@@ -867,11 +1037,11 @@ impl Leader {
             // Phase 2 batching: accumulate; flush when full, or let the
             // delay timer flush a partial batch.
             self.pending_batch.push(cmd);
-            if self.pending_batch.len() >= self.opts.batch_size {
+            if self.pending_batch.len() >= self.tuner.effective_batch_size() {
                 self.flush_batch(now, fx);
             } else if !self.batch_timer_armed {
                 self.batch_timer_armed = true;
-                fx.timer(self.opts.batch_delay, Timer::BatchFlush);
+                fx.timer(self.tuner.effective_batch_delay(), Timer::BatchFlush);
             }
             return;
         }
@@ -963,6 +1133,12 @@ impl Leader {
         }
         ss.chosen = true;
         let value = ss.value.clone();
+        // Feed the adaptive-batching controller (no-op when admission is
+        // disabled). `proposed_at` resets on watchdog retries, so a
+        // rescued slot reports its last-fan-out latency — an
+        // underestimate that still trends with queueing delay, which is
+        // what the controller steers on.
+        self.tuner.observe(now.saturating_sub(ss.proposed_at));
         fx.announce(Announce::Chosen { group: self.group, slot, round, value: value.clone() });
         // Hot path: move the value into the fan-out instead of cloning a
         // broadcast template (one full Value clone saved per chosen slot).
@@ -1555,6 +1731,27 @@ impl Node for Leader {
                     fx.send(from, Msg::NotLeader { group: self.group, hint: self.last_leader });
                     return;
                 }
+                // Admission control (DESIGN.md §Overload): refuse with
+                // Busy while the proposal inbox is over its bound. The
+                // request never touches the sequencer, so a shed is a
+                // *drop*, not an ack — the client keeps `seq` in its
+                // outstanding window, its advertised `lowest` cannot
+                // advance past the shed command, and a later retry is
+                // admitted in FIFO position like any first attempt.
+                if self.opts.admission.enabled
+                    && self.inbox_depth() >= self.opts.admission.inbox
+                {
+                    self.busy_rejections += 1;
+                    fx.send(
+                        from,
+                        Msg::Busy {
+                            group: self.group,
+                            seq: cmd.seq,
+                            retry_after_us: self.opts.admission.target_p99_us,
+                        },
+                    );
+                    return;
+                }
                 self.on_client_request(cmd, lowest, now, fx);
             }
             Msg::MatchB { group, round, gc_watermark, prior } => {
@@ -1703,7 +1900,7 @@ impl Node for Leader {
                         // keep the timer alive so the batch flushes soon
                         // after steady state returns.
                         self.batch_timer_armed = true;
-                        fx.timer(self.opts.batch_delay, Timer::BatchFlush);
+                        fx.timer(self.tuner.effective_batch_delay(), Timer::BatchFlush);
                     }
                 }
             }
@@ -1818,8 +2015,11 @@ impl Node for Leader {
         use std::fmt::Write;
         // All protocol state, minus absolute timestamps (heartbeat/lease
         // clocks, `Install::LeaseFence::until`'s deadline is kept — it
-        // gates behavior) and minus pure metrics counters. HashMaps are
-        // rendered sorted.
+        // gates behavior) and minus pure metrics counters. The adaptive
+        // batching controller (`tuner`) is excluded with them: it holds
+        // latency samples (timestamps in disguise) and only influences
+        // behavior when `admission =` is configured, which model-checked
+        // runs never enable. HashMaps are rendered sorted.
         let mut s = format!(
             "ldr g={} r={:?} cfg={:?} rcfgs={:?} inst={:?} act={:?} next={} cw={} \
              stalled={:?} batch={:?}/{} seq={:?} racks={:?} compacted={} pf1={} wmprop={} \
@@ -2357,5 +2557,118 @@ mod tests {
         p.pump(fx2, 3);
         assert!(p.leader.is_steady());
         assert_eq!(p.chosen_count(), 1);
+    }
+
+    // ---- Adaptive batching controller (DESIGN.md §Overload) ----
+
+    /// A tuner with admission enabled at `target_us`, bounds
+    /// `batch ∈ [1, batch]`, `delay ∈ [delay/16, delay]`.
+    fn tuner(batch: usize, delay: Time, target_us: u64) -> BatchTuner {
+        let opts = OptFlags::none()
+            .with_batching(batch, delay)
+            .with_admission(crate::config::AdmissionSpec::slo(1024, target_us, false));
+        BatchTuner::new(&opts)
+    }
+
+    /// Feed `n` identical latency samples.
+    fn feed(t: &mut BatchTuner, latency: Time, n: usize) {
+        for _ in 0..n {
+            t.observe(latency);
+        }
+    }
+
+    #[test]
+    fn tuner_disabled_is_identity() {
+        // Without an `admission =` line the controller must be inert:
+        // configured knobs verbatim, no samples retained.
+        let mut t = BatchTuner::new(&OptFlags::none().with_batching(8, 42));
+        feed(&mut t, 500 * MS, 1000);
+        assert_eq!(t.effective_batch_size(), 8);
+        assert_eq!(t.effective_batch_delay(), 42);
+        assert_eq!(t.windowed_p99(), 0);
+    }
+
+    #[test]
+    fn tuner_converges_from_both_directions() {
+        // Target 1ms. Cold load (100µs p99): batch walks down to 1 and
+        // the delay relaxes back to the configured ceiling. Then a hot
+        // step (50ms p99): batch climbs back to the ceiling and the delay
+        // drops to its floor.
+        let mut t = tuner(16, MS, 1_000);
+        feed(&mut t, 100 * US, 1024);
+        assert_eq!(t.effective_batch_size(), 1, "cold load should reach minimal batching");
+        assert_eq!(t.effective_batch_delay(), MS);
+        feed(&mut t, 50 * MS, 1024);
+        assert_eq!(t.effective_batch_size(), 16, "hot load should reach the batch ceiling");
+        assert_eq!(t.effective_batch_delay(), MS / 16, "hot load should floor the delay");
+    }
+
+    #[test]
+    fn tuner_respects_bounds_under_sustained_extremes() {
+        let mut t = tuner(8, 160, 1_000);
+        // Sustained extreme overload: knobs saturate at the bounds and
+        // stay there — no overflow, no runaway.
+        feed(&mut t, 10_000 * MS, 4096);
+        assert_eq!(t.effective_batch_size(), 8);
+        assert_eq!(t.effective_batch_delay(), 10); // 160/16 floor
+        // Sustained idle: back to [1, configured delay].
+        feed(&mut t, 1, 4096);
+        assert_eq!(t.effective_batch_size(), 1);
+        assert_eq!(t.effective_batch_delay(), 160);
+    }
+
+    #[test]
+    fn tuner_holds_steady_inside_hysteresis_band() {
+        // Samples inside the ±10% band must not move the knobs at all:
+        // a steady load at the target does not oscillate.
+        let mut t = tuner(16, MS, 1_000);
+        let (b0, d0) = (t.effective_batch_size(), t.effective_batch_delay());
+        feed(&mut t, 1_000 * US, 2048); // exactly on target
+        assert_eq!((t.effective_batch_size(), t.effective_batch_delay()), (b0, d0));
+        // And once converged after a step change, further identical load
+        // leaves the knobs fixed (no limit cycle).
+        feed(&mut t, 50 * MS, 1024);
+        let hot = (t.effective_batch_size(), t.effective_batch_delay());
+        feed(&mut t, 50 * MS, 1024);
+        assert_eq!((t.effective_batch_size(), t.effective_batch_delay()), hot);
+    }
+
+    #[test]
+    fn leader_sheds_with_busy_beyond_inbox_bound_without_sequencer_effects() {
+        // inbox:2 — the third concurrent command is refused with Busy,
+        // and the refusal must not perturb the per-client FIFO: the same
+        // seq retried later is admitted normally.
+        let mut opts = OptFlags::default();
+        opts.admission = crate::config::AdmissionSpec::slo(2, 5_000, false);
+        let mut p = Pump::new(opts);
+        p.start();
+        // Two commands proposed but NOT pumped to acceptors: they stay
+        // unchosen, holding the inbox at its bound.
+        let mut held = Effects::new();
+        for seq in 1..=2u64 {
+            let cmd = Command { client: 100, seq, payload: vec![] };
+            p.leader.on_msg(2, 100, Msg::ClientRequest { group: 0, cmd, lowest: 1 }, &mut held);
+        }
+        assert_eq!(p.leader.inbox_depth(), 2);
+        let repr_before = p.leader.state_repr();
+        let mut fx = Effects::new();
+        let cmd3 = Command { client: 100, seq: 3, payload: vec![] };
+        p.leader.on_msg(2, 100, Msg::ClientRequest { group: 0, cmd: cmd3.clone(), lowest: 1 }, &mut fx);
+        let busy = fx.msgs.iter().find_map(|(to, m)| match m {
+            Msg::Busy { group, seq, retry_after_us } => Some((*to, *group, *seq, *retry_after_us)),
+            _ => None,
+        });
+        assert_eq!(busy, Some((100, 0, 3, 5_000)));
+        assert_eq!(p.leader.busy_rejections, 1);
+        // A shed is a drop, not an ack: no sequencer/log side effects.
+        assert_eq!(p.leader.state_repr(), repr_before);
+        // Drain the held proposals to choice; the retried seq 3 is then
+        // admitted in FIFO position.
+        p.pump(held, 3);
+        assert_eq!(p.chosen_count(), 2);
+        let mut fx2 = Effects::new();
+        p.leader.on_msg(4, 100, Msg::ClientRequest { group: 0, cmd: cmd3, lowest: 1 }, &mut fx2);
+        p.pump(fx2, 4);
+        assert_eq!(p.chosen_count(), 3);
     }
 }

@@ -33,6 +33,7 @@
 //! X4-vs-X6 comparisons to be apples-to-apples. A behavioral fix to one
 //! client must be mirrored in the other.
 
+use super::client::backoff_delay;
 use crate::msg::{Command, Msg};
 use crate::node::{Effects, Node, Timer};
 use crate::util::Rng;
@@ -77,6 +78,10 @@ struct Outstanding {
     /// separately on completion). Reads ride the replica path when the
     /// lane knows its replicas, else through the log (baseline).
     read: bool,
+    /// Resend attempts so far (capped exponential backoff; reset-on-
+    /// reply falls out of entry removal). Mirrors
+    /// [`crate::roles::Client`].
+    attempt: u32,
 }
 
 /// Per-group client state: an independent seq stream, in-flight window
@@ -106,6 +111,12 @@ struct Lane {
     last_probe: Time,
     /// `NotLeaseholder` redirect throttle for the read window.
     last_read_redirect: Time,
+    /// Busy-pushback horizon: this lane's leader asked for backoff
+    /// until here. Backlog draining prefers lanes whose horizon has
+    /// passed (route queued traffic around hot groups).
+    busy_until: Time,
+    /// `Msg::Busy` pushbacks this lane has received (load metrics).
+    busy_seen: u64,
 }
 
 impl Lane {
@@ -136,8 +147,18 @@ pub struct ShardClient {
     pub offered: u64,
     /// Requests completed.
     pub completed: u64,
-    /// Requests dropped at the stop deadline.
+    /// Requests dropped at the stop deadline, shed on `Busy` pushback
+    /// (`shed_on_busy`), or dropped at a full arrival queue
+    /// (`queue_cap`).
     pub abandoned: u64,
+    /// `Msg::Busy` pushbacks received across all lanes (admission
+    /// control; per-lane counts live in [`ShardClient::lane_load`]).
+    pub busy_observed: u64,
+    /// Policy on `Busy` pushback: `true` sheds (drop + `abandoned`),
+    /// `false` (default) retries after the leader's hint. Wired by the
+    /// harness from [`crate::config::AdmissionSpec::shed`]. Mirrors
+    /// [`crate::roles::Client::shed_on_busy`].
+    pub shed_on_busy: bool,
     /// Reads completed (subset of `completed`).
     pub reads_completed: u64,
     /// Completed writes `(issued_at, completed_at)`, all lanes merged.
@@ -192,6 +213,8 @@ impl ShardClient {
                     last_redirect: 0,
                     last_probe: 0,
                     last_read_redirect: 0,
+                    busy_until: 0,
+                    busy_seen: 0,
                 })
                 .collect(),
             spec,
@@ -199,6 +222,8 @@ impl ShardClient {
             offered: 0,
             completed: 0,
             abandoned: 0,
+            busy_observed: 0,
+            shed_on_busy: false,
             reads_completed: 0,
             writes: Vec::new(),
             write_issues: Vec::new(),
@@ -228,6 +253,12 @@ impl ShardClient {
     /// tests use it to confirm keys actually spread across groups.
     pub fn lane_seqs(&self) -> Vec<(GroupId, u64)> {
         self.lanes.iter().map(|l| (l.group, l.next_seq)).collect()
+    }
+
+    /// Per-lane load view for the harness's per-group metrics:
+    /// `(group, Busy pushbacks seen, Busy horizon)`.
+    pub fn lane_load(&self) -> Vec<(GroupId, u64, Time)> {
+        self.lanes.iter().map(|l| (l.group, l.busy_seen, l.busy_until)).collect()
     }
 
     fn payload_for(&self, key: u64, read: bool) -> Vec<u8> {
@@ -269,8 +300,10 @@ impl ShardClient {
         let seq = lane.next_seq;
         lane.next_seq += 1;
         lane.generation += 1;
-        lane.outstanding
-            .insert(seq, Outstanding { issued_at, generation: lane.generation, key, read });
+        lane.outstanding.insert(
+            seq,
+            Outstanding { issued_at, generation: lane.generation, key, read, attempt: 0 },
+        );
         self.in_flight += 1;
         let cmd = Command { client: self.id, seq, payload };
         let lowest = lane.lowest();
@@ -289,8 +322,10 @@ impl ShardClient {
         let seq = lane.read_next_seq;
         lane.read_next_seq += 1;
         lane.generation += 1;
-        lane.read_outstanding
-            .insert(seq, Outstanding { issued_at, generation: lane.generation, key, read: true });
+        lane.read_outstanding.insert(
+            seq,
+            Outstanding { issued_at, generation: lane.generation, key, read: true, attempt: 0 },
+        );
         self.in_flight += 1;
         let n = lane.replicas.len();
         let target = lane.replicas[(seq as usize + lane.replica_hint) % n];
@@ -315,6 +350,8 @@ impl ShardClient {
         else {
             return;
         };
+        let id = self.id;
+        let resend_after = self.spec.resend_after;
         let payload = self.payload_for(key, true);
         let lane = &mut self.lanes[lane_idx];
         if lane.replicas.is_empty() {
@@ -322,14 +359,18 @@ impl ShardClient {
         }
         lane.generation += 1;
         let generation = lane.generation;
-        lane.read_outstanding.get_mut(&seq).unwrap().generation = generation;
+        let o = lane.read_outstanding.get_mut(&seq).unwrap();
+        o.generation = generation;
+        o.attempt = o.attempt.saturating_add(1);
+        let attempt = o.attempt;
         let n = lane.replicas.len();
         let target = lane.replicas[(seq as usize + lane.replica_hint) % n];
         fx.send(target, Msg::Read { group: lane.group, seq, payload });
-        fx.timer(
-            self.spec.resend_after,
-            Timer::ShardReadResend { group: lane.group, seq, generation },
-        );
+        // Jitter keys on the lane-qualified seq (seq spaces repeat
+        // across lanes) — see `backoff_delay`.
+        let delay =
+            backoff_delay(resend_after, id, seq ^ ((lane.group as u64) << 40), attempt);
+        fx.timer(delay, Timer::ShardReadResend { group: lane.group, seq, generation });
     }
 
     /// Re-send one in-flight request of a lane, bounded by the stop
@@ -352,11 +393,16 @@ impl ShardClient {
         let lane = &mut self.lanes[lane_idx];
         lane.generation += 1;
         let generation = lane.generation;
-        lane.outstanding.get_mut(&seq).unwrap().generation = generation;
+        let o = lane.outstanding.get_mut(&seq).unwrap();
+        o.generation = generation;
+        o.attempt = o.attempt.saturating_add(1);
+        let attempt = o.attempt;
         let cmd = Command { client: id, seq, payload };
         let lowest = lane.lowest();
         fx.send(lane.leader(), Msg::ClientRequest { group: lane.group, cmd, lowest });
-        fx.timer(resend_after, Timer::ShardResend { group: lane.group, seq, generation });
+        let delay =
+            backoff_delay(resend_after, id, seq ^ ((lane.group as u64) << 40), attempt);
+        fx.timer(delay, Timer::ShardResend { group: lane.group, seq, generation });
     }
 
     /// Closed-loop refill: keep `window` requests in flight in total,
@@ -375,7 +421,9 @@ impl ShardClient {
 
     /// One open-loop arrival at `now`; schedules the next tick.
     fn on_arrival(&mut self, now: Time, fx: &mut Effects) {
-        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight } = self.spec.mode else {
+        let WorkloadMode::OpenLoop { interval, poisson, max_in_flight, queue_cap } =
+            self.spec.mode
+        else {
             return;
         };
         if now >= self.spec.stop_at {
@@ -386,8 +434,12 @@ impl ShardClient {
         let read = self.classify();
         if self.in_flight < max_in_flight {
             self.dispatch(key, read, now, now, fx);
-        } else {
+        } else if self.backlog.len() < queue_cap {
             self.backlog.push_back((now, key, read));
+        } else {
+            // Queue bound (satellite fix): shed the arrival instead of
+            // growing the backlog without limit past saturation.
+            self.abandoned += 1;
         }
         let gap = if poisson {
             let u = self.rng.next_f64();
@@ -400,6 +452,11 @@ impl ShardClient {
 
     /// A completion freed an in-flight slot: refill the window or drain
     /// one backlogged arrival (abandoning the backlog past `stop_at`).
+    /// Draining prefers arrivals whose home lane is not under `Busy`
+    /// pushback — queued traffic routes around hot groups while their
+    /// horizon passes (strict FIFO when every candidate lane is hot, and
+    /// with admission disabled `busy_until` is always 0, so this is
+    /// plain FIFO).
     fn refill(&mut self, now: Time, fx: &mut Effects) {
         match self.spec.mode {
             WorkloadMode::ClosedLoop { .. } => self.fill_window(now, fx),
@@ -407,7 +464,20 @@ impl ShardClient {
                 if now >= self.spec.stop_at {
                     self.abandoned += self.backlog.len() as u64;
                     self.backlog.clear();
-                } else if let Some((arrived, key, read)) = self.backlog.pop_front() {
+                } else if !self.backlog.is_empty() {
+                    let n = self.lanes.len();
+                    // Bounded scan: hot-lane avoidance must not turn a
+                    // deep backlog into an O(len) search per completion.
+                    let pick = self
+                        .backlog
+                        .iter()
+                        .take(16)
+                        .position(|&(_, key, _)| {
+                            self.lanes[shard_of(key, n) as usize].busy_until <= now
+                        })
+                        .unwrap_or(0);
+                    let (arrived, key, read) =
+                        self.backlog.remove(pick).expect("index within backlog");
                     self.dispatch(key, read, arrived, now, fx);
                 }
             }
@@ -471,6 +541,47 @@ impl Node for ShardClient {
                 self.reads_completed += 1;
                 self.reads.push((o.issued_at, now, result));
                 self.refill(now, fx);
+            }
+            Msg::Busy { group, seq, retry_after_us } => {
+                // Admission pushback from this lane's leader (DESIGN.md
+                // §Overload). The request was dropped without sequencer
+                // side effects, so shedding or delayed retry are both
+                // safe; either way the lane is marked hot so backlog
+                // draining steers around it. Mirrors
+                // [`crate::roles::Client`].
+                let Some(idx) = self.lane_index(group) else {
+                    return;
+                };
+                if !self.lanes[idx].outstanding.contains_key(&seq) {
+                    return; // stale Busy for a request that since completed
+                }
+                self.busy_observed += 1;
+                let hint = retry_after_us.max(1) * US;
+                let lane = &mut self.lanes[idx];
+                lane.busy_until = lane.busy_until.max(now.saturating_add(hint));
+                lane.busy_seen += 1;
+                if self.shed_on_busy {
+                    self.lanes[idx].outstanding.remove(&seq);
+                    self.in_flight -= 1;
+                    self.abandoned += 1;
+                    self.refill(now, fx);
+                } else {
+                    let id = self.id;
+                    let lane = &mut self.lanes[idx];
+                    lane.generation += 1;
+                    let generation = lane.generation;
+                    let o = lane.outstanding.get_mut(&seq).expect("checked above");
+                    o.generation = generation;
+                    o.attempt = o.attempt.saturating_add(1);
+                    let attempt = o.attempt;
+                    let delay = backoff_delay(
+                        hint,
+                        id,
+                        seq ^ ((group as u64) << 40),
+                        attempt.saturating_sub(1),
+                    );
+                    fx.timer(delay, Timer::ShardResend { group, seq, generation });
+                }
             }
             Msg::NotLeaseholder { group, hint: _ } => {
                 let Some(idx) = self.lane_index(group) else {
@@ -890,5 +1001,140 @@ mod tests {
         assert!(sent(&fx2).is_empty(), "no resend past the stop deadline");
         assert_eq!(c.abandoned, 1);
         assert_eq!(c.in_flight(), 1);
+    }
+
+    // ---- Overload control (DESIGN.md §Overload) ----
+
+    fn next_resend(fx: &Effects) -> Option<(Time, Timer)> {
+        fx.timers
+            .iter()
+            .find(|(_, t)| matches!(t, Timer::ShardResend { .. }))
+            .map(|&(d, t)| (d, t))
+    }
+
+    #[test]
+    fn shard_resend_backoff_bounds_retry_traffic() {
+        // Mirror of the single-group client's retry-storm regression:
+        // a never-answering group leader sees a handful of resends in
+        // 10 virtual seconds, not one per 100 ms.
+        let spec = WorkloadSpec::pipelined(1).stop_at(100 * crate::SEC);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (mut delay, mut timer) = next_resend(&fx).unwrap();
+        let mut now = 0;
+        let mut resends = 0;
+        while now + delay <= 10 * crate::SEC {
+            now += delay;
+            let mut f = Effects::new();
+            c.on_timer(now, timer, &mut f);
+            resends += sent(&f).len();
+            match next_resend(&f) {
+                Some((d, t)) => (delay, timer) = (d, t),
+                None => break,
+            }
+        }
+        assert!((1..=12).contains(&resends), "retry storm: {resends} resends in 10 s");
+        let base = c.spec.resend_after;
+        assert!(delay >= 32 * base && delay < 32 * base + base / 4, "uncapped delay {delay}");
+        assert_eq!(c.in_flight(), 1, "backoff delays, it never drops");
+    }
+
+    #[test]
+    fn busy_marks_lane_hot_and_delays_retry() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(4));
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (_, group, seq, _) = sent(&fx)[0];
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::Busy { group, seq, retry_after_us: 5_000 }, &mut fx2);
+        assert_eq!(c.busy_observed, 1);
+        assert!(sent(&fx2).is_empty(), "no immediate resend on pushback");
+        // The lane is marked hot until now + hint, and only that lane.
+        let load = c.lane_load();
+        assert_eq!(load[group as usize].1, 1);
+        assert_eq!(load[group as usize].2, MS + 5 * MS);
+        assert_eq!(load[1 - group as usize].2, 0, "other lane untouched");
+        // Seq stays outstanding: a Busy is a drop, not an ack.
+        assert!(c.lanes[group as usize].outstanding.contains_key(&seq));
+        // The armed retry waits at least the hint (plus bounded jitter)
+        // and fires a single delayed resend.
+        let (delay, t) = next_resend(&fx2).unwrap();
+        assert!(delay >= 5 * MS && delay < 7 * MS, "delay {delay}");
+        let mut fx3 = Effects::new();
+        c.on_timer(MS + delay, t, &mut fx3);
+        assert_eq!(sent(&fx3).len(), 1, "delayed retry fires");
+        assert_eq!(sent(&fx3)[0].1, group);
+    }
+
+    #[test]
+    fn busy_shed_drops_and_counts() {
+        let mut c = two_group_client(WorkloadSpec::pipelined(2));
+        c.shed_on_busy = true;
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (_, group, seq, _) = sent(&fx)[0];
+        let inflight_before = c.in_flight();
+        let mut fx2 = Effects::new();
+        c.on_msg(MS, 0, Msg::Busy { group, seq, retry_after_us: 1_000 }, &mut fx2);
+        assert_eq!((c.busy_observed, c.abandoned), (1, 1));
+        assert!(!c.lanes[group as usize].outstanding.contains_key(&seq));
+        // The freed slot refills with a fresh request (new key draw).
+        assert_eq!(c.in_flight(), inflight_before);
+        assert_eq!(sent(&fx2).len(), 1);
+        // A stale Busy for the shed seq is a no-op.
+        let mut fx3 = Effects::new();
+        c.on_msg(2 * MS, 0, Msg::Busy { group, seq, retry_after_us: 1_000 }, &mut fx3);
+        assert_eq!(c.busy_observed, 1);
+    }
+
+    #[test]
+    fn backlog_drains_around_hot_lane() {
+        let spec = WorkloadSpec::open_loop(1000.0).max_in_flight(1);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        let (_, g_first, s_first, _) = sent(&fx)[0];
+        let key_for = |g: GroupId| (0u64..).find(|&k| shard_of(k, 2) == g).unwrap();
+        // Queue one arrival per lane, lane 0's at the FIFO head, then
+        // mark lane 0 hot (as a Busy from its leader would).
+        c.backlog.push_back((MS, key_for(0), false));
+        c.backlog.push_back((2 * MS, key_for(1), false));
+        c.lanes[0].busy_until = 100 * MS;
+        // A completion drains the backlog: the cool lane's arrival
+        // jumps the queue, the hot lane's stays parked.
+        let mut fx2 = Effects::new();
+        c.on_msg(
+            3 * MS,
+            0,
+            Msg::ClientReply { group: g_first, seq: s_first, result: vec![] },
+            &mut fx2,
+        );
+        let drained = sent(&fx2);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].1, 1, "cool lane drained first");
+        assert_eq!(c.backlog.len(), 1);
+        assert_eq!(c.backlog[0].1, key_for(0), "hot lane's arrival still queued");
+        // Once the horizon passes, FIFO resumes on the hot lane.
+        let (_, g2, s2, _) = drained[0];
+        let mut fx3 = Effects::new();
+        c.on_msg(200 * MS, 0, Msg::ClientReply { group: g2, seq: s2, result: vec![] }, &mut fx3);
+        assert_eq!(sent(&fx3)[0].1, 0);
+    }
+
+    #[test]
+    fn open_loop_queue_bounded_by_cap() {
+        // Mirror of the single-group client's queue-bound regression.
+        let spec = WorkloadSpec::open_loop(1000.0).max_in_flight(1).queue_cap(2);
+        let mut c = two_group_client(spec);
+        let mut fx = Effects::new();
+        c.on_start(0, &mut fx);
+        for i in 1..=5u64 {
+            let mut f = Effects::new();
+            c.on_timer(i * MS, Timer::Wakeup { tag: TAG_ARRIVAL }, &mut f);
+        }
+        assert_eq!(c.offered, 6);
+        assert_eq!(c.backlog.len(), 2, "backlog capped");
+        assert_eq!(c.abandoned, 3, "overflow counted as abandoned");
     }
 }

@@ -14,6 +14,16 @@
 //! sequencer can initialize its cursor mid-stream (a new leader taking
 //! over sees `lowest = k` and starts at `k` rather than waiting for a
 //! `seq 1` that was settled long ago) and retire stale buffered entries.
+//!
+//! Overload control (DESIGN.md §Overload) composes with this by staying
+//! *in front of* it: the leader's admission check refuses a request with
+//! [`crate::msg::Msg::Busy`] before [`ClientSequencer::offer`] is
+//! called, so a rejection is a drop, not an ack — no cursor or buffer
+//! state moves. A retried seq is later admitted in its normal FIFO
+//! position, and a seq the client *sheds* on `Busy` heals through the
+//! same `lowest` mechanism: the shed seq leaves the client's window, the
+//! next request advertises a floor above it, and the cursor jumps the
+//! gap instead of waiting for a request that can no longer be resent.
 
 use crate::msg::Command;
 use crate::NodeId;
@@ -163,6 +173,21 @@ mod tests {
         // from the previous leader); the stale buffer entry is dropped.
         assert_eq!(admit_seqs(s.offer(cmd(7, 4), 4)), vec![4]);
         assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn busy_shed_gap_heals_via_lowest() {
+        // seq 2 was refused with Busy and shed client-side — it never
+        // reached the sequencer (a Busy is a drop, not an ack). seq 3,
+        // issued after the shed, advertises lowest = 3: the cursor must
+        // jump the gap rather than wait for a seq 2 that can no longer
+        // be resent.
+        let mut s = ClientSequencer::new();
+        assert_eq!(admit_seqs(s.offer(cmd(7, 1), 1)), vec![1]);
+        assert_eq!(admit_seqs(s.offer(cmd(7, 3), 3)), vec![3]);
+        assert_eq!(s.buffered(), 0);
+        // Ordinary flow continues after the healed gap.
+        assert_eq!(admit_seqs(s.offer(cmd(7, 4), 4)), vec![4]);
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! The pipeline, end to end:
 //!
 //! 1. [`space`] enumerates the parameter grid (batching × shards ×
-//!    read mix × loss × reconfig cadence × leases × snapshots) or
-//!    draws a seeded sample of it;
+//!    read mix × loss × reconfig cadence × leases × snapshots ×
+//!    admission) or draws a seeded sample of it;
 //! 2. [`runner`] executes each configuration as a self-contained
 //!    seeded simulation, in parallel across cores, each seed derived
 //!    from `(root seed, label)` so any row replays in isolation;
@@ -210,6 +210,7 @@ mod tests {
             reconfig_ms: None,
             leases: false,
             snapshots: false,
+            admission: false,
         };
         SweepRow {
             seed: config.seed(42),

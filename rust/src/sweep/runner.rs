@@ -10,7 +10,7 @@
 
 use super::score::{composite_score, ScoreInputs};
 use super::space::SweepConfig;
-use crate::config::{LeaseSpec, OptFlags, SnapshotSpec};
+use crate::config::{AdmissionSpec, LeaseSpec, OptFlags, SnapshotSpec};
 use crate::harness::{Cluster, ShardedCluster};
 use crate::metrics::{check_counter_reads, open_loop_summary};
 use crate::roles::{Leader, Replica};
@@ -85,6 +85,12 @@ fn opts_for(cfg: &SweepConfig) -> OptFlags {
     }
     if cfg.snapshots {
         opts = opts.with_snapshots(SnapshotSpec::every(100 * MS, 1024));
+    }
+    if cfg.admission {
+        // Delayed-retry policy (shed = false): pushback never abandons
+        // requests, so the axis perturbs queueing/latency, not the
+        // delivery ratio the composite score keys on.
+        opts = opts.with_admission(AdmissionSpec::slo(32, 20_000, false));
     }
     opts
 }
@@ -284,6 +290,7 @@ mod tests {
             reconfig_ms: None,
             leases: false,
             snapshots: false,
+            admission: false,
         }
     }
 
@@ -312,6 +319,18 @@ mod tests {
         let row = run_config(&cfg, 42, SEC / 2);
         assert_eq!(row.stale_reads, Some(0), "violation: {:?}", row.violation);
         assert!(row.score > 0.0);
+    }
+
+    #[test]
+    fn admission_config_runs_and_scores() {
+        // The admission axis must not perturb a healthy (unsaturated)
+        // run: full score, no violation, nothing abandoned to pushback.
+        let cfg = SweepConfig { admission: true, ..quick_cfg() };
+        let row = run_config(&cfg, 42, SEC / 2);
+        assert!(row.violation.is_none(), "{:?}", row.violation);
+        assert!(row.throughput > 100.0, "throughput {}", row.throughput);
+        assert!(row.score > 0.0);
+        assert!(row.delivery_ratio > 0.8, "delivery {}", row.delivery_ratio);
     }
 
     #[test]

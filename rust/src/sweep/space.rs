@@ -29,6 +29,9 @@ pub struct SweepConfig {
     pub leases: bool,
     /// Replica snapshots + log truncation on (`SnapshotSpec`)?
     pub snapshots: bool,
+    /// Leader overload control on (`AdmissionSpec`: bounded proposal
+    /// inbox + Busy pushback + adaptive batching)?
+    pub admission: bool,
 }
 
 impl SweepConfig {
@@ -36,7 +39,7 @@ impl SweepConfig {
     /// (BENCH rows, CSV rows, compare diagnostics, `--only`).
     pub fn label(&self) -> String {
         format!(
-            "b{}_s{}_r{}_loss{}_rc{}_{}_{}",
+            "b{}_s{}_r{}_loss{}_rc{}_{}_{}_{}",
             self.batch_size,
             self.shards,
             self.read_pct,
@@ -47,6 +50,7 @@ impl SweepConfig {
             },
             if self.leases { "lease" } else { "nolease" },
             if self.snapshots { "snap" } else { "nosnap" },
+            if self.admission { "adm" } else { "noadm" },
         )
     }
 
@@ -98,6 +102,7 @@ pub struct ParameterSpace {
     pub reconfig_ms: Vec<Option<u64>>,
     pub leases: Vec<bool>,
     pub snapshots: Vec<bool>,
+    pub admission: Vec<bool>,
 }
 
 impl Default for ParameterSpace {
@@ -110,6 +115,7 @@ impl Default for ParameterSpace {
             reconfig_ms: vec![None, Some(500)],
             leases: vec![false, true],
             snapshots: vec![false, true],
+            admission: vec![false, true],
         }
     }
 }
@@ -124,6 +130,7 @@ impl ParameterSpace {
             * self.reconfig_ms.len()
             * self.leases.len()
             * self.snapshots.len()
+            * self.admission.len()
     }
 
     /// Whether the space is empty (an axis with no values).
@@ -132,8 +139,8 @@ impl ParameterSpace {
     }
 
     /// The full cartesian grid in fixed axis order (batch → shards →
-    /// read mix → loss → reconfig cadence → leases → snapshots), so
-    /// grid position is a pure function of the axes.
+    /// read mix → loss → reconfig cadence → leases → snapshots →
+    /// admission), so grid position is a pure function of the axes.
     pub fn grid(&self) -> Vec<SweepConfig> {
         let mut out = Vec::with_capacity(self.len());
         for &batch_size in &self.batch_sizes {
@@ -143,15 +150,18 @@ impl ParameterSpace {
                         for &reconfig_ms in &self.reconfig_ms {
                             for &leases in &self.leases {
                                 for &snapshots in &self.snapshots {
-                                    out.push(SweepConfig {
-                                        batch_size,
-                                        shards,
-                                        read_pct,
-                                        loss_pm,
-                                        reconfig_ms,
-                                        leases,
-                                        snapshots,
-                                    });
+                                    for &admission in &self.admission {
+                                        out.push(SweepConfig {
+                                            batch_size,
+                                            shards,
+                                            read_pct,
+                                            loss_pm,
+                                            reconfig_ms,
+                                            leases,
+                                            snapshots,
+                                            admission,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -184,7 +194,7 @@ mod tests {
         let space = ParameterSpace::default();
         let grid = space.grid();
         assert_eq!(grid.len(), space.len());
-        assert_eq!(grid.len(), 3 * 3 * 3 * 2 * 2 * 2 * 2);
+        assert_eq!(grid.len(), 3 * 3 * 3 * 2 * 2 * 2 * 2 * 2);
         // Labels are unique — they're the artifact key.
         let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
         labels.sort();
@@ -217,6 +227,7 @@ mod tests {
             reconfig_ms: Some(500),
             leases: true,
             snapshots: false,
+            admission: false,
         };
         assert_eq!(cfg.seed(42), cfg.clone().seed(42));
         assert_ne!(cfg.seed(42), cfg.seed(43));
@@ -235,10 +246,17 @@ mod tests {
             reconfig_ms: Some(500),
             leases: true,
             snapshots: true,
+            admission: true,
         };
-        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rc500_lease_snap");
-        let cfg = SweepConfig { reconfig_ms: None, leases: false, snapshots: false, ..cfg };
-        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rcoff_nolease_nosnap");
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rc500_lease_snap_adm");
+        let cfg = SweepConfig {
+            reconfig_ms: None,
+            leases: false,
+            snapshots: false,
+            admission: false,
+            ..cfg
+        };
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rcoff_nolease_nosnap_noadm");
     }
 
     #[test]
@@ -251,6 +269,7 @@ mod tests {
             reconfig_ms: Some(500),
             leases: false,
             snapshots: false,
+            admission: false,
         };
         assert!((cfg.loss_rate() - 0.01).abs() < 1e-12);
         assert!((cfg.read_fraction() - 0.9).abs() < 1e-12);

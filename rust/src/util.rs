@@ -100,6 +100,17 @@ impl Rng {
     }
 }
 
+/// One SplitMix64 step: a stateless 64-bit mixer. Used where a
+/// deterministic hash of a few identifiers must stand in for randomness
+/// (e.g. retry-jitter from `(client, seq, attempt)`) without consuming a
+/// stateful [`Rng`] stream that other draws depend on.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// A tiny FNV-1a 64-bit hasher for model-checker state fingerprints.
 ///
 /// Hand-rolled for the same reason as [`Rng`]: fingerprints must be

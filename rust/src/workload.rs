@@ -33,6 +33,13 @@ use crate::{NodeId, Time, MS, SEC};
 /// spec constructors clamp to it.
 pub const MAX_IN_FLIGHT: usize = 128;
 
+/// Default bound on the open-loop client-side arrival queue (arrivals
+/// beyond `max_in_flight` that are waiting to be dispatched). Generous —
+/// transient bursts never hit it — but finite, so a run driven past
+/// saturation sheds (counted in the client's `abandoned` counter)
+/// instead of growing the backlog without bound.
+pub const DEFAULT_QUEUE_CAP: usize = 4096;
+
 /// How a client decides when to issue the next request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorkloadMode {
@@ -58,6 +65,12 @@ pub enum WorkloadMode {
         /// In-flight bound; `1` disables pipelining, larger values let
         /// the arrival process run ahead of the commit pipeline.
         max_in_flight: usize,
+        /// Bound on the client-side arrival queue (arrivals waiting for
+        /// an in-flight slot). An arrival past a full queue is dropped
+        /// and counted in the client's `abandoned` counter, so past
+        /// saturation the backlog — and with it queueing latency and
+        /// memory — stays bounded. Default [`DEFAULT_QUEUE_CAP`].
+        queue_cap: usize,
     },
 }
 
@@ -155,6 +168,7 @@ impl WorkloadSpec {
             interval: rate_to_interval(rate_per_sec),
             poisson: false,
             max_in_flight: 64,
+            queue_cap: DEFAULT_QUEUE_CAP,
         })
     }
 
@@ -166,6 +180,7 @@ impl WorkloadSpec {
             interval: rate_to_interval(rate_per_sec),
             poisson: true,
             max_in_flight: 64,
+            queue_cap: DEFAULT_QUEUE_CAP,
         })
     }
 
@@ -243,6 +258,16 @@ impl WorkloadSpec {
         self
     }
 
+    /// Bound the open-loop arrival queue at `n` waiting arrivals
+    /// (clamped to ≥ 1; no-op for closed-loop modes). Default
+    /// [`DEFAULT_QUEUE_CAP`].
+    pub fn queue_cap(mut self, n: usize) -> WorkloadSpec {
+        if let WorkloadMode::OpenLoop { queue_cap, .. } = &mut self.mode {
+            *queue_cap = n.max(1);
+        }
+        self
+    }
+
     /// The in-flight bound, whichever mode.
     pub fn in_flight_bound(&self) -> usize {
         match self.mode {
@@ -313,10 +338,11 @@ mod tests {
     fn open_loop_rate_roundtrips() {
         let w = WorkloadSpec::open_loop(1000.0);
         match w.mode {
-            WorkloadMode::OpenLoop { interval, poisson, max_in_flight } => {
+            WorkloadMode::OpenLoop { interval, poisson, max_in_flight, queue_cap } => {
                 assert_eq!(interval, SEC / 1000);
                 assert!(!poisson);
                 assert_eq!(max_in_flight, 64);
+                assert_eq!(queue_cap, DEFAULT_QUEUE_CAP);
             }
             other => panic!("{other:?}"),
         }
@@ -355,6 +381,18 @@ mod tests {
         assert_eq!(WorkloadSpec::closed_loop().read_fraction(7.0).read_fraction, 1.0);
         assert_eq!(WorkloadSpec::closed_loop().read_fraction(-1.0).read_fraction, 0.0);
         assert_eq!(WorkloadSpec::closed_loop().read_fraction(f64::NAN).read_fraction, 0.0);
+    }
+
+    #[test]
+    fn queue_cap_knob() {
+        let w = WorkloadSpec::open_loop(100.0).queue_cap(7);
+        assert!(matches!(w.mode, WorkloadMode::OpenLoop { queue_cap: 7, .. }));
+        // Clamped to ≥ 1 (a zero cap would drop every arrival).
+        let w = WorkloadSpec::open_loop_poisson(100.0).queue_cap(0);
+        assert!(matches!(w.mode, WorkloadMode::OpenLoop { queue_cap: 1, .. }));
+        // No-op on closed loops.
+        let w = WorkloadSpec::pipelined(4).queue_cap(9);
+        assert_eq!(w.mode, WorkloadMode::ClosedLoop { window: 4 });
     }
 
     #[test]

@@ -237,6 +237,42 @@ fn snapshot_chunk_messages_roundtrip() {
 }
 
 #[test]
+fn busy_messages_roundtrip() {
+    // Dedicated round-trips for the overload-control pushback (tag 45,
+    // DESIGN.md §Overload), including the boundary values.
+    for group in [0u32, 3, u32::MAX] {
+        let m = Msg::Busy { group, seq: 1, retry_after_us: 20_000 };
+        assert_eq!(rt(m.clone()), m);
+    }
+    let m = Msg::Busy { group: 0, seq: 0, retry_after_us: 0 };
+    assert_eq!(rt(m.clone()), m);
+    let m = Msg::Busy { group: u32::MAX, seq: u64::MAX, retry_after_us: u64::MAX };
+    assert_eq!(rt(m.clone()), m);
+}
+
+#[test]
+fn busy_messages_reject_truncation() {
+    let m = Msg::Busy { group: 5, seq: 7, retry_after_us: 20_000 };
+    let bytes = m.encode();
+    assert_eq!(Msg::decode(&bytes).unwrap(), m);
+    for cut in 0..bytes.len() {
+        assert!(Msg::decode(&bytes[..cut]).is_err(), "prefix of len {cut} of {m:?} decoded");
+    }
+}
+
+#[test]
+fn tag_table_is_exhaustive_and_names_busy() {
+    // The table must stay dense (tags exactly 0..len, no dups), cover
+    // every sampled variant, and name the overload pushback at tag 45 —
+    // a new variant that forgets its table entry fails here.
+    use matchmaker::codec::{check_tag_table, sample_messages, MSG_TAG_TABLE};
+    check_tag_table(MSG_TAG_TABLE);
+    assert_eq!(MSG_TAG_TABLE.len(), 46);
+    assert_eq!(sample_messages().len(), MSG_TAG_TABLE.len());
+    assert!(MSG_TAG_TABLE.contains(&(45, "Busy")), "Busy missing from the tag table");
+}
+
+#[test]
 fn snapshot_chunk_messages_reject_truncation() {
     let msgs = vec![
         Msg::SnapshotChunk { base: 64, seq: 2, total: 9, bytes: vec![1, 2, 3, 4] },

@@ -7,7 +7,7 @@
 //! fully offline.
 
 use matchmaker::codec::{sample_messages, Wire};
-use matchmaker::config::{Configuration, LeaseSpec, OptFlags, SnapshotSpec};
+use matchmaker::config::{AdmissionSpec, Configuration, LeaseSpec, OptFlags, SnapshotSpec};
 use matchmaker::metrics::check_counter_reads;
 use matchmaker::harness::{msec, secs, Cluster, ShardedCluster};
 use matchmaker::msg::{Envelope, Msg, Value};
@@ -408,6 +408,134 @@ fn read_scaling_meets_acceptance() {
         "no-lease run served grant reads: {:?}",
         fallback.read_path
     );
+}
+
+/// X9 acceptance gate (ISSUE 9): sweep offered load from well below to
+/// past the saturation point under the 40 µs/msg egress model with
+/// admission on (Busy + delayed retry, 16-slot inbox, 20 ms SLO, one
+/// reconfiguration mid-run). Goodput at the top of the sweep must hold
+/// within 10% of the sweep's peak — the leader pushes excess back
+/// instead of collapsing under its own queue — and the completed-request
+/// tail stays bounded instead of growing with the backlog. A shed-policy
+/// run at the top rate must hold the same floor. (The admission-off
+/// comparison rows render in `repro exp x9`; this gate pins only the
+/// admission-on behavior.)
+#[test]
+fn overload_holds_goodput_past_saturation() {
+    use matchmaker::harness::experiments::{run_overload, AdmissionPolicy};
+    let duration = secs(3);
+    let rates = [250.0, 500.0, 1000.0, 2000.0, 4000.0];
+    let rows: Vec<_> = rates
+        .iter()
+        .map(|&r| run_overload(42, r, AdmissionPolicy::Retry, duration))
+        .collect();
+    // Sanity at the bottom of the sweep: far below saturation, nearly
+    // everything offered completes.
+    assert!(
+        rows[0].goodput >= 0.8 * rows[0].offered_per_sec,
+        "unsaturated run lost traffic: {:.0}/s of {:.0}/s offered",
+        rows[0].goodput,
+        rows[0].offered_per_sec
+    );
+    let peak = rows.iter().map(|r| r.goodput).fold(0.0f64, f64::max);
+    let top = rows.last().unwrap();
+    // The top of the sweep is actually past saturation: arrivals outrun
+    // completions enough to overflow the bounded client queues.
+    assert!(top.abandoned > 0, "top rate never overflowed a queue bound");
+    assert!(
+        top.offered_per_sec > top.goodput,
+        "top rate not saturated: offered {:.0}/s, goodput {:.0}/s",
+        top.offered_per_sec,
+        top.goodput
+    );
+    // The gate: goodput holds within 10% of the sweep peak ...
+    assert!(
+        top.goodput >= 0.9 * peak,
+        "goodput collapsed past saturation: {:.0}/s vs peak {:.0}/s",
+        top.goodput,
+        peak
+    );
+    // ... with the tail bounded (a congestion-collapsed leader shows
+    // multi-second tails as its inbox grows for the whole run).
+    assert!(top.p99_ms <= 2_000.0, "p99 unbounded at the top rate: {:.1} ms", top.p99_ms);
+    // Shedding instead of delayed retry holds the same goodput floor.
+    let shed = run_overload(42, 4000.0, AdmissionPolicy::Shed, duration);
+    assert!(
+        shed.goodput >= 0.85 * peak && shed.p99_ms <= 2_000.0,
+        "shed policy degraded: {:.0}/s (peak {:.0}/s), p99 {:.1} ms",
+        shed.goodput,
+        peak,
+        shed.p99_ms
+    );
+}
+
+/// Overload-control tentpole property (ISSUE 9): Busy pushback with a
+/// one-slot inbox — every pipelined window collides with the admission
+/// bound, so the leader emits a sustained Busy storm — under a
+/// 4-reconfiguration storm, with Optimizations 1/2 on and off and both
+/// pushback policies. A Busy is a drop, not an ack: the leader advances
+/// no per-client state for a rejected request, so the chosen stream
+/// stays exactly-once with per-client seqs strictly increasing in slot
+/// order. Under the retry policy nothing is ever abandoned, so the
+/// stream must additionally be gap-free contiguous FIFO; under shedding
+/// a shed seq legitimately leaves a gap (it is never chosen), but a
+/// shed-then-reissued window must never reorder past, or duplicate, a
+/// later command from the same client.
+#[test]
+fn busy_pushback_preserves_exactly_once_fifo_across_reconfig() {
+    for shed in [false, true] {
+        for (proactive, bypass) in [(true, true), (false, false)] {
+            let name =
+                format!("busy pushback FIFO (shed={shed}, opt1={proactive}, opt2={bypass})");
+            property(&name, 3, |seed| {
+                let mut opts = OptFlags::default();
+                opts.proactive_matchmaking = proactive;
+                opts.phase1_bypass = bypass;
+                // One-slot inbox: with 4 clients x window 4, most of
+                // every window beyond the head is rejected with Busy.
+                opts.admission = AdmissionSpec::slo(1, 5_000, shed);
+                let mut cluster = Cluster::builder()
+                    .clients(4)
+                    .workload(WorkloadSpec::pipelined(4))
+                    .opts(opts)
+                    .seed(seed)
+                    .build();
+                let leader = cluster.initial_leader();
+                for i in 0..4u64 {
+                    let cfg = cluster.random_config(i + 1);
+                    cluster.sim.schedule(msec(250 + i * 250), move |s| {
+                        s.with_node::<Leader, _>(leader, |l, now, fx| {
+                            l.reconfigure(cfg.clone(), now, fx)
+                        });
+                    });
+                }
+                cluster.sim.run_until(secs(2));
+                cluster.assert_safe();
+                // The run actually exercised admission end to end: the
+                // leader rejected requests and clients saw the pushback.
+                let load = cluster.group_load();
+                assert!(load.busy_rejections > 0, "no Busy emitted (seed {seed})");
+                assert!(cluster.busy_observed() > 0, "no Busy delivered (seed {seed})");
+                let (_, completed, abandoned) = cluster.workload_totals();
+                assert!(completed > 0, "nothing completed under pushback (seed {seed})");
+                if shed {
+                    assert!(abandoned > 0, "shed policy never shed (seed {seed})");
+                    assert_chosen_stream_exactly_once_monotone(&cluster);
+                } else {
+                    // Delayed retry never abandons; the stream is the
+                    // full contiguous per-client FIFO.
+                    assert_eq!(abandoned, 0, "retry policy abandoned (seed {seed})");
+                    assert_chosen_stream_exactly_once_fifo(&cluster);
+                }
+                // Progress continued despite pushback + the storm.
+                let samples = cluster.samples();
+                assert!(
+                    samples.iter().any(|(t, _)| *t > msec(1500)),
+                    "no progress late in the run (seed {seed})"
+                );
+            });
+        }
+    }
 }
 
 /// State-retention tentpole property: snapshots + log truncation +
@@ -822,6 +950,40 @@ fn assert_chosen_stream_exactly_once_fifo(cluster: &Cluster) {
         let e = next.entry(c.client).or_insert(1);
         assert_eq!(c.seq, *e, "client {} chosen out of FIFO order", c.client);
         *e += 1;
+    };
+    for value in by_slot.values() {
+        match value {
+            Value::Cmd(c) => check(c),
+            Value::Batch(cmds) => cmds.iter().for_each(&mut check),
+            Value::Noop | Value::Reconfig(_) => {}
+        }
+    }
+}
+
+/// Like [`assert_chosen_stream_exactly_once_fifo`], but for runs where
+/// clients legitimately abandon seqs (Busy shedding, queue overflow):
+/// gaps are allowed, yet each client's chosen seqs must still be
+/// strictly increasing in slot order — which also implies exactly-once.
+/// A shed-then-reissued request must never land after a later command
+/// from the same client.
+fn assert_chosen_stream_exactly_once_monotone(cluster: &Cluster) {
+    let mut by_slot: BTreeMap<Slot, &Value> = BTreeMap::new();
+    for (_, _, a) in &cluster.sim.announces {
+        if let Announce::Chosen { slot, value, .. } = a {
+            by_slot.entry(*slot).or_insert(value);
+        }
+    }
+    let mut last: BTreeMap<NodeId, u64> = BTreeMap::new();
+    let mut check = |c: &matchmaker::msg::Command| {
+        let e = last.entry(c.client).or_insert(0);
+        assert!(
+            c.seq > *e,
+            "client {} seq {} chosen at or after seq {} (reorder or duplicate)",
+            c.client,
+            c.seq,
+            *e
+        );
+        *e = c.seq;
     };
     for value in by_slot.values() {
         match value {
