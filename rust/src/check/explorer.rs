@@ -31,6 +31,13 @@
 //! * **Auto events** (per-instance predicate, e.g. deliveries to the
 //!   workload sink) fire immediately after every action and are excluded
 //!   from frontiers and traces.
+//! * **Partitions are first-class actions** ([`Action::Cut`] /
+//!   [`Action::Heal`]): an instance may declare candidate one-way links
+//!   ([`Instance::partition_links`]) the explorer severs and restores as
+//!   schedule steps, within a per-schedule budget
+//!   ([`Instance::max_partition_ops`]). Cuts apply to *future* sends
+//!   (in-flight messages still deliver, as on a real network), and the
+//!   cut-link state participates in state fingerprints.
 //!
 //! On a violation the offending action sequence is shrunk to a local
 //! minimum ([`shrink`]) before being reported: every action whose
@@ -74,6 +81,13 @@ pub struct Instance {
     pub auto: fn(&PendingEvent) -> bool,
     /// Total network drops the explorer may inject per schedule.
     pub max_drops: usize,
+    /// Directed links the explorer may sever and restore as first-class
+    /// schedule actions (the nemesis `partition` event class). Empty:
+    /// no partition branching.
+    pub partition_links: &'static [(NodeId, NodeId)],
+    /// Total partition operations (cuts plus heals) the explorer may
+    /// take per schedule.
+    pub max_partition_ops: usize,
 }
 
 /// Seq sentinel meaning "the lowest-seq pending event whose signature
@@ -94,18 +108,25 @@ pub enum Action {
     Fire(u64, String),
     /// Drop the pending message with this seq (same wildcard rule).
     Drop(u64, String),
+    /// Sever the one-way link `from -> to`. Future sends on the link are
+    /// silently discarded; already-pending deliveries still arrive.
+    Cut(NodeId, NodeId),
+    /// Restore the one-way link `from -> to` severed by a prior `Cut`.
+    Heal(NodeId, NodeId),
 }
 
 impl Action {
     pub fn seq(&self) -> u64 {
         match self {
             Action::Fire(s, _) | Action::Drop(s, _) => *s,
+            Action::Cut(..) | Action::Heal(..) => WILDCARD_SEQ,
         }
     }
 
     pub fn sig(&self) -> &str {
         match self {
             Action::Fire(_, sig) | Action::Drop(_, sig) => sig,
+            Action::Cut(..) | Action::Heal(..) => "",
         }
     }
 }
@@ -144,6 +165,37 @@ pub fn replay(inst: &Instance, actions: &[Action]) -> Replayed {
         return Replayed::Violation(v, 0);
     }
     for (i, act) in actions.iter().enumerate() {
+        match act {
+            Action::Cut(a, b) => {
+                if !sim.link_open(*a, *b) {
+                    return Replayed::Invalid(format!(
+                        "action {i}: cut {a}->{b}, but the link is already severed"
+                    ));
+                }
+                sim.set_link_oneway(*a, *b, false);
+                // No deliveries happen on a cut, but feed anyway so the
+                // per-action bookkeeping stays uniform.
+                drain_autos(inst, &mut sim);
+                if let Err(v) = invs.feed(&sim.announces) {
+                    return Replayed::Violation(v, i + 1);
+                }
+                continue;
+            }
+            Action::Heal(a, b) => {
+                if sim.link_open(*a, *b) {
+                    return Replayed::Invalid(format!(
+                        "action {i}: heal {a}->{b}, but the link is not severed"
+                    ));
+                }
+                sim.set_link_oneway(*a, *b, true);
+                drain_autos(inst, &mut sim);
+                if let Err(v) = invs.feed(&sim.announces) {
+                    return Replayed::Violation(v, i + 1);
+                }
+                continue;
+            }
+            Action::Fire(..) | Action::Drop(..) => {}
+        }
         let seq = if act.seq() == WILDCARD_SEQ {
             match sim.pending().into_iter().find(|e| e.sig == act.sig()) {
                 Some(e) => e.seq,
@@ -160,6 +212,7 @@ pub fn replay(inst: &Instance, actions: &[Action]) -> Replayed {
         let got = match act {
             Action::Fire(..) => sim.fire(seq),
             Action::Drop(..) => sim.drop_event(seq),
+            Action::Cut(..) | Action::Heal(..) => unreachable!("handled above"),
         };
         match got {
             Some(sig) if sig == act.sig() => {}
@@ -188,10 +241,16 @@ pub fn replay(inst: &Instance, actions: &[Action]) -> Replayed {
 
 /// Enumerate the actions enabled in `sim` under the instance's reduction
 /// rules: the head of every non-empty `(src, dst)` channel (fire, plus
-/// drop while budget remains), the lowest-id pending control, and any
-/// pending timer passing the instance filter.
+/// drop while budget remains), the lowest-id pending control, any
+/// pending timer passing the instance filter, and — while the partition
+/// budget lasts — a cut (or, if already severed, a heal) of each
+/// candidate link.
 pub fn enabled_actions(inst: &Instance, sim: &Sim, prefix: &[Action]) -> Vec<Action> {
     let drops_used = prefix.iter().filter(|a| matches!(a, Action::Drop(..))).count();
+    let part_ops_used = prefix
+        .iter()
+        .filter(|a| matches!(a, Action::Cut(..) | Action::Heal(..)))
+        .count();
     let mut heads: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
     let mut control_seen = false;
     let mut acts = Vec::new();
@@ -217,6 +276,15 @@ pub fn enabled_actions(inst: &Instance, sim: &Sim, prefix: &[Action]) -> Vec<Act
                     control_seen = true;
                     acts.push(Action::Fire(ev.seq, ev.sig));
                 }
+            }
+        }
+    }
+    if part_ops_used < inst.max_partition_ops {
+        for &(from, to) in inst.partition_links {
+            if sim.link_open(from, to) {
+                acts.push(Action::Cut(from, to));
+            } else {
+                acts.push(Action::Heal(from, to));
             }
         }
     }

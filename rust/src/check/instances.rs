@@ -17,6 +17,12 @@
 //!   message per schedule. Checked against the standard (lenient)
 //!   catalog — commands may be lost, but safety must hold. Expected
 //!   clean.
+//! * [`partitioned`] — the same deployment, but the explorer may sever
+//!   and restore the leader's links to two acceptors as first-class
+//!   schedule actions (the nemesis `partition` event class in
+//!   miniature). Liveness is forfeit while a link is down, so the
+//!   lenient catalog applies; safety must hold through every cut/heal
+//!   interleaving. Expected clean.
 //! * [`badquorum`] — a deliberately broken configuration whose P1 and
 //!   P2 quorums do not intersect (`P1 = {{0,1}}`, `P2 = {{2}}`). The
 //!   explorer must find the classic two-leader chosen-value divergence;
@@ -142,6 +148,8 @@ pub fn base() -> Instance {
         timers: no_timers,
         auto: auto_sink,
         max_drops: 0,
+        partition_links: &[],
+        max_partition_ops: 0,
     }
 }
 
@@ -162,6 +170,32 @@ pub fn lossy() -> Instance {
         timers: no_timers,
         auto: auto_sink,
         max_drops: 1,
+        partition_links: &[],
+        max_partition_ops: 0,
+    }
+}
+
+/// The partitioned instance: base deployment, but schedules may sever
+/// and restore the leader's one-way links to acceptors 1 and 2 (two
+/// partition operations per schedule — enough for one cut/heal cycle or
+/// an asymmetric double cut). Messages sent on a severed link are lost,
+/// so liveness is forfeit and the lenient catalog applies: commands may
+/// stall, but no cut/heal interleaving may break safety.
+pub fn partitioned() -> Instance {
+    Instance {
+        name: "partitioned",
+        about: "base deployment; schedules may cut/heal the one-way links 6->1 and 6->2 \
+                within a 2-op budget; standard (safety-only) invariants",
+        build: base_build,
+        invariants: InvariantSet::standard,
+        expect_violation: None,
+        depth: 22,
+        smoke_depth: 6,
+        timers: no_timers,
+        auto: auto_sink,
+        max_drops: 0,
+        partition_links: &[(6, 1), (6, 2)],
+        max_partition_ops: 2,
     }
 }
 
@@ -215,12 +249,14 @@ pub fn badquorum() -> Instance {
         timers: no_timers,
         auto: auto_sink,
         max_drops: 0,
+        partition_links: &[],
+        max_partition_ops: 0,
     }
 }
 
 /// Every checked instance, in documentation order.
 pub fn all() -> Vec<Instance> {
-    vec![base(), lossy(), badquorum()]
+    vec![base(), lossy(), partitioned(), badquorum()]
 }
 
 /// Look up an instance by name.
@@ -311,6 +347,61 @@ mod tests {
             Replayed::Violation(v, _) => panic!("unexpected violation: {v}"),
             Replayed::Invalid(e) => panic!("invalid replay: {e}"),
         }
+    }
+
+    #[test]
+    fn partitioned_offers_cuts_within_budget() {
+        let inst = partitioned();
+        let sim = (inst.build)();
+        let actions = enabled_actions(&inst, &sim, &[]);
+        // Both candidate links are open, so both cuts are offered (and
+        // no heals yet).
+        assert!(actions.contains(&Action::Cut(6, 1)), "{actions:?}");
+        assert!(actions.contains(&Action::Cut(6, 2)), "{actions:?}");
+        assert!(!actions.iter().any(|a| matches!(a, Action::Heal(..))));
+        // After a cut, that link offers a heal instead; after the budget
+        // is spent, no partition actions remain.
+        let prefix = vec![Action::Cut(6, 1)];
+        match replay(&inst, &prefix) {
+            Replayed::State(sim2, _) => {
+                let next = enabled_actions(&inst, &sim2, &prefix);
+                assert!(next.contains(&Action::Heal(6, 1)), "{next:?}");
+                assert!(next.contains(&Action::Cut(6, 2)), "{next:?}");
+                assert!(!next.contains(&Action::Cut(6, 1)), "{next:?}");
+            }
+            other => panic!("cut prefix did not replay to a state: {:?}", other_kind(&other)),
+        }
+        let spent = vec![Action::Cut(6, 1), Action::Heal(6, 1)];
+        match replay(&inst, &spent) {
+            Replayed::State(sim2, _) => {
+                let next = enabled_actions(&inst, &sim2, &spent);
+                assert!(
+                    !next.iter().any(|a| matches!(a, Action::Cut(..) | Action::Heal(..))),
+                    "partition budget not enforced: {next:?}"
+                );
+            }
+            other => panic!("spent prefix did not replay to a state: {:?}", other_kind(&other)),
+        }
+        // A heal of an open link is an invalid (hand-edited) trace.
+        assert!(matches!(
+            replay(&inst, &[Action::Heal(6, 1)]),
+            Replayed::Invalid(_)
+        ));
+    }
+
+    fn other_kind(r: &Replayed) -> &'static str {
+        match r {
+            Replayed::State(..) => "state",
+            Replayed::Violation(..) => "violation",
+            Replayed::Invalid(_) => "invalid",
+        }
+    }
+
+    #[test]
+    fn shallow_partitioned_exploration_is_clean() {
+        let report = explore(&partitioned(), 4, 20_000);
+        assert!(report.violation.is_none(), "{:?}", report.violation);
+        assert!(report.unique_states > 1);
     }
 
     #[test]

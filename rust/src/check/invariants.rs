@@ -18,6 +18,7 @@
 //! | `matchmaker-monotonic`| MatchB rounds non-decreasing, ≥ GC watermark — Alg. 1/4 |
 //! | `mm-merge`            | Figure-7 merge of stopped logs is correct — §6 |
 //! | `lease-fence`         | old grants expire before a new fence lifts    |
+//! | `lease-disjoint-under-skew` | lease-fence with a clock-drift envelope: old grants expire ≥ `max_drift` before the fence lifts |
 //! | `watermark-order`     | truncate ≤ executed/durable; snapshots advance |
 //! | `client-fifo`         | per-client exactly-once / FIFO execution order |
 //! | `recovery-sound`      | WAL replay restores ≥ everything durably acked — DESIGN.md §Durability |
@@ -29,7 +30,7 @@ use crate::msg::{Command, MmLog, Value};
 use crate::node::Announce;
 use crate::round::Round;
 use crate::util::Fnv;
-use crate::{GroupId, NodeId, Slot, Time};
+use crate::{GroupId, NodeId, Slot, Time, US};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -351,6 +352,82 @@ impl Invariant for LeaseFence {
 
     fn digest(&self) -> u64 {
         let mut h = Fnv::new();
+        for (r, vu) in &self.grants {
+            h.write_str(&format!("{r:?}"));
+            h.write_u64(*vu);
+        }
+        h.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// lease-disjoint-under-skew
+// ---------------------------------------------------------------------
+
+/// Default drift envelope for `lease-disjoint-under-skew` in the
+/// standard and strict catalogs: 1µs, matching the floor
+/// [`crate::config::LeaseSpec::every`] clamps `drift` to.
+pub const DEFAULT_DRIFT_ENVELOPE: Time = US;
+
+/// `lease-fence` hardened by a clock-drift envelope (DESIGN.md
+/// §Nemesis): no two leaders hold overlapping lease validity given the
+/// maximum modeled drift. Plain `lease-fence` accepts a fence that lifts
+/// the very nanosecond the last lower-round grant expires; with real
+/// clocks that is only safe if every clock agrees on that nanosecond.
+/// This variant requires the margin the protocol actually promises: at
+/// `FenceLifted` for round `r'`, every grant issued under `r < r'` must
+/// have been expired for at least `max_drift` — so a grant holder whose
+/// clock runs `max_drift` behind still cannot consider its lease valid
+/// while the new leader starts choosing writes.
+///
+/// The leader guarantees a `2 × LeaseSpec::drift` gap by construction
+/// (grants shave `drift` off their announced validity and the
+/// post-election fence waits `duration + drift`), so the catalog is
+/// sound whenever `max_drift ≤ 2 × LeaseSpec::drift`. The default
+/// envelope is [`DEFAULT_DRIFT_ENVELOPE`]; nemesis runs that inject
+/// clock skew widen it to the injected bound via
+/// [`InvariantSet::standard_with_drift`].
+struct LeaseDisjointUnderSkew {
+    max_drift: Time,
+    /// Per grant round: the latest `valid_until` ever granted.
+    grants: BTreeMap<Round, Time>,
+}
+
+impl Invariant for LeaseDisjointUnderSkew {
+    fn name(&self) -> &'static str {
+        "lease-disjoint-under-skew"
+    }
+
+    fn observe(&mut self, at: Time, node: NodeId, a: &Announce) -> Result<(), String> {
+        match a {
+            Announce::LeaseGranted { round, valid_until } => {
+                let e = self.grants.entry(*round).or_insert(0);
+                if *valid_until > *e {
+                    *e = *valid_until;
+                }
+                Ok(())
+            }
+            Announce::FenceLifted { round } => {
+                for (r, vu) in &self.grants {
+                    if r < round && vu.saturating_add(self.max_drift) > at {
+                        return Err(format!(
+                            "leader {node}: fence for {round:?} lifted at t={at}, but a \
+                             grant under {r:?} valid until t={vu} is inside the drift \
+                             envelope ({} ns): a clock running behind could still \
+                             consider the old lease valid",
+                            self.max_drift
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_u64(self.max_drift);
         for (r, vu) in &self.grants {
             h.write_str(&format!("{r:?}"));
             h.write_u64(*vu);
@@ -749,7 +826,7 @@ impl InvariantSet {
     /// including crashy and lossy ones. This is what the harness asserts
     /// after every experiment.
     pub fn standard() -> InvariantSet {
-        Self::with_fifo(false)
+        Self::with_fifo(false, DEFAULT_DRIFT_ENVELOPE)
     }
 
     /// The strict catalog: adds exactly-once slot placement and
@@ -757,10 +834,18 @@ impl InvariantSet {
     /// every admitted command is eventually chosen (the explorer's
     /// loss-free instances).
     pub fn strict() -> InvariantSet {
-        Self::with_fifo(true)
+        Self::with_fifo(true, DEFAULT_DRIFT_ENVELOPE)
     }
 
-    fn with_fifo(strict: bool) -> InvariantSet {
+    /// The standard catalog with the `lease-disjoint-under-skew` drift
+    /// envelope widened to `max_drift` — for nemesis runs that inject
+    /// clock skew up to that bound. Sound (no false positives) whenever
+    /// `max_drift ≤ 2 × LeaseSpec::drift` of the run's lease config.
+    pub fn standard_with_drift(max_drift: Time) -> InvariantSet {
+        Self::with_fifo(false, max_drift)
+    }
+
+    fn with_fifo(strict: bool, max_drift: Time) -> InvariantSet {
         InvariantSet {
             invs: vec![
                 Box::new(ChosenUnique::default()),
@@ -768,6 +853,7 @@ impl InvariantSet {
                 Box::new(MatchmakerMonotonic::default()),
                 Box::new(MmMergeConsistent),
                 Box::new(LeaseFence::default()),
+                Box::new(LeaseDisjointUnderSkew { max_drift, grants: BTreeMap::new() }),
                 Box::new(WatermarkOrder::default()),
                 Box::new(ClientFifo::new(strict)),
                 Box::new(RecoverySound::default()),
@@ -982,11 +1068,53 @@ mod tests {
 
     #[test]
     fn lease_fence_accepts_expired_grants() {
+        // Expired well past the default drift envelope (1µs), so neither
+        // lease-fence nor lease-disjoint-under-skew fires.
         let events = vec![
             (10, 6, Announce::LeaseGranted { round: r(1), valid_until: 100 }),
-            (150, 7, Announce::FenceLifted { round: r(2) }),
+            (100 + 2 * US, 7, Announce::FenceLifted { round: r(2) }),
         ];
         assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn lease_disjoint_fires_inside_drift_envelope() {
+        // The old grant *is* expired (lease-fence passes), but only by
+        // 400ns — inside the 1µs envelope a clock running behind could
+        // still consider it valid.
+        let events = vec![
+            (10, 6, Announce::LeaseGranted { round: r(1), valid_until: 100 }),
+            (500, 7, Announce::FenceLifted { round: r(2) }),
+        ];
+        let v = InvariantSet::check_all(&events).unwrap_err();
+        assert_eq!(v.invariant, "lease-disjoint-under-skew");
+    }
+
+    #[test]
+    fn lease_disjoint_ignores_same_and_newer_rounds() {
+        // Grants under the fenced round itself (or newer) are the new
+        // leader's own; only *lower*-round grants must be margined out.
+        let events = vec![
+            (10, 6, Announce::LeaseGranted { round: r(2), valid_until: 10 * US }),
+            (20, 6, Announce::FenceLifted { round: r(2) }),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+    }
+
+    #[test]
+    fn lease_disjoint_envelope_widens_with_injected_skew() {
+        // Expired by 1.5µs: clean under the default 1µs envelope, a
+        // violation once the catalog models 2µs of injected skew.
+        let vu = 10 * US;
+        let at = vu + US + US / 2;
+        let events = vec![
+            (10, 6, Announce::LeaseGranted { round: r(1), valid_until: vu }),
+            (at, 7, Announce::FenceLifted { round: r(2) }),
+        ];
+        assert!(InvariantSet::check_all(&events).is_ok());
+        let mut skewed = InvariantSet::standard_with_drift(2 * US);
+        let v = skewed.feed(&events).unwrap_err();
+        assert_eq!(v.invariant, "lease-disjoint-under-skew");
     }
 
     #[test]
@@ -1077,7 +1205,7 @@ mod tests {
     fn without_removes_named_invariant() {
         let s = InvariantSet::standard().without("quorum-intersection");
         assert!(!s.names().contains(&"quorum-intersection"));
-        assert_eq!(s.names().len(), 7);
+        assert_eq!(s.names().len(), 8);
     }
 
     #[test]

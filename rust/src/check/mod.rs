@@ -30,7 +30,7 @@ pub mod trace;
 pub use explorer::{
     enabled_actions, explore, replay, shrink, Action, Instance, Replayed, Report, WILDCARD_SEQ,
 };
-pub use invariants::{Invariant, InvariantSet, Violation};
+pub use invariants::{Invariant, InvariantSet, Violation, DEFAULT_DRIFT_ENVELOPE};
 
 /// Run one instance end to end at the given bounds and print a report.
 /// Returns `Ok` if the outcome matches the instance's expectation

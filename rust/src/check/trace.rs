@@ -17,6 +17,9 @@
 //! * `expect ok` / `expect violation <invariant>` — the outcome the
 //!   replay must reproduce (a regression trace that stops violating is a
 //!   *failure*: the bug it pinned is hidden, or the schedule went stale).
+//! * `cut <from> <to>` / `heal <from> <to>` — partition actions: sever
+//!   or restore the one-way link `from -> to` (only meaningful for
+//!   instances that declare the link in `partition_links`).
 //! * `fire <seq> <sig>` / `drop <seq> <sig>` — the schedule. Seqs are
 //!   the simulator's deterministic event ids; the signature is
 //!   re-validated on replay so a stale trace fails loudly instead of
@@ -52,6 +55,14 @@ pub fn serialize(instance: &str, expect: Option<&str>, actions: &[Action]) -> St
         let (verb, seq, sig) = match a {
             Action::Fire(seq, sig) => ("fire", *seq, sig),
             Action::Drop(seq, sig) => ("drop", *seq, sig),
+            Action::Cut(from, to) => {
+                let _ = writeln!(out, "cut {from} {to}");
+                continue;
+            }
+            Action::Heal(from, to) => {
+                let _ = writeln!(out, "heal {from} {to}");
+                continue;
+            }
         };
         if seq == WILDCARD_SEQ {
             let _ = writeln!(out, "{verb} * {sig}");
@@ -94,6 +105,24 @@ pub fn parse(text: &str) -> Result<Trace, String> {
                     ));
                 }
             },
+            "cut" | "heal" => {
+                let from = parts
+                    .next()
+                    .ok_or(format!("line {}: {verb} needs a source node", ln + 1))?
+                    .parse()
+                    .map_err(|_| format!("line {}: {verb} needs numeric node ids", ln + 1))?;
+                let to = parts
+                    .next()
+                    .ok_or(format!("line {}: {verb} needs a destination node", ln + 1))?
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("line {}: {verb} needs numeric node ids", ln + 1))?;
+                actions.push(if verb == "cut" {
+                    Action::Cut(from, to)
+                } else {
+                    Action::Heal(from, to)
+                });
+            }
             "fire" | "drop" => {
                 let seq: u64 = match parts.next() {
                     Some("*") => WILDCARD_SEQ,
@@ -219,6 +248,21 @@ mod tests {
         assert!(text.contains("fire * c0"));
         assert!(text.contains("drop * d7->2:Phase2A"));
         assert_eq!(parse(&text).unwrap().actions, actions);
+    }
+
+    #[test]
+    fn partition_verbs_roundtrip() {
+        let actions = vec![
+            Action::Cut(6, 2),
+            Action::Fire(WILDCARD_SEQ, "d90->6:Client".into()),
+            Action::Heal(6, 2),
+        ];
+        let text = serialize("partitioned", None, &actions);
+        assert!(text.contains("cut 6 2"));
+        assert!(text.contains("heal 6 2"));
+        assert_eq!(parse(&text).unwrap().actions, actions);
+        assert!(parse("instance x\nexpect ok\ncut 6\n").is_err());
+        assert!(parse("instance x\nexpect ok\nheal a b\n").is_err());
     }
 
     #[test]

@@ -616,6 +616,10 @@ pub struct DeploymentConfig {
     /// `repro run --role client` flags override it). Only fixed payloads
     /// are representable in the text format.
     pub workload: WorkloadSpec,
+    /// Scripted fault schedule for the TCP runtime (`nemesis =` line,
+    /// [`crate::nemesis::NemesisPlan`] text form; `repro run --nemesis`
+    /// overrides it). `None` injects nothing.
+    pub nemesis: Option<crate::nemesis::NemesisPlan>,
 }
 
 fn default_sm() -> String {
@@ -646,6 +650,7 @@ impl DeploymentConfig {
             addrs: Default::default(),
             state_machine: default_sm(),
             workload: WorkloadSpec::closed_loop(),
+            nemesis: None,
         }
     }
 
@@ -740,6 +745,11 @@ impl DeploymentConfig {
         }
         wl.push('\n');
         out.push_str(&wl);
+        if let Some(plan) = &self.nemesis {
+            if !plan.is_empty() {
+                out.push_str(&format!("nemesis = {}\n", plan.to_text()));
+            }
+        }
         for (id, addr) in &self.addrs {
             out.push_str(&format!("addr.{id} = {addr}\n"));
         }
@@ -763,6 +773,7 @@ impl DeploymentConfig {
             addrs: Default::default(),
             state_machine: default_sm(),
             workload: WorkloadSpec::closed_loop(),
+            nemesis: None,
         };
         for (lineno, line) in s.lines().enumerate() {
             let line = line.trim();
@@ -784,6 +795,11 @@ impl DeploymentConfig {
                     cfg.shards = value.parse().map_err(|e| format!("shards: {e}"))?
                 }
                 "state_machine" => cfg.state_machine = value.to_string(),
+                "nemesis" => {
+                    let plan = crate::nemesis::NemesisPlan::parse(value)
+                        .map_err(|e| format!("nemesis: {e}"))?;
+                    cfg.nemesis = (!plan.is_empty()).then_some(plan);
+                }
                 "opts" => {
                     for part in value.split(',') {
                         let (k, v) = part
@@ -1191,6 +1207,28 @@ mod tests {
         assert_eq!(back.state_machine, "kv");
         assert_eq!(back.addrs, cfg.addrs);
         assert_eq!(back.workload, cfg.workload);
+    }
+
+    #[test]
+    fn text_config_nemesis_line_roundtrips() {
+        let mut cfg = DeploymentConfig::standard(1, 2);
+        // No plan (or an empty one): no `nemesis =` line at all.
+        assert!(!cfg.to_text().contains("nemesis ="));
+        cfg.nemesis = Some(crate::nemesis::NemesisPlan::none());
+        assert!(!cfg.to_text().contains("nemesis ="));
+        let plan = crate::nemesis::NemesisPlan::parse(
+            "100:part(0,1|2,3);300:heal;400:oneway(6>7);600:slow(10,2000);800:skew(6,5000)",
+        )
+        .unwrap();
+        cfg.nemesis = Some(plan.clone());
+        let text = cfg.to_text();
+        assert!(text.contains("nemesis = 100:part(0,1|2,3);"), "{text}");
+        let back = DeploymentConfig::from_text(&text).unwrap();
+        assert_eq!(back.nemesis, Some(plan));
+        // A malformed plan is a load-time error naming the fault.
+        let bad = format!("{}nemesis = 10:wat(1)\n", DeploymentConfig::standard(1, 1).to_text());
+        let err = DeploymentConfig::from_text(&bad).unwrap_err();
+        assert!(err.contains("unknown kind"), "{err}");
     }
 
     #[test]

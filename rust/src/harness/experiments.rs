@@ -4,11 +4,13 @@
 //! who wins, where the stalls are, what recovers when — are the point.
 
 use super::report::{
-    BenchJson, BenchRow, CurveReport, FigureReport, OpenLoopReport, OverloadReport, OverloadRow,
-    ReadReport, RetentionReport, ShardReport, TableReport, ViolinReport,
+    BenchJson, BenchRow, CurveReport, FigureReport, NemesisReport, NemesisRow, OpenLoopReport,
+    OverloadReport, OverloadRow, ReadReport, RetentionReport, ShardReport, TableReport,
+    ViolinReport,
 };
 use super::{msec, secs, Cluster, HorizontalCluster, ShardedCluster};
 use crate::config::{AdmissionSpec, Configuration, LeaseSpec, OptFlags, SnapshotSpec};
+use crate::nemesis::{Fault, NemesisEvent, NemesisPlan};
 use crate::metrics::{
     check_counter_reads, group_summary, interval_summary, open_loop_summary, rate_in_window,
     read_mix_summary, timeline, GroupSummary, OpenLoopSummary, ReadMixSummary, ReadSample,
@@ -1350,6 +1352,260 @@ pub fn overload_figure(seed: u64) -> OverloadReport {
     rep
 }
 
+/// X12 deployment constants: 4 open-loop clients at 250/s each with a
+/// 50/50 read/write mix over a 10 s run (arrivals stop 500 ms before
+/// the horizon so in-flight tails drain). The configured lease drift
+/// bound (1 ms) deliberately exceeds the injected ±400 µs clock skew:
+/// the schedule probes the protocol *inside* its stated tolerance, so
+/// zero violations is the required outcome, not a lucky one.
+const X12_END_MS: u64 = 10_000;
+const X12_WARM_MS: u64 = 500;
+const X12_SKEW_US: i64 = 400;
+const X12_DRIFT: Time = MS;
+
+/// The scripted X12 fault schedule over `cluster`'s layout (DESIGN.md
+/// §Nemesis):
+///
+/// * 2 s: partition the initial leader from every acceptor (it still
+///   hears and is heard by everything else — quorum loss, not a crash;
+///   the leader must step down and a follower must take over);
+/// * 3.2 s: heal;
+/// * 4.5 s: asymmetric partition of one matchmaker — its answers to
+///   both proposers vanish while requests still reach it; an acceptor
+///   reconfiguration rides through this window; healed at 5.8 s;
+/// * 6 s: gray-slow one pool acceptor to 8x nominal link delays
+///   (alive and correct, just late), restored at 7 s;
+/// * 7.5 s: skew the two proposers' lease clocks ±400 µs (inside the
+///   1 ms drift bound), restored at 8.5 s.
+pub fn x12_plan(cluster: &Cluster) -> NemesisPlan {
+    let p0 = cluster.layout.proposers[0];
+    let p1 = cluster.layout.proposers[1];
+    let mm0 = cluster.layout.initial_matchmakers()[0];
+    let acceptors = cluster.layout.acceptor_pool.clone();
+    let slow_acc = acceptors[0];
+    let events = vec![
+        NemesisEvent {
+            at_ms: 2_000,
+            fault: Fault::Partition { groups: vec![vec![p0], acceptors] },
+        },
+        NemesisEvent { at_ms: 3_200, fault: Fault::Heal },
+        NemesisEvent { at_ms: 4_500, fault: Fault::OneWay { from: mm0, to: p0 } },
+        NemesisEvent { at_ms: 4_500, fault: Fault::OneWay { from: mm0, to: p1 } },
+        NemesisEvent { at_ms: 5_800, fault: Fault::Heal },
+        NemesisEvent { at_ms: 6_000, fault: Fault::SlowNode { node: slow_acc, pct: 800 } },
+        NemesisEvent { at_ms: 7_000, fault: Fault::SlowNode { node: slow_acc, pct: 100 } },
+        NemesisEvent { at_ms: 7_500, fault: Fault::ClockSkew { node: p0, skew_us: X12_SKEW_US } },
+        NemesisEvent { at_ms: 7_500, fault: Fault::ClockSkew { node: p1, skew_us: -X12_SKEW_US } },
+        NemesisEvent { at_ms: 8_500, fault: Fault::ClockSkew { node: p0, skew_us: 0 } },
+        NemesisEvent { at_ms: 8_500, fault: Fault::ClockSkew { node: p1, skew_us: 0 } },
+    ];
+    NemesisPlan { events }
+}
+
+/// Output of one X12 run (faulted, or the fault-free twin when the
+/// plan is built but not injected).
+pub struct X12Run {
+    /// The scripted schedule (identical either way; see [`x12_plan`]).
+    pub plan: NemesisPlan,
+    /// Completion times of every acknowledged command, sorted.
+    pub completions: Vec<Time>,
+    /// Read and write history for the stale-read check.
+    pub reads: Vec<ReadSample>,
+    pub write_completions: Vec<Time>,
+    pub write_issues: Vec<Time>,
+    /// `LeaderSteady` announces observed (1 = startup election only).
+    pub elections: usize,
+    /// Reconfigurations completed across both proposers.
+    pub reconfigs_completed: u64,
+}
+
+impl X12Run {
+    /// Assert every completed read was linearizable w.r.t. the global
+    /// write history — the "zero stale reads" leg of the X12 gate.
+    pub fn check_stale_reads(&self) -> Result<(), String> {
+        check_counter_reads(&self.reads, &self.write_completions, &self.write_issues)
+    }
+}
+
+/// One X12 run: leases on with a 1 ms drift bound, reads routed to
+/// replicas against a Counter state machine (every read checkable), and
+/// — when `with_faults` — the [`x12_plan`] schedule injected into the
+/// deterministic event stream. An acceptor reconfiguration is scheduled
+/// on both proposers at 5 s (`reconfigure` is a no-op on a follower, so
+/// exactly the then-current leader acts: the post-failover one in the
+/// faulted run, the initial one in the twin). Safety is checked against
+/// the widened `lease-disjoint-under-skew` envelope, not just the
+/// default 1 µs one.
+pub fn run_x12(seed: u64, with_faults: bool) -> X12Run {
+    let duration = X12_END_MS * MS;
+    let mut opts = OptFlags::default();
+    opts.leases = LeaseSpec::every(50 * MS, 2 * MS, X12_DRIFT);
+    let stop = duration.saturating_sub(500 * MS);
+    let workload = WorkloadSpec::open_loop(250.0)
+        .max_in_flight(16)
+        .read_fraction(0.5)
+        .payload(1i64.to_le_bytes().to_vec())
+        .read_payload(Vec::new())
+        .stop_at(stop);
+    let mut cluster = Cluster::builder()
+        .clients(4)
+        .workload(workload)
+        .opts(opts)
+        .route_reads(true)
+        .seed(seed)
+        .net(NetworkModel::lan())
+        .build();
+    for &r in &cluster.layout.replicas.clone() {
+        if let Some(rep) = cluster.sim.node_mut::<Replica>(r) {
+            rep.sm = Box::new(Counter::new());
+        }
+    }
+    let plan = x12_plan(&cluster);
+    if with_faults {
+        plan.apply_to_sim(&mut cluster.sim);
+    }
+    let p0 = cluster.layout.proposers[0];
+    let p1 = cluster.layout.proposers[1];
+    let cfg = cluster.random_config(1);
+    cluster.sim.schedule(secs(5), move |s| {
+        for p in [p0, p1] {
+            let cfg = cfg.clone();
+            s.with_node::<Leader, _>(p, move |l, now, fx| l.reconfigure(cfg, now, fx));
+        }
+    });
+    cluster.sim.run_until(duration);
+    let mut invs = crate::check::InvariantSet::standard_with_drift(X12_DRIFT);
+    if let Err(v) = invs.feed(&cluster.sim.announces) {
+        panic!("X12 safety invariant violated: {v}");
+    }
+    let elections = cluster
+        .sim
+        .announces
+        .iter()
+        .filter(|(_, _, a)| matches!(a, crate::node::Announce::LeaderSteady { .. }))
+        .count();
+    let reconfigs_completed = [p0, p1]
+        .iter()
+        .filter_map(|&p| cluster.sim.node_mut::<Leader>(p).map(|l| l.reconfigs_completed))
+        .sum();
+    let mut completions: Vec<Time> = cluster.samples().iter().map(|(t, _)| *t).collect();
+    completions.sort_unstable();
+    let reads = cluster.read_records();
+    let (write_completions, write_issues) = cluster.write_records();
+    X12Run {
+        plan,
+        completions,
+        reads,
+        write_completions,
+        write_issues,
+        elections,
+        reconfigs_completed,
+    }
+}
+
+/// Longest gap between consecutive completions that *starts* inside
+/// `[from, to)` — including a stall that begins in the window and ends
+/// after it (service resumed late), and the whole remainder when
+/// nothing completes again before `to`.
+fn longest_stall(completions: &[Time], from: Time, to: Time) -> Time {
+    let mut prev = from;
+    let mut worst = 0;
+    for &t in completions {
+        if t < from {
+            continue;
+        }
+        let gap_start = prev.max(from);
+        if gap_start >= to {
+            return worst;
+        }
+        worst = worst.max(t.saturating_sub(gap_start));
+        prev = t;
+    }
+    let gap_start = prev.max(from);
+    if gap_start < to {
+        worst = worst.max(to - gap_start);
+    }
+    worst
+}
+
+/// Heal/restore-to-first-completion latency in ms from `t` (NaN when
+/// the run ends without another completion).
+fn recovery_ms(completions: &[Time], t: Time) -> f64 {
+    completions
+        .iter()
+        .find(|&&c| c >= t)
+        .map(|&c| (c - t) as f64 / 1e6)
+        .unwrap_or(f64::NAN)
+}
+
+/// Completed commands/sec over `[from, to)` with every fault window
+/// excluded from both the count and the span.
+fn goodput_outside(completions: &[Time], windows: &[(Time, Time)], from: Time, to: Time) -> f64 {
+    let inside = |t: Time| windows.iter().any(|&(a, b)| t >= a && t < b);
+    let n = completions.iter().filter(|&&t| t >= from && t < to && !inside(t)).count();
+    let mut span = to.saturating_sub(from);
+    for &(a, b) in windows {
+        let (a, b) = (a.max(from), b.min(to));
+        span = span.saturating_sub(b.saturating_sub(a));
+    }
+    if span == 0 {
+        return 0.0;
+    }
+    n as f64 / (span as f64 / 1e9)
+}
+
+/// X12 report: the scripted nemesis schedule against its fault-free
+/// twin at the same seed. The acceptance gate
+/// (`x12_nemesis_schedule_meets_acceptance` in
+/// `rust/tests/safety_properties.rs`): zero invariant violations
+/// (checked inside each run, against the widened drift envelope), zero
+/// stale reads, every post-heal recovery bounded, and goodput outside
+/// the fault windows >= 90% of the fault-free twin's. Everything here
+/// is virtual-time deterministic: the same seed renders a
+/// byte-identical report.
+pub fn nemesis_figure(seed: u64) -> NemesisReport {
+    let faulted = run_x12(seed, true);
+    let clean = run_x12(seed, false);
+    let warm = X12_WARM_MS as Time * MS;
+    // Arrivals stop 500 ms before the horizon; measure over the span
+    // that was actually offered load.
+    let measured_to = (X12_END_MS as Time * MS).saturating_sub(500 * MS);
+    let windows = faulted.plan.fault_windows(X12_END_MS);
+    let labels =
+        ["leader_partition", "mm_asym_partition", "gray_slow_acceptor", "lease_clock_skew"];
+    let mut rep = NemesisReport {
+        id: "X12".into(),
+        title: "nemesis fault schedule vs fault-free twin (4 open-loop clients x 250/s, \
+                50/50 read mix, Counter SM, leases on, 1 ms drift bound)"
+            .into(),
+        plan: faulted.plan.to_text(),
+        ..Default::default()
+    };
+    for (i, &(from, to)) in windows.iter().enumerate() {
+        rep.rows.push(NemesisRow {
+            label: labels.get(i).copied().unwrap_or("fault").into(),
+            from_ms: from as f64 / 1e6,
+            to_ms: to as f64 / 1e6,
+            max_stall_ms: longest_stall(&faulted.completions, from, to) as f64 / 1e6,
+            recover_ms: recovery_ms(&faulted.completions, to),
+        });
+    }
+    rep.goodput_faulted = goodput_outside(&faulted.completions, &windows, warm, measured_to);
+    rep.goodput_fault_free = goodput_outside(&clean.completions, &windows, warm, measured_to);
+    for (label, run) in [("faulted", &faulted), ("fault_free", &clean)] {
+        match run.check_stale_reads() {
+            Ok(()) => rep.notes.push(format!(
+                "{label}: {} reads, zero stale; {} election(s), {} reconfiguration(s)",
+                run.reads.len(),
+                run.elections,
+                run.reconfigs_completed
+            )),
+            Err(e) => rep.notes.push(format!("{label}: STALE READ: {e}")),
+        }
+    }
+    rep
+}
+
 // X10 lives in `harness::crash` (it drives the real TCP runtime, not
 // the simulator) but is re-exported here so `repro exp` resolves every
 // experiment through one module.
@@ -1462,6 +1718,26 @@ pub fn bench_json_for(id: &str, seed: u64) -> Option<BenchJson> {
                     &format!("recovery_round_{i}"),
                     f64::NAN,
                     *ms,
+                    f64::NAN,
+                    f64::NAN,
+                ));
+            }
+            rows
+        }
+        "x12" | "nemesis" => {
+            // The full faulted-vs-twin pair: goodput rows carry the
+            // outside-fault-window rates; per-fault rows carry the
+            // post-heal recovery latency in `p50_ms` and NaN elsewhere.
+            let r = nemesis_figure(seed);
+            let mut rows = vec![
+                row("goodput_outside_faults", r.goodput_faulted, f64::NAN, f64::NAN, f64::NAN),
+                row("fault_free_twin", r.goodput_fault_free, f64::NAN, f64::NAN, f64::NAN),
+            ];
+            for nr in &r.rows {
+                rows.push(row(
+                    &format!("recover_{}", nr.label),
+                    f64::NAN,
+                    nr.recover_ms,
                     f64::NAN,
                     f64::NAN,
                 ));
@@ -1583,6 +1859,7 @@ pub fn run_all(seed: u64) -> Vec<(String, String)> {
     out.push(("X6".into(), sharding_figure(seed).render()));
     out.push(("X7".into(), read_scaling_figure(seed).render()));
     out.push(("X9".into(), overload_figure(seed).render()));
+    out.push(("X12".into(), nemesis_figure(seed).render()));
     out
 }
 
@@ -1797,6 +2074,44 @@ mod tests {
             low.goodput
         );
         assert!(hot.abandoned > 0, "32k/s offered must overflow the bounded queues");
+    }
+
+    // The full X12 acceptance gate (faulted vs fault-free twin, goodput
+    // ratio, byte-identical reports) lives in
+    // rust/tests/safety_properties.rs with the other release-mode
+    // gates; here one faulted run checks the driver end to end.
+
+    #[test]
+    fn x12_smoke_survives_the_schedule() {
+        let run = run_x12(42, true);
+        assert!(run.completions.len() > 1000, "barely ran: {}", run.completions.len());
+        run.check_stale_reads().expect("x12 reads linearizable");
+        // The leader partition must have forced a failover...
+        assert!(run.elections >= 2, "no failover under the leader partition");
+        // ...and the mid-schedule reconfiguration must have completed
+        // (startup install + failover install + the 5 s reconfig).
+        assert!(run.reconfigs_completed >= 3, "reconfig lost: {}", run.reconfigs_completed);
+        // Service must be back after the last restore: something
+        // completed in the final second of offered load.
+        let last = *run.completions.last().unwrap();
+        assert!(last >= secs(9), "no completions after the schedule: last at {last}");
+        // The schedule's windows are what the report keys on.
+        assert_eq!(run.plan.fault_windows(X12_END_MS).len(), 4);
+    }
+
+    #[test]
+    fn x12_stall_and_goodput_helpers() {
+        let completions = [secs(1), secs(2), secs(5), secs(6)];
+        // Gap starting inside [1.5 s, 4 s): 2 s -> 5 s.
+        assert_eq!(longest_stall(&completions, secs(1) + 500 * MS, secs(4)), secs(3));
+        // Nothing completes in-window or after: stall runs to the end.
+        assert_eq!(longest_stall(&completions, secs(7), secs(9)), secs(2));
+        assert!((recovery_ms(&completions, secs(4)) - 1000.0).abs() < 1e-9);
+        assert!(recovery_ms(&completions, secs(7)).is_nan());
+        // 2 completions in [0, 7) outside the window that holds the
+        // other 2, over 7 - 3 = 4 s of un-windowed span.
+        let g = goodput_outside(&completions, &[(secs(4), secs(7))], 0, secs(7));
+        assert!((g - 0.5).abs() < 1e-9, "goodput {g}");
     }
 
     #[test]

@@ -360,6 +360,68 @@ impl OverloadReport {
     }
 }
 
+/// One X12 fault phase: its window in the run, how long service stalled,
+/// and how fast it came back after the heal/restore.
+#[derive(Clone, Debug)]
+pub struct NemesisRow {
+    /// Fault-phase label (e.g. "leader_partition").
+    pub label: String,
+    /// Fault window `[from, to)`, milliseconds from run start.
+    pub from_ms: f64,
+    pub to_ms: f64,
+    /// Longest gap between consecutive command completions that starts
+    /// inside the window (the unavailability this fault caused), ms.
+    pub max_stall_ms: f64,
+    /// Heal/restore to first completed command, ms (NaN if none).
+    pub recover_ms: f64,
+}
+
+/// The X12 nemesis experiment: a scripted fault schedule (partition →
+/// heal → asymmetric matchmaker partition → gray-slow acceptor → lease
+/// clock skew) against its fault-free twin at the same seed, reporting
+/// per-fault unavailability/recovery and outside-fault-window goodput.
+#[derive(Debug, Default)]
+pub struct NemesisReport {
+    pub id: String,
+    pub title: String,
+    /// The injected schedule in `nemesis =` text form.
+    pub plan: String,
+    pub rows: Vec<NemesisRow>,
+    /// Completed commands/sec outside every fault window, faulted run.
+    pub goodput_faulted: f64,
+    /// Same windows excluded, fault-free twin run.
+    pub goodput_fault_free: f64,
+    pub notes: Vec<String>,
+}
+
+impl NemesisReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== {} — {} ===", self.id, self.title);
+        let _ = writeln!(out, "plan: {}", self.plan);
+        let _ = writeln!(out, "fault\tfrom_ms\tto_ms\tmax_stall_ms\trecover_ms");
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}\t{:.0}\t{:.0}\t{:.3}\t{:.3}",
+                r.label, r.from_ms, r.to_ms, r.max_stall_ms, r.recover_ms
+            );
+        }
+        let _ = writeln!(
+            out,
+            "goodput outside fault windows: {:.0}/s faulted vs {:.0}/s fault-free \
+             ({:.1}%; acceptance target >= 90%)",
+            self.goodput_faulted,
+            self.goodput_fault_free,
+            100.0 * self.goodput_faulted / self.goodput_fault_free.max(1.0)
+        );
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+}
+
 /// One perf-trajectory row: what a `BENCH_x*.json` line carries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchRow {

@@ -124,6 +124,7 @@ pub mod dpaxos;
 pub mod harness;
 pub mod metrics;
 pub mod msg;
+pub mod nemesis;
 pub mod net;
 pub mod node;
 pub mod quorum;

@@ -72,16 +72,22 @@ impl Args {
 
 const USAGE: &str = "usage:
   repro exp <id> [--seed N] [--bench-json PATH]
-      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 x9 x10 all)
+      regenerate a paper experiment (f9 t1 f10 f11 f12 f14 f15 f16 f17 f18 f19 f20 f21 t2 x2 x3 x4 x5 x6 x7 x9 x10 x12 all)
       --bench-json PATH   write a machine-readable BENCH_<id>.json row set
-                          (x3-x7, x9, and x10; purpose-built short runs, schema in DESIGN.md)
+                          (x3-x7, x9, x10, and x12; purpose-built short runs, schema in DESIGN.md)
       x9: leader overload control — offered-load sweep past saturation under
           admission off / Busy-retry / Busy-shed policies (DESIGN.md §Overload)
       x10: kill -9 + recovery storm on a live TCP cluster with fsync'd
            WALs (needs a writable tempdir and two free local port ranges)
+      x12: scripted nemesis schedule (partition/heal/gray-slow/clock-skew)
+           vs its fault-free twin at the same seed (DESIGN.md §Nemesis)
   repro run --role R --id N --config FILE [--duration SECS] [--data-dir DIR]
       --data-dir DIR    open fsync'd WALs under DIR/<role>-<id>; replay
                         them on start (crash recovery, DESIGN.md §Durability)
+      --nemesis PLAN    scripted fault injection around the framing layer
+                        (partitions / gray failures / clock skew; overrides
+                        the config's `nemesis =` line; DESIGN.md §Nemesis)
+                        e.g. \"1000:part(0,1|2,3);3000:heal;4000:slow(2,2000)\"
       client role workload flags (override the config's `workload =` line):
         --workload closed|pipelined|open|open-poisson
         --rate N          open-loop arrivals/sec per client
@@ -189,6 +195,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
         "x7" | "reads" => print!("{}", exp::read_scaling_figure(seed).render()),
         "x9" | "overload" => print!("{}", exp::overload_figure(seed).render()),
         "x10" | "recovery" => print!("{}", exp::crash_recovery_figure(seed).render()),
+        "x12" | "nemesis" => print!("{}", exp::nemesis_figure(seed).render()),
         "all" => {
             for (name, text) in exp::run_all(seed) {
                 println!("########## {name} ##########");
@@ -205,7 +212,7 @@ fn run_experiment(id: &str, seed: u64) -> Result<()> {
 /// schema in DESIGN.md §Bench trajectory).
 fn write_bench_json(id: &str, seed: u64, path: &str) -> Result<()> {
     let bench = exp::bench_json_for(id, seed)
-        .with_context(|| format!("--bench-json supports x3..x7, x9, and x10, not {id:?}"))?;
+        .with_context(|| format!("--bench-json supports x3..x7, x9, x10, and x12, not {id:?}"))?;
     let json = bench.to_json();
     std::fs::write(path, &json).with_context(|| format!("write {path}"))?;
     print!("{json}");
@@ -371,17 +378,37 @@ fn run_node(role: &str, id: NodeId, config_path: &str, duration: u64, args: &Arg
                     groups.iter().map(|gl| gl.proposers.clone()).collect();
                 let mut cl = ShardClient::new(id, proposer_lists, spec);
                 cl.replicas_per_group(groups.iter().map(|gl| gl.replicas.clone()).collect());
+                // The config's `admission =` policy decides what a Busy
+                // pushback means here, exactly as in the sim harness:
+                // shed (count abandoned) or hint-driven delayed retry.
+                cl.shed_on_busy = cfg.opts.admission.enabled && cfg.opts.admission.shed;
                 Box::new(cl)
             } else {
                 let mut cl = Client::new(id, layout.proposers.clone(), spec);
                 cl.replicas = layout.replicas.clone();
+                cl.shed_on_busy = cfg.opts.admission.enabled && cfg.opts.admission.shed;
                 Box::new(cl)
             }
         }
         other => anyhow::bail!("unknown role: {other}"),
     };
 
-    let handle = matchmaker::net::spawn_node(id, node, cfg.addrs.clone())?;
+    // Nemesis (DESIGN.md §Nemesis): `--nemesis PLAN` overrides the
+    // config's `nemesis =` line. Every process evaluates the same plan
+    // against its own start time and filters its egress, so one shared
+    // plan text coordinates the whole deployment.
+    let plan = match args.flags.get("nemesis") {
+        Some(text) => {
+            let p = matchmaker::nemesis::NemesisPlan::parse(text)
+                .map_err(|e| anyhow::anyhow!("--nemesis: {e}"))?;
+            (!p.is_empty()).then_some(p)
+        }
+        None => cfg.nemesis.clone(),
+    };
+    let shim = plan
+        .as_ref()
+        .map(|p| matchmaker::net::FaultShim::new(id, 0x5eed ^ id as u64, p));
+    let handle = matchmaker::net::spawn_node_with_nemesis(id, node, cfg.addrs.clone(), shim)?;
     eprintln!("node {id} ({role}) running");
     if role == "client" {
         std::thread::sleep(std::time::Duration::from_secs(duration));

@@ -1,0 +1,513 @@
+//! Nemesis: deterministic, scripted fault injection.
+//!
+//! A [`NemesisPlan`] is an ordered schedule of [`Fault`]s — partitions
+//! (symmetric groups and asymmetric one-way cuts), gray failures
+//! (slow-but-alive nodes, fsync stalls, duplicated/reordered/corrupted
+//! frames at the codec boundary), and clock skew/drift on the lease
+//! clock. Plans are plain data with a compact single-line text form, so
+//! the same schedule drives both harnesses:
+//!
+//! * the simulator — [`NemesisPlan::apply_to_sim`] schedules each fault
+//!   as a [`crate::sim::Sim::schedule`] control, so injection is part of
+//!   the deterministic event stream and every run replays byte-for-byte
+//!   from its seed;
+//! * the TCP runtime — `repro run --nemesis PLAN` (or a `nemesis =`
+//!   config line) parses the same text and drives a fault shim around
+//!   the `net::` framing layer plus the WAL fsync path.
+//!
+//! Probabilities are expressed in **per-mille** (integer 0..=1000) so
+//! the text form round-trips exactly — no float formatting ambiguity.
+//!
+//! ## Text form
+//!
+//! Events are `AT_MS:FAULT`, joined with `;`. Faults:
+//!
+//! | syntax               | meaning                                          |
+//! |----------------------|--------------------------------------------------|
+//! | `part(0,1\|2,3,4)`   | symmetric partition into the listed groups       |
+//! | `oneway(6>7)`        | cut only the `6 → 7` direction                   |
+//! | `heal`               | restore every cut link (symmetric and one-way)   |
+//! | `slow(10,2000)`      | node 10's link delays scaled to 2000% (gray-slow)|
+//! | `stall(2,5000)`      | node 2's WAL fsyncs stall 5000 µs (TCP runtime)  |
+//! | `skew(6,5000)`       | node 6's clock reads +5000 µs (negative = behind)|
+//! | `drift(6,200)`       | node 6's clock drifts +200 ppm                   |
+//! | `dup(10)`            | 10‰ of frames duplicated                         |
+//! | `reorder(50,2000)`   | 50‰ of frames take +2000 µs (overtaken)          |
+//! | `corrupt(5)`         | 5‰ of frames get one bit flipped at the codec    |
+//!
+//! `slow(n,100)`, `skew(n,0)`, `drift(n,0)`, `stall(n,0)`, `dup(0)`,
+//! `reorder(0,0)` and `corrupt(0)` restore the respective knob.
+//!
+//! See DESIGN.md §Nemesis for the fault taxonomy, the failure-detector
+//! timing that tolerates these schedules, and the X12 experiment that
+//! gates them.
+
+use crate::sim::Sim;
+use crate::util::{splitmix64, Rng};
+use crate::{NodeId, Time, MS, US};
+
+/// One injectable fault (or its restoration). See the module docs for
+/// the text syntax of each variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Symmetric partition: every link between nodes in *different*
+    /// listed groups is cut. Nodes not listed anywhere are unaffected.
+    Partition { groups: Vec<Vec<NodeId>> },
+    /// Asymmetric cut: only `from → to` is severed; replies still flow.
+    /// This is the schedule that lets a deposed leader's stale
+    /// heartbeats through one way (the satellite regression in
+    /// `sim_cluster.rs`).
+    OneWay { from: NodeId, to: NodeId },
+    /// Restore every severed link, symmetric and one-way. Does *not*
+    /// touch slow/skew/frame knobs — those restore individually.
+    Heal,
+    /// Gray failure: scale every link delay touching `node` to
+    /// `pct`/100 of nominal (`100` restores). The node stays alive and
+    /// responsive — just slow, which is harder on failure detectors
+    /// than a crash.
+    SlowNode { node: NodeId, pct: u64 },
+    /// Gray failure on the durability path: each WAL fsync on `node`
+    /// takes an extra `stall_us` microseconds (`0` restores). Only
+    /// meaningful under the TCP runtime (the simulator has no WAL);
+    /// [`NemesisPlan::apply_to_sim`] ignores it.
+    FsyncStall { node: NodeId, stall_us: u64 },
+    /// Clock skew: `node`'s local clock reads `skew_us` microseconds
+    /// ahead (negative = behind) of true time. Exercises lease validity
+    /// under the configured max drift.
+    ClockSkew { node: NodeId, skew_us: i64 },
+    /// Clock drift: `node`'s clock runs fast/slow by `ppm` parts per
+    /// million, compounding over the run.
+    ClockDrift { node: NodeId, ppm: i64 },
+    /// Duplicate `per_mille`‰ of frames (same arrival time, both
+    /// delivered).
+    Dup { per_mille: u32 },
+    /// Reorder `per_mille`‰ of frames by adding `extra_us` µs of delay,
+    /// letting later traffic on the same link overtake them.
+    Reorder { per_mille: u32, extra_us: u64 },
+    /// Flip one random bit in `per_mille`‰ of frames at the codec
+    /// boundary; undecodable mutations are dropped by the framing
+    /// layer, decodable ones are delivered as-is.
+    Corrupt { per_mille: u32 },
+}
+
+/// A fault scheduled at an absolute time (milliseconds from run start).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NemesisEvent {
+    /// When the fault fires, in milliseconds of (virtual or wall) time.
+    pub at_ms: u64,
+    /// What happens.
+    pub fault: Fault,
+}
+
+/// An ordered fault schedule. Parse one with [`NemesisPlan::parse`],
+/// render it back with [`NemesisPlan::to_text`] (these round-trip
+/// exactly), and inject it with [`NemesisPlan::apply_to_sim`] or the
+/// TCP runtime's `--nemesis` flag.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NemesisPlan {
+    /// The schedule, in firing order.
+    pub events: Vec<NemesisEvent>,
+}
+
+impl NemesisPlan {
+    /// An empty plan (no faults).
+    pub fn none() -> NemesisPlan {
+        NemesisPlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the compact text form (module docs). Whitespace around
+    /// separators is tolerated; events are sorted by firing time.
+    pub fn parse(text: &str) -> Result<NemesisPlan, String> {
+        let mut events = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (at, fault) = part
+                .split_once(':')
+                .ok_or_else(|| format!("nemesis event `{part}`: expected AT_MS:FAULT"))?;
+            let at_ms: u64 = at
+                .trim()
+                .parse()
+                .map_err(|_| format!("nemesis event `{part}`: bad time `{at}`"))?;
+            let fault = parse_fault(fault.trim())?;
+            events.push(NemesisEvent { at_ms, fault });
+        }
+        events.sort_by_key(|e| e.at_ms);
+        Ok(NemesisPlan { events })
+    }
+
+    /// Render the plan back to its text form. `parse(to_text(p)) == p`
+    /// for any plan whose events are sorted by time.
+    pub fn to_text(&self) -> String {
+        let parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| format!("{}:{}", e.at_ms, fault_text(&e.fault)))
+            .collect();
+        parts.join(";")
+    }
+
+    /// Schedule every event as a simulator control. Faults mutate the
+    /// [`crate::sim::NetworkModel`] through the `Sim` setters, so the
+    /// whole schedule is part of the deterministic event stream:
+    /// identical seed + identical plan ⇒ byte-identical run.
+    pub fn apply_to_sim(&self, sim: &mut Sim) {
+        for ev in &self.events {
+            let fault = ev.fault.clone();
+            sim.schedule(ev.at_ms * MS, move |s| apply_fault(s, &fault));
+        }
+    }
+
+    /// The merged time windows (in nanoseconds, over a run ending at
+    /// `run_end_ms`) during which *any* fault is active — partitions
+    /// until the next `heal`, slow/stall/skew/drift/frame knobs until
+    /// individually restored. X12 measures goodput *outside* these
+    /// windows against the fault-free twin run.
+    pub fn fault_windows(&self, run_end_ms: u64) -> Vec<(Time, Time)> {
+        use std::collections::BTreeSet;
+        let mut active: BTreeSet<String> = BTreeSet::new();
+        let mut windows = Vec::new();
+        let mut open: Option<u64> = None;
+        for ev in &self.events {
+            let (key, on) = match &ev.fault {
+                Fault::Partition { .. } | Fault::OneWay { .. } => ("net".to_string(), true),
+                Fault::Heal => ("net".to_string(), false),
+                Fault::SlowNode { node, pct } => (format!("slow:{node}"), *pct != 100),
+                Fault::FsyncStall { node, stall_us } => (format!("stall:{node}"), *stall_us != 0),
+                Fault::ClockSkew { node, skew_us } => (format!("skew:{node}"), *skew_us != 0),
+                Fault::ClockDrift { node, ppm } => (format!("drift:{node}"), *ppm != 0),
+                Fault::Dup { per_mille } => ("dup".to_string(), *per_mille != 0),
+                Fault::Reorder { per_mille, .. } => ("reorder".to_string(), *per_mille != 0),
+                Fault::Corrupt { per_mille } => ("corrupt".to_string(), *per_mille != 0),
+            };
+            if on {
+                active.insert(key);
+                if open.is_none() {
+                    open = Some(ev.at_ms);
+                }
+            } else {
+                active.remove(&key);
+                if active.is_empty() {
+                    if let Some(start) = open.take() {
+                        if ev.at_ms > start {
+                            windows.push((start * MS, ev.at_ms * MS));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(start) = open {
+            if run_end_ms > start {
+                windows.push((start * MS, run_end_ms * MS));
+            }
+        }
+        windows
+    }
+
+    /// A seeded storm of asymmetric one-way cuts and heals over
+    /// `nodes`, for property tests: short directed outages separated by
+    /// healed gaps, deterministic in `seed`. Empty when fewer than two
+    /// nodes or the run is too short.
+    pub fn storm(seed: u64, nodes: &[NodeId], run_ms: u64) -> NemesisPlan {
+        let mut rng = Rng::new(splitmix64(seed ^ 0x6e65_6d65_7369_7321));
+        let mut events = Vec::new();
+        if nodes.len() >= 2 {
+            let mut at = 50 + rng.gen_range(100);
+            while at + 150 < run_ms {
+                let i = rng.gen_range(nodes.len() as u64) as usize;
+                let mut j = rng.gen_range(nodes.len() as u64) as usize;
+                if j == i {
+                    j = (j + 1) % nodes.len();
+                }
+                events.push(NemesisEvent {
+                    at_ms: at,
+                    fault: Fault::OneWay { from: nodes[i], to: nodes[j] },
+                });
+                let heal = at + 60 + rng.gen_range(80);
+                events.push(NemesisEvent { at_ms: heal, fault: Fault::Heal });
+                at = heal + 80 + rng.gen_range(120);
+            }
+        }
+        NemesisPlan { events }
+    }
+}
+
+/// Apply one fault to a running simulator (fires inside a scheduled
+/// control, at the event's virtual time).
+fn apply_fault(sim: &mut Sim, fault: &Fault) {
+    match fault {
+        Fault::Partition { groups } => {
+            for (gi, ga) in groups.iter().enumerate() {
+                for gb in groups.iter().skip(gi + 1) {
+                    for &a in ga {
+                        for &b in gb {
+                            sim.set_link(a, b, false);
+                        }
+                    }
+                }
+            }
+        }
+        Fault::OneWay { from, to } => sim.set_link_oneway(*from, *to, false),
+        Fault::Heal => {
+            let ids = sim.node_ids();
+            for (i, &a) in ids.iter().enumerate() {
+                for &b in ids.iter().skip(i + 1) {
+                    sim.set_link(a, b, true);
+                }
+            }
+            sim.net.cut_oneway.clear();
+        }
+        Fault::SlowNode { node, pct } => sim.set_node_slow(*node, *pct),
+        // The simulator has no WAL: fsync stalls only exist under the
+        // TCP runtime (`storage::WalOptions::stall_us`).
+        Fault::FsyncStall { .. } => {}
+        Fault::ClockSkew { node, skew_us } => {
+            sim.set_clock_skew(*node, skew_us.saturating_mul(US as i64))
+        }
+        Fault::ClockDrift { node, ppm } => sim.set_clock_drift(*node, *ppm),
+        Fault::Dup { per_mille } => sim.net.dup_prob = f64::from(*per_mille) / 1000.0,
+        Fault::Reorder { per_mille, extra_us } => {
+            sim.net.reorder_prob = f64::from(*per_mille) / 1000.0;
+            sim.net.reorder_extra = extra_us * US;
+        }
+        Fault::Corrupt { per_mille } => sim.net.corrupt_prob = f64::from(*per_mille) / 1000.0,
+    }
+}
+
+fn fault_text(f: &Fault) -> String {
+    match f {
+        Fault::Partition { groups } => {
+            let gs: Vec<String> = groups
+                .iter()
+                .map(|g| {
+                    g.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(",")
+                })
+                .collect();
+            format!("part({})", gs.join("|"))
+        }
+        Fault::OneWay { from, to } => format!("oneway({from}>{to})"),
+        Fault::Heal => "heal".to_string(),
+        Fault::SlowNode { node, pct } => format!("slow({node},{pct})"),
+        Fault::FsyncStall { node, stall_us } => format!("stall({node},{stall_us})"),
+        Fault::ClockSkew { node, skew_us } => format!("skew({node},{skew_us})"),
+        Fault::ClockDrift { node, ppm } => format!("drift({node},{ppm})"),
+        Fault::Dup { per_mille } => format!("dup({per_mille})"),
+        Fault::Reorder { per_mille, extra_us } => format!("reorder({per_mille},{extra_us})"),
+        Fault::Corrupt { per_mille } => format!("corrupt({per_mille})"),
+    }
+}
+
+fn parse_fault(s: &str) -> Result<Fault, String> {
+    if s == "heal" {
+        return Ok(Fault::Heal);
+    }
+    let (kind, rest) = s
+        .split_once('(')
+        .ok_or_else(|| format!("nemesis fault `{s}`: expected KIND(ARGS)"))?;
+    let args = rest
+        .strip_suffix(')')
+        .ok_or_else(|| format!("nemesis fault `{s}`: missing `)`"))?
+        .trim();
+    let two = |args: &str| -> Result<(String, String), String> {
+        args.split_once(',')
+            .map(|(a, b)| (a.trim().to_string(), b.trim().to_string()))
+            .ok_or_else(|| format!("nemesis fault `{s}`: expected two arguments"))
+    };
+    match kind.trim() {
+        "part" => {
+            let mut groups = Vec::new();
+            for g in args.split('|') {
+                let mut nodes = Vec::new();
+                for n in g.split(',') {
+                    let n = n.trim();
+                    if n.is_empty() {
+                        continue;
+                    }
+                    nodes.push(
+                        n.parse::<NodeId>()
+                            .map_err(|_| format!("nemesis fault `{s}`: bad node `{n}`"))?,
+                    );
+                }
+                if !nodes.is_empty() {
+                    groups.push(nodes);
+                }
+            }
+            if groups.len() < 2 {
+                return Err(format!("nemesis fault `{s}`: a partition needs >= 2 groups"));
+            }
+            Ok(Fault::Partition { groups })
+        }
+        "oneway" => {
+            let (a, b) = args
+                .split_once('>')
+                .ok_or_else(|| format!("nemesis fault `{s}`: expected FROM>TO"))?;
+            let from = a
+                .trim()
+                .parse()
+                .map_err(|_| format!("nemesis fault `{s}`: bad node `{a}`"))?;
+            let to = b
+                .trim()
+                .parse()
+                .map_err(|_| format!("nemesis fault `{s}`: bad node `{b}`"))?;
+            Ok(Fault::OneWay { from, to })
+        }
+        "slow" => {
+            let (n, p) = two(args)?;
+            Ok(Fault::SlowNode {
+                node: n.parse().map_err(|_| format!("nemesis fault `{s}`: bad node"))?,
+                pct: p.parse().map_err(|_| format!("nemesis fault `{s}`: bad pct"))?,
+            })
+        }
+        "stall" => {
+            let (n, us) = two(args)?;
+            Ok(Fault::FsyncStall {
+                node: n.parse().map_err(|_| format!("nemesis fault `{s}`: bad node"))?,
+                stall_us: us.parse().map_err(|_| format!("nemesis fault `{s}`: bad µs"))?,
+            })
+        }
+        "skew" => {
+            let (n, us) = two(args)?;
+            Ok(Fault::ClockSkew {
+                node: n.parse().map_err(|_| format!("nemesis fault `{s}`: bad node"))?,
+                skew_us: us.parse().map_err(|_| format!("nemesis fault `{s}`: bad µs"))?,
+            })
+        }
+        "drift" => {
+            let (n, ppm) = two(args)?;
+            Ok(Fault::ClockDrift {
+                node: n.parse().map_err(|_| format!("nemesis fault `{s}`: bad node"))?,
+                ppm: ppm.parse().map_err(|_| format!("nemesis fault `{s}`: bad ppm"))?,
+            })
+        }
+        "dup" => Ok(Fault::Dup {
+            per_mille: parse_per_mille(s, args)?,
+        }),
+        "reorder" => {
+            let (pm, us) = two(args)?;
+            Ok(Fault::Reorder {
+                per_mille: parse_per_mille(s, &pm)?,
+                extra_us: us.parse().map_err(|_| format!("nemesis fault `{s}`: bad µs"))?,
+            })
+        }
+        "corrupt" => Ok(Fault::Corrupt {
+            per_mille: parse_per_mille(s, args)?,
+        }),
+        other => Err(format!("nemesis fault `{s}`: unknown kind `{other}`")),
+    }
+}
+
+fn parse_per_mille(ctx: &str, s: &str) -> Result<u32, String> {
+    let pm: u32 = s
+        .parse()
+        .map_err(|_| format!("nemesis fault `{ctx}`: bad per-mille `{s}`"))?;
+    if pm > 1000 {
+        return Err(format!("nemesis fault `{ctx}`: per-mille `{pm}` > 1000"));
+    }
+    Ok(pm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{lan_sim, ms};
+    use crate::MS;
+
+    fn full_plan() -> NemesisPlan {
+        NemesisPlan {
+            events: vec![
+                NemesisEvent {
+                    at_ms: 10,
+                    fault: Fault::Partition { groups: vec![vec![0, 1], vec![2, 3, 4]] },
+                },
+                NemesisEvent { at_ms: 20, fault: Fault::OneWay { from: 6, to: 7 } },
+                NemesisEvent { at_ms: 30, fault: Fault::Heal },
+                NemesisEvent { at_ms: 40, fault: Fault::SlowNode { node: 10, pct: 2000 } },
+                NemesisEvent { at_ms: 50, fault: Fault::FsyncStall { node: 2, stall_us: 5000 } },
+                NemesisEvent { at_ms: 60, fault: Fault::ClockSkew { node: 6, skew_us: -4000 } },
+                NemesisEvent { at_ms: 70, fault: Fault::ClockDrift { node: 6, ppm: 200 } },
+                NemesisEvent { at_ms: 80, fault: Fault::Dup { per_mille: 10 } },
+                NemesisEvent { at_ms: 90, fault: Fault::Reorder { per_mille: 50, extra_us: 2000 } },
+                NemesisEvent { at_ms: 95, fault: Fault::Corrupt { per_mille: 5 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn text_form_round_trips_every_fault() {
+        let plan = full_plan();
+        let text = plan.to_text();
+        let back = NemesisPlan::parse(&text).expect("round-trip parse");
+        assert_eq!(back, plan, "parse(to_text(p)) must equal p:\n{text}");
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_sorts() {
+        let plan = NemesisPlan::parse(" 30:heal ; 10:oneway( 1 > 2 ) ;; ").unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].at_ms, 10);
+        assert_eq!(plan.events[0].fault, Fault::OneWay { from: 1, to: 2 });
+        assert_eq!(plan.events[1].fault, Fault::Heal);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for bad in [
+            "oops",
+            "10:wat(1)",
+            "10:part(0,1)",
+            "x:heal",
+            "10:oneway(1-2)",
+            "10:dup(2000)",
+            "10:slow(1)",
+        ] {
+            assert!(NemesisPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn fault_windows_merge_until_restored() {
+        let plan = NemesisPlan::parse("10:oneway(0>1);20:slow(2,500);30:heal;40:slow(2,100);60:corrupt(5)")
+            .unwrap();
+        // net ∪ slow spans 10..40; corrupt is never restored, so it runs
+        // to the end of the run.
+        assert_eq!(plan.fault_windows(100), vec![(10 * MS, 40 * MS), (60 * MS, 100 * MS)]);
+        assert_eq!(NemesisPlan::none().fault_windows(100), vec![]);
+    }
+
+    #[test]
+    fn apply_to_sim_drives_the_network_model() {
+        let mut sim = lan_sim(3);
+        let plan = NemesisPlan::parse(
+            "1:part(0|1);2:oneway(2>3);3:slow(4,900);4:skew(5,7000);5:dup(250);6:heal",
+        )
+        .unwrap();
+        plan.apply_to_sim(&mut sim);
+        sim.run_until(ms(10));
+        // Partition + oneway healed at 6ms; the rest persist.
+        assert!(sim.link_open(0, 1));
+        assert!(sim.link_open(2, 3));
+        assert_eq!(sim.net.node_slow_pct.get(&4), Some(&900));
+        assert_eq!(sim.net.clock_skew_ns.get(&5), Some(&(7000 * 1000)));
+        assert!((sim.net.dup_prob - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn storm_is_seed_deterministic() {
+        let a = NemesisPlan::storm(7, &[0, 1, 2, 3], 2_000);
+        let b = NemesisPlan::storm(7, &[0, 1, 2, 3], 2_000);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Cuts and heals alternate, every cut is directed.
+        assert!(a.events.iter().any(|e| matches!(e.fault, Fault::OneWay { .. })));
+        assert!(a.events.iter().any(|e| e.fault == Fault::Heal));
+        let c = NemesisPlan::storm(8, &[0, 1, 2, 3], 2_000);
+        assert_ne!(a, c, "different seeds should give different storms");
+    }
+}

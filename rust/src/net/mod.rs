@@ -15,6 +15,7 @@
 use crate::codec::{Enc, Wire};
 use crate::msg::Envelope;
 use crate::node::{Announce, Effects, Node, Timer};
+use crate::util::Rng;
 use crate::{NodeId, Time};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -169,6 +170,185 @@ impl TimerService {
     }
 }
 
+/// Wall-clock fault shim around the framing layer: the TCP runtime's
+/// half of the nemesis subsystem (`repro run --nemesis PLAN` or a
+/// `nemesis =` config line; DESIGN.md §Nemesis).
+///
+/// Each process evaluates the *same* plan against wall-clock offsets
+/// from its own start, filtering its **egress**: a symmetric partition
+/// is both endpoints cutting their own outbound direction, a one-way
+/// cut is sender-side only, so one shared plan text coordinates a whole
+/// deployment without any cross-process channel. Frame faults
+/// (duplicate / reorder-by-delay / corrupt-at-the-codec) draw from a
+/// per-process seeded [`Rng`]; clock skew shifts the `now()` the node
+/// thread feeds its role (the lease clock), and fsync stalls arm the
+/// WAL-side knob ([`crate::storage::wal::set_fsync_stall_us`]).
+///
+/// Unlike the simulator's injection this is *not* byte-replayable —
+/// wall clocks and thread scheduling see to that. The determinism gate
+/// (X12) runs on the sim; this shim exists so real deployments face the
+/// same weather.
+pub struct FaultShim {
+    state: Arc<Mutex<ShimState>>,
+    /// Observed-clock offset for this node (nanoseconds, may be negative).
+    skew_ns: Arc<std::sync::atomic::AtomicI64>,
+}
+
+struct ShimState {
+    rng: Rng,
+    /// Directed cuts: egress `(from, to)` pairs currently severed.
+    cut: std::collections::BTreeSet<(NodeId, NodeId)>,
+    /// Per-node gray-slow percent (100 = nominal). Each affected
+    /// endpoint adds `pct × 10 µs` of egress delay.
+    slow_pct: BTreeMap<NodeId, u64>,
+    dup_prob: f64,
+    reorder_prob: f64,
+    reorder_extra_us: u64,
+    corrupt_prob: f64,
+}
+
+impl FaultShim {
+    /// Build the shim for node `id` and start the schedule thread: each
+    /// plan event fires at its `at_ms` offset from now.
+    #[allow(clippy::disallowed_methods)] // wall clock is this runtime's job; see TimerService
+    pub fn new(id: NodeId, seed: u64, plan: &crate::nemesis::NemesisPlan) -> FaultShim {
+        use crate::nemesis::Fault;
+        let state = Arc::new(Mutex::new(ShimState {
+            rng: Rng::new(crate::util::splitmix64(seed ^ (0xfa17_0000 + id as u64))),
+            cut: Default::default(),
+            slow_pct: BTreeMap::new(),
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            reorder_extra_us: 0,
+            corrupt_prob: 0.0,
+        }));
+        let skew_ns = Arc::new(std::sync::atomic::AtomicI64::new(0));
+        let events = plan.events.clone();
+        let st = state.clone();
+        let sk = skew_ns.clone();
+        std::thread::spawn(move || {
+            let start = Instant::now();
+            for ev in events {
+                let at = std::time::Duration::from_millis(ev.at_ms);
+                let elapsed = start.elapsed();
+                if at > elapsed {
+                    std::thread::sleep(at - elapsed);
+                }
+                let mut s = st.lock().unwrap();
+                match ev.fault {
+                    Fault::Partition { groups } => {
+                        for (gi, ga) in groups.iter().enumerate() {
+                            for gb in groups.iter().skip(gi + 1) {
+                                for &a in ga {
+                                    for &b in gb {
+                                        s.cut.insert((a, b));
+                                        s.cut.insert((b, a));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Fault::OneWay { from, to } => {
+                        s.cut.insert((from, to));
+                    }
+                    Fault::Heal => s.cut.clear(),
+                    Fault::SlowNode { node, pct } => {
+                        if pct == 100 {
+                            s.slow_pct.remove(&node);
+                        } else {
+                            s.slow_pct.insert(node, pct);
+                        }
+                    }
+                    Fault::FsyncStall { node, stall_us } => {
+                        if node == id {
+                            crate::storage::wal::set_fsync_stall_us(stall_us);
+                        }
+                    }
+                    Fault::ClockSkew { node, skew_us } => {
+                        if node == id {
+                            sk.store(
+                                skew_us.saturating_mul(1000),
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
+                    }
+                    // Wall clocks drift on their own; the simulator is
+                    // where drift is modeled precisely.
+                    Fault::ClockDrift { .. } => {}
+                    Fault::Dup { per_mille } => s.dup_prob = f64::from(per_mille) / 1000.0,
+                    Fault::Reorder { per_mille, extra_us } => {
+                        s.reorder_prob = f64::from(per_mille) / 1000.0;
+                        s.reorder_extra_us = extra_us;
+                    }
+                    Fault::Corrupt { per_mille } => {
+                        s.corrupt_prob = f64::from(per_mille) / 1000.0
+                    }
+                }
+            }
+        });
+        FaultShim { state, skew_ns }
+    }
+
+    /// The node's current observed-clock offset in nanoseconds.
+    fn skew_handle(&self) -> Arc<std::sync::atomic::AtomicI64> {
+        self.skew_ns.clone()
+    }
+
+    /// Filter one egress envelope: `[]` = dropped (cut link or
+    /// undecodable corruption), otherwise one or two (duplicated)
+    /// copies, each with an extra delay in microseconds (gray-slow /
+    /// reorder).
+    pub fn outbound(&self, env: Envelope) -> Vec<(Envelope, u64)> {
+        let mut s = self.state.lock().unwrap();
+        if s.cut.contains(&(env.from, env.to)) {
+            return Vec::new();
+        }
+        let env = if s.corrupt_prob > 0.0 && {
+            let p = s.corrupt_prob;
+            s.rng.chance(p)
+        } {
+            // One bit flipped at the codec boundary, exactly like the
+            // simulator's `corrupt_at_codec`: undecodable frames die at
+            // the framing layer, decodable mutations are delivered.
+            let mut bytes = env.msg.encode();
+            if bytes.is_empty() {
+                return Vec::new();
+            }
+            let idx = s.rng.gen_range(bytes.len() as u64) as usize;
+            let bit = 1u8 << (s.rng.gen_range(8) as u8);
+            bytes[idx] ^= bit;
+            match crate::msg::Msg::decode(&bytes) {
+                Ok(msg) => Envelope { msg, ..env },
+                Err(_) => return Vec::new(),
+            }
+        } else {
+            env
+        };
+        let mut delay_us = 0u64;
+        for end in [env.from, env.to] {
+            if let Some(pct) = s.slow_pct.get(&end) {
+                delay_us += pct.saturating_mul(10);
+            }
+        }
+        if s.reorder_prob > 0.0 && {
+            let p = s.reorder_prob;
+            s.rng.chance(p)
+        } {
+            delay_us += s.reorder_extra_us;
+        }
+        let dup = s.dup_prob > 0.0 && {
+            let p = s.dup_prob;
+            s.rng.chance(p)
+        };
+        let mut out = Vec::with_capacity(if dup { 2 } else { 1 });
+        if dup {
+            out.push((env.clone(), delay_us));
+        }
+        out.push((env, delay_us));
+        out
+    }
+}
+
 /// Handle for a running node.
 pub struct NodeHandle {
     shutdown: Sender<Event>,
@@ -203,11 +383,22 @@ impl NodeHandle {
 
 /// Start a node: bind `addrs[&id]`, dial peers lazily, run the event loop
 /// on a dedicated thread.
-#[allow(clippy::disallowed_methods)] // wall clock is this runtime's job; see TimerService
 pub fn spawn_node(
+    id: NodeId,
+    node: Box<dyn Node>,
+    addrs: BTreeMap<NodeId, String>,
+) -> Result<NodeHandle> {
+    spawn_node_with_nemesis(id, node, addrs, None)
+}
+
+/// [`spawn_node`] with an optional [`FaultShim`] filtering every egress
+/// frame and skewing the node's observed clock (`repro run --nemesis`).
+#[allow(clippy::disallowed_methods)] // wall clock is this runtime's job; see TimerService
+pub fn spawn_node_with_nemesis(
     id: NodeId,
     mut node: Box<dyn Node>,
     addrs: BTreeMap<NodeId, String>,
+    shim: Option<FaultShim>,
 ) -> Result<NodeHandle> {
     let my_addr = addrs.get(&id).context("own address missing")?.clone();
     let listener = TcpListener::bind(&my_addr).with_context(|| format!("bind {my_addr}"))?;
@@ -244,7 +435,17 @@ pub fn spawn_node(
     let shutdown_tx = ev_tx.clone();
     let join = std::thread::spawn(move || {
         let start = Instant::now();
-        let now = move || start.elapsed().as_nanos() as Time;
+        // The nemesis clock-skew fault shifts what this node *observes*
+        // (its lease clock), never the transport itself.
+        let skew = shim.as_ref().map(FaultShim::skew_handle);
+        let now = move || {
+            let raw = start.elapsed().as_nanos() as i128;
+            let adj = skew
+                .as_ref()
+                .map_or(0, |s| s.load(std::sync::atomic::Ordering::Relaxed))
+                as i128;
+            (raw + adj).max(0) as Time
+        };
         let mut peers: BTreeMap<NodeId, Sender<Envelope>> = BTreeMap::new();
 
         let apply = |fx: Effects, peers: &mut BTreeMap<NodeId, Sender<Envelope>>| {
@@ -260,10 +461,26 @@ pub fn spawn_node(
                     let _ = ev_tx.send(Event::Msg(env));
                     continue;
                 }
-                let peer = peers.entry(to).or_insert_with(|| {
-                    spawn_peer_writer(addrs.get(&to).cloned().unwrap_or_default())
-                });
-                let _ = peer.send(env);
+                let copies = match &shim {
+                    Some(s) => s.outbound(env),
+                    None => vec![(env, 0)],
+                };
+                for (env, delay_us) in copies {
+                    let peer = peers.entry(env.to).or_insert_with(|| {
+                        spawn_peer_writer(addrs.get(&env.to).cloned().unwrap_or_default())
+                    });
+                    if delay_us == 0 {
+                        let _ = peer.send(env);
+                    } else {
+                        // Gray-slow / reorder: hold the frame off-thread so
+                        // the node loop never blocks on injected latency.
+                        let tx = peer.clone();
+                        std::thread::spawn(move || {
+                            std::thread::sleep(std::time::Duration::from_micros(delay_us));
+                            let _ = tx.send(env);
+                        });
+                    }
+                }
             }
         };
 
@@ -382,6 +599,57 @@ mod tests {
         let a = local_addrs(3, 9000);
         assert_eq!(a[&0], "127.0.0.1:9000");
         assert_eq!(a[&2], "127.0.0.1:9002");
+    }
+
+    #[test]
+    fn fault_shim_filters_egress() {
+        let shim = FaultShim::new(1, 7, &crate::nemesis::NemesisPlan::none());
+        let env = |to| Envelope { from: 1, to, msg: Msg::StopA };
+        // Clean shim: one undelayed copy.
+        assert_eq!(shim.outbound(env(2)), vec![(env(2), 0)]);
+        {
+            let mut s = shim.state.lock().unwrap();
+            s.cut.insert((1, 2));
+            s.slow_pct.insert(3, 2000);
+        }
+        // Cut link: dropped. Uncut destination from a gray-slow peer:
+        // delivered late.
+        assert!(shim.outbound(env(2)).is_empty());
+        assert_eq!(shim.outbound(env(3)), vec![(env(3), 20_000)]);
+        // Certain duplication: exactly two copies.
+        shim.state.lock().unwrap().dup_prob = 1.0;
+        assert_eq!(shim.outbound(env(3)).len(), 2);
+        // Certain corruption either mutates (still decodable) or drops;
+        // across many frames both must be sane (never panics, never
+        // yields a frame the codec would reject downstream).
+        {
+            let mut s = shim.state.lock().unwrap();
+            s.dup_prob = 0.0;
+            s.slow_pct.clear();
+            s.corrupt_prob = 1.0;
+        }
+        let mut delivered = 0;
+        for _ in 0..64 {
+            delivered += shim.outbound(env(3)).len();
+        }
+        assert!(delivered > 0, "single-bit flips should often stay decodable");
+    }
+
+    #[test]
+    #[allow(clippy::disallowed_methods)] // wall-clock polling is this runtime's job
+    fn fault_shim_schedule_thread_applies_events() {
+        // A plan firing at 0 ms is applied by the schedule thread almost
+        // immediately; poll briefly rather than assuming scheduling.
+        let plan = crate::nemesis::NemesisPlan::parse("0:oneway(1>2)").unwrap();
+        let shim = FaultShim::new(1, 7, &plan);
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            if shim.state.lock().unwrap().cut.contains(&(1, 2)) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "schedule thread never applied the cut");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
     }
 
     // Full TCP cluster round-trips are exercised in tests/net_cluster.rs.

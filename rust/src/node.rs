@@ -103,6 +103,11 @@ pub enum Announce {
     /// A replica installed a peer's snapshot covering slots `< base`
     /// (crash-rejoin / lagging-node catch-up).
     SnapshotInstalled { replica: NodeId, base: Slot },
+    /// A client received `Msg::Busy` pushback for request `seq`
+    /// (admission control, DESIGN.md §Overload). Observation-only — in
+    /// TCP runs the client's counters live on another thread, so this is
+    /// how tests see that pushback actually traversed the wire.
+    BusyObserved { client: NodeId, seq: u64 },
 
     // ---- Model-checker probes (crate::check). These expose protocol
     // facts the invariant catalog needs but the metrics layer does not;

@@ -453,6 +453,7 @@ impl Node for Client {
                     return; // stale Busy for a request that since completed
                 }
                 self.busy_observed += 1;
+                fx.announce(crate::node::Announce::BusyObserved { client: self.id, seq });
                 if self.shed_on_busy {
                     self.outstanding.remove(&seq);
                     self.abandoned += 1;

@@ -67,6 +67,12 @@ pub struct LeaderTiming {
     pub leader_check_period: Time,
     /// Follower declares the leader dead after this much heartbeat silence.
     pub election_timeout: Time,
+    /// A leader with unchosen in-flight slots and no chosen-watermark
+    /// progress for this long has lost quorum contact (it is on the
+    /// minority side of a partition): it steps down instead of stalling
+    /// proposals forever, so clients get `NotLeader` redirects and the
+    /// majority side can elect (DESIGN.md §Nemesis).
+    pub quorum_loss_timeout: Time,
 }
 
 impl Default for LeaderTiming {
@@ -77,6 +83,7 @@ impl Default for LeaderTiming {
             heartbeat_period: 20 * MS,
             leader_check_period: 50 * MS,
             election_timeout: 500 * MS,
+            quorum_loss_timeout: 500 * MS,
         }
     }
 }
@@ -394,6 +401,13 @@ pub struct Leader {
     last_leader_hb: Time,
     last_leader: Option<NodeId>,
     started: bool,
+    /// Quorum-contact watchdog: `Some((watermark, since))` while unchosen
+    /// in-flight slots have made no chosen-watermark progress since
+    /// `since`. Past `timing.quorum_loss_timeout` the leader steps down
+    /// (minority-partition degradation, DESIGN.md §Nemesis). Pure
+    /// watchdog bookkeeping — excluded from `state_repr` like the other
+    /// liveness timestamps.
+    stall_probe: Option<(Slot, Time)>,
 
     // ---- Read-lease state (DESIGN.md §Reads) ----
     /// Renewal sequence number (matches acks to the renewal in flight).
@@ -520,6 +534,7 @@ impl Leader {
             last_leader_hb: 0,
             last_leader: None,
             started: false,
+            stall_probe: None,
             lease_seq: 0,
             lease_inflight: None,
             lease_valid_until: 0,
@@ -1821,7 +1836,22 @@ impl Node for Leader {
                 }
             }
             Msg::Heartbeat { epoch } => {
-                if epoch >= self.epoch_seen {
+                // A heartbeat refreshes the election timer only if its
+                // sender could still win the epoch's round ordering:
+                // strictly newer epoch, or same epoch from a proposer id
+                // >= the one we last followed (rounds order by
+                // `(epoch, proposer, _)`, so the higher id is the epoch's
+                // surviving leader). Without the same-epoch tiebreak, a
+                // deposed leader whose stale heartbeats still arrive
+                // through an asymmetric partition would suppress election
+                // ticks on followers forever — they would keep refreshing
+                // `last_leader_hb` for a leader that can no longer choose
+                // anything (regression: sim_cluster
+                // `stale_heartbeats_do_not_suppress_elections`).
+                let live = epoch > self.epoch_seen
+                    || (epoch == self.epoch_seen
+                        && self.last_leader.map_or(true, |l| from >= l));
+                if live {
                     self.epoch_seen = epoch;
                     self.last_leader_hb = now;
                     self.last_leader = Some(from);
@@ -1981,6 +2011,45 @@ impl Node for Leader {
             }
             Timer::HeartbeatTick => {
                 if self.is_leader {
+                    // Quorum-contact watchdog: in-flight slots that make
+                    // no chosen-watermark progress for a full
+                    // `quorum_loss_timeout` mean our Phase-2 quorum is
+                    // unreachable (minority side of a partition). Step
+                    // down instead of stalling proposals forever: clients
+                    // get `NotLeader` and chase the majority's leader;
+                    // if nobody else elects (we *are* the only proposer),
+                    // the LeaderCheck chain re-elects us after a full
+                    // election timeout. The Phase2Watchdog keeps retrying
+                    // far faster than this fires, so only a genuine loss
+                    // of quorum contact trips it.
+                    let inflight =
+                        self.log.range(self.chosen_watermark..).any(|(_, ss)| !ss.chosen);
+                    if !inflight {
+                        self.stall_probe = None;
+                    } else {
+                        match self.stall_probe {
+                            Some((wm, since)) if wm == self.chosen_watermark => {
+                                if now.saturating_sub(since) >= self.timing.quorum_loss_timeout
+                                {
+                                    self.is_leader = false;
+                                    self.install = Install::None;
+                                    self.active_round = None;
+                                    self.drop_lease();
+                                    self.stall_probe = None;
+                                    // Full heartbeat grace before any
+                                    // self re-election, so a majority-side
+                                    // leader elected meanwhile wins.
+                                    self.last_leader_hb = now;
+                                    fx.timer(
+                                        self.timing.leader_check_period,
+                                        Timer::LeaderCheck,
+                                    );
+                                    return;
+                                }
+                            }
+                            _ => self.stall_probe = Some((self.chosen_watermark, now)),
+                        }
+                    }
                     let msg = Msg::Heartbeat { epoch: self.round.epoch };
                     for &p in &self.proposers.clone() {
                         if p != self.id {

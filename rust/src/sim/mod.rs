@@ -40,6 +40,39 @@ pub struct NetworkModel {
     /// This is the resource Phase 2 batching trades against: fewer,
     /// larger messages per chosen command.
     pub tx_overhead: Time,
+    /// Directed severed links (`from → to` only): the nemesis one-way
+    /// cuts ([`crate::nemesis`]). Symmetric partitions live on
+    /// [`Sim::set_link`]; this matrix is what asymmetric partitions use.
+    pub cut_oneway: BTreeSet<(NodeId, NodeId)>,
+    /// Per-node link-delay multiplier in percent (`100` = nominal).
+    /// Every message a listed node sends or receives has its link delay
+    /// scaled — the "gray failure" slow-but-alive node. Applied with
+    /// pure arithmetic (no RNG draw), so an empty map is byte-identical
+    /// to the pre-nemesis model.
+    pub node_slow_pct: BTreeMap<NodeId, u64>,
+    /// Per-node clock skew in nanoseconds (may be negative): the offset
+    /// a node's local clock reads relative to global virtual time. Only
+    /// observed timestamps shift — event *scheduling* stays global, so
+    /// replayability is untouched.
+    pub clock_skew_ns: BTreeMap<NodeId, i64>,
+    /// Per-node clock drift in parts-per-million, compounding with skew:
+    /// a node with drift `d` observes `now * (1 + d/1e6) + skew`.
+    pub clock_drift_ppm: BTreeMap<NodeId, i64>,
+    /// Probability an in-flight message is duplicated (a second copy is
+    /// enqueued at the same arrival time, fresh seq).
+    pub dup_prob: f64,
+    /// Probability a message takes `reorder_extra` additional delay,
+    /// overtaking later traffic on the same link.
+    pub reorder_prob: f64,
+    /// The extra delay a reordered message incurs.
+    pub reorder_extra: Time,
+    /// Probability a message is corrupted at the codec boundary: the
+    /// message is encoded, one byte is flipped, and the frame is decoded
+    /// again. An undecodable frame is dropped (what the TCP runtime's
+    /// length-checked framing would do); a decodable mutation is
+    /// delivered as-is — exactly the bytes a flaky NIC could hand the
+    /// codec.
+    pub corrupt_prob: f64,
 }
 
 impl Default for NetworkModel {
@@ -51,6 +84,14 @@ impl Default for NetworkModel {
             per_kind_extra: BTreeMap::new(),
             local_delay: 5 * US,
             tx_overhead: 0,
+            cut_oneway: BTreeSet::new(),
+            node_slow_pct: BTreeMap::new(),
+            clock_skew_ns: BTreeMap::new(),
+            clock_drift_ppm: BTreeMap::new(),
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            reorder_extra: 0,
+            corrupt_prob: 0.0,
         }
     }
 }
@@ -262,6 +303,78 @@ impl Sim {
         }
     }
 
+    /// Sever / restore only the `from → to` direction (asymmetric
+    /// partition: `to` still reaches `from`).
+    pub fn set_link_oneway(&mut self, from: NodeId, to: NodeId, up: bool) {
+        if up {
+            self.net.cut_oneway.remove(&(from, to));
+        } else {
+            self.net.cut_oneway.insert((from, to));
+        }
+    }
+
+    /// Is the `from → to` direction currently deliverable? (Either a
+    /// symmetric cut or a directed cut blocks it.)
+    pub fn link_open(&self, from: NodeId, to: NodeId) -> bool {
+        self.link_up(from, to) && !self.net.cut_oneway.contains(&(from, to))
+    }
+
+    /// Ids of every installed (ever-added) node.
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|_| i as NodeId))
+            .collect()
+    }
+
+    /// Gray-slow a node: all its link delays are scaled by `pct`/100
+    /// (`100` restores nominal speed).
+    pub fn set_node_slow(&mut self, node: NodeId, pct: u64) {
+        if pct == 100 {
+            self.net.node_slow_pct.remove(&node);
+        } else {
+            self.net.node_slow_pct.insert(node, pct);
+        }
+    }
+
+    /// Skew a node's local clock by `skew_ns` (what its `now` reads,
+    /// relative to global virtual time; negative = behind).
+    pub fn set_clock_skew(&mut self, node: NodeId, skew_ns: i64) {
+        if skew_ns == 0 {
+            self.net.clock_skew_ns.remove(&node);
+        } else {
+            self.net.clock_skew_ns.insert(node, skew_ns);
+        }
+    }
+
+    /// Set a node's clock drift rate in parts-per-million (`0` restores
+    /// a true-rate clock). Compounds with skew in [`Sim::local_now`].
+    pub fn set_clock_drift(&mut self, node: NodeId, ppm: i64) {
+        if ppm == 0 {
+            self.net.clock_drift_ppm.remove(&node);
+        } else {
+            self.net.clock_drift_ppm.insert(node, ppm);
+        }
+    }
+
+    /// The virtual time `node` observes: global clock adjusted by its
+    /// configured skew and drift. Identity when the node has neither
+    /// (the common case costs two empty-map probes and no arithmetic).
+    pub fn local_now(&self, node: NodeId) -> Time {
+        if self.net.clock_skew_ns.is_empty() && self.net.clock_drift_ppm.is_empty() {
+            return self.clock;
+        }
+        let skew = self.net.clock_skew_ns.get(&node).copied().unwrap_or(0);
+        let ppm = self.net.clock_drift_ppm.get(&node).copied().unwrap_or(0);
+        if skew == 0 && ppm == 0 {
+            return self.clock;
+        }
+        let drifted = self.clock as i128 + (self.clock as i128 * ppm as i128) / 1_000_000
+            + skew as i128;
+        drifted.clamp(0, u64::MAX as i128) as Time
+    }
+
     /// Schedule a control closure at absolute time `at` (experiment
     /// scripting: reconfigure, crash, start clients, ...).
     pub fn schedule(&mut self, at: Time, f: impl FnOnce(&mut Sim) + Send + 'static) {
@@ -316,7 +429,11 @@ impl Sim {
             self.push(self.clock + delay, EventKind::Timer(from, timer));
         }
         for (to, msg) in fx.msgs {
-            if !self.link_up(from, to) {
+            // Fault checks that never draw from the RNG come first, so a
+            // run with every nemesis knob disabled consumes the exact
+            // same RNG stream as the pre-nemesis model (baselines,
+            // traces, and sweep pins stay byte-identical).
+            if !self.link_up(from, to) || self.net.cut_oneway.contains(&(from, to)) {
                 self.dropped += 1;
                 continue;
             }
@@ -324,6 +441,19 @@ impl Sim {
                 self.dropped += 1;
                 continue;
             }
+            let msg = if self.net.corrupt_prob > 0.0 && self.rng.chance(self.net.corrupt_prob)
+            {
+                match corrupt_at_codec(&msg, &mut self.rng) {
+                    Some(m) => m,
+                    None => {
+                        // Undecodable frame: the framing layer drops it.
+                        self.dropped += 1;
+                        continue;
+                    }
+                }
+            } else {
+                msg
+            };
             let kind_extra = self
                 .net
                 .per_kind_extra
@@ -340,6 +470,17 @@ impl Sim {
                 };
                 self.net.base_delay + jitter
             } + kind_extra;
+            if !self.net.node_slow_pct.is_empty() {
+                // Gray-slow scaling: pure arithmetic, endpoints compound.
+                for end in [from, to] {
+                    if let Some(pct) = self.net.node_slow_pct.get(&end) {
+                        delay = delay.saturating_mul(*pct) / 100;
+                    }
+                }
+            }
+            if self.net.reorder_prob > 0.0 && self.rng.chance(self.net.reorder_prob) {
+                delay += self.net.reorder_extra;
+            }
             if self.net.tx_overhead > 0 {
                 // Egress serialization: this message departs only after
                 // the sender's previous messages have left the NIC.
@@ -348,10 +489,15 @@ impl Sim {
                 self.tx_busy.insert(from, depart);
                 delay += depart - self.clock;
             }
-            self.push(
-                self.clock + delay,
-                EventKind::Deliver(Box::new(Envelope { from, to, msg })),
-            );
+            let dup = self.net.dup_prob > 0.0 && self.rng.chance(self.net.dup_prob);
+            let at = self.clock + delay;
+            if dup {
+                self.push(
+                    at,
+                    EventKind::Deliver(Box::new(Envelope { from, to, msg: msg.clone() })),
+                );
+            }
+            self.push(at, EventKind::Deliver(Box::new(Envelope { from, to, msg })));
         }
     }
 
@@ -366,7 +512,9 @@ impl Sim {
                     return;
                 }
                 let mut fx = Effects::new();
-                let now = self.clock;
+                // Skewed/drifting nodes observe their local clock; event
+                // scheduling stays on the global clock.
+                let now = self.local_now(env.to);
                 if let Some(Some(node)) = self.nodes.get_mut(idx) {
                     node.on_msg(now, env.from, env.msg, &mut fx);
                     self.delivered += 1;
@@ -381,7 +529,7 @@ impl Sim {
                     return;
                 }
                 let mut fx = Effects::new();
-                let now = self.clock;
+                let now = self.local_now(id);
                 if let Some(Some(node)) = self.nodes.get_mut(idx) {
                     node.on_timer(now, timer, &mut fx);
                 } else {
@@ -591,6 +739,19 @@ impl Sim {
         for s in &others {
             h.write_str(s);
         }
+        // Partition state changes future behavior: two states that differ
+        // only in which links are cut must not merge in the explorer's
+        // dedup table (the `partition` event class, DESIGN.md §Nemesis).
+        h.write_u64(self.cut_links.len() as u64);
+        for (a, b) in &self.cut_links {
+            h.write_u64(*a as u64);
+            h.write_u64(*b as u64);
+        }
+        h.write_u64(self.net.cut_oneway.len() as u64);
+        for (a, b) in &self.net.cut_oneway {
+            h.write_u64(*a as u64);
+            h.write_u64(*b as u64);
+        }
         for w in self.rng.state() {
             h.write_u64(w);
         }
@@ -642,6 +803,22 @@ impl Sim {
             })
             .collect()
     }
+}
+
+/// Corrupt one message at the codec boundary: encode, flip one random
+/// byte, decode. `None` means the mutated frame no longer decodes (the
+/// deliverer drops it); `Some` is a decodable mutation — the protocol
+/// must tolerate it or an invariant will say why not.
+fn corrupt_at_codec(msg: &Msg, rng: &mut Rng) -> Option<Msg> {
+    use crate::codec::Wire;
+    let mut bytes = msg.encode();
+    if bytes.is_empty() {
+        return None;
+    }
+    let idx = rng.gen_range(bytes.len() as u64) as usize;
+    let bit = 1u8 << (rng.gen_range(8) as u8);
+    bytes[idx] ^= bit;
+    Msg::decode(&bytes).ok()
 }
 
 /// Convenience: a default single-AZ model with a given seed.
@@ -802,6 +979,110 @@ mod tests {
         sim.schedule(ms(2), |s| assert!(!s.is_crashed(0)));
         sim.run_to_quiescence(ms(10));
         assert!(sim.is_crashed(0));
+    }
+
+    #[test]
+    fn oneway_cut_blocks_only_one_direction() {
+        let mut sim = lan_sim(2);
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 10_000 }));
+        sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 10_000 }));
+        // Cut 0 → 1 only: node 1 still reaches node 0, so node 0 keeps
+        // receiving while node 1 hears nothing after the cut.
+        sim.schedule(ms(1), |s| s.set_link_oneway(0, 1, false));
+        sim.run_to_quiescence(ms(50));
+        assert!(sim.dropped > 0, "directed cut should drop 0->1 traffic");
+        assert!(!sim.link_open(0, 1));
+        assert!(sim.link_open(1, 0));
+        sim.set_link_oneway(0, 1, true);
+        assert!(sim.link_open(0, 1));
+    }
+
+    #[test]
+    fn gray_slow_node_delays_its_links() {
+        // Same topology, same seed: the slowed run's single round trip
+        // takes ~20x the nominal link delay.
+        let run = |pct| {
+            let mut net = NetworkModel::default();
+            net.jitter = 0;
+            let mut sim = Sim::new(9, net);
+            sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 2 }));
+            sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 2 }));
+            sim.set_node_slow(1, pct);
+            sim.run_to_quiescence(crate::SEC);
+            sim.now()
+        };
+        let nominal = run(100);
+        let slowed = run(2000);
+        assert!(
+            slowed >= nominal * 10,
+            "20x gray-slow should dominate the run: {nominal} vs {slowed}"
+        );
+    }
+
+    #[test]
+    fn clock_skew_shifts_only_observed_time() {
+        let mut sim = lan_sim(4);
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 0, max: 0 }));
+        sim.run_until(ms(10));
+        assert_eq!(sim.local_now(0), sim.now());
+        sim.set_clock_skew(0, ms(3) as i64);
+        assert_eq!(sim.local_now(0), sim.now() + ms(3));
+        sim.set_clock_skew(0, -(ms(2) as i64));
+        assert_eq!(sim.local_now(0), sim.now() - ms(2));
+        // Another node's clock is untouched.
+        assert_eq!(sim.local_now(1), sim.now());
+        sim.set_clock_skew(0, 0);
+        assert_eq!(sim.local_now(0), sim.now());
+    }
+
+    #[test]
+    fn duplication_redelivers_frames() {
+        let mut net = NetworkModel::default();
+        net.jitter = 0;
+        net.dup_prob = 1.0;
+        let mut sim = Sim::new(6, net);
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 1 }));
+        sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 0 }));
+        sim.run_to_quiescence(crate::SEC);
+        // Every send lands twice.
+        assert_eq!(sim.delivered % 2, 0);
+        assert!(sim.delivered >= 4);
+    }
+
+    #[test]
+    fn corruption_drops_or_mutates_but_keeps_running() {
+        let mut net = NetworkModel::default();
+        net.jitter = 0;
+        net.corrupt_prob = 0.5;
+        let mut sim = Sim::new(8, net);
+        sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 200 }));
+        sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 200 }));
+        sim.run_to_quiescence(crate::SEC);
+        // Undecodable mutations count as drops; the run still terminates.
+        assert!(sim.delivered > 0);
+    }
+
+    #[test]
+    fn disabled_nemesis_preserves_rng_stream() {
+        // The determinism contract behind every committed baseline: a sim
+        // with all nemesis knobs at their defaults fingerprints exactly
+        // like one built before the knobs existed (same RNG draw order).
+        let fp = |tweak: bool| {
+            let mut sim = lossy_sim(11, 0.05);
+            sim.add_node(0, Box::new(Echo { count: 0, peer: 1, max: 50 }));
+            sim.add_node(1, Box::new(Echo { count: 0, peer: 0, max: 50 }));
+            if tweak {
+                // Toggling a knob on and back off mid-run must also
+                // restore the stream (maps empty again).
+                sim.set_node_slow(0, 2000);
+                sim.set_node_slow(0, 100);
+                sim.set_clock_skew(1, 500);
+                sim.set_clock_skew(1, 0);
+            }
+            sim.run_to_quiescence(ms(100));
+            sim.fingerprint(0)
+        };
+        assert_eq!(fp(false), fp(true));
     }
 
     #[test]

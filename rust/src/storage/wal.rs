@@ -48,6 +48,28 @@ impl Default for WalOptions {
     }
 }
 
+/// Process-wide fsync-stall injection (nanoseconds of extra latency per
+/// fsync'd append), the nemesis `stall(node,µs)` fault on the TCP
+/// runtime: a disk that still completes every write, just slowly — the
+/// gray failure that stalls a quorum member without tripping crash
+/// detection. Zero (the default) is a no-op on the hot path beyond one
+/// relaxed atomic load. Set via [`set_fsync_stall_us`] from the
+/// [`crate::net::FaultShim`] schedule thread.
+static FSYNC_STALL_NS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Arm (or with `0`, disarm) the process-wide fsync stall.
+pub fn set_fsync_stall_us(stall_us: u64) {
+    FSYNC_STALL_NS.store(
+        stall_us.saturating_mul(1000),
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+/// The currently armed fsync stall, in microseconds.
+pub fn fsync_stall_us() -> u64 {
+    FSYNC_STALL_NS.load(std::sync::atomic::Ordering::Relaxed) / 1000
+}
+
 /// The on-disk write-ahead log. See the module docs for the format.
 pub struct WalStorage {
     dir: PathBuf,
@@ -233,6 +255,11 @@ impl Storage for WalStorage {
         // the CRC catches whatever partial prefix made it to disk.
         self.seg.write_all(&frame)?;
         if self.opts.fsync {
+            let stall = FSYNC_STALL_NS.load(std::sync::atomic::Ordering::Relaxed);
+            if stall > 0 {
+                // Injected gray failure: the fsync completes, late.
+                std::thread::sleep(std::time::Duration::from_nanos(stall));
+            }
             self.seg.sync_data()?;
         }
         self.seg_len += frame.len() as u64;
@@ -363,6 +390,25 @@ mod tests {
         // Tests hammer tiny appends; skipping fsync keeps them fast
         // while exercising identical code paths.
         WalOptions { fsync: false, ..WalOptions::default() }
+    }
+
+    #[test]
+    fn fsync_stall_knob_arms_and_disarms() {
+        // The knob is process-global (set by the nemesis schedule thread,
+        // read on every fsync'd append); appends must keep succeeding
+        // with it armed, and `0` must fully disarm it.
+        let dir = scratch_dir("wal-stall");
+        set_fsync_stall_us(1500);
+        assert_eq!(fsync_stall_us(), 1500);
+        {
+            // fsync on: this append takes the stall branch for real.
+            let mut w = WalStorage::open(&dir, WalOptions::default()).unwrap();
+            w.append(&vote(0)).unwrap();
+        }
+        set_fsync_stall_us(0);
+        assert_eq!(fsync_stall_us(), 0);
+        let mut w = WalStorage::open(&dir, no_fsync()).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 1);
     }
 
     #[test]

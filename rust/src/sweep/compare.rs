@@ -177,7 +177,7 @@ pub fn compare_rows(baseline: &BenchJson, current: &BenchJson) -> CompareOutcome
 ///
 /// * sweep baselines (`experiment` starting with `sweep_`) diff
 ///   against `current_sweep` — the rows this invocation just produced;
-/// * experiment baselines (x3..x7, x9) re-run their deterministic bench
+/// * experiment baselines (x3..x7, x9, x12) re-run their deterministic bench
 ///   rows via [`crate::harness::experiments::bench_json_for`] at the
 ///   **file's** recorded seed and diff against those;
 /// * wall-clock baselines (x10) are pinned for the trajectory but

@@ -5,7 +5,7 @@
 //!
 //! 1. [`space`] enumerates the parameter grid (batching × shards ×
 //!    read mix × loss × reconfig cadence × leases × snapshots ×
-//!    admission) or draws a seeded sample of it;
+//!    admission × nemesis) or draws a seeded sample of it;
 //! 2. [`runner`] executes each configuration as a self-contained
 //!    seeded simulation, in parallel across cores, each seed derived
 //!    from `(root seed, label)` so any row replays in isolation;
@@ -211,6 +211,7 @@ mod tests {
             leases: false,
             snapshots: false,
             admission: false,
+            nemesis: false,
         };
         SweepRow {
             seed: config.seed(42),

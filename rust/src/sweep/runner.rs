@@ -13,6 +13,7 @@ use super::space::SweepConfig;
 use crate::config::{AdmissionSpec, LeaseSpec, OptFlags, SnapshotSpec};
 use crate::harness::{Cluster, ShardedCluster};
 use crate::metrics::{check_counter_reads, open_loop_summary};
+use crate::nemesis::NemesisPlan;
 use crate::roles::{Leader, Replica};
 use crate::sim::NetworkModel;
 use crate::statemachine::Counter;
@@ -113,6 +114,16 @@ fn storm_times(cfg: &SweepConfig, duration: Time) -> Vec<Time> {
     out
 }
 
+/// The nemesis axis: a seeded storm of short one-way cuts and heals
+/// over the run's protocol nodes (proposers, acceptors, matchmakers —
+/// clients and replicas stay connected so arrivals keep flowing). Each
+/// cut is shorter than the election timeout, so the axis measures
+/// degradation under gray asymmetry, not failover; the dedicated X12
+/// experiment covers the latter. Deterministic in the row's seed.
+fn inject_storm(targets: Vec<crate::NodeId>, seed: u64, duration: Time, sim: &mut crate::sim::Sim) {
+    NemesisPlan::storm(seed, &targets, duration / MS).apply_to_sim(sim);
+}
+
 /// Run one configuration for `duration` of virtual time and score it.
 /// Pure function of `(cfg, root_seed, duration)` — the isolation
 /// guarantee behind `repro sweep --only`.
@@ -147,6 +158,12 @@ fn run_single(cfg: &SweepConfig, seed: u64, duration: Time) -> SweepRow {
         cluster.sim.schedule(at, move |s| {
             s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(target.clone(), now, fx));
         });
+    }
+    if cfg.nemesis {
+        let mut targets = cluster.layout.proposers.clone();
+        targets.extend_from_slice(&cluster.layout.acceptor_pool);
+        targets.extend_from_slice(&cluster.layout.matchmaker_pool);
+        inject_storm(targets, seed, duration, &mut cluster.sim);
     }
     cluster.sim.run_until(duration);
 
@@ -190,6 +207,14 @@ fn run_sharded(cfg: &SweepConfig, seed: u64, duration: Time) -> SweepRow {
         cluster.sim.schedule(at, move |s| {
             s.with_node::<Leader, _>(leader, |l, now, fx| l.reconfigure(target.clone(), now, fx));
         });
+    }
+    if cfg.nemesis {
+        let mut targets = cluster.matchmaker_pool.clone();
+        for g in &cluster.groups {
+            targets.extend_from_slice(&g.proposers);
+            targets.extend_from_slice(&g.acceptor_pool);
+        }
+        inject_storm(targets, seed, duration, &mut cluster.sim);
     }
     cluster.sim.run_until(duration);
 
@@ -291,6 +316,7 @@ mod tests {
             leases: false,
             snapshots: false,
             admission: false,
+            nemesis: false,
         }
     }
 
@@ -331,6 +357,20 @@ mod tests {
         assert!(row.throughput > 100.0, "throughput {}", row.throughput);
         assert!(row.score > 0.0);
         assert!(row.delivery_ratio > 0.8, "delivery {}", row.delivery_ratio);
+    }
+
+    #[test]
+    fn nemesis_config_runs_and_scores() {
+        // The nemesis axis degrades, never corrupts: every cut is
+        // shorter than the election timeout and every cut heals, so
+        // the run stays safe, serves linearizable reads, and keeps
+        // scoring.
+        let cfg = SweepConfig { nemesis: true, read_pct: 50, ..quick_cfg() };
+        let row = run_config(&cfg, 42, SEC / 2);
+        assert!(row.violation.is_none(), "{:?}", row.violation);
+        assert_eq!(row.stale_reads, Some(0));
+        assert!(row.throughput > 100.0, "throughput {}", row.throughput);
+        assert!(row.score > 0.0);
     }
 
     #[test]

@@ -32,6 +32,9 @@ pub struct SweepConfig {
     /// Leader overload control on (`AdmissionSpec`: bounded proposal
     /// inbox + Busy pushback + adaptive batching)?
     pub admission: bool,
+    /// Nemesis fault storm on (`nemesis::NemesisPlan::storm`: seeded
+    /// short one-way cuts and heals over the protocol nodes)?
+    pub nemesis: bool,
 }
 
 impl SweepConfig {
@@ -39,7 +42,7 @@ impl SweepConfig {
     /// (BENCH rows, CSV rows, compare diagnostics, `--only`).
     pub fn label(&self) -> String {
         format!(
-            "b{}_s{}_r{}_loss{}_rc{}_{}_{}_{}",
+            "b{}_s{}_r{}_loss{}_rc{}_{}_{}_{}_{}",
             self.batch_size,
             self.shards,
             self.read_pct,
@@ -51,6 +54,7 @@ impl SweepConfig {
             if self.leases { "lease" } else { "nolease" },
             if self.snapshots { "snap" } else { "nosnap" },
             if self.admission { "adm" } else { "noadm" },
+            if self.nemesis { "nem" } else { "nonem" },
         )
     }
 
@@ -103,6 +107,7 @@ pub struct ParameterSpace {
     pub leases: Vec<bool>,
     pub snapshots: Vec<bool>,
     pub admission: Vec<bool>,
+    pub nemesis: Vec<bool>,
 }
 
 impl Default for ParameterSpace {
@@ -116,6 +121,7 @@ impl Default for ParameterSpace {
             leases: vec![false, true],
             snapshots: vec![false, true],
             admission: vec![false, true],
+            nemesis: vec![false, true],
         }
     }
 }
@@ -131,6 +137,7 @@ impl ParameterSpace {
             * self.leases.len()
             * self.snapshots.len()
             * self.admission.len()
+            * self.nemesis.len()
     }
 
     /// Whether the space is empty (an axis with no values).
@@ -140,7 +147,8 @@ impl ParameterSpace {
 
     /// The full cartesian grid in fixed axis order (batch → shards →
     /// read mix → loss → reconfig cadence → leases → snapshots →
-    /// admission), so grid position is a pure function of the axes.
+    /// admission → nemesis), so grid position is a pure function of
+    /// the axes.
     pub fn grid(&self) -> Vec<SweepConfig> {
         let mut out = Vec::with_capacity(self.len());
         for &batch_size in &self.batch_sizes {
@@ -151,16 +159,19 @@ impl ParameterSpace {
                             for &leases in &self.leases {
                                 for &snapshots in &self.snapshots {
                                     for &admission in &self.admission {
-                                        out.push(SweepConfig {
-                                            batch_size,
-                                            shards,
-                                            read_pct,
-                                            loss_pm,
-                                            reconfig_ms,
-                                            leases,
-                                            snapshots,
-                                            admission,
-                                        });
+                                        for &nemesis in &self.nemesis {
+                                            out.push(SweepConfig {
+                                                batch_size,
+                                                shards,
+                                                read_pct,
+                                                loss_pm,
+                                                reconfig_ms,
+                                                leases,
+                                                snapshots,
+                                                admission,
+                                                nemesis,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -194,7 +205,7 @@ mod tests {
         let space = ParameterSpace::default();
         let grid = space.grid();
         assert_eq!(grid.len(), space.len());
-        assert_eq!(grid.len(), 3 * 3 * 3 * 2 * 2 * 2 * 2 * 2);
+        assert_eq!(grid.len(), 3 * 3 * 3 * 2 * 2 * 2 * 2 * 2 * 2);
         // Labels are unique — they're the artifact key.
         let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
         labels.sort();
@@ -228,6 +239,7 @@ mod tests {
             leases: true,
             snapshots: false,
             admission: false,
+            nemesis: false,
         };
         assert_eq!(cfg.seed(42), cfg.clone().seed(42));
         assert_ne!(cfg.seed(42), cfg.seed(43));
@@ -247,16 +259,18 @@ mod tests {
             leases: true,
             snapshots: true,
             admission: true,
+            nemesis: true,
         };
-        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rc500_lease_snap_adm");
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rc500_lease_snap_adm_nem");
         let cfg = SweepConfig {
             reconfig_ms: None,
             leases: false,
             snapshots: false,
             admission: false,
+            nemesis: false,
             ..cfg
         };
-        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rcoff_nolease_nosnap_noadm");
+        assert_eq!(cfg.label(), "b32_s4_r90_loss10_rcoff_nolease_nosnap_noadm_nonem");
     }
 
     #[test]
@@ -270,6 +284,7 @@ mod tests {
             leases: false,
             snapshots: false,
             admission: false,
+            nemesis: false,
         };
         assert!((cfg.loss_rate() - 0.01).abs() < 1e-12);
         assert!((cfg.read_fraction() - 0.9).abs() < 1e-12);

@@ -94,6 +94,17 @@ fn every_invariant_in_the_catalog_fires() {
             ],
         ),
         (
+            "lease-disjoint-under-skew",
+            // The old grant *is* expired at the fence lift (lease-fence
+            // passes), but only by 400ns — inside the catalog's drift
+            // envelope, so a clock running behind could still consider
+            // the old lease valid while the new leader starts writing.
+            vec![
+                (10, 6, Announce::LeaseGranted { round: r(1), valid_until: 100 }),
+                (500, 7, Announce::FenceLifted { round: r(2) }),
+            ],
+        ),
+        (
             "watermark-order",
             vec![(1, 8, Announce::ReplicaTruncated { replica: 8, below: 10, exec: 5 })],
         ),

@@ -127,3 +127,56 @@ fn tcp_transport_roundtrip() {
     h1.shutdown();
     assert!(seen >= 19, "echo round trips stalled at {seen}");
 }
+
+/// `Msg::Busy` pushback propagates through the TCP runtime: a pushback
+/// frame produced on one node traverses the codec + framing and lands
+/// in the real `Client` role's handler on another node, which counts
+/// it, sheds, and moves on. Regression for the `repro run --role
+/// client` path, which wires `admission = ..,shed:1` into
+/// `Client::shed_on_busy`.
+#[test]
+fn tcp_busy_pushback_reaches_client() {
+    use matchmaker::msg::Msg;
+    use matchmaker::node::{Announce, Effects, Node, Timer};
+    use matchmaker::workload::WorkloadSpec;
+    use matchmaker::Time;
+
+    /// A "leader" that is permanently overloaded: every client request
+    /// gets admission pushback instead of a reply.
+    struct AlwaysBusy;
+    impl Node for AlwaysBusy {
+        fn on_msg(&mut self, _now: Time, from: NodeId, msg: Msg, fx: &mut Effects) {
+            if let Msg::ClientRequest { group, cmd, .. } = msg {
+                fx.send(from, Msg::Busy { group, seq: cmd.seq, retry_after_us: 100 });
+            }
+        }
+        fn on_timer(&mut self, _now: Time, _t: Timer, _fx: &mut Effects) {}
+        fn role(&self) -> &'static str {
+            "always-busy"
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    let addrs = local_addrs(2, 21600);
+    let h0 = spawn_node(0, Box::new(AlwaysBusy), addrs.clone()).unwrap();
+    let mut client = Client::new(1, vec![0], WorkloadSpec::closed_loop());
+    client.shed_on_busy = true;
+    let h1 = spawn_node(1, Box::new(client), addrs).unwrap();
+
+    // Shedding refills the closed-loop window, so pushback keeps the
+    // request/Busy cycle spinning: several observations must land fast.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut busy_seen = 0;
+    while std::time::Instant::now() < deadline && busy_seen < 5 {
+        if let Ok((_, a)) = h1.announces.recv_timeout(Duration::from_millis(100)) {
+            if matches!(a, Announce::BusyObserved { client: 1, .. }) {
+                busy_seen += 1;
+            }
+        }
+    }
+    h0.shutdown();
+    h1.shutdown();
+    assert!(busy_seen >= 5, "only {busy_seen} Busy pushbacks reached the client over TCP");
+}

@@ -308,3 +308,62 @@ fn concurrent_phase1_saves_a_round_trip() {
     );
     assert!(concurrent < secs(2), "concurrent election took {} ms", concurrent / MS);
 }
+
+/// Nemesis regression: a deposed leader's stale heartbeats, still
+/// arriving through an asymmetric partition, must not suppress a
+/// follower's election ticks. Old leader p0 is isolated except for a
+/// one-way heartbeat path to follower p2; p1 takes over at a higher
+/// epoch, then crashes. p2 has seen p1's epoch, so p0's still-flowing
+/// old-epoch heartbeats are stale and must not reset p2's election
+/// timer — without the epoch fence in the leader's Heartbeat handler,
+/// p2 defers to the ghost forever and the cluster never recovers.
+#[test]
+fn stale_heartbeats_do_not_suppress_elections() {
+    let mut cluster = Cluster::builder().f(2).seed(14).build();
+    let p0 = cluster.layout.proposers[0];
+    let p1 = cluster.layout.proposers[1];
+    let p2 = cluster.layout.proposers[2];
+    // The gray old leader never notices its own stall: quorum-loss
+    // step-down is disabled so its stale heartbeats keep flowing.
+    if let Some(l) = cluster.sim.node_mut::<Leader>(p0) {
+        l.timing.quorum_loss_timeout = secs(100);
+    }
+    cluster.sim.schedule(secs(3), move |s| {
+        // Asymmetric partition: p0 hears nothing and reaches nothing —
+        // except its one-way heartbeat link to p2, which stays open.
+        for n in s.node_ids() {
+            if n != p0 {
+                s.set_link_oneway(n, p0, false);
+            }
+            if n != p0 && n != p2 {
+                s.set_link_oneway(p0, n, false);
+            }
+        }
+    });
+    // p1 stops hearing heartbeats and takes over; p2 keeps deferring —
+    // first to p0's then-live heartbeats, then to p1's. At 6s the new
+    // leader crashes: only p0's stale heartbeats still reach p2.
+    cluster.sim.schedule(secs(6), move |s| s.crash(p1));
+    cluster.sim.run_until(secs(10));
+    cluster.assert_safe();
+    // The partitioned old leader still believes it leads — its stale
+    // heartbeats really were flowing at p2 the whole time ...
+    assert!(
+        cluster.sim.node_mut::<Leader>(p0).unwrap().is_leader,
+        "test premise broken: the ghost leader stepped down"
+    );
+    // ... yet p2 elected itself over them after p1's crash.
+    assert!(
+        cluster.sim.announces.iter().any(|(at, n, a)| {
+            *n == p2 && *at > secs(6) && matches!(a, Announce::LeaderSteady { .. })
+        }),
+        "follower never took over: stale heartbeats suppressed its election"
+    );
+    let samples = cluster.samples();
+    let tl = timeline(&samples, secs(10), SEC, SEC);
+    assert!(
+        tl.throughput[9] > tl.throughput[1] * 0.5,
+        "no recovery after the ghost-leader crash: {:?}",
+        tl.throughput
+    );
+}
